@@ -1,0 +1,84 @@
+//! Use Case 2 demo: priority-aware service differentiation on the real
+//! cluster.  High-priority requests hard-preempt into TP groups (tight
+//! latency); best-effort traffic keeps DP throughput; preempted requests
+//! resume from resident KV without recomputation.
+//!
+//!   make artifacts && cargo run --release --example priority_serving
+
+use std::sync::Arc;
+
+use flying_serving::coordinator::policy::FlyingPolicy;
+use flying_serving::coordinator::strategy::Strategy;
+use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::runtime::Manifest;
+use flying_serving::util::bench::Table;
+use flying_serving::workload::{synth_prompt_tokens, Priority};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
+    let mut cluster = Cluster::start(&manifest, "llama-tiny", 2)?;
+
+    // Background best-effort traffic + periodic high-priority requests.
+    let mut trace = Vec::new();
+    for i in 0..10u64 {
+        trace.push(ServeRequest {
+            id: i,
+            prompt: synth_prompt_tokens(i, 40 + (i as usize % 5) * 10),
+            max_new: 10,
+            priority: Priority::Normal,
+            tp_demand: None,
+            arrival: 0.08 * i as f64,
+        });
+    }
+    for j in 0..3u64 {
+        trace.push(ServeRequest {
+            id: 100 + j,
+            prompt: synth_prompt_tokens(100 + j, 16),
+            max_new: 6,
+            priority: Priority::High,
+            tp_demand: None,
+            arrival: 0.25 + 0.3 * j as f64,
+        });
+    }
+
+    let mut policy = FlyingPolicy::default();
+    let out = cluster.run_trace(trace, &mut policy, Strategy::HardPreempt)?;
+    cluster.shutdown();
+
+    let hi = out.recorder.summary(Some(Priority::High));
+    let all = out.recorder.summary(None);
+    let mut t = Table::new(
+        "Mixed-priority serving (real path, hard preempt)",
+        &["class", "n", "mean TTFT (ms)", "mean TPOT (ms)", "p90 queue (ms)"],
+    );
+    t.row(&[
+        "priority".into(),
+        format!("{}", hi.n),
+        format!("{:.1}", hi.mean_ttft * 1e3),
+        format!("{:.1}", hi.mean_tpot * 1e3),
+        format!("{:.1}", hi.p90_queue * 1e3),
+    ]);
+    t.row(&[
+        "all".into(),
+        format!("{}", all.n),
+        format!("{:.1}", all.mean_ttft * 1e3),
+        format!("{:.1}", all.mean_tpot * 1e3),
+        format!("{:.1}", all.p90_queue * 1e3),
+    ]);
+    t.print();
+    t.write_csv("priority_serving_real")?;
+
+    println!(
+        "\n{} live switches; every preempted request finished ({} outputs, {} rejected)",
+        out.switches.len(),
+        out.outputs.len(),
+        out.rejected.len()
+    );
+    assert_eq!(out.outputs.len(), 13);
+    assert!(
+        hi.mean_ttft <= all.mean_ttft,
+        "priority class must see no worse TTFT"
+    );
+    println!("priority_serving OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: boot a 2-engine cluster on the tiny Llama analog, serve a
+//! few requests with the FLYING policy, and show a live DP->TP switch.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use flying_serving::coordinator::policy::FlyingPolicy;
+use flying_serving::coordinator::strategy::Strategy;
+use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::runtime::Manifest;
+use flying_serving::server::{detokenize, tokenize};
+use flying_serving::workload::Priority;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Arc::new(Manifest::load(std::path::Path::new("artifacts"))?);
+    println!("booting 2 engines on llama-tiny (weights load once per engine)...");
+    let mut cluster = Cluster::start(&manifest, "llama-tiny", 2)?;
+
+    let reqs = vec![
+        ServeRequest {
+            id: 1,
+            prompt: tokenize("The paper shows that static parallelism need not be "),
+            max_new: 12,
+            priority: Priority::Normal,
+            tp_demand: None,
+            arrival: 0.0,
+        },
+        ServeRequest {
+            id: 2,
+            prompt: tokenize("Dynamic DP-TP switching requires "),
+            max_new: 12,
+            priority: Priority::High, // gets a TP binding (Use Case 2)
+            tp_demand: None,
+            arrival: 0.05,
+        },
+        ServeRequest {
+            id: 3,
+            prompt: tokenize("KV cache blocks never move because "),
+            max_new: 12,
+            priority: Priority::Normal,
+            tp_demand: Some(2), // explicit latency-strict TP demand
+            arrival: 0.10,
+        },
+    ];
+
+    let mut policy = FlyingPolicy::default();
+    let out = cluster.run_trace(reqs, &mut policy, Strategy::HardPreempt)?;
+
+    for (rid, tokens) in &out.outputs {
+        let rec = out.recorder.get(*rid).unwrap();
+        println!(
+            "req {rid}: {:3} tokens, ttft={:6.1}ms tpot={:5.1}ms  text={:?}",
+            tokens.len(),
+            rec.ttft().unwrap_or(f64::NAN) * 1e3,
+            rec.tpot().unwrap_or(f64::NAN) * 1e3,
+            detokenize(tokens)
+        );
+    }
+    println!("\nmode switches (live, no engine restart):");
+    for s in &out.switches {
+        println!(
+            "  t={:7.3}s  group@{}  {}TP -> {}TP  in {:.3} ms",
+            s.t,
+            s.group_start,
+            s.p_from,
+            s.p_to,
+            s.latency_s * 1e3
+        );
+    }
+    cluster.shutdown();
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,371 @@
+"""AOT pipeline: lower every (model, phase, TP degree) step function to HLO
+text, emit deterministic synthetic weights, and write a manifest that the
+Rust runtime follows mechanically.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifact surface per model (DESIGN.md §Artifacts):
+
+  * ``{m}_dp_decode``  — fused all-layers+head decode step, p=1 (DP fast path)
+  * ``{m}_dp_prefill`` — fused chunked-prefill step, p=1
+  * ``{m}_attn_{phase}_tp{p}`` / ``{m}_ffn_{phase}_tp{p}`` for p in {2,4} —
+    per-layer shard steps; the Rust coordinator inserts the two all-reduces
+    per layer through its Communicator Pool.
+  * ``{m}_lmhead_dec`` / ``{m}_lmhead_pre`` — final norm + logits (replicated)
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--models a,b] [--force]``
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import MODELS, ModelCfg, B_DEC, C_PREFILL, TP_DEGREES
+from . import model as M
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic synthetic weights
+# ---------------------------------------------------------------------------
+
+
+def make_weights(cfg: ModelCfg, seed: int = 1234):
+    """Seeded init; norms at 1.0, projections scaled ~1/sqrt(fan_in)."""
+    rng = np.random.default_rng(seed + len(cfg.name))
+    out = {}
+    for name in cfg.weight_names():
+        shape = cfg.weight_shape(name)
+        base = name.split(".")[-1]
+        if base in ("attn_norm", "ffn_norm", "final_norm"):
+            w = np.ones(shape, np.float32)
+        elif base == "emb":
+            w = rng.standard_normal(shape).astype(np.float32) * 0.02
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            w = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+        out[name] = w
+    return out
+
+
+def write_weights_bin(cfg, weights, path):
+    entries, off = [], 0
+    with open(path, "wb") as f:
+        for name in cfg.weight_names():
+            w = weights[name]
+            f.write(w.astype("<f4").tobytes())
+            entries.append(
+                {"name": name, "shape": list(w.shape), "offset_elems": off, "n_elems": int(w.size)}
+            )
+            off += int(w.size)
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Artifact specs: (callable over flat positional args, ordered arg descriptors,
+#                  ordered output descriptors, donate_argnums)
+# Arg kinds the Rust runtime understands:
+#   dyn          — per-step host literal (tokens, tables, slots, ...)
+#   weight       — concrete weight tensor, device-resident buffer (fused DP)
+#   weight_role  — per-layer weight by role; Rust substitutes the layer
+#   kpool/vpool  — per-layer KV pool buffer (layer index for fused; -1 = the
+#                  layer currently being executed for per-layer artifacts)
+# ---------------------------------------------------------------------------
+
+
+def _dyn(name, shape, dtype=I32):
+    return {"kind": "dyn", "name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _w(role):
+    return {"kind": "weight", "role": role}
+
+
+def _wr(role):
+    return {"kind": "weight_role", "role": role}
+
+
+def _kp(layer):
+    return {"kind": "kpool", "layer": layer}
+
+
+def _vp(layer):
+    return {"kind": "vpool", "layer": layer}
+
+
+def _kv_new_outs(cfg, t):
+    """Output descriptors for the per-layer new-KV rows (fused artifacts)."""
+    w = cfg.n_kv_heads * cfg.d_head
+    out = []
+    for layer in range(cfg.n_layers):
+        out.append({"kind": "knew", "layer": layer, "shape": [t, w]})
+        out.append({"kind": "vnew", "layer": layer, "shape": [t, w]})
+    return out
+
+
+def _weight_args_fused(cfg):
+    return [_w(n) for n in cfg.weight_names()]
+
+
+def _pool_args_fused(cfg):
+    out = []
+    for layer in range(cfg.n_layers):
+        out += [_kp(layer), _vp(layer)]
+    return out
+
+
+def _layer_roles(cfg, part):
+    if part == "attn":
+        return ["attn_norm", "wq", "wk", "wv", "wo"]
+    if cfg.is_moe:
+        return ["ffn_norm", "router", "wg", "wu", "wd"]
+    return ["ffn_norm", "wg", "wu", "wd"]
+
+
+def build_specs(cfg: ModelCfg):
+    """Return {artifact_name: (fn, args, outputs, donate)} for one model."""
+    d, v, nblk = cfg.d_model, cfg.vocab, cfg.n_blocks
+    pool = [cfg.pool_elems()]
+    specs = {}
+
+    # ---- fused DP decode -------------------------------------------------
+    nw = len(cfg.weight_names())
+
+    def dp_decode(tokens, positions, seq_lens, block_tables, slot_ids, *rest):
+        weights = dict(zip(cfg.weight_names(), rest[:nw]))
+        pools = list(rest[nw:])
+        return M.dp_decode_step(cfg, tokens, positions, seq_lens, block_tables, slot_ids, weights, pools)
+
+    args = [
+        _dyn("tokens", [B_DEC]),
+        _dyn("positions", [B_DEC]),
+        _dyn("seq_lens", [B_DEC]),
+        _dyn("block_tables", [B_DEC, nblk]),
+        _dyn("slot_ids", [B_DEC]),
+        *_weight_args_fused(cfg),
+        *_pool_args_fused(cfg),
+    ]
+    outs = [{"kind": "logits", "shape": [B_DEC, v]}, *_kv_new_outs(cfg, B_DEC)]
+    specs["dp_decode"] = (dp_decode, args, outs, (), {"tp": 1, "phase": "decode"})
+
+    # ---- fused DP prefill ------------------------------------------------
+    def dp_prefill(tokens, positions, slot_ids, block_table, start, seq_len, *rest):
+        weights = dict(zip(cfg.weight_names(), rest[:nw]))
+        pools = list(rest[nw:])
+        return M.dp_prefill_step(cfg, tokens, positions, slot_ids, block_table, start, seq_len, weights, pools)
+
+    args = [
+        _dyn("tokens", [C_PREFILL]),
+        _dyn("positions", [C_PREFILL]),
+        _dyn("slot_ids", [C_PREFILL]),
+        _dyn("block_table", [nblk]),
+        _dyn("start", [1]),
+        _dyn("seq_len", [1]),
+        *_weight_args_fused(cfg),
+        *_pool_args_fused(cfg),
+    ]
+    outs = [{"kind": "logits", "shape": [C_PREFILL, v]}, *_kv_new_outs(cfg, C_PREFILL)]
+    specs["dp_prefill"] = (dp_prefill, args, outs, (), {"tp": 1, "phase": "prefill"})
+
+    # ---- per-layer TP shards ----------------------------------------------
+    for p in TP_DEGREES:
+        if p == 1:
+            continue
+        if cfg.n_kv_heads % p or cfg.n_heads % p:
+            continue
+
+        def attn_dec(x, block_tables, slot_ids, positions, seq_lens, rank,
+                     attn_norm, wq, wk, wv, wo, kp, vp, p=p):
+            return M.tp_attn_decode(cfg, p, x, block_tables, slot_ids, positions,
+                                    seq_lens, rank, attn_norm, wq, wk, wv, wo, kp, vp)
+
+        args = [
+            _dyn("x", [B_DEC, d], F32),
+            _dyn("block_tables", [B_DEC, nblk]),
+            _dyn("slot_ids", [B_DEC]),
+            _dyn("positions", [B_DEC]),
+            _dyn("seq_lens", [B_DEC]),
+            _dyn("rank", [1]),
+            *[_wr(r) for r in _layer_roles(cfg, "attn")],
+            _kp(-1),
+            _vp(-1),
+        ]
+        w_kv = (cfg.n_kv_heads // p) * cfg.d_head
+        outs = [
+            {"kind": "partial", "shape": [B_DEC, d]},
+            {"kind": "knew", "layer": -1, "shape": [B_DEC, w_kv]},
+            {"kind": "vnew", "layer": -1, "shape": [B_DEC, w_kv]},
+        ]
+        specs[f"attn_decode_tp{p}"] = (attn_dec, args, outs, (), {"tp": p, "phase": "decode"})
+
+        def attn_pre(x, block_table, slot_ids, positions, start, seq_len, rank,
+                     attn_norm, wq, wk, wv, wo, kp, vp, p=p):
+            return M.tp_attn_prefill(cfg, p, x, block_table, slot_ids, positions,
+                                     start, seq_len, rank, attn_norm, wq, wk, wv, wo, kp, vp)
+
+        args = [
+            _dyn("x", [C_PREFILL, d], F32),
+            _dyn("block_table", [nblk]),
+            _dyn("slot_ids", [C_PREFILL]),
+            _dyn("positions", [C_PREFILL]),
+            _dyn("start", [1]),
+            _dyn("seq_len", [1]),
+            _dyn("rank", [1]),
+            *[_wr(r) for r in _layer_roles(cfg, "attn")],
+            _kp(-1),
+            _vp(-1),
+        ]
+        outs = [
+            {"kind": "partial", "shape": [C_PREFILL, d]},
+            {"kind": "knew", "layer": -1, "shape": [C_PREFILL, w_kv]},
+            {"kind": "vnew", "layer": -1, "shape": [C_PREFILL, w_kv]},
+        ]
+        specs[f"attn_prefill_tp{p}"] = (attn_pre, args, outs, (), {"tp": p, "phase": "prefill"})
+
+        ffn_roles = _layer_roles(cfg, "ffn")
+
+        for phase, t in (("decode", B_DEC), ("prefill", C_PREFILL)):
+            def ffn(x, rank, *ws, p=p, roles=tuple(ffn_roles)):
+                weights = dict(zip(roles, ws))
+                return M.tp_ffn(cfg, p, x, rank, weights)
+
+            args = [_dyn("x", [t, d], F32), _dyn("rank", [1]), *[_wr(r) for r in ffn_roles]]
+            outs = [{"kind": "partial", "shape": [t, d]}]
+            specs[f"ffn_{phase}_tp{p}"] = (ffn, args, outs, (), {"tp": p, "phase": phase})
+
+    # ---- LM head (replicated) ---------------------------------------------
+    for suffix, t in (("dec", B_DEC), ("pre", C_PREFILL)):
+        def head(x, final_norm, w_lm):
+            return (M.lm_head(cfg, x, final_norm, w_lm),)
+
+        args = [_dyn("x", [t, d], F32), _w("final_norm"), _w("lm_head")]
+        outs = [{"kind": "logits", "shape": [t, v]}]
+        specs[f"lmhead_{suffix}"] = (head, args, outs, (), {"tp": 0, "phase": suffix})
+
+    return specs
+
+
+def example_arg(cfg: ModelCfg, a):
+    """ShapeDtypeStruct for one arg descriptor."""
+    pool = (cfg.pool_elems(),)
+    if a["kind"] == "dyn":
+        dt = jnp.float32 if a["dtype"] == F32 else jnp.int32
+        return jax.ShapeDtypeStruct(tuple(a["shape"]), dt)
+    if a["kind"] == "weight":
+        return jax.ShapeDtypeStruct(cfg.weight_shape(a["role"]), jnp.float32)
+    if a["kind"] == "weight_role":
+        return jax.ShapeDtypeStruct(cfg.weight_shape("l0." + a["role"]), jnp.float32)
+    if a["kind"] in ("kpool", "vpool"):
+        return jax.ShapeDtypeStruct(pool, jnp.float32)
+    raise ValueError(a)
+
+
+def lower_artifact(cfg, name, fn, args, donate, out_dir, force):
+    path = os.path.join(out_dir, f"{cfg.name}_{name}.hlo.txt")
+    if os.path.exists(path) and not force:
+        return path, False
+    examples = [example_arg(cfg, a) for a in args]
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*examples)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return path, True
+
+
+def arg_manifest(a):
+    """Manifest entry for one arg (adds shapes for pools/weights at runtime)."""
+    return a
+
+
+def build_model(cfg: ModelCfg, out_dir, force):
+    weights = make_weights(cfg)
+    bin_path = os.path.join(out_dir, f"{cfg.name}_weights.bin")
+    wentries = write_weights_bin(cfg, weights, bin_path)
+
+    artifacts = {}
+    for name, (fn, args, outs, donate, meta) in build_specs(cfg).items():
+        path, fresh = lower_artifact(cfg, name, fn, args, donate, out_dir, force)
+        artifacts[name] = {
+            "path": os.path.basename(path),
+            "args": [arg_manifest(a) for a in args],
+            "outputs": outs,
+            **meta,
+        }
+        print(f"  {cfg.name}/{name}: {'lowered' if fresh else 'cached'}")
+
+    return {
+        "cfg": {
+            "name": cfg.name,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_head": cfg.d_head,
+            "ffn_hidden": cfg.ffn_hidden,
+            "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k,
+            "n_blocks": cfg.n_blocks,
+            "block_base": cfg.block_base,
+            "max_ctx": cfg.max_ctx,
+            "vocab": cfg.vocab,
+            "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+            "pool_elems": cfg.pool_elems(),
+        },
+        "weights_bin": os.path.basename(bin_path),
+        "weights": wentries,
+        "artifacts": artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--force", action="store_true")
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    # Merge into an existing manifest so `--models a` doesn't drop others.
+    mpath0 = os.path.join(ns.out_dir, "manifest.json")
+    if os.path.exists(mpath0):
+        with open(mpath0) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"models": {}}
+    manifest["static"] = {"b_dec": B_DEC, "c_prefill": C_PREFILL, "tp_degrees": list(TP_DEGREES)}
+    for mname in ns.models.split(","):
+        cfg = MODELS[mname]
+        print(f"model {mname}:")
+        manifest["models"][mname] = build_model(cfg, ns.out_dir, ns.force)
+
+    mpath = os.path.join(ns.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

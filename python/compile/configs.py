@@ -1,0 +1,168 @@
+"""Model configurations for the FLYING SERVING reproduction.
+
+Three tiny analogs of the paper's evaluation models (§6.1.2), chosen to keep
+the *architectural stressors* the paper picked each model for:
+
+  * ``llama-tiny``   — dense GQA transformer (analog of Llama-3-70B): stresses
+    compute + all-reduce volume under TP.
+  * ``moe-tiny``     — top-2 Mixture-of-Experts FFN (analog of GPT-OSS-120B):
+    stresses routing and per-expert sharding.
+  * ``longctx-tiny`` — small-width, long-context dense model (analog of
+    Nemotron-8B 1M-token): stresses KV-cache capacity, the Use-Case-3 regime.
+
+All shapes are static (AOT): decode batch ``B_DEC`` padded slots, prefill
+chunk ``C_PREFILL`` tokens (chunked prefill), per-layer KV pool of ``n_blocks``
+physical blocks of ``block_base`` tokens in DP mode.  Under TP degree ``p``
+the same pool bytes are reinterpreted with block capacity ``p * block_base``
+and local KV width ``(n_kv_heads/p) * d_head`` — the paper's Eq. (2)/(3).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+# Static serving shapes shared by all artifacts.
+B_DEC = 8  # decode batch slots per engine step (padded; block 0 is trash)
+C_PREFILL = 64  # chunked-prefill chunk size in tokens
+TP_DEGREES = (1, 2, 4)  # supported TP widths (powers of two, paper §4.3)
+
+VOCAB = 258  # byte-level: 256 bytes + BOS(256) + EOS(257)
+BOS, EOS = 256, 257
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    ffn_hidden: int  # dense FFN hidden size (per expert for MoE)
+    n_blocks: int  # physical KV blocks per engine per layer
+    block_base: int  # tokens per block in DP mode (B_base)
+    max_ctx: int  # max context length reachable at the widest TP degree
+    rope_theta: float = 10000.0
+    vocab: int = VOCAB
+    n_experts: int = 0  # 0 => dense FFN
+    top_k: int = 0
+    rms_eps: float = 1e-5
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def qkv_dims(self):
+        return (
+            self.n_heads * self.d_head,
+            self.n_kv_heads * self.d_head,
+            self.n_kv_heads * self.d_head,
+        )
+
+    def kv_width(self, p: int) -> int:
+        """Per-device KV hidden width D_local(p) (paper §4.2.1)."""
+        assert self.n_kv_heads % p == 0
+        return (self.n_kv_heads // p) * self.d_head
+
+    def block_tokens(self, p: int) -> int:
+        """Adaptive block token capacity B(p) = p * B_base (paper Eq. 3)."""
+        return p * self.block_base
+
+    def pool_elems(self) -> int:
+        """Flat f32 element count of one (K or V) per-layer pool.
+
+        Invariant across modes: n_blocks * B(p) * kv_width(p) is constant
+        (paper Eq. 2 with M_block fixed).
+        """
+        return self.n_blocks * self.block_base * self.n_kv_heads * self.d_head
+
+    def max_blocks_per_seq(self, p: int) -> int:
+        """Static block-table width at degree p (full pool to one request)."""
+        return self.n_blocks
+
+    def dp_token_capacity(self) -> int:
+        """Tokens one engine can cache for a single request in DP mode."""
+        return self.n_blocks * self.block_base
+
+    def tp_token_capacity(self, p: int) -> int:
+        """Tokens a p-way TP group can cache for one request (Use Case 3)."""
+        return self.n_blocks * self.block_tokens(p)
+
+    def weight_names(self) -> List[str]:
+        """Ordered tensor names; defines the *_weights.bin layout."""
+        names = ["emb", "final_norm", "lm_head"]
+        for layer in range(self.n_layers):
+            names += [f"l{layer}.{n}" for n in ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm")]
+            if self.is_moe:
+                names += [f"l{layer}.{n}" for n in ("router", "wg", "wu", "wd")]
+            else:
+                names += [f"l{layer}.{n}" for n in ("wg", "wu", "wd")]
+        return names
+
+    def weight_shape(self, name: str):
+        d, dh, hq, hkv, f = self.d_model, self.d_head, self.n_heads, self.n_kv_heads, self.ffn_hidden
+        base = name.split(".")[-1]
+        shapes = {
+            "emb": (self.vocab, d),
+            "final_norm": (d,),
+            "lm_head": (d, self.vocab),
+            "attn_norm": (d,),
+            "wq": (d, hq * dh),
+            "wk": (d, hkv * dh),
+            "wv": (d, hkv * dh),
+            "wo": (hq * dh, d),
+            "ffn_norm": (d,),
+        }
+        if self.is_moe:
+            shapes.update(
+                router=(d, self.n_experts),
+                wg=(self.n_experts, d, f),
+                wu=(self.n_experts, d, f),
+                wd=(self.n_experts, f, d),
+            )
+        else:
+            shapes.update(wg=(d, f), wu=(d, f), wd=(f, d))
+        return shapes[base]
+
+
+LLAMA_TINY = ModelCfg(
+    name="llama-tiny",
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=4,
+    d_head=32,
+    ffn_hidden=512,
+    n_blocks=128,
+    block_base=8,
+    max_ctx=4096,  # = tp_token_capacity(4)
+)
+
+MOE_TINY = ModelCfg(
+    name="moe-tiny",
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=4,
+    d_head=32,
+    ffn_hidden=256,
+    n_experts=4,
+    top_k=2,
+    n_blocks=128,
+    block_base=8,
+    max_ctx=4096,
+)
+
+LONGCTX_TINY = ModelCfg(
+    name="longctx-tiny",
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=32,
+    ffn_hidden=256,
+    n_blocks=256,
+    block_base=8,
+    max_ctx=8192,  # = tp_token_capacity(4)
+)
+
+MODELS = {m.name: m for m in (LLAMA_TINY, MOE_TINY, LONGCTX_TINY)}

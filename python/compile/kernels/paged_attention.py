@@ -1,0 +1,101 @@
+"""Pallas paged-attention decode kernel (flash-decoding over a block pool).
+
+This is the serving hot spot: one decode step attends over a request's KV
+state stored in non-contiguous fixed-size physical blocks (vLLM
+PagedAttention), indexed through a block table maintained by the Rust-side
+KV Cache Adaptor.
+
+The *same* kernel source serves every parallelism mode: the pool ref arrives
+already reshaped to the mode's logical layout
+``[n_blocks * B(p), Hkv/p, dh]`` where ``B(p) = p * B_base`` — the paper's
+adaptive block sizing (Eq. 2/3).  Physical bytes are identical across modes;
+only the static shape baked into each AOT artifact differs.
+
+Grid: one program per batch slot.  Inside, an online-softmax (flash) loop
+streams KV blocks via the block table; invalid tail blocks and padded batch
+slots are masked by position (padded slots carry seq_len = 0 and their table
+rows point at the reserved trash block 0, so reads are always in-bounds).
+
+Hardware adaptation: on TPU the block loop is the HBM->VMEM pipeline
+(BlockSpec would double-buffer `bt x dh` tiles); under interpret=True the
+loop lowers to an XLA while-loop on the CPU backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _kernel(
+    q_ref,  # [B, Hq, dh]
+    kp_ref,  # [n_slots, Hkv, dh]
+    vp_ref,  # [n_slots, Hkv, dh]
+    bt_ref,  # [B, max_blocks] i32
+    sl_ref,  # [B] i32 (valid tokens incl. current; 0 => padded slot)
+    o_ref,  # [B, Hq, dh]
+    *,
+    block_tokens: int,
+    max_blocks: int,
+):
+    i = pl.program_id(0)
+    q = q_ref[i]  # [Hq, dh]
+    hq, dh = q.shape
+    hkv = kp_ref.shape[1]
+    group = hq // hkv
+    seq_len = sl_ref[i]
+    scale = 1.0 / (dh**0.5)
+
+    def body(b, carry):
+        m, l, acc = carry  # [Hq,1], [Hq,1], [Hq,dh]
+        blk = bt_ref[i, b]
+        k = kp_ref[pl.dslice(blk * block_tokens, block_tokens)]  # [bt,Hkv,dh]
+        v = vp_ref[pl.dslice(blk * block_tokens, block_tokens)]
+        # GQA: repeat each kv head over its query-head group.
+        k = jnp.repeat(k, group, axis=1)  # [bt, Hq, dh]
+        v = jnp.repeat(v, group, axis=1)
+        s = jnp.einsum("hd,thd->ht", q, k) * scale  # [Hq, bt]
+        pos = b * block_tokens + jnp.arange(block_tokens)  # global positions
+        valid = (pos < seq_len)[None, :]  # [1, bt]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        # Guard: for fully-masked rows s - m_new is 0 - 0; force p to 0.
+        p_ = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # [Hq, bt]
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p_, axis=1, keepdims=True)
+        acc_new = alpha * acc + jnp.einsum("ht,thd->hd", p_, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((hq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((hq, 1), jnp.float32)
+    a0 = jnp.zeros((hq, dh), jnp.float32)
+    n_blocks_used = (seq_len + block_tokens - 1) // block_tokens
+    # Static trip count (AOT shape) with per-iteration masking; blocks past
+    # n_blocks_used contribute nothing but still execute.  The fori upper
+    # bound is dynamic where supported to skip dead tail blocks.
+    m, l, acc = jax.lax.fori_loop(0, n_blocks_used, body, (m0, l0, a0))
+    out = jnp.where(l > 0.0, acc / jnp.where(l > 0.0, l, 1.0), 0.0)
+    o_ref[i] = out
+
+
+def paged_attention(q, k_pool, v_pool, block_table, seq_lens, block_tokens: int):
+    """Decode attention over the paged pool.
+
+    q:             [B, Hq_local, dh]
+    k_pool/v_pool: [n_slots, Hkv_local, dh], n_slots = n_blocks * block_tokens
+    block_table:   [B, max_blocks] i32
+    seq_lens:      [B] i32
+    Returns [B, Hq_local, dh].
+    """
+    b = q.shape[0]
+    max_blocks = block_table.shape[1]
+    kern = functools.partial(_kernel, block_tokens=block_tokens, max_blocks=max_blocks)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b,),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k_pool, v_pool, block_table, seq_lens)

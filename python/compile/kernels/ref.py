@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is deliberately naive and obviously-correct; the pytest suite
+asserts the Pallas kernels (and the sharded model composition) against these.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def shard_matmul_ref(x, w_full, rank, p, shard_dim):
+    """x @ W_active where W_active is rank r's 1/p window of w_full.
+
+    shard_dim=1 (column-parallel): slice output columns -> [*, N/p].
+    shard_dim=0 (row-parallel): slice input rows; x is already the local
+    [*, K/p] activation slice -> partial [*, N] to be all-reduced.
+    """
+    if shard_dim == 1:
+        n = w_full.shape[1] // p
+        w = w_full[:, rank * n : (rank + 1) * n]
+        return x @ w
+    else:
+        k = w_full.shape[0] // p
+        w = w_full[rank * k : (rank + 1) * k, :]
+        return x @ w
+
+
+def rope_ref(x, positions, theta=10000.0):
+    """Rotary embedding; x: [T, H, dh], positions: [T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]  # [T,1,half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens, block_tokens):
+    """Decode attention oracle over a paged KV pool.
+
+    q:             [B, Hq_local, dh]
+    k_pool/v_pool: [n_slots, Hkv_local, dh] (n_slots = n_blocks * block_tokens)
+    block_table:   [B, max_blocks] int32 physical block ids
+    seq_lens:      [B] int32 valid tokens per request (including the current
+                   token, whose k/v must already be in the pool); 0 => padded
+                   slot, output is zeros.
+    Returns [B, Hq_local, dh].
+    """
+    b, hq, dh = q.shape
+    hkv = k_pool.shape[1]
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(dh)
+    outs = []
+    for i in range(b):
+        t = int(seq_lens[i])
+        if t == 0:
+            outs.append(jnp.zeros((hq, dh), jnp.float32))
+            continue
+        slots = []
+        for tok in range(t):
+            blk = int(block_table[i, tok // block_tokens])
+            slots.append(blk * block_tokens + tok % block_tokens)
+        slots = jnp.array(slots, dtype=jnp.int32)
+        k = k_pool[slots]  # [t, hkv, dh]
+        v = v_pool[slots]
+        head_outs = []
+        for h in range(hq):
+            kv_h = h // group
+            s = (q[i, h] @ k[:, kv_h, :].T) * scale  # [t]
+            a = jnp.exp(s - jnp.max(s))
+            a = a / jnp.sum(a)
+            head_outs.append(a @ v[:, kv_h, :])
+        outs.append(jnp.stack(head_outs))
+    return jnp.stack(outs)
+
+
+def prefill_attention_ref(q, k, v, start):
+    """Causal prefill over contiguous kv (history + chunk concatenated).
+
+    q: [C, Hq, dh] queries for absolute positions start..start+C-1
+    k/v: [T, Hkv, dh] cached tokens 0..T-1 (T >= start + C)
+    """
+    c, hq, dh = q.shape
+    t, hkv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(dh)
+    pos_q = np.arange(c) + start
+    pos_k = np.arange(t)
+    mask = pos_k[None, :] <= pos_q[:, None]  # [C, T]
+    outs = []
+    for h in range(hq):
+        kv_h = h // group
+        s = (q[:, h, :] @ k[:, kv_h, :].T) * scale  # [C, T]
+        s = jnp.where(mask, s, -1e30)
+        a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        a = a / jnp.sum(a, axis=-1, keepdims=True)
+        outs.append(a @ v[:, kv_h, :])
+    return jnp.stack(outs, axis=1)  # [C, Hq, dh]
+
+
+def ffn_ref(x, wg, wu, wd):
+    """Gated-SiLU FFN, unsharded."""
+    g = x @ wg
+    u = x @ wu
+    return (g * (1.0 / (1.0 + jnp.exp(-g))) * u) @ wd
+
+
+def moe_ffn_ref(x, router, wg, wu, wd, top_k):
+    """Top-k MoE FFN oracle: dense per-expert evaluation + gated mixture."""
+    logits = x @ router  # [T, E]
+    n_experts = logits.shape[-1]
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    gate = jax.nn.softmax(top_vals, axis=-1)  # softmax over selected experts
+    expert_outs = jnp.stack(
+        [ffn_ref(x, wg[e], wu[e], wd[e]) for e in range(n_experts)]
+    )  # [E, T, D]
+    out = jnp.zeros_like(x)
+    for j in range(top_k):
+        sel = jnp.take_along_axis(expert_outs, top_idx[:, j][None, :, None], axis=0)[0]
+        out = out + gate[:, j][:, None] * sel
+    return out
+
+
+def model_forward_ref(cfg, weights, tokens):
+    """Full unsharded forward with contiguous KV — ground truth for the
+    paged/sharded serving path.  tokens: np [T] -> logits [T, V]."""
+    t = len(tokens)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = jnp.asarray(weights["emb"])[jnp.asarray(tokens, jnp.int32)]
+    for layer in range(cfg.n_layers):
+        lw = {k.split(".", 1)[1]: jnp.asarray(v) for k, v in weights.items() if k.startswith(f"l{layer}.")}
+        xn = rmsnorm_ref(x, lw["attn_norm"], cfg.rms_eps)
+        q = (xn @ lw["wq"]).reshape(t, cfg.n_heads, cfg.d_head)
+        k = (xn @ lw["wk"]).reshape(t, cfg.n_kv_heads, cfg.d_head)
+        v = (xn @ lw["wv"]).reshape(t, cfg.n_kv_heads, cfg.d_head)
+        q = rope_ref(q, positions, cfg.rope_theta)
+        k = rope_ref(k, positions, cfg.rope_theta)
+        o = prefill_attention_ref(q, k, v, 0)  # causal full attention
+        x = x + o.reshape(t, -1) @ lw["wo"]
+        xn2 = rmsnorm_ref(x, lw["ffn_norm"], cfg.rms_eps)
+        if cfg.is_moe:
+            x = x + moe_ffn_ref(xn2, lw["router"], lw["wg"], lw["wu"], lw["wd"], cfg.top_k)
+        else:
+            x = x + ffn_ref(xn2, lw["wg"], lw["wu"], lw["wd"])
+    xn = rmsnorm_ref(x, jnp.asarray(weights["final_norm"]), cfg.rms_eps)
+    return xn @ jnp.asarray(weights["lm_head"])

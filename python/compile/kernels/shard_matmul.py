@@ -1,0 +1,74 @@
+"""Pallas shard-view matmul — the kernel-level form of the paper's
+Model Weights Manager (§4.1).
+
+The kernel input is always the FULL weight matrix; the active TP shard is a
+*window* selected inside the kernel from the runtime ``rank`` scalar:
+
+    W_active^(r) = View(W_full, dim, r, p)        (paper Eq. 1)
+
+No sliced copy of the weight is ever materialized at the HLO level: the
+operand is the full (loaded-once) matrix, and the kernel reads only the
+``1/p`` window it needs.  This mirrors vLLM's ``linear.py`` patch (a
+``narrow()`` view over the CUDA tensor) in TPU terms: on real hardware the
+window is what BlockSpec stages HBM->VMEM, so deactivated columns never move.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): on a real TPU this
+kernel would use ``PrefetchScalarGridSpec`` so the rank scalar feeds the
+``index_map`` and the MXU consumes aligned (128x128) bf16 tiles of the
+window.  Under ``interpret=True`` (mandatory for CPU PJRT execution) we
+express the same access pattern with ``pl.dslice`` on the weight ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL, ROW = 1, 0  # shard dimensions (Megatron column-/row-parallel)
+
+
+def _kernel_col(x_ref, w_ref, rank_ref, o_ref, *, shard_n: int):
+    """Column-parallel: activate output-column window [rank*shard_n, +shard_n)."""
+    r = rank_ref[0]
+    w = w_ref[:, pl.dslice(r * shard_n, shard_n)]  # zero-copy window
+    o_ref[...] = x_ref[...] @ w
+
+
+def _kernel_row(x_ref, w_ref, rank_ref, o_ref, *, shard_k: int):
+    """Row-parallel: activate input-row window; x is the local [T, K/p] slice.
+
+    Produces a *partial* [T, N] result that the coordinator all-reduces
+    across the TP group (paper §4.1.1, one sync per pair of linear layers).
+    """
+    r = rank_ref[0]
+    w = w_ref[pl.dslice(r * shard_k, shard_k), :]
+    o_ref[...] = x_ref[...] @ w
+
+
+def shard_matmul(x, w_full, rank, p: int, shard_dim: int):
+    """x @ View(w_full, shard_dim, rank, p), as a Pallas call.
+
+    x:      [T, K]  (shard_dim=COL)  or  [T, K/p]  (shard_dim=ROW)
+    w_full: [K, N]  — the full, loaded-once matrix
+    rank:   i32[1]  — runtime TP rank of this engine
+    Returns [T, N/p] (COL) or partial [T, N] (ROW).
+    """
+    t = x.shape[0]
+    k_full, n_full = w_full.shape
+    if shard_dim == COL:
+        assert n_full % p == 0
+        shard_n = n_full // p
+        out_shape = jax.ShapeDtypeStruct((t, shard_n), x.dtype)
+        kern = functools.partial(_kernel_col, shard_n=shard_n)
+    else:
+        assert k_full % p == 0
+        shard_k = k_full // p
+        assert x.shape[1] == shard_k, (x.shape, w_full.shape, p)
+        out_shape = jax.ShapeDtypeStruct((t, n_full), x.dtype)
+        kern = functools.partial(_kernel_row, shard_k=shard_k)
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w_full, rank)

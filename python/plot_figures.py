@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Render the paper's figures from the bench CSVs.
+
+Usage: after `cargo bench`, run `python python/plot_figures.py [bench_out]`.
+Produces fig8_<model>.png (three stacked panels: concurrency, p90 TTFT,
+queue time — the layout of the paper's Figure 8), fig9.png (TPOT + peak
+throughput bars) and fig10.png if matplotlib is available; otherwise prints
+ASCII sparklines so the shapes are inspectable in a terminal.
+"""
+
+import csv
+import os
+import sys
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    header, data = rows[0], rows[1:]
+    cols = {h: [] for h in header}
+    for r in data:
+        for h, v in zip(header, r):
+            try:
+                cols[h].append(float(v) if v else float("nan"))
+            except ValueError:
+                cols[h].append(v)
+    return header, cols
+
+
+def ascii_spark(values, width=60):
+    import math
+
+    vals = [v for v in values if isinstance(v, float) and not math.isnan(v)]
+    if not vals:
+        return "(no data)"
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    chars = " .:-=+*#%@"
+    step = max(1, len(values) // width)
+    out = []
+    for i in range(0, len(values), step):
+        v = values[i]
+        if isinstance(v, float) and not math.isnan(v):
+            out.append(chars[min(9, int((v - lo) / span * 9))])
+        else:
+            out.append(" ")
+    return "".join(out) + f"   [{lo:.2g} .. {hi:.2g}]"
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "bench_out"
+    if not os.path.isdir(out_dir):
+        sys.exit(f"{out_dir} not found — run `cargo bench` first")
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+
+        have_mpl = True
+    except Exception:
+        have_mpl = False
+
+    models = ["llama_3_70b", "gpt_oss_120b", "nemotron_8b"]
+    panels = [("concurrency", "in-flight"), ("ttft_p90", "P90 TTFT (s)"), ("queue", "queue time (s)")]
+    for m in models:
+        series = {}
+        for panel, _ in panels:
+            path = os.path.join(out_dir, f"fig8_{m}_{panel}.csv")
+            if os.path.exists(path):
+                series[panel] = read_csv(path)
+        if not series:
+            continue
+        if have_mpl:
+            fig, axes = plt.subplots(len(series), 1, figsize=(9, 8), sharex=True)
+            axes = axes if hasattr(axes, "__len__") else [axes]
+            for ax, (panel, label) in zip(axes, [p for p in panels if p[0] in series]):
+                header, cols = series[panel]
+                for sysname in header[1:]:
+                    ax.plot(cols["t"], cols[sysname], label=sysname, linewidth=1.2)
+                ax.set_ylabel(label)
+                ax.legend(fontsize=7)
+            axes[-1].set_xlabel("trace time (s)")
+            fig.suptitle(f"Fig 8 — {m}")
+            out = os.path.join(out_dir, f"fig8_{m}.png")
+            fig.savefig(out, dpi=130, bbox_inches="tight")
+            print(f"wrote {out}")
+        else:
+            print(f"\n== Fig 8 {m} (ascii) ==")
+            for panel, label in panels:
+                if panel not in series:
+                    continue
+                header, cols = series[panel]
+                print(f" {label}:")
+                for sysname in header[1:]:
+                    print(f"  {sysname:18} {ascii_spark(cols[sysname])}")
+
+    for slug in ["fig9_tpot_throughput", "fig10_long_context", "table1_priority", "table2_paper_scale"]:
+        path = os.path.join(out_dir, f"{slug}.csv")
+        if os.path.exists(path):
+            header, cols = read_csv(path)
+            print(f"\n== {slug} ==")
+            widths = [max(len(str(x)) for x in [h] + cols[h]) for h in header]
+            print("  ".join(h.rjust(w) for h, w in zip(header, widths)))
+            n = len(next(iter(cols.values())))
+            for i in range(n):
+                print("  ".join(str(cols[h][i]).rjust(w) for h, w in zip(header, widths)))
+
+
+if __name__ == "__main__":
+    main()

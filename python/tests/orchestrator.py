@@ -1,0 +1,274 @@
+"""Python-side mirror of the Rust engine/coordinator step protocol.
+
+This module re-creates, in numpy/jax, exactly what the Rust side does with
+the AOT artifacts: per-request block allocation + slot mapping (the KV Cache
+Adaptor), chunked prefill, padded decode batches, and — for TP — the
+per-layer shard calls with manual all-reduce (partial-sum) between them.
+
+It exists so the pytest suite can validate the *artifact contract* end to
+end before any Rust runs: if these tests pass, the Rust engine only has to
+reproduce this call sequence mechanically.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import ModelCfg, B_DEC, C_PREFILL
+
+TRASH_BLOCK = 0  # physical block 0 is reserved; padded tokens write here
+
+
+class Adaptor:
+    """Minimal KV Cache Adaptor: free list + per-request block lists.
+
+    Block ids are physical and mode-agnostic (fixed bytes per block); only
+    the token capacity B(p) = p * B_base is mode-dependent.
+    """
+
+    def __init__(self, cfg: ModelCfg):
+        self.cfg = cfg
+        self.free = list(range(1, cfg.n_blocks))  # block 0 reserved (trash)
+        self.blocks = {}  # req id -> [block ids]
+        self.layout = {}  # req id -> TP degree its KV was written under
+
+    def ensure_capacity(self, rid, n_tokens, p):
+        """Allocate blocks so request `rid` can hold n_tokens under degree p."""
+        bt = self.cfg.block_tokens(p)
+        blocks = self.blocks.setdefault(rid, [])
+        self.layout[rid] = p
+        need = (n_tokens + bt - 1) // bt
+        while len(blocks) < need:
+            blocks.append(self.free.pop(0))
+        return blocks
+
+    def slot(self, rid, pos, p):
+        bt = self.cfg.block_tokens(p)
+        blk = self.blocks[rid][pos // bt]
+        return blk * bt + pos % bt
+
+    def release(self, rid):
+        self.free = sorted(self.free + self.blocks.pop(rid, []))
+        self.layout.pop(rid, None)
+
+    def table(self, rid, p):
+        t = np.zeros(self.cfg.n_blocks, np.int32)
+        blocks = self.blocks.get(rid, [])
+        t[: len(blocks)] = blocks
+        return t
+
+
+class Engine:
+    """One DP engine: full weights + per-layer flat pools (numpy mirrors of
+    the device-resident PJRT buffers)."""
+
+    def __init__(self, cfg: ModelCfg, weights):
+        self.cfg = cfg
+        self.w = {k: jnp.asarray(v) for k, v in weights.items()}
+        self.k_pools = [np.zeros(cfg.pool_elems(), np.float32) for _ in range(cfg.n_layers)]
+        self.v_pools = [np.zeros(cfg.pool_elems(), np.float32) for _ in range(cfg.n_layers)]
+        self.adaptor = Adaptor(cfg)
+
+    def layer_w(self, layer):
+        return {k.split(".", 1)[1]: v for k, v in self.w.items() if k.startswith(f"l{layer}.")}
+
+    def scatter_kv(self, layer, k_new, v_new, slots, p):
+        """The adaptor-side authoritative KV write (mirrors Rust exactly):
+        new rows land at the flat slot ids, under the current layout view."""
+        cfg = self.cfg
+        hkv_l = cfg.n_kv_heads // p
+        n_slots = cfg.n_blocks * cfg.block_tokens(p)
+        kp = self.k_pools[layer].reshape(n_slots, hkv_l * cfg.d_head)
+        vp = self.v_pools[layer].reshape(n_slots, hkv_l * cfg.d_head)
+        for i, s in enumerate(np.asarray(slots)):
+            kp[s] = np.asarray(k_new)[i]
+            vp[s] = np.asarray(v_new)[i]
+
+
+def dp_prefill(engine: Engine, rid: int, tokens):
+    """Chunked prefill of one request on one DP engine; returns last logits."""
+    cfg = engine.cfg
+    toks = np.asarray(tokens, np.int32)
+    n = len(toks)
+    logits = None
+    for start in range(0, n, C_PREFILL):
+        chunk = toks[start : start + C_PREFILL]
+        nv = len(chunk)
+        engine.adaptor.ensure_capacity(rid, start + nv, 1)
+        tok_pad = np.zeros(C_PREFILL, np.int32)
+        tok_pad[:nv] = chunk
+        pos = np.zeros(C_PREFILL, np.int32)
+        pos[:nv] = start + np.arange(nv)
+        slots = np.arange(C_PREFILL, dtype=np.int32) % cfg.block_tokens(1)  # trash
+        for i in range(nv):
+            slots[i] = engine.adaptor.slot(rid, start + i, 1)
+        table = engine.adaptor.table(rid, 1)
+        pools = []
+        for layer in range(cfg.n_layers):
+            pools += [jnp.asarray(engine.k_pools[layer]), jnp.asarray(engine.v_pools[layer])]
+        out = M.dp_prefill_step(
+            cfg,
+            jnp.asarray(tok_pad),
+            jnp.asarray(pos),
+            jnp.asarray(slots),
+            jnp.asarray(table),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([start + nv], jnp.int32),
+            engine.w,
+            pools,
+        )
+        logits = np.asarray(out[0])
+        for layer in range(cfg.n_layers):
+            engine.scatter_kv(layer, out[1 + 2 * layer], out[2 + 2 * layer], slots, 1)
+    return logits[len(toks) % C_PREFILL - 1 if n % C_PREFILL else C_PREFILL - 1]
+
+
+def dp_decode(engine: Engine, reqs):
+    """One padded decode step; reqs = [(rid, next_token, position)].
+
+    position = index of next_token (0-based); its kv is appended this step.
+    Returns {rid: logits_row}.
+    """
+    cfg = engine.cfg
+    b = len(reqs)
+    assert b <= B_DEC
+    tokens = np.zeros(B_DEC, np.int32)
+    positions = np.zeros(B_DEC, np.int32)
+    seq_lens = np.zeros(B_DEC, np.int32)
+    slots = np.arange(B_DEC, dtype=np.int32) % cfg.block_tokens(1)
+    tables = np.zeros((B_DEC, cfg.n_blocks), np.int32)
+    for i, (rid, tok, pos) in enumerate(reqs):
+        engine.adaptor.ensure_capacity(rid, pos + 1, 1)
+        tokens[i] = tok
+        positions[i] = pos
+        seq_lens[i] = pos + 1
+        slots[i] = engine.adaptor.slot(rid, pos, 1)
+        tables[i] = engine.adaptor.table(rid, 1)
+    pools = []
+    for layer in range(cfg.n_layers):
+        pools += [jnp.asarray(engine.k_pools[layer]), jnp.asarray(engine.v_pools[layer])]
+    out = M.dp_decode_step(
+        cfg,
+        jnp.asarray(tokens),
+        jnp.asarray(positions),
+        jnp.asarray(seq_lens),
+        jnp.asarray(tables),
+        jnp.asarray(slots),
+        engine.w,
+        pools,
+    )
+    logits = np.asarray(out[0])
+    for layer in range(cfg.n_layers):
+        engine.scatter_kv(layer, out[1 + 2 * layer], out[2 + 2 * layer], slots, 1)
+    return {rid: logits[i] for i, (rid, _, _) in enumerate(reqs)}
+
+
+# ---------------------------------------------------------------------------
+# TP orchestration: per-layer shard calls + manual all-reduce, exactly the
+# Rust coordinator's data plane.
+# ---------------------------------------------------------------------------
+
+
+class TpGroup:
+    """p engines temporarily bound into a TP group (shared block ids)."""
+
+    def __init__(self, engines, p):
+        assert len(engines) == p
+        self.engines = engines
+        self.p = p
+        self.cfg = engines[0].cfg
+        # Shared adaptor state: the group allocates identical block ids on
+        # every member (each member stores its own head slice).
+        self.adaptor = engines[0].adaptor
+
+    def _attn_allreduce(self, phase, layer, x, **kw):
+        cfg, p = self.cfg, self.p
+        partials = []
+        for r, eng in enumerate(self.engines):
+            lw = eng.layer_w(layer)
+            rank = jnp.asarray([r], jnp.int32)
+            kp = jnp.asarray(eng.k_pools[layer])
+            vp = jnp.asarray(eng.v_pools[layer])
+            if phase == "decode":
+                partial, kn, vn = M.tp_attn_decode(
+                    cfg, p, x, kw["tables"], kw["slots"], kw["positions"], kw["seq_lens"],
+                    rank, lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"], kp, vp,
+                )
+            else:
+                partial, kn, vn = M.tp_attn_prefill(
+                    cfg, p, x, kw["table"], kw["slots"], kw["positions"], kw["start"], kw["seq_len"],
+                    rank, lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"], kp, vp,
+                )
+            eng.scatter_kv(layer, kn, vn, kw["slots"], p)
+            partials.append(partial)
+        return sum(partials[1:], partials[0])  # all-reduce
+
+    def _ffn_allreduce(self, layer, x):
+        partials = []
+        for r, eng in enumerate(self.engines):
+            lw = eng.layer_w(layer)
+            partials.append(M.tp_ffn(self.cfg, self.p, x, jnp.asarray([r], jnp.int32), lw))
+        return sum(partials[1:], partials[0])
+
+    def prefill(self, rid, tokens):
+        """Chunked TP prefill; KV written in TP-p layout on every member."""
+        cfg, p = self.cfg, self.p
+        toks = np.asarray(tokens, np.int32)
+        n = len(toks)
+        w0 = self.engines[0].w
+        logits = None
+        for start in range(0, n, C_PREFILL):
+            chunk = toks[start : start + C_PREFILL]
+            nv = len(chunk)
+            self.adaptor.ensure_capacity(rid, start + nv, p)
+            tok_pad = np.zeros(C_PREFILL, np.int32)
+            tok_pad[:nv] = chunk
+            pos = np.zeros(C_PREFILL, np.int32)
+            pos[:nv] = start + np.arange(nv)
+            slots = np.arange(C_PREFILL, dtype=np.int32) % cfg.block_tokens(p)
+            for i in range(nv):
+                slots[i] = self.adaptor.slot(rid, start + i, p)
+            table = self.adaptor.table(rid, p)
+            x = np.asarray(w0["emb"])[tok_pad]  # Rust embeds on the host
+            x = jnp.asarray(x)
+            kw = dict(
+                table=jnp.asarray(table),
+                slots=jnp.asarray(slots),
+                positions=jnp.asarray(pos),
+                start=jnp.asarray([start], jnp.int32),
+                seq_len=jnp.asarray([start + nv], jnp.int32),
+            )
+            for layer in range(cfg.n_layers):
+                x = x + self._attn_allreduce("prefill", layer, x, **kw)
+                x = x + self._ffn_allreduce(layer, x)
+            logits = np.asarray(M.lm_head(cfg, x, w0["final_norm"], w0["lm_head"]))
+        return logits[n % C_PREFILL - 1 if n % C_PREFILL else C_PREFILL - 1]
+
+    def decode(self, reqs):
+        """One padded TP decode step; reqs = [(rid, token, pos)]."""
+        cfg, p = self.cfg, self.p
+        tokens = np.zeros(B_DEC, np.int32)
+        positions = np.zeros(B_DEC, np.int32)
+        seq_lens = np.zeros(B_DEC, np.int32)
+        slots = np.arange(B_DEC, dtype=np.int32) % cfg.block_tokens(p)
+        tables = np.zeros((B_DEC, cfg.n_blocks), np.int32)
+        for i, (rid, tok, pos) in enumerate(reqs):
+            self.adaptor.ensure_capacity(rid, pos + 1, p)
+            tokens[i] = tok
+            positions[i] = pos
+            seq_lens[i] = pos + 1
+            slots[i] = self.adaptor.slot(rid, pos, p)
+            tables[i] = self.adaptor.table(rid, p)
+        w0 = self.engines[0].w
+        x = jnp.asarray(np.asarray(w0["emb"])[tokens])
+        kw = dict(
+            tables=jnp.asarray(tables),
+            slots=jnp.asarray(slots),
+            positions=jnp.asarray(positions),
+            seq_lens=jnp.asarray(seq_lens),
+        )
+        for layer in range(cfg.n_layers):
+            x = x + self._attn_allreduce("decode", layer, x, **kw)
+            x = x + self._ffn_allreduce(layer, x)
+        logits = np.asarray(M.lm_head(cfg, x, w0["final_norm"], w0["lm_head"]))
+        return {rid: logits[i] for i, (rid, _, _) in enumerate(reqs)}

@@ -1,0 +1,103 @@
+"""AOT pipeline tests: manifest structure, weights bin layout, HLO emission."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile.configs import MODELS, ModelCfg, B_DEC, C_PREFILL, TP_DEGREES
+from compile.aot import build_specs, example_arg, make_weights, to_hlo_text, write_weights_bin
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    cfg = MODELS["llama-tiny"]
+    w = make_weights(cfg)
+    path = tmp_path / "w.bin"
+    entries = write_weights_bin(cfg, w, path)
+    blob = np.fromfile(path, dtype="<f4")
+    total = sum(e["n_elems"] for e in entries)
+    assert len(blob) == total
+    for e in entries:
+        t = blob[e["offset_elems"] : e["offset_elems"] + e["n_elems"]].reshape(e["shape"])
+        np.testing.assert_array_equal(t, w[e["name"]])
+
+
+def test_weights_deterministic():
+    cfg = MODELS["llama-tiny"]
+    w1, w2 = make_weights(cfg), make_weights(cfg)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+
+
+@pytest.mark.parametrize("mname", list(MODELS))
+def test_specs_cover_required_surface(mname):
+    cfg = MODELS[mname]
+    specs = build_specs(cfg)
+    assert "dp_decode" in specs and "dp_prefill" in specs
+    for p in (2, 4):
+        if cfg.n_kv_heads % p == 0 and cfg.n_heads % p == 0:
+            for a in (f"attn_decode_tp{p}", f"attn_prefill_tp{p}", f"ffn_decode_tp{p}", f"ffn_prefill_tp{p}"):
+                assert a in specs, a
+    assert "lmhead_dec" in specs and "lmhead_pre" in specs
+
+
+@pytest.mark.parametrize("mname", list(MODELS))
+def test_spec_args_traceable_shapes(mname):
+    """Every arg descriptor maps to a concrete example shape."""
+    cfg = MODELS[mname]
+    for name, (fn, args, outs, donate, meta) in build_specs(cfg).items():
+        for a in args:
+            ex = example_arg(cfg, a)
+            assert all(d > 0 for d in ex.shape) or ex.shape == (), (name, a)
+        for d in donate:
+            assert args[d]["kind"] in ("kpool", "vpool"), (name, d, args[d])
+
+
+def test_hlo_text_emits_and_mentions_entry():
+    cfg = MODELS["longctx-tiny"]
+    specs = build_specs(cfg)
+    fn, args, outs, donate, meta = specs["lmhead_dec"]
+    examples = [example_arg(cfg, a) for a in args]
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*examples)
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # Output arity: logits only, wrapped in a 1-tuple.
+    assert len(outs) == 1
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")), reason="run `make artifacts` first")
+def test_manifest_consistency():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["static"]["b_dec"] == B_DEC
+    assert man["static"]["c_prefill"] == C_PREFILL
+    for mname, m in man["models"].items():
+        cfg = MODELS[mname]
+        assert m["cfg"]["pool_elems"] == cfg.pool_elems()
+        # Every artifact file exists and every weight role resolves.
+        for aname, art in m["artifacts"].items():
+            assert os.path.exists(os.path.join(ART, art["path"])), art["path"]
+            for a in art["args"]:
+                if a["kind"] == "weight":
+                    assert any(e["name"] == a["role"] for e in m["weights"]), a
+                elif a["kind"] == "weight_role":
+                    assert any(e["name"] == "l0." + a["role"] for e in m["weights"]), a
+        # Weights bin size matches the manifest entries.
+        total = sum(e["n_elems"] for e in m["weights"])
+        path = os.path.join(ART, m["weights_bin"])
+        assert os.path.getsize(path) == total * 4
+
+
+def test_pool_capacity_scaling_matches_paper_eq3():
+    """B(p) = p * B_base and capacity multiplies by p (paper Use Case 3)."""
+    for cfg in MODELS.values():
+        for p in TP_DEGREES:
+            if cfg.n_kv_heads % p:
+                continue
+            assert cfg.block_tokens(p) == p * cfg.block_base
+            assert cfg.tp_token_capacity(p) == p * cfg.dp_token_capacity()

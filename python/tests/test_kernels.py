@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.shard_matmul import shard_matmul, COL, ROW
+from compile.kernels.paged_attention import paged_attention
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# shard_matmul: the zero-copy weight view (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    t=st.integers(1, 16),
+    k=st.sampled_from([8, 16, 32]),
+    n_per=st.sampled_from([4, 8, 16]),
+    p=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shard_matmul_col(t, k, n_per, p, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, t, k)
+    w = _rand(rng, k, n_per * p)
+    for r in range(p):
+        got = shard_matmul(x, w, jnp.asarray([r], jnp.int32), p, COL)
+        want = ref.shard_matmul_ref(x, w, r, p, COL)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    t=st.integers(1, 16),
+    k_per=st.sampled_from([4, 8]),
+    n=st.sampled_from([8, 16]),
+    p=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shard_matmul_row(t, k_per, n, p, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k_per * p, n)
+    for r in range(p):
+        x = _rand(rng, t, k_per)
+        got = shard_matmul(x, w, jnp.asarray([r], jnp.int32), p, ROW)
+        want = ref.shard_matmul_ref(x, w, r, p, ROW)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_shard_matmul_partials_sum_to_full():
+    """Column-then-row shard partial sums == unsharded product chain."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 5, 16)
+    w1 = _rand(rng, 16, 32)
+    w2 = _rand(rng, 32, 16)
+    full = (x @ w1) @ w2
+    for p in (1, 2, 4):
+        acc = np.zeros((5, 16), np.float32)
+        for r in range(p):
+            rank = jnp.asarray([r], jnp.int32)
+            h = shard_matmul(x, w1, rank, p, COL)
+            acc += np.asarray(shard_matmul(h, w2, rank, p, ROW))
+        np.testing.assert_allclose(acc, full, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention: flash-decoding over the block pool (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    hq_mult=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    dh=st.sampled_from([4, 8]),
+    bt=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_attention_matches_ref(b, hq_mult, hkv, dh, bt, seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * hq_mult
+    nblk = 8
+    nslots = nblk * bt
+    kp = _rand(rng, nslots, hkv, dh)
+    vp = _rand(rng, nslots, hkv, dh)
+    q = _rand(rng, b, hq, dh)
+    # Random non-overlapping block assignment per request (block 0 = trash).
+    avail = list(range(1, nblk))
+    rng.shuffle(avail)
+    table = np.zeros((b, nblk), np.int32)
+    seq = np.zeros(b, np.int32)
+    for i in range(b):
+        n_blocks_i = rng.integers(0, min(3, len(avail)) + 1)
+        blocks = [avail.pop() for _ in range(n_blocks_i)] if n_blocks_i else []
+        table[i, : len(blocks)] = blocks
+        seq[i] = 0 if not blocks else rng.integers(1, len(blocks) * bt + 1)
+    got = paged_attention(q, kp, vp, jnp.asarray(table), jnp.asarray(seq), bt)
+    want = ref.paged_attention_ref(q, kp, vp, table, seq, bt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_attention_padded_slot_is_zero():
+    rng = np.random.default_rng(3)
+    kp = _rand(rng, 16, 2, 4)
+    vp = _rand(rng, 16, 2, 4)
+    q = _rand(rng, 2, 4, 4)
+    table = np.zeros((2, 4), np.int32)
+    table[0, 0] = 1
+    seq = np.asarray([3, 0], np.int32)
+    out = np.asarray(paged_attention(q, kp, vp, jnp.asarray(table), jnp.asarray(seq), 4))
+    assert np.all(out[1] == 0.0)
+    assert np.any(out[0] != 0.0)
+
+
+def test_paged_attention_single_token():
+    """seq_len=1: output must equal v of the single cached token."""
+    rng = np.random.default_rng(4)
+    kp = _rand(rng, 8, 1, 4)
+    vp = _rand(rng, 8, 1, 4)
+    q = _rand(rng, 1, 2, 4)
+    table = np.asarray([[1, 0]], np.int32)
+    seq = np.asarray([1], np.int32)
+    out = np.asarray(paged_attention(q, kp, vp, jnp.asarray(table), jnp.asarray(seq), 4))
+    want = np.asarray(vp[4])  # block 1, offset 0
+    np.testing.assert_allclose(out[0, 0], want[0], rtol=1e-5)
+    np.testing.assert_allclose(out[0, 1], want[0], rtol=1e-5)
+
+
+def test_paged_attention_block_order_irrelevant():
+    """Attention must follow the table's logical order, not physical ids."""
+    rng = np.random.default_rng(5)
+    bt, hkv, dh = 4, 1, 4
+    kp = _rand(rng, 8 * bt, hkv, dh)
+    vp = _rand(rng, 8 * bt, hkv, dh)
+    q = _rand(rng, 1, 1, dh)
+    t1 = np.asarray([[5, 2, 0, 0, 0, 0, 0, 0]], np.int32)
+    seq = np.asarray([7], np.int32)
+    got = np.asarray(paged_attention(q, kp, vp, jnp.asarray(t1), jnp.asarray(seq), bt))
+    want = np.asarray(ref.paged_attention_ref(q, kp, vp, t1, seq, bt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rope / rmsnorm sanity
+# ---------------------------------------------------------------------------
+
+
+@given(t=st.integers(1, 8), h=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+def test_rope_preserves_norm(t, h, seed):
+    from compile.model import rope
+
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, t, h, 8)
+    pos = jnp.asarray(rng.integers(0, 100, t), jnp.int32)
+    y = rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1), np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4
+    )
+
+
+def test_rope_position_zero_identity():
+    from compile.model import rope
+
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 3, 2, 8)
+    y = rope(x, jnp.zeros(3, jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_rope_matches_ref():
+    from compile.model import rope
+
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 4, 2, 8)
+    pos = jnp.asarray([0, 3, 17, 200], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(rope(x, pos, 10000.0)), np.asarray(ref.rope_ref(x, pos)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rmsnorm_matches_ref():
+    from compile.model import rmsnorm
+
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 4, 16)
+    w = _rand(rng, 16)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w)), np.asarray(ref.rmsnorm_ref(x, w)), rtol=1e-5, atol=1e-6
+    )

@@ -1,0 +1,302 @@
+"""L2 model correctness: sharded composition vs the unsharded reference.
+
+The decisive tests here validate the *artifact contract*: the fused DP step
+functions and the per-layer TP shard functions (orchestrated exactly as the
+Rust coordinator will, including the KV Cache Adaptor's block/slot math and
+all-reduce placement) must all agree with a contiguous-KV full-model
+reference.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import MODELS, ModelCfg, B_DEC, C_PREFILL
+from compile.aot import make_weights
+from compile.kernels import ref
+from compile import model as M
+
+import sys, os
+
+sys.path.insert(0, os.path.dirname(__file__))
+from orchestrator import Engine, TpGroup, dp_prefill, dp_decode
+
+# A sub-tiny config keeps these integration tests fast while exercising every
+# code path (GQA grouping, multi-layer, paging, chunking).
+TEST_CFG = ModelCfg(
+    name="test-tiny",
+    d_model=32,
+    n_layers=2,
+    n_heads=8,  # GQA 8q/4kv divides every TP degree in {1,2,4}
+    n_kv_heads=4,
+    d_head=8,
+    ffn_hidden=48,
+    n_blocks=64,
+    block_base=4,
+    max_ctx=1024,
+)
+
+TEST_MOE = ModelCfg(
+    name="test-moe",
+    d_model=32,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=8,
+    ffn_hidden=32,
+    n_experts=3,
+    top_k=2,
+    n_blocks=32,
+    block_base=4,
+    max_ctx=512,
+)
+
+
+def _tokens(rng, n):
+    return rng.integers(0, 256, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer shard compositions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_ffn_shard_partials_sum_to_ref(p):
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, cfg.d_model)).astype(np.float32))
+    lw = {k.split(".", 1)[1]: jnp.asarray(v) for k, v in w.items() if k.startswith("l0.")}
+    want = ref.ffn_ref(ref.rmsnorm_ref(x, lw["ffn_norm"]), lw["wg"], lw["wu"], lw["wd"])
+    acc = np.zeros_like(np.asarray(x))
+    for r in range(p):
+        acc += np.asarray(
+            M.ffn_shard(cfg, p, jnp.asarray([r], jnp.int32), x, lw["ffn_norm"], lw["wg"], lw["wu"], lw["wd"])
+        )
+    np.testing.assert_allclose(acc, np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_moe_ffn_shard_partials_sum_to_ref(p):
+    cfg = TEST_MOE
+    w = make_weights(cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((5, cfg.d_model)).astype(np.float32))
+    lw = {k.split(".", 1)[1]: jnp.asarray(v) for k, v in w.items() if k.startswith("l0.")}
+    xn = ref.rmsnorm_ref(x, lw["ffn_norm"])
+    want = ref.moe_ffn_ref(xn, lw["router"], lw["wg"], lw["wu"], lw["wd"], cfg.top_k)
+    acc = np.zeros_like(np.asarray(x))
+    for r in range(p):
+        acc += np.asarray(
+            M.moe_ffn_shard(
+                cfg, p, jnp.asarray([r], jnp.int32), x, lw["ffn_norm"], lw["router"], lw["wg"], lw["wu"], lw["wd"]
+            )
+        )
+    np.testing.assert_allclose(acc, np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: paged + sharded serving path vs contiguous full forward
+# ---------------------------------------------------------------------------
+
+
+def _serve_dp(cfg, weights, tokens, n_decode):
+    """Prefill then greedy-decode n_decode tokens on a single DP engine."""
+    eng = Engine(cfg, weights)
+    logits = dp_prefill(eng, rid=1, tokens=tokens)
+    hist = list(tokens)
+    rows = [logits]
+    for _ in range(n_decode):
+        nxt = int(np.argmax(rows[-1]))
+        hist.append(nxt)
+        out = dp_decode(eng, [(1, nxt, len(hist) - 1)])
+        rows.append(out[1])
+    return hist, rows
+
+
+def _serve_tp(cfg, weights, tokens, n_decode, p):
+    engines = [Engine(cfg, weights) for _ in range(p)]
+    # Group members share one adaptor (identical block ids on each member).
+    for e in engines[1:]:
+        e.adaptor = engines[0].adaptor
+    grp = TpGroup(engines, p)
+    logits = grp.prefill(rid=1, tokens=tokens)
+    hist = list(tokens)
+    rows = [logits]
+    for _ in range(n_decode):
+        nxt = int(np.argmax(rows[-1]))
+        hist.append(nxt)
+        out = grp.decode([(1, nxt, len(hist) - 1)])
+        rows.append(out[1])
+    return hist, rows
+
+
+def _ref_rows(cfg, weights, hist, prompt_len):
+    """Reference logits rows at positions prompt_len-1 .. len(hist)-1."""
+    full = np.asarray(ref.model_forward_ref(cfg, weights, hist))
+    return [full[i] for i in range(prompt_len - 1, len(hist))]
+
+
+@pytest.mark.parametrize("cfg", [TEST_CFG, TEST_MOE], ids=lambda c: c.name)
+def test_dp_serving_matches_reference(cfg):
+    w = make_weights(cfg)
+    rng = np.random.default_rng(42)
+    prompt = _tokens(rng, 19)  # not chunk-aligned on purpose
+    hist, rows = _serve_dp(cfg, w, prompt, n_decode=4)
+    want = _ref_rows(cfg, w, hist, len(prompt))
+    for got, expect in zip(rows, want):
+        np.testing.assert_allclose(got, expect, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_tp_serving_matches_reference(p):
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(43)
+    prompt = _tokens(rng, 11)
+    hist, rows = _serve_tp(cfg, w, prompt, n_decode=3, p=p)
+    want = _ref_rows(cfg, w, hist, len(prompt))
+    for got, expect in zip(rows, want):
+        np.testing.assert_allclose(got, expect, rtol=2e-3, atol=2e-3)
+
+
+def test_tp_moe_serving_matches_reference():
+    cfg = TEST_MOE
+    w = make_weights(cfg)
+    rng = np.random.default_rng(44)
+    prompt = _tokens(rng, 9)
+    hist, rows = _serve_tp(cfg, w, prompt, n_decode=2, p=2)
+    want = _ref_rows(cfg, w, hist, len(prompt))
+    for got, expect in zip(rows, want):
+        np.testing.assert_allclose(got, expect, rtol=2e-3, atol=2e-3)
+
+
+def test_dp_and_tp_agree_token_for_token():
+    """Greedy decode must produce the identical token sequence in both modes
+    — the user-visible invariant behind 'switching is transparent'."""
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(45)
+    prompt = _tokens(rng, 13)
+    hist_dp, _ = _serve_dp(cfg, w, prompt, n_decode=6)
+    hist_tp, _ = _serve_tp(cfg, w, prompt, n_decode=6, p=2)
+    assert hist_dp == hist_tp
+
+
+def test_multi_chunk_prefill_matches_reference():
+    """Prompts spanning several prefill chunks (chunked prefill, §3)."""
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(46)
+    prompt = _tokens(rng, C_PREFILL * 2 + 7)
+    hist, rows = _serve_dp(cfg, w, prompt, n_decode=2)
+    want = _ref_rows(cfg, w, hist, len(prompt))
+    for got, expect in zip(rows, want):
+        np.testing.assert_allclose(got, expect, rtol=3e-3, atol=3e-3)
+
+
+def test_batched_decode_requests_are_independent():
+    """Two requests decoded in one padded batch == each decoded alone."""
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(47)
+    p1, p2 = _tokens(rng, 6), _tokens(rng, 9)
+
+    # Together:
+    eng = Engine(cfg, w)
+    l1 = dp_prefill(eng, 1, p1)
+    l2 = dp_prefill(eng, 2, p2)
+    n1, n2 = int(np.argmax(l1)), int(np.argmax(l2))
+    out = dp_decode(eng, [(1, n1, len(p1)), (2, n2, len(p2))])
+
+    # Alone:
+    for rid, prompt, tok, got in ((1, p1, n1, out[1]), (2, p2, n2, out[2])):
+        e = Engine(cfg, w)
+        dp_prefill(e, rid, prompt)
+        alone = dp_decode(e, [(rid, tok, len(prompt))])[rid]
+        np.testing.assert_allclose(got, alone, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# KV Cache Adaptor invariants at the model level (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_bytes_invariant_across_modes():
+    cfg = TEST_CFG
+    sizes = set()
+    for p in (1, 2, 4):
+        bt = cfg.block_tokens(p)
+        sizes.add(cfg.n_blocks * bt * (cfg.n_kv_heads // p) * cfg.d_head)
+    assert sizes == {cfg.pool_elems()}
+
+
+def test_pool_view_is_pure_reshape():
+    cfg = TEST_CFG
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal(cfg.pool_elems()).astype(np.float32))
+    for p in (1, 2, 4):
+        v = M.pool_view(cfg, flat, p)
+        np.testing.assert_array_equal(np.asarray(v).reshape(-1), np.asarray(flat))
+
+
+def test_kv_append_only_touches_named_slots():
+    cfg = TEST_CFG
+    rng = np.random.default_rng(1)
+    flat = jnp.asarray(rng.standard_normal(cfg.pool_elems()).astype(np.float32))
+    p = 2
+    hkv_l = cfg.n_kv_heads // p
+    new = jnp.asarray(rng.standard_normal((3, hkv_l, cfg.d_head)).astype(np.float32))
+    slots = jnp.asarray([5, 9, 21], jnp.int32)
+    out = M.kv_append(cfg, flat, new, slots, p)
+    v_in = np.asarray(M.pool_view(cfg, flat, p))
+    v_out = np.asarray(M.pool_view(cfg, out, p))
+    np.testing.assert_array_equal(np.asarray(out).shape, np.asarray(flat).shape)
+    for s in (5, 9, 21):
+        assert not np.array_equal(v_out[s], v_in[s]) or np.allclose(
+            v_in[s], new[[5, 9, 21].index(s)]
+        )
+    mask = np.ones(v_in.shape[0], bool)
+    mask[[5, 9, 21]] = False
+    np.testing.assert_array_equal(v_out[mask], v_in[mask])
+
+
+def test_hard_preempt_layout_coexistence():
+    """DP-layout KV survives a TP request using disjoint blocks in the same
+    physical pool (the Hard Preempt enabler, §5.2.3)."""
+    cfg = TEST_CFG
+    w = make_weights(cfg)
+    rng = np.random.default_rng(48)
+
+    # DP engine serves request 1 partway.
+    eng = Engine(cfg, w)
+    p1 = _tokens(rng, 7)
+    l1 = dp_prefill(eng, 1, p1)
+    n1 = int(np.argmax(l1))
+
+    snapshot_k = [kp.copy() for kp in eng.k_pools]
+
+    # A TP request (rid 2) arrives and runs on this engine + a twin, using
+    # fresh blocks from the same pools (hard preempt: rid 1 is paused).
+    twin = Engine(cfg, w)
+    twin.adaptor = eng.adaptor
+    twin.k_pools = [kp.copy() for kp in eng.k_pools]
+    twin.v_pools = [vp.copy() for vp in eng.v_pools]
+    grp = TpGroup([eng, twin], 2)
+    grp.prefill(2, _tokens(rng, 10))
+
+    # rid 1's DP blocks are untouched: its flat slots are bit-identical.
+    bt1 = cfg.block_tokens(1)
+    w1 = cfg.n_kv_heads * cfg.d_head
+    for layer in range(cfg.n_layers):
+        before = snapshot_k[layer].reshape(cfg.n_blocks, bt1 * w1)
+        after = eng.k_pools[layer].reshape(cfg.n_blocks, bt1 * w1)
+        for blk in eng.adaptor.blocks[1]:
+            np.testing.assert_array_equal(after[blk], before[blk])
+
+    # ... and rid 1 resumes decoding with correct numerics.
+    out = dp_decode(eng, [(1, n1, len(p1))])
+    hist = list(p1) + [n1]
+    want = np.asarray(ref.model_forward_ref(cfg, w, hist))[-1]
+    np.testing.assert_allclose(out[1], want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,116 @@
+//! Figure 10 — ultra long-context stress test at each model's maximum
+//! supported context (8K Llama-70B, 128K GPT-OSS-120B, 1M Nemotron-8B).
+//!
+//! Reports peak prompt throughput, TTFT, and ILT for static DP, static TP,
+//! and FLYING SERVING on the simulated node.  Expected shape: FLYING
+//! sustains DP-level prompt throughput (1.29-1.38x over static TP), with
+//! TP-like TTFT (2.8-3x better than DP) and TP-like ILT (1.85-1.88x better
+//! than DP).
+
+use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
+use flying_serving::util::bench::Table;
+use flying_serving::workload::{Priority, Request};
+
+fn long_trace(n: usize, ctx: usize, out: usize, gap: f64) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * gap,
+            prompt_len: ctx,
+            output_len: out,
+            priority: Priority::Normal,
+            tp_demand: None,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cases = [
+        (PaperModel::llama70b(), 8_192usize),
+        (PaperModel::gptoss120b(), 131_072),
+        (PaperModel::nemotron8b(), 1_000_000),
+    ];
+
+    let mut t = Table::new(
+        "Fig 10 — long-context stress (sim 8xH200)",
+        &["model", "ctx", "system", "peak prompt tok/s", "TTFT (s)", "ILT (ms)"],
+    );
+    let mut ratios = Table::new(
+        "Fig 10 ratios (paper: prompt thpt fly/tp 1.29-1.38x; TTFT dp/fly 2.8-3x; ILT dp/fly 1.85-1.88x)",
+        &["model", "prompt fly/tp", "TTFT dp/fly", "ILT dp/fly"],
+    );
+
+    for (model, ctx) in cases {
+        let name = model.name;
+        let cm = CostModel::new(HwSpec::default(), model);
+        // Enough concurrent long requests to saturate; arrival gap scales
+        // with context so every system reaches steady state.
+        let n = 24;
+        let gap = cm.prefill_s(ctx, cm.hw.n_gpus) * 1.05;
+        let trace = long_trace(n, ctx, 64, gap);
+
+        let mut metrics = std::collections::BTreeMap::new();
+        for sys in [SimSystem::StaticDp, SimSystem::StaticTp(8), SimSystem::Flying] {
+            let o = simulate(sys, &cm, &trace, &SimConfig::default());
+            let s = o.recorder.summary(None);
+            if o.rejected.len() >= n {
+                // Every request exceeded this configuration's KV capacity —
+                // the OOM failure that motivates Use Case 3.
+                t.row(&[
+                    name.to_string(),
+                    format!("{}", ctx),
+                    sys.label().to_string(),
+                    "OOM".into(),
+                    "OOM".into(),
+                    "OOM".into(),
+                ]);
+                metrics.insert(sys.label(), (f64::NAN, f64::NAN, f64::NAN, o.rejected.len()));
+                continue;
+            }
+            // Peak prompt throughput: prompt tokens / prefill span, counting
+            // only served (non-rejected) requests.
+            let served = s.finished.max(1);
+            let prompt_tokens = served as f64 * ctx as f64;
+            let span: f64 = {
+                let mut lo = f64::INFINITY;
+                let mut hi: f64 = 0.0;
+                for (_, r) in o.recorder.records() {
+                    if let (Some(first), Some(q)) = (r.token_times.first(), r.first_sched) {
+                        lo = lo.min(q);
+                        hi = hi.max(*first);
+                    }
+                }
+                (hi - lo).max(1e-9)
+            };
+            let prompt_thpt = prompt_tokens / span;
+            t.row(&[
+                name.to_string(),
+                format!("{}", ctx),
+                sys.label().to_string(),
+                format!("{:.0}", prompt_thpt),
+                format!("{:.2}", s.mean_ttft),
+                format!("{:.1}", s.mean_ilt * 1e3),
+            ]);
+            metrics.insert(sys.label(), (prompt_thpt, s.mean_ttft, s.mean_ilt, o.rejected.len()));
+        }
+        let g = |k: &str| metrics[k];
+        ratios.row(&[
+            name.to_string(),
+            format!("{:.2}x", g("flying").0 / g("static-tp").0),
+            format!("{:.2}x", g("static-dp").1 / g("flying").1),
+            format!("{:.2}x", g("static-dp").2 / g("flying").2),
+        ]);
+        if g("static-dp").3 > 0 {
+            println!(
+                "note: {name} static-dp rejected {} over-capacity requests at ctx={ctx}",
+                g("static-dp").3
+            );
+        }
+    }
+
+    t.print();
+    t.write_csv("fig10_long_context")?;
+    ratios.print();
+    ratios.write_csv("fig10_ratios")?;
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Figure 8 — end-to-end performance under bursty traffic.
+//!
+//! Columns: Llama-3-70B / GPT-OSS-120B / Nemotron-8B; rows: in-flight
+//! concurrency, P90 TTFT, queue time over the trace, for static DP,
+//! static TP, Shift-Parallelism, and FLYING SERVING on the simulated
+//! 8×H200 node (same policy code as the real path; see DESIGN.md
+//! §Substitutions).  Emits the per-system time series as CSVs in
+//! bench_out/ plus the paper's summary claims (burst vs flat TTFT, the
+//! headline speedups).
+
+use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
+use flying_serving::util::bench::{write_series_csv, Table};
+use flying_serving::workload::{generate, WorkloadCfg};
+
+const SYSTEMS: [SimSystem; 4] = [
+    SimSystem::StaticDp,
+    SimSystem::StaticTp(8),
+    SimSystem::Shift,
+    SimSystem::Flying,
+];
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = 800; // scaled from the paper's 4000 (same burst count)
+    let models = [
+        PaperModel::llama70b(),
+        PaperModel::gptoss120b(),
+        PaperModel::nemotron8b(),
+    ];
+
+    let mut summary = Table::new(
+        "Fig 8 summary — bursty trace (sim 8xH200)",
+        &["model", "system", "TTFT@burst (s)", "TTFT@flat (ms)", "p90 TTFT (s)", "p90 queue (s)"],
+    );
+    let mut headline = Table::new(
+        "Headline speedups (FLYING vs static TP, p90 TTFT)",
+        &["model", "speedup"],
+    );
+
+    for model in models {
+        let name = model.name;
+        let cm = CostModel::new(HwSpec::default(), model);
+        let mut wl = WorkloadCfg::paper_full(4242, n_requests);
+        // Per-model rate translation: the paper's 2-5 / 10-30 req/s sit at
+        // fixed fractions of Llama-70B's TP-saturation point on their
+        // testbed; apply the same fractions to each model's saturation on
+        // this cost model (DESIGN.md §Substitutions).
+        let sat = cm.tp_saturation_rps(2064, 288);
+        wl.low_rate = (0.12 * sat, 0.30 * sat);
+        wl.high_rate = (0.60 * sat, 1.20 * sat);
+        let trace = generate(&wl);
+        let phase_secs = wl.phase_secs;
+
+        let mut tp_p90 = f64::NAN;
+        let mut fly_p90 = f64::NAN;
+        let mut conc_cols = Vec::new();
+        let mut ttft_cols = Vec::new();
+        let mut queue_cols = Vec::new();
+
+        for sys in SYSTEMS {
+            // Shift-Parallelism does not support GPT-OSS (paper footnote 5).
+            if sys == SimSystem::Shift && name.contains("GPT-OSS") {
+                continue;
+            }
+            let o = simulate(sys, &cm, &trace, &SimConfig::default());
+            let s = o.recorder.summary(None);
+
+            // Phase-resolved TTFT: bucket requests by arrival phase.
+            let mut burst = Vec::new();
+            let mut flat = Vec::new();
+            for (_, r) in o.recorder.records() {
+                if let Some(t) = r.ttft() {
+                    if ((r.arrival / phase_secs) as usize) % 2 == 1 {
+                        burst.push(t);
+                    } else {
+                        flat.push(t);
+                    }
+                }
+            }
+            let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+            summary.row(&[
+                name.to_string(),
+                sys.label().to_string(),
+                format!("{:.2}", mean(&burst)),
+                format!("{:.0}", mean(&flat) * 1e3),
+                format!("{:.2}", s.p90_ttft),
+                format!("{:.2}", s.p90_queue),
+            ]);
+            if matches!(sys, SimSystem::StaticTp(_)) {
+                tp_p90 = s.p90_ttft;
+            }
+            if sys == SimSystem::Flying {
+                fly_p90 = s.p90_ttft;
+            }
+
+            conc_cols.push((sys.label(), o.recorder.concurrency_series(2.0)));
+            ttft_cols.push((sys.label(), o.recorder.ttft_p90_series(2.0)));
+            queue_cols.push((sys.label(), o.recorder.queue_series(2.0)));
+        }
+
+        headline.row(&[name.to_string(), format!("{:.2}x", tp_p90 / fly_p90)]);
+
+        let slug = name.to_lowercase().replace(['-', ' ', '.'], "_");
+        fn refs<'a>(cols: &'a [(&'a str, Vec<(f64, f64)>)]) -> Vec<(&'a str, &'a [(f64, f64)])> {
+            cols.iter().map(|(n, s)| (*n, s.as_slice())).collect()
+        }
+        write_series_csv(&format!("fig8_{slug}_concurrency"), &refs(&conc_cols))?;
+        write_series_csv(&format!("fig8_{slug}_ttft_p90"), &refs(&ttft_cols))?;
+        write_series_csv(&format!("fig8_{slug}_queue"), &refs(&queue_cols))?;
+    }
+
+    summary.print();
+    summary.write_csv("fig8_summary")?;
+    headline.print();
+    headline.write_csv("fig8_headline")?;
+    println!("\nseries CSVs in bench_out/fig8_*  (concurrency, p90 TTFT, queue time)");
+    Ok(())
+}

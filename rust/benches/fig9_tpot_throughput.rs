@@ -1,0 +1,70 @@
+//! Figure 9 — median TPOT and peak generation throughput per model/system
+//! on the bursty trace (simulated 8×H200; same trace as Fig 8).
+
+use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
+use flying_serving::util::bench::Table;
+use flying_serving::workload::{generate, WorkloadCfg};
+
+fn main() -> anyhow::Result<()> {
+    let models = [
+        PaperModel::llama70b(),
+        PaperModel::gptoss120b(),
+        PaperModel::nemotron8b(),
+    ];
+    let systems = [
+        SimSystem::StaticDp,
+        SimSystem::StaticTp(8),
+        SimSystem::Shift,
+        SimSystem::Flying,
+    ];
+
+    let mut t = Table::new(
+        "Fig 9 — median TPOT / peak generation throughput (sim 8xH200)",
+        &["model", "system", "median TPOT (ms)", "peak throughput (tok/s)"],
+    );
+    let mut ratios = Table::new(
+        "Fig 9 ratios (paper: TPOT_dp/TPOT_fly 1.28-2.31x; fly ~95% of DP peak; fly/tp peak 2.0-2.5x)",
+        &["model", "TPOT dp/fly", "peak fly/dp", "peak fly/tp", "peak fly/shift"],
+    );
+
+    for model in models {
+        let name = model.name;
+        let cm = CostModel::new(HwSpec::default(), model);
+        let mut wl = WorkloadCfg::paper_full(4242, 800);
+        let sat = cm.tp_saturation_rps(2064, 288); // see fig8 bench
+        wl.low_rate = (0.12 * sat, 0.30 * sat);
+        wl.high_rate = (0.60 * sat, 1.20 * sat);
+        let trace = generate(&wl);
+        let mut tpot = std::collections::BTreeMap::new();
+        let mut peak = std::collections::BTreeMap::new();
+        for sys in systems {
+            if sys == SimSystem::Shift && name.contains("GPT-OSS") {
+                continue;
+            }
+            let o = simulate(sys, &cm, &trace, &SimConfig::default());
+            let s = o.recorder.summary(None);
+            t.row(&[
+                name.to_string(),
+                sys.label().to_string(),
+                format!("{:.1}", s.p50_tpot * 1e3),
+                format!("{:.0}", s.peak_throughput),
+            ]);
+            tpot.insert(sys.label(), s.p50_tpot);
+            peak.insert(sys.label(), s.peak_throughput);
+        }
+        let g = |m: &std::collections::BTreeMap<&str, f64>, k: &str| m.get(k).copied().unwrap_or(f64::NAN);
+        ratios.row(&[
+            name.to_string(),
+            format!("{:.2}x", g(&tpot, "static-dp") / g(&tpot, "flying")),
+            format!("{:.0}%", 100.0 * g(&peak, "flying") / g(&peak, "static-dp")),
+            format!("{:.2}x", g(&peak, "flying") / g(&peak, "static-tp")),
+            format!("{:.2}x", g(&peak, "flying") / g(&peak, "shift-parallelism")),
+        ]);
+    }
+
+    t.print();
+    t.write_csv("fig9_tpot_throughput")?;
+    ratios.print();
+    ratios.write_csv("fig9_ratios")?;
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Micro-benchmarks of the switching substrate — the mechanisms Table 2's
+//! "15 ms live" column is made of, measured on the real path:
+//!
+//!  * KV Cache Adaptor ops (allocate / slot / table / pause / relayout) —
+//!    must be O(1)-ish metadata, far below the per-step budget;
+//!  * Communicator Pool: eager-init cost, O(1) group fetch, all-reduce
+//!    latency across threads, and the eager-vs-lazy ablation;
+//!  * real engine step latencies (DP decode, DP prefill chunk) and the
+//!    SetMode switch RPC.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flying_serving::comm::CommunicatorPool;
+use flying_serving::engine::EngineCmd;
+use flying_serving::kv::KvCacheAdaptor;
+use flying_serving::model::ModelCfg;
+use flying_serving::runtime::Manifest;
+use flying_serving::util::bench::{bench, Table};
+
+fn kv_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "bench".into(),
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_head: 32,
+        ffn_hidden: 512,
+        n_experts: 0,
+        top_k: 0,
+        n_blocks: 128,
+        block_base: 8,
+        max_ctx: 4096,
+        vocab: 258,
+        pool_elems: 128 * 8 * 4 * 32,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== KV Cache Adaptor (metadata plane) ==");
+    let cfg = kv_cfg();
+    bench("kv: register+alloc 512 tokens+release", 100, 2000, || {
+        let mut a = KvCacheAdaptor::new(cfg.clone());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 512).unwrap();
+        a.release(1).unwrap();
+    });
+    let mut a = KvCacheAdaptor::new(cfg.clone());
+    a.register(1, 1).unwrap();
+    a.ensure_capacity(1, 512).unwrap();
+    bench("kv: slot lookup", 100, 100_000, || {
+        std::hint::black_box(a.slot(1, 317).unwrap());
+    });
+    bench("kv: table row (padded)", 100, 20_000, || {
+        std::hint::black_box(a.table_row(1).unwrap());
+    });
+    bench("kv: pause+resume (hard preempt)", 100, 50_000, || {
+        a.pause(1).unwrap();
+        a.resume(1).unwrap();
+    });
+    bench("kv: mode-switch metadata cost", 100, 100_000, || {
+        std::hint::black_box(a.switch_mode_metadata_cost());
+    });
+
+    println!("\n== Communicator Pool (data plane) ==");
+    let to = Duration::from_secs(5);
+    bench("comm: eager pool init (8 engines, P={1,2,4,8})", 10, 2000, || {
+        std::hint::black_box(CommunicatorPool::new(8, &[1, 2, 4, 8], to));
+    });
+    let pool = CommunicatorPool::new(8, &[1, 2, 4, 8], to);
+    bench("comm: O(1) group fetch (the paper's activation)", 100, 100_000, || {
+        std::hint::black_box(pool.group_of(3, 4).unwrap());
+    });
+    // Eager-vs-lazy ablation: what a lazy design would pay on the critical
+    // path per switch (group construction) vs the pool fetch.
+    let lazy = bench("comm ablation: lazy group construction", 100, 2000, || {
+        std::hint::black_box(CommunicatorPool::new(8, &[4], to));
+    });
+    let eager = bench("comm ablation: eager pool fetch", 100, 100_000, || {
+        std::hint::black_box(pool.group_of(3, 4).unwrap());
+    });
+    println!(
+        "  -> eager activation is {:.0}x cheaper on the switch path",
+        lazy.mean_s / eager.mean_s.max(1e-12)
+    );
+
+    let g = pool.get(&[0, 1]).unwrap();
+    bench("comm: 2-way all-reduce 256 f32 (threads)", 50, 2000, || {
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || {
+            let mut d = vec![1.0f32; 256];
+            g2.all_reduce_sum(1, &mut d).unwrap();
+        });
+        let mut d = vec![2.0f32; 256];
+        g.all_reduce_sum(0, &mut d).unwrap();
+        h.join().unwrap();
+    });
+
+    println!("\n== Real engine step path (PJRT, llama-tiny) ==");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipped: run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Arc::new(Manifest::load(dir)?);
+    let mm = manifest.model("llama-tiny")?;
+    let ws = Arc::new(mm.load_weights()?);
+    let comm = Arc::new(CommunicatorPool::new(2, &[1, 2], to));
+    let eng = flying_serving::engine::EngineHandle::spawn(
+        0,
+        manifest.clone(),
+        "llama-tiny".into(),
+        ws,
+        comm,
+    )?;
+
+    // SetMode: the entire engine-side cost of a DP<->TP switch.
+    let mut flip = 1usize;
+    let sw = bench("engine: SetMode switch RPC roundtrip", 20, 2000, || {
+        flip = 3 - flip; // 1 <-> 2
+        eng.call(EngineCmd::SetMode { p: flip }).unwrap();
+    });
+
+    // One fused DP decode step, batch of 4.
+    let mut adapt = KvCacheAdaptor::new(mm.cfg.clone());
+    for rid in 1..=4u64 {
+        adapt.register(rid, 1).unwrap();
+        adapt.ensure_capacity(rid, 128).unwrap();
+    }
+    eng.call(EngineCmd::SetMode { p: 1 }).unwrap();
+    // Seed one token per request then time steady-state decode steps.
+    let mk_batch = |adapt: &KvCacheAdaptor, pos: usize| {
+        (1..=4u64)
+            .map(|rid| flying_serving::engine::DecodeSlot {
+                rid,
+                token: (rid as i32) % 250,
+                pos,
+                slot_id: adapt.slot(rid, pos).unwrap(),
+                table_row: adapt.table_row(rid).unwrap(),
+            })
+            .collect::<Vec<_>>()
+    };
+    let mut pos = 0usize;
+    let step = bench("engine: fused DP decode step (batch 4)", 5, 60, || {
+        let batch = mk_batch(&adapt, pos);
+        eng.call(EngineCmd::DpDecode { batch }).unwrap();
+        pos += 1;
+    });
+    println!(
+        "  -> switch/step ratio: a mode switch costs {:.2}% of one decode step",
+        100.0 * sw.mean_s / step.mean_s
+    );
+
+    let mut t = Table::new(
+        "Switching-substrate summary",
+        &["operation", "mean latency (µs)"],
+    );
+    t.row(&["SetMode switch RPC".into(), format!("{:.1}", sw.mean_s * 1e6)]);
+    t.row(&["decode step (batch 4)".into(), format!("{:.1}", step.mean_s * 1e6)]);
+    t.write_csv("micro_substrates")?;
+    t.print();
+
+    drop(eng);
+    Ok(())
+}

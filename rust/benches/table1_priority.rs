@@ -1,0 +1,86 @@
+//! Table 1 — Llama-70B under a mixed-priority workload (sim 8×H200).
+//!
+//! Paper: arrival 3–5 req/s, interleaved high-priority requests; reports
+//! mean TPOT / TTFT for the priority class and for all requests, plus peak
+//! throughput, under static TP, static DP, and FLYING SERVING (hard
+//! preempt).  Expected shape: FLYING within ~1.1-1.2x of static TP for the
+//! priority class, ~15x better mean TTFT (all) than TP under load, and
+//! ~96% of DP peak throughput.
+
+use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
+use flying_serving::util::bench::Table;
+use flying_serving::workload::{generate, Priority, WorkloadCfg};
+
+fn main() -> anyhow::Result<()> {
+    let cm = CostModel::new(HwSpec::default(), PaperModel::llama70b());
+    // Paper: arrival modulated between 3-5 req/s with interleaved
+    // high-priority requests.  (On this cost model 3-5 r/s does not
+    // saturate full-node TP, so the paper's TP-collapse row reproduces in
+    // the fig8 saturation regime instead — see EXPERIMENTS.md.)
+    let mut wl = WorkloadCfg::paper_full(77, 1200);
+    wl.low_rate = (3.0, 5.0);
+    wl.high_rate = (3.0, 5.0);
+    wl.priority_frac = 0.10;
+    let trace = generate(&wl);
+
+    let mut t = Table::new(
+        "Table 1 — Llama-70B under mixed-priority workload (sim 8xH200)",
+        &["metric", "static TP", "static DP", "flying (ours)"],
+    );
+
+    let mut cols: Vec<(String, Vec<f64>)> = Vec::new();
+    for sys in [SimSystem::StaticTp(8), SimSystem::StaticDp, SimSystem::Flying] {
+        let o = simulate(sys, &cm, &trace, &SimConfig::default());
+        let pri = o.recorder.summary(Some(Priority::High));
+        let all = o.recorder.summary(None);
+        cols.push((
+            sys.label().to_string(),
+            vec![
+                pri.mean_tpot * 1e3,
+                all.mean_tpot * 1e3,
+                pri.mean_ttft * 1e3,
+                all.mean_ttft * 1e3,
+                all.peak_throughput,
+            ],
+        ));
+    }
+    let rows = [
+        "Mean TPOT (priority) (ms)",
+        "Mean TPOT (all) (ms)",
+        "Mean TTFT (priority) (ms)",
+        "Mean TTFT (all) (ms)",
+        "Peak Throughput (tokens/s)",
+    ];
+    for (i, name) in rows.iter().enumerate() {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", cols[0].1[i]),
+            format!("{:.0}", cols[1].1[i]),
+            format!("{:.0}", cols[2].1[i]),
+        ]);
+    }
+    t.print();
+    t.write_csv("table1_priority")?;
+
+    // Paper's derived claims.
+    let fly_pri_ttft = cols[2].1[2];
+    let dp_pri_ttft = cols[1].1[2];
+    let tp_all_ttft = cols[0].1[3];
+    let fly_all_ttft = cols[2].1[3];
+    let fly_peak = cols[2].1[4];
+    let dp_peak = cols[1].1[4];
+    println!("\nderived (paper's comparison points):");
+    println!(
+        "  priority TTFT: flying {:.2}x better than static DP (paper 2.24x)",
+        dp_pri_ttft / fly_pri_ttft
+    );
+    println!(
+        "  mean TTFT (all): flying {:.1}x lower than static TP (paper 15.0x)",
+        tp_all_ttft / fly_all_ttft
+    );
+    println!(
+        "  peak throughput: flying retains {:.0}% of DP (paper 96%)",
+        100.0 * fly_peak / dp_peak
+    );
+    Ok(())
+}

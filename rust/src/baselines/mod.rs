@@ -1,0 +1,111 @@
+//! Baseline systems the paper compares against (§6.1.2):
+//!
+//! * **Static DP** — every request runs on one engine; long-context
+//!   requests that exceed a single engine's KV capacity are *rejected*
+//!   (the OOM failure motivating Use Case 3).
+//! * **Static TP** — every request runs on a fixed p-way group: best
+//!   latency at low load, throughput-limited under bursts.
+//! * **Shift Parallelism** (arXiv:2509.16495) — the SoTA dynamic baseline:
+//!   runtime switching between latency-optimal TP and throughput-oriented
+//!   sequence parallelism by exploiting KV-cache invariance.  It has no DP
+//!   fan-out: all engines always form one group; what changes is whether a
+//!   batch is executed in TP (tight latency) or SP (token-parallel
+//!   throughput) mode.  Its cost behavior is modeled in the simulator
+//!   (`sim::shift`); on the real path only static DP/TP are meaningful
+//!   comparators at this scale.
+
+use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
+use crate::workload::Priority;
+
+/// Static DP: the "scale-out only" deployment.
+pub struct StaticDpPolicy;
+
+impl Policy for StaticDpPolicy {
+    fn name(&self) -> &'static str {
+        "static-dp"
+    }
+
+    fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        _priority: Priority,
+        _tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        if prompt_len + output_len_hint > snap.dp_capacity_tokens {
+            // A static DP deployment OOMs on over-capacity requests.
+            ModeDecision::Reject
+        } else {
+            ModeDecision::Dp
+        }
+    }
+}
+
+/// Static TP at fixed degree p: the "scale-up only" deployment.
+pub struct StaticTpPolicy {
+    pub p: usize,
+}
+
+impl Policy for StaticTpPolicy {
+    fn name(&self) -> &'static str {
+        "static-tp"
+    }
+
+    fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        _priority: Priority,
+        _tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        if prompt_len + output_len_hint > snap.dp_capacity_tokens * self.p {
+            ModeDecision::Reject
+        } else {
+            ModeDecision::Tp(self.p)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            queue_len: 0,
+            idle_engines: 4,
+            n_engines: 4,
+            dp_capacity_tokens: 1000,
+            max_tp: 4,
+        }
+    }
+
+    #[test]
+    fn static_dp_rejects_long_context() {
+        let mut p = StaticDpPolicy;
+        assert_eq!(p.decide(500, 100, Priority::Normal, None, &snap()), ModeDecision::Dp);
+        assert_eq!(
+            p.decide(1500, 100, Priority::Normal, None, &snap()),
+            ModeDecision::Reject
+        );
+    }
+
+    #[test]
+    fn static_tp_always_p() {
+        let mut p = StaticTpPolicy { p: 2 };
+        assert_eq!(
+            p.decide(500, 100, Priority::High, None, &snap()),
+            ModeDecision::Tp(2)
+        );
+        assert_eq!(
+            p.decide(1500, 100, Priority::Normal, None, &snap()),
+            ModeDecision::Tp(2)
+        );
+        assert_eq!(
+            p.decide(5000, 100, Priority::Normal, None, &snap()),
+            ModeDecision::Reject
+        );
+    }
+}

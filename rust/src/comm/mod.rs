@@ -1,0 +1,438 @@
+//! Communicator Pool (paper §4.3): eagerly-initialized collective groups,
+//! activated on demand in O(1), never created on the request's critical path.
+//!
+//! The paper's data plane is NCCL over NVLink; our engines are OS threads,
+//! so the data plane is a shared-memory collective substrate (sense-counting
+//! generation protocol over Mutex+Condvar).  The *life cycle* is the paper's:
+//!
+//!  1. Topology-aware group identification — only physically contiguous,
+//!     degree-aligned rank segments are enumerated (for N engines and
+//!     degrees P, that's sum_p N/p groups: linear, not exponential).
+//!  2. Eager pre-initialization at startup; handles cached in a map keyed by
+//!     member ranks.
+//!  3. Runtime activation = hash-map lookup.
+//!
+//! Every collective carries a watchdog timeout: a mismatched membership or
+//! ordering bug surfaces as a `CollectiveTimeout` error instead of a hang —
+//! this is what makes the scheduler's safe-point protocol *testably*
+//! deadlock-free.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum CommError {
+    #[error("collective timed out after {0:?} (membership/ordering mismatch)")]
+    CollectiveTimeout(Duration),
+    #[error("no pre-initialized group for ranks {0:?} (topology-aware pool only builds contiguous aligned groups)")]
+    NoSuchGroup(Vec<usize>),
+    #[error("rank {rank} is not a member of group {ranks:?}")]
+    NotAMember { rank: usize, ranks: Vec<usize> },
+}
+
+#[derive(Debug)]
+struct Inner {
+    arrived: usize,
+    generation: u64,
+    buf: Vec<f32>,
+    result: Vec<f32>,
+    gather: Vec<Vec<f32>>,
+}
+
+/// One pre-built communicator (the NCCL process-group analog).
+#[derive(Debug)]
+pub struct Communicator {
+    pub ranks: Vec<usize>,
+    m: Mutex<Inner>,
+    cv: Condvar,
+    timeout: Duration,
+}
+
+impl Communicator {
+    fn new(ranks: Vec<usize>, timeout: Duration) -> Self {
+        let p = ranks.len();
+        Communicator {
+            ranks,
+            m: Mutex::new(Inner {
+                arrived: 0,
+                generation: 0,
+                buf: Vec::new(),
+                result: Vec::new(),
+                gather: vec![Vec::new(); p],
+            }),
+            cv: Condvar::new(),
+            timeout,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    fn member_index(&self, rank: usize) -> Result<usize, CommError> {
+        self.ranks
+            .iter()
+            .position(|&r| r == rank)
+            .ok_or(CommError::NotAMember {
+                rank,
+                ranks: self.ranks.clone(),
+            })
+    }
+
+    /// Sum-all-reduce `data` in place across all members.  Every member must
+    /// call with identically-shaped data; the call returns when the reduced
+    /// vector is visible to all.
+    pub fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) -> Result<(), CommError> {
+        self.member_index(rank)?;
+        let p = self.size();
+        if p == 1 {
+            return Ok(()); // singleton group: no-op (DP mode)
+        }
+        let mut g = self.m.lock().unwrap();
+        if g.arrived == 0 {
+            g.buf.clear();
+            g.buf.extend_from_slice(data);
+        } else {
+            debug_assert_eq!(g.buf.len(), data.len(), "mismatched all-reduce shapes");
+            for (b, d) in g.buf.iter_mut().zip(data.iter()) {
+                *b += *d;
+            }
+        }
+        g.arrived += 1;
+        if g.arrived == p {
+            g.result = std::mem::take(&mut g.buf);
+            g.arrived = 0;
+            g.generation += 1;
+            data.copy_from_slice(&g.result);
+            self.cv.notify_all();
+            Ok(())
+        } else {
+            let gen0 = g.generation;
+            let (g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            data.copy_from_slice(&g.result);
+            Ok(())
+        }
+    }
+
+    /// Barrier: returns when all members have arrived.
+    pub fn barrier(&self, rank: usize) -> Result<(), CommError> {
+        self.member_index(rank)?;
+        let p = self.size();
+        if p == 1 {
+            return Ok(());
+        }
+        let mut g = self.m.lock().unwrap();
+        g.arrived += 1;
+        if g.arrived == p {
+            g.arrived = 0;
+            g.generation += 1;
+            self.cv.notify_all();
+            Ok(())
+        } else {
+            let gen0 = g.generation;
+            let (_g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            Ok(())
+        }
+    }
+
+    /// Broadcast `data` from the group-local root (ranks[0]) to all members.
+    pub fn broadcast(&self, rank: usize, data: &mut Vec<f32>) -> Result<(), CommError> {
+        let idx = self.member_index(rank)?;
+        let p = self.size();
+        if p == 1 {
+            return Ok(());
+        }
+        let mut g = self.m.lock().unwrap();
+        if idx == 0 {
+            g.result = data.clone();
+        }
+        g.arrived += 1;
+        if g.arrived == p {
+            g.arrived = 0;
+            g.generation += 1;
+            *data = g.result.clone();
+            self.cv.notify_all();
+            Ok(())
+        } else {
+            let gen0 = g.generation;
+            let (g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            *data = g.result.clone();
+            Ok(())
+        }
+    }
+
+    /// All-gather: returns every member's contribution, ordered by member
+    /// index.
+    pub fn all_gather(&self, rank: usize, data: &[f32]) -> Result<Vec<Vec<f32>>, CommError> {
+        let idx = self.member_index(rank)?;
+        let p = self.size();
+        if p == 1 {
+            return Ok(vec![data.to_vec()]);
+        }
+        let mut g = self.m.lock().unwrap();
+        g.gather[idx] = data.to_vec();
+        g.arrived += 1;
+        if g.arrived == p {
+            g.arrived = 0;
+            g.generation += 1;
+            let out = g.gather.clone();
+            self.cv.notify_all();
+            Ok(out)
+        } else {
+            let gen0 = g.generation;
+            let (g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            Ok(g.gather.clone())
+        }
+    }
+}
+
+/// The pool: every topology-valid group, built eagerly at startup.
+pub struct CommunicatorPool {
+    pub n_engines: usize,
+    groups: HashMap<Vec<usize>, Arc<Communicator>>,
+}
+
+impl CommunicatorPool {
+    /// Enumerate contiguous aligned groups for each supported degree
+    /// (paper §4.3.2 step 1) and pre-initialize them (step 2).
+    pub fn new(n_engines: usize, degrees: &[usize], timeout: Duration) -> Self {
+        let mut groups = HashMap::new();
+        for &p in degrees {
+            if p == 0 || p > n_engines {
+                continue;
+            }
+            for start in (0..n_engines).step_by(p) {
+                if start + p > n_engines {
+                    break;
+                }
+                let ranks: Vec<usize> = (start..start + p).collect();
+                groups.insert(ranks.clone(), Arc::new(Communicator::new(ranks, timeout)));
+            }
+        }
+        CommunicatorPool { n_engines, groups }
+    }
+
+    /// O(1) activation (paper §4.3.2 step 3 / runtime behavior).
+    pub fn get(&self, ranks: &[usize]) -> Result<Arc<Communicator>, CommError> {
+        self.groups
+            .get(ranks)
+            .cloned()
+            .ok_or_else(|| CommError::NoSuchGroup(ranks.to_vec()))
+    }
+
+    /// The contiguous aligned group of width p containing `rank`.
+    pub fn group_of(&self, rank: usize, p: usize) -> Result<Arc<Communicator>, CommError> {
+        let start = (rank / p) * p;
+        let ranks: Vec<usize> = (start..start + p).collect();
+        self.get(&ranks)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// All group rank-sets (sorted), for introspection/tests.
+    pub fn group_list(&self) -> Vec<Vec<usize>> {
+        let mut v: Vec<_> = self.groups.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn pool() -> CommunicatorPool {
+        CommunicatorPool::new(8, &[1, 2, 4, 8], Duration::from_secs(2))
+    }
+
+    #[test]
+    fn topology_enumeration_is_linear() {
+        let p = pool();
+        // 8 singletons + 4 pairs + 2 quartets + 1 octet = 15 (sum N/p).
+        assert_eq!(p.n_groups(), 15);
+        assert!(p.get(&[0, 1]).is_ok());
+        assert!(p.get(&[2, 3]).is_ok());
+        assert!(p.get(&[0, 1, 2, 3]).is_ok());
+        // Strided/unaligned combos are intentionally absent (paper: [0,2]
+        // and [1,3] are never generated).
+        assert_eq!(p.get(&[0, 2]).unwrap_err(), CommError::NoSuchGroup(vec![0, 2]));
+        assert!(p.get(&[1, 2]).is_err());
+        assert!(p.get(&[1, 2, 3, 4]).is_err());
+    }
+
+    #[test]
+    fn group_of_alignment() {
+        let p = pool();
+        assert_eq!(p.group_of(3, 2).unwrap().ranks, vec![2, 3]);
+        assert_eq!(p.group_of(5, 4).unwrap().ranks, vec![4, 5, 6, 7]);
+        assert_eq!(p.group_of(6, 1).unwrap().ranks, vec![6]);
+    }
+
+    #[test]
+    fn all_reduce_sums_across_threads() {
+        for p in [2usize, 4] {
+            let pool = pool();
+            let g = pool.get(&(0..p).collect::<Vec<_>>()).unwrap();
+            let handles: Vec<_> = (0..p)
+                .map(|r| {
+                    let g = g.clone();
+                    thread::spawn(move || {
+                        let mut data = vec![r as f32 + 1.0; 16];
+                        g.all_reduce_sum(r, &mut data).unwrap();
+                        data
+                    })
+                })
+                .collect();
+            let want = (1..=p).sum::<usize>() as f32;
+            for h in handles {
+                let out = h.join().unwrap();
+                assert!(out.iter().all(|&x| x == want), "p={p} out={:?}", &out[..2]);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_all_reduces_keep_generations_straight() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for step in 0..50 {
+                        let mut d = vec![(r * 100 + step) as f32];
+                        g.all_reduce_sum(r, &mut d).unwrap();
+                        outs.push(d[0]);
+                    }
+                    outs
+                })
+            })
+            .collect();
+        let a = handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>();
+        for step in 0..50 {
+            let want = (step + (100 + step)) as f32;
+            assert_eq!(a[0][step], want);
+            assert_eq!(a[1][step], want);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let pool = pool();
+        let g = pool.get(&[4, 5, 6, 7]).unwrap();
+        let handles: Vec<_> = [4usize, 5, 6, 7]
+            .into_iter()
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut d = if r == 4 { vec![9.0, 8.0] } else { vec![0.0, 0.0] };
+                    g.broadcast(r, &mut d).unwrap();
+                    d
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![9.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_ordered_by_member() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || g.all_gather(r, &[r as f32]).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out, vec![vec![0.0], vec![1.0]]);
+        }
+    }
+
+    #[test]
+    fn watchdog_detects_missing_member() {
+        let pool = CommunicatorPool::new(2, &[2], Duration::from_millis(100));
+        let g = pool.get(&[0, 1]).unwrap();
+        // Only rank 0 arrives: must time out, not hang.
+        let mut d = vec![1.0];
+        let err = g.all_reduce_sum(0, &mut d).unwrap_err();
+        assert!(matches!(err, CommError::CollectiveTimeout(_)));
+    }
+
+    #[test]
+    fn non_member_rejected() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let mut d = vec![0.0];
+        assert!(matches!(
+            g.all_reduce_sum(5, &mut d).unwrap_err(),
+            CommError::NotAMember { .. }
+        ));
+    }
+
+    #[test]
+    fn singleton_groups_are_noops() {
+        let pool = pool();
+        let g = pool.get(&[3]).unwrap();
+        let mut d = vec![42.0];
+        g.all_reduce_sum(3, &mut d).unwrap();
+        assert_eq!(d, vec![42.0]);
+        g.barrier(3).unwrap();
+    }
+
+    #[test]
+    fn disjoint_groups_operate_concurrently() {
+        let pool = pool();
+        let g01 = pool.get(&[0, 1]).unwrap();
+        let g23 = pool.get(&[2, 3]).unwrap();
+        let mk = |g: Arc<Communicator>, r: usize, v: f32| {
+            thread::spawn(move || {
+                let mut d = vec![v];
+                g.all_reduce_sum(r, &mut d).unwrap();
+                d[0]
+            })
+        };
+        let h = vec![
+            mk(g01.clone(), 0, 1.0),
+            mk(g01, 1, 2.0),
+            mk(g23.clone(), 2, 10.0),
+            mk(g23, 3, 20.0),
+        ];
+        let out: Vec<f32> = h.into_iter().map(|x| x.join().unwrap()).collect();
+        assert_eq!(out, vec![3.0, 3.0, 30.0, 30.0]);
+    }
+}

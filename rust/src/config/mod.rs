@@ -1,0 +1,134 @@
+//! Configuration + hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! The launcher accepts `--key value` / `--flag` pairs; `ServeConfig` is the
+//! typed result shared by the binary, the examples, and the benches.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::strategy::Strategy;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub n_engines: usize,
+    pub strategy: Strategy,
+    pub policy: String, // flying | static-dp | static-tp
+    pub static_tp: usize,
+    pub listen: String,
+    pub seed: u64,
+    pub n_requests: usize,
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "llama-tiny".into(),
+            n_engines: 2,
+            strategy: Strategy::HardPreempt,
+            policy: "flying".into(),
+            static_tp: 2,
+            listen: "127.0.0.1:7077".into(),
+            seed: 42,
+            n_requests: 64,
+            verbose: false,
+        }
+    }
+}
+
+/// Minimal `--key value` argument parser; returns (positional, flags).
+pub fn parse_args(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // `--flag` followed by another flag or end => boolean true.
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+impl ServeConfig {
+    pub fn from_flags(flags: &BTreeMap<String, String>) -> Result<Self> {
+        let mut c = ServeConfig::default();
+        for (k, v) in flags {
+            match k.as_str() {
+                "artifacts" => c.artifacts_dir = PathBuf::from(v),
+                "model" => c.model = v.clone(),
+                "engines" => c.n_engines = v.parse()?,
+                "strategy" => c.strategy = v.parse()?,
+                "policy" => c.policy = v.clone(),
+                "static-tp" => c.static_tp = v.parse()?,
+                "listen" => c.listen = v.clone(),
+                "seed" => c.seed = v.parse()?,
+                "requests" => c.n_requests = v.parse()?,
+                "verbose" => c.verbose = v == "true",
+                _ => bail!("unknown flag --{k}"),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Instantiate the configured policy.
+    pub fn make_policy(&self) -> Result<Box<dyn crate::coordinator::policy::Policy>> {
+        use crate::baselines::{StaticDpPolicy, StaticTpPolicy};
+        use crate::coordinator::policy::FlyingPolicy;
+        Ok(match self.policy.as_str() {
+            "flying" => Box::new(FlyingPolicy::default()),
+            "static-dp" => Box::new(StaticDpPolicy),
+            "static-tp" => Box::new(StaticTpPolicy { p: self.static_tp }),
+            p => bail!("unknown policy '{p}' (flying|static-dp|static-tp)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let (pos, flags) = parse_args(&s(&["serve", "--engines", "4", "--verbose", "--model", "moe-tiny"])).unwrap();
+        assert_eq!(pos, vec!["serve"]);
+        assert_eq!(flags["engines"], "4");
+        assert_eq!(flags["verbose"], "true");
+        assert_eq!(flags["model"], "moe-tiny");
+    }
+
+    #[test]
+    fn config_from_flags() {
+        let (_, flags) = parse_args(&s(&["--engines", "4", "--strategy", "soft", "--policy", "static-tp", "--static-tp", "4"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert_eq!(c.n_engines, 4);
+        assert_eq!(c.strategy, Strategy::SoftPreempt);
+        assert_eq!(c.static_tp, 4);
+        assert!(c.make_policy().is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let (_, flags) = parse_args(&s(&["--bogus", "1"])).unwrap();
+        assert!(ServeConfig::from_flags(&flags).is_err());
+    }
+}

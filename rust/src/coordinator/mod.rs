@@ -1,0 +1,994 @@
+//! The FLYING SERVING coordinator (paper §3, §5): a middleware layer between
+//! the global task pool and the engine workers that binds subsets of DP
+//! engines into TP groups and releases them — the single switching
+//! primitive — under a workload-aware policy and a switching strategy.
+//!
+//! The scheduling loop is Algorithm 1:
+//!   ① ProcessInputSocket  — drain arrivals into the task pool
+//!   ② SyncWorkload        — a globally-agreed waiting queue (priority,
+//!                            arrival) — single-coordinator equivalent of
+//!                            the paper's heartbeat all-reduce
+//!   ③ Mode determination  — `Policy::decide` per request
+//!   ④ KV parameterization — `B_req = B_base · N_eng` via the adaptor's
+//!                            layout registration + block allocation
+//!   ⑤ Mode signaling      — `SetMode` collective RPC to group members at
+//!                            the iteration safe point
+//!   ⑥ execute_model       — step commands to engines/groups; publish
+//!
+//! Engines run lockstep per scheduling iteration (the coordinator waits for
+//! every issued step before the next iteration); TP members execute
+//! concurrently on their threads and meet in the Communicator Pool's
+//! collectives.
+
+pub mod policy;
+pub mod strategy;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::CommunicatorPool;
+use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChunk};
+use crate::kv::KvCacheAdaptor;
+use crate::metrics::Recorder;
+use crate::model::ModelCfg;
+use crate::runtime::Manifest;
+use crate::workload::Priority;
+use policy::{ModeDecision, Policy, Snapshot};
+use strategy::Strategy;
+
+pub const EOS: i32 = 257;
+
+/// A request as submitted to the cluster (the real serving path).
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub priority: Priority,
+    pub tp_demand: Option<usize>,
+    /// Arrival offset in seconds from cluster-clock zero (trace replay);
+    /// requests become visible to the scheduler at this time.
+    pub arrival: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Phase {
+    Prefill,
+    Decode,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Active {
+    sr: ServeRequest,
+    mode_p: usize,
+    /// Engine id (DP) or group start (TP).
+    home: usize,
+    phase: Phase,
+    /// Tokens whose KV is cached (prompt progress + fed output tokens).
+    pos: usize,
+    emitted: Vec<i32>,
+    paused: bool,
+    /// Soft-preempt: running speculatively in DP while its TP group drains.
+    speculative: bool,
+    /// Forced next inputs after a soft-preempt recompute (already emitted).
+    forced: Vec<i32>,
+    /// Worst-case block commitment per engine (admission control): the
+    /// blocks this request may grow into, reserved at bind time so the pool
+    /// can never be overcommitted mid-decode.
+    committed: Vec<(usize, usize)>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Group {
+    p: usize,
+    tp_active: Vec<u64>,
+    /// TP requests waiting for this group to finish draining.
+    tp_pending: Vec<u64>,
+}
+
+/// Mode-switch event log (feeds the Table-2 switching-latency measurement).
+#[derive(Clone, Debug)]
+pub struct SwitchEvent {
+    pub t: f64,
+    pub group_start: usize,
+    pub p_from: usize,
+    pub p_to: usize,
+    pub latency_s: f64,
+}
+
+pub struct ClusterOutcome {
+    pub recorder: Recorder,
+    pub outputs: BTreeMap<u64, Vec<i32>>,
+    pub rejected: Vec<u64>,
+    pub switches: Vec<SwitchEvent>,
+}
+
+/// The real serving cluster: N engine threads + adaptors + communicator
+/// pool + the dynamic scheduler.
+pub struct Cluster {
+    pub cfg: ModelCfg,
+    engines: Vec<EngineHandle>,
+    adaptors: Vec<KvCacheAdaptor>,
+    pub comm: Arc<CommunicatorPool>,
+    max_tp: usize,
+    b_dec: usize,
+    c_prefill: usize,
+
+    // scheduler state
+    waiting: Vec<u64>,
+    active: BTreeMap<u64, Active>,
+    engine_active: Vec<Vec<u64>>, // DP requests per engine
+    engine_mode: Vec<usize>,
+    /// Blocks committed per engine by admission control.
+    engine_committed: Vec<usize>,
+    groups: BTreeMap<usize, Group>,
+    outputs: BTreeMap<u64, Vec<i32>>,
+    rejected: Vec<u64>,
+    switches: Vec<SwitchEvent>,
+    t0: Instant,
+}
+
+impl Cluster {
+    /// Boot `n_engines` engine workers for `model` (weights loaded once,
+    /// artifacts compiled eagerly, communicator pool pre-initialized).
+    pub fn start(manifest: &Arc<Manifest>, model: &str, n_engines: usize) -> Result<Cluster> {
+        let mm = manifest.model(model)?;
+        let cfg = mm.cfg.clone();
+        let ws = Arc::new(mm.load_weights()?);
+        let mut degrees: Vec<usize> = manifest
+            .tp_degrees
+            .iter()
+            .copied()
+            .filter(|&p| cfg.supports_tp(p) && p <= n_engines)
+            .collect();
+        if !degrees.contains(&1) {
+            degrees.push(1);
+        }
+        let max_tp = degrees.iter().copied().max().unwrap_or(1);
+        let comm = Arc::new(CommunicatorPool::new(
+            n_engines,
+            &degrees,
+            Duration::from_secs(30),
+        ));
+        let mut engines = Vec::new();
+        for id in 0..n_engines {
+            engines.push(
+                EngineHandle::spawn(id, manifest.clone(), model.to_string(), ws.clone(), comm.clone())
+                    .with_context(|| format!("starting engine {id}"))?,
+            );
+        }
+        let adaptors = (0..n_engines).map(|_| KvCacheAdaptor::new(cfg.clone())).collect();
+        Ok(Cluster {
+            cfg,
+            engines,
+            adaptors,
+            comm,
+            max_tp,
+            b_dec: manifest.shapes.b_dec,
+            c_prefill: manifest.shapes.c_prefill,
+            waiting: Vec::new(),
+            active: BTreeMap::new(),
+            engine_active: vec![Vec::new(); n_engines],
+            engine_mode: vec![1; n_engines],
+            engine_committed: vec![0; n_engines],
+            groups: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            rejected: Vec::new(),
+            switches: Vec::new(),
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn members(&self, start: usize, p: usize) -> std::ops::Range<usize> {
+        start..start + p
+    }
+
+    /// Live mode switch: SetMode RPC to every member + communicator fetch.
+    /// Returns the measured latency (the Table-2 "live" number).
+    fn switch_group(&mut self, start: usize, p_to: usize) -> Result<f64> {
+        let p_from = self.engine_mode[start];
+        let t_start = Instant::now();
+        // Communicator activation: O(1) pool lookup (pre-initialized).
+        if p_to > 1 {
+            let _ = self.comm.group_of(start, p_to)?;
+        }
+        let width = p_to.max(p_from);
+        for e in self.members(start, width) {
+            if e < self.engines.len() {
+                self.engines[e].call(EngineCmd::SetMode { p: p_to })?;
+                self.engine_mode[e] = p_to;
+            }
+        }
+        let dt = t_start.elapsed().as_secs_f64();
+        self.switches.push(SwitchEvent {
+            t: self.now(),
+            group_start: start,
+            p_from,
+            p_to,
+            latency_s: dt,
+        });
+        Ok(dt)
+    }
+
+    // ------------------------------------------------------------------
+    // Trace replay driver: submit all requests with arrival offsets, run
+    // Algorithm 1 until everything finishes.
+    // ------------------------------------------------------------------
+
+    pub fn run_trace(
+        &mut self,
+        mut trace: Vec<ServeRequest>,
+        policy: &mut dyn Policy,
+        strategy: Strategy,
+    ) -> Result<ClusterOutcome> {
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut recorder = Recorder::new();
+        self.t0 = Instant::now();
+        let mut next_arrival = 0usize;
+        let mut idle_iters = 0usize;
+
+        loop {
+            let now = self.now();
+
+            // Dissolve/settle groups first so freshly-freed engines are
+            // visible to this iteration's mode decisions.
+            self.settle_groups(&mut recorder)?;
+
+            // ① Input processing: admit due arrivals into the task pool.
+            while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
+                let sr = trace[next_arrival].clone();
+                recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
+                self.admit(sr);
+                next_arrival += 1;
+            }
+
+            // ② Globally-agreed waiting order: priority first, then arrival.
+            self.waiting.sort_by(|a, b| {
+                let ra = &self.active[a].sr;
+                let rb = &self.active[b].sr;
+                rb.priority
+                    .cmp(&ra.priority)
+                    .then(ra.arrival.partial_cmp(&rb.arrival).unwrap())
+            });
+
+            // ③+④+⑤ Mode determination, KV parameterization, binding.
+            self.assign_waiting(policy, strategy, &mut recorder)?;
+
+            // ⑥ Execute one step on every engine/group with work.
+            let stepped = self.execute_step(&mut recorder)?;
+
+            // Exit/idle handling.
+            let done = self.active.values().all(|a| a.phase == Phase::Done)
+                && next_arrival >= trace.len()
+                && self.waiting.is_empty();
+            if done {
+                break;
+            }
+            if !stepped {
+                idle_iters += 1;
+                // Nothing runnable: sleep until the next arrival.
+                if next_arrival < trace.len() {
+                    let dt = trace[next_arrival].arrival - self.now();
+                    if dt > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
+                    }
+                } else if idle_iters > 10_000 {
+                    // Requests exist but nothing has run for many
+                    // iterations: genuine scheduling bug, fail loudly
+                    // instead of hanging.
+                    bail!("scheduler stall: waiting={:?}", self.waiting);
+                }
+            } else {
+                idle_iters = 0;
+            }
+        }
+
+        Ok(ClusterOutcome {
+            recorder,
+            outputs: std::mem::take(&mut self.outputs),
+            rejected: std::mem::take(&mut self.rejected),
+            switches: std::mem::take(&mut self.switches),
+        })
+    }
+
+    fn admit(&mut self, sr: ServeRequest) {
+        let id = sr.id;
+        self.active.insert(
+            id,
+            Active {
+                sr,
+                mode_p: 0,
+                home: 0,
+                phase: Phase::Prefill,
+                pos: 0,
+                emitted: Vec::new(),
+                paused: false,
+                speculative: false,
+                forced: Vec::new(),
+                committed: Vec::new(),
+            },
+        );
+        self.waiting.push(id);
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        let idle = (0..self.engines.len())
+            .filter(|&e| self.engine_mode[e] == 1 && self.engine_active[e].is_empty())
+            .count();
+        Snapshot {
+            queue_len: self.waiting.len(),
+            idle_engines: idle,
+            n_engines: self.engines.len(),
+            dp_capacity_tokens: self.cfg.dp_token_capacity(),
+            max_tp: self.max_tp,
+        }
+    }
+
+    /// Steps ③–⑤ for every waiting request.
+    fn assign_waiting(
+        &mut self,
+        policy: &mut dyn Policy,
+        strategy: Strategy,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        let waiting = std::mem::take(&mut self.waiting);
+        let backlog_total = waiting.len();
+        for (qi, rid) in waiting.into_iter().enumerate() {
+            let mut snap = self.snapshot();
+            // Include requests later in this same drain in the backlog so
+            // the burst signal sees the true queue depth.
+            snap.queue_len += backlog_total - qi - 1;
+            let (plen, hint, pri, demand) = {
+                let a = &self.active[&rid];
+                (
+                    a.sr.prompt.len(),
+                    a.sr.max_new,
+                    a.sr.priority,
+                    a.sr.tp_demand,
+                )
+            };
+            match policy.decide(plen, hint, pri, demand, &snap) {
+                ModeDecision::Reject => {
+                    self.active.get_mut(&rid).unwrap().phase = Phase::Done;
+                    self.rejected.push(rid);
+                    recorder.on_finish(rid, self.now());
+                }
+                ModeDecision::Dp => self.try_bind_dp(rid, recorder)?,
+                ModeDecision::Tp(p) => {
+                    let p = self.clamp_tp(p);
+                    if p == 1 {
+                        // Degenerate TP (single engine / unsupported width).
+                        self.try_bind_dp(rid, recorder)?;
+                    } else {
+                        self.bind_tp(rid, p, strategy, recorder)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Worst-case block demand of `rid` under layout `p` (admission unit).
+    fn block_need(&self, rid: u64, p: usize) -> usize {
+        let a = &self.active[&rid];
+        let total = a.sr.prompt.len() + a.sr.max_new;
+        total.div_ceil(self.cfg.block_tokens(p))
+    }
+
+    fn commit(&mut self, rid: u64, e: usize, blocks: usize) {
+        self.engine_committed[e] += blocks;
+        self.active.get_mut(&rid).unwrap().committed.push((e, blocks));
+    }
+
+    fn uncommit_all(&mut self, rid: u64) {
+        let committed = std::mem::take(&mut self.active.get_mut(&rid).unwrap().committed);
+        for (e, blocks) in committed {
+            self.engine_committed[e] -= blocks;
+        }
+    }
+
+    /// Bind to the least-loaded unbound engine with KV headroom, or queue.
+    fn try_bind_dp(&mut self, rid: u64, recorder: &mut Recorder) -> Result<()> {
+        let need = self.block_need(rid, 1);
+        let pick = (0..self.engines.len())
+            .filter(|&e| self.engine_mode[e] == 1 && !self.engine_draining(e))
+            .filter(|&e| self.engine_committed[e] + need <= self.cfg.n_blocks - 1)
+            .min_by_key(|&e| self.engine_active[e].len());
+        match pick {
+            Some(e) => {
+                self.commit(rid, e, need);
+                self.bind_dp(rid, e, recorder)
+            }
+            None => {
+                self.waiting.push(rid);
+                Ok(())
+            }
+        }
+    }
+
+    fn clamp_tp(&self, p: usize) -> usize {
+        let mut q = 1;
+        while q * 2 <= p && q * 2 <= self.engines.len() && self.cfg.supports_tp(q * 2) {
+            q *= 2;
+        }
+        q
+    }
+
+    fn engine_draining(&self, e: usize) -> bool {
+        self.groups
+            .iter()
+            .any(|(&start, g)| e >= start && e < start + g.p && !g.tp_pending.is_empty())
+    }
+
+    fn bind_dp(&mut self, rid: u64, e: usize, recorder: &mut Recorder) -> Result<()> {
+        self.adaptors[e].register(rid, 1)?;
+        let a = self.active.get_mut(&rid).unwrap();
+        a.mode_p = 1;
+        a.home = e;
+        self.engine_active[e].push(rid);
+        recorder.on_first_sched(rid, self.now());
+        Ok(())
+    }
+
+    /// Bind (or queue) a TP request onto an aligned group of width p.
+    fn bind_tp(
+        &mut self,
+        rid: u64,
+        p: usize,
+        strategy: Strategy,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        // Prefer an already-bound group at this width with batch room, else
+        // the group whose members have the least DP work.  Starts whose
+        // members belong to a live group of a *different* width are excluded
+        // (a group can only be re-bound after it dissolves).
+        let conflict = |s: usize| {
+            self.groups.iter().any(|(&gs, g)| {
+                let overlap = gs < s + p && s < gs + g.p;
+                overlap
+                    && (gs != s || g.p != p)
+                    && (!g.tp_active.is_empty() || !g.tp_pending.is_empty())
+            })
+        };
+        let starts: Vec<usize> = (0..self.engines.len())
+            .step_by(p)
+            .filter(|&s| s + p <= self.engines.len() && !conflict(s))
+            .collect();
+        if starts.is_empty() {
+            // No compatible group right now; retry next iteration.
+            self.waiting.push(rid);
+            return Ok(());
+        }
+        let bound = starts.iter().copied().find(|s| {
+            self.groups
+                .get(s)
+                .map(|g| g.p == p && g.tp_active.len() < self.b_dec)
+                .unwrap_or(false)
+        });
+        let start = bound.unwrap_or_else(|| {
+            *starts
+                .iter()
+                .min_by_key(|&&s| {
+                    self.members(s, p)
+                        .map(|e| self.engine_active[e].len() + 100 * (self.engine_mode[e] > 1) as usize)
+                        .sum::<usize>()
+                })
+                .unwrap()
+        });
+
+        // Admission control: all members must have block headroom for the
+        // request's worst case under layout p.
+        let need_p = self.block_need(rid, p);
+        let room = self
+            .members(start, p)
+            .all(|e| self.engine_committed[e] + need_p <= self.cfg.n_blocks - 1);
+        if !room {
+            self.waiting.push(rid);
+            return Ok(());
+        }
+
+        let busy: Vec<u64> = self
+            .members(start, p)
+            .flat_map(|e| self.engine_active[e].clone())
+            .filter(|r| {
+                self.active
+                    .get(r)
+                    .map(|a| a.phase != Phase::Done && !a.paused)
+                    .unwrap_or(false)
+            })
+            .collect();
+
+        let g = self.groups.entry(start).or_insert_with(|| Group { p, ..Default::default() });
+        g.p = p;
+
+        if busy.is_empty() && self.engine_mode[start] != p {
+            // Immediate bind at a safe point.
+            self.switch_group(start, p)?;
+        }
+
+        if self.engine_mode[start] == p {
+            // Register in every member adaptor (identical logical content,
+            // per-member physical block ids).
+            for e in self.members(start, p) {
+                self.commit(rid, e, need_p);
+                self.adaptors[e].register(rid, p)?;
+            }
+            let a = self.active.get_mut(&rid).unwrap();
+            a.mode_p = p;
+            a.home = start;
+            self.groups.get_mut(&start).unwrap().tp_active.push(rid);
+            recorder.on_first_sched(rid, self.now());
+            return Ok(());
+        }
+
+        // Members still busy: strategy decides.
+        match strategy {
+            Strategy::Sequential => {
+                self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                let a = self.active.get_mut(&rid).unwrap();
+                a.mode_p = p;
+                a.home = start;
+            }
+            Strategy::SoftPreempt => {
+                self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                let a = self.active.get_mut(&rid).unwrap();
+                a.mode_p = p;
+                a.home = start;
+                // Speculatively run in DP on the least-loaded member (only
+                // if a member has DP-layout headroom).
+                let need_dp = self.block_need(rid, 1);
+                let e = self
+                    .members(start, p)
+                    .filter(|&e| self.engine_committed[e] + need_dp <= self.cfg.n_blocks - 1)
+                    .min_by_key(|&e| self.engine_active[e].len());
+                if let Some(e) = e {
+                    self.commit(rid, e, need_dp);
+                    self.adaptors[e].register(rid, 1)?;
+                    let a = self.active.get_mut(&rid).unwrap();
+                    a.speculative = true;
+                    a.mode_p = 1; // runs as DP for now
+                    a.home = e;
+                    self.engine_active[e].push(rid);
+                    recorder.on_first_sched(rid, self.now());
+                }
+            }
+            Strategy::HardPreempt => {
+                // Pause members' DP requests in place (KV stays resident).
+                for other in busy {
+                    if let Some(a) = self.active.get_mut(&other) {
+                        a.paused = true;
+                        self.adaptors[a.home].pause(other)?;
+                    }
+                }
+                self.switch_group(start, p)?;
+                for e in self.members(start, p) {
+                    self.commit(rid, e, need_p);
+                    self.adaptors[e].register(rid, p)?;
+                }
+                let a = self.active.get_mut(&rid).unwrap();
+                a.mode_p = p;
+                a.home = start;
+                self.groups.get_mut(&start).unwrap().tp_active.push(rid);
+                recorder.on_first_sched(rid, self.now());
+            }
+        }
+        Ok(())
+    }
+
+    /// Promote pending TP requests whose group has finished draining, and
+    /// dissolve groups whose TP work is done.
+    fn settle_groups(&mut self, recorder: &mut Recorder) -> Result<()> {
+        let starts: Vec<usize> = self.groups.keys().copied().collect();
+        for start in starts {
+            let (p, pending_empty, active_empty) = {
+                let g = &self.groups[&start];
+                (g.p, g.tp_pending.is_empty(), g.tp_active.is_empty())
+            };
+
+            // Dissolve: TP work done -> back to DP, resume paused requests.
+            if pending_empty && active_empty {
+                if self.engine_mode[start] == p && p > 1 {
+                    self.switch_group(start, 1)?;
+                    for e in self.members(start, p) {
+                        let resumed: Vec<u64> = self.engine_active[e]
+                            .iter()
+                            .copied()
+                            .filter(|r| self.active.get(r).map(|a| a.paused).unwrap_or(false))
+                            .collect();
+                        for r in resumed {
+                            self.adaptors[e].resume(r)?;
+                            self.active.get_mut(&r).unwrap().paused = false;
+                        }
+                    }
+                }
+                self.groups.remove(&start);
+                continue;
+            }
+
+            // Drained? (no unpaused DP work on members)
+            if !pending_empty {
+                let busy = self
+                    .members(start, p)
+                    .flat_map(|e| self.engine_active[e].iter())
+                    .any(|r| {
+                        self.active
+                            .get(r)
+                            .map(|a| a.phase != Phase::Done && !a.paused && !a.speculative)
+                            .unwrap_or(false)
+                    });
+                // Speculative requests also block the bind until... no: the
+                // speculative request IS the pending one; it yields now.
+                if !busy {
+                    if self.engine_mode[start] != p {
+                        self.switch_group(start, p)?;
+                    }
+                    let pending = std::mem::take(&mut self.groups.get_mut(&start).unwrap().tp_pending);
+                    for rid in pending {
+                        // Admission: TP-layout headroom on every member
+                        // (speculative DP commitment is released first).
+                        let need_p = self.block_need(rid, p);
+                        let spec_blocks: usize = self.active[&rid]
+                            .committed
+                            .iter()
+                            .map(|&(_, b)| b)
+                            .sum();
+                        let room = self.members(start, p).all(|e| {
+                            let held = self.active[&rid]
+                                .committed
+                                .iter()
+                                .filter(|&&(ce, _)| ce == e)
+                                .map(|&(_, b)| b)
+                                .sum::<usize>();
+                            self.engine_committed[e] - held + need_p <= self.cfg.n_blocks - 1
+                        });
+                        let _ = spec_blocks;
+                        if !room {
+                            self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                            continue;
+                        }
+                        // If it ran speculatively, drop its DP-layout KV and
+                        // schedule the TP recompute (§5.2.2).
+                        let (was_spec, spec_home) = {
+                            let a = &self.active[&rid];
+                            (a.speculative, a.home)
+                        };
+                        if was_spec {
+                            self.adaptors[spec_home].release(rid)?;
+                            self.engine_active[spec_home].retain(|&r| r != rid);
+                            let a = self.active.get_mut(&rid).unwrap();
+                            a.speculative = false;
+                            // Recompute prompt + already-fed output tokens.
+                            let emitted = a.emitted.clone();
+                            a.forced = if emitted.is_empty() { vec![] } else { vec![*emitted.last().unwrap()] };
+                            a.pos = 0;
+                            a.phase = Phase::Prefill;
+                        }
+                        self.uncommit_all(rid);
+                        for e in self.members(start, p) {
+                            self.commit(rid, e, need_p);
+                            self.adaptors[e].register(rid, p)?;
+                        }
+                        let a = self.active.get_mut(&rid).unwrap();
+                        a.mode_p = p;
+                        a.home = start;
+                        self.groups.get_mut(&start).unwrap().tp_active.push(rid);
+                        recorder.on_first_sched(rid, self.now());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Step ⑥: issue one step per engine/group, lockstep.
+    fn execute_step(&mut self, recorder: &mut Recorder) -> Result<bool> {
+        self.settle_groups(recorder)?;
+
+        // Build the step plan.
+        enum Plan {
+            DpPrefill { e: usize, rid: u64 },
+            DpDecode { e: usize, rids: Vec<u64> },
+            TpPrefill { start: usize, p: usize, rid: u64 },
+            TpDecode { start: usize, p: usize, rids: Vec<u64> },
+        }
+        let mut plans: Vec<Plan> = Vec::new();
+        let mut covered = vec![false; self.engines.len()];
+
+        // TP groups first.
+        for (&start, g) in &self.groups {
+            if g.tp_active.is_empty() {
+                continue;
+            }
+            for e in self.members(start, g.p) {
+                covered[e] = true;
+            }
+            // Prefill-first within the group (chunked prefill).
+            let pre = g.tp_active.iter().copied().find(|r| {
+                self.active.get(r).map(|a| a.phase == Phase::Prefill).unwrap_or(false)
+            });
+            if let Some(rid) = pre {
+                plans.push(Plan::TpPrefill { start, p: g.p, rid });
+            } else {
+                let rids: Vec<u64> = g
+                    .tp_active
+                    .iter()
+                    .copied()
+                    .filter(|r| self.active.get(r).map(|a| a.phase == Phase::Decode).unwrap_or(false))
+                    .take(self.b_dec)
+                    .collect();
+                if !rids.is_empty() {
+                    plans.push(Plan::TpDecode { start, p: g.p, rids });
+                }
+            }
+        }
+
+        // DP engines.
+        for e in 0..self.engines.len() {
+            if covered[e] {
+                continue;
+            }
+            let runnable: Vec<u64> = self.engine_active[e]
+                .iter()
+                .copied()
+                .filter(|r| {
+                    self.active
+                        .get(r)
+                        .map(|a| !a.paused && a.phase != Phase::Done)
+                        .unwrap_or(false)
+                })
+                .collect();
+            let pre = runnable.iter().copied().find(|r| self.active[r].phase == Phase::Prefill);
+            if let Some(rid) = pre {
+                plans.push(Plan::DpPrefill { e, rid });
+            } else {
+                let rids: Vec<u64> = runnable
+                    .into_iter()
+                    .filter(|r| self.active[r].phase == Phase::Decode)
+                    .take(self.b_dec)
+                    .collect();
+                if !rids.is_empty() {
+                    plans.push(Plan::DpDecode { e, rids });
+                }
+            }
+        }
+
+        if plans.is_empty() {
+            return Ok(false);
+        }
+
+        // Issue all commands, then collect replies (TP members meet in the
+        // collectives, so their commands must all be in flight together).
+        struct Pending {
+            rxs: Vec<(usize, std::sync::mpsc::Receiver<EngineReply>)>,
+            rids: Vec<u64>,
+            is_prefill: bool,
+        }
+        let mut pendings: Vec<Pending> = Vec::new();
+
+        for plan in &plans {
+            match plan {
+                Plan::DpPrefill { e, rid } => {
+                    let chunk = self.make_prefill_chunk(*rid, *e, 1)?;
+                    let rx = self.engines[*e].send(EngineCmd::DpPrefill { chunk });
+                    pendings.push(Pending { rxs: vec![(*e, rx)], rids: vec![*rid], is_prefill: true });
+                }
+                Plan::DpDecode { e, rids } => {
+                    let batch = self.make_decode_batch(rids, *e, 1)?;
+                    let rx = self.engines[*e].send(EngineCmd::DpDecode { batch });
+                    pendings.push(Pending { rxs: vec![(*e, rx)], rids: rids.clone(), is_prefill: false });
+                }
+                Plan::TpPrefill { start, p, rid } => {
+                    let mut rxs = Vec::new();
+                    for e in self.members(*start, *p) {
+                        let chunk = self.make_prefill_chunk(*rid, e, *p)?;
+                        rxs.push((e, self.engines[e].send(EngineCmd::TpPrefill { p: *p, chunk })));
+                    }
+                    pendings.push(Pending { rxs, rids: vec![*rid], is_prefill: true });
+                }
+                Plan::TpDecode { start, p, rids } => {
+                    let mut rxs = Vec::new();
+                    for e in self.members(*start, *p) {
+                        let batch = self.make_decode_batch(rids, e, *p)?;
+                        rxs.push((e, self.engines[e].send(EngineCmd::TpDecode { p: *p, batch })));
+                    }
+                    pendings.push(Pending { rxs, rids: rids.clone(), is_prefill: false });
+                }
+            }
+        }
+
+        // Collect and publish.
+        for pend in pendings {
+            let mut first: Option<EngineReply> = None;
+            for (e, rx) in pend.rxs {
+                let r = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("engine {e} died mid-step"))?;
+                if let EngineReply::Err(msg) = &r {
+                    bail!("engine {e}: {msg}");
+                }
+                if first.is_none() {
+                    first = Some(r);
+                }
+            }
+            let now = self.now();
+            match (first.unwrap(), pend.is_prefill) {
+                (EngineReply::LastLogits(logits), true) => {
+                    self.advance_prefill(pend.rids[0], &logits, now, recorder)?;
+                }
+                (EngineReply::Logits(rows), false) => {
+                    for (rid, row) in pend.rids.iter().zip(rows) {
+                        self.advance_decode(*rid, &row, now, recorder)?;
+                    }
+                }
+                (r, _) => bail!("unexpected engine reply {r:?}"),
+            }
+        }
+        Ok(true)
+    }
+
+    /// Build the next prefill chunk for `rid` using engine `e`'s adaptor
+    /// under layout `p` (Algorithm 1 step 4: allocate + slot mapping).
+    fn make_prefill_chunk(&mut self, rid: u64, e: usize, p: usize) -> Result<PrefillChunk> {
+        let a = &self.active[&rid];
+        let full: Vec<i32> = a
+            .sr
+            .prompt
+            .iter()
+            .copied()
+            .chain(a.emitted.iter().copied().take(a.emitted.len().saturating_sub(1)))
+            .collect();
+        let start = a.pos;
+        let tokens: Vec<i32> = full[start..(start + self.c_prefill).min(full.len())].to_vec();
+        anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk for {rid}");
+        let _ = p;
+        self.adaptors[e].ensure_capacity(rid, start + tokens.len())?;
+        let slot_ids = (0..tokens.len())
+            .map(|i| self.adaptors[e].slot(rid, start + i))
+            .collect::<Result<Vec<u32>>>()?;
+        Ok(PrefillChunk {
+            rid,
+            tokens,
+            start,
+            slot_ids,
+            table_row: self.adaptors[e].table_row(rid)?,
+        })
+    }
+
+    fn make_decode_batch(&mut self, rids: &[u64], e: usize, _p: usize) -> Result<Vec<DecodeSlot>> {
+        let mut out = Vec::new();
+        for &rid in rids {
+            let a = &self.active[&rid];
+            let token = *a
+                .emitted
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("decode with no emitted token"))?;
+            let pos = a.pos;
+            self.adaptors[e].ensure_capacity(rid, pos + 1)?;
+            self.adaptors[e].set_seq_len(rid, pos + 1)?;
+            out.push(DecodeSlot {
+                rid,
+                token,
+                pos,
+                slot_id: self.adaptors[e].slot(rid, pos)?,
+                table_row: self.adaptors[e].table_row(rid)?,
+            });
+        }
+        Ok(out)
+    }
+
+    fn prefill_total_len(&self, rid: u64) -> usize {
+        let a = &self.active[&rid];
+        a.sr.prompt.len() + a.emitted.len().saturating_sub(1)
+    }
+
+    fn advance_prefill(
+        &mut self,
+        rid: u64,
+        logits: &[f32],
+        now: f64,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        let total = self.prefill_total_len(rid);
+        let a = self.active.get_mut(&rid).unwrap();
+        let chunk_len = (total - a.pos).min(self.c_prefill);
+        a.pos += chunk_len;
+        if a.pos < total {
+            return Ok(()); // more chunks to go
+        }
+        // Prefill complete.
+        a.phase = Phase::Decode;
+        if a.emitted.is_empty() {
+            let tok = argmax(logits);
+            a.emitted.push(tok);
+            recorder.on_token(rid, now);
+            self.maybe_finish(rid, now, recorder)?;
+        }
+        // else: soft-preempt recompute — logits discarded, the already-
+        // emitted tail token is fed next via `forced` semantics (it is the
+        // last element of `emitted`, which decode feeds automatically).
+        Ok(())
+    }
+
+    fn advance_decode(
+        &mut self,
+        rid: u64,
+        logits: &[f32],
+        now: f64,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        let a = self.active.get_mut(&rid).unwrap();
+        a.pos += 1; // the fed token's KV is now cached
+        let tok = argmax(logits);
+        a.emitted.push(tok);
+        recorder.on_token(rid, now);
+        self.maybe_finish(rid, now, recorder)
+    }
+
+    fn maybe_finish(&mut self, rid: u64, now: f64, recorder: &mut Recorder) -> Result<()> {
+        let (done, mode_p, home) = {
+            let a = &self.active[&rid];
+            let done = a.emitted.len() >= a.sr.max_new || a.emitted.last() == Some(&EOS);
+            (done, a.mode_p, a.home)
+        };
+        if !done {
+            return Ok(());
+        }
+        let a = self.active.get_mut(&rid).unwrap();
+        a.phase = Phase::Done;
+        let emitted = a.emitted.clone();
+        recorder.on_finish(rid, now);
+        self.outputs.insert(rid, emitted);
+        self.uncommit_all(rid);
+        if mode_p <= 1 {
+            self.adaptors[home].release(rid)?;
+            self.engine_active[home].retain(|&r| r != rid);
+        } else {
+            for e in self.members(home, mode_p) {
+                self.adaptors[e].release(rid)?;
+            }
+            if let Some(g) = self.groups.get_mut(&home) {
+                g.tp_active.retain(|&r| r != rid);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(&mut self) {
+        for e in &mut self.engines {
+            e.stop();
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

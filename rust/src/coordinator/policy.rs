@@ -1,0 +1,193 @@
+//! Mode-determination policy (Algorithm 1, step 3).
+//!
+//! The policy decides, per request, whether it executes as DP or inside a
+//! TP group — this is where the paper's three user scenarios (§2.3) are
+//! encoded.  The same trait drives the real thread-cluster coordinator and
+//! the discrete-event simulator, so the policy code under benchmark is
+//! byte-identical in both.
+
+use crate::workload::Priority;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModeDecision {
+    Dp,
+    Tp(usize),
+    /// The request cannot be served under this policy (e.g. long-context
+    /// under static DP): counted as an OOM failure, the paper's Use-Case-3
+    /// motivation.
+    Reject,
+}
+
+/// System snapshot the policy sees each scheduling iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct Snapshot {
+    pub queue_len: usize,
+    pub idle_engines: usize,
+    pub n_engines: usize,
+    /// Max tokens (prompt + output) a single DP engine can cache.
+    pub dp_capacity_tokens: usize,
+    /// Widest supported TP degree for this model.
+    pub max_tp: usize,
+}
+
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision;
+}
+
+/// FLYING SERVING's workload-aware policy:
+///   * Use Case 3 — requests that exceed DP KV capacity get the narrowest
+///     TP degree that fits (memory-driven binding).
+///   * Use Case 2 — high-priority requests get a TP binding for latency.
+///   * Use Case 1 — under light load (queue fits in the idle engines),
+///     opportunistically widen to TP to cut latency; under bursts, stay DP
+///     to maximize concurrency and drain the queue.
+pub struct FlyingPolicy {
+    /// Queue length (relative to engine count) above which the system is
+    /// considered bursting and everything stays DP.
+    pub burst_factor: f64,
+}
+
+impl Default for FlyingPolicy {
+    fn default() -> Self {
+        FlyingPolicy { burst_factor: 1.0 }
+    }
+}
+
+impl FlyingPolicy {
+    fn fit_tp(total_tokens: usize, snap: &Snapshot) -> Option<usize> {
+        let mut p = 1;
+        while p <= snap.max_tp {
+            if total_tokens <= snap.dp_capacity_tokens * p {
+                return Some(p);
+            }
+            p *= 2;
+        }
+        None
+    }
+}
+
+impl Policy for FlyingPolicy {
+    fn name(&self) -> &'static str {
+        "flying"
+    }
+
+    fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        let total = prompt_len + output_len_hint;
+        // Explicit demand wins (latency-strict clients).
+        if let Some(p) = tp_demand {
+            return ModeDecision::Tp(p.min(snap.max_tp).max(1));
+        }
+        // Use Case 3: memory-driven.
+        if total > snap.dp_capacity_tokens {
+            return match Self::fit_tp(total, snap) {
+                Some(p) => ModeDecision::Tp(p),
+                None => ModeDecision::Reject,
+            };
+        }
+        // Use Case 2: priority-driven.  The binding takes at most half the
+        // cluster so best-effort traffic keeps DP engines (paper §2.3:
+        // "normal tasks continue to execute on remaining DP engines").
+        if priority == Priority::High {
+            let width = (snap.n_engines / 2).max(2).min(snap.max_tp);
+            return ModeDecision::Tp(width);
+        }
+        // Use Case 1: load-adaptive.
+        let bursting = snap.queue_len as f64 > self.burst_factor * snap.n_engines as f64;
+        if !bursting && snap.idle_engines >= snap.n_engines.min(snap.max_tp) {
+            ModeDecision::Tp(snap.max_tp.min(snap.n_engines))
+        } else {
+            ModeDecision::Dp
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queue: usize, idle: usize) -> Snapshot {
+        Snapshot {
+            queue_len: queue,
+            idle_engines: idle,
+            n_engines: 4,
+            dp_capacity_tokens: 1000,
+            max_tp: 4,
+        }
+    }
+
+    #[test]
+    fn light_load_widens_to_tp() {
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(100, 50, Priority::Normal, None, &snap(0, 4)),
+            ModeDecision::Tp(4)
+        );
+    }
+
+    #[test]
+    fn burst_stays_dp() {
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(100, 50, Priority::Normal, None, &snap(20, 0)),
+            ModeDecision::Dp
+        );
+    }
+
+    #[test]
+    fn long_context_gets_narrowest_fitting_tp_even_under_burst() {
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(1500, 100, Priority::Normal, None, &snap(20, 0)),
+            ModeDecision::Tp(2)
+        );
+        assert_eq!(
+            p.decide(3500, 100, Priority::Normal, None, &snap(20, 0)),
+            ModeDecision::Tp(4)
+        );
+    }
+
+    #[test]
+    fn impossible_context_rejected() {
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(10_000, 0, Priority::Normal, None, &snap(0, 4)),
+            ModeDecision::Reject
+        );
+    }
+
+    #[test]
+    fn priority_binds_tp_even_when_busy() {
+        let mut p = FlyingPolicy::default();
+        // Priority takes at most half the cluster (4 engines -> width 2) so
+        // best-effort traffic keeps DP engines.
+        assert_eq!(
+            p.decide(100, 50, Priority::High, None, &snap(20, 0)),
+            ModeDecision::Tp(2)
+        );
+    }
+
+    #[test]
+    fn explicit_demand_clamped_to_max() {
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(10, 10, Priority::Normal, Some(8), &snap(0, 4)),
+            ModeDecision::Tp(4)
+        );
+    }
+}

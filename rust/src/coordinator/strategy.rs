@@ -1,0 +1,44 @@
+//! Mode-switching strategies (paper §5.2, Fig. 7).
+//!
+//! When a TP-designated request needs engines that are still running DP
+//! work (execution skew), the strategy decides how the transition happens:
+//!
+//! * `Sequential` — wait for the longest-running DP request on the member
+//!   engines to finish (correct but idles capacity; Fig. 7a).
+//! * `SoftPreempt` — while waiting, idle member engines speculatively run
+//!   the TP request in DP mode; its KV is recomputed under the TP layout at
+//!   bind time (decoding is memory-bound, recompute is parallel
+//!   compute-bound — a favorable trade; Fig. 7b).
+//! * `HardPreempt` — interrupt member engines immediately; their DP
+//!   requests stay paused with KV resident (the adaptor's layout
+//!   coexistence) and resume without recomputation (Fig. 7c).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Sequential,
+    SoftPreempt,
+    HardPreempt,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Sequential => "sequential",
+            Strategy::SoftPreempt => "soft-preempt",
+            Strategy::HardPreempt => "hard-preempt",
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sequential" => Ok(Strategy::Sequential),
+            "soft" | "soft-preempt" => Ok(Strategy::SoftPreempt),
+            "hard" | "hard-preempt" => Ok(Strategy::HardPreempt),
+            _ => anyhow::bail!("unknown strategy '{s}' (sequential|soft|hard)"),
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! EngineCore: the single-threaded execution state of one DP engine — the
+//! paper's "fundamental DP instance" (§3).  It owns:
+//!
+//!  * one full weight replica, uploaded to device buffers exactly once
+//!    (Model Weights Manager invariant, §4.1);
+//!  * per-layer host KV pools whose physical bytes never move; the KV Cache
+//!    Adaptor's slot ids decide where new rows land (§4.2);
+//!  * the compiled executables for every (phase, TP degree), so switching
+//!    mode never compiles or loads anything (§4.3's eager-init philosophy
+//!    applied to executables as well).
+//!
+//! `set_mode` — the target of the scheduler's `set_TP_mode`/`reset_TP_mode`
+//! collective RPC (Algorithm 1, step 5) — is two field writes.  That is the
+//! entire engine-side cost of a DP<->TP switch, measured in the Table-2
+//! bench.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::comm::CommunicatorPool;
+use crate::model::{StaticShapes, WeightStore};
+use crate::runtime::{ArtifactSpec, DynInputs, EngineBuffers, Manifest, Runtime, StepOutputs};
+
+/// One decode slot: a request with its adaptor-derived addressing.
+#[derive(Clone, Debug)]
+pub struct DecodeSlot {
+    pub rid: u64,
+    pub token: i32,
+    pub pos: usize,      // 0-based index of `token` (its kv appends here)
+    pub slot_id: u32,    // flat write slot from the adaptor
+    pub table_row: Vec<i32>, // padded to n_blocks
+}
+
+/// One prefill chunk of a single request.
+#[derive(Clone, Debug)]
+pub struct PrefillChunk {
+    pub rid: u64,
+    pub tokens: Vec<i32>,    // <= c_prefill actual tokens
+    pub start: usize,        // absolute position of tokens[0]
+    pub slot_ids: Vec<u32>,  // one per actual token
+    pub table_row: Vec<i32>, // padded to n_blocks
+}
+
+pub struct EngineCore {
+    pub id: usize,
+    pub model: String,
+    rt: Runtime,
+    bufs: EngineBuffers,
+    ws: Arc<WeightStore>,
+    pub shapes: StaticShapes,
+    exes: std::collections::BTreeMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
+    pub k_pools: Vec<Vec<f32>>,
+    pub v_pools: Vec<Vec<f32>>,
+    comm: Arc<CommunicatorPool>,
+    /// Current mode: TP degree p (1 = independent DP engine).
+    pub mode_p: usize,
+}
+
+impl EngineCore {
+    /// Build one engine: create its PJRT client (PjRtClient is !Send, so
+    /// this must run on the engine's own thread), upload weights, compile
+    /// every artifact eagerly.
+    pub fn new(
+        id: usize,
+        manifest: &Manifest,
+        model: &str,
+        ws: Arc<WeightStore>,
+        comm: Arc<CommunicatorPool>,
+    ) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let mm = manifest.model(model)?;
+        let bufs = EngineBuffers::upload(&rt.client, &ws)?;
+        let mut exes = std::collections::BTreeMap::new();
+        for (name, spec) in &mm.artifacts {
+            let exe = rt.compile(spec)?;
+            exes.insert(name.clone(), (exe, spec.clone()));
+        }
+        let cfg = &mm.cfg;
+        let pool = vec![0f32; cfg.pool_elems];
+        Ok(EngineCore {
+            id,
+            model: model.to_string(),
+            rt,
+            bufs,
+            ws,
+            shapes: manifest.shapes,
+            exes,
+            k_pools: vec![pool.clone(); cfg.n_layers],
+            v_pools: vec![pool; cfg.n_layers],
+            comm,
+            mode_p: 1,
+        })
+    }
+
+    pub fn cfg(&self) -> &crate::model::ModelCfg {
+        &self.ws.cfg
+    }
+
+    /// The engine-side mode switch: O(1), no weight or KV movement.
+    /// (`rank` is implicit: the engine's global id within its aligned group.)
+    pub fn set_mode(&mut self, p: usize) -> Result<()> {
+        if !self.cfg().supports_tp(p) {
+            bail!("model {} does not support TP degree {p}", self.model);
+        }
+        self.mode_p = p;
+        Ok(())
+    }
+
+    fn exe(&self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, &ArtifactSpec)> {
+        self.exes
+            .get(name)
+            .map(|(e, s)| (e, s))
+            .ok_or_else(|| anyhow::anyhow!("engine {}: no artifact '{name}'", self.id))
+    }
+
+    /// Scatter new KV rows (one per batch slot/chunk token) into the host
+    /// pools at the adaptor's slot ids — the authoritative KV write.
+    fn scatter_kv(&mut self, layer: usize, p: usize, slots: &[u32], k_new: &[f32], v_new: &[f32]) {
+        let cfg = self.cfg();
+        let w = (cfg.n_kv_heads / p) * cfg.d_head;
+        debug_assert_eq!(k_new.len(), slots.len() * w);
+        let kp = &mut self.k_pools[layer];
+        let vp = &mut self.v_pools[layer];
+        for (i, &s) in slots.iter().enumerate() {
+            let dst = s as usize * w;
+            kp[dst..dst + w].copy_from_slice(&k_new[i * w..(i + 1) * w]);
+            vp[dst..dst + w].copy_from_slice(&v_new[i * w..(i + 1) * w]);
+        }
+    }
+
+    fn apply_kv_outputs(&mut self, out: &StepOutputs, p: usize, slots: &[u32], layer_hint: usize) {
+        // Collect first to avoid borrowing self twice.
+        let triples: Vec<(usize, &Vec<f32>, &Vec<f32>)> = out
+            .kv_new
+            .iter()
+            .map(|(l, k, v)| (if *l < 0 { layer_hint } else { *l as usize }, k, v))
+            .collect();
+        for (layer, k, v) in triples {
+            let (k, v) = (k.clone(), v.clone());
+            self.scatter_kv(layer, p, slots, &k, &v);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // DP fast path: fused all-layer executables (p = 1).
+    // ------------------------------------------------------------------
+
+    /// One fused DP decode step over up to `b_dec` slots.  Returns the
+    /// logits rows for the occupied slots (row i ↔ batch[i]).
+    pub fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        let b = self.shapes.b_dec;
+        anyhow::ensure!(batch.len() <= b, "batch too large");
+        let cfg = self.cfg().clone();
+        let bt = cfg.block_tokens(1);
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut seq_lens = vec![0i32; b];
+        // Padded slots write into the trash block (slot i % bt).
+        let mut slots: Vec<u32> = (0..b).map(|i| (i % bt) as u32).collect();
+        let mut tables = vec![0i32; b * cfg.n_blocks];
+        for (i, s) in batch.iter().enumerate() {
+            tokens[i] = s.token;
+            positions[i] = s.pos as i32;
+            seq_lens[i] = s.pos as i32 + 1;
+            slots[i] = s.slot_id;
+            tables[i * cfg.n_blocks..(i + 1) * cfg.n_blocks].copy_from_slice(&s.table_row);
+        }
+        let dyns = DynInputs::new()
+            .i32("tokens", tokens)
+            .i32("positions", positions)
+            .i32("seq_lens", seq_lens)
+            .i32("block_tables", tables)
+            .i32("slot_ids", slots.iter().map(|&s| s as i32).collect());
+        let (exe, spec) = self.exe("dp_decode")?;
+        let out = self
+            .rt
+            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+        self.apply_kv_outputs(&out, 1, &slots, 0);
+        let v = cfg.vocab;
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(i, _)| out.primary[i * v..(i + 1) * v].to_vec())
+            .collect())
+    }
+
+    /// One fused DP prefill chunk.  Returns logits of the chunk's last
+    /// actual token.
+    pub fn dp_prefill(&mut self, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        let c = self.shapes.c_prefill;
+        let nv = chunk.tokens.len();
+        anyhow::ensure!(nv >= 1 && nv <= c, "chunk size {nv}");
+        let cfg = self.cfg().clone();
+        let bt = cfg.block_tokens(1);
+        let mut tokens = vec![0i32; c];
+        tokens[..nv].copy_from_slice(&chunk.tokens);
+        let mut positions = vec![0i32; c];
+        let mut slots: Vec<u32> = (0..c).map(|i| (i % bt) as u32).collect();
+        for i in 0..nv {
+            positions[i] = (chunk.start + i) as i32;
+            slots[i] = chunk.slot_ids[i];
+        }
+        let dyns = DynInputs::new()
+            .i32("tokens", tokens)
+            .i32("positions", positions)
+            .i32("slot_ids", slots.iter().map(|&s| s as i32).collect())
+            .i32("block_table", chunk.table_row.clone())
+            .i32("start", vec![chunk.start as i32])
+            .i32("seq_len", vec![(chunk.start + nv) as i32]);
+        let (exe, spec) = self.exe("dp_prefill")?;
+        let out = self
+            .rt
+            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+        self.apply_kv_outputs(&out, 1, &slots, 0);
+        let v = cfg.vocab;
+        Ok(out.primary[(nv - 1) * v..nv * v].to_vec())
+    }
+
+    // ------------------------------------------------------------------
+    // TP shard path: per-layer executables + all-reduce through the
+    // Communicator Pool.  All group members run these with identical dyn
+    // inputs (the scheduler's globally-agreed order guarantees it).
+    // ------------------------------------------------------------------
+
+    fn all_reduce(&self, p: usize, data: &mut [f32]) -> Result<()> {
+        let group = self.comm.group_of(self.id, p)?;
+        group.all_reduce_sum(self.id, data)?;
+        Ok(())
+    }
+
+    /// One TP decode step for this rank.  Returns logits rows (identical on
+    /// every rank; the coordinator reads rank 0's).
+    pub fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
+        let b = self.shapes.b_dec;
+        let cfg = self.cfg().clone();
+        let bt = cfg.block_tokens(p);
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut seq_lens = vec![0i32; b];
+        let mut slots: Vec<u32> = (0..b).map(|i| (i % bt) as u32).collect();
+        let mut tables = vec![0i32; b * cfg.n_blocks];
+        for (i, s) in batch.iter().enumerate() {
+            tokens[i] = s.token;
+            positions[i] = s.pos as i32;
+            seq_lens[i] = s.pos as i32 + 1;
+            slots[i] = s.slot_id;
+            tables[i * cfg.n_blocks..(i + 1) * cfg.n_blocks].copy_from_slice(&s.table_row);
+        }
+        // Host-side embedding gather (replicated, identical on all ranks).
+        let mut x = self.ws.embed(&tokens)?;
+        let rank_in_group = self.id % p;
+
+        for layer in 0..cfg.n_layers {
+            let dyns = DynInputs::new()
+                .f32("x", x.clone())
+                .i32("block_tables", tables.clone())
+                .i32("slot_ids", slots.iter().map(|&s| s as i32).collect())
+                .i32("positions", positions.clone())
+                .i32("seq_lens", seq_lens.clone())
+                .i32("rank", vec![rank_in_group as i32]);
+            let (exe, spec) = self.exe(&format!("attn_decode_tp{p}"))?;
+            let out =
+                self.rt
+                    .execute(exe, spec, &self.bufs, &dyns, layer, &self.k_pools, &self.v_pools)?;
+            self.apply_kv_outputs(&out, p, &slots, layer);
+            let mut partial = out.primary;
+            self.all_reduce(p, &mut partial)?; // sync #1 (post-attention)
+            for (xi, pi) in x.iter_mut().zip(&partial) {
+                *xi += *pi;
+            }
+
+            let dyns = DynInputs::new()
+                .f32("x", x.clone())
+                .i32("rank", vec![rank_in_group as i32]);
+            let (exe, spec) = self.exe(&format!("ffn_decode_tp{p}"))?;
+            let out =
+                self.rt
+                    .execute(exe, spec, &self.bufs, &dyns, layer, &self.k_pools, &self.v_pools)?;
+            let mut partial = out.primary;
+            self.all_reduce(p, &mut partial)?; // sync #2 (post-FFN)
+            for (xi, pi) in x.iter_mut().zip(&partial) {
+                *xi += *pi;
+            }
+        }
+
+        let dyns = DynInputs::new().f32("x", x);
+        let (exe, spec) = self.exe("lmhead_dec")?;
+        let out = self
+            .rt
+            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+        let v = cfg.vocab;
+        Ok(batch
+            .iter()
+            .enumerate()
+            .map(|(i, _)| out.primary[i * v..(i + 1) * v].to_vec())
+            .collect())
+    }
+
+    /// One TP prefill chunk for this rank.  Returns last-token logits.
+    pub fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
+        let c = self.shapes.c_prefill;
+        let nv = chunk.tokens.len();
+        anyhow::ensure!(nv >= 1 && nv <= c, "chunk size {nv}");
+        let cfg = self.cfg().clone();
+        let bt = cfg.block_tokens(p);
+        let mut tokens = vec![0i32; c];
+        tokens[..nv].copy_from_slice(&chunk.tokens);
+        let mut positions = vec![0i32; c];
+        let mut slots: Vec<u32> = (0..c).map(|i| (i % bt) as u32).collect();
+        for i in 0..nv {
+            positions[i] = (chunk.start + i) as i32;
+            slots[i] = chunk.slot_ids[i];
+        }
+        let mut x = self.ws.embed(&tokens)?;
+        let rank_in_group = self.id % p;
+
+        for layer in 0..cfg.n_layers {
+            let dyns = DynInputs::new()
+                .f32("x", x.clone())
+                .i32("block_table", chunk.table_row.clone())
+                .i32("slot_ids", slots.iter().map(|&s| s as i32).collect())
+                .i32("positions", positions.clone())
+                .i32("start", vec![chunk.start as i32])
+                .i32("seq_len", vec![(chunk.start + nv) as i32])
+                .i32("rank", vec![rank_in_group as i32]);
+            let (exe, spec) = self.exe(&format!("attn_prefill_tp{p}"))?;
+            let out =
+                self.rt
+                    .execute(exe, spec, &self.bufs, &dyns, layer, &self.k_pools, &self.v_pools)?;
+            self.apply_kv_outputs(&out, p, &slots, layer);
+            let mut partial = out.primary;
+            self.all_reduce(p, &mut partial)?;
+            for (xi, pi) in x.iter_mut().zip(&partial) {
+                *xi += *pi;
+            }
+
+            let dyns = DynInputs::new()
+                .f32("x", x.clone())
+                .i32("rank", vec![rank_in_group as i32]);
+            let (exe, spec) = self.exe(&format!("ffn_prefill_tp{p}"))?;
+            let out =
+                self.rt
+                    .execute(exe, spec, &self.bufs, &dyns, layer, &self.k_pools, &self.v_pools)?;
+            let mut partial = out.primary;
+            self.all_reduce(p, &mut partial)?;
+            for (xi, pi) in x.iter_mut().zip(&partial) {
+                *xi += *pi;
+            }
+        }
+
+        let dyns = DynInputs::new().f32("x", x);
+        let (exe, spec) = self.exe("lmhead_pre")?;
+        let out = self
+            .rt
+            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+        let v = cfg.vocab;
+        Ok(out.primary[(nv - 1) * v..nv * v].to_vec())
+    }
+}

@@ -1,0 +1,150 @@
+//! Engine workers: one OS thread per DP engine (the paper's per-GPU engine
+//! process), driven by the coordinator over mpsc channels (the control
+//! plane; paper uses Gloo pipes).
+//!
+//! `PjRtClient` is `!Send`, so the `EngineCore` — client, device buffers,
+//! compiled executables — is constructed *inside* the worker thread and
+//! never leaves it.  The channel protocol mirrors the paper's collective
+//! RPCs: `SetMode` ("set_TP_mode"/"reset_TP_mode") and step execution
+//! ("execute_model").
+
+pub mod core;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::comm::CommunicatorPool;
+use crate::model::WeightStore;
+use crate::runtime::Manifest;
+pub use core::{DecodeSlot, EngineCore, PrefillChunk};
+
+#[derive(Debug)]
+pub enum EngineCmd {
+    /// Algorithm-1 step 5: atomically configure the execution mode.
+    SetMode { p: usize },
+    /// One fused DP step (p must be 1).
+    DpDecode { batch: Vec<DecodeSlot> },
+    DpPrefill { chunk: PrefillChunk },
+    /// One TP shard step; all group members receive this at the same safe
+    /// point and meet in the communicator's collectives.
+    TpDecode { p: usize, batch: Vec<DecodeSlot> },
+    TpPrefill { p: usize, chunk: PrefillChunk },
+    Stop,
+}
+
+#[derive(Debug)]
+pub enum EngineReply {
+    Ok,
+    /// Per-slot logits rows (decode).
+    Logits(Vec<Vec<f32>>),
+    /// Last-token logits (prefill chunk).
+    LastLogits(Vec<f32>),
+    Err(String),
+}
+
+pub struct EngineHandle {
+    pub id: usize,
+    tx: Sender<(EngineCmd, Sender<EngineReply>)>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Spawn the worker thread; blocks until the engine finished compiling
+    /// its artifacts (eager init, so mode switches never compile anything).
+    pub fn spawn(
+        id: usize,
+        manifest: Arc<Manifest>,
+        model: String,
+        ws: Arc<WeightStore>,
+        comm: Arc<CommunicatorPool>,
+    ) -> Result<Self> {
+        let (tx, rx): (Sender<(EngineCmd, Sender<EngineReply>)>, Receiver<_>) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name(format!("engine-{id}"))
+            .spawn(move || {
+                let mut core = match EngineCore::new(id, &manifest, &model, ws, comm) {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok((cmd, reply)) = rx.recv() {
+                    let resp = match cmd {
+                        EngineCmd::SetMode { p } => match core.set_mode(p) {
+                            Ok(()) => EngineReply::Ok,
+                            Err(e) => EngineReply::Err(format!("{e:#}")),
+                        },
+                        EngineCmd::DpDecode { batch } => match core.dp_decode(&batch) {
+                            Ok(l) => EngineReply::Logits(l),
+                            Err(e) => EngineReply::Err(format!("{e:#}")),
+                        },
+                        EngineCmd::DpPrefill { chunk } => match core.dp_prefill(&chunk) {
+                            Ok(l) => EngineReply::LastLogits(l),
+                            Err(e) => EngineReply::Err(format!("{e:#}")),
+                        },
+                        EngineCmd::TpDecode { p, batch } => match core.tp_decode(p, &batch) {
+                            Ok(l) => EngineReply::Logits(l),
+                            Err(e) => EngineReply::Err(format!("{e:#}")),
+                        },
+                        EngineCmd::TpPrefill { p, chunk } => match core.tp_prefill(p, &chunk) {
+                            Ok(l) => EngineReply::LastLogits(l),
+                            Err(e) => EngineReply::Err(format!("{e:#}")),
+                        },
+                        EngineCmd::Stop => {
+                            let _ = reply.send(EngineReply::Ok);
+                            break;
+                        }
+                    };
+                    let _ = reply.send(resp);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine {id} thread died during init"))?
+            .map_err(|e| anyhow::anyhow!("engine {id} init failed: {e}"))?;
+        Ok(EngineHandle { id, tx, join: Some(join) })
+    }
+
+    /// Fire a command without waiting (returns the reply receiver).  Used to
+    /// launch a whole TP group concurrently so members can meet in the
+    /// collectives.
+    pub fn send(&self, cmd: EngineCmd) -> Receiver<EngineReply> {
+        let (rtx, rrx) = channel();
+        // A send failure means the worker died; the recv below surfaces it.
+        let _ = self.tx.send((cmd, rtx));
+        rrx
+    }
+
+    /// Synchronous call.
+    pub fn call(&self, cmd: EngineCmd) -> Result<EngineReply> {
+        let rx = self.send(cmd);
+        match rx.recv() {
+            Ok(EngineReply::Err(e)) => anyhow::bail!("engine {}: {e}", self.id),
+            Ok(r) => Ok(r),
+            Err(_) => anyhow::bail!("engine {} died", self.id),
+        }
+    }
+
+    pub fn stop(&mut self) {
+        let _ = self.call(EngineCmd::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            self.stop();
+        }
+    }
+}

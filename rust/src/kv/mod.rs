@@ -1,0 +1,471 @@
+//! KV Cache Adaptor (paper §4.2): a single physical block pool whose blocks
+//! never move or resize, plus a logical table that re-interprets block
+//! *token capacity* per parallelism mode:
+//!
+//!   M_block = B * D_local * P_size  is held constant          (Eq. 2)
+//!   B(p)    = p * B_base                                      (Eq. 3)
+//!
+//! Mode transitions are therefore constant-time metadata updates; KV bytes
+//! are never migrated.  Requests carry a *layout tag* (the TP degree their
+//! KV was written under), which is what lets DP-layout and TP-layout blocks
+//! coexist in one pool — the enabler for Hard Preempt (§5.2.3).
+//!
+//! The adaptor manages metadata only; the actual pool contents live in
+//! device-resident PJRT buffers owned by the engines.  `slot()` is the
+//! "stride and capacity" information the worker hands the attention kernel
+//! (§4.2.3) — here surfaced as flat slot ids and padded block-table rows.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelCfg;
+
+/// Reserved physical block: padded batch slots write their (masked) tokens
+/// here so kernels need no conditionals.  Never allocated to a request.
+pub const TRASH_BLOCK: u32 = 0;
+
+#[derive(Clone, Debug)]
+pub struct RequestKv {
+    pub layout_p: usize,  // TP degree the KV bytes were written under
+    pub blocks: Vec<u32>, // physical block ids, logical order
+    pub seq_len: usize,   // tokens currently cached
+    pub paused: bool,     // hard-preempted (KV stays resident)
+}
+
+/// Pool + logical-table state for one engine (DP mode) or one TP group
+/// (members share identical block ids; each stores its own head slice, so
+/// one adaptor instance describes all of them).
+pub struct KvCacheAdaptor {
+    cfg: ModelCfg,
+    free: Vec<u32>, // LIFO free list of physical block ids
+    requests: std::collections::BTreeMap<u64, RequestKv>,
+}
+
+impl KvCacheAdaptor {
+    pub fn new(cfg: ModelCfg) -> Self {
+        // Block 0 reserved; free list LIFO over the rest.
+        let free = (1..cfg.n_blocks as u32).rev().collect();
+        KvCacheAdaptor {
+            cfg,
+            free,
+            requests: Default::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        (self.cfg.n_blocks - 1) - self.free.len()
+    }
+
+    pub fn request(&self, rid: u64) -> Option<&RequestKv> {
+        self.requests.get(&rid)
+    }
+
+    pub fn active_requests(&self) -> impl Iterator<Item = (&u64, &RequestKv)> {
+        self.requests.iter()
+    }
+
+    /// Register a request under layout `p` (no blocks yet).
+    pub fn register(&mut self, rid: u64, p: usize) -> Result<()> {
+        if !self.cfg.supports_tp(p) {
+            bail!("unsupported TP degree {p}");
+        }
+        if self.requests.contains_key(&rid) {
+            bail!("request {rid} already registered");
+        }
+        self.requests.insert(
+            rid,
+            RequestKv {
+                layout_p: p,
+                blocks: Vec::new(),
+                seq_len: 0,
+                paused: false,
+            },
+        );
+        Ok(())
+    }
+
+    /// Grow `rid`'s block list so it can hold `n_tokens` under its layout.
+    /// Fails (leaving state unchanged) if the pool can't supply the blocks —
+    /// the scheduler's OOM signal for Use Case 3 routing.
+    pub fn ensure_capacity(&mut self, rid: u64, n_tokens: usize) -> Result<()> {
+        let req = match self.requests.get(&rid) {
+            Some(r) => r,
+            None => bail!("request {rid} not registered"),
+        };
+        let bt = self.cfg.block_tokens(req.layout_p);
+        let need = n_tokens.div_ceil(bt);
+        if need > self.cfg.n_blocks - 1 {
+            bail!(
+                "request {rid} needs {need} blocks > pool capacity {} (max ctx at p={} is {})",
+                self.cfg.n_blocks - 1,
+                req.layout_p,
+                self.cfg.tp_token_capacity(req.layout_p)
+            );
+        }
+        let have = req.blocks.len();
+        if need > have {
+            let short = need - have;
+            if short > self.free.len() {
+                bail!(
+                    "kv pool exhausted: request {rid} short {short} blocks, {} free",
+                    self.free.len()
+                );
+            }
+            let req = self.requests.get_mut(&rid).unwrap();
+            for _ in 0..short {
+                req.blocks.push(self.free.pop().unwrap());
+            }
+        }
+        Ok(())
+    }
+
+    /// Record that `rid` now caches `seq_len` tokens (post-append).
+    pub fn set_seq_len(&mut self, rid: u64, seq_len: usize) -> Result<()> {
+        let req = self
+            .requests
+            .get_mut(&rid)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        let bt = self.cfg.block_tokens(req.layout_p);
+        if seq_len.div_ceil(bt) > req.blocks.len() {
+            bail!("seq_len {seq_len} exceeds allocated capacity");
+        }
+        req.seq_len = seq_len;
+        Ok(())
+    }
+
+    /// Flat slot id for token position `pos` of `rid` — the kernel-facing
+    /// "stride and capacity" mapping (§4.2.3).
+    pub fn slot(&self, rid: u64, pos: usize) -> Result<u32> {
+        let req = self
+            .requests
+            .get(&rid)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        let bt = self.cfg.block_tokens(req.layout_p);
+        let blk = *req
+            .blocks
+            .get(pos / bt)
+            .ok_or_else(|| anyhow::anyhow!("position {pos} beyond allocated blocks"))?;
+        Ok(blk * bt as u32 + (pos % bt) as u32)
+    }
+
+    /// Block-table row padded to the static artifact width (n_blocks).
+    pub fn table_row(&self, rid: u64) -> Result<Vec<i32>> {
+        let req = self
+            .requests
+            .get(&rid)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        let mut row = vec![TRASH_BLOCK as i32; self.cfg.n_blocks];
+        for (i, &b) in req.blocks.iter().enumerate() {
+            row[i] = b as i32;
+        }
+        Ok(row)
+    }
+
+    /// Hard Preempt: pause a request in place.  Its blocks stay resident
+    /// under their original layout tag; O(1), no data movement (§5.2.3).
+    pub fn pause(&mut self, rid: u64) -> Result<()> {
+        self.requests
+            .get_mut(&rid)
+            .map(|r| r.paused = true)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+    }
+
+    pub fn resume(&mut self, rid: u64) -> Result<()> {
+        self.requests
+            .get_mut(&rid)
+            .map(|r| r.paused = false)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+    }
+
+    /// Soft Preempt bind: the request's speculative DP-layout KV is
+    /// incompatible with the target TP layout; drop its blocks and re-tag so
+    /// prefill re-runs under the new layout (§5.2.2).  Returns the number of
+    /// tokens that must be recomputed.
+    pub fn relayout_for_recompute(&mut self, rid: u64, new_p: usize) -> Result<usize> {
+        if !self.cfg.supports_tp(new_p) {
+            bail!("unsupported TP degree {new_p}");
+        }
+        let req = self
+            .requests
+            .get_mut(&rid)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        let recompute = req.seq_len;
+        let blocks = std::mem::take(&mut req.blocks);
+        req.seq_len = 0;
+        req.layout_p = new_p;
+        self.free.extend(blocks.into_iter().rev());
+        Ok(recompute)
+    }
+
+    /// Finish/abort a request: return its blocks to the pool.
+    pub fn release(&mut self, rid: u64) -> Result<()> {
+        let req = self
+            .requests
+            .remove(&rid)
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        self.free.extend(req.blocks.into_iter().rev());
+        Ok(())
+    }
+
+    /// The mode-switch primitive measured in Table 2: binding/releasing a
+    /// TP group changes no adaptor state at all — existing requests keep
+    /// their layout tags, new requests are registered under the new degree.
+    /// This method exists to document (and let benches measure) that the
+    /// switch cost is O(1) metadata.
+    pub fn switch_mode_metadata_cost(&self) -> usize {
+        0 // no per-block work: the pool and ids are layout-invariant
+    }
+
+    /// Sanity invariant (checked in tests): every block is either free or
+    /// owned by exactly one request, and block 0 is owned by nobody.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![0u8; self.cfg.n_blocks];
+        seen[TRASH_BLOCK as usize] = 1;
+        for &b in &self.free {
+            if b == TRASH_BLOCK {
+                bail!("trash block on free list");
+            }
+            if seen[b as usize] != 0 {
+                bail!("block {b} double-tracked (free list)");
+            }
+            seen[b as usize] = 1;
+        }
+        for (rid, req) in &self.requests {
+            let bt = self.cfg.block_tokens(req.layout_p);
+            if req.seq_len > req.blocks.len() * bt {
+                bail!("request {rid} seq_len beyond capacity");
+            }
+            for &b in &req.blocks {
+                if b == TRASH_BLOCK {
+                    bail!("request {rid} owns trash block");
+                }
+                if seen[b as usize] != 0 {
+                    bail!("block {b} double-owned (request {rid})");
+                }
+                seen[b as usize] = 1;
+            }
+        }
+        if seen.iter().any(|&s| s == 0) {
+            bail!("leaked block (neither free nor owned)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 8,
+            ffn_hidden: 48,
+            n_experts: 0,
+            top_k: 0,
+            n_blocks: 16,
+            block_base: 4,
+            max_ctx: 256,
+            vocab: 258,
+            pool_elems: 16 * 4 * 4 * 8,
+        }
+    }
+
+    #[test]
+    fn slot_mapping_dp() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 9).unwrap(); // 3 blocks of 4 tokens
+        let blocks = a.request(1).unwrap().blocks.clone();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(a.slot(1, 0).unwrap(), blocks[0] * 4);
+        assert_eq!(a.slot(1, 5).unwrap(), blocks[1] * 4 + 1);
+        assert_eq!(a.slot(1, 8).unwrap(), blocks[2] * 4);
+        assert!(a.slot(1, 12).is_err());
+    }
+
+    #[test]
+    fn slot_mapping_respects_layout() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 2).unwrap(); // B(2) = 8 tokens per block
+        a.ensure_capacity(1, 9).unwrap();
+        assert_eq!(a.request(1).unwrap().blocks.len(), 2);
+        let b = a.request(1).unwrap().blocks.clone();
+        assert_eq!(a.slot(1, 7).unwrap(), b[0] * 8 + 7);
+        assert_eq!(a.slot(1, 8).unwrap(), b[1] * 8);
+    }
+
+    #[test]
+    fn oom_is_clean_and_state_preserving() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        // 15 usable blocks * 4 tokens = 60 tokens max.
+        assert!(a.ensure_capacity(1, 60).is_ok());
+        assert_eq!(a.free_blocks(), 0);
+        a.register(2, 1).unwrap();
+        assert!(a.ensure_capacity(2, 1).is_err());
+        a.check_invariants().unwrap();
+        a.release(1).unwrap();
+        assert!(a.ensure_capacity(2, 1).is_ok());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_grows_with_layout_tp4() {
+        let c = cfg();
+        let mut a = KvCacheAdaptor::new(c.clone());
+        a.register(1, 4).unwrap();
+        // Under 4TP one request can cache 15 * 16 = 240 tokens.
+        assert!(a.ensure_capacity(1, c.tp_token_capacity(4)).is_ok());
+        assert!(a.ensure_capacity(1, c.tp_token_capacity(4) + 1).is_err());
+    }
+
+    #[test]
+    fn hard_preempt_pause_keeps_blocks() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 10).unwrap();
+        a.set_seq_len(1, 10).unwrap();
+        let before = a.request(1).unwrap().blocks.clone();
+        a.pause(1).unwrap();
+        // A TP request arrives and allocates from the same pool.
+        a.register(2, 2).unwrap();
+        a.ensure_capacity(2, 20).unwrap();
+        assert_eq!(a.request(1).unwrap().blocks, before);
+        assert_eq!(a.request(1).unwrap().seq_len, 10);
+        a.resume(1).unwrap();
+        assert!(!a.request(1).unwrap().paused);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn soft_preempt_relayout_frees_and_retags() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 12).unwrap();
+        a.set_seq_len(1, 12).unwrap();
+        let free_before = a.free_blocks();
+        let recompute = a.relayout_for_recompute(1, 4).unwrap();
+        assert_eq!(recompute, 12);
+        assert_eq!(a.request(1).unwrap().layout_p, 4);
+        assert_eq!(a.request(1).unwrap().seq_len, 0);
+        assert_eq!(a.free_blocks(), free_before + 3);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn table_row_pads_with_trash() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 5).unwrap();
+        let row = a.table_row(1).unwrap();
+        assert_eq!(row.len(), cfg().n_blocks);
+        assert!(row[2..].iter().all(|&b| b == TRASH_BLOCK as i32));
+        assert!(row[0] != TRASH_BLOCK as i32 && row[1] != TRASH_BLOCK as i32);
+    }
+
+    #[test]
+    fn mode_switch_is_metadata_only() {
+        let a = KvCacheAdaptor::new(cfg());
+        assert_eq!(a.switch_mode_metadata_cost(), 0);
+    }
+
+    #[test]
+    fn prop_pool_never_double_allocates() {
+        prop_check("kv pool exclusive ownership", 150, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_rid = 0u64;
+            for _ in 0..g.usize(1, 60) {
+                match g.usize(0, 3) {
+                    0 => {
+                        let p = *g.choose(&[1usize, 2, 4]);
+                        next_rid += 1;
+                        a.register(next_rid, p).map_err(|e| e.to_string())?;
+                        live.push(next_rid);
+                    }
+                    1 if !live.is_empty() => {
+                        let rid = *g.choose(&live);
+                        let want = g.usize(0, 80);
+                        let _ = a.ensure_capacity(rid, want); // OOM allowed
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.raw_usize(0, live.len() - 1);
+                        let rid = live.swap_remove(i);
+                        a.release(rid).map_err(|e| e.to_string())?;
+                    }
+                    3 if !live.is_empty() => {
+                        let rid = *g.choose(&live);
+                        let p = *g.choose(&[1usize, 2, 4]);
+                        let _ = a.relayout_for_recompute(rid, p);
+                    }
+                    _ => {}
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_slots_unique_within_request() {
+        prop_check("slots unique per (rid,pos)", 60, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            let p = *g.choose(&[1usize, 2, 4]);
+            a.register(1, p).map_err(|e| e.to_string())?;
+            let n = g.usize(1, c.tp_token_capacity(p).min(100));
+            a.ensure_capacity(1, n).map_err(|e| e.to_string())?;
+            let mut seen = std::collections::BTreeSet::new();
+            for pos in 0..n {
+                let s = a.slot(1, pos).map_err(|e| e.to_string())?;
+                crate::prop_assert!(seen.insert(s), "slot {s} repeated at pos {pos}");
+                // Slot must lie inside the pool and outside the trash block.
+                let bt = c.block_tokens(p) as u32;
+                crate::prop_assert!(s >= bt, "slot {s} inside trash block");
+                crate::prop_assert!(
+                    (s as usize) < c.n_blocks * c.block_tokens(p),
+                    "slot {s} out of pool"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mixed_layouts_disjoint_physical_ranges() {
+        // DP- and TP-layout requests in one pool must map to disjoint
+        // physical byte ranges (Hard Preempt coexistence).
+        prop_check("mixed layouts disjoint", 60, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            a.register(1, 1).map_err(|e| e.to_string())?;
+            a.register(2, *g.choose(&[2usize, 4])).map_err(|e| e.to_string())?;
+            let n1 = g.usize(1, 20);
+            let n2 = g.usize(1, 20);
+            a.ensure_capacity(1, n1).map_err(|e| e.to_string())?;
+            a.ensure_capacity(2, n2).map_err(|e| e.to_string())?;
+            // Physical range of a block is the same regardless of layout
+            // (Eq. 2), so block-id disjointness == byte disjointness.
+            let b1: std::collections::BTreeSet<u32> =
+                a.request(1).unwrap().blocks.iter().copied().collect();
+            let b2: std::collections::BTreeSet<u32> =
+                a.request(2).unwrap().blocks.iter().copied().collect();
+            crate::prop_assert!(b1.is_disjoint(&b2), "block overlap");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,35 @@
+//! # FLYING SERVING — on-the-fly DP↔TP parallelism switching for LLM serving
+//!
+//! Reproduction of "FLYING SERVING: On-the-Fly Parallelism Switching for
+//! Large Language Model Serving" (Gao et al., CS.DC 2026) as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the coordinator: global task pool, Algorithm-1
+//!   dynamic scheduler with Sequential / Soft-Preempt / Hard-Preempt
+//!   switching, the KV Cache Adaptor, the Communicator Pool, engine workers
+//!   over PJRT, a TCP serving frontend, a discrete-event cluster simulator,
+//!   and the static-DP / static-TP / Shift-Parallelism baselines.
+//! * **L2** — `python/compile/model.py`: rank-parameterized sharded
+//!   transformer forward, AOT-lowered to HLO text per (model, phase, TP).
+//! * **L1** — `python/compile/kernels/`: Pallas paged-attention decode and
+//!   shard-view matmul (the zero-copy Model Weights Manager at kernel
+//!   level), verified against a pure-jnp oracle.
+//!
+//! Python never runs at serving time: `make artifacts` emits
+//! `artifacts/*.hlo.txt` + weights + manifest once, and the Rust binary is
+//! self-contained afterwards.
+
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod json;
+pub mod kv;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,161 @@
+//! FLYING SERVING launcher.
+//!
+//! Subcommands:
+//!   serve   — boot the engine cluster and serve the TCP line-JSON protocol
+//!   replay  — generate a synthetic trace (§6.1.3) and replay it on the
+//!             real cluster, printing the paper's metrics
+//!   sim     — run the 8×H200 discrete-event comparison (all systems)
+//!   info    — print manifest/model inventory
+//!
+//! Common flags: --artifacts DIR --model NAME --engines N
+//!               --policy flying|static-dp|static-tp --static-tp P
+//!               --strategy sequential|soft|hard --seed S --requests N
+//!               --listen ADDR --verbose
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use flying_serving::config::{parse_args, ServeConfig};
+use flying_serving::coordinator::Cluster;
+use flying_serving::runtime::Manifest;
+use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
+use flying_serving::workload::{generate, synth_prompt_tokens, WorkloadCfg};
+use flying_serving::{info, util};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_args(&args)?;
+    let cfg = ServeConfig::from_flags(&flags)?;
+    if cfg.verbose {
+        util::set_log_level(3);
+    }
+    match pos.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&cfg),
+        Some("replay") => replay(&cfg),
+        Some("sim") => sim(&cfg),
+        Some("info") => print_info(&cfg),
+        other => {
+            bail!(
+                "usage: flying-serving <serve|replay|sim|info> [flags]\n  (got {:?})",
+                other
+            )
+        }
+    }
+}
+
+fn serve(cfg: &ServeConfig) -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+    let mut cluster = Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    let mut policy = cfg.make_policy()?;
+    flying_serving::server::serve(&mut cluster, policy.as_mut(), cfg.strategy, &cfg.listen)
+}
+
+fn replay(cfg: &ServeConfig) -> Result<()> {
+    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+    let mut cluster = Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    let mut policy = cfg.make_policy()?;
+
+    let wl = WorkloadCfg::paper_scaled(cfg.seed, cfg.n_requests);
+    let trace = generate(&wl);
+    let serve_trace = trace
+        .iter()
+        .map(|r| flying_serving::coordinator::ServeRequest {
+            id: r.id,
+            prompt: synth_prompt_tokens(r.id, r.prompt_len.min(400)),
+            max_new: r.output_len.min(32),
+            priority: r.priority,
+            tp_demand: r.tp_demand,
+            arrival: r.arrival * 0.2, // compress the trace for the testbed
+        })
+        .collect();
+
+    info!("replaying {} requests on {} engines", cfg.n_requests, cfg.n_engines);
+    let out = cluster.run_trace(serve_trace, policy.as_mut(), cfg.strategy)?;
+    cluster.shutdown();
+
+    let s = out.recorder.summary(None);
+    println!("policy={} strategy={}", cfg.policy, cfg.strategy.name());
+    println!(
+        "requests={} finished={} rejected={} switches={}",
+        s.n,
+        s.finished,
+        out.rejected.len(),
+        out.switches.len()
+    );
+    println!(
+        "TTFT mean={:.1}ms p90={:.1}ms | TPOT p50={:.1}ms | queue p90={:.1}ms | peak={:.0} tok/s",
+        s.mean_ttft * 1e3,
+        s.p90_ttft * 1e3,
+        s.p50_tpot * 1e3,
+        s.p90_queue * 1e3,
+        s.peak_throughput
+    );
+    Ok(())
+}
+
+fn sim(cfg: &ServeConfig) -> Result<()> {
+    let models = [
+        PaperModel::llama70b(),
+        PaperModel::gptoss120b(),
+        PaperModel::nemotron8b(),
+    ];
+    for model in models {
+        println!("== {} ==", model.name);
+        let cm = CostModel::new(HwSpec::default(), model);
+        let trace = generate(&WorkloadCfg::paper_full(cfg.seed, cfg.n_requests.max(500)));
+        for sys in [
+            SimSystem::StaticDp,
+            SimSystem::StaticTp(4),
+            SimSystem::Shift,
+            SimSystem::Flying,
+        ] {
+            let o = simulate(sys, &cm, &trace, &SimConfig::default());
+            let s = o.recorder.summary(None);
+            println!(
+                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s rejected={}",
+                sys.label(),
+                s.mean_ttft,
+                s.p90_ttft,
+                s.p50_tpot * 1e3,
+                s.peak_throughput,
+                o.rejected.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_info(cfg: &ServeConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    println!(
+        "artifacts: {} (b_dec={}, c_prefill={}, tp={:?})",
+        cfg.artifacts_dir.display(),
+        manifest.shapes.b_dec,
+        manifest.shapes.c_prefill,
+        manifest.tp_degrees
+    );
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: d={} L={} heads={}/{} ffn={} experts={} blocks={}x{} max_ctx={} ({} artifacts)",
+            m.cfg.d_model,
+            m.cfg.n_layers,
+            m.cfg.n_heads,
+            m.cfg.n_kv_heads,
+            m.cfg.ffn_hidden,
+            m.cfg.n_experts,
+            m.cfg.n_blocks,
+            m.cfg.block_base,
+            m.cfg.max_ctx,
+            m.artifacts.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,331 @@
+//! Serving metrics (paper §6.1.4): TTFT, TPOT, ILT, queue time, generation
+//! throughput, plus the time-series views behind the Fig-8-style plots.
+//!
+//! One `Recorder` instance collects per-request event timestamps from either
+//! the real coordinator or the discrete-event simulator (both report in
+//! seconds on their own clock), and derives every metric the paper reports.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{Percentiles, TimeSeries};
+use crate::workload::Priority;
+
+#[derive(Clone, Debug, Default)]
+pub struct ReqRecord {
+    pub arrival: f64,
+    pub first_sched: Option<f64>, // first time the scheduler placed it
+    pub token_times: Vec<f64>,    // emission time of each output token
+    pub finished: Option<f64>,
+    pub priority: Priority,
+    pub prompt_len: usize,
+}
+
+impl ReqRecord {
+    /// Time To First Token: arrival -> first output token (queuing+prefill).
+    pub fn ttft(&self) -> Option<f64> {
+        self.token_times.first().map(|t| t - self.arrival)
+    }
+
+    /// Queue time: admission -> first scheduling (§6.1.4 iv).
+    pub fn queue_time(&self) -> Option<f64> {
+        self.first_sched.map(|t| t - self.arrival)
+    }
+
+    /// Time Per Output Token: mean inter-token interval after the first.
+    pub fn tpot(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let n = self.token_times.len() - 1;
+        Some((self.token_times[n] - self.token_times[0]) / n as f64)
+    }
+
+    /// Inter-Token Latency samples (consecutive gaps) — Fig 10 uses ILT
+    /// because TPOT folds in queueing/batching effects.
+    pub fn ilt_samples(&self) -> impl Iterator<Item = f64> + '_ {
+        self.token_times.windows(2).map(|w| w[1] - w[0])
+    }
+}
+
+#[derive(Default)]
+pub struct Recorder {
+    reqs: BTreeMap<u64, ReqRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, rid: u64, t: f64, priority: Priority, prompt_len: usize) {
+        let e = self.reqs.entry(rid).or_default();
+        e.arrival = t;
+        e.priority = priority;
+        e.prompt_len = prompt_len;
+    }
+
+    pub fn on_first_sched(&mut self, rid: u64, t: f64) {
+        let e = self.reqs.entry(rid).or_default();
+        if e.first_sched.is_none() {
+            e.first_sched = Some(t);
+        }
+    }
+
+    pub fn on_token(&mut self, rid: u64, t: f64) {
+        self.reqs.entry(rid).or_default().token_times.push(t);
+    }
+
+    pub fn on_finish(&mut self, rid: u64, t: f64) {
+        self.reqs.entry(rid).or_default().finished = Some(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    pub fn get(&self, rid: u64) -> Option<&ReqRecord> {
+        self.reqs.get(&rid)
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = (&u64, &ReqRecord)> {
+        self.reqs.iter()
+    }
+
+    // ---- summaries -------------------------------------------------------
+
+    fn filtered<'a>(
+        &'a self,
+        pri: Option<Priority>,
+    ) -> impl Iterator<Item = &'a ReqRecord> + 'a {
+        self.reqs
+            .values()
+            .filter(move |r| pri.map_or(true, |p| r.priority == p))
+    }
+
+    pub fn summary(&self, pri: Option<Priority>) -> Summary {
+        let mut ttft = Percentiles::new();
+        let mut tpot = Percentiles::new();
+        let mut queue = Percentiles::new();
+        let mut ilt = Percentiles::new();
+        let mut finished = 0usize;
+        for r in self.filtered(pri) {
+            if let Some(x) = r.ttft() {
+                ttft.add(x);
+            }
+            if let Some(x) = r.tpot() {
+                tpot.add(x);
+            }
+            if let Some(x) = r.queue_time() {
+                queue.add(x);
+            }
+            for x in r.ilt_samples() {
+                ilt.add(x);
+            }
+            if r.finished.is_some() {
+                finished += 1;
+            }
+        }
+        Summary {
+            n: self.filtered(pri).count(),
+            finished,
+            mean_ttft: ttft.mean(),
+            p50_ttft: ttft.p50(),
+            p90_ttft: ttft.p90(),
+            mean_tpot: tpot.mean(),
+            p50_tpot: tpot.p50(),
+            mean_queue: queue.mean(),
+            p90_queue: queue.p90(),
+            mean_ilt: ilt.mean(),
+            peak_throughput: self.peak_throughput(1.0),
+        }
+    }
+
+    /// Peak generation throughput: max output tokens/s over fixed windows.
+    pub fn peak_throughput(&self, window: f64) -> f64 {
+        let mut ts = TimeSeries::new(window);
+        for r in self.reqs.values() {
+            for &t in &r.token_times {
+                ts.add(t, 1.0);
+            }
+        }
+        ts.counts()
+            .into_iter()
+            .map(|(_, c)| if c.is_nan() { 0.0 } else { c / window })
+            .fold(0.0, f64::max)
+    }
+
+    /// Total mean generation throughput over the busy span.
+    pub fn mean_throughput(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut n = 0usize;
+        for r in self.reqs.values() {
+            for &t in &r.token_times {
+                lo = lo.min(t);
+                hi = hi.max(t);
+                n += 1;
+            }
+        }
+        if n == 0 || hi <= lo {
+            return 0.0;
+        }
+        n as f64 / (hi - lo)
+    }
+
+    // ---- time series (Fig 8) ----------------------------------------------
+
+    /// In-flight concurrency sampled at `interval`.
+    pub fn concurrency_series(&self, interval: f64) -> Vec<(f64, f64)> {
+        let mut events: Vec<(f64, f64)> = Vec::new();
+        for r in self.reqs.values() {
+            let end = r
+                .finished
+                .or_else(|| r.token_times.last().copied())
+                .unwrap_or(r.arrival);
+            events.push((r.arrival, 1.0));
+            events.push((end, -1.0));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let t_end = events.last().map(|e| e.0).unwrap_or(0.0);
+        let mut out = Vec::new();
+        let mut level = 0.0;
+        let mut i = 0;
+        let mut t = 0.0;
+        while t <= t_end {
+            while i < events.len() && events[i].0 <= t {
+                level += events[i].1;
+                i += 1;
+            }
+            out.push((t, level));
+            t += interval;
+        }
+        out
+    }
+
+    /// P90 TTFT bucketed by arrival time.
+    pub fn ttft_p90_series(&self, interval: f64) -> Vec<(f64, f64)> {
+        let mut ts = TimeSeries::new(interval);
+        for r in self.reqs.values() {
+            if let Some(x) = r.ttft() {
+                ts.add(r.arrival, x);
+            }
+        }
+        ts.p90s()
+    }
+
+    /// Mean queue time bucketed by arrival time.
+    pub fn queue_series(&self, interval: f64) -> Vec<(f64, f64)> {
+        let mut ts = TimeSeries::new(interval);
+        for r in self.reqs.values() {
+            if let Some(x) = r.queue_time() {
+                ts.add(r.arrival, x);
+            }
+        }
+        ts.means()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub finished: usize,
+    pub mean_ttft: f64,
+    pub p50_ttft: f64,
+    pub p90_ttft: f64,
+    pub mean_tpot: f64,
+    pub p50_tpot: f64,
+    pub mean_queue: f64,
+    pub p90_queue: f64,
+    pub mean_ilt: f64,
+    pub peak_throughput: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec_with_one_request() -> Recorder {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 10.0, Priority::Normal, 100);
+        r.on_first_sched(1, 10.5);
+        for i in 0..5 {
+            r.on_token(1, 11.0 + i as f64 * 0.1);
+        }
+        r.on_finish(1, 11.4);
+        r
+    }
+
+    #[test]
+    fn derives_paper_metrics() {
+        let r = rec_with_one_request();
+        let rec = r.get(1).unwrap();
+        assert!((rec.ttft().unwrap() - 1.0).abs() < 1e-9);
+        assert!((rec.queue_time().unwrap() - 0.5).abs() < 1e-9);
+        assert!((rec.tpot().unwrap() - 0.1).abs() < 1e-9);
+        let ilts: Vec<f64> = rec.ilt_samples().collect();
+        assert_eq!(ilts.len(), 4);
+        assert!(ilts.iter().all(|x| (x - 0.1).abs() < 1e-9));
+    }
+
+    #[test]
+    fn first_sched_is_sticky() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0, Priority::Normal, 1);
+        r.on_first_sched(1, 2.0);
+        r.on_first_sched(1, 5.0);
+        assert_eq!(r.get(1).unwrap().queue_time(), Some(2.0));
+    }
+
+    #[test]
+    fn summary_counts_and_priorities() {
+        let mut r = rec_with_one_request();
+        r.on_arrival(2, 0.0, Priority::High, 10);
+        r.on_token(2, 0.4);
+        let all = r.summary(None);
+        assert_eq!(all.n, 2);
+        assert_eq!(all.finished, 1);
+        let hi = r.summary(Some(Priority::High));
+        assert_eq!(hi.n, 1);
+        assert!((hi.mean_ttft - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_throughput_window() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0, Priority::Normal, 1);
+        // 10 tokens in [0,1), 2 tokens in [1,2).
+        for i in 0..10 {
+            r.on_token(1, 0.05 * i as f64);
+        }
+        r.on_token(1, 1.2);
+        r.on_token(1, 1.3);
+        assert_eq!(r.peak_throughput(1.0), 10.0);
+        assert!(r.mean_throughput() > 0.0);
+    }
+
+    #[test]
+    fn concurrency_series_tracks_inflight() {
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0, Priority::Normal, 1);
+        r.on_finish(1, 2.0);
+        r.on_arrival(2, 1.0, Priority::Normal, 1);
+        r.on_finish(2, 3.0);
+        let s = r.concurrency_series(1.0);
+        assert_eq!(s[0].1, 1.0); // t=0: req1
+        assert_eq!(s[1].1, 2.0); // t=1: both
+        assert_eq!(s[2].1, 1.0); // t=2: req2 only
+    }
+
+    #[test]
+    fn empty_recorder_is_sane() {
+        let r = Recorder::new();
+        let s = r.summary(None);
+        assert_eq!(s.n, 0);
+        assert!(s.mean_ttft.is_nan());
+        assert_eq!(r.peak_throughput(1.0), 0.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Model description + weight store: the Rust mirror of
+//! `python/compile/configs.py`, loaded from `artifacts/manifest.json`, plus
+//! the Model Weights Manager's host-side state (weights loaded exactly once
+//! per engine; TP sharding never moves them — the shard *view* is activated
+//! inside the AOT kernels via the `rank` argument).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+
+/// Static serving shapes shared by all artifacts (mirrors configs.py).
+#[derive(Clone, Copy, Debug)]
+pub struct StaticShapes {
+    pub b_dec: usize,
+    pub c_prefill: usize,
+}
+
+/// Architecture description (mirror of python ModelCfg).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub ffn_hidden: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_blocks: usize,
+    pub block_base: usize,
+    pub max_ctx: usize,
+    pub vocab: usize,
+    pub pool_elems: usize,
+}
+
+impl ModelCfg {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelCfg {
+            name: v.str_field("name")?.to_string(),
+            d_model: v.usize_field("d_model")?,
+            n_layers: v.usize_field("n_layers")?,
+            n_heads: v.usize_field("n_heads")?,
+            n_kv_heads: v.usize_field("n_kv_heads")?,
+            d_head: v.usize_field("d_head")?,
+            ffn_hidden: v.usize_field("ffn_hidden")?,
+            n_experts: v.usize_field("n_experts")?,
+            top_k: v.usize_field("top_k")?,
+            n_blocks: v.usize_field("n_blocks")?,
+            block_base: v.usize_field("block_base")?,
+            max_ctx: v.usize_field("max_ctx")?,
+            vocab: v.usize_field("vocab")?,
+            pool_elems: v.usize_field("pool_elems")?,
+        })
+    }
+
+    /// Token capacity per block under TP degree p: B(p) = p * B_base
+    /// (paper Eq. 3).
+    pub fn block_tokens(&self, p: usize) -> usize {
+        p * self.block_base
+    }
+
+    /// Per-device KV width under degree p: D_local(p) (paper §4.2.1).
+    pub fn kv_width(&self, p: usize) -> usize {
+        (self.n_kv_heads / p) * self.d_head
+    }
+
+    /// Bytes of one physical KV block — invariant across modes (Eq. 2).
+    pub fn block_bytes(&self, p: usize) -> usize {
+        self.block_tokens(p) * self.kv_width(p) * 4
+    }
+
+    /// Max tokens a single request can cache on one DP engine.
+    pub fn dp_token_capacity(&self) -> usize {
+        // Block 0 is the reserved trash block.
+        (self.n_blocks - 1) * self.block_base
+    }
+
+    /// Max tokens for one request on a p-way TP group (Use Case 3).
+    pub fn tp_token_capacity(&self, p: usize) -> usize {
+        (self.n_blocks - 1) * self.block_tokens(p)
+    }
+
+    pub fn supports_tp(&self, p: usize) -> bool {
+        p > 0 && self.n_heads % p == 0 && self.n_kv_heads % p == 0
+    }
+}
+
+/// One tensor entry in the weights bin.
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+    pub n_elems: usize,
+}
+
+/// Host-resident weights for one model, loaded exactly once.  Engines share
+/// this immutably (`Arc<WeightStore>`); per-engine device buffers are
+/// uploaded from it at engine startup and never touched again — mode
+/// switches only change the `rank` scalar handed to the kernels.
+pub struct WeightStore {
+    pub cfg: ModelCfg,
+    pub entries: Vec<WeightEntry>,
+    data: Vec<f32>,
+    index: BTreeMap<String, usize>,
+}
+
+impl WeightStore {
+    pub fn load(cfg: ModelCfg, entries: Vec<WeightEntry>, bin_path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(bin_path)
+            .with_context(|| format!("reading weights bin {}", bin_path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights bin not a multiple of 4 bytes");
+        }
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let total: usize = entries.iter().map(|e| e.n_elems).sum();
+        if total != data.len() {
+            bail!("weights bin size {} != manifest total {}", data.len(), total);
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(WeightStore {
+            cfg,
+            entries,
+            data,
+            index,
+        })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&[f32]> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown weight tensor '{name}'"))?;
+        let e = &self.entries[i];
+        Ok(&self.data[e.offset_elems..e.offset_elems + e.n_elems])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown weight tensor '{name}'"))?;
+        Ok(&self.entries[i].shape)
+    }
+
+    /// Embedding-row gather — done host-side for the TP path (the fused DP
+    /// artifacts embed in-kernel).
+    pub fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let emb = self.tensor("emb")?;
+        let d = self.cfg.d_model;
+        let mut out = vec![0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.cfg.vocab {
+                bail!("token id {t} out of vocab {}", self.cfg.vocab);
+            }
+            out[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+        }
+        Ok(out)
+    }
+
+    pub fn total_param_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 8,
+            ffn_hidden: 48,
+            n_experts: 0,
+            top_k: 0,
+            n_blocks: 64,
+            block_base: 4,
+            max_ctx: 1024,
+            vocab: 258,
+            pool_elems: 64 * 4 * 4 * 8,
+        }
+    }
+
+    #[test]
+    fn block_bytes_invariant_across_modes() {
+        let c = test_cfg();
+        let b1 = c.block_bytes(1);
+        for p in [2, 4] {
+            assert_eq!(c.block_bytes(p), b1, "paper Eq. 2 violated at p={p}");
+        }
+    }
+
+    #[test]
+    fn capacity_scales_with_tp_degree() {
+        let c = test_cfg();
+        assert_eq!(c.tp_token_capacity(2), 2 * c.dp_token_capacity());
+        assert_eq!(c.tp_token_capacity(4), 4 * c.dp_token_capacity());
+    }
+
+    #[test]
+    fn supports_tp_respects_head_divisibility() {
+        let c = test_cfg();
+        assert!(c.supports_tp(1) && c.supports_tp(2) && c.supports_tp(4));
+        assert!(!c.supports_tp(3));
+        assert!(!c.supports_tp(8)); // only 4 kv heads
+        assert!(!c.supports_tp(0));
+    }
+
+    #[test]
+    fn weight_store_load_and_gather() {
+        let c = test_cfg();
+        let entries = vec![
+            WeightEntry {
+                name: "emb".into(),
+                shape: vec![c.vocab, c.d_model],
+                offset_elems: 0,
+                n_elems: c.vocab * c.d_model,
+            },
+            WeightEntry {
+                name: "final_norm".into(),
+                shape: vec![c.d_model],
+                offset_elems: c.vocab * c.d_model,
+                n_elems: c.d_model,
+            },
+        ];
+        let total = entries.iter().map(|e| e.n_elems).sum::<usize>();
+        let data: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let dir = std::env::temp_dir().join("fs_ws_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+
+        let ws = WeightStore::load(c.clone(), entries, &path).unwrap();
+        assert_eq!(ws.tensor("final_norm").unwrap()[0], (c.vocab * c.d_model) as f32);
+        let e = ws.embed(&[2, 0]).unwrap();
+        assert_eq!(e[0], (2 * c.d_model) as f32);
+        assert_eq!(e[c.d_model], 0.0);
+        assert!(ws.tensor("nope").is_err());
+        assert!(ws.embed(&[999]).is_err());
+    }
+}

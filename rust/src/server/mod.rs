@@ -1,0 +1,183 @@
+//! TCP line-JSON serving frontend — the ProcessInputSocket of Algorithm 1
+//! exposed over a real socket.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": "hello", "max_new": 16,
+//!       "priority": "high"?, "tp": 2?}
+//!   <- {"id": 1, "text": "...", "tokens": [..], "ttft_ms": 12.3,
+//!       "tpot_ms": 4.5}
+//!
+//! Prompts are byte-level tokenized (vocab = 256 bytes + BOS/EOS), matching
+//! the synthetic-weight models.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::policy::Policy;
+use crate::coordinator::strategy::Strategy;
+use crate::coordinator::{Cluster, ServeRequest};
+use crate::json::Value;
+use crate::workload::Priority;
+
+pub fn tokenize(s: &str) -> Vec<i32> {
+    s.bytes().map(|b| b as i32).collect()
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8 as char)
+        .collect()
+}
+
+pub fn parse_request(line: &str, fallback_id: u64) -> Result<ServeRequest> {
+    let v = Value::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let id = v.get("id").and_then(|x| x.as_f64()).map(|x| x as u64).unwrap_or(fallback_id);
+    let prompt = tokenize(v.str_field("prompt")?);
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    Ok(ServeRequest {
+        id,
+        prompt,
+        max_new: v.get("max_new").and_then(|x| x.as_usize()).unwrap_or(16),
+        priority: match v.get("priority").and_then(|x| x.as_str()) {
+            Some("high") => Priority::High,
+            _ => Priority::Normal,
+        },
+        tp_demand: v.get("tp").and_then(|x| x.as_usize()),
+        arrival: 0.0,
+    })
+}
+
+pub fn response_json(id: u64, tokens: &[i32], ttft_ms: f64, tpot_ms: f64) -> String {
+    Value::obj(vec![
+        ("id", Value::num(id as f64)),
+        ("text", Value::str(detokenize(tokens))),
+        (
+            "tokens",
+            Value::Arr(tokens.iter().map(|&t| Value::num(t as f64)).collect()),
+        ),
+        ("ttft_ms", Value::num(ttft_ms)),
+        ("tpot_ms", Value::num(tpot_ms)),
+    ])
+    .to_string()
+}
+
+/// Serve forever on `addr`.  Each connection may send multiple request
+/// lines; responses are written back in completion order.
+pub fn serve(
+    cluster: &mut Cluster,
+    policy: &mut dyn Policy,
+    strategy: Strategy,
+    addr: &str,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    crate::info!(
+        "serving on {addr} (policy={}, strategy={})",
+        policy.name(),
+        strategy.name()
+    );
+    let mut next_id = 1u64;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if let Err(e) = handle_conn(cluster, policy, strategy, stream, &mut next_id) {
+            crate::info!("connection error: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    cluster: &mut Cluster,
+    policy: &mut dyn Policy,
+    strategy: Strategy,
+    stream: TcpStream,
+    next_id: &mut u64,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse_request(line.trim(), *next_id) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(out, "{}", Value::obj(vec![("error", Value::str(format!("{e:#}")))]))?;
+                continue;
+            }
+        };
+        *next_id = req.id.max(*next_id) + 1;
+        let outcome = cluster.run_trace(vec![req.clone()], policy, strategy)?;
+        let rec = outcome.recorder.get(req.id);
+        let (ttft, tpot) = rec
+            .map(|r| {
+                (
+                    r.ttft().unwrap_or(f64::NAN) * 1e3,
+                    r.tpot().unwrap_or(f64::NAN) * 1e3,
+                )
+            })
+            .unwrap_or((f64::NAN, f64::NAN));
+        match outcome.outputs.get(&req.id) {
+            Some(tokens) => writeln!(out, "{}", response_json(req.id, tokens, ttft, tpot))?,
+            None => writeln!(
+                out,
+                "{}",
+                Value::obj(vec![
+                    ("id", Value::num(req.id as f64)),
+                    ("error", Value::str("rejected (capacity)")),
+                ])
+            )?,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "Hello, FLYING!";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn parse_request_full() {
+        let r = parse_request(
+            r#"{"id": 7, "prompt": "hi", "max_new": 3, "priority": "high", "tp": 4}"#,
+            0,
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![104, 105]);
+        assert_eq!(r.max_new, 3);
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.tp_demand, Some(4));
+    }
+
+    #[test]
+    fn parse_request_defaults_and_errors() {
+        let r = parse_request(r#"{"prompt": "x"}"#, 42).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(parse_request(r#"{"prompt": ""}"#, 0).is_err());
+        assert!(parse_request("not json", 0).is_err());
+    }
+
+    #[test]
+    fn response_is_valid_json() {
+        let s = response_json(3, &[104, 105], 1.5, 0.5);
+        let v = Value::parse(&s).unwrap();
+        assert_eq!(v.str_field("text").unwrap(), "hi");
+        assert_eq!(v.f64_field("ttft_ms").unwrap(), 1.5);
+    }
+}

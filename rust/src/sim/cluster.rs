@@ -1,0 +1,612 @@
+//! Discrete-event cluster simulator: an 8×H200 node serving paper-scale
+//! models under the four systems of §6 (static DP, static TP,
+//! Shift-Parallelism, FLYING SERVING), driven by the *same* `Policy`
+//! implementations as the real thread cluster.
+//!
+//! Virtual engines ("vengs") partition the node's serving instances; FLYING
+//! merges contiguous unit vengs into TP groups and splits them back, paying
+//! the paper's 15 ms live-switch cost, while static systems keep a fixed
+//! partition (and pay a cold restart if they must change it).  Every event
+//! lands in a `metrics::Recorder`, so the benches read the simulator with
+//! the same summaries/time-series as the real path.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
+use crate::metrics::Recorder;
+use crate::workload::Request;
+
+use super::costmodel::CostModel;
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Chunked-prefill chunk size (tokens).
+    pub chunk_tokens: usize,
+    /// Max decode batch per virtual engine.
+    pub max_batch: usize,
+    /// Scheduling-iteration quantum lower bound (control-plane heartbeat).
+    pub heartbeat_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            chunk_tokens: 2048,
+            max_batch: 48,
+            heartbeat_s: 0.004,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimSystem {
+    /// One instance per min-GPU slice, never merged.
+    StaticDp,
+    /// Fixed merge of `m` instances per group.
+    StaticTp(usize),
+    /// Shift-Parallelism (arXiv:2509.16495): one cluster-wide group that
+    /// flips between latency-optimal TP and throughput-oriented SP.
+    Shift,
+    /// FLYING SERVING with hard preempt.
+    Flying,
+    /// FLYING SERVING with sequential (non-preemptive) switching — the
+    /// ablation of §5.2.
+    FlyingSequential,
+}
+
+impl SimSystem {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimSystem::StaticDp => "static-dp",
+            SimSystem::StaticTp(_) => "static-tp",
+            SimSystem::Shift => "shift-parallelism",
+            SimSystem::Flying => "flying",
+            SimSystem::FlyingSequential => "flying-sequential",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum RPhase {
+    Queued,
+    Prefill,
+    Decode,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct SimReq {
+    req: Request,
+    phase: RPhase,
+    prefilled: usize,
+    emitted: usize,
+    paused: bool,
+}
+
+#[derive(Clone, Debug)]
+struct VEng {
+    /// Serving instances merged into this virtual engine (1 = plain DP).
+    m: usize,
+    free_at: f64,
+    active: Vec<u64>,
+    /// Set for a merged veng that must split back when its TP work drains.
+    transient: bool,
+}
+
+pub struct SimOutcome {
+    pub recorder: Recorder,
+    pub rejected: Vec<u64>,
+    pub n_switches: usize,
+}
+
+pub fn simulate(
+    system: SimSystem,
+    cm: &CostModel,
+    trace: &[Request],
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let n_inst = cm.hw.n_gpus / cm.model.min_gpus;
+    let gpus_per_inst = cm.model.min_gpus;
+
+    let mut vengs: Vec<VEng> = match system {
+        SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => (0..n_inst)
+            .map(|_| VEng { m: 1, free_at: 0.0, active: vec![], transient: false })
+            .collect(),
+        SimSystem::StaticTp(m) => {
+            let m = m.min(n_inst).max(1);
+            (0..n_inst / m)
+                .map(|_| VEng { m, free_at: 0.0, active: vec![], transient: false })
+                .collect()
+        }
+        SimSystem::Shift => vec![VEng { m: n_inst, free_at: 0.0, active: vec![], transient: false }],
+    };
+
+    let mut reqs: BTreeMap<u64, SimReq> = BTreeMap::new();
+    let mut queue: Vec<u64> = Vec::new();
+    let mut rec = Recorder::new();
+    let mut rejected = Vec::new();
+    let mut n_switches = 0usize;
+    let mut policy = crate::coordinator::policy::FlyingPolicy::default();
+
+    let mut arrivals: Vec<&Request> = trace.iter().collect();
+    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let mut next_arr = 0usize;
+    let mut t = 0.0f64;
+
+    let dp_cap = cm.kv_capacity_tokens(gpus_per_inst);
+
+    loop {
+        // ---- advance the clock to the next actionable moment ------------
+        let work_t = vengs
+            .iter()
+            .filter(|v| !v.active.is_empty())
+            .map(|v| v.free_at)
+            .fold(f64::INFINITY, f64::min);
+        let arr_t = arrivals.get(next_arr).map(|r| r.arrival).unwrap_or(f64::INFINITY);
+        let next_t = work_t.min(arr_t);
+        if next_t.is_infinite() {
+            if queue.is_empty() {
+                break;
+            }
+            // Queue non-empty but nothing running: engines are idle, step
+            // time forward by a heartbeat so assignment can proceed.
+            t += cfg.heartbeat_s;
+        } else {
+            t = t.max(next_t);
+        }
+
+        // ---- admissions ---------------------------------------------------
+        while next_arr < arrivals.len() && arrivals[next_arr].arrival <= t {
+            let r = arrivals[next_arr];
+            rec.on_arrival(r.id, r.arrival, r.priority, r.prompt_len);
+            reqs.insert(
+                r.id,
+                SimReq {
+                    req: r.clone(),
+                    phase: RPhase::Queued,
+                    prefilled: 0,
+                    emitted: 0,
+                    paused: false,
+                },
+            );
+            queue.push(r.id);
+            next_arr += 1;
+        }
+
+        // ---- assignment (the policy layer, shared with the real path) ----
+        queue.sort_by(|a, b| {
+            let (ra, rb) = (&reqs[a].req, &reqs[b].req);
+            rb.priority
+                .cmp(&ra.priority)
+                .then(ra.arrival.partial_cmp(&rb.arrival).unwrap())
+        });
+        let mut still_queued = Vec::new();
+        let drained = std::mem::take(&mut queue);
+        let backlog_total = drained.len();
+        for (qi, rid) in drained.into_iter().enumerate() {
+            let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
+            let decision = match system {
+                SimSystem::StaticDp => {
+                    if total > dp_cap {
+                        ModeDecision::Reject
+                    } else {
+                        ModeDecision::Dp
+                    }
+                }
+                SimSystem::StaticTp(m) => {
+                    if total > cm.kv_capacity_tokens(m.min(n_inst) * gpus_per_inst) {
+                        ModeDecision::Reject
+                    } else {
+                        ModeDecision::Tp(m)
+                    }
+                }
+                SimSystem::Shift => ModeDecision::Tp(n_inst),
+                SimSystem::Flying | SimSystem::FlyingSequential => {
+                    // Idle capacity in *unit-instance* terms so the snapshot
+                    // semantics match the real (fixed-engine) coordinator.
+                    let idle: usize = vengs
+                        .iter()
+                        .filter(|v| v.active.is_empty())
+                        .map(|v| v.m)
+                        .sum();
+                    let snap = Snapshot {
+                        queue_len: still_queued.len() + (backlog_total - qi - 1),
+                        idle_engines: idle,
+                        n_engines: n_inst,
+                        dp_capacity_tokens: dp_cap,
+                        max_tp: n_inst,
+                    };
+                    policy.decide(
+                        reqs[&rid].req.prompt_len,
+                        reqs[&rid].req.output_len,
+                        reqs[&rid].req.priority,
+                        reqs[&rid].req.tp_demand,
+                        &snap,
+                    )
+                }
+            };
+            match decision {
+                ModeDecision::Reject => {
+                    reqs.get_mut(&rid).unwrap().phase = RPhase::Done;
+                    rejected.push(rid);
+                    rec.on_finish(rid, t);
+                }
+                ModeDecision::Dp => {
+                    // Least-loaded unit veng with KV room and batch room
+                    // (vLLM max_num_seqs-style admission).
+                    let pick = vengs
+                        .iter_mut()
+                        .filter(|v| v.m == 1 || matches!(system, SimSystem::StaticDp))
+                        .filter(|v| v.active.len() < cfg.max_batch)
+                        .filter(|v| kv_room(v, &reqs, cm, gpus_per_inst) >= total)
+                        .min_by_key(|v| v.active.len());
+                    match pick {
+                        Some(v) => {
+                            v.active.push(rid);
+                            let r = reqs.get_mut(&rid).unwrap();
+                            r.phase = RPhase::Prefill;
+                            rec.on_first_sched(rid, t);
+                        }
+                        None => {
+                            // FLYING at low load: if every engine is merged
+                            // into a live TP group and there is NO backlog,
+                            // the request simply executes on the group (the
+                            // paper's "opportunistically TP" regime).  The
+                            // group's batch stays latency-sized (<= 8) so a
+                            // burst onset only has to drain a small batch
+                            // before the split releases the DP engines.
+                            let backlog_now = still_queued.len() + (backlog_total - qi - 1);
+                            let joined = matches!(
+                                system,
+                                SimSystem::Flying | SimSystem::FlyingSequential
+                            ) && backlog_now == 0
+                                && vengs
+                                    .iter_mut()
+                                    .find(|v| {
+                                        v.transient
+                                            && v.active.iter().filter(|r| !reqs[r].paused).count() < 8
+                                            && kv_room(v, &reqs, cm, gpus_per_inst) >= total
+                                    })
+                                    .map(|v| {
+                                        v.active.push(rid);
+                                        true
+                                    })
+                                    .unwrap_or(false);
+                            if joined {
+                                let r = reqs.get_mut(&rid).unwrap();
+                                r.phase = RPhase::Prefill;
+                                rec.on_first_sched(rid, t);
+                            } else {
+                                still_queued.push(rid);
+                            }
+                        }
+                    }
+                }
+                ModeDecision::Tp(want_m) => {
+                    let want_m = want_m.min(n_inst).max(1);
+                    match bind_tp_sim(
+                        system, &mut vengs, &mut reqs, rid, want_m, t, cm, cfg, &mut n_switches,
+                        gpus_per_inst,
+                    ) {
+                        Some(bind_t) => rec.on_first_sched(rid, bind_t),
+                        None => still_queued.push(rid),
+                    }
+                }
+            }
+        }
+        queue = still_queued;
+
+        // ---- execute one step on every free veng with work ---------------
+        for v in vengs.iter_mut() {
+            if v.free_at > t || v.active.is_empty() {
+                continue;
+            }
+            let g = v.m * gpus_per_inst;
+            // Prefill-first (chunked); else a decode batch.
+            let pre = v.active.iter().copied().find(|r| {
+                let q = &reqs[r];
+                q.phase == RPhase::Prefill && !q.paused
+            });
+            if let Some(rid) = pre {
+                let q = reqs.get_mut(&rid).unwrap();
+                let chunk = (q.req.prompt_len - q.prefilled).min(cfg.chunk_tokens);
+                let dur = cm.prefill_s(chunk, g).max(cfg.heartbeat_s);
+                v.free_at = t + dur;
+                q.prefilled += chunk;
+                if q.prefilled >= q.req.prompt_len {
+                    q.phase = RPhase::Decode;
+                    q.emitted = 1; // first token produced by final chunk
+                    rec.on_token(rid, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(rid, t + dur);
+                    }
+                }
+                // Chunked prefill piggybacks decodes (Sarathi/vLLM, which
+                // the paper preserves): in-flight decode requests advance
+                // one token within the same round.
+                let riders: Vec<u64> = v
+                    .active
+                    .iter()
+                    .copied()
+                    .filter(|r| *r != rid && reqs[r].phase == RPhase::Decode && !reqs[r].paused)
+                    .take(cfg.max_batch)
+                    .collect();
+                for r in riders {
+                    let q = reqs.get_mut(&r).unwrap();
+                    q.emitted += 1;
+                    rec.on_token(r, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(r, t + dur);
+                    }
+                }
+            } else {
+                // SP (Shift) executes token-parallel across all instances,
+                // so its effective batch is cluster-wide.
+                let batch_cap = if matches!(system, SimSystem::Shift) {
+                    cfg.max_batch * v.m
+                } else {
+                    cfg.max_batch
+                };
+                let batch: Vec<u64> = v
+                    .active
+                    .iter()
+                    .copied()
+                    .filter(|r| reqs[r].phase == RPhase::Decode && !reqs[r].paused)
+                    .take(batch_cap)
+                    .collect();
+                if batch.is_empty() {
+                    continue;
+                }
+                let mean_ctx = (batch
+                    .iter()
+                    .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
+                    .sum::<usize>()
+                    / batch.len())
+                .max(1);
+                let dur = match system {
+                    // SP mode: token-parallel across instances — near-DP
+                    // aggregate throughput at an efficiency discount.
+                    SimSystem::Shift if batch.len() > 2 * n_inst => {
+                        let per = batch.len().div_ceil(n_inst);
+                        cm.decode_step_s(per, mean_ctx, gpus_per_inst) / 0.85
+                    }
+                    _ => cm.decode_step_s(batch.len(), mean_ctx, g),
+                }
+                .max(cfg.heartbeat_s);
+                v.free_at = t + dur;
+                for rid in batch {
+                    let q = reqs.get_mut(&rid).unwrap();
+                    q.emitted += 1;
+                    rec.on_token(rid, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(rid, t + dur);
+                    }
+                }
+            }
+            // Retire finished requests.
+            v.active.retain(|r| reqs[r].phase != RPhase::Done);
+        }
+
+        // ---- split transient TP groups whose work drained -----------------
+        let mut split_any = false;
+        let mut new_vengs = Vec::with_capacity(vengs.len());
+        for v in vengs.drain(..) {
+            let tp_work_left = v
+                .active
+                .iter()
+                .any(|r| !reqs[r].paused && reqs[r].phase != RPhase::Done);
+            let has_paused = v.active.iter().any(|r| reqs[r].paused);
+            // Split only under pressure: queued DP work or hard-preempted
+            // requests waiting to resume.  An idle merged group is kept so
+            // low-load traffic stays in the TP regime (Use Case 1).
+            if v.transient && !tp_work_left && (!queue.is_empty() || has_paused) {
+                // Resume paused DP requests on the split unit vengs.
+                let paused: Vec<u64> = v.active.clone();
+                for i in 0..v.m {
+                    let mut unit = VEng { m: 1, free_at: v.free_at, active: vec![], transient: false };
+                    // Round-robin the resumed requests over the units.
+                    for (j, rid) in paused.iter().enumerate() {
+                        if j % v.m == i {
+                            reqs.get_mut(rid).unwrap().paused = false;
+                            unit.active.push(*rid);
+                        }
+                    }
+                    new_vengs.push(unit);
+                }
+                n_switches += 1;
+                split_any = true;
+            } else {
+                new_vengs.push(v);
+            }
+        }
+        vengs = new_vengs;
+        let _ = split_any;
+    }
+
+    SimOutcome { recorder: rec, rejected, n_switches }
+}
+
+fn kv_room(
+    v: &VEng,
+    reqs: &BTreeMap<u64, SimReq>,
+    cm: &CostModel,
+    gpus_per_inst: usize,
+) -> usize {
+    let cap = cm.kv_capacity_tokens(v.m * gpus_per_inst);
+    let used: usize = v
+        .active
+        .iter()
+        .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
+        .sum();
+    cap.saturating_sub(used)
+}
+
+/// Merge contiguous unit vengs into a transient TP group for `rid`.
+/// Returns the bind time (incl. live-switch latency) or None if no group is
+/// currently formable.
+#[allow(clippy::too_many_arguments)]
+fn bind_tp_sim(
+    system: SimSystem,
+    vengs: &mut Vec<VEng>,
+    reqs: &mut BTreeMap<u64, SimReq>,
+    rid: u64,
+    want_m: usize,
+    t: f64,
+    cm: &CostModel,
+    _cfg: &SimConfig,
+    n_switches: &mut usize,
+    gpus_per_inst: usize,
+) -> Option<f64> {
+    // An existing group of the right width with KV + batch room?
+    let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
+    let batch_cap = |v: &VEng| {
+        if matches!(system, SimSystem::Shift) {
+            _cfg.max_batch * v.m
+        } else {
+            _cfg.max_batch
+        }
+    };
+    if let Some(v) = vengs.iter_mut().find(|v| {
+        v.m == want_m
+            && v.active.len() < batch_cap(v)
+            && kv_room(v, reqs, cm, gpus_per_inst) >= total
+    }) {
+        // Static TP / Shift: groups are permanent; Flying: join transient.
+        if matches!(system, SimSystem::StaticTp(_) | SimSystem::Shift) || v.transient || v.m == 1 {
+            v.active.push(rid);
+            reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
+            return Some(t);
+        }
+    }
+    if !matches!(system, SimSystem::Flying | SimSystem::FlyingSequential) {
+        return None;
+    }
+
+    // Collect want_m unit vengs to merge (prefer idle ones).
+    let mut unit_idx: Vec<usize> = (0..vengs.len()).filter(|&i| vengs[i].m == 1).collect();
+    if unit_idx.len() < want_m {
+        return None;
+    }
+    unit_idx.sort_by_key(|&i| vengs[i].active.len());
+    let chosen: Vec<usize> = unit_idx.into_iter().take(want_m).collect();
+
+    let busy = chosen.iter().any(|&i| !vengs[i].active.is_empty());
+    if busy && system == SimSystem::FlyingSequential {
+        // Sequential switching: wait for the stragglers (Fig 7a) — the
+        // request stays queued and the chosen engines drain naturally.
+        return None;
+    }
+
+    // Hard preempt (Fig 7c): pause members' DP requests in place.
+    let mut merged = VEng {
+        m: want_m,
+        free_at: chosen
+            .iter()
+            .map(|&i| vengs[i].free_at)
+            .fold(t, f64::max)
+            + cm.live_switch_s(),
+        active: vec![],
+        transient: true,
+    };
+    for &i in &chosen {
+        for r in &vengs[i].active {
+            reqs.get_mut(r).unwrap().paused = true;
+            merged.active.push(*r);
+        }
+    }
+    merged.active.push(rid);
+    reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
+    let bind_t = merged.free_at;
+    // Remove chosen (descending to keep indices valid), insert merged.
+    let mut chosen_sorted = chosen;
+    chosen_sorted.sort_unstable_by(|a, b| b.cmp(a));
+    for i in chosen_sorted {
+        vengs.remove(i);
+    }
+    vengs.push(merged);
+    *n_switches += 1;
+    Some(bind_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{HwSpec, PaperModel};
+    use crate::workload::{generate, WorkloadCfg};
+
+    fn cm() -> CostModel {
+        CostModel::new(HwSpec::default(), PaperModel::llama70b())
+    }
+
+    fn bursty(n: usize) -> Vec<Request> {
+        generate(&WorkloadCfg::paper_full(7, n))
+    }
+
+    fn run(system: SimSystem, n: usize) -> SimOutcome {
+        simulate(system, &cm(), &bursty(n), &SimConfig::default())
+    }
+
+    #[test]
+    fn all_systems_complete_the_trace() {
+        for sys in [
+            SimSystem::StaticDp,
+            SimSystem::StaticTp(4),
+            SimSystem::Shift,
+            SimSystem::Flying,
+            SimSystem::FlyingSequential,
+        ] {
+            let o = run(sys, 300);
+            let s = o.recorder.summary(None);
+            assert_eq!(s.finished + o.rejected.len(), 300, "{}", sys.label());
+            assert!(s.mean_ttft > 0.0, "{}", sys.label());
+        }
+    }
+
+    #[test]
+    fn paper_shape_dp_beats_tp_on_burst_ttft() {
+        // Under bursty load, static TP queues badly; DP and FLYING drain.
+        let dp = run(SimSystem::StaticDp, 600).recorder.summary(None);
+        let tp = run(SimSystem::StaticTp(4), 600).recorder.summary(None);
+        let fly = run(SimSystem::Flying, 600).recorder.summary(None);
+        assert!(
+            tp.p90_ttft > 1.5 * dp.p90_ttft,
+            "tp {} vs dp {}",
+            tp.p90_ttft,
+            dp.p90_ttft
+        );
+        assert!(
+            fly.p90_ttft < 0.75 * tp.p90_ttft,
+            "fly {} vs tp {}",
+            fly.p90_ttft,
+            tp.p90_ttft
+        );
+    }
+
+    #[test]
+    fn paper_shape_throughput_flying_near_dp() {
+        let dp = run(SimSystem::StaticDp, 600).recorder.summary(None);
+        let tp = run(SimSystem::StaticTp(4), 600).recorder.summary(None);
+        let fly = run(SimSystem::Flying, 600).recorder.summary(None);
+        // Fig 9: FLYING retains ~95% of DP peak throughput and beats TP
+        // by >1.5x.
+        assert!(fly.peak_throughput > 0.8 * dp.peak_throughput);
+        assert!(fly.peak_throughput > 1.3 * tp.peak_throughput);
+    }
+
+    #[test]
+    fn flying_switches_happen() {
+        let o = run(SimSystem::Flying, 300);
+        assert!(o.n_switches > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(SimSystem::Flying, 200).recorder.summary(None);
+        let b = run(SimSystem::Flying, 200).recorder.summary(None);
+        assert_eq!(a.mean_ttft, b.mean_ttft);
+        assert_eq!(a.peak_throughput, b.peak_throughput);
+    }
+}

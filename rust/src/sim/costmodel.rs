@@ -1,0 +1,281 @@
+//! Analytic H200 cost model for the discrete-event simulator.
+//!
+//! One CPU core cannot exhibit parallel speedups, so the paper's
+//! end-to-end latency/throughput results (Figs 8–10, Tables 1–2) are
+//! regenerated on a simulated 8×H200 node driven by the *same policy code*
+//! as the real path.  The model is first-principles (roofline: compute vs
+//! HBM vs NVLink) with two calibrated constants:
+//!
+//! * `overhead_gb_per_gpu` — non-KV memory overhead (activations, CUDA
+//!   graphs, fragmentation).  28.7 GB/GPU reproduces the paper's Table-2
+//!   max-context column to within a few percent at every TP degree
+//!   (264K / 959K / 2.3M for Llama-70B at 2/4/8 GPUs).
+//! * cold-start: `cold_base_s + s_per_gb * weight_gb_per_gpu`, fit to the
+//!   paper's 292/212/147 s column.
+//!
+//! All model arithmetic is bf16 (2 bytes/param, 2 bytes/KV element), which
+//! is what the Table-2 numbers imply.
+
+/// 8× NVIDIA H200 node (paper §6.1.1).
+#[derive(Clone, Copy, Debug)]
+pub struct HwSpec {
+    pub n_gpus: usize,
+    pub hbm_gb: f64,
+    pub hbm_bw: f64,    // bytes/s per GPU
+    pub nvlink_bw: f64, // bytes/s per GPU (bidirectional)
+    pub flops_bf16: f64,
+    pub mfu_prefill: f64,
+    pub mfu_decode: f64,
+    pub kernel_launch_s: f64, // per collective/kernel fixed cost
+    pub overhead_gb_per_gpu: f64,
+    pub cold_base_s: f64,
+    pub cold_s_per_gb: f64,
+}
+
+impl Default for HwSpec {
+    fn default() -> Self {
+        HwSpec {
+            n_gpus: 8,
+            hbm_gb: 141.0,
+            hbm_bw: 4.8e12,
+            nvlink_bw: 900e9,
+            flops_bf16: 989e12,
+            mfu_prefill: 0.55,
+            mfu_decode: 0.35,
+            kernel_launch_s: 25e-6,
+            overhead_gb_per_gpu: 28.7,
+            cold_base_s: 110.0,
+            cold_s_per_gb: 2.55,
+        }
+    }
+}
+
+/// Paper-scale model description.
+#[derive(Clone, Debug)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub params_b: f64,        // total parameters, billions
+    pub active_params_b: f64, // activated per token (MoE < total)
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    /// Minimum GPUs for one serving instance (the paper's base DP engine):
+    /// Llama-70B bf16 needs 2 GPUs; the others fit on 1.
+    pub min_gpus: usize,
+    pub max_model_ctx: usize,
+    /// Weight bytes per parameter (bf16 = 2; GPT-OSS ships MXFP4 ≈ 1).
+    pub bytes_per_param: f64,
+}
+
+impl PaperModel {
+    pub fn llama70b() -> Self {
+        PaperModel {
+            name: "Llama-3-70B",
+            params_b: 70.0,
+            active_params_b: 70.0,
+            n_layers: 80,
+            d_model: 8192,
+            n_kv_heads: 8,
+            d_head: 128,
+            min_gpus: 2,
+            max_model_ctx: 8192,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    pub fn gptoss120b() -> Self {
+        PaperModel {
+            name: "GPT-OSS-120B",
+            params_b: 117.0,
+            active_params_b: 5.1,
+            n_layers: 36,
+            d_model: 2880,
+            n_kv_heads: 8,
+            d_head: 64,
+            min_gpus: 2,
+            max_model_ctx: 131072,
+            bytes_per_param: 1.0, // MXFP4 checkpoint
+        }
+    }
+
+    pub fn nemotron8b() -> Self {
+        PaperModel {
+            name: "Nemotron-8B",
+            params_b: 8.0,
+            active_params_b: 8.0,
+            n_layers: 32,
+            d_model: 4096,
+            n_kv_heads: 8,
+            d_head: 128,
+            min_gpus: 1,
+            max_model_ctx: 4_000_000,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params_b * 1e9 * self.bytes_per_param
+    }
+
+    /// KV bytes per token (all layers, k+v, bf16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64 * self.n_kv_heads as f64 * self.d_head as f64 * 2.0
+    }
+}
+
+/// Cost model for a group of `g` GPUs serving one instance.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub hw: HwSpec,
+    pub model: PaperModel,
+}
+
+impl CostModel {
+    pub fn new(hw: HwSpec, model: PaperModel) -> Self {
+        CostModel { hw, model }
+    }
+
+    /// Max KV tokens a g-GPU instance can hold (Table-2 capacity model).
+    pub fn kv_capacity_tokens(&self, g: usize) -> usize {
+        let total = g as f64 * self.hw.hbm_gb * 1e9;
+        let overhead = g as f64 * self.hw.overhead_gb_per_gpu * 1e9;
+        let avail = total - self.model.weight_bytes() - overhead;
+        (avail.max(0.0) / self.model.kv_bytes_per_token()) as usize
+    }
+
+    /// All-reduce time for `bytes` across g GPUs (ring, 2(g-1)/g passes).
+    fn allreduce_s(&self, bytes: f64, g: usize) -> f64 {
+        if g <= 1 {
+            return 0.0;
+        }
+        self.hw.kernel_launch_s + 2.0 * (g - 1) as f64 / g as f64 * bytes / self.hw.nvlink_bw
+    }
+
+    /// Prefill `t` tokens on a g-GPU instance (compute-bound; 2 all-reduces
+    /// per layer when g > 1).
+    pub fn prefill_s(&self, t: usize, g: usize) -> f64 {
+        let flops = 2.0 * self.model.active_params_b * 1e9 * t as f64;
+        let compute = flops / (g as f64 * self.hw.flops_bf16 * self.hw.mfu_prefill);
+        let act_bytes = t as f64 * self.model.d_model as f64 * 2.0;
+        let comm = 2.0 * self.model.n_layers as f64 * self.allreduce_s(act_bytes, g);
+        compute + comm + self.hw.kernel_launch_s * self.model.n_layers as f64
+    }
+
+    /// One decode step for a batch of `b` requests at mean context `ctx`
+    /// (memory-bound: weight + KV reads; 2 all-reduces per layer).
+    pub fn decode_step_s(&self, b: usize, ctx: usize, g: usize) -> f64 {
+        // MoE batched decode touches ~min(total, active*b) parameters: with
+        // realistic batches most experts are hit every step, so the read
+        // approaches the full model (the classic MoE serving effect).
+        let touched_bytes = (self.model.active_params_b * b as f64)
+            .min(self.model.params_b)
+            * 1e9
+            * self.model.bytes_per_param;
+        let weight_read = touched_bytes / (g as f64 * self.hw.hbm_bw);
+        let kv_read = b as f64 * ctx as f64 * self.model.kv_bytes_per_token() / (g as f64 * self.hw.hbm_bw);
+        let flops = 2.0 * self.model.active_params_b * 1e9 * b as f64;
+        let compute = flops / (g as f64 * self.hw.flops_bf16 * self.hw.mfu_decode);
+        let act_bytes = b as f64 * self.model.d_model as f64 * 2.0;
+        let comm = 2.0 * self.model.n_layers as f64 * self.allreduce_s(act_bytes, g);
+        weight_read.max(kv_read).max(compute) + comm + self.hw.kernel_launch_s * self.model.n_layers as f64
+    }
+
+    /// Cold restart of an instance at g GPUs (weight reload + NCCL init) —
+    /// what a *static* system pays to change parallelism (Table 2).
+    pub fn cold_start_s(&self, g: usize) -> f64 {
+        let per_gpu_gb = self.model.weight_bytes() / 1e9 / g as f64;
+        self.hw.cold_base_s + self.hw.cold_s_per_gb * per_gpu_gb
+    }
+
+    /// Request rate (req/s) that saturates the full-node TP configuration's
+    /// decode capacity for the §6.1.3 length mix.  Used to translate the
+    /// paper's absolute arrival rates (which sit just around Llama-70B's TP
+    /// saturation on their testbed) into equivalent utilization on this
+    /// cost model for each model.
+    pub fn tp_saturation_rps(&self, mean_prompt: usize, mean_output: usize) -> f64 {
+        let b = 48;
+        let step = self.decode_step_s(b, mean_prompt + mean_output / 2, self.hw.n_gpus);
+        (b as f64 / step) / mean_output as f64
+    }
+
+    /// FLYING SERVING's live switch: metadata + pre-built communicator
+    /// activation (measured at ~15 ms on the paper's testbed; our real-path
+    /// thread cluster measures the same mechanism in microseconds — the
+    /// simulator uses the paper's H200 number).
+    pub fn live_switch_s(&self) -> f64 {
+        0.015
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama() -> CostModel {
+        CostModel::new(HwSpec::default(), PaperModel::llama70b())
+    }
+
+    #[test]
+    fn table2_max_context_reproduced() {
+        let cm = llama();
+        // Paper Table 2: 264K (2 GPUs), 959K (4), 2.3M (8).
+        let k264 = cm.kv_capacity_tokens(2) as f64;
+        let k959 = cm.kv_capacity_tokens(4) as f64;
+        let k2300 = cm.kv_capacity_tokens(8) as f64;
+        assert!((k264 / 264_000.0 - 1.0).abs() < 0.10, "2gpu={k264}");
+        assert!((k959 / 959_000.0 - 1.0).abs() < 0.10, "4gpu={k959}");
+        assert!((k2300 / 2_300_000.0 - 1.0).abs() < 0.10, "8gpu={k2300}");
+    }
+
+    #[test]
+    fn table2_cold_start_shape() {
+        let cm = llama();
+        // Paper: 292 s (2 GPUs), 212 s (4), 147 s (8): monotone decreasing,
+        // right magnitude.
+        let c2 = cm.cold_start_s(2);
+        let c4 = cm.cold_start_s(4);
+        let c8 = cm.cold_start_s(8);
+        assert!(c2 > c4 && c4 > c8);
+        assert!((c2 / 292.0 - 1.0).abs() < 0.15, "c2={c2}");
+        assert!((c8 / 147.0 - 1.0).abs() < 0.25, "c8={c8}");
+        // Live switch is ~4 orders of magnitude faster.
+        assert!(c2 / cm.live_switch_s() > 1e4);
+    }
+
+    #[test]
+    fn tp_reduces_latency_dp_never_slower_total() {
+        let cm = llama();
+        // Per-request prefill latency shrinks with more GPUs.
+        let p2 = cm.prefill_s(2000, 2);
+        let p8 = cm.prefill_s(2000, 8);
+        assert!(p8 < p2, "prefill {p2} -> {p8}");
+        // Decode step too (weight read dominates).
+        let d2 = cm.decode_step_s(8, 1000, 2);
+        let d8 = cm.decode_step_s(8, 1000, 8);
+        assert!(d8 < d2);
+        // But aggregate decode throughput favors DP: 4 instances of 2 GPUs
+        // each running batch 8 beat one 8-GPU instance at batch 8.
+        let dp_rate = 4.0 * 8.0 / d2;
+        let tp_rate = 8.0 / d8;
+        assert!(dp_rate > 1.5 * tp_rate, "dp={dp_rate} tp={tp_rate}");
+    }
+
+    #[test]
+    fn moe_decode_cheaper_than_dense_at_same_size() {
+        let hw = HwSpec::default();
+        let dense = CostModel::new(hw, PaperModel::llama70b());
+        let moe = CostModel::new(hw, PaperModel::gptoss120b());
+        // Active params dominate decode: the 120B MoE steps faster than the
+        // dense 70B.
+        assert!(moe.decode_step_s(8, 1000, 2) < dense.decode_step_s(8, 1000, 2));
+    }
+
+    #[test]
+    fn nemotron_million_token_fits_merged_only() {
+        let cm = CostModel::new(HwSpec::default(), PaperModel::nemotron8b());
+        // 1M-token context: must NOT fit one GPU, must fit the full node.
+        assert!(cm.kv_capacity_tokens(1) < 1_000_000);
+        assert!(cm.kv_capacity_tokens(8) > 1_000_000);
+    }
+}

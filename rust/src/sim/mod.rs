@@ -1,0 +1,13 @@
+//! Discrete-event cluster simulation (see DESIGN.md §Substitutions).
+//!
+//! The paper's end-to-end numbers come from an 8×H200 node; a single CPU
+//! core cannot exhibit parallel speedups, so Figs 8–10 and Tables 1–2 are
+//! regenerated here on an analytically-modeled node (costmodel.rs,
+//! calibrated against the paper's own Table-2 capacity/cold-start columns)
+//! driven by the same `Policy` code as the real thread cluster.
+
+pub mod cluster;
+pub mod costmodel;
+
+pub use cluster::{simulate, SimConfig, SimOutcome, SimSystem};
+pub use costmodel::{CostModel, HwSpec, PaperModel};

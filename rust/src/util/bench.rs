@@ -1,0 +1,187 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Provides warmup + repeated timed runs with mean/p50/p90 reporting, plus a
+//! paper-style table printer and CSV writer used by every `rust/benches/*`
+//! target to regenerate the paper's tables and figures.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::stats::Percentiles;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut p = Percentiles::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        p.add(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: p.mean(),
+        p50_s: p.p50(),
+        p90_s: p.p90(),
+    };
+    println!(
+        "bench {:40} iters={:5} mean={} p50={} p90={}",
+        r.name,
+        r.iters,
+        fmt_dur(r.mean_s),
+        fmt_dur(r.p50_s),
+        fmt_dur(r.p90_s)
+    );
+    r
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s.is_nan() {
+        "   n/a  ".into()
+    } else if s < 1e-6 {
+        format!("{:7.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:7.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:7.2}ms", s * 1e3)
+    } else {
+        format!("{:7.2}s ", s)
+    }
+}
+
+/// Paper-style table: header row + aligned data rows, also echoed to a CSV
+/// in `bench_out/` so figures can be re-plotted.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let widths: Vec<usize> = self
+            .header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([h.len()])
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:>w$}", c, w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    /// Write `bench_out/<slug>.csv`; returns the path.
+    pub fn write_csv(&self, slug: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = format!("bench_out/{slug}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Write raw (t, value) series per system for figure regeneration.
+pub fn write_series_csv(
+    slug: &str,
+    columns: &[(&str, &[(f64, f64)])],
+) -> std::io::Result<String> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{slug}.csv");
+    let mut f = std::fs::File::create(&path)?;
+    let header: Vec<String> = std::iter::once("t".to_string())
+        .chain(columns.iter().map(|(n, _)| n.to_string()))
+        .collect();
+    writeln!(f, "{}", header.join(","))?;
+    let n = columns.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let t = columns
+            .iter()
+            .find_map(|(_, s)| s.get(i).map(|&(t, _)| t))
+            .unwrap_or(f64::NAN);
+        let mut row = vec![format!("{t:.3}")];
+        for (_, s) in columns {
+            row.push(
+                s.get(i)
+                    .map(|&(_, v)| format!("{v:.6}"))
+                    .unwrap_or_default(),
+            );
+        }
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2.5e-9).contains("ns"));
+        assert!(fmt_dur(2.5e-6).contains("µs"));
+        assert!(fmt_dur(2.5e-3).contains("ms"));
+        assert!(fmt_dur(2.5).contains('s'));
+    }
+}

@@ -1,0 +1,38 @@
+//! Small std-only substrates: PRNG, statistics, property-test and benchmark
+//! harnesses, and a stderr logger.  These exist because the offline crate
+//! set contains no rand/criterion/proptest (see Cargo.toml note).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[info] {}", format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_enabled(3) {
+            eprintln!("[debug] {}", format!($($fmt)*));
+        }
+    };
+}

@@ -1,0 +1,205 @@
+//! Streaming statistics: percentile sketches and time series used by the
+//! metrics layer and the benchmark harness.
+
+/// Exact percentile estimator over a bounded sample (serving traces here are
+/// at most a few hundred thousand points, so exact is affordable and removes
+/// sketch-error caveats from paper-comparison tables).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile samples"));
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated quantile, q in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&mut self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Fixed-interval time series: values bucketed by timestamp, used for the
+/// Fig-8 style "metric over trace time" plots.
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    pub interval: f64,
+    buckets: Vec<Vec<f64>>,
+}
+
+impl TimeSeries {
+    pub fn new(interval: f64) -> Self {
+        assert!(interval > 0.0);
+        TimeSeries {
+            interval,
+            buckets: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, t: f64, value: f64) {
+        let idx = (t / self.interval).floor().max(0.0) as usize;
+        if idx >= self.buckets.len() {
+            self.buckets.resize_with(idx + 1, Vec::new);
+        }
+        self.buckets[idx].push(value);
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// (bucket_start_time, mean) rows, NaN for empty buckets.
+    pub fn means(&self) -> Vec<(f64, f64)> {
+        self.row(|xs| xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    /// (bucket_start_time, p90) rows.
+    pub fn p90s(&self) -> Vec<(f64, f64)> {
+        self.row(|xs| {
+            let mut p = Percentiles::new();
+            xs.iter().for_each(|&x| p.add(x));
+            p.p90()
+        })
+    }
+
+    /// (bucket_start_time, count) rows.
+    pub fn counts(&self) -> Vec<(f64, f64)> {
+        self.row(|xs| xs.len() as f64)
+    }
+
+    /// (bucket_start_time, sum) rows.
+    pub fn sums(&self) -> Vec<(f64, f64)> {
+        self.row(|xs| xs.iter().sum())
+    }
+
+    fn row(&self, f: impl Fn(&[f64]) -> f64) -> Vec<(f64, f64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, xs)| {
+                let t = i as f64 * self.interval;
+                if xs.is_empty() {
+                    (t, f64::NAN)
+                } else {
+                    (t, f(xs))
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_sequence() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.add(i as f64);
+        }
+        assert!((p.p50() - 50.5).abs() < 1e-9);
+        assert!((p.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.quantile(1.0) - 100.0).abs() < 1e-9);
+        assert!((p.p90() - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_all_quantiles() {
+        let mut p = Percentiles::new();
+        p.add(3.5);
+        assert_eq!(p.p50(), 3.5);
+        assert_eq!(p.p99(), 3.5);
+        assert_eq!(p.mean(), 3.5);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut p = Percentiles::new();
+        assert!(p.p50().is_nan());
+        assert!(p.mean().is_nan());
+    }
+
+    #[test]
+    fn add_after_query_resorts() {
+        let mut p = Percentiles::new();
+        p.add(10.0);
+        assert_eq!(p.p50(), 10.0);
+        p.add(0.0);
+        assert_eq!(p.quantile(0.0), 0.0);
+    }
+
+    #[test]
+    fn timeseries_bucketing() {
+        let mut ts = TimeSeries::new(1.0);
+        ts.add(0.1, 1.0);
+        ts.add(0.9, 3.0);
+        ts.add(2.5, 10.0);
+        let m = ts.means();
+        assert_eq!(m.len(), 3);
+        assert!((m[0].1 - 2.0).abs() < 1e-9);
+        assert!(m[1].1.is_nan());
+        assert!((m[2].1 - 10.0).abs() < 1e-9);
+        assert_eq!(ts.counts()[0].1, 2.0);
+    }
+}

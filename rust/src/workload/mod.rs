@@ -1,0 +1,268 @@
+//! Synthetic workload generation (paper §6.1.3).
+//!
+//! "Publicly available LLM datasets provide request contents but not
+//! realistic, reproducible arrival-time traces" — the paper synthesizes
+//! workloads, and so do we, with the same structure:
+//!   (1) request lengths sampled uniformly from a prompt/output range,
+//!   (2) arrival rates alternating between a low-load phase and high-load
+//!       bursts (Poisson within each phase),
+//!   (3) a fixed request volume to capture steady state across bursts.
+//!
+//! Lengths are scaled from the paper's [128, 4000]/[64, 512] token ranges to
+//! this testbed's tiny models via `scale`; the simulator's cost model runs
+//! at paper scale directly.  A fraction of requests carries high priority
+//! (Use Case 2) and a fraction demands long context above DP capacity
+//! (Use Case 3).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    #[default]
+    Normal,
+    High,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub arrival: f64, // seconds from trace start
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub priority: Priority,
+    /// Explicit TP demand (latency-strict or memory-driven requests).
+    /// None = scheduler's choice.
+    pub tp_demand: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadCfg {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub prompt_range: (usize, usize),
+    pub output_range: (usize, usize),
+    /// req/s during low-load phases (sampled uniformly per phase).
+    pub low_rate: (f64, f64),
+    /// req/s during bursts.
+    pub high_rate: (f64, f64),
+    /// Seconds per low/high phase.
+    pub phase_secs: f64,
+    /// Fraction of requests with high priority.
+    pub priority_frac: f64,
+    /// Fraction of requests demanding a long context (prompt_len is then
+    /// sampled from (long_ctx_min, long_ctx_max)).
+    pub long_frac: f64,
+    pub long_ctx_range: (usize, usize),
+}
+
+impl WorkloadCfg {
+    /// Paper §6.1.3 shape at testbed scale: prompts [16, 500], outputs
+    /// [8, 64], 2–5 r/s low, 10–30 r/s bursts, 20 s phases.
+    pub fn paper_scaled(seed: u64, n_requests: usize) -> Self {
+        WorkloadCfg {
+            seed,
+            n_requests,
+            prompt_range: (16, 500),
+            output_range: (8, 64),
+            low_rate: (2.0, 5.0),
+            high_rate: (10.0, 30.0),
+            phase_secs: 20.0,
+            priority_frac: 0.0,
+            long_frac: 0.0,
+            long_ctx_range: (0, 0),
+        }
+    }
+
+    /// Paper-scale lengths for the discrete-event simulator (no scaling).
+    pub fn paper_full(seed: u64, n_requests: usize) -> Self {
+        WorkloadCfg {
+            seed,
+            n_requests,
+            prompt_range: (128, 4000),
+            output_range: (64, 512),
+            low_rate: (2.0, 5.0),
+            high_rate: (10.0, 30.0),
+            phase_secs: 20.0,
+            priority_frac: 0.0,
+            long_frac: 0.0,
+            long_ctx_range: (0, 0),
+        }
+    }
+}
+
+/// Generate the arrival trace.  Deterministic in `cfg.seed`.
+pub fn generate(cfg: &WorkloadCfg) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let mut t = 0.0f64;
+    let mut phase_high = false;
+    let mut phase_end = cfg.phase_secs;
+    let mut rate = rng.uniform(cfg.low_rate.0, cfg.low_rate.1);
+    for id in 0..cfg.n_requests as u64 {
+        t += rng.exp(rate);
+        while t >= phase_end {
+            phase_high = !phase_high;
+            phase_end += cfg.phase_secs;
+            rate = if phase_high {
+                rng.uniform(cfg.high_rate.0, cfg.high_rate.1)
+            } else {
+                rng.uniform(cfg.low_rate.0, cfg.low_rate.1)
+            };
+        }
+        let long = cfg.long_frac > 0.0 && rng.bool(cfg.long_frac);
+        let prompt_len = if long {
+            rng.range_usize(cfg.long_ctx_range.0, cfg.long_ctx_range.1)
+        } else {
+            rng.range_usize(cfg.prompt_range.0, cfg.prompt_range.1)
+        };
+        let priority = if cfg.priority_frac > 0.0 && rng.bool(cfg.priority_frac) {
+            Priority::High
+        } else {
+            Priority::Normal
+        };
+        out.push(Request {
+            id,
+            arrival: t,
+            prompt_len,
+            output_len: rng.range_usize(cfg.output_range.0, cfg.output_range.1),
+            priority,
+            tp_demand: None,
+        });
+    }
+    out
+}
+
+/// Deterministic byte-level prompt content for the real serving path.
+pub fn synth_prompt_tokens(id: u64, len: usize) -> Vec<i32> {
+    let mut rng = Rng::new(0xC0FFEE ^ id);
+    (0..len).map(|_| rng.range(0, 255) as i32).collect()
+}
+
+/// CSV trace record/replay, so benchmark runs are comparable across systems.
+pub fn to_csv(reqs: &[Request]) -> String {
+    let mut s = String::from("id,arrival,prompt_len,output_len,priority,tp_demand\n");
+    for r in reqs {
+        s.push_str(&format!(
+            "{},{:.6},{},{},{},{}\n",
+            r.id,
+            r.arrival,
+            r.prompt_len,
+            r.output_len,
+            if r.priority == Priority::High { 1 } else { 0 },
+            r.tp_demand.map(|p| p.to_string()).unwrap_or_default(),
+        ));
+    }
+    s
+}
+
+pub fn from_csv(text: &str) -> anyhow::Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 6 {
+            anyhow::bail!("trace line {i}: expected 6 fields");
+        }
+        out.push(Request {
+            id: f[0].parse()?,
+            arrival: f[1].parse()?,
+            prompt_len: f[2].parse()?,
+            output_len: f[3].parse()?,
+            priority: if f[4] == "1" { Priority::High } else { Priority::Normal },
+            tp_demand: if f[5].is_empty() { None } else { Some(f[5].parse()?) },
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = WorkloadCfg::paper_scaled(9, 200);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_lengths_in_range() {
+        let cfg = WorkloadCfg::paper_scaled(1, 500);
+        let reqs = generate(&cfg);
+        let mut last = 0.0;
+        for r in &reqs {
+            assert!(r.arrival >= last);
+            last = r.arrival;
+            assert!((cfg.prompt_range.0..=cfg.prompt_range.1).contains(&r.prompt_len));
+            assert!((cfg.output_range.0..=cfg.output_range.1).contains(&r.output_len));
+        }
+    }
+
+    #[test]
+    fn bursty_phases_change_rate() {
+        // Mean inter-arrival in high phases must be clearly below low phases.
+        let cfg = WorkloadCfg::paper_scaled(2, 3000);
+        let reqs = generate(&cfg);
+        let phase = |t: f64| ((t / cfg.phase_secs) as usize) % 2; // 0=low,1=high
+        let mut gaps = [Vec::new(), Vec::new()];
+        for w in reqs.windows(2) {
+            let ph = phase(w[1].arrival);
+            if phase(w[0].arrival) == ph {
+                gaps[ph].push(w[1].arrival - w[0].arrival);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&gaps[1]) < mean(&gaps[0]) * 0.5,
+            "high-phase gap {} vs low-phase {}",
+            mean(&gaps[1]),
+            mean(&gaps[0])
+        );
+    }
+
+    #[test]
+    fn priority_and_long_fractions() {
+        let mut cfg = WorkloadCfg::paper_scaled(3, 2000);
+        cfg.priority_frac = 0.25;
+        cfg.long_frac = 0.1;
+        cfg.long_ctx_range = (2000, 3000);
+        let reqs = generate(&cfg);
+        let hi = reqs.iter().filter(|r| r.priority == Priority::High).count();
+        let long = reqs.iter().filter(|r| r.prompt_len >= 2000).count();
+        assert!((0.18..0.32).contains(&(hi as f64 / 2000.0)), "hi={hi}");
+        assert!((0.05..0.16).contains(&(long as f64 / 2000.0)), "long={long}");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut cfg = WorkloadCfg::paper_scaled(4, 50);
+        cfg.priority_frac = 0.5;
+        let mut reqs = generate(&cfg);
+        reqs[7].tp_demand = Some(4);
+        let parsed = from_csv(&to_csv(&reqs)).unwrap();
+        assert_eq!(parsed.len(), reqs.len());
+        assert_eq!(parsed[7].tp_demand, Some(4));
+        for (a, b) in reqs.iter().zip(&parsed) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival - b.arrival).abs() < 1e-5);
+            assert_eq!(a.priority, b.priority);
+        }
+    }
+
+    #[test]
+    fn synth_prompt_deterministic_and_bytelevel() {
+        let a = synth_prompt_tokens(5, 64);
+        let b = synth_prompt_tokens(5, 64);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+        assert_ne!(a, synth_prompt_tokens(6, 64));
+    }
+}

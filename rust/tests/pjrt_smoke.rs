@@ -1,0 +1,28 @@
+//! PJRT behavior probes: output untupling and buffer chaining via execute_b.
+use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+#[test]
+fn tuple_outputs_and_buffer_chaining() -> anyhow::Result<()> {
+    let client = PjRtClient::cpu()?;
+    let proto = HloModuleProto::from_text_file("/tmp/tuple_test.hlo.txt")?;
+    let exe = client.compile(&XlaComputation::from_proto(&proto))?;
+    let x = Literal::vec1(&[1f32, 2., 3., 4.]);
+    let y = Literal::vec1(&[10f32, 20., 30., 40.]);
+    let out = exe.execute::<Literal>(&[x, y])?;
+    println!("replicas={} outputs_per_replica={}", out.len(), out[0].len());
+    if out[0].len() == 3 {
+        let a = out[0][0].to_literal_sync()?.to_vec::<f32>()?;
+        println!("untupled! out0={a:?}");
+        // chain: feed output buffers back via execute_b
+        let xb = client.buffer_from_host_buffer(&[5f32, 6., 7., 8.], &[4], None)?;
+        let out2 = exe.execute_b(&[&xb, &out[0][2]])?;
+        let b = out2[0][0].to_literal_sync()?.to_vec::<f32>()?;
+        println!("chained out0={b:?}");
+        assert_eq!(b, vec![6., 7., 8., 9.]);
+    } else {
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        println!("single tuple buffer with {} parts", parts.len());
+    }
+    Ok(())
+}
