@@ -143,7 +143,7 @@ fn main() -> anyhow::Result<()> {
     };
     let mut pos = 0usize;
     let step = bench("engine: fused DP decode step (batch 4)", 5, 60, || {
-        let batch = mk_batch(&adapt, pos);
+        let batch = Arc::new(mk_batch(&adapt, pos));
         eng.call(EngineCmd::DpDecode { batch }).unwrap();
         pos += 1;
     });

@@ -1,0 +1,343 @@
+//! Serving hot-path throughput + allocation bench.
+//!
+//! Two halves, matching the two layers the event-core rewrite touched:
+//!
+//!  1. **Simulator**: drive an identical bursty synthetic trace through the
+//!     event-driven `sim::simulate` and the preserved loop-based
+//!     `sim::simulate_reference`, verify they agree on completion sets,
+//!     rejection sets and switch counts, and report the wall-clock speedup
+//!     (target: ≥5× on the 100k-request trace).
+//!  2. **Coordinator**: run the real scheduler over stub engines and count
+//!     heap allocations *on the coordinator thread* per `step_once`, via a
+//!     thread-local counting allocator.  Steady-state decode steps must be
+//!     allocation-free (median 0 allocs/step); arrival/finish edges and
+//!     amortized growth (token-time buffers doubling) are reported
+//!     separately as the mean.
+//!
+//! Usage:  cargo bench --bench sched_hotpath [-- --quick]
+//!   --quick  : 20k-request simulator trace (CI smoke; full mode uses 100k
+//!              and can take minutes in the O(n²) reference).
+//!
+//! Writes bench_out/sched_hotpath.json for the CI artifact trail.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use flying_serving::baselines::StaticDpPolicy;
+use flying_serving::coordinator::policy::FlyingPolicy;
+use flying_serving::coordinator::strategy::Strategy;
+use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::metrics::Recorder;
+use flying_serving::model::{ModelCfg, StaticShapes};
+use flying_serving::sim::{
+    outcomes_equivalent, simulate, simulate_reference, CostModel, HwSpec, PaperModel, SimConfig,
+    SimSystem,
+};
+use flying_serving::util::bench::fmt_dur;
+use flying_serving::workload::{generate, Priority, WorkloadCfg};
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator: counts allocations per thread, so engine
+// worker threads (the data plane) never pollute the coordinator-thread
+// measurement.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+static TRACKING: AtomicBool = AtomicBool::new(false);
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn bump() {
+        if TRACKING.load(Ordering::Relaxed) {
+            // Const-initialized TLS Cell: no lazy init, no destructor —
+            // safe to touch from inside the allocator.
+            ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Part 1 — simulator: event core vs loop reference
+// ---------------------------------------------------------------------------
+
+struct SimRow {
+    system: &'static str,
+    new_s: f64,
+    ref_s: f64,
+    speedup: f64,
+    equivalent: bool,
+}
+
+fn sim_compare(system: SimSystem, cm: &CostModel, trace: &[flying_serving::workload::Request]) -> SimRow {
+    let cfg = SimConfig::default();
+
+    let t0 = Instant::now();
+    let new = simulate(system, cm, trace, &cfg);
+    let new_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let reference = simulate_reference(system, cm, trace, &cfg);
+    let ref_s = t0.elapsed().as_secs_f64();
+
+    let equivalent = match outcomes_equivalent(&new, &reference) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("sim {}: {e}", system.label());
+            false
+        }
+    };
+
+    println!(
+        "sim {:18} new={} ref={} speedup={:5.1}x switches={}/{} outcome-equal={}",
+        system.label(),
+        fmt_dur(new_s),
+        fmt_dur(ref_s),
+        ref_s / new_s,
+        new.n_switches,
+        reference.n_switches,
+        equivalent,
+    );
+    SimRow {
+        system: system.label(),
+        new_s,
+        ref_s,
+        speedup: ref_s / new_s,
+        equivalent,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 2 — coordinator: allocations per step over stub engines
+// ---------------------------------------------------------------------------
+
+fn stub_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "hotpath-stub".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_head: 8,
+        ffn_hidden: 128,
+        n_experts: 0,
+        top_k: 0,
+        n_blocks: 1024,
+        block_base: 8,
+        max_ctx: 8192,
+        vocab: 258,
+        pool_elems: 1024 * 8 * 4 * 8,
+    }
+}
+
+struct AllocRow {
+    steps: usize,
+    median_allocs: u64,
+    mean_allocs: f64,
+    steps_per_s: f64,
+}
+
+/// Steady-state probe: N long-decode requests fully occupy every engine's
+/// decode batch; once warm, each `step_once` is a pure decode iteration
+/// with no arrivals and no finishes — the path the zero-allocation claim
+/// is about.
+fn coordinator_alloc_probe() -> anyhow::Result<AllocRow> {
+    let n_engines = 4usize;
+    let shapes = StaticShapes { b_dec: 16, c_prefill: 64 };
+    let mut cluster = Cluster::start_stub(stub_cfg(), shapes, n_engines)?;
+    let mut recorder = Recorder::new();
+    let mut policy = StaticDpPolicy;
+
+    let n_reqs = n_engines * shapes.b_dec; // saturate every decode batch
+    let max_new = 400usize;
+    for id in 0..n_reqs as u64 {
+        cluster.submit(
+            ServeRequest {
+                id,
+                prompt: vec![(id % 250) as i32; 8],
+                max_new,
+                priority: Priority::Normal,
+                tp_demand: None,
+                arrival: 0.0,
+            },
+            &mut recorder,
+        );
+    }
+
+    // Warm up: admissions, arena growth, prefill, first decode rounds.
+    for _ in 0..60 {
+        cluster.step_once(&mut policy, Strategy::Sequential, &mut recorder)?;
+    }
+
+    // Measure per-step allocations on this (the coordinator) thread.
+    let measured = 200usize;
+    let mut per_step = Vec::with_capacity(measured);
+    TRACKING.store(true, Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..measured {
+        let before = thread_allocs();
+        let stepped = cluster.step_once(&mut policy, Strategy::Sequential, &mut recorder)?;
+        per_step.push(thread_allocs() - before);
+        assert!(stepped, "probe drained early: raise max_new");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    TRACKING.store(false, Ordering::Relaxed);
+    cluster.shutdown();
+
+    per_step.sort_unstable();
+    let median = per_step[per_step.len() / 2];
+    let mean = per_step.iter().sum::<u64>() as f64 / per_step.len() as f64;
+    println!(
+        "coordinator steady state: {} steps, allocs/step median={} mean={:.2} p99={} ({:.0} steps/s)",
+        measured,
+        median,
+        mean,
+        per_step[per_step.len() * 99 / 100],
+        measured as f64 / dt,
+    );
+    Ok(AllocRow {
+        steps: measured,
+        median_allocs: median,
+        mean_allocs: mean,
+        steps_per_s: measured as f64 / dt,
+    })
+}
+
+/// End-to-end coordinator throughput over the stub data plane, dynamic
+/// policy + preemption path included (requests/sec through `run_trace`).
+fn coordinator_throughput_probe() -> anyhow::Result<f64> {
+    let shapes = StaticShapes { b_dec: 16, c_prefill: 64 };
+    let mut cluster = Cluster::start_stub(stub_cfg(), shapes, 4)?;
+    let n = 600usize;
+    let trace: Vec<ServeRequest> = (0..n as u64)
+        .map(|id| ServeRequest {
+            id,
+            prompt: vec![(id % 250) as i32; 12],
+            max_new: 16,
+            priority: if id % 16 == 0 { Priority::High } else { Priority::Normal },
+            tp_demand: if id % 64 == 0 { Some(2) } else { None },
+            arrival: 0.0,
+        })
+        .collect();
+    let mut policy = FlyingPolicy::default();
+    let t0 = Instant::now();
+    let out = cluster.run_trace(trace, &mut policy, Strategy::HardPreempt)?;
+    let dt = t0.elapsed().as_secs_f64();
+    cluster.shutdown();
+    let rps = (n - out.rejected.len()) as f64 / dt;
+    println!(
+        "coordinator end-to-end: {} reqs in {} ({:.0} req/s, {} steps, {} switches, {} rejected)",
+        n,
+        fmt_dur(dt),
+        rps,
+        out.n_steps,
+        out.switches.len(),
+        out.rejected.len(),
+    );
+    Ok(rps)
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_requests = if quick { 20_000 } else { 100_000 };
+
+    println!("== sched_hotpath: simulator event core vs reference (n={n_requests}) ==");
+    let cm = CostModel::new(HwSpec::default(), PaperModel::llama70b());
+    let trace = generate(&WorkloadCfg::paper_full(4242, n_requests));
+    let rows = vec![
+        sim_compare(SimSystem::Flying, &cm, &trace),
+        sim_compare(SimSystem::StaticTp(4), &cm, &trace),
+        sim_compare(SimSystem::StaticDp, &cm, &trace),
+    ];
+    let min_speedup = rows.iter().map(|r| r.speedup).fold(f64::INFINITY, f64::min);
+    let all_equiv = rows.iter().all(|r| r.equivalent);
+    // Speedup is machine-dependent, so a miss is advisory; equivalence and
+    // the allocation count below are deterministic and fail the run (CI
+    // checks the exit code).
+    println!(
+        "simulator: min speedup {:.1}x across systems — target >= 5x: {}",
+        min_speedup,
+        if min_speedup >= 5.0 { "PASS" } else { "MISS" },
+    );
+    println!(
+        "simulator: outcome equivalence (completions, rejections, switches): {}",
+        if all_equiv { "PASS" } else { "FAIL" },
+    );
+
+    println!("\n== sched_hotpath: coordinator hot path (stub engines) ==");
+    let alloc = coordinator_alloc_probe()?;
+    println!(
+        "zero-allocation steady state (median allocs/step == 0): {}",
+        if alloc.median_allocs == 0 { "PASS" } else { "FAIL" },
+    );
+    let rps = coordinator_throughput_probe()?;
+
+    // ---- JSON artifact ----------------------------------------------------
+    std::fs::create_dir_all("bench_out")?;
+    let mut f = std::fs::File::create("bench_out/sched_hotpath.json")?;
+    let sims: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"system\":\"{}\",\"new_s\":{:.6},\"ref_s\":{:.6},\"speedup\":{:.3},\"equivalent\":{}}}",
+                r.system, r.new_s, r.ref_s, r.speedup, r.equivalent
+            )
+        })
+        .collect();
+    writeln!(
+        f,
+        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}}}}",
+        n_requests,
+        quick,
+        sims.join(","),
+        alloc.steps,
+        alloc.median_allocs,
+        alloc.mean_allocs,
+        alloc.steps_per_s,
+        rps,
+    )?;
+    println!("\nwrote bench_out/sched_hotpath.json");
+    if !all_equiv {
+        anyhow::bail!("event core diverged from the reference simulator");
+    }
+    if alloc.median_allocs != 0 {
+        anyhow::bail!(
+            "coordinator steady state allocates (median {} allocs/step, expected 0)",
+            alloc.median_allocs
+        );
+    }
+    Ok(())
+}

@@ -16,6 +16,13 @@
 //! ordering bug surfaces as a `CollectiveTimeout` error instead of a hang —
 //! this is what makes the scheduler's safe-point protocol *testably*
 //! deadlock-free.
+//!
+//! Hot-path discipline: the internal reduction/gather buffers are owned by
+//! the communicator and recycled across rounds (`clear()` + `extend`, never
+//! `take`/`clone`), so a warm communicator performs **zero heap allocations
+//! per collective**.  `all_gather_into` exposes the same property to
+//! callers by writing the flat gathered vector into a caller-provided
+//! buffer.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -103,7 +110,9 @@ impl Communicator {
         }
         g.arrived += 1;
         if g.arrived == p {
-            g.result = std::mem::take(&mut g.buf);
+            // Swap (not take) so both buffers keep their capacity: a warm
+            // communicator never allocates on the reduce path.
+            std::mem::swap(&mut g.buf, &mut g.result);
             g.arrived = 0;
             g.generation += 1;
             data.copy_from_slice(&g.result);
@@ -159,13 +168,19 @@ impl Communicator {
         }
         let mut g = self.m.lock().unwrap();
         if idx == 0 {
-            g.result = data.clone();
+            // Stage into `buf`; only the completing arrival publishes it to
+            // `result`.  A next-round root can therefore never clobber a
+            // result that a slow waiter of this round has yet to read.
+            g.buf.clear();
+            g.buf.extend_from_slice(data);
         }
         g.arrived += 1;
         if g.arrived == p {
+            std::mem::swap(&mut g.buf, &mut g.result);
             g.arrived = 0;
             g.generation += 1;
-            *data = g.result.clone();
+            data.clear();
+            data.extend_from_slice(&g.result);
             self.cv.notify_all();
             Ok(())
         } else {
@@ -177,28 +192,47 @@ impl Communicator {
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
-            *data = g.result.clone();
+            data.clear();
+            data.extend_from_slice(&g.result);
             Ok(())
         }
     }
 
-    /// All-gather: returns every member's contribution, ordered by member
-    /// index.
-    pub fn all_gather(&self, rank: usize, data: &[f32]) -> Result<Vec<Vec<f32>>, CommError> {
+    /// All-gather into a caller-provided flat buffer: `out` receives every
+    /// member's contribution concatenated in member-index order
+    /// (`out.len() == p * data.len()`).  All members must contribute
+    /// identically-shaped data.  Neither the communicator nor the caller
+    /// allocates once warm (`out` is cleared and refilled in place).
+    pub fn all_gather_into(
+        &self,
+        rank: usize,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), CommError> {
         let idx = self.member_index(rank)?;
         let p = self.size();
         if p == 1 {
-            return Ok(vec![data.to_vec()]);
+            out.clear();
+            out.extend_from_slice(data);
+            return Ok(());
         }
         let mut g = self.m.lock().unwrap();
-        g.gather[idx] = data.to_vec();
+        g.gather[idx].clear();
+        g.gather[idx].extend_from_slice(data);
         g.arrived += 1;
         if g.arrived == p {
             g.arrived = 0;
             g.generation += 1;
-            let out = g.gather.clone();
+            let inner = &mut *g;
+            inner.result.clear();
+            for m in inner.gather.iter() {
+                debug_assert_eq!(m.len(), data.len(), "mismatched all-gather shapes");
+                inner.result.extend_from_slice(m);
+            }
+            out.clear();
+            out.extend_from_slice(&inner.result);
             self.cv.notify_all();
-            Ok(out)
+            Ok(())
         } else {
             let gen0 = g.generation;
             let (g, to) = self
@@ -208,8 +242,22 @@ impl Communicator {
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
-            Ok(g.gather.clone())
+            out.clear();
+            out.extend_from_slice(&g.result);
+            Ok(())
         }
+    }
+
+    /// All-gather, allocating convenience form: every member's contribution,
+    /// ordered by member index.  Wrapper over [`Self::all_gather_into`];
+    /// prefer that on hot paths.
+    pub fn all_gather(&self, rank: usize, data: &[f32]) -> Result<Vec<Vec<f32>>, CommError> {
+        let mut flat = Vec::new();
+        self.all_gather_into(rank, data, &mut flat)?;
+        if data.is_empty() {
+            return Ok(vec![Vec::new(); self.size()]);
+        }
+        Ok(flat.chunks(data.len()).map(|c| c.to_vec()).collect())
     }
 }
 
@@ -380,6 +428,73 @@ mod tests {
         for h in handles {
             let out = h.join().unwrap();
             assert_eq!(out, vec![vec![0.0], vec![1.0]]);
+        }
+    }
+
+    #[test]
+    fn all_gather_into_flat_and_reusable() {
+        let pool = pool();
+        let g = pool.get(&[0, 1, 2, 3]).unwrap();
+        // Two rounds through the same caller buffers: contents must be the
+        // round's own, concatenated in member order.
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut out = Vec::new();
+                    let mut rounds = Vec::new();
+                    for round in 0..3 {
+                        let data = [(100 * round + r) as f32, 0.5];
+                        g.all_gather_into(r, &data, &mut out).unwrap();
+                        rounds.push(out.clone());
+                    }
+                    rounds
+                })
+            })
+            .collect();
+        for h in handles {
+            let rounds = h.join().unwrap();
+            for (round, out) in rounds.iter().enumerate() {
+                let want: Vec<f32> = (0..4)
+                    .flat_map(|m| [(100 * round + m) as f32, 0.5])
+                    .collect();
+                assert_eq!(out, &want, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_into_singleton() {
+        let pool = pool();
+        let g = pool.get(&[3]).unwrap();
+        let mut out = vec![9.0; 7]; // stale contents must be replaced
+        g.all_gather_into(3, &[1.0, 2.0], &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn repeated_broadcasts_keep_rounds_straight() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for step in 0..50 {
+                        let mut d = if r == 0 { vec![step as f32] } else { vec![-1.0] };
+                        g.broadcast(r, &mut d).unwrap();
+                        outs.push(d[0]);
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in handles {
+            let outs = h.join().unwrap();
+            for (step, &x) in outs.iter().enumerate() {
+                assert_eq!(x, step as f32);
+            }
         }
     }
 

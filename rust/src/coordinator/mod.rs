@@ -19,6 +19,23 @@
 //! every issued step before the next iteration); TP members execute
 //! concurrently on their threads and meet in the Communicator Pool's
 //! collectives.
+//!
+//! # Hot-path discipline
+//!
+//! The steady-state loop performs **zero heap allocations on the
+//! coordinator thread once warm** (asserted by the counting allocator in
+//! `benches/sched_hotpath.rs`):
+//!
+//!  * step inputs live in per-engine `Arc`'d arenas — by the lockstep
+//!    protocol the engine has dropped its clone by reply time, so
+//!    `Arc::make_mut` recycles the same allocation every step;
+//!  * block-table rows are copied from the KV adaptor's incrementally
+//!    maintained cache (`table_row_ref`), never rebuilt;
+//!  * plan/collection bookkeeping uses `StepScratch` buffers swapped in
+//!    and out of the cluster;
+//!  * engine lookups (`idle`, unit-mode, draining) are O(1) bitmask reads
+//!    maintained by `refresh_engine`/`refresh_draining` instead of linear
+//!    scans per waiting request.
 
 pub mod policy;
 pub mod strategy;
@@ -27,14 +44,13 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::comm::CommunicatorPool;
 use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChunk};
 use crate::kv::KvCacheAdaptor;
 use crate::metrics::Recorder;
-use crate::model::ModelCfg;
-use crate::runtime::Manifest;
+use crate::model::{ModelCfg, StaticShapes};
 use crate::workload::Priority;
 use policy::{ModeDecision, Policy, Snapshot};
 use strategy::Strategy;
@@ -105,6 +121,57 @@ pub struct ClusterOutcome {
     pub outputs: BTreeMap<u64, Vec<i32>>,
     pub rejected: Vec<u64>,
     pub switches: Vec<SwitchEvent>,
+    /// Scheduling iterations that issued at least one engine step.
+    pub n_steps: usize,
+}
+
+/// One work-issue record: enough to collect replies and publish results
+/// without any per-step allocation (rids are read back from the engine
+/// scratch arenas).
+#[derive(Clone, Copy, Debug)]
+struct Issued {
+    home: usize,
+    p: usize,
+    is_prefill: bool,
+}
+
+/// Per-engine step-input arenas.  The `Arc`s are shared with the engine
+/// worker for the duration of one step; `Arc::make_mut` on the next step
+/// reuses the allocation (the worker has dropped its clone by reply time).
+struct EngineScratch {
+    decode_batch: Arc<Vec<DecodeSlot>>,
+    prefill_chunk: Arc<PrefillChunk>,
+    /// Retired `DecodeSlot`s (with their row buffers) for reuse.
+    spare_slots: Vec<DecodeSlot>,
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        EngineScratch {
+            decode_batch: Arc::new(Vec::new()),
+            prefill_chunk: Arc::new(PrefillChunk::default()),
+            spare_slots: Vec::new(),
+        }
+    }
+}
+
+/// Reusable coordinator-side buffers (swapped out with `mem::take` for the
+/// duration of a call, then restored, so the borrow checker sees disjoint
+/// state).
+#[derive(Default)]
+struct StepScratch {
+    covered: Vec<bool>,
+    issued: Vec<Issued>,
+    decode_rids: Vec<u64>,
+    publish_rids: Vec<u64>,
+    starts: Vec<usize>,
+    busy: Vec<u64>,
+    ids: Vec<u64>,
+    waiting_buf: Vec<u64>,
+    /// Engines with a command in flight whose reply has not been collected
+    /// yet.  Used to re-synchronize the persistent per-engine reply
+    /// channels if a step aborts mid-collection.
+    pending_mask: u64,
 }
 
 /// The real serving cluster: N engine threads + adaptors + communicator
@@ -130,12 +197,32 @@ pub struct Cluster {
     rejected: Vec<u64>,
     switches: Vec<SwitchEvent>,
     t0: Instant,
+    n_steps: usize,
+
+    // O(1) engine-state indexes (≤ 64 engines):
+    /// Engines currently in unit (DP) mode.
+    unit_mask: u64,
+    /// Unit-mode engines with no bound requests (the policy's idle count).
+    idle_mask: u64,
+    /// Engines inside a group that is draining toward a pending TP bind.
+    draining_mask: u64,
+
+    // hot-path arenas
+    engine_scratch: Vec<EngineScratch>,
+    scratch: StepScratch,
 }
 
 impl Cluster {
-    /// Boot `n_engines` engine workers for `model` (weights loaded once,
-    /// artifacts compiled eagerly, communicator pool pre-initialized).
-    pub fn start(manifest: &Arc<Manifest>, model: &str, n_engines: usize) -> Result<Cluster> {
+    /// Boot `n_engines` engine workers for `model` over the real PJRT
+    /// execution core (weights loaded once, artifacts compiled eagerly,
+    /// communicator pool pre-initialized).
+    #[cfg(feature = "pjrt")]
+    pub fn start(
+        manifest: &Arc<crate::runtime::Manifest>,
+        model: &str,
+        n_engines: usize,
+    ) -> Result<Cluster> {
+        use anyhow::Context;
         let mm = manifest.model(model)?;
         let cfg = mm.cfg.clone();
         let ws = Arc::new(mm.load_weights()?);
@@ -148,7 +235,6 @@ impl Cluster {
         if !degrees.contains(&1) {
             degrees.push(1);
         }
-        let max_tp = degrees.iter().copied().max().unwrap_or(1);
         let comm = Arc::new(CommunicatorPool::new(
             n_engines,
             &degrees,
@@ -161,15 +247,57 @@ impl Cluster {
                     .with_context(|| format!("starting engine {id}"))?,
             );
         }
+        Self::assemble(cfg, engines, comm, degrees, manifest.shapes)
+    }
+
+    /// Boot `n_engines` workers over the deterministic stub backend — the
+    /// full scheduler/adaptor/collective path with no PJRT dependency.
+    /// Used by CI integration tests and the scheduler benches.
+    pub fn start_stub(cfg: ModelCfg, shapes: StaticShapes, n_engines: usize) -> Result<Cluster> {
+        let mut degrees = Vec::new();
+        let mut p = 1usize;
+        while p <= n_engines {
+            if cfg.supports_tp(p) {
+                degrees.push(p);
+            }
+            p *= 2;
+        }
+        if !degrees.contains(&1) {
+            degrees.push(1);
+        }
+        let comm = Arc::new(CommunicatorPool::new(
+            n_engines,
+            &degrees,
+            Duration::from_secs(30),
+        ));
+        let mut engines = Vec::new();
+        for id in 0..n_engines {
+            engines.push(EngineHandle::spawn_stub(id, cfg.clone(), shapes, comm.clone())?);
+        }
+        Self::assemble(cfg, engines, comm, degrees, shapes)
+    }
+
+    fn assemble(
+        cfg: ModelCfg,
+        engines: Vec<EngineHandle>,
+        comm: Arc<CommunicatorPool>,
+        degrees: Vec<usize>,
+        shapes: StaticShapes,
+    ) -> Result<Cluster> {
+        let n_engines = engines.len();
+        if n_engines > 64 {
+            bail!("engine-state bitmasks support at most 64 engines (got {n_engines})");
+        }
+        let max_tp = degrees.iter().copied().max().unwrap_or(1);
         let adaptors = (0..n_engines).map(|_| KvCacheAdaptor::new(cfg.clone())).collect();
-        Ok(Cluster {
+        let mut c = Cluster {
             cfg,
             engines,
             adaptors,
             comm,
             max_tp,
-            b_dec: manifest.shapes.b_dec,
-            c_prefill: manifest.shapes.c_prefill,
+            b_dec: shapes.b_dec,
+            c_prefill: shapes.c_prefill,
             waiting: Vec::new(),
             active: BTreeMap::new(),
             engine_active: vec![Vec::new(); n_engines],
@@ -180,7 +308,17 @@ impl Cluster {
             rejected: Vec::new(),
             switches: Vec::new(),
             t0: Instant::now(),
-        })
+            n_steps: 0,
+            unit_mask: 0,
+            idle_mask: 0,
+            draining_mask: 0,
+            engine_scratch: (0..n_engines).map(|_| EngineScratch::default()).collect(),
+            scratch: StepScratch::default(),
+        };
+        for e in 0..n_engines {
+            c.refresh_engine(e);
+        }
+        Ok(c)
     }
 
     pub fn n_engines(&self) -> usize {
@@ -193,6 +331,37 @@ impl Cluster {
 
     fn members(&self, start: usize, p: usize) -> std::ops::Range<usize> {
         start..start + p
+    }
+
+    /// Recompute the unit/idle index bits for engine `e`.  Must be called
+    /// after any mutation of `engine_mode[e]` or `engine_active[e]`.
+    fn refresh_engine(&mut self, e: usize) {
+        let bit = 1u64 << e;
+        if self.engine_mode[e] == 1 {
+            self.unit_mask |= bit;
+            if self.engine_active[e].is_empty() {
+                self.idle_mask |= bit;
+            } else {
+                self.idle_mask &= !bit;
+            }
+        } else {
+            self.unit_mask &= !bit;
+            self.idle_mask &= !bit;
+        }
+    }
+
+    /// Recompute the draining mask.  Must be called after any mutation of a
+    /// group's `tp_pending`.
+    fn refresh_draining(&mut self) {
+        let mut mask = 0u64;
+        for (&start, g) in &self.groups {
+            if !g.tp_pending.is_empty() {
+                for e in start..(start + g.p).min(self.engines.len()) {
+                    mask |= 1u64 << e;
+                }
+            }
+        }
+        self.draining_mask = mask;
     }
 
     /// Live mode switch: SetMode RPC to every member + communicator fetch.
@@ -209,6 +378,7 @@ impl Cluster {
             if e < self.engines.len() {
                 self.engines[e].call(EngineCmd::SetMode { p: p_to })?;
                 self.engine_mode[e] = p_to;
+                self.refresh_engine(e);
             }
         }
         let dt = t_start.elapsed().as_secs_f64();
@@ -233,9 +403,10 @@ impl Cluster {
         policy: &mut dyn Policy,
         strategy: Strategy,
     ) -> Result<ClusterOutcome> {
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let mut recorder = Recorder::new();
         self.t0 = Instant::now();
+        self.n_steps = 0;
         let mut next_arrival = 0usize;
         let mut idle_iters = 0usize;
 
@@ -260,7 +431,7 @@ impl Cluster {
                 let rb = &self.active[b].sr;
                 rb.priority
                     .cmp(&ra.priority)
-                    .then(ra.arrival.partial_cmp(&rb.arrival).unwrap())
+                    .then(ra.arrival.total_cmp(&rb.arrival))
             });
 
             // ③+④+⑤ Mode determination, KV parameterization, binding.
@@ -268,6 +439,9 @@ impl Cluster {
 
             // ⑥ Execute one step on every engine/group with work.
             let stepped = self.execute_step(&mut recorder)?;
+            if stepped {
+                self.n_steps += 1;
+            }
 
             // Exit/idle handling.
             let done = self.active.values().all(|a| a.phase == Phase::Done)
@@ -300,11 +474,46 @@ impl Cluster {
             outputs: std::mem::take(&mut self.outputs),
             rejected: std::mem::take(&mut self.rejected),
             switches: std::mem::take(&mut self.switches),
+            n_steps: self.n_steps,
         })
+    }
+
+    /// Submit a request straight into the task pool (schedulable from the
+    /// next iteration).  Fine-grained alternative to [`Self::run_trace`]
+    /// for streaming drivers and the scheduler benches.
+    pub fn submit(&mut self, sr: ServeRequest, recorder: &mut Recorder) {
+        recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
+        self.admit(sr);
+    }
+
+    /// Run one full scheduling iteration (settle → sync → assign →
+    /// execute); returns whether any engine stepped.  [`Self::run_trace`]
+    /// is this in a loop plus arrival replay.
+    pub fn step_once(
+        &mut self,
+        policy: &mut dyn Policy,
+        strategy: Strategy,
+        recorder: &mut Recorder,
+    ) -> Result<bool> {
+        self.settle_groups(recorder)?;
+        self.waiting.sort_by(|a, b| {
+            let ra = &self.active[a].sr;
+            let rb = &self.active[b].sr;
+            rb.priority
+                .cmp(&ra.priority)
+                .then(ra.arrival.total_cmp(&rb.arrival))
+        });
+        self.assign_waiting(policy, strategy, recorder)?;
+        let stepped = self.execute_step(recorder)?;
+        if stepped {
+            self.n_steps += 1;
+        }
+        Ok(stepped)
     }
 
     fn admit(&mut self, sr: ServeRequest) {
         let id = sr.id;
+        let emitted = Vec::with_capacity(sr.max_new + 1);
         self.active.insert(
             id,
             Active {
@@ -313,7 +522,7 @@ impl Cluster {
                 home: 0,
                 phase: Phase::Prefill,
                 pos: 0,
-                emitted: Vec::new(),
+                emitted,
                 paused: false,
                 speculative: false,
                 forced: Vec::new(),
@@ -324,12 +533,9 @@ impl Cluster {
     }
 
     fn snapshot(&self) -> Snapshot {
-        let idle = (0..self.engines.len())
-            .filter(|&e| self.engine_mode[e] == 1 && self.engine_active[e].is_empty())
-            .count();
         Snapshot {
             queue_len: self.waiting.len(),
-            idle_engines: idle,
+            idle_engines: self.idle_mask.count_ones() as usize,
             n_engines: self.engines.len(),
             dp_capacity_tokens: self.cfg.dp_token_capacity(),
             max_tp: self.max_tp,
@@ -343,9 +549,12 @@ impl Cluster {
         strategy: Strategy,
         recorder: &mut Recorder,
     ) -> Result<()> {
-        let waiting = std::mem::take(&mut self.waiting);
-        let backlog_total = waiting.len();
-        for (qi, rid) in waiting.into_iter().enumerate() {
+        // Ping-pong the waiting list through a warm scratch buffer so the
+        // requeue path never allocates.
+        std::mem::swap(&mut self.waiting, &mut self.scratch.waiting_buf);
+        let backlog_total = self.scratch.waiting_buf.len();
+        for qi in 0..backlog_total {
+            let rid = self.scratch.waiting_buf[qi];
             let mut snap = self.snapshot();
             // Include requests later in this same drain in the backlog so
             // the burst signal sees the true queue depth.
@@ -377,6 +586,7 @@ impl Cluster {
                 }
             }
         }
+        self.scratch.waiting_buf.clear();
         Ok(())
     }
 
@@ -400,12 +610,26 @@ impl Cluster {
     }
 
     /// Bind to the least-loaded unbound engine with KV headroom, or queue.
+    /// Candidates come from the unit/draining bitmask indexes — O(set bits)
+    /// instead of a predicate scan over every engine.
     fn try_bind_dp(&mut self, rid: u64, recorder: &mut Recorder) -> Result<()> {
         let need = self.block_need(rid, 1);
-        let pick = (0..self.engines.len())
-            .filter(|&e| self.engine_mode[e] == 1 && !self.engine_draining(e))
-            .filter(|&e| self.engine_committed[e] + need <= self.cfg.n_blocks - 1)
-            .min_by_key(|&e| self.engine_active[e].len());
+        let mut candidates = self.unit_mask & !self.draining_mask;
+        let mut pick: Option<usize> = None;
+        while candidates != 0 {
+            let e = candidates.trailing_zeros() as usize;
+            candidates &= candidates - 1;
+            if self.engine_committed[e] + need > self.cfg.n_blocks - 1 {
+                continue;
+            }
+            match pick {
+                None => pick = Some(e),
+                Some(p) if self.engine_active[p].len() > self.engine_active[e].len() => {
+                    pick = Some(e)
+                }
+                _ => {}
+            }
+        }
         match pick {
             Some(e) => {
                 self.commit(rid, e, need);
@@ -426,18 +650,13 @@ impl Cluster {
         q
     }
 
-    fn engine_draining(&self, e: usize) -> bool {
-        self.groups
-            .iter()
-            .any(|(&start, g)| e >= start && e < start + g.p && !g.tp_pending.is_empty())
-    }
-
     fn bind_dp(&mut self, rid: u64, e: usize, recorder: &mut Recorder) -> Result<()> {
         self.adaptors[e].register(rid, 1)?;
         let a = self.active.get_mut(&rid).unwrap();
         a.mode_p = 1;
         a.home = e;
         self.engine_active[e].push(rid);
+        self.refresh_engine(e);
         recorder.on_first_sched(rid, self.now());
         Ok(())
     }
@@ -462,31 +681,43 @@ impl Cluster {
                     && (!g.tp_active.is_empty() || !g.tp_pending.is_empty())
             })
         };
-        let starts: Vec<usize> = (0..self.engines.len())
-            .step_by(p)
-            .filter(|&s| s + p <= self.engines.len() && !conflict(s))
-            .collect();
-        if starts.is_empty() {
+        let mut bound: Option<usize> = None;
+        let mut best: Option<(usize, usize)> = None; // (load, start)
+        let mut any_start = false;
+        let mut s = 0usize;
+        while s + p <= self.engines.len() {
+            if !conflict(s) {
+                any_start = true;
+                if self
+                    .groups
+                    .get(&s)
+                    .map(|g| g.p == p && g.tp_active.len() < self.b_dec)
+                    .unwrap_or(false)
+                {
+                    if bound.is_none() {
+                        bound = Some(s);
+                    }
+                } else if bound.is_none() {
+                    let load: usize = self
+                        .members(s, p)
+                        .map(|e| {
+                            self.engine_active[e].len()
+                                + 100 * (self.engine_mode[e] > 1) as usize
+                        })
+                        .sum();
+                    if best.map(|(l, _)| load < l).unwrap_or(true) {
+                        best = Some((load, s));
+                    }
+                }
+            }
+            s += p;
+        }
+        if !any_start {
             // No compatible group right now; retry next iteration.
             self.waiting.push(rid);
             return Ok(());
         }
-        let bound = starts.iter().copied().find(|s| {
-            self.groups
-                .get(s)
-                .map(|g| g.p == p && g.tp_active.len() < self.b_dec)
-                .unwrap_or(false)
-        });
-        let start = bound.unwrap_or_else(|| {
-            *starts
-                .iter()
-                .min_by_key(|&&s| {
-                    self.members(s, p)
-                        .map(|e| self.engine_active[e].len() + 100 * (self.engine_mode[e] > 1) as usize)
-                        .sum::<usize>()
-                })
-                .unwrap()
-        });
+        let start = bound.unwrap_or_else(|| best.map(|(_, s)| s).unwrap());
 
         // Admission control: all members must have block headroom for the
         // request's worst case under layout p.
@@ -499,16 +730,20 @@ impl Cluster {
             return Ok(());
         }
 
-        let busy: Vec<u64> = self
-            .members(start, p)
-            .flat_map(|e| self.engine_active[e].clone())
-            .filter(|r| {
-                self.active
-                    .get(r)
+        let mut busy = std::mem::take(&mut self.scratch.busy);
+        busy.clear();
+        for e in self.members(start, p) {
+            for &r in &self.engine_active[e] {
+                if self
+                    .active
+                    .get(&r)
                     .map(|a| a.phase != Phase::Done && !a.paused)
                     .unwrap_or(false)
-            })
-            .collect();
+                {
+                    busy.push(r);
+                }
+            }
+        }
 
         let g = self.groups.entry(start).or_insert_with(|| Group { p, ..Default::default() });
         g.p = p;
@@ -530,6 +765,7 @@ impl Cluster {
             a.home = start;
             self.groups.get_mut(&start).unwrap().tp_active.push(rid);
             recorder.on_first_sched(rid, self.now());
+            self.scratch.busy = busy;
             return Ok(());
         }
 
@@ -537,12 +773,14 @@ impl Cluster {
         match strategy {
             Strategy::Sequential => {
                 self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                self.refresh_draining();
                 let a = self.active.get_mut(&rid).unwrap();
                 a.mode_p = p;
                 a.home = start;
             }
             Strategy::SoftPreempt => {
                 self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                self.refresh_draining();
                 let a = self.active.get_mut(&rid).unwrap();
                 a.mode_p = p;
                 a.home = start;
@@ -561,12 +799,13 @@ impl Cluster {
                     a.mode_p = 1; // runs as DP for now
                     a.home = e;
                     self.engine_active[e].push(rid);
+                    self.refresh_engine(e);
                     recorder.on_first_sched(rid, self.now());
                 }
             }
             Strategy::HardPreempt => {
                 // Pause members' DP requests in place (KV stays resident).
-                for other in busy {
+                for &other in busy.iter() {
                     if let Some(a) = self.active.get_mut(&other) {
                         a.paused = true;
                         self.adaptors[a.home].pause(other)?;
@@ -584,14 +823,22 @@ impl Cluster {
                 recorder.on_first_sched(rid, self.now());
             }
         }
+        self.scratch.busy = busy;
         Ok(())
     }
 
     /// Promote pending TP requests whose group has finished draining, and
     /// dissolve groups whose TP work is done.
     fn settle_groups(&mut self, recorder: &mut Recorder) -> Result<()> {
-        let starts: Vec<usize> = self.groups.keys().copied().collect();
-        for start in starts {
+        if self.groups.is_empty() {
+            return Ok(());
+        }
+        let mut starts = std::mem::take(&mut self.scratch.starts);
+        starts.clear();
+        starts.extend(self.groups.keys().copied());
+        let mut dirty_draining = false;
+        for si in 0..starts.len() {
+            let start = starts[si];
             let (p, pending_empty, active_empty) = {
                 let g = &self.groups[&start];
                 (g.p, g.tp_pending.is_empty(), g.tp_active.is_empty())
@@ -601,19 +848,23 @@ impl Cluster {
             if pending_empty && active_empty {
                 if self.engine_mode[start] == p && p > 1 {
                     self.switch_group(start, 1)?;
+                    let mut resumed = std::mem::take(&mut self.scratch.ids);
                     for e in self.members(start, p) {
-                        let resumed: Vec<u64> = self.engine_active[e]
-                            .iter()
-                            .copied()
-                            .filter(|r| self.active.get(r).map(|a| a.paused).unwrap_or(false))
-                            .collect();
-                        for r in resumed {
+                        resumed.clear();
+                        for &r in &self.engine_active[e] {
+                            if self.active.get(&r).map(|a| a.paused).unwrap_or(false) {
+                                resumed.push(r);
+                            }
+                        }
+                        for &r in resumed.iter() {
                             self.adaptors[e].resume(r)?;
                             self.active.get_mut(&r).unwrap().paused = false;
                         }
                     }
+                    self.scratch.ids = resumed;
                 }
                 self.groups.remove(&start);
+                dirty_draining = true;
                 continue;
             }
 
@@ -635,15 +886,11 @@ impl Cluster {
                         self.switch_group(start, p)?;
                     }
                     let pending = std::mem::take(&mut self.groups.get_mut(&start).unwrap().tp_pending);
+                    dirty_draining = true;
                     for rid in pending {
                         // Admission: TP-layout headroom on every member
-                        // (speculative DP commitment is released first).
+                        // (the request's own held commitment is discounted).
                         let need_p = self.block_need(rid, p);
-                        let spec_blocks: usize = self.active[&rid]
-                            .committed
-                            .iter()
-                            .map(|&(_, b)| b)
-                            .sum();
                         let room = self.members(start, p).all(|e| {
                             let held = self.active[&rid]
                                 .committed
@@ -653,7 +900,6 @@ impl Cluster {
                                 .sum::<usize>();
                             self.engine_committed[e] - held + need_p <= self.cfg.n_blocks - 1
                         });
-                        let _ = spec_blocks;
                         if !room {
                             self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
                             continue;
@@ -667,11 +913,15 @@ impl Cluster {
                         if was_spec {
                             self.adaptors[spec_home].release(rid)?;
                             self.engine_active[spec_home].retain(|&r| r != rid);
+                            self.refresh_engine(spec_home);
                             let a = self.active.get_mut(&rid).unwrap();
                             a.speculative = false;
                             // Recompute prompt + already-fed output tokens.
-                            let emitted = a.emitted.clone();
-                            a.forced = if emitted.is_empty() { vec![] } else { vec![*emitted.last().unwrap()] };
+                            a.forced = if a.emitted.is_empty() {
+                                vec![]
+                            } else {
+                                vec![*a.emitted.last().unwrap()]
+                            };
                             a.pos = 0;
                             a.phase = Phase::Prefill;
                         }
@@ -689,132 +939,145 @@ impl Cluster {
                 }
             }
         }
+        self.scratch.starts = starts;
+        if dirty_draining {
+            self.refresh_draining();
+        }
         Ok(())
     }
 
-    /// Step ⑥: issue one step per engine/group, lockstep.
+    /// Step ⑥: issue one step per engine/group, lockstep.  Allocation-free
+    /// once warm: plans and batches live in recycled arenas.
     fn execute_step(&mut self, recorder: &mut Recorder) -> Result<bool> {
         self.settle_groups(recorder)?;
 
-        // Build the step plan.
-        enum Plan {
-            DpPrefill { e: usize, rid: u64 },
-            DpDecode { e: usize, rids: Vec<u64> },
-            TpPrefill { start: usize, p: usize, rid: u64 },
-            TpDecode { start: usize, p: usize, rids: Vec<u64> },
+        let mut sc = std::mem::take(&mut self.scratch);
+        let result = self.execute_step_inner(&mut sc, recorder);
+        if result.is_err() {
+            // Re-synchronize the persistent per-engine reply channels: any
+            // reply still outstanding from this aborted step would otherwise
+            // be mis-attributed to the next command on this cluster.
+            let mut pending = sc.pending_mask;
+            while pending != 0 {
+                let e = pending.trailing_zeros() as usize;
+                pending &= pending - 1;
+                let _ = self.engines[e].recv();
+            }
         }
-        let mut plans: Vec<Plan> = Vec::new();
-        let mut covered = vec![false; self.engines.len()];
+        sc.pending_mask = 0;
+        self.scratch = sc;
+        result
+    }
+
+    fn execute_step_inner(
+        &mut self,
+        sc: &mut StepScratch,
+        recorder: &mut Recorder,
+    ) -> Result<bool> {
+        // ---- plan + issue -------------------------------------------------
+        sc.issued.clear();
+        sc.pending_mask = 0;
+        sc.covered.clear();
+        sc.covered.resize(self.engines.len(), false);
+        sc.starts.clear();
+        sc.starts.extend(self.groups.keys().copied());
 
         // TP groups first.
-        for (&start, g) in &self.groups {
-            if g.tp_active.is_empty() {
+        for &start in sc.starts.iter() {
+            let (p, has_active) = {
+                let g = &self.groups[&start];
+                (g.p, !g.tp_active.is_empty())
+            };
+            if !has_active {
                 continue;
             }
-            for e in self.members(start, g.p) {
-                covered[e] = true;
+            for e in self.members(start, p) {
+                sc.covered[e] = true;
             }
             // Prefill-first within the group (chunked prefill).
-            let pre = g.tp_active.iter().copied().find(|r| {
-                self.active.get(r).map(|a| a.phase == Phase::Prefill).unwrap_or(false)
-            });
+            let pre = {
+                let g = &self.groups[&start];
+                g.tp_active.iter().copied().find(|r| {
+                    self.active.get(r).map(|a| a.phase == Phase::Prefill).unwrap_or(false)
+                })
+            };
             if let Some(rid) = pre {
-                plans.push(Plan::TpPrefill { start, p: g.p, rid });
+                for e in self.members(start, p) {
+                    let chunk = self.make_prefill_chunk(rid, e)?;
+                    self.engines[e].send(EngineCmd::TpPrefill { p, chunk });
+                    sc.pending_mask |= 1u64 << e;
+                }
+                sc.issued.push(Issued { home: start, p, is_prefill: true });
             } else {
-                let rids: Vec<u64> = g
-                    .tp_active
-                    .iter()
-                    .copied()
-                    .filter(|r| self.active.get(r).map(|a| a.phase == Phase::Decode).unwrap_or(false))
-                    .take(self.b_dec)
-                    .collect();
-                if !rids.is_empty() {
-                    plans.push(Plan::TpDecode { start, p: g.p, rids });
+                sc.decode_rids.clear();
+                {
+                    let g = &self.groups[&start];
+                    for &r in g.tp_active.iter() {
+                        if self.active.get(&r).map(|a| a.phase == Phase::Decode).unwrap_or(false) {
+                            if sc.decode_rids.len() == self.b_dec {
+                                break;
+                            }
+                            sc.decode_rids.push(r);
+                        }
+                    }
+                }
+                if !sc.decode_rids.is_empty() {
+                    for e in self.members(start, p) {
+                        let batch = self.make_decode_batch(e, &sc.decode_rids)?;
+                        self.engines[e].send(EngineCmd::TpDecode { p, batch });
+                        sc.pending_mask |= 1u64 << e;
+                    }
+                    sc.issued.push(Issued { home: start, p, is_prefill: false });
                 }
             }
         }
 
         // DP engines.
         for e in 0..self.engines.len() {
-            if covered[e] {
+            if sc.covered[e] {
                 continue;
             }
-            let runnable: Vec<u64> = self.engine_active[e]
-                .iter()
-                .copied()
-                .filter(|r| {
-                    self.active
-                        .get(r)
-                        .map(|a| !a.paused && a.phase != Phase::Done)
-                        .unwrap_or(false)
-                })
-                .collect();
-            let pre = runnable.iter().copied().find(|r| self.active[r].phase == Phase::Prefill);
-            if let Some(rid) = pre {
-                plans.push(Plan::DpPrefill { e, rid });
-            } else {
-                let rids: Vec<u64> = runnable
-                    .into_iter()
-                    .filter(|r| self.active[r].phase == Phase::Decode)
-                    .take(self.b_dec)
-                    .collect();
-                if !rids.is_empty() {
-                    plans.push(Plan::DpDecode { e, rids });
+            let mut pre: Option<u64> = None;
+            sc.decode_rids.clear();
+            for &r in &self.engine_active[e] {
+                let Some(a) = self.active.get(&r) else { continue };
+                if a.paused || a.phase == Phase::Done {
+                    continue;
                 }
+                if a.phase == Phase::Prefill {
+                    if pre.is_none() {
+                        pre = Some(r);
+                    }
+                } else if sc.decode_rids.len() < self.b_dec {
+                    sc.decode_rids.push(r);
+                }
+            }
+            if let Some(rid) = pre {
+                let chunk = self.make_prefill_chunk(rid, e)?;
+                self.engines[e].send(EngineCmd::DpPrefill { chunk });
+                sc.pending_mask |= 1u64 << e;
+                sc.issued.push(Issued { home: e, p: 1, is_prefill: true });
+            } else if !sc.decode_rids.is_empty() {
+                let batch = self.make_decode_batch(e, &sc.decode_rids)?;
+                self.engines[e].send(EngineCmd::DpDecode { batch });
+                sc.pending_mask |= 1u64 << e;
+                sc.issued.push(Issued { home: e, p: 1, is_prefill: false });
             }
         }
 
-        if plans.is_empty() {
+        if sc.issued.is_empty() {
             return Ok(false);
         }
 
-        // Issue all commands, then collect replies (TP members meet in the
-        // collectives, so their commands must all be in flight together).
-        struct Pending {
-            rxs: Vec<(usize, std::sync::mpsc::Receiver<EngineReply>)>,
-            rids: Vec<u64>,
-            is_prefill: bool,
-        }
-        let mut pendings: Vec<Pending> = Vec::new();
-
-        for plan in &plans {
-            match plan {
-                Plan::DpPrefill { e, rid } => {
-                    let chunk = self.make_prefill_chunk(*rid, *e, 1)?;
-                    let rx = self.engines[*e].send(EngineCmd::DpPrefill { chunk });
-                    pendings.push(Pending { rxs: vec![(*e, rx)], rids: vec![*rid], is_prefill: true });
-                }
-                Plan::DpDecode { e, rids } => {
-                    let batch = self.make_decode_batch(rids, *e, 1)?;
-                    let rx = self.engines[*e].send(EngineCmd::DpDecode { batch });
-                    pendings.push(Pending { rxs: vec![(*e, rx)], rids: rids.clone(), is_prefill: false });
-                }
-                Plan::TpPrefill { start, p, rid } => {
-                    let mut rxs = Vec::new();
-                    for e in self.members(*start, *p) {
-                        let chunk = self.make_prefill_chunk(*rid, e, *p)?;
-                        rxs.push((e, self.engines[e].send(EngineCmd::TpPrefill { p: *p, chunk })));
-                    }
-                    pendings.push(Pending { rxs, rids: vec![*rid], is_prefill: true });
-                }
-                Plan::TpDecode { start, p, rids } => {
-                    let mut rxs = Vec::new();
-                    for e in self.members(*start, *p) {
-                        let batch = self.make_decode_batch(rids, e, *p)?;
-                        rxs.push((e, self.engines[e].send(EngineCmd::TpDecode { p: *p, batch })));
-                    }
-                    pendings.push(Pending { rxs, rids: rids.clone(), is_prefill: false });
-                }
-            }
-        }
-
-        // Collect and publish.
-        for pend in pendings {
+        // ---- collect + publish (issue order; TP members meet in the
+        // collectives, so all their commands are already in flight) --------
+        for ii in 0..sc.issued.len() {
+            let Issued { home, p, is_prefill } = sc.issued[ii];
             let mut first: Option<EngineReply> = None;
-            for (e, rx) in pend.rxs {
-                let r = rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("engine {e} died mid-step"))?;
+            for e in self.members(home, p) {
+                let r = self.engines[e].recv();
+                sc.pending_mask &= !(1u64 << e);
+                let r = r?;
                 if let EngineReply::Err(msg) = &r {
                     bail!("engine {e}: {msg}");
                 }
@@ -823,12 +1086,16 @@ impl Cluster {
                 }
             }
             let now = self.now();
-            match (first.unwrap(), pend.is_prefill) {
+            match (first.unwrap(), is_prefill) {
                 (EngineReply::LastLogits(logits), true) => {
-                    self.advance_prefill(pend.rids[0], &logits, now, recorder)?;
+                    let rid = self.engine_scratch[home].prefill_chunk.rid;
+                    self.advance_prefill(rid, &logits, now, recorder)?;
                 }
                 (EngineReply::Logits(rows), false) => {
-                    for (rid, row) in pend.rids.iter().zip(rows) {
+                    sc.publish_rids.clear();
+                    sc.publish_rids
+                        .extend(self.engine_scratch[home].decode_batch.iter().map(|s| s.rid));
+                    for (rid, row) in sc.publish_rids.iter().zip(rows) {
                         self.advance_decode(*rid, &row, now, recorder)?;
                     }
                 }
@@ -838,54 +1105,84 @@ impl Cluster {
         Ok(true)
     }
 
-    /// Build the next prefill chunk for `rid` using engine `e`'s adaptor
-    /// under layout `p` (Algorithm 1 step 4: allocate + slot mapping).
-    fn make_prefill_chunk(&mut self, rid: u64, e: usize, p: usize) -> Result<PrefillChunk> {
-        let a = &self.active[&rid];
-        let full: Vec<i32> = a
-            .sr
-            .prompt
-            .iter()
-            .copied()
-            .chain(a.emitted.iter().copied().take(a.emitted.len().saturating_sub(1)))
-            .collect();
-        let start = a.pos;
-        let tokens: Vec<i32> = full[start..(start + self.c_prefill).min(full.len())].to_vec();
-        anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk for {rid}");
-        let _ = p;
-        self.adaptors[e].ensure_capacity(rid, start + tokens.len())?;
-        let slot_ids = (0..tokens.len())
-            .map(|i| self.adaptors[e].slot(rid, start + i))
-            .collect::<Result<Vec<u32>>>()?;
-        Ok(PrefillChunk {
-            rid,
-            tokens,
-            start,
-            slot_ids,
-            table_row: self.adaptors[e].table_row(rid)?,
-        })
+    /// Build the next prefill chunk for `rid` into engine `e`'s recycled
+    /// arena (Algorithm 1 step 4: allocate + slot mapping).  No allocation
+    /// once warm: tokens are indexed straight out of the request, the
+    /// block-table row is copied from the adaptor's cached row.
+    fn make_prefill_chunk(&mut self, rid: u64, e: usize) -> Result<Arc<PrefillChunk>> {
+        let (start, end, plen) = {
+            let a = &self.active[&rid];
+            let full_len = a.sr.prompt.len() + a.emitted.len().saturating_sub(1);
+            let start = a.pos;
+            (start, (start + self.c_prefill).min(full_len), a.sr.prompt.len())
+        };
+        anyhow::ensure!(end > start, "empty prefill chunk for {rid}");
+        self.adaptors[e].ensure_capacity(rid, end)?;
+        {
+            let a = &self.active[&rid];
+            let ch = Arc::make_mut(&mut self.engine_scratch[e].prefill_chunk);
+            ch.rid = rid;
+            ch.start = start;
+            ch.tokens.clear();
+            for i in start..end {
+                ch.tokens.push(if i < plen {
+                    a.sr.prompt[i]
+                } else {
+                    a.emitted[i - plen]
+                });
+            }
+        }
+        {
+            // Slot mapping needs the adaptor immutably; fill in a second
+            // pass to keep the borrows disjoint.
+            let ch = Arc::make_mut(&mut self.engine_scratch[e].prefill_chunk);
+            ch.slot_ids.clear();
+            for i in start..end {
+                ch.slot_ids.push(self.adaptors[e].slot(rid, i)?);
+            }
+            ch.table_row.clear();
+            ch.table_row.extend_from_slice(self.adaptors[e].table_row_ref(rid)?);
+        }
+        Ok(self.engine_scratch[e].prefill_chunk.clone())
     }
 
-    fn make_decode_batch(&mut self, rids: &[u64], e: usize, _p: usize) -> Result<Vec<DecodeSlot>> {
-        let mut out = Vec::new();
-        for &rid in rids {
-            let a = &self.active[&rid];
-            let token = *a
-                .emitted
-                .last()
-                .ok_or_else(|| anyhow::anyhow!("decode with no emitted token"))?;
-            let pos = a.pos;
+    /// Build a decode batch for engine `e` into its recycled arena.
+    fn make_decode_batch(&mut self, e: usize, rids: &[u64]) -> Result<Arc<Vec<DecodeSlot>>> {
+        // Grow/shrink the slot list, recycling retired slots (and their row
+        // buffers) through the spare pool.
+        {
+            let scratch = &mut self.engine_scratch[e];
+            let slots = Arc::make_mut(&mut scratch.decode_batch);
+            while slots.len() > rids.len() {
+                scratch.spare_slots.push(slots.pop().unwrap());
+            }
+            while slots.len() < rids.len() {
+                slots.push(scratch.spare_slots.pop().unwrap_or_default());
+            }
+        }
+        for (i, &rid) in rids.iter().enumerate() {
+            let (token, pos) = {
+                let a = &self.active[&rid];
+                let token = *a
+                    .emitted
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("decode with no emitted token"))?;
+                (token, a.pos)
+            };
             self.adaptors[e].ensure_capacity(rid, pos + 1)?;
             self.adaptors[e].set_seq_len(rid, pos + 1)?;
-            out.push(DecodeSlot {
-                rid,
-                token,
-                pos,
-                slot_id: self.adaptors[e].slot(rid, pos)?,
-                table_row: self.adaptors[e].table_row(rid)?,
-            });
+            let slot_id = self.adaptors[e].slot(rid, pos)?;
+            let row = self.adaptors[e].table_row_ref(rid)?;
+            let slots = Arc::make_mut(&mut self.engine_scratch[e].decode_batch);
+            let s = &mut slots[i];
+            s.rid = rid;
+            s.token = token;
+            s.pos = pos;
+            s.slot_id = slot_id;
+            s.table_row.clear();
+            s.table_row.extend_from_slice(row);
         }
-        Ok(out)
+        Ok(self.engine_scratch[e].decode_batch.clone())
     }
 
     fn prefill_total_len(&self, rid: u64) -> usize {
@@ -954,6 +1251,7 @@ impl Cluster {
         if mode_p <= 1 {
             self.adaptors[home].release(rid)?;
             self.engine_active[home].retain(|&r| r != rid);
+            self.refresh_engine(home);
         } else {
             for e in self.members(home, mode_p) {
                 self.adaptors[e].release(rid)?;

@@ -22,25 +22,7 @@ use crate::comm::CommunicatorPool;
 use crate::model::{StaticShapes, WeightStore};
 use crate::runtime::{ArtifactSpec, DynInputs, EngineBuffers, Manifest, Runtime, StepOutputs};
 
-/// One decode slot: a request with its adaptor-derived addressing.
-#[derive(Clone, Debug)]
-pub struct DecodeSlot {
-    pub rid: u64,
-    pub token: i32,
-    pub pos: usize,      // 0-based index of `token` (its kv appends here)
-    pub slot_id: u32,    // flat write slot from the adaptor
-    pub table_row: Vec<i32>, // padded to n_blocks
-}
-
-/// One prefill chunk of a single request.
-#[derive(Clone, Debug)]
-pub struct PrefillChunk {
-    pub rid: u64,
-    pub tokens: Vec<i32>,    // <= c_prefill actual tokens
-    pub start: usize,        // absolute position of tokens[0]
-    pub slot_ids: Vec<u32>,  // one per actual token
-    pub table_row: Vec<i32>, // padded to n_blocks
-}
+use super::{DecodeSlot, PrefillChunk};
 
 pub struct EngineCore {
     pub id: usize,
@@ -55,6 +37,12 @@ pub struct EngineCore {
     comm: Arc<CommunicatorPool>,
     /// Current mode: TP degree p (1 = independent DP engine).
     pub mode_p: usize,
+    /// Persistent dyn-input arenas for the fused DP fast path: refilled in
+    /// place every step (clear + resize keeps capacity), so a warm engine
+    /// assembles its step inputs without heap allocation.
+    dec_dyns: DynInputs,
+    pre_dyns: DynInputs,
+    slots_scratch: Vec<u32>,
 }
 
 impl EngineCore {
@@ -90,6 +78,9 @@ impl EngineCore {
             v_pools: vec![pool; cfg.n_layers],
             comm,
             mode_p: 1,
+            dec_dyns: DynInputs::new(),
+            pre_dyns: DynInputs::new(),
+            slots_scratch: Vec::new(),
         })
     }
 
@@ -116,29 +107,20 @@ impl EngineCore {
 
     /// Scatter new KV rows (one per batch slot/chunk token) into the host
     /// pools at the adaptor's slot ids — the authoritative KV write.
-    fn scatter_kv(&mut self, layer: usize, p: usize, slots: &[u32], k_new: &[f32], v_new: &[f32]) {
-        let cfg = self.cfg();
-        let w = (cfg.n_kv_heads / p) * cfg.d_head;
-        debug_assert_eq!(k_new.len(), slots.len() * w);
-        let kp = &mut self.k_pools[layer];
-        let vp = &mut self.v_pools[layer];
-        for (i, &s) in slots.iter().enumerate() {
-            let dst = s as usize * w;
-            kp[dst..dst + w].copy_from_slice(&k_new[i * w..(i + 1) * w]);
-            vp[dst..dst + w].copy_from_slice(&v_new[i * w..(i + 1) * w]);
-        }
-    }
-
+    /// Writes straight from the step outputs; no intermediate copies.
     fn apply_kv_outputs(&mut self, out: &StepOutputs, p: usize, slots: &[u32], layer_hint: usize) {
-        // Collect first to avoid borrowing self twice.
-        let triples: Vec<(usize, &Vec<f32>, &Vec<f32>)> = out
-            .kv_new
-            .iter()
-            .map(|(l, k, v)| (if *l < 0 { layer_hint } else { *l as usize }, k, v))
-            .collect();
-        for (layer, k, v) in triples {
-            let (k, v) = (k.clone(), v.clone());
-            self.scatter_kv(layer, p, slots, &k, &v);
+        let cfg = &self.ws.cfg;
+        let w = (cfg.n_kv_heads / p) * cfg.d_head;
+        for (l, k_new, v_new) in &out.kv_new {
+            let layer = if *l < 0 { layer_hint } else { *l as usize };
+            debug_assert_eq!(k_new.len(), slots.len() * w);
+            let kp = &mut self.k_pools[layer];
+            let vp = &mut self.v_pools[layer];
+            for (i, &s) in slots.iter().enumerate() {
+                let dst = s as usize * w;
+                kp[dst..dst + w].copy_from_slice(&k_new[i * w..(i + 1) * w]);
+                vp[dst..dst + w].copy_from_slice(&v_new[i * w..(i + 1) * w]);
+            }
         }
     }
 
@@ -148,40 +130,62 @@ impl EngineCore {
 
     /// One fused DP decode step over up to `b_dec` slots.  Returns the
     /// logits rows for the occupied slots (row i ↔ batch[i]).
+    ///
+    /// Step inputs are assembled into the engine's persistent arenas —
+    /// zero heap allocation once warm (the PJRT upload/readback boundary
+    /// still owns its own buffers).
     pub fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
         let b = self.shapes.b_dec;
         anyhow::ensure!(batch.len() <= b, "batch too large");
-        let cfg = self.cfg().clone();
-        let bt = cfg.block_tokens(1);
-        let mut tokens = vec![0i32; b];
-        let mut positions = vec![0i32; b];
-        let mut seq_lens = vec![0i32; b];
-        // Padded slots write into the trash block (slot i % bt).
-        let mut slots: Vec<u32> = (0..b).map(|i| (i % bt) as u32).collect();
-        let mut tables = vec![0i32; b * cfg.n_blocks];
-        for (i, s) in batch.iter().enumerate() {
-            tokens[i] = s.token;
-            positions[i] = s.pos as i32;
-            seq_lens[i] = s.pos as i32 + 1;
-            slots[i] = s.slot_id;
-            tables[i * cfg.n_blocks..(i + 1) * cfg.n_blocks].copy_from_slice(&s.table_row);
+        let n_blocks = self.ws.cfg.n_blocks;
+        let bt = self.ws.cfg.block_tokens(1);
+        let vocab = self.ws.cfg.vocab;
+        {
+            let slots = &mut self.slots_scratch;
+            slots.clear();
+            // Padded slots write into the trash block (slot i % bt).
+            slots.extend((0..b).map(|i| (i % bt) as u32));
+            let d = &mut self.dec_dyns;
+            let tokens = d.i32_mut("tokens");
+            tokens.clear();
+            tokens.resize(b, 0);
+            for (i, s) in batch.iter().enumerate() {
+                tokens[i] = s.token;
+            }
+            let positions = d.i32_mut("positions");
+            positions.clear();
+            positions.resize(b, 0);
+            for (i, s) in batch.iter().enumerate() {
+                positions[i] = s.pos as i32;
+            }
+            let seq_lens = d.i32_mut("seq_lens");
+            seq_lens.clear();
+            seq_lens.resize(b, 0);
+            for (i, s) in batch.iter().enumerate() {
+                seq_lens[i] = s.pos as i32 + 1;
+            }
+            let tables = d.i32_mut("block_tables");
+            tables.clear();
+            tables.resize(b * n_blocks, 0);
+            for (i, s) in batch.iter().enumerate() {
+                tables[i * n_blocks..(i + 1) * n_blocks].copy_from_slice(&s.table_row);
+                slots[i] = s.slot_id;
+            }
+            let slot_ids = d.i32_mut("slot_ids");
+            slot_ids.clear();
+            slot_ids.extend(slots.iter().map(|&s| s as i32));
         }
-        let dyns = DynInputs::new()
-            .i32("tokens", tokens)
-            .i32("positions", positions)
-            .i32("seq_lens", seq_lens)
-            .i32("block_tables", tables)
-            .i32("slot_ids", slots.iter().map(|&s| s as i32).collect());
         let (exe, spec) = self.exe("dp_decode")?;
         let out = self
             .rt
-            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+            .execute(exe, spec, &self.bufs, &self.dec_dyns, 0, &self.k_pools, &self.v_pools)?;
+        let slots = std::mem::take(&mut self.slots_scratch);
         self.apply_kv_outputs(&out, 1, &slots, 0);
-        let v = cfg.vocab;
+        self.slots_scratch = slots;
         Ok(batch
             .iter()
             .enumerate()
-            .map(|(i, _)| out.primary[i * v..(i + 1) * v].to_vec())
+            .map(|(i, _)| out.primary[i * vocab..(i + 1) * vocab].to_vec())
             .collect())
     }
 
@@ -191,30 +195,46 @@ impl EngineCore {
         let c = self.shapes.c_prefill;
         let nv = chunk.tokens.len();
         anyhow::ensure!(nv >= 1 && nv <= c, "chunk size {nv}");
-        let cfg = self.cfg().clone();
-        let bt = cfg.block_tokens(1);
-        let mut tokens = vec![0i32; c];
-        tokens[..nv].copy_from_slice(&chunk.tokens);
-        let mut positions = vec![0i32; c];
-        let mut slots: Vec<u32> = (0..c).map(|i| (i % bt) as u32).collect();
-        for i in 0..nv {
-            positions[i] = (chunk.start + i) as i32;
-            slots[i] = chunk.slot_ids[i];
+        anyhow::ensure!(chunk.slot_ids.len() == nv, "slot ids / tokens mismatch");
+        let bt = self.ws.cfg.block_tokens(1);
+        let vocab = self.ws.cfg.vocab;
+        {
+            let slots = &mut self.slots_scratch;
+            slots.clear();
+            slots.extend((0..c).map(|i| (i % bt) as u32));
+            let d = &mut self.pre_dyns;
+            let tokens = d.i32_mut("tokens");
+            tokens.clear();
+            tokens.resize(c, 0);
+            tokens[..nv].copy_from_slice(&chunk.tokens);
+            let positions = d.i32_mut("positions");
+            positions.clear();
+            positions.resize(c, 0);
+            for i in 0..nv {
+                positions[i] = (chunk.start + i) as i32;
+                slots[i] = chunk.slot_ids[i];
+            }
+            let slot_ids = d.i32_mut("slot_ids");
+            slot_ids.clear();
+            slot_ids.extend(slots.iter().map(|&s| s as i32));
+            let table = d.i32_mut("block_table");
+            table.clear();
+            table.extend_from_slice(&chunk.table_row);
+            let start = d.i32_mut("start");
+            start.clear();
+            start.push(chunk.start as i32);
+            let seq_len = d.i32_mut("seq_len");
+            seq_len.clear();
+            seq_len.push((chunk.start + nv) as i32);
         }
-        let dyns = DynInputs::new()
-            .i32("tokens", tokens)
-            .i32("positions", positions)
-            .i32("slot_ids", slots.iter().map(|&s| s as i32).collect())
-            .i32("block_table", chunk.table_row.clone())
-            .i32("start", vec![chunk.start as i32])
-            .i32("seq_len", vec![(chunk.start + nv) as i32]);
         let (exe, spec) = self.exe("dp_prefill")?;
         let out = self
             .rt
-            .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
+            .execute(exe, spec, &self.bufs, &self.pre_dyns, 0, &self.k_pools, &self.v_pools)?;
+        let slots = std::mem::take(&mut self.slots_scratch);
         self.apply_kv_outputs(&out, 1, &slots, 0);
-        let v = cfg.vocab;
-        Ok(out.primary[(nv - 1) * v..nv * v].to_vec())
+        self.slots_scratch = slots;
+        Ok(out.primary[(nv - 1) * vocab..nv * vocab].to_vec())
     }
 
     // ------------------------------------------------------------------
@@ -358,5 +378,27 @@ impl EngineCore {
             .execute(exe, spec, &self.bufs, &dyns, 0, &self.k_pools, &self.v_pools)?;
         let v = cfg.vocab;
         Ok(out.primary[(nv - 1) * v..nv * v].to_vec())
+    }
+}
+
+impl super::EngineBackend for EngineCore {
+    fn set_mode(&mut self, p: usize) -> Result<()> {
+        EngineCore::set_mode(self, p)
+    }
+
+    fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        EngineCore::dp_decode(self, batch)
+    }
+
+    fn dp_prefill(&mut self, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        EngineCore::dp_prefill(self, chunk)
+    }
+
+    fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        EngineCore::tp_decode(self, p, batch)
+    }
+
+    fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        EngineCore::tp_prefill(self, p, chunk)
     }
 }

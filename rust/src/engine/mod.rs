@@ -1,37 +1,81 @@
 //! Engine workers: one OS thread per DP engine (the paper's per-GPU engine
-//! process), driven by the coordinator over mpsc channels (the control
+//! process), driven by the coordinator over bounded channels (the control
 //! plane; paper uses Gloo pipes).
 //!
-//! `PjRtClient` is `!Send`, so the `EngineCore` — client, device buffers,
-//! compiled executables — is constructed *inside* the worker thread and
-//! never leaves it.  The channel protocol mirrors the paper's collective
-//! RPCs: `SetMode` ("set_TP_mode"/"reset_TP_mode") and step execution
-//! ("execute_model").
+//! The execution substrate is abstracted behind [`EngineBackend`]:
+//!
+//!  * `core::EngineCore` (behind the `pjrt` feature) runs the real compiled
+//!    XLA artifacts.  `PjRtClient` is `!Send`, so the core — client, device
+//!    buffers, compiled executables — is constructed *inside* the worker
+//!    thread and never leaves it.
+//!  * `stub::StubEngine` is a deterministic, dependency-free backend with
+//!    the same lockstep/collective behavior, used by CI tests and the
+//!    scheduler benches where no PJRT plugin exists.
+//!
+//! Hot-path discipline: commands carry `Arc`-shared batches so the
+//! coordinator can recycle its step buffers (`Arc::make_mut` reuses the
+//! allocation once the engine's clone is dropped, which the lockstep
+//! protocol guarantees by reply time), and each worker owns one pair of
+//! *persistent* bounded channels — no per-call channel construction, no
+//! per-send queue-node allocation.
 
+#[cfg(feature = "pjrt")]
 pub mod core;
+pub mod stub;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::comm::CommunicatorPool;
-use crate::model::WeightStore;
-use crate::runtime::Manifest;
-pub use core::{DecodeSlot, EngineCore, PrefillChunk};
+pub use stub::StubEngine;
+
+/// One decode slot: a request with its adaptor-derived addressing.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeSlot {
+    pub rid: u64,
+    pub token: i32,
+    pub pos: usize,          // 0-based index of `token` (its kv appends here)
+    pub slot_id: u32,        // flat write slot from the adaptor
+    pub table_row: Vec<i32>, // padded to n_blocks
+}
+
+/// One prefill chunk of a single request.
+#[derive(Clone, Debug, Default)]
+pub struct PrefillChunk {
+    pub rid: u64,
+    pub tokens: Vec<i32>,    // <= c_prefill actual tokens
+    pub start: usize,        // absolute position of tokens[0]
+    pub slot_ids: Vec<u32>,  // one per actual token
+    pub table_row: Vec<i32>, // padded to n_blocks
+}
+
+/// The engine-side execution contract (Algorithm 1 step ⑥ plus the SetMode
+/// collective RPC of step ⑤).  Implementations are constructed on the
+/// worker thread and need not be `Send`.
+pub trait EngineBackend {
+    fn set_mode(&mut self, p: usize) -> Result<()>;
+    /// One fused DP decode step; returns one logits row per batch slot.
+    fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
+    /// One fused DP prefill chunk; returns the last actual token's logits.
+    fn dp_prefill(&mut self, chunk: &PrefillChunk) -> Result<Vec<f32>>;
+    /// One TP decode step for this rank (meets the group in collectives).
+    fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
+    fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>>;
+}
 
 #[derive(Debug)]
 pub enum EngineCmd {
     /// Algorithm-1 step 5: atomically configure the execution mode.
     SetMode { p: usize },
     /// One fused DP step (p must be 1).
-    DpDecode { batch: Vec<DecodeSlot> },
-    DpPrefill { chunk: PrefillChunk },
+    DpDecode { batch: Arc<Vec<DecodeSlot>> },
+    DpPrefill { chunk: Arc<PrefillChunk> },
     /// One TP shard step; all group members receive this at the same safe
     /// point and meet in the communicator's collectives.
-    TpDecode { p: usize, batch: Vec<DecodeSlot> },
-    TpPrefill { p: usize, chunk: PrefillChunk },
+    TpDecode { p: usize, batch: Arc<Vec<DecodeSlot>> },
+    TpPrefill { p: usize, chunk: Arc<PrefillChunk> },
     Stop,
 }
 
@@ -45,91 +89,124 @@ pub enum EngineReply {
     Err(String),
 }
 
+/// Depth of the per-engine command/reply rings.  The coordinator issues at
+/// most one in-flight command per engine (lockstep), so 2 gives slack for
+/// the Stop handshake without unbounded buffering.
+const CHANNEL_DEPTH: usize = 2;
+
 pub struct EngineHandle {
     pub id: usize,
-    tx: Sender<(EngineCmd, Sender<EngineReply>)>,
+    tx: SyncSender<EngineCmd>,
+    rx: Receiver<EngineReply>,
     join: Option<JoinHandle<()>>,
 }
 
 impl EngineHandle {
-    /// Spawn the worker thread; blocks until the engine finished compiling
-    /// its artifacts (eager init, so mode switches never compile anything).
-    pub fn spawn(
-        id: usize,
-        manifest: Arc<Manifest>,
-        model: String,
-        ws: Arc<WeightStore>,
-        comm: Arc<CommunicatorPool>,
-    ) -> Result<Self> {
-        let (tx, rx): (Sender<(EngineCmd, Sender<EngineReply>)>, Receiver<_>) = channel();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+    /// Spawn a worker thread around a backend built *on that thread* by
+    /// `factory` (PJRT clients are `!Send`).  Blocks until the backend
+    /// finished initializing (eager init, so mode switches never compile or
+    /// load anything).
+    pub fn spawn_with<B, F>(id: usize, factory: F) -> Result<Self>
+    where
+        B: EngineBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        let (tx, cmd_rx) = sync_channel::<EngineCmd>(CHANNEL_DEPTH);
+        let (reply_tx, rx) = sync_channel::<EngineReply>(CHANNEL_DEPTH);
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
         let join = std::thread::Builder::new()
             .name(format!("engine-{id}"))
             .spawn(move || {
-                let mut core = match EngineCore::new(id, &manifest, &model, ws, comm) {
-                    Ok(c) => {
+                let mut backend = match factory() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        c
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return;
                     }
                 };
-                while let Ok((cmd, reply)) = rx.recv() {
+                while let Ok(cmd) = cmd_rx.recv() {
                     let resp = match cmd {
-                        EngineCmd::SetMode { p } => match core.set_mode(p) {
+                        EngineCmd::SetMode { p } => match backend.set_mode(p) {
                             Ok(()) => EngineReply::Ok,
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
-                        EngineCmd::DpDecode { batch } => match core.dp_decode(&batch) {
+                        EngineCmd::DpDecode { batch } => match backend.dp_decode(&batch) {
                             Ok(l) => EngineReply::Logits(l),
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
-                        EngineCmd::DpPrefill { chunk } => match core.dp_prefill(&chunk) {
+                        EngineCmd::DpPrefill { chunk } => match backend.dp_prefill(&chunk) {
                             Ok(l) => EngineReply::LastLogits(l),
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
-                        EngineCmd::TpDecode { p, batch } => match core.tp_decode(p, &batch) {
+                        EngineCmd::TpDecode { p, batch } => match backend.tp_decode(p, &batch) {
                             Ok(l) => EngineReply::Logits(l),
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
-                        EngineCmd::TpPrefill { p, chunk } => match core.tp_prefill(p, &chunk) {
+                        EngineCmd::TpPrefill { p, chunk } => match backend.tp_prefill(p, &chunk) {
                             Ok(l) => EngineReply::LastLogits(l),
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
                         EngineCmd::Stop => {
-                            let _ = reply.send(EngineReply::Ok);
+                            let _ = reply_tx.send(EngineReply::Ok);
                             break;
                         }
                     };
-                    let _ = reply.send(resp);
+                    let _ = reply_tx.send(resp);
                 }
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine {id} thread died during init"))?
             .map_err(|e| anyhow::anyhow!("engine {id} init failed: {e}"))?;
-        Ok(EngineHandle { id, tx, join: Some(join) })
+        Ok(EngineHandle { id, tx, rx, join: Some(join) })
     }
 
-    /// Fire a command without waiting (returns the reply receiver).  Used to
-    /// launch a whole TP group concurrently so members can meet in the
-    /// collectives.
-    pub fn send(&self, cmd: EngineCmd) -> Receiver<EngineReply> {
-        let (rtx, rrx) = channel();
-        // A send failure means the worker died; the recv below surfaces it.
-        let _ = self.tx.send((cmd, rtx));
-        rrx
+    /// Spawn a worker over the real PJRT execution core.
+    #[cfg(feature = "pjrt")]
+    pub fn spawn(
+        id: usize,
+        manifest: Arc<crate::runtime::Manifest>,
+        model: String,
+        ws: Arc<crate::model::WeightStore>,
+        comm: Arc<crate::comm::CommunicatorPool>,
+    ) -> Result<Self> {
+        Self::spawn_with(id, move || core::EngineCore::new(id, &manifest, &model, ws, comm))
+    }
+
+    /// Spawn a worker over the deterministic stub backend (no PJRT).
+    pub fn spawn_stub(
+        id: usize,
+        cfg: crate::model::ModelCfg,
+        shapes: crate::model::StaticShapes,
+        comm: Arc<crate::comm::CommunicatorPool>,
+    ) -> Result<Self> {
+        Self::spawn_with(id, move || Ok(StubEngine::new(id, cfg, shapes, comm)))
+    }
+
+    /// Fire a command without waiting for its reply.  Used to launch a
+    /// whole TP group concurrently so members can meet in the collectives;
+    /// pair every `send` with exactly one [`Self::recv`].
+    pub fn send(&self, cmd: EngineCmd) {
+        // A send failure means the worker died; the paired recv surfaces it.
+        let _ = self.tx.send(cmd);
+    }
+
+    /// Receive the reply for the oldest in-flight command.
+    pub fn recv(&self) -> Result<EngineReply> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine {} died mid-step", self.id))
     }
 
     /// Synchronous call.
     pub fn call(&self, cmd: EngineCmd) -> Result<EngineReply> {
-        let rx = self.send(cmd);
-        match rx.recv() {
-            Ok(EngineReply::Err(e)) => anyhow::bail!("engine {}: {e}", self.id),
-            Ok(r) => Ok(r),
-            Err(_) => anyhow::bail!("engine {} died", self.id),
+        self.send(cmd);
+        match self.recv()? {
+            EngineReply::Err(e) => anyhow::bail!("engine {}: {e}", self.id),
+            r => Ok(r),
         }
     }
 
@@ -145,6 +222,124 @@ impl Drop for EngineHandle {
     fn drop(&mut self) {
         if self.join.is_some() {
             self.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommunicatorPool;
+    use crate::model::{ModelCfg, StaticShapes};
+    use std::time::Duration;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "stub".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 8,
+            ffn_hidden: 48,
+            n_experts: 0,
+            top_k: 0,
+            n_blocks: 16,
+            block_base: 4,
+            max_ctx: 256,
+            vocab: 258,
+            pool_elems: 16 * 4 * 4 * 8,
+        }
+    }
+
+    fn shapes() -> StaticShapes {
+        StaticShapes { b_dec: 4, c_prefill: 16 }
+    }
+
+    #[test]
+    fn stub_worker_roundtrip_and_modes() {
+        let comm = Arc::new(CommunicatorPool::new(2, &[1, 2], Duration::from_secs(2)));
+        let eng = EngineHandle::spawn_stub(0, cfg(), shapes(), comm).unwrap();
+        assert!(matches!(eng.call(EngineCmd::SetMode { p: 2 }).unwrap(), EngineReply::Ok));
+        assert!(matches!(eng.call(EngineCmd::SetMode { p: 1 }).unwrap(), EngineReply::Ok));
+        // Unsupported degree surfaces as an error, not a hang.
+        assert!(eng.call(EngineCmd::SetMode { p: 3 }).is_err());
+    }
+
+    #[test]
+    fn stub_dp_decode_is_deterministic() {
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let eng = EngineHandle::spawn_stub(0, cfg(), shapes(), comm).unwrap();
+        let slot = DecodeSlot {
+            rid: 1,
+            token: 42,
+            pos: 3,
+            slot_id: 12,
+            table_row: vec![0; cfg().n_blocks],
+        };
+        let batch = Arc::new(vec![slot]);
+        let a = match eng.call(EngineCmd::DpDecode { batch: batch.clone() }).unwrap() {
+            EngineReply::Logits(rows) => rows,
+            r => panic!("unexpected {r:?}"),
+        };
+        let b = match eng.call(EngineCmd::DpDecode { batch }).unwrap() {
+            EngineReply::Logits(rows) => rows,
+            r => panic!("unexpected {r:?}"),
+        };
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), cfg().vocab);
+    }
+
+    #[test]
+    fn stub_tp_pair_meets_in_collective() {
+        // Two stub engines in TP-2 mode must both step without deadlock and
+        // produce identical logits (replicated compute).
+        let comm = Arc::new(CommunicatorPool::new(2, &[1, 2], Duration::from_secs(2)));
+        let e0 = EngineHandle::spawn_stub(0, cfg(), shapes(), comm.clone()).unwrap();
+        let e1 = EngineHandle::spawn_stub(1, cfg(), shapes(), comm).unwrap();
+        e0.call(EngineCmd::SetMode { p: 2 }).unwrap();
+        e1.call(EngineCmd::SetMode { p: 2 }).unwrap();
+        let batch = Arc::new(vec![DecodeSlot {
+            rid: 9,
+            token: 7,
+            pos: 0,
+            slot_id: 4,
+            table_row: vec![0; cfg().n_blocks],
+        }]);
+        e0.send(EngineCmd::TpDecode { p: 2, batch: batch.clone() });
+        e1.send(EngineCmd::TpDecode { p: 2, batch });
+        let r0 = match e0.recv().unwrap() {
+            EngineReply::Logits(rows) => rows,
+            r => panic!("unexpected {r:?}"),
+        };
+        let r1 = match e1.recv().unwrap() {
+            EngineReply::Logits(rows) => rows,
+            r => panic!("unexpected {r:?}"),
+        };
+        assert_eq!(r0, r1);
+    }
+
+    #[test]
+    fn arc_batch_is_exclusive_after_reply() {
+        // The lockstep protocol promise behind the coordinator's
+        // zero-allocation reuse: once the reply is in, the engine has
+        // dropped its clone and Arc::get_mut succeeds.
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let eng = EngineHandle::spawn_stub(0, cfg(), shapes(), comm).unwrap();
+        let mut batch = Arc::new(vec![DecodeSlot {
+            rid: 1,
+            token: 1,
+            pos: 0,
+            slot_id: 4,
+            table_row: vec![0; cfg().n_blocks],
+        }]);
+        for _ in 0..5 {
+            eng.send(EngineCmd::DpDecode { batch: batch.clone() });
+            eng.recv().unwrap();
+            assert!(
+                Arc::get_mut(&mut batch).is_some(),
+                "engine retained the batch past its reply"
+            );
         }
     }
 }

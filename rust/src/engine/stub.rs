@@ -1,0 +1,129 @@
+//! Deterministic stub execution backend: the full engine-worker contract
+//! (modes, lockstep TP collectives, logits shapes) with a hash-based token
+//! function instead of real kernels.
+//!
+//! Purpose-built for two jobs the PJRT core can't do in CI:
+//!
+//!  * run the *entire* coordinator/scheduler path — binding, KV adaptor
+//!    parameterization, group formation, preemption, collectives — in plain
+//!    `cargo test` with no artifacts or PJRT plugin;
+//!  * give the `sched_hotpath` bench a data plane whose cost is negligible,
+//!    so allocation/throughput measurements isolate the scheduler itself.
+//!
+//! The next-token function depends only on (fed token, position), never on
+//! the TP degree, rank, or engine id — so the paper's key invariant
+//! (DP and TP emit identical greedy tokens, switching is transparent to
+//! outputs) holds for the stub exactly as it must for the real kernels,
+//! and the stub-driven integration tests can assert it.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::comm::CommunicatorPool;
+use crate::model::{ModelCfg, StaticShapes};
+
+use super::{DecodeSlot, EngineBackend, PrefillChunk};
+
+/// Deterministic pseudo-logits argmax target for a fed (token, position).
+/// Stays inside the byte vocab [0, 256) so greedy decoding never emits the
+/// EOS id and output lengths are fully controlled by `max_new`.
+fn next_token(token: i32, pos: usize) -> usize {
+    let mut z = (token as u64)
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add((pos as u64).wrapping_mul(0xbf58476d1ce4e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0x94d049bb133111eb);
+    z = z ^ (z >> 27);
+    (z % 256) as usize
+}
+
+pub struct StubEngine {
+    pub id: usize,
+    cfg: ModelCfg,
+    shapes: StaticShapes,
+    comm: Arc<CommunicatorPool>,
+    mode_p: usize,
+    /// Reused collective buffer: TP steps synchronize through the real
+    /// communicator pool so group lockstep (and its failure modes) are
+    /// exercised, allocation-free.
+    reduce_scratch: Vec<f32>,
+}
+
+impl StubEngine {
+    pub fn new(
+        id: usize,
+        cfg: ModelCfg,
+        shapes: StaticShapes,
+        comm: Arc<CommunicatorPool>,
+    ) -> Self {
+        StubEngine { id, cfg, shapes, comm, mode_p: 1, reduce_scratch: vec![0.0; 8] }
+    }
+
+    fn logits_row(&self, token: i32, pos: usize) -> Vec<f32> {
+        let mut row = vec![0.0f32; self.cfg.vocab];
+        row[next_token(token, pos) % self.cfg.vocab] = 1.0;
+        row
+    }
+
+    /// Meet the group in a (tiny) all-reduce: same safe-point semantics and
+    /// watchdog behavior as the real per-layer collectives.
+    fn tp_sync(&mut self, p: usize) -> Result<()> {
+        let group = self.comm.group_of(self.id, p)?;
+        for x in self.reduce_scratch.iter_mut() {
+            *x = 1.0;
+        }
+        group.all_reduce_sum(self.id, &mut self.reduce_scratch)?;
+        Ok(())
+    }
+}
+
+impl EngineBackend for StubEngine {
+    fn set_mode(&mut self, p: usize) -> Result<()> {
+        if !self.cfg.supports_tp(p) {
+            bail!("model {} does not support TP degree {p}", self.cfg.name);
+        }
+        self.mode_p = p;
+        Ok(())
+    }
+
+    fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        ensure!(batch.len() <= self.shapes.b_dec, "batch too large");
+        Ok(batch.iter().map(|s| self.logits_row(s.token, s.pos)).collect())
+    }
+
+    fn dp_prefill(&mut self, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        let nv = chunk.tokens.len();
+        ensure!(nv >= 1 && nv <= self.shapes.c_prefill, "chunk size {nv}");
+        ensure!(chunk.slot_ids.len() == nv, "slot ids / tokens mismatch");
+        let last = *chunk.tokens.last().unwrap();
+        Ok(self.logits_row(last, chunk.start + nv - 1))
+    }
+
+    fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
+        self.tp_sync(p)?;
+        self.dp_decode(batch)
+    }
+
+    fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
+        self.tp_sync(p)?;
+        self.dp_prefill(chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_token_is_deterministic_and_byte_ranged() {
+        for (tok, pos) in [(0, 0), (255, 17), (42, 9999)] {
+            let a = next_token(tok, pos);
+            assert_eq!(a, next_token(tok, pos));
+            assert!(a < 256);
+        }
+        // Not constant.
+        assert_ne!(next_token(1, 0), next_token(2, 0));
+    }
+}

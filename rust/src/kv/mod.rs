@@ -29,6 +29,10 @@ pub struct RequestKv {
     pub blocks: Vec<u32>, // physical block ids, logical order
     pub seq_len: usize,   // tokens currently cached
     pub paused: bool,     // hard-preempted (KV stays resident)
+    /// Cached kernel-facing block-table row, padded to `n_blocks` with
+    /// `TRASH_BLOCK`.  Maintained incrementally by `ensure_capacity` /
+    /// `relayout_for_recompute` so the serving hot path never rebuilds it.
+    row: Vec<i32>,
 }
 
 /// Pool + logical-table state for one engine (DP mode) or one TP group
@@ -86,6 +90,7 @@ impl KvCacheAdaptor {
                 blocks: Vec::new(),
                 seq_len: 0,
                 paused: false,
+                row: vec![TRASH_BLOCK as i32; self.cfg.n_blocks],
             },
         );
         Ok(())
@@ -120,7 +125,11 @@ impl KvCacheAdaptor {
             }
             let req = self.requests.get_mut(&rid).unwrap();
             for _ in 0..short {
-                req.blocks.push(self.free.pop().unwrap());
+                let b = self.free.pop().unwrap();
+                // Incremental row maintenance: only the newly-granted
+                // positions are touched.
+                req.row[req.blocks.len()] = b as i32;
+                req.blocks.push(b);
             }
         }
         Ok(())
@@ -155,17 +164,21 @@ impl KvCacheAdaptor {
         Ok(blk * bt as u32 + (pos % bt) as u32)
     }
 
-    /// Block-table row padded to the static artifact width (n_blocks).
-    pub fn table_row(&self, rid: u64) -> Result<Vec<i32>> {
-        let req = self
-            .requests
+    /// Borrowed view of the block-table row, padded to the static artifact
+    /// width (n_blocks).  This is the hot-path accessor: the row is cached
+    /// and maintained incrementally, so this is a pointer handoff — callers
+    /// copy it straight into their step buffers without any rebuild.
+    pub fn table_row_ref(&self, rid: u64) -> Result<&[i32]> {
+        self.requests
             .get(&rid)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
-        let mut row = vec![TRASH_BLOCK as i32; self.cfg.n_blocks];
-        for (i, &b) in req.blocks.iter().enumerate() {
-            row[i] = b as i32;
-        }
-        Ok(row)
+            .map(|req| req.row.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+    }
+
+    /// Block-table row padded to the static artifact width (n_blocks).
+    /// Allocating convenience form of [`Self::table_row_ref`].
+    pub fn table_row(&self, rid: u64) -> Result<Vec<i32>> {
+        Ok(self.table_row_ref(rid)?.to_vec())
     }
 
     /// Hard Preempt: pause a request in place.  Its blocks stay resident
@@ -200,6 +213,7 @@ impl KvCacheAdaptor {
         let blocks = std::mem::take(&mut req.blocks);
         req.seq_len = 0;
         req.layout_p = new_p;
+        req.row.fill(TRASH_BLOCK as i32);
         self.free.extend(blocks.into_iter().rev());
         Ok(recompute)
     }
@@ -250,6 +264,17 @@ impl KvCacheAdaptor {
                     bail!("block {b} double-owned (request {rid})");
                 }
                 seen[b as usize] = 1;
+            }
+            // The incrementally-maintained row cache must agree with the
+            // authoritative block list at all times.
+            if req.row.len() != self.cfg.n_blocks {
+                bail!("request {rid} row cache has wrong width");
+            }
+            for (i, &cell) in req.row.iter().enumerate() {
+                let want = req.blocks.get(i).map(|&b| b as i32).unwrap_or(TRASH_BLOCK as i32);
+                if cell != want {
+                    bail!("request {rid} row cache stale at {i}: {cell} != {want}");
+                }
             }
         }
         if seen.iter().any(|&s| s == 0) {
@@ -374,6 +399,43 @@ mod tests {
         assert_eq!(row.len(), cfg().n_blocks);
         assert!(row[2..].iter().all(|&b| b == TRASH_BLOCK as i32));
         assert!(row[0] != TRASH_BLOCK as i32 && row[1] != TRASH_BLOCK as i32);
+    }
+
+    #[test]
+    fn table_row_ref_is_borrowed_and_incremental() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 5).unwrap(); // 2 blocks
+        let snapshot: Vec<i32> = a.table_row_ref(1).unwrap().to_vec();
+        assert_eq!(snapshot, a.table_row(1).unwrap());
+        // Growing must extend the cached row in place, not rebuild it.
+        a.ensure_capacity(1, 13).unwrap(); // 4 blocks
+        let row = a.table_row_ref(1).unwrap();
+        assert_eq!(row.len(), cfg().n_blocks);
+        assert_eq!(&row[..2], &snapshot[..2], "existing prefix must be stable");
+        assert!(row[2] != TRASH_BLOCK as i32 && row[3] != TRASH_BLOCK as i32);
+        assert!(row[4..].iter().all(|&b| b == TRASH_BLOCK as i32));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn relayout_resets_cached_row() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.register(1, 1).unwrap();
+        a.ensure_capacity(1, 12).unwrap();
+        a.set_seq_len(1, 12).unwrap();
+        a.relayout_for_recompute(1, 2).unwrap();
+        assert!(a
+            .table_row_ref(1)
+            .unwrap()
+            .iter()
+            .all(|&b| b == TRASH_BLOCK as i32));
+        // Re-grow under the new layout repopulates from the front.
+        a.ensure_capacity(1, 9).unwrap(); // 2 blocks of 8 under p=2
+        let row = a.table_row_ref(1).unwrap();
+        assert!(row[0] != TRASH_BLOCK as i32 && row[1] != TRASH_BLOCK as i32);
+        assert!(row[2..].iter().all(|&b| b == TRASH_BLOCK as i32));
+        a.check_invariants().unwrap();
     }
 
     #[test]

@@ -12,16 +12,13 @@
 //!               --strategy sequential|soft|hard --seed S --requests N
 //!               --listen ADDR --verbose
 
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
 
 use flying_serving::config::{parse_args, ServeConfig};
-use flying_serving::coordinator::Cluster;
 use flying_serving::runtime::Manifest;
 use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
-use flying_serving::workload::{generate, synth_prompt_tokens, WorkloadCfg};
-use flying_serving::{info, util};
+use flying_serving::util;
+use flying_serving::workload::{generate, WorkloadCfg};
 
 fn main() {
     if let Err(e) = run() {
@@ -51,16 +48,29 @@ fn run() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_cfg: &ServeConfig) -> Result<()> {
+    bail!("`serve` needs the PJRT engine backend: rebuild with `--features pjrt`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn replay(_cfg: &ServeConfig) -> Result<()> {
+    bail!("`replay` needs the PJRT engine backend: rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(cfg: &ServeConfig) -> Result<()> {
-    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-    let mut cluster = Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+    let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     let mut policy = cfg.make_policy()?;
     flying_serving::server::serve(&mut cluster, policy.as_mut(), cfg.strategy, &cfg.listen)
 }
 
+#[cfg(feature = "pjrt")]
 fn replay(cfg: &ServeConfig) -> Result<()> {
-    let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
-    let mut cluster = Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    use flying_serving::workload::synth_prompt_tokens;
+    let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+    let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     let mut policy = cfg.make_policy()?;
 
     let wl = WorkloadCfg::paper_scaled(cfg.seed, cfg.n_requests);
@@ -77,7 +87,7 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
         })
         .collect();
 
-    info!("replaying {} requests on {} engines", cfg.n_requests, cfg.n_engines);
+    flying_serving::info!("replaying {} requests on {} engines", cfg.n_requests, cfg.n_engines);
     let out = cluster.run_trace(serve_trace, policy.as_mut(), cfg.strategy)?;
     cluster.shutdown();
 

@@ -47,9 +47,19 @@ impl ReqRecord {
     }
 }
 
+/// O(1) handle to a request's record, returned by [`Recorder::on_arrival`]
+/// / [`Recorder::slot_of`].  Hot loops (the simulator's token emission, the
+/// coordinator's step publication) record through slots so the per-token
+/// path is an index into a dense slab, not an id-map lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecSlot(usize);
+
 #[derive(Default)]
 pub struct Recorder {
-    reqs: BTreeMap<u64, ReqRecord>,
+    /// Dense record storage, in arrival/insertion order.
+    entries: Vec<ReqRecord>,
+    /// rid -> slab index; also provides rid-ordered deterministic iteration.
+    index: BTreeMap<u64, usize>,
 }
 
 impl Recorder {
@@ -57,42 +67,74 @@ impl Recorder {
         Self::default()
     }
 
-    pub fn on_arrival(&mut self, rid: u64, t: f64, priority: Priority, prompt_len: usize) {
-        let e = self.reqs.entry(rid).or_default();
+    /// Slot for `rid`, creating an empty record if absent.
+    pub fn slot_of(&mut self, rid: u64) -> RecSlot {
+        if let Some(&i) = self.index.get(&rid) {
+            return RecSlot(i);
+        }
+        let i = self.entries.len();
+        self.entries.push(ReqRecord::default());
+        self.index.insert(rid, i);
+        RecSlot(i)
+    }
+
+    pub fn on_arrival(&mut self, rid: u64, t: f64, priority: Priority, prompt_len: usize) -> RecSlot {
+        let s = self.slot_of(rid);
+        let e = &mut self.entries[s.0];
         e.arrival = t;
         e.priority = priority;
         e.prompt_len = prompt_len;
+        s
     }
 
     pub fn on_first_sched(&mut self, rid: u64, t: f64) {
-        let e = self.reqs.entry(rid).or_default();
+        let s = self.slot_of(rid);
+        self.on_first_sched_at(s, t);
+    }
+
+    pub fn on_token(&mut self, rid: u64, t: f64) {
+        let s = self.slot_of(rid);
+        self.on_token_at(s, t);
+    }
+
+    pub fn on_finish(&mut self, rid: u64, t: f64) {
+        let s = self.slot_of(rid);
+        self.on_finish_at(s, t);
+    }
+
+    // ---- slot fast paths (no id lookup) ----------------------------------
+
+    pub fn on_first_sched_at(&mut self, s: RecSlot, t: f64) {
+        let e = &mut self.entries[s.0];
         if e.first_sched.is_none() {
             e.first_sched = Some(t);
         }
     }
 
-    pub fn on_token(&mut self, rid: u64, t: f64) {
-        self.reqs.entry(rid).or_default().token_times.push(t);
+    #[inline]
+    pub fn on_token_at(&mut self, s: RecSlot, t: f64) {
+        self.entries[s.0].token_times.push(t);
     }
 
-    pub fn on_finish(&mut self, rid: u64, t: f64) {
-        self.reqs.entry(rid).or_default().finished = Some(t);
+    pub fn on_finish_at(&mut self, s: RecSlot, t: f64) {
+        self.entries[s.0].finished = Some(t);
     }
 
     pub fn len(&self) -> usize {
-        self.reqs.len()
+        self.entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.reqs.is_empty()
+        self.entries.is_empty()
     }
 
     pub fn get(&self, rid: u64) -> Option<&ReqRecord> {
-        self.reqs.get(&rid)
+        self.index.get(&rid).map(|&i| &self.entries[i])
     }
 
+    /// Records in rid order (deterministic across runs).
     pub fn records(&self) -> impl Iterator<Item = (&u64, &ReqRecord)> {
-        self.reqs.iter()
+        self.index.iter().map(|(rid, &i)| (rid, &self.entries[i]))
     }
 
     // ---- summaries -------------------------------------------------------
@@ -101,8 +143,8 @@ impl Recorder {
         &'a self,
         pri: Option<Priority>,
     ) -> impl Iterator<Item = &'a ReqRecord> + 'a {
-        self.reqs
-            .values()
+        self.entries
+            .iter()
             .filter(move |r| pri.map_or(true, |p| r.priority == p))
     }
 
@@ -147,7 +189,7 @@ impl Recorder {
     /// Peak generation throughput: max output tokens/s over fixed windows.
     pub fn peak_throughput(&self, window: f64) -> f64 {
         let mut ts = TimeSeries::new(window);
-        for r in self.reqs.values() {
+        for r in self.entries.iter() {
             for &t in &r.token_times {
                 ts.add(t, 1.0);
             }
@@ -163,7 +205,7 @@ impl Recorder {
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         let mut n = 0usize;
-        for r in self.reqs.values() {
+        for r in self.entries.iter() {
             for &t in &r.token_times {
                 lo = lo.min(t);
                 hi = hi.max(t);
@@ -181,7 +223,7 @@ impl Recorder {
     /// In-flight concurrency sampled at `interval`.
     pub fn concurrency_series(&self, interval: f64) -> Vec<(f64, f64)> {
         let mut events: Vec<(f64, f64)> = Vec::new();
-        for r in self.reqs.values() {
+        for r in self.entries.iter() {
             let end = r
                 .finished
                 .or_else(|| r.token_times.last().copied())
@@ -189,7 +231,7 @@ impl Recorder {
             events.push((r.arrival, 1.0));
             events.push((end, -1.0));
         }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
         let t_end = events.last().map(|e| e.0).unwrap_or(0.0);
         let mut out = Vec::new();
         let mut level = 0.0;
@@ -209,7 +251,7 @@ impl Recorder {
     /// P90 TTFT bucketed by arrival time.
     pub fn ttft_p90_series(&self, interval: f64) -> Vec<(f64, f64)> {
         let mut ts = TimeSeries::new(interval);
-        for r in self.reqs.values() {
+        for r in self.entries.iter() {
             if let Some(x) = r.ttft() {
                 ts.add(r.arrival, x);
             }
@@ -220,7 +262,7 @@ impl Recorder {
     /// Mean queue time bucketed by arrival time.
     pub fn queue_series(&self, interval: f64) -> Vec<(f64, f64)> {
         let mut ts = TimeSeries::new(interval);
-        for r in self.reqs.values() {
+        for r in self.entries.iter() {
             if let Some(x) = r.queue_time() {
                 ts.add(r.arrival, x);
             }

@@ -224,6 +224,24 @@ impl DynInputs {
         self.f32s.insert(name.to_string(), v);
         self
     }
+
+    /// In-place accessor for arena reuse: returns the named i32 buffer,
+    /// creating it empty on first use.  Hot paths clear + refill it every
+    /// step so the map allocates only during warmup.
+    pub fn i32_mut(&mut self, name: &str) -> &mut Vec<i32> {
+        if !self.i32s.contains_key(name) {
+            self.i32s.insert(name.to_string(), Vec::new());
+        }
+        self.i32s.get_mut(name).unwrap()
+    }
+
+    /// In-place accessor for arena reuse (f32 variant of [`Self::i32_mut`]).
+    pub fn f32_mut(&mut self, name: &str) -> &mut Vec<f32> {
+        if !self.f32s.contains_key(name) {
+            self.f32s.insert(name.to_string(), Vec::new());
+        }
+        self.f32s.get_mut(name).unwrap()
+    }
 }
 
 /// Typed outputs of one step.
@@ -238,10 +256,12 @@ pub struct StepOutputs {
 
 /// Device-resident per-engine weight buffers, uploaded exactly once
 /// (zero-copy thereafter: TP activates shard views via the rank scalar).
+#[cfg(feature = "pjrt")]
 pub struct EngineBuffers {
     by_name: BTreeMap<String, xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "pjrt")]
 impl EngineBuffers {
     pub fn upload(client: &xla::PjRtClient, ws: &WeightStore) -> Result<Self> {
         let mut by_name = BTreeMap::new();
@@ -263,10 +283,12 @@ impl EngineBuffers {
 }
 
 /// The runtime for one engine: PJRT client + compile + typed execute.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         Ok(Runtime { client: xla::PjRtClient::cpu()? })

@@ -9,12 +9,43 @@
 //! partition (and pay a cold restart if they must change it).  Every event
 //! lands in a `metrics::Recorder`, so the benches read the simulator with
 //! the same summaries/time-series as the real path.
+//!
+//! # The event-driven core
+//!
+//! This is the O(n log n) rewrite of the loop-based reference kept in
+//! `sim::reference` (same decisions, same outcomes — asserted by the
+//! differential property tests in `tests/sim_equivalence.rs`):
+//!
+//!  * **Typed event heap.**  A `BinaryHeap` of (arrival, engine-free,
+//!    switch-settle) events replaces the per-iteration min-scan; stale
+//!    events are invalidated lazily by per-veng stamps.
+//!  * **Priority-indexed ready queues.**  One FIFO ring per priority level
+//!    replaces the full (priority, arrival) re-sort each iteration: rings
+//!    are drained high-priority-first and refilled in place, which yields
+//!    exactly the sorted order because arrivals are admitted in time order.
+//!  * **Dirty-tracked assignment.**  The ready queue is only re-walked when
+//!    something that can change an admission decision happened (arrival,
+//!    completion, merge/split).  Between those events, decode steps only
+//!    shrink capacity and never flip a decision, so skipped walks are
+//!    provably identical to the reference's no-op walks.
+//!  * **Dense request slab + incremental KV accounting.**  Requests live in
+//!    a `Vec` indexed by admission order (no id-map lookups on the hot
+//!    path), and each veng tracks Σ(prompt+emitted) incrementally instead
+//!    of recomputing it per admission probe.
+//!  * **Explicit stall handling.**  The reference's heartbeat spin ("queue
+//!    non-empty, nothing running, nothing arriving") is detected and
+//!    resolved by deterministically rejecting the stuck requests.
+//!
+//! Steady-state scratch (rings, batch buffers, split buffers) is allocated
+//! once and recycled, so the event loop itself is allocation-free apart
+//! from heap growth during warmup.
 
-use std::collections::BTreeMap;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
-use crate::metrics::Recorder;
-use crate::workload::Request;
+use crate::metrics::{RecSlot, Recorder};
+use crate::workload::{Priority, Request};
 
 use super::costmodel::CostModel;
 
@@ -66,7 +97,51 @@ impl SimSystem {
     }
 }
 
-#[derive(Clone, Debug, PartialEq)]
+pub struct SimOutcome {
+    pub recorder: Recorder,
+    pub rejected: Vec<u64>,
+    pub n_switches: usize,
+}
+
+/// Outcome equivalence between two simulator runs: identical completion
+/// sets, identical rejection sets, identical switch counts.  This is the
+/// contract the event-driven core maintains against `sim::reference` —
+/// shared by `tests/sim_equivalence.rs` and `benches/sched_hotpath.rs` so
+/// the definition cannot drift.  (Timing-derived metrics are deliberately
+/// excluded: stall/idle resolution may shift timestamps by a heartbeat
+/// quantum without changing any scheduling decision.)
+pub fn outcomes_equivalent(a: &SimOutcome, b: &SimOutcome) -> Result<(), String> {
+    let finished = |o: &SimOutcome| -> Vec<u64> {
+        o.recorder
+            .records()
+            .filter(|(_, r)| r.finished.is_some())
+            .map(|(&id, _)| id)
+            .collect()
+    };
+    if finished(a) != finished(b) {
+        return Err("completion sets diverge".into());
+    }
+    let mut rej_a = a.rejected.clone();
+    let mut rej_b = b.rejected.clone();
+    rej_a.sort_unstable();
+    rej_b.sort_unstable();
+    if rej_a != rej_b {
+        return Err("rejection sets diverge".into());
+    }
+    if a.n_switches != b.n_switches {
+        return Err(format!(
+            "switch counts diverge ({} vs {})",
+            a.n_switches, b.n_switches
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Internal state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
 enum RPhase {
     Queued,
     Prefill,
@@ -74,30 +149,116 @@ enum RPhase {
     Done,
 }
 
-#[derive(Clone, Debug)]
+/// One admitted request, stored in a dense slab indexed by admission order.
 struct SimReq {
-    req: Request,
+    id: u64,
+    prompt_len: usize,
+    output_len: usize,
+    tp_demand: Option<usize>,
     phase: RPhase,
     prefilled: usize,
     emitted: usize,
     paused: bool,
+    rec: RecSlot,
 }
 
-#[derive(Clone, Debug)]
+fn kv_tokens(r: &SimReq) -> usize {
+    r.prompt_len + r.emitted
+}
+
+/// A virtual engine: `m` merged serving instances.
 struct VEng {
-    /// Serving instances merged into this virtual engine (1 = plain DP).
     m: usize,
     free_at: f64,
-    active: Vec<u64>,
+    active: Vec<u32>,
     /// Set for a merged veng that must split back when its TP work drains.
     transient: bool,
+    /// Stable identity for heap events (indices shift on merge/split).
+    handle: u32,
+    /// Bumped whenever pending events for this veng become meaningless
+    /// (step rescheduled, veng went idle, veng destroyed).
+    stamp: u32,
+    /// Σ kv_tokens over `active`, maintained incrementally.
+    kv_used: usize,
 }
 
-pub struct SimOutcome {
-    pub recorder: Recorder,
-    pub rejected: Vec<u64>,
-    pub n_switches: usize,
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    /// The trace request at sorted position `seq` becomes visible.
+    Arrival { seq: u32 },
+    /// A veng's in-flight step completes.
+    EngineFree { veng: u32, stamp: u32 },
+    /// A freshly-merged TP group finishes its live switch.
+    SwitchSettle { veng: u32, stamp: u32 },
 }
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    t: f64,
+    kind: EvKind,
+}
+
+impl Event {
+    /// Deterministic tie-break rank at equal times.
+    fn rank(&self) -> (u8, u32) {
+        match self.kind {
+            EvKind::Arrival { seq } => (0, seq),
+            EvKind::SwitchSettle { veng, .. } => (1, veng),
+            EvKind::EngineFree { veng, .. } => (2, veng),
+        }
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    // Reversed so the std max-heap pops the earliest event first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.rank().cmp(&self.rank()))
+    }
+}
+
+/// One FIFO ring per priority level.  Arrivals are admitted in time order
+/// and requeued entries keep their relative order, so draining high-first
+/// reproduces the reference's full (priority desc, arrival asc) sort.
+#[derive(Default)]
+struct ReadyQueue {
+    high: VecDeque<u32>,
+    normal: VecDeque<u32>,
+}
+
+impl ReadyQueue {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.high.is_empty() && self.normal.is_empty()
+    }
+
+    fn push(&mut self, pri: Priority, ri: u32) {
+        match pri {
+            Priority::High => self.high.push_back(ri),
+            Priority::Normal => self.normal.push_back(ri),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The simulator
+// ---------------------------------------------------------------------------
 
 pub fn simulate(
     system: SimSystem,
@@ -105,395 +266,689 @@ pub fn simulate(
     trace: &[Request],
     cfg: &SimConfig,
 ) -> SimOutcome {
+    assert!(
+        trace.iter().all(|r| r.arrival.is_finite()),
+        "simulate: trace contains non-finite arrival times (validate with workload::validate)"
+    );
+
     let n_inst = cm.hw.n_gpus / cm.model.min_gpus;
     let gpus_per_inst = cm.model.min_gpus;
+    // KV capacity per group width, precomputed once (pure function of m).
+    let cap_by_m: Vec<usize> = (0..=n_inst)
+        .map(|m| if m == 0 { 0 } else { cm.kv_capacity_tokens(m * gpus_per_inst) })
+        .collect();
+    let dp_cap = cap_by_m[1];
+    let live_switch_s = cm.live_switch_s();
 
     let mut vengs: Vec<VEng> = match system {
         SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => (0..n_inst)
-            .map(|_| VEng { m: 1, free_at: 0.0, active: vec![], transient: false })
+            .map(|i| VEng {
+                m: 1,
+                free_at: 0.0,
+                active: vec![],
+                transient: false,
+                handle: i as u32,
+                stamp: 0,
+                kv_used: 0,
+            })
             .collect(),
         SimSystem::StaticTp(m) => {
             let m = m.min(n_inst).max(1);
             (0..n_inst / m)
-                .map(|_| VEng { m, free_at: 0.0, active: vec![], transient: false })
+                .map(|i| VEng {
+                    m,
+                    free_at: 0.0,
+                    active: vec![],
+                    transient: false,
+                    handle: i as u32,
+                    stamp: 0,
+                    kv_used: 0,
+                })
                 .collect()
         }
-        SimSystem::Shift => vec![VEng { m: n_inst, free_at: 0.0, active: vec![], transient: false }],
+        SimSystem::Shift => vec![VEng {
+            m: n_inst,
+            free_at: 0.0,
+            active: vec![],
+            transient: false,
+            handle: 0,
+            stamp: 0,
+            kv_used: 0,
+        }],
     };
+    let mut next_handle = vengs.len() as u32;
+    let mut handle_pos: Vec<usize> = (0..vengs.len()).collect();
 
-    let mut reqs: BTreeMap<u64, SimReq> = BTreeMap::new();
-    let mut queue: Vec<u64> = Vec::new();
+    // Arrival order (stable by arrival time, ties by trace position — the
+    // same order the reference's stable sort produces).
+    let mut order: Vec<u32> = (0..trace.len() as u32).collect();
+    order.sort_by(|&a, &b| trace[a as usize].arrival.total_cmp(&trace[b as usize].arrival));
+
+    let mut reqs: Vec<SimReq> = Vec::with_capacity(trace.len());
     let mut rec = Recorder::new();
-    let mut rejected = Vec::new();
+    let mut rejected: Vec<u64> = Vec::new();
     let mut n_switches = 0usize;
     let mut policy = crate::coordinator::policy::FlyingPolicy::default();
 
-    let mut arrivals: Vec<&Request> = trace.iter().collect();
-    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(4 * vengs.len() + 8);
     let mut next_arr = 0usize;
+    if let Some(&first) = order.first() {
+        heap.push(Event {
+            t: trace[first as usize].arrival,
+            kind: EvKind::Arrival { seq: 0 },
+        });
+    }
+
+    let mut queue = ReadyQueue::default();
+    // True whenever something happened that could change an assignment
+    // decision (arrival, completion, rejection, merge, split).  Pure decode
+    // steps never set it: they only shrink capacity, so a failed admission
+    // stays failed — the walk would be a no-op and is skipped.
+    let mut queue_dirty = false;
     let mut t = 0.0f64;
 
-    let dp_cap = cm.kv_capacity_tokens(gpus_per_inst);
+    // Reusable scratch (allocated once, recycled every round).
+    let mut requeue_high: VecDeque<u32> = VecDeque::new();
+    let mut requeue_normal: VecDeque<u32> = VecDeque::new();
+    let mut batch: Vec<u32> = Vec::new();
+    let mut unit_scratch: Vec<usize> = Vec::new();
+    let mut split_buf: Vec<VEng> = Vec::new();
 
-    loop {
-        // ---- advance the clock to the next actionable moment ------------
-        let work_t = vengs
-            .iter()
-            .filter(|v| !v.active.is_empty())
-            .map(|v| v.free_at)
-            .fold(f64::INFINITY, f64::min);
-        let arr_t = arrivals.get(next_arr).map(|r| r.arrival).unwrap_or(f64::INFINITY);
-        let next_t = work_t.min(arr_t);
+    'outer: loop {
+        // ---- advance the clock to the next valid event --------------------
+        let mut next_t = f64::INFINITY;
+        while let Some(e) = heap.peek() {
+            let stale = match e.kind {
+                EvKind::Arrival { seq } => (seq as usize) < next_arr,
+                EvKind::EngineFree { veng, stamp } | EvKind::SwitchSettle { veng, stamp } => {
+                    let pos = handle_pos[veng as usize];
+                    !(pos < vengs.len()
+                        && vengs[pos].handle == veng
+                        && vengs[pos].stamp == stamp)
+                }
+            };
+            if stale {
+                heap.pop();
+                continue;
+            }
+            next_t = e.t;
+            break;
+        }
         if next_t.is_infinite() {
             if queue.is_empty() {
-                break;
+                break 'outer;
             }
-            // Queue non-empty but nothing running: engines are idle, step
-            // time forward by a heartbeat so assignment can proceed.
-            t += cfg.heartbeat_s;
+            if !queue_dirty {
+                // Stall (the reference's heartbeat spin): queue non-empty,
+                // nothing running, nothing arriving, and the last scheduling
+                // pass changed nothing.  Reject deterministically.
+                while let Some(ri) = queue.high.pop_front().or_else(|| queue.normal.pop_front()) {
+                    let q = &mut reqs[ri as usize];
+                    q.phase = RPhase::Done;
+                    rejected.push(q.id);
+                    rec.on_finish_at(q.rec, t);
+                }
+                break 'outer;
+            }
+            // queue_dirty: fall through and run one more scheduling pass at
+            // the current time (a split/merge may still unblock the queue).
         } else {
             t = t.max(next_t);
+            // Consume every event at or before t; the same-time cascade
+            // below services all of them in one pass.
+            while let Some(e) = heap.peek() {
+                if e.t > t {
+                    break;
+                }
+                heap.pop();
+            }
         }
 
-        // ---- admissions ---------------------------------------------------
-        while next_arr < arrivals.len() && arrivals[next_arr].arrival <= t {
-            let r = arrivals[next_arr];
-            rec.on_arrival(r.id, r.arrival, r.priority, r.prompt_len);
-            reqs.insert(
-                r.id,
-                SimReq {
-                    req: r.clone(),
+        // ---- same-time cascade: admit → assign → execute → split ----------
+        // Repeats while some veng still has work runnable at `t` (the
+        // reference re-iterates its outer loop at the same time in that
+        // case, e.g. after a split resumed paused requests).
+        let mut rounds = 0usize;
+        loop {
+            rounds += 1;
+            assert!(rounds < 100_000, "simulate: same-time livelock at t={t}");
+
+            // ---- admissions ----------------------------------------------
+            let mut consumed_arrival = false;
+            while next_arr < order.len() && trace[order[next_arr] as usize].arrival <= t {
+                let r = &trace[order[next_arr] as usize];
+                let slot = rec.on_arrival(r.id, r.arrival, r.priority, r.prompt_len);
+                reqs.push(SimReq {
+                    id: r.id,
+                    prompt_len: r.prompt_len,
+                    output_len: r.output_len,
+                    tp_demand: r.tp_demand,
                     phase: RPhase::Queued,
                     prefilled: 0,
                     emitted: 0,
                     paused: false,
-                },
-            );
-            queue.push(r.id);
-            next_arr += 1;
-        }
+                    rec: slot,
+                });
+                queue.push(r.priority, (reqs.len() - 1) as u32);
+                next_arr += 1;
+                consumed_arrival = true;
+                queue_dirty = true;
+            }
+            if consumed_arrival && next_arr < order.len() {
+                heap.push(Event {
+                    t: trace[order[next_arr] as usize].arrival,
+                    kind: EvKind::Arrival { seq: next_arr as u32 },
+                });
+            }
 
-        // ---- assignment (the policy layer, shared with the real path) ----
-        queue.sort_by(|a, b| {
-            let (ra, rb) = (&reqs[a].req, &reqs[b].req);
-            rb.priority
-                .cmp(&ra.priority)
-                .then(ra.arrival.partial_cmp(&rb.arrival).unwrap())
-        });
-        let mut still_queued = Vec::new();
-        let drained = std::mem::take(&mut queue);
-        let backlog_total = drained.len();
-        for (qi, rid) in drained.into_iter().enumerate() {
-            let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
-            let decision = match system {
-                SimSystem::StaticDp => {
-                    if total > dp_cap {
-                        ModeDecision::Reject
-                    } else {
-                        ModeDecision::Dp
-                    }
-                }
-                SimSystem::StaticTp(m) => {
-                    if total > cm.kv_capacity_tokens(m.min(n_inst) * gpus_per_inst) {
-                        ModeDecision::Reject
-                    } else {
-                        ModeDecision::Tp(m)
-                    }
-                }
-                SimSystem::Shift => ModeDecision::Tp(n_inst),
-                SimSystem::Flying | SimSystem::FlyingSequential => {
-                    // Idle capacity in *unit-instance* terms so the snapshot
-                    // semantics match the real (fixed-engine) coordinator.
-                    let idle: usize = vengs
-                        .iter()
-                        .filter(|v| v.active.is_empty())
-                        .map(|v| v.m)
-                        .sum();
-                    let snap = Snapshot {
-                        queue_len: still_queued.len() + (backlog_total - qi - 1),
-                        idle_engines: idle,
-                        n_engines: n_inst,
-                        dp_capacity_tokens: dp_cap,
-                        max_tp: n_inst,
-                    };
-                    policy.decide(
-                        reqs[&rid].req.prompt_len,
-                        reqs[&rid].req.output_len,
-                        reqs[&rid].req.priority,
-                        reqs[&rid].req.tp_demand,
-                        &snap,
-                    )
-                }
-            };
-            match decision {
-                ModeDecision::Reject => {
-                    reqs.get_mut(&rid).unwrap().phase = RPhase::Done;
-                    rejected.push(rid);
-                    rec.on_finish(rid, t);
-                }
-                ModeDecision::Dp => {
-                    // Least-loaded unit veng with KV room and batch room
-                    // (vLLM max_num_seqs-style admission).
-                    let pick = vengs
-                        .iter_mut()
-                        .filter(|v| v.m == 1 || matches!(system, SimSystem::StaticDp))
-                        .filter(|v| v.active.len() < cfg.max_batch)
-                        .filter(|v| kv_room(v, &reqs, cm, gpus_per_inst) >= total)
-                        .min_by_key(|v| v.active.len());
-                    match pick {
-                        Some(v) => {
-                            v.active.push(rid);
-                            let r = reqs.get_mut(&rid).unwrap();
-                            r.phase = RPhase::Prefill;
-                            rec.on_first_sched(rid, t);
-                        }
-                        None => {
-                            // FLYING at low load: if every engine is merged
-                            // into a live TP group and there is NO backlog,
-                            // the request simply executes on the group (the
-                            // paper's "opportunistically TP" regime).  The
-                            // group's batch stays latency-sized (<= 8) so a
-                            // burst onset only has to drain a small batch
-                            // before the split releases the DP engines.
-                            let backlog_now = still_queued.len() + (backlog_total - qi - 1);
-                            let joined = matches!(
-                                system,
-                                SimSystem::Flying | SimSystem::FlyingSequential
-                            ) && backlog_now == 0
-                                && vengs
-                                    .iter_mut()
-                                    .find(|v| {
-                                        v.transient
-                                            && v.active.iter().filter(|r| !reqs[r].paused).count() < 8
-                                            && kv_room(v, &reqs, cm, gpus_per_inst) >= total
-                                    })
-                                    .map(|v| {
-                                        v.active.push(rid);
-                                        true
-                                    })
-                                    .unwrap_or(false);
-                            if joined {
-                                let r = reqs.get_mut(&rid).unwrap();
-                                r.phase = RPhase::Prefill;
-                                rec.on_first_sched(rid, t);
-                            } else {
-                                still_queued.push(rid);
+            // ---- assignment (the policy layer, shared with the real path)
+            if queue_dirty && !queue.is_empty() {
+                let backlog_total = queue.len();
+                let mut processed = 0usize;
+                let mut walk_progress = false;
+                requeue_high.clear();
+                requeue_normal.clear();
+                for pri_high in [true, false] {
+                    loop {
+                        let popped = if pri_high {
+                            queue.high.pop_front()
+                        } else {
+                            queue.normal.pop_front()
+                        };
+                        let Some(ri) = popped else { break };
+                        processed += 1;
+                        let riu = ri as usize;
+                        let total = reqs[riu].prompt_len + reqs[riu].output_len;
+                        let backlog_now =
+                            requeue_high.len() + requeue_normal.len() + (backlog_total - processed);
+                        let decision = match system {
+                            SimSystem::StaticDp => {
+                                if total > dp_cap {
+                                    ModeDecision::Reject
+                                } else {
+                                    ModeDecision::Dp
+                                }
+                            }
+                            SimSystem::StaticTp(m) => {
+                                if total > cap_by_m[m.min(n_inst)] {
+                                    ModeDecision::Reject
+                                } else {
+                                    ModeDecision::Tp(m)
+                                }
+                            }
+                            SimSystem::Shift => ModeDecision::Tp(n_inst),
+                            SimSystem::Flying | SimSystem::FlyingSequential => {
+                                // Idle capacity in *unit-instance* terms so
+                                // the snapshot semantics match the real
+                                // (fixed-engine) coordinator.
+                                let idle: usize = vengs
+                                    .iter()
+                                    .filter(|v| v.active.is_empty())
+                                    .map(|v| v.m)
+                                    .sum();
+                                let snap = Snapshot {
+                                    queue_len: backlog_now,
+                                    idle_engines: idle,
+                                    n_engines: n_inst,
+                                    dp_capacity_tokens: dp_cap,
+                                    max_tp: n_inst,
+                                };
+                                policy.decide(
+                                    reqs[riu].prompt_len,
+                                    reqs[riu].output_len,
+                                    if pri_high { Priority::High } else { Priority::Normal },
+                                    reqs[riu].tp_demand,
+                                    &snap,
+                                )
+                            }
+                        };
+                        match decision {
+                            ModeDecision::Reject => {
+                                let q = &mut reqs[riu];
+                                q.phase = RPhase::Done;
+                                rejected.push(q.id);
+                                rec.on_finish_at(q.rec, t);
+                                walk_progress = true;
+                            }
+                            ModeDecision::Dp => {
+                                // Least-loaded unit veng with KV room and
+                                // batch room (first among equals, matching
+                                // Iterator::min_by_key).
+                                let mut pick: Option<usize> = None;
+                                for (vi, v) in vengs.iter().enumerate() {
+                                    if !(v.m == 1 || matches!(system, SimSystem::StaticDp)) {
+                                        continue;
+                                    }
+                                    if v.active.len() >= cfg.max_batch {
+                                        continue;
+                                    }
+                                    if cap_by_m[v.m].saturating_sub(v.kv_used) < total {
+                                        continue;
+                                    }
+                                    match pick {
+                                        None => pick = Some(vi),
+                                        Some(p) if vengs[p].active.len() > v.active.len() => {
+                                            pick = Some(vi)
+                                        }
+                                        _ => {}
+                                    }
+                                }
+                                match pick {
+                                    Some(vi) => {
+                                        let used = kv_tokens(&reqs[riu]);
+                                        let v = &mut vengs[vi];
+                                        v.active.push(ri);
+                                        v.kv_used += used;
+                                        if v.free_at > t {
+                                            v.stamp += 1;
+                                            heap.push(Event {
+                                                t: v.free_at,
+                                                kind: EvKind::EngineFree {
+                                                    veng: v.handle,
+                                                    stamp: v.stamp,
+                                                },
+                                            });
+                                        }
+                                        let q = &mut reqs[riu];
+                                        q.phase = RPhase::Prefill;
+                                        rec.on_first_sched_at(q.rec, t);
+                                        walk_progress = true;
+                                    }
+                                    None => {
+                                        // FLYING at low load: if every engine
+                                        // is merged into a live TP group and
+                                        // there is NO backlog, the request
+                                        // joins the group (the paper's
+                                        // "opportunistically TP" regime).
+                                        let mut joined = false;
+                                        if matches!(
+                                            system,
+                                            SimSystem::Flying | SimSystem::FlyingSequential
+                                        ) && backlog_now == 0
+                                        {
+                                            for v in vengs.iter_mut() {
+                                                if v.transient
+                                                    && v.active
+                                                        .iter()
+                                                        .filter(|&&r| !reqs[r as usize].paused)
+                                                        .count()
+                                                        < 8
+                                                    && cap_by_m[v.m].saturating_sub(v.kv_used)
+                                                        >= total
+                                                {
+                                                    let used = kv_tokens(&reqs[riu]);
+                                                    v.active.push(ri);
+                                                    v.kv_used += used;
+                                                    if v.free_at > t {
+                                                        v.stamp += 1;
+                                                        heap.push(Event {
+                                                            t: v.free_at,
+                                                            kind: EvKind::EngineFree {
+                                                                veng: v.handle,
+                                                                stamp: v.stamp,
+                                                            },
+                                                        });
+                                                    }
+                                                    joined = true;
+                                                    break;
+                                                }
+                                            }
+                                        }
+                                        if joined {
+                                            let q = &mut reqs[riu];
+                                            q.phase = RPhase::Prefill;
+                                            rec.on_first_sched_at(q.rec, t);
+                                            walk_progress = true;
+                                        } else if pri_high {
+                                            requeue_high.push_back(ri);
+                                        } else {
+                                            requeue_normal.push_back(ri);
+                                        }
+                                    }
+                                }
+                            }
+                            ModeDecision::Tp(want_m) => {
+                                let want_m = want_m.min(n_inst).max(1);
+                                match bind_tp_sim(
+                                    system,
+                                    &mut vengs,
+                                    &mut handle_pos,
+                                    &mut next_handle,
+                                    &mut reqs,
+                                    &mut heap,
+                                    &mut unit_scratch,
+                                    ri,
+                                    want_m,
+                                    t,
+                                    live_switch_s,
+                                    &cap_by_m,
+                                    cfg,
+                                    &mut n_switches,
+                                ) {
+                                    Some(bind_t) => {
+                                        rec.on_first_sched_at(reqs[riu].rec, bind_t);
+                                        walk_progress = true;
+                                    }
+                                    None => {
+                                        if pri_high {
+                                            requeue_high.push_back(ri);
+                                        } else {
+                                            requeue_normal.push_back(ri);
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
                 }
-                ModeDecision::Tp(want_m) => {
-                    let want_m = want_m.min(n_inst).max(1);
-                    match bind_tp_sim(
-                        system, &mut vengs, &mut reqs, rid, want_m, t, cm, cfg, &mut n_switches,
-                        gpus_per_inst,
-                    ) {
-                        Some(bind_t) => rec.on_first_sched(rid, bind_t),
-                        None => still_queued.push(rid),
-                    }
+                std::mem::swap(&mut queue.high, &mut requeue_high);
+                std::mem::swap(&mut queue.normal, &mut requeue_normal);
+                if !walk_progress {
+                    // Nothing changed: identical future walks would be
+                    // no-ops until the next dirtying event.
+                    queue_dirty = false;
                 }
             }
-        }
-        queue = still_queued;
 
-        // ---- execute one step on every free veng with work ---------------
-        for v in vengs.iter_mut() {
-            if v.free_at > t || v.active.is_empty() {
-                continue;
-            }
-            let g = v.m * gpus_per_inst;
-            // Prefill-first (chunked); else a decode batch.
-            let pre = v.active.iter().copied().find(|r| {
-                let q = &reqs[r];
-                q.phase == RPhase::Prefill && !q.paused
-            });
-            if let Some(rid) = pre {
-                let q = reqs.get_mut(&rid).unwrap();
-                let chunk = (q.req.prompt_len - q.prefilled).min(cfg.chunk_tokens);
-                let dur = cm.prefill_s(chunk, g).max(cfg.heartbeat_s);
-                v.free_at = t + dur;
-                q.prefilled += chunk;
-                if q.prefilled >= q.req.prompt_len {
-                    q.phase = RPhase::Decode;
-                    q.emitted = 1; // first token produced by final chunk
-                    rec.on_token(rid, t + dur);
-                    if q.emitted >= q.req.output_len {
-                        q.phase = RPhase::Done;
-                        rec.on_finish(rid, t + dur);
-                    }
-                }
-                // Chunked prefill piggybacks decodes (Sarathi/vLLM, which
-                // the paper preserves): in-flight decode requests advance
-                // one token within the same round.
-                let riders: Vec<u64> = v
-                    .active
-                    .iter()
-                    .copied()
-                    .filter(|r| *r != rid && reqs[r].phase == RPhase::Decode && !reqs[r].paused)
-                    .take(cfg.max_batch)
-                    .collect();
-                for r in riders {
-                    let q = reqs.get_mut(&r).unwrap();
-                    q.emitted += 1;
-                    rec.on_token(r, t + dur);
-                    if q.emitted >= q.req.output_len {
-                        q.phase = RPhase::Done;
-                        rec.on_finish(r, t + dur);
-                    }
-                }
-            } else {
-                // SP (Shift) executes token-parallel across all instances,
-                // so its effective batch is cluster-wide.
-                let batch_cap = if matches!(system, SimSystem::Shift) {
-                    cfg.max_batch * v.m
-                } else {
-                    cfg.max_batch
-                };
-                let batch: Vec<u64> = v
-                    .active
-                    .iter()
-                    .copied()
-                    .filter(|r| reqs[r].phase == RPhase::Decode && !reqs[r].paused)
-                    .take(batch_cap)
-                    .collect();
-                if batch.is_empty() {
+            // ---- execute one step on every ready veng with work -----------
+            for vi in 0..vengs.len() {
+                if vengs[vi].free_at > t || vengs[vi].active.is_empty() {
                     continue;
                 }
-                let mean_ctx = (batch
-                    .iter()
-                    .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
-                    .sum::<usize>()
-                    / batch.len())
-                .max(1);
-                let dur = match system {
-                    // SP mode: token-parallel across instances — near-DP
-                    // aggregate throughput at an efficiency discount.
-                    SimSystem::Shift if batch.len() > 2 * n_inst => {
-                        let per = batch.len().div_ceil(n_inst);
-                        cm.decode_step_s(per, mean_ctx, gpus_per_inst) / 0.85
-                    }
-                    _ => cm.decode_step_s(batch.len(), mean_ctx, g),
-                }
-                .max(cfg.heartbeat_s);
-                v.free_at = t + dur;
-                for rid in batch {
-                    let q = reqs.get_mut(&rid).unwrap();
-                    q.emitted += 1;
-                    rec.on_token(rid, t + dur);
-                    if q.emitted >= q.req.output_len {
-                        q.phase = RPhase::Done;
-                        rec.on_finish(rid, t + dur);
+                let g = vengs[vi].m * gpus_per_inst;
+                // Prefill-first (chunked); else a decode batch.
+                let mut pre: Option<u32> = None;
+                for &r in &vengs[vi].active {
+                    let q = &reqs[r as usize];
+                    if q.phase == RPhase::Prefill && !q.paused {
+                        pre = Some(r);
+                        break;
                     }
                 }
-            }
-            // Retire finished requests.
-            v.active.retain(|r| reqs[r].phase != RPhase::Done);
-        }
-
-        // ---- split transient TP groups whose work drained -----------------
-        let mut split_any = false;
-        let mut new_vengs = Vec::with_capacity(vengs.len());
-        for v in vengs.drain(..) {
-            let tp_work_left = v
-                .active
-                .iter()
-                .any(|r| !reqs[r].paused && reqs[r].phase != RPhase::Done);
-            let has_paused = v.active.iter().any(|r| reqs[r].paused);
-            // Split only under pressure: queued DP work or hard-preempted
-            // requests waiting to resume.  An idle merged group is kept so
-            // low-load traffic stays in the TP regime (Use Case 1).
-            if v.transient && !tp_work_left && (!queue.is_empty() || has_paused) {
-                // Resume paused DP requests on the split unit vengs.
-                let paused: Vec<u64> = v.active.clone();
-                for i in 0..v.m {
-                    let mut unit = VEng { m: 1, free_at: v.free_at, active: vec![], transient: false };
-                    // Round-robin the resumed requests over the units.
-                    for (j, rid) in paused.iter().enumerate() {
-                        if j % v.m == i {
-                            reqs.get_mut(rid).unwrap().paused = false;
-                            unit.active.push(*rid);
+                if let Some(rid) = pre {
+                    let q = &mut reqs[rid as usize];
+                    let chunk = (q.prompt_len - q.prefilled).min(cfg.chunk_tokens);
+                    let dur = cm.prefill_s(chunk, g).max(cfg.heartbeat_s);
+                    let done_t = t + dur;
+                    vengs[vi].free_at = done_t;
+                    q.prefilled += chunk;
+                    if q.prefilled >= q.prompt_len {
+                        q.phase = RPhase::Decode;
+                        q.emitted = 1; // first token produced by final chunk
+                        vengs[vi].kv_used += 1;
+                        rec.on_token_at(q.rec, done_t);
+                        if q.emitted >= q.output_len {
+                            q.phase = RPhase::Done;
+                            rec.on_finish_at(q.rec, done_t);
                         }
                     }
-                    new_vengs.push(unit);
+                    // Chunked prefill piggybacks decodes (Sarathi/vLLM,
+                    // which the paper preserves): in-flight decode requests
+                    // advance one token within the same round.
+                    batch.clear();
+                    for &r in &vengs[vi].active {
+                        if r == rid {
+                            continue;
+                        }
+                        let q = &reqs[r as usize];
+                        if q.phase == RPhase::Decode && !q.paused {
+                            if batch.len() == cfg.max_batch {
+                                break;
+                            }
+                            batch.push(r);
+                        }
+                    }
+                    for &r in batch.iter() {
+                        let q = &mut reqs[r as usize];
+                        q.emitted += 1;
+                        rec.on_token_at(q.rec, done_t);
+                        if q.emitted >= q.output_len {
+                            q.phase = RPhase::Done;
+                            rec.on_finish_at(q.rec, done_t);
+                        }
+                    }
+                    vengs[vi].kv_used += batch.len();
+                } else {
+                    // SP (Shift) executes token-parallel across all
+                    // instances, so its effective batch is cluster-wide.
+                    let batch_cap = if matches!(system, SimSystem::Shift) {
+                        cfg.max_batch * vengs[vi].m
+                    } else {
+                        cfg.max_batch
+                    };
+                    batch.clear();
+                    let mut ctx_sum = 0usize;
+                    for &r in &vengs[vi].active {
+                        let q = &reqs[r as usize];
+                        if q.phase == RPhase::Decode && !q.paused {
+                            if batch.len() == batch_cap {
+                                break;
+                            }
+                            ctx_sum += kv_tokens(q);
+                            batch.push(r);
+                        }
+                    }
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let mean_ctx = (ctx_sum / batch.len()).max(1);
+                    let dur = match system {
+                        // SP mode: token-parallel across instances — near-DP
+                        // aggregate throughput at an efficiency discount.
+                        SimSystem::Shift if batch.len() > 2 * n_inst => {
+                            let per = batch.len().div_ceil(n_inst);
+                            cm.decode_step_s(per, mean_ctx, gpus_per_inst) / 0.85
+                        }
+                        _ => cm.decode_step_s(batch.len(), mean_ctx, g),
+                    }
+                    .max(cfg.heartbeat_s);
+                    let done_t = t + dur;
+                    vengs[vi].free_at = done_t;
+                    for &r in batch.iter() {
+                        let q = &mut reqs[r as usize];
+                        q.emitted += 1;
+                        rec.on_token_at(q.rec, done_t);
+                        if q.emitted >= q.output_len {
+                            q.phase = RPhase::Done;
+                            rec.on_finish_at(q.rec, done_t);
+                        }
+                    }
+                    vengs[vi].kv_used += batch.len();
                 }
-                n_switches += 1;
-                split_any = true;
-            } else {
-                new_vengs.push(v);
+                // Schedule the engine-free event for the step just issued.
+                {
+                    let v = &mut vengs[vi];
+                    v.stamp += 1;
+                    heap.push(Event {
+                        t: v.free_at,
+                        kind: EvKind::EngineFree { veng: v.handle, stamp: v.stamp },
+                    });
+                }
+                // Retire finished requests, maintaining the KV accounting.
+                {
+                    let v = &mut vengs[vi];
+                    let mut w = 0usize;
+                    for k in 0..v.active.len() {
+                        let r = v.active[k];
+                        let q = &reqs[r as usize];
+                        if q.phase == RPhase::Done {
+                            v.kv_used -= kv_tokens(q);
+                            queue_dirty = true; // capacity freed
+                        } else {
+                            v.active[w] = r;
+                            w += 1;
+                        }
+                    }
+                    v.active.truncate(w);
+                    if v.active.is_empty() {
+                        // Idle vengs never gate the clock (the reference's
+                        // work_t ignores them): cancel the pending event.
+                        v.stamp += 1;
+                    }
+                }
+                debug_assert_eq!(
+                    vengs[vi].kv_used,
+                    vengs[vi]
+                        .active
+                        .iter()
+                        .map(|&r| kv_tokens(&reqs[r as usize]))
+                        .sum::<usize>()
+                );
+            }
+
+            // ---- split transient TP groups whose work drained -------------
+            if vengs.iter().any(|v| v.transient) {
+                split_buf.clear();
+                let queue_nonempty = !queue.is_empty();
+                let mut split_any = false;
+                for v in vengs.drain(..) {
+                    let tp_work_left = v.active.iter().any(|&r| {
+                        let q = &reqs[r as usize];
+                        !q.paused && q.phase != RPhase::Done
+                    });
+                    let has_paused = v.active.iter().any(|&r| reqs[r as usize].paused);
+                    // Split only under pressure: queued DP work or
+                    // hard-preempted requests waiting to resume.  An idle
+                    // merged group is kept so low-load traffic stays in the
+                    // TP regime (Use Case 1).
+                    if v.transient && !tp_work_left && (queue_nonempty || has_paused) {
+                        for i in 0..v.m {
+                            let mut unit = VEng {
+                                m: 1,
+                                free_at: v.free_at,
+                                active: Vec::new(),
+                                transient: false,
+                                handle: next_handle,
+                                stamp: 0,
+                                kv_used: 0,
+                            };
+                            next_handle += 1;
+                            handle_pos.push(usize::MAX);
+                            // Round-robin the resumed requests over units.
+                            for (j, &r) in v.active.iter().enumerate() {
+                                if j % v.m == i {
+                                    let q = &mut reqs[r as usize];
+                                    q.paused = false;
+                                    unit.kv_used += kv_tokens(q);
+                                    unit.active.push(r);
+                                }
+                            }
+                            if !unit.active.is_empty() && unit.free_at > t {
+                                unit.stamp += 1;
+                                heap.push(Event {
+                                    t: unit.free_at,
+                                    kind: EvKind::EngineFree {
+                                        veng: unit.handle,
+                                        stamp: unit.stamp,
+                                    },
+                                });
+                            }
+                            split_buf.push(unit);
+                        }
+                        n_switches += 1;
+                        split_any = true;
+                        queue_dirty = true;
+                    } else {
+                        split_buf.push(v);
+                    }
+                }
+                std::mem::swap(&mut vengs, &mut split_buf);
+                if split_any {
+                    for (idx, v) in vengs.iter().enumerate() {
+                        handle_pos[v.handle as usize] = idx;
+                    }
+                }
+            }
+
+            // Another same-time round only if some veng still has work it
+            // could run at `t` (mirrors the reference's same-time
+            // re-iteration through its outer loop).
+            if !vengs.iter().any(|v| !v.active.is_empty() && v.free_at <= t) {
+                break;
             }
         }
-        vengs = new_vengs;
-        let _ = split_any;
     }
 
     SimOutcome { recorder: rec, rejected, n_switches }
 }
 
-fn kv_room(
-    v: &VEng,
-    reqs: &BTreeMap<u64, SimReq>,
-    cm: &CostModel,
-    gpus_per_inst: usize,
-) -> usize {
-    let cap = cm.kv_capacity_tokens(v.m * gpus_per_inst);
-    let used: usize = v
-        .active
-        .iter()
-        .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
-        .sum();
-    cap.saturating_sub(used)
-}
-
-/// Merge contiguous unit vengs into a transient TP group for `rid`.
-/// Returns the bind time (incl. live-switch latency) or None if no group is
-/// currently formable.
+/// Merge contiguous unit vengs into a transient TP group for `ri`, or join
+/// an existing compatible group.  Returns the bind time (incl. live-switch
+/// latency) or None if no group is currently formable.
 #[allow(clippy::too_many_arguments)]
 fn bind_tp_sim(
     system: SimSystem,
     vengs: &mut Vec<VEng>,
-    reqs: &mut BTreeMap<u64, SimReq>,
-    rid: u64,
+    handle_pos: &mut Vec<usize>,
+    next_handle: &mut u32,
+    reqs: &mut [SimReq],
+    heap: &mut BinaryHeap<Event>,
+    unit_scratch: &mut Vec<usize>,
+    ri: u32,
     want_m: usize,
     t: f64,
-    cm: &CostModel,
-    _cfg: &SimConfig,
+    live_switch_s: f64,
+    cap_by_m: &[usize],
+    cfg: &SimConfig,
     n_switches: &mut usize,
-    gpus_per_inst: usize,
 ) -> Option<f64> {
-    // An existing group of the right width with KV + batch room?
-    let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
-    let batch_cap = |v: &VEng| {
-        if matches!(system, SimSystem::Shift) {
-            _cfg.max_batch * v.m
+    let riu = ri as usize;
+    let total = reqs[riu].prompt_len + reqs[riu].output_len;
+
+    // An existing group of the right width with KV + batch room?  (First
+    // match only, as the reference's `find` — a non-joinable first match
+    // falls through to the merge path.)
+    let mut joined = false;
+    for v in vengs.iter_mut() {
+        let batch_cap = if matches!(system, SimSystem::Shift) {
+            cfg.max_batch * v.m
         } else {
-            _cfg.max_batch
+            cfg.max_batch
+        };
+        if v.m == want_m
+            && v.active.len() < batch_cap
+            && cap_by_m[v.m].saturating_sub(v.kv_used) >= total
+        {
+            // Static TP / Shift: groups are permanent; Flying: join
+            // transient groups (or a unit veng for degenerate TP-1).
+            if matches!(system, SimSystem::StaticTp(_) | SimSystem::Shift)
+                || v.transient
+                || v.m == 1
+            {
+                let used = kv_tokens(&reqs[riu]);
+                v.active.push(ri);
+                v.kv_used += used;
+                if v.free_at > t {
+                    v.stamp += 1;
+                    heap.push(Event {
+                        t: v.free_at,
+                        kind: EvKind::EngineFree { veng: v.handle, stamp: v.stamp },
+                    });
+                }
+                reqs[riu].phase = RPhase::Prefill;
+                joined = true;
+            }
+            break;
         }
-    };
-    if let Some(v) = vengs.iter_mut().find(|v| {
-        v.m == want_m
-            && v.active.len() < batch_cap(v)
-            && kv_room(v, reqs, cm, gpus_per_inst) >= total
-    }) {
-        // Static TP / Shift: groups are permanent; Flying: join transient.
-        if matches!(system, SimSystem::StaticTp(_) | SimSystem::Shift) || v.transient || v.m == 1 {
-            v.active.push(rid);
-            reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
-            return Some(t);
-        }
+    }
+    if joined {
+        return Some(t);
     }
     if !matches!(system, SimSystem::Flying | SimSystem::FlyingSequential) {
         return None;
     }
 
-    // Collect want_m unit vengs to merge (prefer idle ones).
-    let mut unit_idx: Vec<usize> = (0..vengs.len()).filter(|&i| vengs[i].m == 1).collect();
-    if unit_idx.len() < want_m {
+    // Collect want_m unit vengs to merge (prefer idle ones; stable sort so
+    // ties fall back to vector order, as the reference).
+    unit_scratch.clear();
+    unit_scratch.extend((0..vengs.len()).filter(|&i| vengs[i].m == 1));
+    if unit_scratch.len() < want_m {
         return None;
     }
-    unit_idx.sort_by_key(|&i| vengs[i].active.len());
-    let chosen: Vec<usize> = unit_idx.into_iter().take(want_m).collect();
+    unit_scratch.sort_by_key(|&i| vengs[i].active.len());
+    unit_scratch.truncate(want_m);
 
-    let busy = chosen.iter().any(|&i| !vengs[i].active.is_empty());
+    let busy = unit_scratch.iter().any(|&i| !vengs[i].active.is_empty());
     if busy && system == SimSystem::FlyingSequential {
         // Sequential switching: wait for the stragglers (Fig 7a) — the
         // request stays queued and the chosen engines drain naturally.
@@ -503,30 +958,44 @@ fn bind_tp_sim(
     // Hard preempt (Fig 7c): pause members' DP requests in place.
     let mut merged = VEng {
         m: want_m,
-        free_at: chosen
+        free_at: unit_scratch
             .iter()
             .map(|&i| vengs[i].free_at)
             .fold(t, f64::max)
-            + cm.live_switch_s(),
-        active: vec![],
+            + live_switch_s,
+        active: Vec::with_capacity(8),
         transient: true,
+        handle: *next_handle,
+        stamp: 0,
+        kv_used: 0,
     };
-    for &i in &chosen {
-        for r in &vengs[i].active {
-            reqs.get_mut(r).unwrap().paused = true;
-            merged.active.push(*r);
+    *next_handle += 1;
+    handle_pos.push(usize::MAX);
+    for &i in unit_scratch.iter() {
+        for &r in &vengs[i].active {
+            reqs[r as usize].paused = true;
+            merged.active.push(r);
         }
+        merged.kv_used += vengs[i].kv_used;
     }
-    merged.active.push(rid);
-    reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
+    merged.active.push(ri);
+    merged.kv_used += kv_tokens(&reqs[riu]);
+    reqs[riu].phase = RPhase::Prefill;
     let bind_t = merged.free_at;
-    // Remove chosen (descending to keep indices valid), insert merged.
-    let mut chosen_sorted = chosen;
-    chosen_sorted.sort_unstable_by(|a, b| b.cmp(a));
-    for i in chosen_sorted {
+    heap.push(Event {
+        t: merged.free_at,
+        kind: EvKind::SwitchSettle { veng: merged.handle, stamp: merged.stamp },
+    });
+    // Remove chosen (descending to keep indices valid), insert merged at
+    // the end — the reference's exact vector-order semantics.
+    unit_scratch.sort_unstable_by(|a, b| b.cmp(a));
+    for &i in unit_scratch.iter() {
         vengs.remove(i);
     }
     vengs.push(merged);
+    for (idx, v) in vengs.iter().enumerate() {
+        handle_pos[v.handle as usize] = idx;
+    }
     *n_switches += 1;
     Some(bind_t)
 }
@@ -608,5 +1077,72 @@ mod tests {
         let b = run(SimSystem::Flying, 200).recorder.summary(None);
         assert_eq!(a.mean_ttft, b.mean_ttft);
         assert_eq!(a.peak_throughput, b.peak_throughput);
+    }
+
+    #[test]
+    fn stall_rejects_instead_of_spinning() {
+        // max_batch = 0 blocks every DP admission forever: the seed loop
+        // would advance the heartbeat clock indefinitely; the event core
+        // must detect the stall and reject deterministically.
+        let trace = bursty(5);
+        let cfg = SimConfig { max_batch: 0, ..SimConfig::default() };
+        let o = simulate(SimSystem::StaticDp, &cm(), &trace, &cfg);
+        assert_eq!(o.rejected.len(), 5);
+        assert_eq!(o.recorder.summary(None).finished, 5); // finish = reject record
+    }
+
+    #[test]
+    fn oversized_shift_request_stalls_out_cleanly() {
+        // Shift always decides Tp(n_inst); a request larger than the whole
+        // cluster's KV can never bind — previously an infinite heartbeat
+        // spin, now a deterministic rejection.
+        let c = cm();
+        let cluster_cap = c.kv_capacity_tokens(c.hw.n_gpus);
+        let trace = vec![Request {
+            id: 1,
+            arrival: 0.0,
+            prompt_len: cluster_cap + 1,
+            output_len: 8,
+            priority: crate::workload::Priority::Normal,
+            tp_demand: None,
+        }];
+        let o = simulate(SimSystem::Shift, &c, &trace, &SimConfig::default());
+        assert_eq!(o.rejected, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite arrival")]
+    fn nan_arrival_is_rejected_up_front() {
+        let trace = vec![Request {
+            id: 1,
+            arrival: f64::NAN,
+            prompt_len: 10,
+            output_len: 2,
+            priority: crate::workload::Priority::Normal,
+            tp_demand: None,
+        }];
+        simulate(SimSystem::StaticDp, &cm(), &trace, &SimConfig::default());
+    }
+
+    #[test]
+    fn empty_trace_is_empty_outcome() {
+        let o = simulate(SimSystem::Flying, &cm(), &[], &SimConfig::default());
+        assert!(o.recorder.is_empty());
+        assert!(o.rejected.is_empty());
+        assert_eq!(o.n_switches, 0);
+    }
+
+    #[test]
+    fn priority_rings_preserve_arrival_order_within_level() {
+        // High-priority requests must be scheduled before Normal ones that
+        // arrived earlier, once both are queued behind a saturated cluster.
+        let mut wl = WorkloadCfg::paper_full(21, 400);
+        wl.priority_frac = 0.3;
+        let trace = generate(&wl);
+        let o = simulate(SimSystem::Flying, &cm(), &trace, &SimConfig::default());
+        let all = o.recorder.summary(None);
+        let hi = o.recorder.summary(Some(Priority::High));
+        assert_eq!(all.finished + o.rejected.len(), 400);
+        assert!(hi.n > 0);
     }
 }

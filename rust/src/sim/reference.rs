@@ -1,0 +1,502 @@
+//! Reference simulator: the original loop-based implementation, preserved
+//! verbatim in behavior as the differential-testing oracle for the
+//! event-driven core in `cluster.rs`.
+//!
+//! Per scheduling iteration it re-sorts the whole ready queue and linearly
+//! re-scans every virtual engine, so a trace of n requests costs O(n²) under
+//! sustained backlog — which is exactly why the production `simulate` was
+//! rewritten.  Keep this implementation boring and obviously correct; the
+//! property tests in `tests/sim_equivalence.rs` assert the rewritten core
+//! produces identical completion/rejection sets and switch counts.
+//!
+//! Two deliberate fixes over the seed (mirrored in the event core so the
+//! implementations stay outcome-equivalent):
+//!  * arrival comparisons use `f64::total_cmp` (no NaN panic), and
+//!  * the "queue non-empty, nothing running, nothing arriving" spin is
+//!    detected and resolved by deterministically rejecting the stuck
+//!    requests instead of advancing the clock forever.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
+use crate::metrics::Recorder;
+use crate::workload::Request;
+
+use super::cluster::{SimConfig, SimOutcome, SimSystem};
+use super::costmodel::CostModel;
+
+#[derive(Clone, Debug, PartialEq)]
+enum RPhase {
+    Queued,
+    Prefill,
+    Decode,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct SimReq {
+    req: Request,
+    phase: RPhase,
+    prefilled: usize,
+    emitted: usize,
+    paused: bool,
+}
+
+#[derive(Clone, Debug)]
+struct VEng {
+    m: usize,
+    free_at: f64,
+    active: Vec<u64>,
+    transient: bool,
+}
+
+/// Reference (seed) implementation of [`super::cluster::simulate`].
+pub fn simulate_reference(
+    system: SimSystem,
+    cm: &CostModel,
+    trace: &[Request],
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let n_inst = cm.hw.n_gpus / cm.model.min_gpus;
+    let gpus_per_inst = cm.model.min_gpus;
+
+    let mut vengs: Vec<VEng> = match system {
+        SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => (0..n_inst)
+            .map(|_| VEng { m: 1, free_at: 0.0, active: vec![], transient: false })
+            .collect(),
+        SimSystem::StaticTp(m) => {
+            let m = m.min(n_inst).max(1);
+            (0..n_inst / m)
+                .map(|_| VEng { m, free_at: 0.0, active: vec![], transient: false })
+                .collect()
+        }
+        SimSystem::Shift => vec![VEng { m: n_inst, free_at: 0.0, active: vec![], transient: false }],
+    };
+
+    let mut reqs: BTreeMap<u64, SimReq> = BTreeMap::new();
+    let mut queue: Vec<u64> = Vec::new();
+    let mut rec = Recorder::new();
+    let mut rejected = Vec::new();
+    let mut n_switches = 0usize;
+    let mut policy = crate::coordinator::policy::FlyingPolicy::default();
+
+    let mut arrivals: Vec<&Request> = trace.iter().collect();
+    arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let mut next_arr = 0usize;
+    let mut t = 0.0f64;
+    let mut progressed = true;
+
+    let dp_cap = cm.kv_capacity_tokens(gpus_per_inst);
+
+    loop {
+        // ---- advance the clock to the next actionable moment ------------
+        let work_t = vengs
+            .iter()
+            .filter(|v| !v.active.is_empty())
+            .map(|v| v.free_at)
+            .fold(f64::INFINITY, f64::min);
+        let arr_t = arrivals.get(next_arr).map(|r| r.arrival).unwrap_or(f64::INFINITY);
+        let next_t = work_t.min(arr_t);
+        if next_t.is_infinite() {
+            if queue.is_empty() {
+                break;
+            }
+            if !progressed {
+                // Stall: queue non-empty, nothing running, nothing arriving,
+                // and a full scheduling iteration changed nothing.  Reject
+                // the stuck requests deterministically instead of spinning.
+                for rid in std::mem::take(&mut queue) {
+                    reqs.get_mut(&rid).unwrap().phase = RPhase::Done;
+                    rejected.push(rid);
+                    rec.on_finish(rid, t);
+                }
+                break;
+            }
+            // One more heartbeat-quantum iteration: a split/assignment may
+            // still make progress (e.g. a drained transient group under
+            // queue pressure).
+            t += cfg.heartbeat_s;
+        } else {
+            t = t.max(next_t);
+        }
+        progressed = false;
+
+        // ---- admissions ---------------------------------------------------
+        while next_arr < arrivals.len() && arrivals[next_arr].arrival <= t {
+            let r = arrivals[next_arr];
+            rec.on_arrival(r.id, r.arrival, r.priority, r.prompt_len);
+            reqs.insert(
+                r.id,
+                SimReq {
+                    req: r.clone(),
+                    phase: RPhase::Queued,
+                    prefilled: 0,
+                    emitted: 0,
+                    paused: false,
+                },
+            );
+            queue.push(r.id);
+            next_arr += 1;
+            progressed = true;
+        }
+
+        // ---- assignment (the policy layer, shared with the real path) ----
+        queue.sort_by(|a, b| {
+            let (ra, rb) = (&reqs[a].req, &reqs[b].req);
+            rb.priority
+                .cmp(&ra.priority)
+                .then(ra.arrival.total_cmp(&rb.arrival))
+        });
+        let mut still_queued = Vec::new();
+        let drained = std::mem::take(&mut queue);
+        let backlog_total = drained.len();
+        for (qi, rid) in drained.into_iter().enumerate() {
+            let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
+            let decision = match system {
+                SimSystem::StaticDp => {
+                    if total > dp_cap {
+                        ModeDecision::Reject
+                    } else {
+                        ModeDecision::Dp
+                    }
+                }
+                SimSystem::StaticTp(m) => {
+                    if total > cm.kv_capacity_tokens(m.min(n_inst) * gpus_per_inst) {
+                        ModeDecision::Reject
+                    } else {
+                        ModeDecision::Tp(m)
+                    }
+                }
+                SimSystem::Shift => ModeDecision::Tp(n_inst),
+                SimSystem::Flying | SimSystem::FlyingSequential => {
+                    let idle: usize = vengs
+                        .iter()
+                        .filter(|v| v.active.is_empty())
+                        .map(|v| v.m)
+                        .sum();
+                    let snap = Snapshot {
+                        queue_len: still_queued.len() + (backlog_total - qi - 1),
+                        idle_engines: idle,
+                        n_engines: n_inst,
+                        dp_capacity_tokens: dp_cap,
+                        max_tp: n_inst,
+                    };
+                    policy.decide(
+                        reqs[&rid].req.prompt_len,
+                        reqs[&rid].req.output_len,
+                        reqs[&rid].req.priority,
+                        reqs[&rid].req.tp_demand,
+                        &snap,
+                    )
+                }
+            };
+            match decision {
+                ModeDecision::Reject => {
+                    reqs.get_mut(&rid).unwrap().phase = RPhase::Done;
+                    rejected.push(rid);
+                    rec.on_finish(rid, t);
+                    progressed = true;
+                }
+                ModeDecision::Dp => {
+                    let pick = vengs
+                        .iter_mut()
+                        .filter(|v| v.m == 1 || matches!(system, SimSystem::StaticDp))
+                        .filter(|v| v.active.len() < cfg.max_batch)
+                        .filter(|v| kv_room(v, &reqs, cm, gpus_per_inst) >= total)
+                        .min_by_key(|v| v.active.len());
+                    match pick {
+                        Some(v) => {
+                            v.active.push(rid);
+                            let r = reqs.get_mut(&rid).unwrap();
+                            r.phase = RPhase::Prefill;
+                            rec.on_first_sched(rid, t);
+                            progressed = true;
+                        }
+                        None => {
+                            let backlog_now = still_queued.len() + (backlog_total - qi - 1);
+                            let joined = matches!(
+                                system,
+                                SimSystem::Flying | SimSystem::FlyingSequential
+                            ) && backlog_now == 0
+                                && vengs
+                                    .iter_mut()
+                                    .find(|v| {
+                                        v.transient
+                                            && v.active.iter().filter(|r| !reqs[r].paused).count() < 8
+                                            && kv_room(v, &reqs, cm, gpus_per_inst) >= total
+                                    })
+                                    .map(|v| {
+                                        v.active.push(rid);
+                                        true
+                                    })
+                                    .unwrap_or(false);
+                            if joined {
+                                let r = reqs.get_mut(&rid).unwrap();
+                                r.phase = RPhase::Prefill;
+                                rec.on_first_sched(rid, t);
+                                progressed = true;
+                            } else {
+                                still_queued.push(rid);
+                            }
+                        }
+                    }
+                }
+                ModeDecision::Tp(want_m) => {
+                    let want_m = want_m.min(n_inst).max(1);
+                    match bind_tp_ref(
+                        system, &mut vengs, &mut reqs, rid, want_m, t, cm, cfg, &mut n_switches,
+                        gpus_per_inst,
+                    ) {
+                        Some(bind_t) => {
+                            rec.on_first_sched(rid, bind_t);
+                            progressed = true;
+                        }
+                        None => still_queued.push(rid),
+                    }
+                }
+            }
+        }
+        queue = still_queued;
+
+        // ---- execute one step on every free veng with work ---------------
+        for v in vengs.iter_mut() {
+            if v.free_at > t || v.active.is_empty() {
+                continue;
+            }
+            let g = v.m * gpus_per_inst;
+            let pre = v.active.iter().copied().find(|r| {
+                let q = &reqs[r];
+                q.phase == RPhase::Prefill && !q.paused
+            });
+            if let Some(rid) = pre {
+                let q = reqs.get_mut(&rid).unwrap();
+                let chunk = (q.req.prompt_len - q.prefilled).min(cfg.chunk_tokens);
+                let dur = cm.prefill_s(chunk, g).max(cfg.heartbeat_s);
+                v.free_at = t + dur;
+                q.prefilled += chunk;
+                if q.prefilled >= q.req.prompt_len {
+                    q.phase = RPhase::Decode;
+                    q.emitted = 1;
+                    rec.on_token(rid, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(rid, t + dur);
+                    }
+                }
+                let riders: Vec<u64> = v
+                    .active
+                    .iter()
+                    .copied()
+                    .filter(|r| *r != rid && reqs[r].phase == RPhase::Decode && !reqs[r].paused)
+                    .take(cfg.max_batch)
+                    .collect();
+                for r in riders {
+                    let q = reqs.get_mut(&r).unwrap();
+                    q.emitted += 1;
+                    rec.on_token(r, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(r, t + dur);
+                    }
+                }
+                progressed = true;
+            } else {
+                let batch_cap = if matches!(system, SimSystem::Shift) {
+                    cfg.max_batch * v.m
+                } else {
+                    cfg.max_batch
+                };
+                let batch: Vec<u64> = v
+                    .active
+                    .iter()
+                    .copied()
+                    .filter(|r| reqs[r].phase == RPhase::Decode && !reqs[r].paused)
+                    .take(batch_cap)
+                    .collect();
+                if batch.is_empty() {
+                    continue;
+                }
+                let mean_ctx = (batch
+                    .iter()
+                    .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
+                    .sum::<usize>()
+                    / batch.len())
+                .max(1);
+                let dur = match system {
+                    SimSystem::Shift if batch.len() > 2 * n_inst => {
+                        let per = batch.len().div_ceil(n_inst);
+                        cm.decode_step_s(per, mean_ctx, gpus_per_inst) / 0.85
+                    }
+                    _ => cm.decode_step_s(batch.len(), mean_ctx, g),
+                }
+                .max(cfg.heartbeat_s);
+                v.free_at = t + dur;
+                for rid in batch {
+                    let q = reqs.get_mut(&rid).unwrap();
+                    q.emitted += 1;
+                    rec.on_token(rid, t + dur);
+                    if q.emitted >= q.req.output_len {
+                        q.phase = RPhase::Done;
+                        rec.on_finish(rid, t + dur);
+                    }
+                }
+                progressed = true;
+            }
+            v.active.retain(|r| reqs[r].phase != RPhase::Done);
+        }
+
+        // ---- split transient TP groups whose work drained -----------------
+        let mut new_vengs = Vec::with_capacity(vengs.len());
+        for v in vengs.drain(..) {
+            let tp_work_left = v
+                .active
+                .iter()
+                .any(|r| !reqs[r].paused && reqs[r].phase != RPhase::Done);
+            let has_paused = v.active.iter().any(|r| reqs[r].paused);
+            if v.transient && !tp_work_left && (!queue.is_empty() || has_paused) {
+                let paused: Vec<u64> = v.active.clone();
+                for i in 0..v.m {
+                    let mut unit = VEng { m: 1, free_at: v.free_at, active: vec![], transient: false };
+                    for (j, rid) in paused.iter().enumerate() {
+                        if j % v.m == i {
+                            reqs.get_mut(rid).unwrap().paused = false;
+                            unit.active.push(*rid);
+                        }
+                    }
+                    new_vengs.push(unit);
+                }
+                n_switches += 1;
+                progressed = true;
+            } else {
+                new_vengs.push(v);
+            }
+        }
+        vengs = new_vengs;
+    }
+
+    SimOutcome { recorder: rec, rejected, n_switches }
+}
+
+fn kv_room(
+    v: &VEng,
+    reqs: &BTreeMap<u64, SimReq>,
+    cm: &CostModel,
+    gpus_per_inst: usize,
+) -> usize {
+    let cap = cm.kv_capacity_tokens(v.m * gpus_per_inst);
+    let used: usize = v
+        .active
+        .iter()
+        .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
+        .sum();
+    cap.saturating_sub(used)
+}
+
+/// Merge contiguous unit vengs into a transient TP group for `rid`.
+#[allow(clippy::too_many_arguments)]
+fn bind_tp_ref(
+    system: SimSystem,
+    vengs: &mut Vec<VEng>,
+    reqs: &mut BTreeMap<u64, SimReq>,
+    rid: u64,
+    want_m: usize,
+    t: f64,
+    cm: &CostModel,
+    _cfg: &SimConfig,
+    n_switches: &mut usize,
+    gpus_per_inst: usize,
+) -> Option<f64> {
+    let total = reqs[&rid].req.prompt_len + reqs[&rid].req.output_len;
+    let batch_cap = |v: &VEng| {
+        if matches!(system, SimSystem::Shift) {
+            _cfg.max_batch * v.m
+        } else {
+            _cfg.max_batch
+        }
+    };
+    if let Some(v) = vengs.iter_mut().find(|v| {
+        v.m == want_m
+            && v.active.len() < batch_cap(v)
+            && kv_room(v, reqs, cm, gpus_per_inst) >= total
+    }) {
+        if matches!(system, SimSystem::StaticTp(_) | SimSystem::Shift) || v.transient || v.m == 1 {
+            v.active.push(rid);
+            reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
+            return Some(t);
+        }
+    }
+    if !matches!(system, SimSystem::Flying | SimSystem::FlyingSequential) {
+        return None;
+    }
+
+    let mut unit_idx: Vec<usize> = (0..vengs.len()).filter(|&i| vengs[i].m == 1).collect();
+    if unit_idx.len() < want_m {
+        return None;
+    }
+    unit_idx.sort_by_key(|&i| vengs[i].active.len());
+    let chosen: Vec<usize> = unit_idx.into_iter().take(want_m).collect();
+
+    let busy = chosen.iter().any(|&i| !vengs[i].active.is_empty());
+    if busy && system == SimSystem::FlyingSequential {
+        return None;
+    }
+
+    let mut merged = VEng {
+        m: want_m,
+        free_at: chosen
+            .iter()
+            .map(|&i| vengs[i].free_at)
+            .fold(t, f64::max)
+            + cm.live_switch_s(),
+        active: vec![],
+        transient: true,
+    };
+    for &i in &chosen {
+        for r in &vengs[i].active {
+            reqs.get_mut(r).unwrap().paused = true;
+            merged.active.push(*r);
+        }
+    }
+    merged.active.push(rid);
+    reqs.get_mut(&rid).unwrap().phase = RPhase::Prefill;
+    let bind_t = merged.free_at;
+    let mut chosen_sorted = chosen;
+    chosen_sorted.sort_unstable_by(|a, b| b.cmp(a));
+    for i in chosen_sorted {
+        vengs.remove(i);
+    }
+    vengs.push(merged);
+    *n_switches += 1;
+    Some(bind_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{HwSpec, PaperModel};
+    use crate::workload::{generate, WorkloadCfg};
+
+    fn cm() -> CostModel {
+        CostModel::new(HwSpec::default(), PaperModel::llama70b())
+    }
+
+    #[test]
+    fn reference_completes_small_trace() {
+        let trace = generate(&WorkloadCfg::paper_full(11, 120));
+        for sys in [SimSystem::StaticDp, SimSystem::Flying] {
+            let o = simulate_reference(sys, &cm(), &trace, &SimConfig::default());
+            let s = o.recorder.summary(None);
+            assert_eq!(s.finished + o.rejected.len(), 120, "{}", sys.label());
+        }
+    }
+
+    #[test]
+    fn reference_stall_rejects_instead_of_spinning() {
+        // max_batch = 0 makes every DP admission impossible: the seed code
+        // would heartbeat forever; the fixed reference rejects.
+        let trace = generate(&WorkloadCfg::paper_full(3, 5));
+        let cfg = SimConfig { max_batch: 0, ..SimConfig::default() };
+        let o = simulate_reference(SimSystem::StaticDp, &cm(), &trace, &cfg);
+        assert_eq!(o.rejected.len(), 5);
+    }
+}

@@ -138,6 +138,22 @@ pub fn synth_prompt_tokens(id: u64, len: usize) -> Vec<i32> {
     (0..len).map(|_| rng.range(0, 255) as i32).collect()
 }
 
+/// Validate a trace before it reaches a scheduler: arrival times must be
+/// finite and non-negative (NaN arrivals would poison every time-ordered
+/// structure; the old `partial_cmp(..).unwrap()` comparisons panicked
+/// mid-run instead of at the boundary).
+pub fn validate(reqs: &[Request]) -> anyhow::Result<()> {
+    for r in reqs {
+        if !r.arrival.is_finite() {
+            anyhow::bail!("request {}: non-finite arrival time {}", r.id, r.arrival);
+        }
+        if r.arrival < 0.0 {
+            anyhow::bail!("request {}: negative arrival time {}", r.id, r.arrival);
+        }
+    }
+    Ok(())
+}
+
 /// CSV trace record/replay, so benchmark runs are comparable across systems.
 pub fn to_csv(reqs: &[Request]) -> String {
     let mut s = String::from("id,arrival,prompt_len,output_len,priority,tp_demand\n");
@@ -174,6 +190,7 @@ pub fn from_csv(text: &str) -> anyhow::Result<Vec<Request>> {
             tp_demand: if f[5].is_empty() { None } else { Some(f[5].parse()?) },
         });
     }
+    validate(&out)?;
     Ok(out)
 }
 
@@ -255,6 +272,23 @@ mod tests {
             assert!((a.arrival - b.arrival).abs() < 1e-5);
             assert_eq!(a.priority, b.priority);
         }
+    }
+
+    #[test]
+    fn validate_rejects_nan_and_negative_arrivals() {
+        let mut reqs = generate(&WorkloadCfg::paper_scaled(5, 10));
+        assert!(validate(&reqs).is_ok());
+        reqs[3].arrival = f64::NAN;
+        assert!(validate(&reqs).is_err());
+        reqs[3].arrival = -1.0;
+        assert!(validate(&reqs).is_err());
+        // ...and from_csv refuses such traces at the boundary.
+        let mut csv = to_csv(&generate(&WorkloadCfg::paper_scaled(5, 3)));
+        csv = csv.replace(
+            csv.lines().nth(1).unwrap(),
+            "0,-5.000000,10,10,0,",
+        );
+        assert!(from_csv(&csv).is_err());
     }
 
     #[test]

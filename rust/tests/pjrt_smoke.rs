@@ -1,7 +1,11 @@
 //! PJRT behavior probes: output untupling and buffer chaining via execute_b.
 use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
 
+// Tracking: requires a PJRT CPU plugin plus a hand-built /tmp/tuple_test.hlo.txt
+// probe artifact; neither exists in CI.  Run locally with
+// `cargo test --features pjrt -- --ignored` after `make artifacts`.
 #[test]
+#[ignore = "requires PJRT CPU plugin and local probe artifact"]
 fn tuple_outputs_and_buffer_chaining() -> anyhow::Result<()> {
     let client = PjRtClient::cpu()?;
     let proto = HloModuleProto::from_text_file("/tmp/tuple_test.hlo.txt")?;

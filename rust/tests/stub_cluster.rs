@@ -1,0 +1,263 @@
+//! End-to-end coordinator tests over the deterministic stub backend: the
+//! full serving path — chunked prefill, paged decode, group formation,
+//! every switching strategy — with no PJRT dependency, so they run in
+//! plain CI (`cargo test`).  Mirrors `tests/integration.rs` (which needs
+//! `--features pjrt` + artifacts) including its key invariant: greedy
+//! decoding emits the *identical* token sequence under DP, TP, and across
+//! live DP<->TP switches.
+
+use flying_serving::baselines::{StaticDpPolicy, StaticTpPolicy};
+use flying_serving::coordinator::policy::FlyingPolicy;
+use flying_serving::coordinator::strategy::Strategy;
+use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::model::{ModelCfg, StaticShapes};
+use flying_serving::workload::{synth_prompt_tokens, Priority};
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        name: "stub-tiny".into(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_head: 8,
+        ffn_hidden: 48,
+        n_experts: 0,
+        top_k: 0,
+        n_blocks: 16,
+        block_base: 4,
+        max_ctx: 256,
+        vocab: 258,
+        pool_elems: 16 * 4 * 4 * 8,
+    }
+}
+
+fn shapes() -> StaticShapes {
+    StaticShapes { b_dec: 4, c_prefill: 16 }
+}
+
+fn cluster(n_engines: usize) -> Cluster {
+    Cluster::start_stub(cfg(), shapes(), n_engines).unwrap()
+}
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: synth_prompt_tokens(id, prompt_len),
+        max_new,
+        priority: Priority::Normal,
+        tp_demand: None,
+        arrival: 0.0,
+    }
+}
+
+#[test]
+fn dp_and_tp_emit_identical_tokens() {
+    let trace = vec![req(1, 19, 6), req(2, 40, 5)];
+
+    let mut c1 = cluster(2);
+    let out_dp = c1
+        .run_trace(trace.clone(), &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c1.shutdown();
+
+    let mut c2 = cluster(2);
+    let out_tp = c2
+        .run_trace(trace, &mut StaticTpPolicy { p: 2 }, Strategy::Sequential)
+        .unwrap();
+    c2.shutdown();
+
+    assert_eq!(out_dp.outputs.len(), 2);
+    assert_eq!(out_dp.outputs[&1].len(), 6);
+    assert_eq!(out_dp.outputs[&2].len(), 5);
+    assert_eq!(out_dp.outputs, out_tp.outputs, "DP vs TP token mismatch");
+    assert!(out_dp.rejected.is_empty() && out_tp.rejected.is_empty());
+    assert!(out_dp.n_steps > 0);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let trace = vec![req(7, 25, 4)];
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let mut c = cluster(1);
+        let o = c
+            .run_trace(trace.clone(), &mut StaticDpPolicy, Strategy::Sequential)
+            .unwrap();
+        c.shutdown();
+        outs.push(o.outputs);
+    }
+    assert_eq!(outs[0], outs[1]);
+}
+
+#[test]
+fn flying_policy_switches_and_preserves_outputs() {
+    let mut trace = vec![];
+    for i in 0..5u64 {
+        let mut r = req(10 + i, 15 + 3 * i as usize, 4);
+        r.arrival = 0.05 * i as f64;
+        trace.push(r);
+    }
+
+    let mut c = cluster(2);
+    let truth = c
+        .run_trace(trace.clone(), &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+
+    let mut c = cluster(2);
+    let flying = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::HardPreempt)
+        .unwrap();
+    c.shutdown();
+
+    assert_eq!(truth.outputs, flying.outputs);
+    // The dynamic run must actually have exercised switching.
+    assert!(
+        !flying.switches.is_empty(),
+        "flying policy never formed a TP group"
+    );
+    // Live switches are fast: the stub data plane makes the SetMode RPC +
+    // communicator fetch essentially free.
+    for s in &flying.switches {
+        assert!(s.latency_s < 0.05, "switch took {}s", s.latency_s);
+    }
+}
+
+#[test]
+fn long_context_served_by_flying_rejected_by_static_dp() {
+    let dp_cap = cfg().dp_token_capacity();
+
+    // A request that cannot fit a single engine's KV pool.
+    let long = ServeRequest {
+        id: 99,
+        prompt: synth_prompt_tokens(99, dp_cap + 10),
+        max_new: 3,
+        priority: Priority::Normal,
+        tp_demand: None,
+        arrival: 0.0,
+    };
+
+    let mut c = cluster(2);
+    let dp = c
+        .run_trace(vec![long.clone()], &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(dp.rejected, vec![99], "static DP must OOM-reject");
+
+    let mut c = cluster(2);
+    let fly = c
+        .run_trace(vec![long], &mut FlyingPolicy::default(), Strategy::HardPreempt)
+        .unwrap();
+    c.shutdown();
+    assert!(fly.rejected.is_empty(), "flying must serve via TP merge");
+    assert_eq!(fly.outputs[&99].len(), 3);
+}
+
+#[test]
+fn hard_preempt_priority_interrupts_and_resumes() {
+    // A normal request arrives first and starts decoding on DP; then a
+    // high-priority request arrives and hard-preempts into a TP group.
+    let mut background = req(1, 30, 8);
+    background.arrival = 0.0;
+    let mut priority = req(2, 12, 3);
+    priority.priority = Priority::High;
+    priority.arrival = 0.15;
+
+    let mut c = cluster(2);
+    let out = c
+        .run_trace(
+            vec![background.clone(), priority.clone()],
+            &mut FlyingPolicy::default(),
+            Strategy::HardPreempt,
+        )
+        .unwrap();
+    c.shutdown();
+
+    // Both complete with full outputs (background resumed after preemption).
+    assert_eq!(out.outputs[&1].len(), 8);
+    assert_eq!(out.outputs[&2].len(), 3);
+
+    // Background tokens match an undisturbed run (KV survived the pause).
+    let mut c = cluster(2);
+    let solo = c
+        .run_trace(vec![background], &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(out.outputs[&1], solo.outputs[&1]);
+}
+
+#[test]
+fn soft_preempt_speculative_tokens_consistent() {
+    let mut background = req(1, 30, 6);
+    background.arrival = 0.0;
+    let mut tp_req = req(2, 20, 5);
+    tp_req.tp_demand = Some(2); // explicit TP demand triggers the bind path
+    tp_req.arrival = 0.1;
+
+    let mut c = cluster(2);
+    let soft = c
+        .run_trace(
+            vec![background.clone(), tp_req.clone()],
+            &mut FlyingPolicy::default(),
+            Strategy::SoftPreempt,
+        )
+        .unwrap();
+    c.shutdown();
+
+    assert_eq!(soft.outputs[&1].len(), 6);
+    assert_eq!(soft.outputs[&2].len(), 5);
+
+    // The speculatively-started TP request must emit the same tokens as a
+    // clean static run (recompute preserved its state).
+    let mut c = cluster(2);
+    let solo = c
+        .run_trace(vec![req(2, 20, 5)], &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(soft.outputs[&2], solo.outputs[&2]);
+}
+
+#[test]
+fn sequential_strategy_drains_then_binds() {
+    let mut background = req(1, 20, 6);
+    background.arrival = 0.0;
+    let mut tp_req = req(2, 16, 4);
+    tp_req.tp_demand = Some(2);
+    tp_req.arrival = 0.1;
+
+    let mut c = cluster(2);
+    let out = c
+        .run_trace(
+            vec![background, tp_req],
+            &mut FlyingPolicy::default(),
+            Strategy::Sequential,
+        )
+        .unwrap();
+    c.shutdown();
+    assert_eq!(out.outputs[&1].len(), 6);
+    assert_eq!(out.outputs[&2].len(), 4);
+}
+
+#[test]
+fn four_engine_mixed_load_completes() {
+    // Wider cluster: mixed priorities, TP demands, and enough requests to
+    // exercise the indexed free/draining sets and batch recycling.
+    let mut trace = Vec::new();
+    for i in 0..24u64 {
+        let mut r = req(i, 8 + (i as usize % 13), 3 + (i as usize % 4));
+        r.priority = if i % 7 == 0 { Priority::High } else { Priority::Normal };
+        r.tp_demand = if i % 11 == 0 { Some(2) } else { None };
+        r.arrival = 0.01 * i as f64;
+        trace.push(r);
+    }
+    let mut c = cluster(4);
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::HardPreempt)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(out.outputs.len() + out.rejected.len(), 24);
+    for (id, toks) in &out.outputs {
+        assert!(!toks.is_empty(), "request {id} produced no tokens");
+    }
+}
