@@ -74,11 +74,13 @@ mod tests {
 
     fn snap() -> Snapshot {
         Snapshot {
+            now: 0.0,
             queue_len: 0,
             idle_engines: 4,
             n_engines: 4,
             dp_capacity_tokens: 1000,
             max_tp: 4,
+            kv_frac: 0.0,
         }
     }
 

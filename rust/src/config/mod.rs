@@ -89,12 +89,24 @@ impl ServeConfig {
     /// Instantiate the configured policy.
     pub fn make_policy(&self) -> Result<Box<dyn crate::coordinator::policy::Policy>> {
         use crate::baselines::{StaticDpPolicy, StaticTpPolicy};
+        use crate::control::{
+            AdaptivePolicy, ControlConfig, ControlRuntime, ThresholdController,
+        };
         use crate::coordinator::policy::FlyingPolicy;
         Ok(match self.policy.as_str() {
             "flying" => Box::new(FlyingPolicy::default()),
             "static-dp" => Box::new(StaticDpPolicy),
             "static-tp" => Box::new(StaticTpPolicy { p: self.static_tp }),
-            p => bail!("unknown policy '{p}' (flying|static-dp|static-tp)"),
+            // Real-path control plane.  The threshold controller is
+            // scale-free (queue depth and idle fractions), so it works on
+            // the testbed's tiny models; the cost-model controller is
+            // calibrated to paper-scale hardware and stays simulator-only
+            // until the real path carries a testbed-calibrated CostModel.
+            "adaptive" => Box::new(AdaptivePolicy::new(ControlRuntime::new(
+                Box::new(ThresholdController::default()),
+                ControlConfig::default(),
+            ))),
+            p => bail!("unknown policy '{p}' (flying|static-dp|static-tp|adaptive)"),
         })
     }
 }
@@ -124,6 +136,14 @@ mod tests {
         assert_eq!(c.strategy, Strategy::SoftPreempt);
         assert_eq!(c.static_tp, 4);
         assert!(c.make_policy().is_ok());
+    }
+
+    #[test]
+    fn adaptive_policy_constructs() {
+        let (_, flags) = parse_args(&s(&["--policy", "adaptive"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        let p = c.make_policy().unwrap();
+        assert_eq!(p.name(), "threshold");
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Load forecasting for the control plane: time-aware EWMAs plus a
+//! fast/slow-ratio burst detector.
+//!
+//! The planner needs two things from the arrival-rate signal: a smoothed
+//! estimate robust to Poisson noise (the slow EWMA), and an early-warning
+//! burst flag that reacts within a few seconds of a rate jump (the fast
+//! EWMA racing ahead of the slow one).  Both are O(1) state — no history
+//! buffers, no allocation — and deterministic: the same (t, rate) stream
+//! always produces the same forecast, which is what keeps simulated and
+//! real control decisions byte-identical.
+
+/// Irregularly-sampled exponential moving average: decay is computed from
+/// the elapsed time, so tick-rate jitter does not change the smoothing
+/// horizon.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    /// Time constant (seconds): samples older than ~3·tau are forgotten.
+    pub tau_s: f64,
+    value: f64,
+    last_t: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    pub fn new(tau_s: f64) -> Self {
+        assert!(tau_s > 0.0);
+        Ewma {
+            tau_s,
+            value: 0.0,
+            last_t: 0.0,
+            primed: false,
+        }
+    }
+
+    pub fn observe(&mut self, t: f64, x: f64) {
+        if !self.primed {
+            self.value = x;
+            self.last_t = t;
+            self.primed = true;
+            return;
+        }
+        let dt = (t - self.last_t).max(0.0);
+        let alpha = 1.0 - (-dt / self.tau_s).exp();
+        self.value += alpha * (x - self.value);
+        self.last_t = t;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    pub fn primed(&self) -> bool {
+        self.primed
+    }
+}
+
+/// EWMA pair + burst detector over the arrival-rate signal.
+#[derive(Clone, Copy, Debug)]
+pub struct Forecaster {
+    fast: Ewma,
+    slow: Ewma,
+    /// fast/slow ratio above which the load counts as bursting.
+    pub burst_ratio: f64,
+    /// Rates below this never count as a burst (idle-noise floor, req/s).
+    pub min_burst_rate: f64,
+}
+
+impl Default for Forecaster {
+    fn default() -> Self {
+        Forecaster {
+            fast: Ewma::new(4.0),
+            slow: Ewma::new(45.0),
+            burst_ratio: 1.6,
+            min_burst_rate: 1.0,
+        }
+    }
+}
+
+impl Forecaster {
+    pub fn new(tau_fast_s: f64, tau_slow_s: f64, burst_ratio: f64) -> Self {
+        assert!(tau_fast_s < tau_slow_s, "fast EWMA must be faster than slow");
+        Forecaster {
+            fast: Ewma::new(tau_fast_s),
+            slow: Ewma::new(tau_slow_s),
+            burst_ratio,
+            min_burst_rate: 1.0,
+        }
+    }
+
+    pub fn observe_rate(&mut self, t: f64, rate: f64) {
+        self.fast.observe(t, rate);
+        self.slow.observe(t, rate);
+    }
+
+    pub fn rate_fast(&self) -> f64 {
+        self.fast.value()
+    }
+
+    pub fn rate_slow(&self) -> f64 {
+        self.slow.value()
+    }
+
+    /// Near-term rate forecast: the fast estimate, floored by the slow one
+    /// while a burst decays so the planner does not flap back early.
+    pub fn forecast_rate(&self) -> f64 {
+        self.fast.value().max(0.0)
+    }
+
+    /// Burst = the fast estimate running well ahead of the slow baseline.
+    pub fn bursting(&self) -> bool {
+        self.fast.primed()
+            && self.fast.value() > self.min_burst_rate
+            && self.fast.value() > self.burst_ratio * self.slow.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_primes() {
+        let mut e = Ewma::new(10.0);
+        assert!(!e.primed());
+        e.observe(5.0, 3.0);
+        assert!(e.primed());
+        assert_eq!(e.value(), 3.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_signal() {
+        let mut e = Ewma::new(2.0);
+        for i in 0..100 {
+            e.observe(i as f64, 7.0);
+        }
+        assert!((e.value() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_decay_depends_on_elapsed_time_not_tick_count() {
+        // Same signal sampled at 1 Hz and 10 Hz must land near the same
+        // value after the same wall time.
+        let mut coarse = Ewma::new(5.0);
+        let mut fine = Ewma::new(5.0);
+        coarse.observe(0.0, 0.0);
+        fine.observe(0.0, 0.0);
+        for i in 1..=20 {
+            coarse.observe(i as f64, 10.0);
+        }
+        for i in 1..=200 {
+            fine.observe(i as f64 * 0.1, 10.0);
+        }
+        assert!(
+            (coarse.value() - fine.value()).abs() < 0.2,
+            "coarse={} fine={}",
+            coarse.value(),
+            fine.value()
+        );
+    }
+
+    #[test]
+    fn burst_fires_on_rate_jump_and_clears_after() {
+        let mut f = Forecaster::default();
+        // Long steady 2 req/s baseline.
+        for i in 0..120 {
+            f.observe_rate(i as f64, 2.0);
+        }
+        assert!(!f.bursting());
+        // Jump to 20 req/s: the fast EWMA reacts within a few seconds.
+        for i in 0..8 {
+            f.observe_rate(120.0 + i as f64, 20.0);
+        }
+        assert!(f.bursting(), "fast={} slow={}", f.rate_fast(), f.rate_slow());
+        // Back to baseline long enough for both EWMAs to settle.
+        for i in 0..300 {
+            f.observe_rate(128.0 + i as f64, 2.0);
+        }
+        assert!(!f.bursting(), "fast={} slow={}", f.rate_fast(), f.rate_slow());
+    }
+
+    #[test]
+    fn idle_noise_never_bursts() {
+        let mut f = Forecaster::default();
+        for i in 0..60 {
+            // 0.1 -> 0.5 req/s wiggle: below the burst-rate floor.
+            f.observe_rate(i as f64, if i % 2 == 0 { 0.1 } else { 0.5 });
+        }
+        assert!(!f.bursting());
+    }
+
+    #[test]
+    fn forecaster_is_deterministic() {
+        let run = || {
+            let mut f = Forecaster::default();
+            for i in 0..50 {
+                f.observe_rate(i as f64 * 0.7, (i % 7) as f64);
+            }
+            (f.rate_fast(), f.rate_slow(), f.bursting())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,34 @@
+//! Adaptive reconfiguration control plane.
+//!
+//! FLYING SERVING's mechanism (live DP↔TP switching) needs a *decision
+//! loop* to exploit it under non-stationary traffic: something must watch
+//! the load, forecast where it is going, and plan fleet-wide merges/splits
+//! without thrashing.  This module is that loop (cf. Shift Parallelism's
+//! rate/mix estimation, arXiv:2509.16495):
+//!
+//! * [`telemetry`] — fixed-capacity ring-buffer sliding window over the
+//!   serving event stream (arrival rate, length mix, TTFT/TPOT
+//!   percentiles); zero steady-state allocation.
+//! * [`forecast`] — time-aware fast/slow EWMAs + burst detector.
+//! * [`planner`] — the [`Controller`] trait (`StaticController`,
+//!   `ThresholdController`, `CostModelController`), the per-run
+//!   [`ControlRuntime`] with tick/cooldown bookkeeping, and
+//!   [`AdaptivePolicy`], the `Policy` adaptor for the real coordinator.
+//!
+//! Both execution paths consume plans through the same code:
+//! `sim::simulate_adaptive` threads a `ControlRuntime` through the event
+//! core's assignment walk, and the real coordinator runs the identical
+//! runtime behind `AdaptivePolicy` — mirroring how `Policy` itself is
+//! shared today, so simulated and real decisions are byte-identical given
+//! the same event stream.
+
+pub mod forecast;
+pub mod planner;
+pub mod telemetry;
+
+pub use forecast::{Ewma, Forecaster};
+pub use planner::{
+    plan_decision, AdaptivePolicy, ControlConfig, ControlRuntime, Controller,
+    CostModelController, CtrlSnapshot, Plan, StaticController, ThresholdController,
+};
+pub use telemetry::{Telemetry, WindowStats};

@@ -1,0 +1,710 @@
+//! Reconfiguration planning: the `Controller` trait, its three
+//! implementations, and the `ControlRuntime` that both the discrete-event
+//! simulator and the real coordinator drive.
+//!
+//! Architecture (mirrors how `Policy` is shared between the two paths):
+//!
+//! ```text
+//!   events ──> Telemetry ──window──> Forecaster ──> CtrlSnapshot
+//!                                                        │
+//!                                          Controller::plan (every tick)
+//!                                                        │ cooldown
+//!                                                  Plan (Hold/Out/Up)
+//!                                                        │
+//!   per-request decide() ──────────> plan_decision ──> ModeDecision
+//! ```
+//!
+//! The fleet-level `Plan` only steers the *elastic* traffic (paper Use
+//! Case 1).  Correctness-constrained paths are never overridden: explicit
+//! TP demands, memory-driven long-context binding (Use Case 3), and
+//! priority binding (Use Case 2) behave exactly as `FlyingPolicy` — a plan
+//! can make the system scale out or up, it cannot make it OOM or starve
+//! priority traffic.
+//!
+//! Thrash control is layered: controllers carry their own hysteresis
+//! (threshold dead-band, cost-model improvement margin) and the runtime
+//! enforces a hard cooldown between plan changes, so the number of plan
+//! changes over a run is bounded by `duration / cooldown_s + 1` by
+//! construction.
+
+use crate::coordinator::policy::{FlyingPolicy, ModeDecision, Policy, Snapshot};
+use crate::sim::cluster::SimConfig;
+use crate::sim::costmodel::CostModel;
+use crate::workload::Priority;
+
+use super::forecast::Forecaster;
+use super::telemetry::{Telemetry, WindowStats};
+
+/// Fleet-level reconfiguration plan for elastic traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plan {
+    /// Defer to the per-request `FlyingPolicy` heuristics unchanged.
+    Hold,
+    /// Serve elastic traffic DP (merged groups split as they drain).
+    ScaleOut,
+    /// Bind elastic traffic into TP groups `width` instances wide.
+    ScaleUp { width: usize },
+}
+
+impl Plan {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Plan::Hold => "hold",
+            Plan::ScaleOut => "scale-out",
+            Plan::ScaleUp { .. } => "scale-up",
+        }
+    }
+}
+
+/// Everything a controller sees at a tick: windowed telemetry, forecast,
+/// and instantaneous cluster state.
+#[derive(Clone, Copy, Debug)]
+pub struct CtrlSnapshot {
+    pub now: f64,
+    pub window: WindowStats,
+    pub rate_fast: f64,
+    pub rate_slow: f64,
+    pub forecast_rate: f64,
+    pub burst: bool,
+    pub queue_len: usize,
+    /// Cluster KV utilization in [0, 1].
+    pub kv_frac: f64,
+    /// Idle serving instances, in unit-instance terms.
+    pub idle_units: usize,
+    /// Total serving instances the node partitions into.
+    pub n_units: usize,
+    pub cur_plan: Plan,
+}
+
+/// A reconfiguration controller: pure function of telemetry snapshots to
+/// plans (plus private hysteresis state).  Deterministic by contract — the
+/// same snapshot stream must yield the same plan stream, which is what
+/// keeps simulated and real decisions byte-identical.
+pub trait Controller: Send {
+    fn name(&self) -> &'static str;
+    fn plan(&mut self, snap: &CtrlSnapshot) -> Plan;
+}
+
+// ---------------------------------------------------------------------------
+// StaticController — fixed-plan baselines
+// ---------------------------------------------------------------------------
+
+/// Emits one fixed plan forever.  `hold()` is the do-nothing baseline (the
+/// event core must behave exactly like plain `FlyingPolicy` under it — the
+/// differential harness asserts this); `dp()`/`tp(w)` pin the fleet to one
+/// layout for controller ablations.
+pub struct StaticController {
+    fixed: Plan,
+    label: &'static str,
+}
+
+impl StaticController {
+    pub fn hold() -> Self {
+        StaticController { fixed: Plan::Hold, label: "static-hold" }
+    }
+
+    pub fn dp() -> Self {
+        StaticController { fixed: Plan::ScaleOut, label: "static-dp-plan" }
+    }
+
+    pub fn tp(width: usize) -> Self {
+        StaticController {
+            fixed: Plan::ScaleUp { width },
+            label: "static-tp-plan",
+        }
+    }
+}
+
+impl Controller for StaticController {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn plan(&mut self, _snap: &CtrlSnapshot) -> Plan {
+        self.fixed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThresholdController — queue/burst bands with a hysteresis dead-band
+// ---------------------------------------------------------------------------
+
+/// Classic reactive control: scale out on backlog or burst, scale up when the
+/// fleet is demonstrably idle, hold inside the dead-band between the two
+/// thresholds so small oscillations never flip the plan.
+pub struct ThresholdController {
+    /// Scale out when queue_len >= hi_queue_per_unit * n_units.
+    pub hi_queue_per_unit: f64,
+    /// Scale up only when queue_len <= lo_queue ...
+    pub lo_queue: usize,
+    /// ... and at least this fraction of units is idle.
+    pub idle_frac_up: f64,
+    /// TP width to scale up to; 0 = widest (n_units).
+    pub up_width: usize,
+    state: Plan,
+}
+
+impl Default for ThresholdController {
+    fn default() -> Self {
+        ThresholdController {
+            hi_queue_per_unit: 1.0,
+            lo_queue: 0,
+            idle_frac_up: 0.75,
+            up_width: 0,
+            state: Plan::Hold,
+        }
+    }
+}
+
+impl Controller for ThresholdController {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn plan(&mut self, snap: &CtrlSnapshot) -> Plan {
+        let q = snap.queue_len as f64;
+        if snap.burst || q >= self.hi_queue_per_unit * snap.n_units as f64 {
+            self.state = Plan::ScaleOut;
+        } else if snap.queue_len <= self.lo_queue
+            && (snap.idle_units as f64) >= self.idle_frac_up * snap.n_units as f64
+        {
+            let w = if self.up_width == 0 { snap.n_units } else { self.up_width };
+            if w > 1 {
+                self.state = Plan::ScaleUp { width: w };
+            }
+        }
+        // Between the bands: keep the previous plan (hysteresis).
+        self.state
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CostModelController — layout scoring against sim::costmodel::CostModel
+// ---------------------------------------------------------------------------
+
+/// Scores every candidate engine layout (k groups of w instances,
+/// k·w = n_units) against the analytic cost model under the forecast
+/// rate/mix and picks the feasible layout with the best expected TTFT.
+///
+/// Per width w (GPUs g = w · model.min_gpus, k = n_units / w groups):
+///
+/// * `service_s(w)` — expected busy time one request costs its group:
+///   chunked prefill of the mean prompt plus its share of full-batch
+///   decode steps for the mean output length.
+/// * `util(w) = rate · service_s(w) / k` — offered utilization of the k
+///   parallel groups.  Widths with `util > util_max` are infeasible
+///   (queues would grow without bound).
+/// * `score(w) = prefill_s(w) / (1 - util(w))` — prefill latency inflated
+///   by the M/M/k-style congestion factor; lower is better.
+///
+/// Bursts override the model (the smoothed forecast lags rate jumps);
+/// an improvement margin keeps the plan sticky near score ties.
+pub struct CostModelController {
+    cm: CostModel,
+    /// Decode batch the capacity estimate assumes (SimConfig::max_batch).
+    pub max_batch: usize,
+    /// Utilization above which a layout counts as saturated.
+    pub util_max: f64,
+    /// A new width must score below margin · current score to displace it.
+    pub improve_margin: f64,
+    /// Hold until the window has at least this many arrivals.
+    pub min_window_arrivals: usize,
+    cur_width: usize, // 0 = not yet decided
+}
+
+impl CostModelController {
+    pub fn new(cm: CostModel) -> Self {
+        CostModelController {
+            cm,
+            // Score layouts against the decode batch the simulator actually
+            // runs, not a second literal that could drift from it.
+            max_batch: SimConfig::default().max_batch,
+            util_max: 0.75,
+            improve_margin: 0.85,
+            min_window_arrivals: 5,
+            cur_width: 0,
+        }
+    }
+
+    /// (score, util) for serving the windowed mix at width `w`.
+    fn score(&self, w: usize, rate: f64, mean_prompt: f64, mean_output: f64, n_units: usize) -> (f64, f64) {
+        let g = w * self.cm.model.min_gpus;
+        let k = (n_units / w).max(1) as f64;
+        let prompt = (mean_prompt.max(1.0)) as usize;
+        let output = mean_output.max(0.0);
+        let ctx = prompt + (output / 2.0) as usize;
+        let prefill = self.cm.prefill_s(prompt, g);
+        let step = self.cm.decode_step_s(self.max_batch, ctx.max(1), g);
+        let service = prefill + output * step / self.max_batch.max(1) as f64;
+        let util = rate * service / k;
+        if util >= self.util_max {
+            return (f64::INFINITY, util);
+        }
+        (prefill / (1.0 - util), util)
+    }
+
+    fn width_plan(w: usize) -> Plan {
+        if w <= 1 {
+            Plan::ScaleOut
+        } else {
+            Plan::ScaleUp { width: w }
+        }
+    }
+}
+
+impl Controller for CostModelController {
+    fn name(&self) -> &'static str {
+        "costmodel"
+    }
+
+    fn plan(&mut self, snap: &CtrlSnapshot) -> Plan {
+        // Bursts beat the model: the smoothed forecast lags a rate jump by
+        // seconds, and the one safe answer under a burst is concurrency.
+        if snap.burst {
+            self.cur_width = 1;
+            return Plan::ScaleOut;
+        }
+        if snap.window.n_arrivals < self.min_window_arrivals {
+            return if self.cur_width == 0 {
+                Plan::Hold
+            } else {
+                Self::width_plan(self.cur_width)
+            };
+        }
+        let rate = snap.forecast_rate.max(snap.window.arrival_rate);
+        let (mp, mo) = (snap.window.mean_prompt, snap.window.mean_output);
+
+        let mut best: Option<(usize, f64)> = None;
+        let mut w = 1usize;
+        while w <= snap.n_units {
+            let (score, _util) = self.score(w, rate, mp, mo, snap.n_units);
+            if score.is_finite() && best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((w, score));
+            }
+            w *= 2;
+        }
+        // Every width saturated: maximize concurrency and let per-request
+        // admission control shed what it must.
+        let (mut chosen, best_score) = best.unwrap_or((1, f64::INFINITY));
+
+        // Hysteresis: displace the current width only on a clear win.
+        if self.cur_width != 0 && chosen != self.cur_width {
+            let (cur_score, _) = self.score(self.cur_width, rate, mp, mo, snap.n_units);
+            if best_score > self.improve_margin * cur_score {
+                chosen = self.cur_width;
+            }
+        }
+        self.cur_width = chosen;
+        Self::width_plan(chosen)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ControlRuntime — telemetry + forecast + controller + cooldown
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct ControlConfig {
+    /// Telemetry sliding-window length (seconds).
+    pub window_s: f64,
+    /// Control-tick interval (seconds): how often plans are recomputed.
+    pub tick_s: f64,
+    /// Minimum dwell between plan changes (seconds).
+    pub cooldown_s: f64,
+    /// Telemetry ring capacity (fixed allocation at construction).
+    pub ring_cap: usize,
+    /// prompt+output above this counts as long-context in telemetry.
+    pub long_threshold: usize,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            window_s: 20.0,
+            tick_s: 1.0,
+            cooldown_s: 15.0,
+            ring_cap: 4096,
+            long_threshold: usize::MAX,
+        }
+    }
+}
+
+/// The control plane an adaptive run carries: shared verbatim by
+/// `sim::simulate_adaptive` and the real path's [`AdaptivePolicy`], so a
+/// controller's decisions are byte-identical given the same event stream.
+pub struct ControlRuntime {
+    pub cfg: ControlConfig,
+    telemetry: Telemetry,
+    forecaster: Forecaster,
+    controller: Box<dyn Controller>,
+    inner: FlyingPolicy,
+    plan: Plan,
+    next_tick: f64,
+    last_change: f64,
+    plan_changes: usize,
+    ticks: usize,
+}
+
+impl ControlRuntime {
+    pub fn new(controller: Box<dyn Controller>, cfg: ControlConfig) -> Self {
+        ControlRuntime {
+            telemetry: Telemetry::new(cfg.window_s, cfg.ring_cap, cfg.long_threshold),
+            forecaster: Forecaster::default(),
+            controller,
+            inner: FlyingPolicy::default(),
+            plan: Plan::Hold,
+            next_tick: 0.0,
+            last_change: f64::NEG_INFINITY,
+            plan_changes: 0,
+            ticks: 0,
+            cfg,
+        }
+    }
+
+    pub fn controller_name(&self) -> &'static str {
+        self.controller.name()
+    }
+
+    pub fn plan(&self) -> Plan {
+        self.plan
+    }
+
+    /// Plan changes adopted so far — bounded by duration / cooldown_s + 1.
+    pub fn plan_changes(&self) -> usize {
+        self.plan_changes
+    }
+
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    // ---- telemetry taps (O(1), allocation-free) --------------------------
+
+    #[inline]
+    pub fn note_arrival(&mut self, t: f64, prompt_len: usize, output_len: usize, high: bool) {
+        self.telemetry.note_arrival(t, prompt_len, output_len, high);
+    }
+
+    #[inline]
+    pub fn note_first_token(&mut self, t: f64, ttft_s: f64) {
+        self.telemetry.note_first_token(t, ttft_s);
+    }
+
+    #[inline]
+    pub fn note_step(&mut self, t: f64, per_token_s: f64) {
+        self.telemetry.note_step(t, per_token_s);
+    }
+
+    /// Whether a control tick is due at `now` (cheap guard so callers only
+    /// gather tick inputs — queue depth, KV pressure — when needed).
+    #[inline]
+    pub fn due(&self, now: f64) -> bool {
+        now >= self.next_tick
+    }
+
+    /// Run one control tick: fold the window into the forecaster, ask the
+    /// controller for a plan, and adopt it if the cooldown allows.
+    pub fn tick(&mut self, now: f64, queue_len: usize, kv_frac: f64, idle_units: usize, n_units: usize) {
+        self.next_tick = now + self.cfg.tick_s;
+        self.ticks += 1;
+        let window = self.telemetry.window_stats(now);
+        self.forecaster.observe_rate(now, window.arrival_rate);
+        let snap = CtrlSnapshot {
+            now,
+            window,
+            rate_fast: self.forecaster.rate_fast(),
+            rate_slow: self.forecaster.rate_slow(),
+            forecast_rate: self.forecaster.forecast_rate(),
+            burst: self.forecaster.bursting(),
+            queue_len,
+            kv_frac,
+            idle_units,
+            n_units,
+            cur_plan: self.plan,
+        };
+        let desired = self.controller.plan(&snap);
+        if desired != self.plan && now - self.last_change >= self.cfg.cooldown_s {
+            self.plan = desired;
+            self.last_change = now;
+            self.plan_changes += 1;
+        }
+    }
+
+    /// Per-request mode decision under the current plan (steps ③ of
+    /// Algorithm 1, plan-steered).  Shared by the simulator's assignment
+    /// walk and the real coordinator via [`AdaptivePolicy`].
+    pub fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        plan_decision(
+            self.plan,
+            &mut self.inner,
+            prompt_len,
+            output_len_hint,
+            priority,
+            tp_demand,
+            snap,
+        )
+    }
+}
+
+/// Map (plan, request, snapshot) to a mode decision.  The correctness
+/// constraints (explicit demand, memory-driven binding, priority binding)
+/// are identical to `FlyingPolicy`; only the elastic Use-Case-1 tail is
+/// plan-steered.
+pub fn plan_decision(
+    plan: Plan,
+    inner: &mut FlyingPolicy,
+    prompt_len: usize,
+    output_len_hint: usize,
+    priority: Priority,
+    tp_demand: Option<usize>,
+    snap: &Snapshot,
+) -> ModeDecision {
+    // The shared constraint tiers (the single definition FlyingPolicy
+    // itself runs) decide everything that is not elastic.
+    if let Some(d) =
+        FlyingPolicy::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
+    {
+        return d;
+    }
+    match plan {
+        Plan::Hold => inner.decide(prompt_len, output_len_hint, priority, tp_demand, snap),
+        Plan::ScaleOut => ModeDecision::Dp,
+        Plan::ScaleUp { width } => {
+            ModeDecision::Tp(width.max(2).min(snap.max_tp).min(snap.n_engines))
+        }
+    }
+}
+
+/// The real serving path's adaptor: a `Policy` whose decisions come from a
+/// [`ControlRuntime`].  Telemetry on this path is fed from the scheduler's
+/// own decide stream (each assignment attempt notes an arrival sample), a
+/// slight over-count under requeue pressure — which biases the controller
+/// *toward* scale-out exactly when requeues signal congestion.
+pub struct AdaptivePolicy {
+    rt: ControlRuntime,
+}
+
+impl AdaptivePolicy {
+    pub fn new(rt: ControlRuntime) -> Self {
+        AdaptivePolicy { rt }
+    }
+
+    pub fn runtime(&self) -> &ControlRuntime {
+        &self.rt
+    }
+}
+
+impl Policy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        self.rt.controller_name()
+    }
+
+    fn decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        self.rt
+            .note_arrival(snap.now, prompt_len, output_len_hint, priority == Priority::High);
+        if self.rt.due(snap.now) {
+            self.rt.tick(
+                snap.now,
+                snap.queue_len,
+                snap.kv_frac,
+                snap.idle_engines,
+                snap.n_engines,
+            );
+        }
+        self.rt
+            .decide(prompt_len, output_len_hint, priority, tp_demand, snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{HwSpec, PaperModel};
+
+    fn snap(queue: usize, idle: usize, rate_fast: f64, burst: bool, n_arr: usize) -> CtrlSnapshot {
+        CtrlSnapshot {
+            now: 100.0,
+            window: WindowStats {
+                arrival_rate: rate_fast,
+                mean_prompt: 2000.0,
+                mean_output: 300.0,
+                long_frac: 0.0,
+                high_frac: 0.0,
+                ttft_p90: f64::NAN,
+                tpot_p50: f64::NAN,
+                n_arrivals: n_arr,
+            },
+            rate_fast,
+            rate_slow: rate_fast,
+            forecast_rate: rate_fast,
+            burst,
+            queue_len: queue,
+            kv_frac: 0.1,
+            idle_units: idle,
+            n_units: 4,
+            cur_plan: Plan::Hold,
+        }
+    }
+
+    fn policy_snap() -> Snapshot {
+        Snapshot {
+            now: 0.0,
+            queue_len: 0,
+            idle_engines: 4,
+            n_engines: 4,
+            dp_capacity_tokens: 1000,
+            max_tp: 4,
+            kv_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn static_controller_never_moves() {
+        let mut c = StaticController::tp(4);
+        assert_eq!(c.plan(&snap(0, 4, 0.1, false, 0)), Plan::ScaleUp { width: 4 });
+        assert_eq!(c.plan(&snap(99, 0, 50.0, true, 500)), Plan::ScaleUp { width: 4 });
+    }
+
+    #[test]
+    fn threshold_scales_out_on_burst_and_backlog() {
+        let mut c = ThresholdController::default();
+        assert_eq!(c.plan(&snap(0, 0, 5.0, true, 50)), Plan::ScaleOut);
+        let mut c = ThresholdController::default();
+        assert_eq!(c.plan(&snap(8, 0, 5.0, false, 50)), Plan::ScaleOut);
+    }
+
+    #[test]
+    fn threshold_scales_up_when_idle_and_holds_in_dead_band() {
+        let mut c = ThresholdController::default();
+        assert_eq!(c.plan(&snap(0, 4, 0.5, false, 5)), Plan::ScaleUp { width: 4 });
+        // Dead band (some queue, not enough for scale-out): plan is sticky.
+        assert_eq!(c.plan(&snap(2, 1, 3.0, false, 20)), Plan::ScaleUp { width: 4 });
+        // Backlog crosses the hi threshold: flips to scale-out.
+        assert_eq!(c.plan(&snap(4, 0, 3.0, false, 20)), Plan::ScaleOut);
+        // Back in the dead band: stays scaled out.
+        assert_eq!(c.plan(&snap(2, 1, 3.0, false, 20)), Plan::ScaleOut);
+    }
+
+    fn llama_ctrl() -> CostModelController {
+        CostModelController::new(CostModel::new(HwSpec::default(), PaperModel::llama70b()))
+    }
+
+    #[test]
+    fn costmodel_widens_at_low_load_narrows_at_high_load() {
+        let mut c = llama_ctrl();
+        // 1 req/s of the paper mix: wide TP is feasible and lowest-latency.
+        match c.plan(&snap(0, 4, 1.0, false, 30)) {
+            Plan::ScaleUp { width } => assert!(width >= 2, "width={width}"),
+            p => panic!("expected scale-up at low load, got {p:?}"),
+        }
+        // 20 req/s: every width saturates; concurrency (DP) is the answer.
+        let mut c = llama_ctrl();
+        assert_eq!(c.plan(&snap(0, 0, 20.0, false, 200)), Plan::ScaleOut);
+    }
+
+    #[test]
+    fn costmodel_burst_overrides_model() {
+        let mut c = llama_ctrl();
+        assert_eq!(c.plan(&snap(0, 4, 1.0, true, 30)), Plan::ScaleOut);
+    }
+
+    #[test]
+    fn costmodel_holds_until_primed() {
+        let mut c = llama_ctrl();
+        assert_eq!(c.plan(&snap(0, 4, 0.2, false, 2)), Plan::Hold);
+    }
+
+    #[test]
+    fn costmodel_hysteresis_is_sticky_near_ties() {
+        let mut c = llama_ctrl();
+        c.improve_margin = 0.0; // nothing ever displaces the current width
+        let first = c.plan(&snap(0, 4, 1.0, false, 30));
+        let again = c.plan(&snap(0, 2, 2.0, false, 60));
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn runtime_cooldown_bounds_plan_changes() {
+        let mut rt = ControlRuntime::new(
+            Box::new(ThresholdController::default()),
+            ControlConfig { tick_s: 1.0, cooldown_s: 10.0, ..ControlConfig::default() },
+        );
+        // Alternate between idle and saturated snapshots every tick: without
+        // the cooldown this would flip the plan every second.
+        for i in 0..100 {
+            let t = i as f64;
+            if rt.due(t) {
+                if i % 2 == 0 {
+                    rt.tick(t, 0, 0.0, 4, 4);
+                } else {
+                    rt.tick(t, 16, 0.9, 0, 4);
+                }
+            }
+        }
+        assert!(
+            rt.plan_changes() <= 100 / 10 + 1,
+            "plan_changes={}",
+            rt.plan_changes()
+        );
+        assert!(rt.ticks() >= 99);
+    }
+
+    #[test]
+    fn plan_decision_respects_correctness_constraints() {
+        let mut inner = FlyingPolicy::default();
+        let s = policy_snap();
+        // Explicit demand wins over any plan.
+        assert_eq!(
+            plan_decision(Plan::ScaleOut, &mut inner, 10, 10, Priority::Normal, Some(4), &s),
+            ModeDecision::Tp(4)
+        );
+        // Memory-driven binding wins over ScaleOut.
+        assert_eq!(
+            plan_decision(Plan::ScaleOut, &mut inner, 1500, 100, Priority::Normal, None, &s),
+            ModeDecision::Tp(2)
+        );
+        // Priority binding wins over ScaleOut.
+        assert_eq!(
+            plan_decision(Plan::ScaleOut, &mut inner, 100, 50, Priority::High, None, &s),
+            ModeDecision::Tp(2)
+        );
+        // Oversized requests still reject under any plan.
+        assert_eq!(
+            plan_decision(Plan::ScaleUp { width: 4 }, &mut inner, 10_000, 0, Priority::Normal, None, &s),
+            ModeDecision::Reject
+        );
+    }
+
+    #[test]
+    fn plan_decision_steers_elastic_tail() {
+        let mut inner = FlyingPolicy::default();
+        let s = policy_snap();
+        assert_eq!(
+            plan_decision(Plan::ScaleOut, &mut inner, 100, 50, Priority::Normal, None, &s),
+            ModeDecision::Dp
+        );
+        assert_eq!(
+            plan_decision(Plan::ScaleUp { width: 4 }, &mut inner, 100, 50, Priority::Normal, None, &s),
+            ModeDecision::Tp(4)
+        );
+        // Hold defers to FlyingPolicy (light load in `s` -> widen).
+        assert_eq!(
+            plan_decision(Plan::Hold, &mut inner, 100, 50, Priority::Normal, None, &s),
+            inner.decide(100, 50, Priority::Normal, None, &s)
+        );
+    }
+}

@@ -1,0 +1,314 @@
+//! Sliding-window serving telemetry for the reconfiguration control plane.
+//!
+//! A [`Telemetry`] instance ingests the same event stream the
+//! `metrics::Recorder` sees — arrivals (with their length mix), first-token
+//! emissions (TTFT), and decode-step completions (per-token latency) — and
+//! answers windowed aggregate queries: arrival rate, prompt/output-length
+//! means, long-context and high-priority fractions, TTFT p90, TPOT p50.
+//!
+//! # Hot-path discipline (ROADMAP invariants)
+//!
+//! Everything is built on fixed-capacity ring buffers allocated once at
+//! construction; `note_*` ingestion is an index write (zero allocation,
+//! O(1)), and windowed queries reuse a pre-allocated percentile scratch
+//! buffer (`sort_unstable`, in-place).  Queries run at control ticks
+//! (~1 Hz), never per event, so even the O(capacity) window walks are off
+//! the per-step path.
+
+/// Fixed-capacity ring of timestamped samples.  When full, new pushes
+/// overwrite the oldest entry — for sliding-window telemetry that is exactly
+/// the right loss mode (the overwritten sample is the one most likely to
+/// have aged out of the window anyway).
+#[derive(Clone, Debug)]
+pub struct Ring<T: Copy> {
+    buf: Vec<(f64, T)>,
+    cap: usize,
+    head: usize, // next write position
+    len: usize,
+}
+
+impl<T: Copy + Default> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "Ring capacity must be positive");
+        Ring {
+            buf: vec![(0.0, T::default()); cap],
+            cap,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, v: T) {
+        self.buf[self.head] = (t, v);
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterate the stored samples with timestamp >= `t0`, oldest first.
+    pub fn iter_since(&self, t0: f64) -> impl Iterator<Item = (f64, T)> + '_ {
+        let start = (self.head + self.cap - self.len) % self.cap;
+        (0..self.len)
+            .map(move |i| self.buf[(start + i) % self.cap])
+            .filter(move |&(t, _)| t >= t0)
+    }
+}
+
+/// One arrival's load contribution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArrivalEvt {
+    pub prompt_len: u32,
+    pub output_len: u32,
+    pub high_priority: bool,
+}
+
+/// Windowed aggregate view computed at a control tick.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowStats {
+    /// Requests/s over the window.
+    pub arrival_rate: f64,
+    pub mean_prompt: f64,
+    pub mean_output: f64,
+    /// Fraction of window arrivals whose prompt+output exceeds the
+    /// configured long-context threshold (single-engine KV capacity).
+    pub long_frac: f64,
+    /// Fraction of window arrivals carrying high priority.
+    pub high_frac: f64,
+    /// NaN when no samples landed in the window.
+    pub ttft_p90: f64,
+    /// NaN when no samples landed in the window.
+    pub tpot_p50: f64,
+    pub n_arrivals: usize,
+}
+
+pub struct Telemetry {
+    /// Sliding-window length in seconds.
+    pub window_s: f64,
+    /// prompt+output above this counts as long-context (DP KV capacity).
+    pub long_threshold: usize,
+    arrivals: Ring<ArrivalEvt>,
+    ttft: Ring<f64>,
+    tpot: Ring<f64>,
+    /// Percentile scratch, reused across queries (no steady-state alloc).
+    scratch: Vec<f64>,
+}
+
+impl Telemetry {
+    pub fn new(window_s: f64, ring_cap: usize, long_threshold: usize) -> Self {
+        assert!(window_s > 0.0);
+        Telemetry {
+            window_s,
+            long_threshold,
+            arrivals: Ring::new(ring_cap),
+            ttft: Ring::new(ring_cap),
+            tpot: Ring::new(ring_cap),
+            scratch: Vec::with_capacity(ring_cap),
+        }
+    }
+
+    // ---- ingestion (O(1), allocation-free) -------------------------------
+
+    #[inline]
+    pub fn note_arrival(&mut self, t: f64, prompt_len: usize, output_len: usize, high: bool) {
+        self.arrivals.push(
+            t,
+            ArrivalEvt {
+                prompt_len: prompt_len.min(u32::MAX as usize) as u32,
+                output_len: output_len.min(u32::MAX as usize) as u32,
+                high_priority: high,
+            },
+        );
+    }
+
+    #[inline]
+    pub fn note_first_token(&mut self, t: f64, ttft_s: f64) {
+        self.ttft.push(t, ttft_s);
+    }
+
+    /// One decode step completed; `per_token_s` is its inter-token latency
+    /// contribution (the step duration — each batched request advanced one
+    /// token).
+    #[inline]
+    pub fn note_step(&mut self, t: f64, per_token_s: f64) {
+        self.tpot.push(t, per_token_s);
+    }
+
+    // ---- windowed queries (control-tick rate) ----------------------------
+
+    pub fn window_stats(&mut self, now: f64) -> WindowStats {
+        let t0 = now - self.window_s;
+        // Effective window: clock start clips the early window so rates are
+        // not under-estimated during the first `window_s` seconds.  Floored
+        // at 1 s: with the first tick firing at the first arrival (t1 often
+        // milliseconds), an unfloored span would report rate = 1/t1 — a
+        // huge spike that primes both forecaster EWMAs absurdly high and
+        // mutes the burst detector for minutes.
+        let span = self.window_s.min(now).max(1.0);
+
+        let mut n = 0usize;
+        let mut prompt_sum = 0.0f64;
+        let mut output_sum = 0.0f64;
+        let mut long = 0usize;
+        let mut high = 0usize;
+        for (_, a) in self.arrivals.iter_since(t0) {
+            n += 1;
+            prompt_sum += a.prompt_len as f64;
+            output_sum += a.output_len as f64;
+            if (a.prompt_len as usize + a.output_len as usize) > self.long_threshold {
+                long += 1;
+            }
+            if a.high_priority {
+                high += 1;
+            }
+        }
+        let nf = n as f64;
+
+        let ttft_p90 = Self::percentile(&mut self.scratch, self.ttft.iter_since(t0), 0.90);
+        let tpot_p50 = Self::percentile(&mut self.scratch, self.tpot.iter_since(t0), 0.50);
+
+        WindowStats {
+            arrival_rate: nf / span,
+            mean_prompt: if n == 0 { 0.0 } else { prompt_sum / nf },
+            mean_output: if n == 0 { 0.0 } else { output_sum / nf },
+            long_frac: if n == 0 { 0.0 } else { long as f64 / nf },
+            high_frac: if n == 0 { 0.0 } else { high as f64 / nf },
+            ttft_p90,
+            tpot_p50,
+            n_arrivals: n,
+        }
+    }
+
+    fn percentile(
+        scratch: &mut Vec<f64>,
+        samples: impl Iterator<Item = (f64, f64)>,
+        q: f64,
+    ) -> f64 {
+        scratch.clear();
+        scratch.extend(samples.map(|(_, v)| v));
+        if scratch.is_empty() {
+            return f64::NAN;
+        }
+        scratch.sort_unstable_by(|a, b| a.total_cmp(b));
+        let pos = q * (scratch.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        scratch[lo] * (1.0 - frac) + scratch[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut r: Ring<u32> = Ring::new(3);
+        for i in 0..5u32 {
+            r.push(i as f64, i);
+        }
+        assert_eq!(r.len(), 3);
+        let vals: Vec<u32> = r.iter_since(f64::NEG_INFINITY).map(|(_, v)| v).collect();
+        assert_eq!(vals, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_iter_since_filters_by_time() {
+        let mut r: Ring<u32> = Ring::new(8);
+        for i in 0..6u32 {
+            r.push(i as f64, i);
+        }
+        let vals: Vec<u32> = r.iter_since(3.0).map(|(_, v)| v).collect();
+        assert_eq!(vals, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn arrival_rate_over_window() {
+        let mut tm = Telemetry::new(10.0, 128, 1000);
+        // 20 arrivals over [0, 10): 2 req/s.
+        for i in 0..20 {
+            tm.note_arrival(i as f64 * 0.5, 100, 50, false);
+        }
+        let s = tm.window_stats(10.0);
+        assert_eq!(s.n_arrivals, 20);
+        assert!((s.arrival_rate - 2.0).abs() < 1e-9, "rate={}", s.arrival_rate);
+        assert!((s.mean_prompt - 100.0).abs() < 1e-9);
+        assert!((s.mean_output - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn old_samples_age_out_of_window() {
+        let mut tm = Telemetry::new(5.0, 128, 1000);
+        tm.note_arrival(0.0, 100, 10, false);
+        tm.note_arrival(1.0, 100, 10, false);
+        tm.note_arrival(9.0, 100, 10, false);
+        let s = tm.window_stats(10.0);
+        assert_eq!(s.n_arrivals, 1); // only t=9 within [5, 10]
+    }
+
+    #[test]
+    fn early_window_clip_keeps_rate_honest() {
+        let mut tm = Telemetry::new(30.0, 128, 1000);
+        // 4 arrivals in the first 2 s: the rate divisor must be ~2 s, not 30.
+        for i in 0..4 {
+            tm.note_arrival(i as f64 * 0.5, 10, 10, false);
+        }
+        let s = tm.window_stats(2.0);
+        assert!((s.arrival_rate - 2.0).abs() < 1e-9, "rate={}", s.arrival_rate);
+    }
+
+    #[test]
+    fn long_and_high_fractions() {
+        let mut tm = Telemetry::new(10.0, 128, 500);
+        tm.note_arrival(1.0, 400, 200, false); // long (600 > 500)
+        tm.note_arrival(2.0, 100, 50, true); // high
+        tm.note_arrival(3.0, 100, 50, false);
+        tm.note_arrival(4.0, 100, 50, false);
+        let s = tm.window_stats(5.0);
+        assert!((s.long_frac - 0.25).abs() < 1e-9);
+        assert!((s.high_frac - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_and_tpot_percentiles() {
+        let mut tm = Telemetry::new(100.0, 256, 1000);
+        for i in 1..=100 {
+            tm.note_first_token(i as f64 * 0.1, i as f64 * 0.01);
+            tm.note_step(i as f64 * 0.1, i as f64 * 0.001);
+        }
+        let s = tm.window_stats(10.0);
+        assert!((s.ttft_p90 - 0.901).abs() < 1e-9, "p90={}", s.ttft_p90);
+        assert!((s.tpot_p50 - 0.0505).abs() < 1e-9, "p50={}", s.tpot_p50);
+    }
+
+    #[test]
+    fn empty_window_is_nan_percentiles_zero_rates() {
+        let mut tm = Telemetry::new(10.0, 16, 1000);
+        let s = tm.window_stats(50.0);
+        assert_eq!(s.n_arrivals, 0);
+        assert_eq!(s.arrival_rate, 0.0);
+        assert!(s.ttft_p90.is_nan());
+        assert!(s.tpot_p50.is_nan());
+    }
+
+    #[test]
+    fn ingestion_does_not_allocate_once_built() {
+        // Structural proxy for the counting-allocator bench: the ring's
+        // backing store pointer must not move across a full wrap.
+        let mut tm = Telemetry::new(10.0, 64, 1000);
+        let p0 = tm.arrivals.buf.as_ptr();
+        for i in 0..1000 {
+            tm.note_arrival(i as f64, 10, 10, false);
+        }
+        assert_eq!(p0, tm.arrivals.buf.as_ptr());
+        assert_eq!(tm.arrivals.len(), 64);
+    }
+}

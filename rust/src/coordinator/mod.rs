@@ -533,12 +533,20 @@ impl Cluster {
     }
 
     fn snapshot(&self) -> Snapshot {
+        let committed: usize = self.engine_committed.iter().sum();
+        let capacity = self.engines.len() * (self.cfg.n_blocks - 1);
         Snapshot {
+            now: self.now(),
             queue_len: self.waiting.len(),
             idle_engines: self.idle_mask.count_ones() as usize,
             n_engines: self.engines.len(),
             dp_capacity_tokens: self.cfg.dp_token_capacity(),
             max_tp: self.max_tp,
+            kv_frac: if capacity == 0 {
+                0.0
+            } else {
+                committed as f64 / capacity as f64
+            },
         }
     }
 

@@ -21,6 +21,10 @@ pub enum ModeDecision {
 /// System snapshot the policy sees each scheduling iteration.
 #[derive(Clone, Copy, Debug)]
 pub struct Snapshot {
+    /// Scheduler-clock time of this iteration (seconds).  `FlyingPolicy`
+    /// ignores it; the control plane's `AdaptivePolicy` keys its telemetry
+    /// window and control ticks off it.
+    pub now: f64,
     pub queue_len: usize,
     pub idle_engines: usize,
     pub n_engines: usize,
@@ -28,6 +32,8 @@ pub struct Snapshot {
     pub dp_capacity_tokens: usize,
     /// Widest supported TP degree for this model.
     pub max_tp: usize,
+    /// Cluster-wide KV utilization in [0, 1] (committed / capacity).
+    pub kv_frac: f64,
 }
 
 pub trait Policy: Send {
@@ -63,13 +69,51 @@ impl Default for FlyingPolicy {
 }
 
 impl FlyingPolicy {
-    fn fit_tp(total_tokens: usize, snap: &Snapshot) -> Option<usize> {
+    /// Narrowest TP degree whose pooled KV capacity fits `total_tokens`
+    /// (Use Case 3's memory-driven binding).  Public so the control plane's
+    /// plan mapping applies the identical memory constraint.
+    pub fn fit_tp(total_tokens: usize, snap: &Snapshot) -> Option<usize> {
         let mut p = 1;
         while p <= snap.max_tp {
             if total_tokens <= snap.dp_capacity_tokens * p {
                 return Some(p);
             }
             p *= 2;
+        }
+        None
+    }
+
+    /// The correctness-constrained decision tiers — explicit TP demand,
+    /// memory-driven binding (Use Case 3), priority binding (Use Case 2) —
+    /// or `None` when the request is elastic (Use Case 1).  This is the
+    /// single definition shared by `decide` and the control plane's
+    /// `plan_decision`: a fleet plan may steer only the elastic tail, so
+    /// both paths must agree on where that tail begins.
+    pub fn constrained(
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> Option<ModeDecision> {
+        let total = prompt_len + output_len_hint;
+        // Explicit demand wins (latency-strict clients).
+        if let Some(p) = tp_demand {
+            return Some(ModeDecision::Tp(p.min(snap.max_tp).max(1)));
+        }
+        // Use Case 3: memory-driven.
+        if total > snap.dp_capacity_tokens {
+            return Some(match Self::fit_tp(total, snap) {
+                Some(p) => ModeDecision::Tp(p),
+                None => ModeDecision::Reject,
+            });
+        }
+        // Use Case 2: priority-driven.  The binding takes at most half the
+        // cluster so best-effort traffic keeps DP engines (paper §2.3:
+        // "normal tasks continue to execute on remaining DP engines").
+        if priority == Priority::High {
+            let width = (snap.n_engines / 2).max(2).min(snap.max_tp);
+            return Some(ModeDecision::Tp(width));
         }
         None
     }
@@ -88,24 +132,9 @@ impl Policy for FlyingPolicy {
         tp_demand: Option<usize>,
         snap: &Snapshot,
     ) -> ModeDecision {
-        let total = prompt_len + output_len_hint;
-        // Explicit demand wins (latency-strict clients).
-        if let Some(p) = tp_demand {
-            return ModeDecision::Tp(p.min(snap.max_tp).max(1));
-        }
-        // Use Case 3: memory-driven.
-        if total > snap.dp_capacity_tokens {
-            return match Self::fit_tp(total, snap) {
-                Some(p) => ModeDecision::Tp(p),
-                None => ModeDecision::Reject,
-            };
-        }
-        // Use Case 2: priority-driven.  The binding takes at most half the
-        // cluster so best-effort traffic keeps DP engines (paper §2.3:
-        // "normal tasks continue to execute on remaining DP engines").
-        if priority == Priority::High {
-            let width = (snap.n_engines / 2).max(2).min(snap.max_tp);
-            return ModeDecision::Tp(width);
+        if let Some(d) = Self::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
+        {
+            return d;
         }
         // Use Case 1: load-adaptive.
         let bursting = snap.queue_len as f64 > self.burst_factor * snap.n_engines as f64;
@@ -123,11 +152,13 @@ mod tests {
 
     fn snap(queue: usize, idle: usize) -> Snapshot {
         Snapshot {
+            now: 0.0,
             queue_len: queue,
             idle_engines: idle,
             n_engines: 4,
             dp_capacity_tokens: 1000,
             max_tp: 4,
+            kv_frac: 0.0,
         }
     }
 
@@ -188,6 +219,83 @@ mod tests {
         assert_eq!(
             p.decide(10, 10, Priority::Normal, Some(8), &snap(0, 4)),
             ModeDecision::Tp(4)
+        );
+    }
+
+    // ---- decision-boundary coverage ------------------------------------
+
+    #[test]
+    fn dp_capacity_boundary_is_inclusive() {
+        let mut p = FlyingPolicy::default();
+        // total == capacity stays in the elastic path (DP under burst)...
+        assert_eq!(
+            p.decide(900, 100, Priority::Normal, None, &snap(20, 0)),
+            ModeDecision::Dp
+        );
+        // ...one token over crosses into memory-driven TP binding.
+        assert_eq!(
+            p.decide(901, 100, Priority::Normal, None, &snap(20, 0)),
+            ModeDecision::Tp(2)
+        );
+    }
+
+    #[test]
+    fn long_context_reject_boundary_at_max_tp() {
+        let mut p = FlyingPolicy::default();
+        // cap * max_tp = 4000: the widest group exactly fits...
+        assert_eq!(
+            p.decide(3900, 100, Priority::Normal, None, &snap(0, 4)),
+            ModeDecision::Tp(4)
+        );
+        // ...and one more token is unservable at any width.
+        assert_eq!(
+            p.decide(3901, 100, Priority::Normal, None, &snap(0, 4)),
+            ModeDecision::Reject
+        );
+    }
+
+    #[test]
+    fn priority_width_is_load_independent() {
+        // Use Case 2 binds the same half-cluster group whether the node is
+        // fully idle or fully saturated — priority must not starve under
+        // load, and must not over-claim engines when idle.
+        let mut p = FlyingPolicy::default();
+        let idle = p.decide(100, 50, Priority::High, None, &snap(0, 4));
+        let saturated = p.decide(100, 50, Priority::High, None, &snap(50, 0));
+        assert_eq!(idle, ModeDecision::Tp(2));
+        assert_eq!(idle, saturated);
+    }
+
+    #[test]
+    fn priority_long_context_takes_memory_width_not_priority_width() {
+        // A high-priority request that exceeds DP capacity is bound by the
+        // memory constraint (narrowest fitting width), not the fixed
+        // half-cluster priority width.
+        let mut p = FlyingPolicy::default();
+        assert_eq!(
+            p.decide(3500, 100, Priority::High, None, &snap(0, 4)),
+            ModeDecision::Tp(4)
+        );
+    }
+
+    #[test]
+    fn burst_threshold_boundary() {
+        // bursting iff queue_len > burst_factor * n_engines (strict).
+        let mut p = FlyingPolicy::default();
+        // queue == n_engines: not bursting, but engines busy -> Dp anyway.
+        assert_eq!(
+            p.decide(100, 50, Priority::Normal, None, &snap(4, 0)),
+            ModeDecision::Dp
+        );
+        // queue == n_engines with all idle: not bursting -> widen.
+        assert_eq!(
+            p.decide(100, 50, Priority::Normal, None, &snap(4, 4)),
+            ModeDecision::Tp(4)
+        );
+        // queue just over the threshold: bursting -> Dp even when idle.
+        assert_eq!(
+            p.decide(100, 50, Priority::Normal, None, &snap(5, 4)),
+            ModeDecision::Dp
         );
     }
 }

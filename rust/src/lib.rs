@@ -22,6 +22,7 @@
 pub mod baselines;
 pub mod comm;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod engine;
 pub mod json;

@@ -5,6 +5,8 @@
 //!   replay  — generate a synthetic trace (§6.1.3) and replay it on the
 //!             real cluster, printing the paper's metrics
 //!   sim     — run the 8×H200 discrete-event comparison (all systems)
+//!   ctrl    — run the adaptive control-plane ablation (controllers ×
+//!             scenario library) on the simulator
 //!   info    — print manifest/model inventory
 //!
 //! Common flags: --artifacts DIR --model NAME --engines N
@@ -38,10 +40,11 @@ fn run() -> Result<()> {
         Some("serve") => serve(&cfg),
         Some("replay") => replay(&cfg),
         Some("sim") => sim(&cfg),
+        Some("ctrl") => ctrl(&cfg),
         Some("info") => print_info(&cfg),
         other => {
             bail!(
-                "usage: flying-serving <serve|replay|sim|info> [flags]\n  (got {:?})",
+                "usage: flying-serving <serve|replay|sim|ctrl|info> [flags]\n  (got {:?})",
                 other
             )
         }
@@ -137,6 +140,56 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
                 s.p50_tpot * 1e3,
                 s.peak_throughput,
                 o.rejected.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Controller ablation on the simulator: every scenario-library workload
+/// under the static-DP / static-TP / threshold / cost-model controllers
+/// (the compact CLI twin of `benches/ctrl_adapt.rs`).
+fn ctrl(cfg: &ServeConfig) -> Result<()> {
+    use flying_serving::control::{
+        ControlConfig, ControlRuntime, Controller, CostModelController, StaticController,
+        ThresholdController,
+    };
+    use flying_serving::sim::simulate_adaptive;
+    use flying_serving::workload::Scenario;
+
+    let cm = CostModel::new(HwSpec::default(), PaperModel::llama70b());
+    let n_units = cm.hw.n_gpus / cm.model.min_gpus;
+    let n = cfg.n_requests.max(500);
+    for scenario in Scenario::ALL {
+        println!("== {scenario} (n={n}) ==");
+        let trace = scenario.generate(cfg.seed, n);
+        let controllers: [Box<dyn Controller>; 4] = [
+            Box::new(StaticController::dp()),
+            Box::new(StaticController::tp(n_units)),
+            Box::new(ThresholdController::default()),
+            Box::new(CostModelController::new(cm.clone())),
+        ];
+        for controller in controllers {
+            let mut rt = ControlRuntime::new(
+                controller,
+                ControlConfig {
+                    long_threshold: cm.kv_capacity_tokens(cm.model.min_gpus),
+                    ..ControlConfig::default()
+                },
+            );
+            let o = simulate_adaptive(&cm, &trace, &SimConfig::default(), &mut rt);
+            let s = o.recorder.summary(None);
+            let attained = o
+                .recorder
+                .slo_attained(|r| 5.0 + 3.0 * cm.prefill_s(r.prompt_len, cm.hw.n_gpus));
+            println!(
+                "  {:14} goodput={:6.2} req/s ttft_p90={:7.2}s rejected={:4} switches={:5} plans={:3}",
+                rt.controller_name(),
+                attained as f64 / o.recorder.makespan().max(1e-9),
+                s.p90_ttft,
+                o.rejected.len(),
+                o.n_switches,
+                rt.plan_changes(),
             );
         }
     }

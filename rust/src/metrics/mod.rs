@@ -200,6 +200,30 @@ impl Recorder {
             .fold(0.0, f64::max)
     }
 
+    /// Requests that finished with TTFT within their (per-request) SLO —
+    /// the goodput numerator.  The SLO is a caller-supplied function of the
+    /// record so length-proportional targets (long-context requests earn
+    /// proportionally longer prefill budgets) are expressible.
+    pub fn slo_attained(&self, slo: impl Fn(&ReqRecord) -> f64) -> usize {
+        self.entries
+            .iter()
+            .filter(|r| r.finished.is_some() && r.ttft().is_some_and(|x| x <= slo(r)))
+            .count()
+    }
+
+    /// Latest recorded timestamp (finish, token, or arrival) — the busy
+    /// span's end, used as the goodput denominator.
+    pub fn makespan(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|r| {
+                r.finished
+                    .or_else(|| r.token_times.last().copied())
+                    .unwrap_or(r.arrival)
+            })
+            .fold(0.0f64, f64::max)
+    }
+
     /// Total mean generation throughput over the busy span.
     pub fn mean_throughput(&self) -> f64 {
         let mut lo = f64::INFINITY;
@@ -360,6 +384,30 @@ mod tests {
         assert_eq!(s[0].1, 1.0); // t=0: req1
         assert_eq!(s[1].1, 2.0); // t=1: both
         assert_eq!(s[2].1, 1.0); // t=2: req2 only
+    }
+
+    #[test]
+    fn slo_attainment_counts_finished_within_budget() {
+        let mut r = Recorder::new();
+        // Req 1: TTFT 1.0, finished.
+        r.on_arrival(1, 10.0, Priority::Normal, 100);
+        r.on_token(1, 11.0);
+        r.on_finish(1, 11.4);
+        // Req 2: TTFT 5.0, finished — misses a 2 s budget.
+        r.on_arrival(2, 10.0, Priority::Normal, 100);
+        r.on_token(2, 15.0);
+        r.on_finish(2, 15.5);
+        // Req 3: first token in time but never finished.
+        r.on_arrival(3, 10.0, Priority::Normal, 100);
+        r.on_token(3, 10.5);
+        assert_eq!(r.slo_attained(|_| 2.0), 1);
+        assert_eq!(r.slo_attained(|_| 10.0), 2);
+        // Length-proportional SLO: long prompts earn bigger budgets.
+        r.on_arrival(4, 0.0, Priority::Normal, 10_000);
+        r.on_token(4, 6.0);
+        r.on_finish(4, 6.1);
+        assert_eq!(r.slo_attained(|rec| if rec.prompt_len > 1000 { 8.0 } else { 2.0 }), 2);
+        assert_eq!(r.makespan(), 15.5);
     }
 
     #[test]

@@ -51,6 +51,28 @@ pub fn parse_request(line: &str, fallback_id: u64) -> Result<ServeRequest> {
     })
 }
 
+/// Error reply line: `{"id":..,"error":".."}`.  Sent for malformed or
+/// rejected requests so the client can correlate the failure by id; the
+/// connection stays open and later lines on it are still served.
+pub fn error_json(id: u64, err: &str) -> String {
+    Value::obj(vec![
+        ("id", Value::num(id as f64)),
+        ("error", Value::str(err)),
+    ])
+    .to_string()
+}
+
+/// Best-effort id recovery from a request line that failed validation: if
+/// the line is valid JSON carrying a numeric `id`, the error reply echoes
+/// it; otherwise the connection's next auto-assigned id stands in.
+pub fn line_id(line: &str, fallback: u64) -> u64 {
+    Value::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(|x| x.as_f64()))
+        .map(|x| x as u64)
+        .unwrap_or(fallback)
+}
+
 pub fn response_json(id: u64, tokens: &[i32], ttft_ms: f64, tpot_ms: f64) -> String {
     Value::obj(vec![
         ("id", Value::num(id as f64)),
@@ -110,7 +132,7 @@ fn handle_conn(
         let req = match parse_request(line.trim(), *next_id) {
             Ok(r) => r,
             Err(e) => {
-                writeln!(out, "{}", Value::obj(vec![("error", Value::str(format!("{e:#}")))]))?;
+                writeln!(out, "{}", error_json(line_id(line.trim(), *next_id), &format!("{e:#}")))?;
                 continue;
             }
         };
@@ -127,14 +149,7 @@ fn handle_conn(
             .unwrap_or((f64::NAN, f64::NAN));
         match outcome.outputs.get(&req.id) {
             Some(tokens) => writeln!(out, "{}", response_json(req.id, tokens, ttft, tpot))?,
-            None => writeln!(
-                out,
-                "{}",
-                Value::obj(vec![
-                    ("id", Value::num(req.id as f64)),
-                    ("error", Value::str("rejected (capacity)")),
-                ])
-            )?,
+            None => writeln!(out, "{}", error_json(req.id, "rejected (capacity)"))?,
         }
     }
 }
@@ -179,5 +194,36 @@ mod tests {
         let v = Value::parse(&s).unwrap();
         assert_eq!(v.str_field("text").unwrap(), "hi");
         assert_eq!(v.f64_field("ttft_ms").unwrap(), 1.5);
+    }
+
+    #[test]
+    fn error_reply_is_valid_json_with_id() {
+        // The wire reply for a malformed line must be parseable and carry
+        // both the id and the error message — the connection survives, so
+        // the client needs the id to correlate.
+        let s = error_json(9, "empty prompt");
+        let v = Value::parse(&s).unwrap();
+        assert_eq!(v.f64_field("id").unwrap(), 9.0);
+        assert_eq!(v.str_field("error").unwrap(), "empty prompt");
+        // Messages with JSON-hostile characters still serialize cleanly.
+        let s = error_json(1, "bad \"quote\"\nline");
+        assert!(Value::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn malformed_line_error_path_recovers_id() {
+        // Valid JSON, invalid request (missing prompt): the id is echoed.
+        let line = r#"{"id": 31, "max_new": 4}"#;
+        assert!(parse_request(line, 7).is_err());
+        assert_eq!(line_id(line, 7), 31);
+        // Valid JSON, invalid request, no id: fallback id stands in.
+        assert_eq!(line_id(r#"{"prompt": ""}"#, 7), 7);
+        // Not JSON at all: fallback id.
+        assert_eq!(line_id("not json {", 7), 7);
+        // Full wire round-trip of the error path.
+        let reply = error_json(line_id(line, 7), "missing json field 'prompt'");
+        let v = Value::parse(&reply).unwrap();
+        assert_eq!(v.f64_field("id").unwrap(), 31.0);
+        assert!(v.str_field("error").unwrap().contains("prompt"));
     }
 }

@@ -43,6 +43,7 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::control::ControlRuntime;
 use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
 use crate::metrics::{RecSlot, Recorder};
 use crate::workload::{Priority, Request};
@@ -152,6 +153,7 @@ enum RPhase {
 /// One admitted request, stored in a dense slab indexed by admission order.
 struct SimReq {
     id: u64,
+    arrival: f64,
     prompt_len: usize,
     output_len: usize,
     tp_demand: Option<usize>,
@@ -265,6 +267,39 @@ pub fn simulate(
     cm: &CostModel,
     trace: &[Request],
     cfg: &SimConfig,
+) -> SimOutcome {
+    simulate_inner(system, cm, trace, cfg, None)
+}
+
+/// FLYING SERVING under an adaptive reconfiguration control plane: the
+/// event core's Flying machinery with per-request decisions steered by the
+/// [`ControlRuntime`]'s current plan instead of the bare `FlyingPolicy`.
+///
+/// Telemetry taps feed the runtime the true event stream (arrivals with
+/// their length mix, first-token TTFTs, decode-step latencies), and control
+/// ticks fire on the simulation clock — the identical runtime drives the
+/// real coordinator through `control::AdaptivePolicy`, so a controller's
+/// decisions are byte-identical across both paths given the same events.
+///
+/// With `StaticController::hold()` the plan never leaves `Plan::Hold`, every
+/// decision falls through to `FlyingPolicy`, and the outcome matches
+/// `simulate(SimSystem::Flying, ..)` exactly (asserted by the differential
+/// tests).
+pub fn simulate_adaptive(
+    cm: &CostModel,
+    trace: &[Request],
+    cfg: &SimConfig,
+    rt: &mut ControlRuntime,
+) -> SimOutcome {
+    simulate_inner(SimSystem::Flying, cm, trace, cfg, Some(rt))
+}
+
+fn simulate_inner(
+    system: SimSystem,
+    cm: &CostModel,
+    trace: &[Request],
+    cfg: &SimConfig,
+    mut ctrl: Option<&mut ControlRuntime>,
 ) -> SimOutcome {
     assert!(
         trace.iter().all(|r| r.arrival.is_finite()),
@@ -418,8 +453,17 @@ pub fn simulate(
             while next_arr < order.len() && trace[order[next_arr] as usize].arrival <= t {
                 let r = &trace[order[next_arr] as usize];
                 let slot = rec.on_arrival(r.id, r.arrival, r.priority, r.prompt_len);
+                if let Some(rt) = ctrl.as_mut() {
+                    rt.note_arrival(
+                        r.arrival,
+                        r.prompt_len,
+                        r.output_len,
+                        r.priority == Priority::High,
+                    );
+                }
                 reqs.push(SimReq {
                     id: r.id,
+                    arrival: r.arrival,
                     prompt_len: r.prompt_len,
                     output_len: r.output_len,
                     tp_demand: r.tp_demand,
@@ -441,11 +485,40 @@ pub fn simulate(
                 });
             }
 
+            // ---- control tick (adaptive runs only) -----------------------
+            // Fires on the simulation clock at the runtime's tick interval;
+            // the `due` guard keeps non-tick iterations O(1).
+            if let Some(rt) = ctrl.as_mut() {
+                if rt.due(t) {
+                    let idle: usize = vengs
+                        .iter()
+                        .filter(|v| v.active.is_empty())
+                        .map(|v| v.m)
+                        .sum();
+                    let (kv_used, kv_cap) = vengs
+                        .iter()
+                        .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
+                    let kv_frac =
+                        if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
+                    rt.tick(t, queue.len(), kv_frac, idle, n_inst);
+                }
+            }
+
             // ---- assignment (the policy layer, shared with the real path)
             if queue_dirty && !queue.is_empty() {
                 let backlog_total = queue.len();
                 let mut processed = 0usize;
                 let mut walk_progress = false;
+                // KV pressure for the per-request snapshots, computed once
+                // per walk: no sim-side decide path reads kv_frac (the
+                // control plane consumes KV pressure at tick time, above),
+                // so a value that goes slightly stale as the walk binds
+                // requests is fine — and the O(n_engines) fold stays off
+                // the per-request path PR 1 optimized.
+                let (kv_used, kv_cap) = vengs
+                    .iter()
+                    .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
+                let walk_kv_frac = if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
                 requeue_high.clear();
                 requeue_normal.clear();
                 for pri_high in [true, false] {
@@ -487,19 +560,25 @@ pub fn simulate(
                                     .map(|v| v.m)
                                     .sum();
                                 let snap = Snapshot {
+                                    now: t,
                                     queue_len: backlog_now,
                                     idle_engines: idle,
                                     n_engines: n_inst,
                                     dp_capacity_tokens: dp_cap,
                                     max_tp: n_inst,
+                                    kv_frac: walk_kv_frac,
                                 };
-                                policy.decide(
+                                let (plen, olen, demand) = (
                                     reqs[riu].prompt_len,
                                     reqs[riu].output_len,
-                                    if pri_high { Priority::High } else { Priority::Normal },
                                     reqs[riu].tp_demand,
-                                    &snap,
-                                )
+                                );
+                                let pri =
+                                    if pri_high { Priority::High } else { Priority::Normal };
+                                match ctrl.as_mut() {
+                                    Some(rt) => rt.decide(plen, olen, pri, demand, &snap),
+                                    None => policy.decide(plen, olen, pri, demand, &snap),
+                                }
                             }
                         };
                         match decision {
@@ -677,6 +756,9 @@ pub fn simulate(
                         q.emitted = 1; // first token produced by final chunk
                         vengs[vi].kv_used += 1;
                         rec.on_token_at(q.rec, done_t);
+                        if let Some(rt) = ctrl.as_mut() {
+                            rt.note_first_token(done_t, done_t - q.arrival);
+                        }
                         if q.emitted >= q.output_len {
                             q.phase = RPhase::Done;
                             rec.on_finish_at(q.rec, done_t);
@@ -744,6 +826,11 @@ pub fn simulate(
                     .max(cfg.heartbeat_s);
                     let done_t = t + dur;
                     vengs[vi].free_at = done_t;
+                    if let Some(rt) = ctrl.as_mut() {
+                        // Each batched request advances one token this step:
+                        // the step duration IS the inter-token latency sample.
+                        rt.note_step(done_t, dur);
+                    }
                     for &r in batch.iter() {
                         let q = &mut reqs[r as usize];
                         q.emitted += 1;
@@ -1130,6 +1217,68 @@ mod tests {
         assert!(o.recorder.is_empty());
         assert!(o.rejected.is_empty());
         assert_eq!(o.n_switches, 0);
+    }
+
+    #[test]
+    fn adaptive_hold_is_byte_identical_to_flying() {
+        use crate::control::{ControlConfig, ControlRuntime, StaticController};
+        // StaticController::hold() never leaves Plan::Hold, so every
+        // decision falls through to the same FlyingPolicy the plain path
+        // runs — outcomes must be exactly equivalent.
+        let trace = bursty(400);
+        let mut rt =
+            ControlRuntime::new(Box::new(StaticController::hold()), ControlConfig::default());
+        let a = simulate_adaptive(&cm(), &trace, &SimConfig::default(), &mut rt);
+        let b = simulate(SimSystem::Flying, &cm(), &trace, &SimConfig::default());
+        outcomes_equivalent(&a, &b).unwrap();
+        assert!(rt.ticks() > 0);
+        assert_eq!(rt.plan_changes(), 0);
+    }
+
+    #[test]
+    fn adaptive_costmodel_completes_and_respects_cooldown() {
+        use crate::control::{ControlConfig, ControlRuntime, CostModelController};
+        let trace = bursty(400);
+        let c = cm();
+        let cfg = ControlConfig {
+            cooldown_s: 10.0,
+            long_threshold: c.kv_capacity_tokens(c.model.min_gpus),
+            ..ControlConfig::default()
+        };
+        let mut rt = ControlRuntime::new(Box::new(CostModelController::new(c.clone())), cfg);
+        let o = simulate_adaptive(&c, &trace, &SimConfig::default(), &mut rt);
+        let s = o.recorder.summary(None);
+        // Every request reaches a terminal record (rejects get a finish
+        // timestamp too) — nothing may be lost under plan steering.
+        assert_eq!(s.finished, 400);
+        // Plan changes are hard-bounded by makespan / cooldown + 1.
+        let makespan = o
+            .recorder
+            .records()
+            .filter_map(|(_, r)| r.finished)
+            .fold(0.0f64, f64::max);
+        let bound = (makespan / 10.0).ceil() as usize + 1;
+        assert!(
+            rt.plan_changes() <= bound,
+            "plan_changes={} bound={bound}",
+            rt.plan_changes()
+        );
+    }
+
+    #[test]
+    fn adaptive_threshold_is_deterministic() {
+        use crate::control::{ControlConfig, ControlRuntime, ThresholdController};
+        let trace = bursty(250);
+        let run = || {
+            let mut rt = ControlRuntime::new(
+                Box::new(ThresholdController::default()),
+                ControlConfig::default(),
+            );
+            let o = simulate_adaptive(&cm(), &trace, &SimConfig::default(), &mut rt);
+            let s = o.recorder.summary(None);
+            (s.finished, o.rejected.len(), o.n_switches, s.mean_ttft)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

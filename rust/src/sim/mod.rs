@@ -10,6 +10,8 @@ pub mod cluster;
 pub mod costmodel;
 pub mod reference;
 
-pub use cluster::{outcomes_equivalent, simulate, SimConfig, SimOutcome, SimSystem};
+pub use cluster::{
+    outcomes_equivalent, simulate, simulate_adaptive, SimConfig, SimOutcome, SimSystem,
+};
 pub use costmodel::{CostModel, HwSpec, PaperModel};
 pub use reference::simulate_reference;

@@ -174,12 +174,26 @@ pub fn simulate_reference(
                         .filter(|v| v.active.is_empty())
                         .map(|v| v.m)
                         .sum();
+                    let (kv_used, kv_cap) = vengs.iter().fold((0usize, 0usize), |(u, c), v| {
+                        let used: usize = v
+                            .active
+                            .iter()
+                            .map(|r| reqs[r].req.prompt_len + reqs[r].emitted)
+                            .sum();
+                        (u + used, c + cm.kv_capacity_tokens(v.m * gpus_per_inst))
+                    });
                     let snap = Snapshot {
+                        now: t,
                         queue_len: still_queued.len() + (backlog_total - qi - 1),
                         idle_engines: idle,
                         n_engines: n_inst,
                         dp_capacity_tokens: dp_cap,
                         max_tp: n_inst,
+                        kv_frac: if kv_cap == 0 {
+                            0.0
+                        } else {
+                            kv_used as f64 / kv_cap as f64
+                        },
                     };
                     policy.decide(
                         reqs[&rid].req.prompt_len,

@@ -16,6 +16,10 @@
 
 use crate::util::rng::Rng;
 
+pub mod scenarios;
+
+pub use scenarios::{Scenario, LONG_CTX_RANGE};
+
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Priority {
     #[default]

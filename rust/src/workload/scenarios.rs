@@ -1,0 +1,424 @@
+//! Scenario library: named non-stationary workloads for exercising the
+//! reconfiguration control plane (ROADMAP: "as many scenarios as you can
+//! imagine").
+//!
+//! The base generator (`workload::generate`) produces the paper's two-phase
+//! bursty trace; an adaptive controller's interesting failure modes live in
+//! richer shapes — slow diurnal swings, sharp Poisson bursts, oscillating
+//! long-context pressure, priority storms, and regime shifts in the
+//! prompt/output mix.  Each scenario is a deterministic function of its
+//! seed, emits plain [`Request`]s at paper-scale lengths (the discrete-event
+//! simulator's operating point), and round-trips through the CSV trace
+//! format like any other trace.
+//!
+//! Rate modulation uses per-arrival evaluation of a piecewise/continuous
+//! rate function (gap ~ Exp(rate(t))): exact for piecewise-constant phases,
+//! and an adequate approximation for the slowly-varying diurnal curve.
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+use super::{Priority, Request};
+
+/// Long-context prompt range (tokens) used by the scenarios that exercise
+/// memory-driven TP binding.  Calibrated to the simulator's Llama-70B
+/// operating point: above one 2-GPU instance's ~264K-token KV capacity,
+/// within the full node's ~2.3M (so TP-2/TP-4 groups serve them).
+pub const LONG_CTX_RANGE: (usize, usize) = (300_000, 900_000);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Slow sinusoidal load swing (period ~4 min): the fleet should ride
+    /// wide TP through the troughs and scale out over the crests.
+    Diurnal,
+    /// Low steady base load punctured by short, intense Poisson bursts —
+    /// the paper's Use-Case-1 stress, sharpened.
+    PoissonBurst,
+    /// Long-context demand arrives in waves: KV pressure oscillates between
+    /// DP-friendly and merge-forcing (Use Case 3 under non-stationarity).
+    LongContextWave,
+    /// Bursts of high-priority traffic over a best-effort baseline
+    /// (Use Case 2 under contention).
+    PriorityStorm,
+    /// The prompt/output mix itself shifts regime every minute:
+    /// chat-shaped, ingest-shaped, then mixed with long-context stragglers.
+    MixedShift,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Diurnal,
+        Scenario::PoissonBurst,
+        Scenario::LongContextWave,
+        Scenario::PriorityStorm,
+        Scenario::MixedShift,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Diurnal => "diurnal",
+            Scenario::PoissonBurst => "poisson_burst",
+            Scenario::LongContextWave => "long_context_wave",
+            Scenario::PriorityStorm => "priority_storm",
+            Scenario::MixedShift => "mixed_shift",
+        }
+    }
+
+    /// Generate `n_requests` arrivals.  Deterministic in `seed`.
+    pub fn generate(&self, seed: u64, n_requests: usize) -> Vec<Request> {
+        // Per-scenario seed whitening so the same seed does not replay the
+        // same arrival skeleton across scenarios.
+        let mut rng = Rng::new(seed ^ 0x5CE7A110u64.wrapping_mul(*self as u64 + 1));
+        match self {
+            Scenario::Diurnal => diurnal(&mut rng, n_requests),
+            Scenario::PoissonBurst => poisson_burst(&mut rng, n_requests),
+            Scenario::LongContextWave => long_context_wave(&mut rng, n_requests),
+            Scenario::PriorityStorm => priority_storm(&mut rng, n_requests),
+            Scenario::MixedShift => mixed_shift(&mut rng, n_requests),
+        }
+    }
+}
+
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for Scenario {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Scenario::ALL
+            .into_iter()
+            .find(|sc| sc.label() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift)"
+                )
+            })
+    }
+}
+
+fn req(
+    id: u64,
+    arrival: f64,
+    prompt_len: usize,
+    output_len: usize,
+    priority: Priority,
+) -> Request {
+    Request {
+        id,
+        arrival,
+        prompt_len,
+        output_len,
+        priority,
+        tp_demand: None,
+    }
+}
+
+fn diurnal(rng: &mut Rng, n: usize) -> Vec<Request> {
+    const PERIOD_S: f64 = 240.0;
+    const MID_RPS: f64 = 7.0;
+    const AMP: f64 = 0.8;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        let rate = (MID_RPS * (1.0 + AMP * (2.0 * std::f64::consts::PI * t / PERIOD_S).sin()))
+            .max(0.3);
+        t += rng.exp(rate);
+        let long = rng.bool(0.06);
+        let prompt = if long {
+            rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1)
+        } else {
+            rng.range_usize(128, 4000)
+        };
+        let pri = if rng.bool(0.02) { Priority::High } else { Priority::Normal };
+        out.push(req(id, t, prompt, rng.range_usize(64, 512), pri));
+    }
+    out
+}
+
+fn poisson_burst(rng: &mut Rng, n: usize) -> Vec<Request> {
+    const BASE_RPS: f64 = 2.5;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut next_burst = rng.uniform(40.0, 120.0);
+    let mut burst_end = 0.0f64;
+    let mut burst_rate = 0.0f64;
+    for id in 0..n as u64 {
+        while t >= next_burst {
+            burst_end = next_burst + rng.uniform(8.0, 15.0);
+            burst_rate = rng.uniform(25.0, 35.0);
+            next_burst = burst_end + rng.uniform(60.0, 140.0);
+        }
+        let rate = if t < burst_end { burst_rate } else { BASE_RPS };
+        t += rng.exp(rate);
+        let long = rng.bool(0.04);
+        let prompt = if long {
+            rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1)
+        } else {
+            rng.range_usize(128, 4000)
+        };
+        out.push(req(id, t, prompt, rng.range_usize(64, 512), Priority::Normal));
+    }
+    out
+}
+
+fn long_context_wave(rng: &mut Rng, n: usize) -> Vec<Request> {
+    const RPS: f64 = 4.0;
+    const WAVE_PERIOD_S: f64 = 180.0;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        t += rng.exp(RPS);
+        // Long-context probability oscillates 0 -> 0.5 -> 0 per period.
+        let p_long =
+            0.25 * (1.0 - (2.0 * std::f64::consts::PI * t / WAVE_PERIOD_S).cos());
+        let long = rng.bool(p_long);
+        let (prompt, output) = if long {
+            (
+                rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1),
+                rng.range_usize(64, 256),
+            )
+        } else {
+            (rng.range_usize(128, 4000), rng.range_usize(64, 512))
+        };
+        out.push(req(id, t, prompt, output, Priority::Normal));
+    }
+    out
+}
+
+fn priority_storm(rng: &mut Rng, n: usize) -> Vec<Request> {
+    const BASE_RPS: f64 = 4.0;
+    const STORM_EXTRA_RPS: f64 = 12.0;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut next_storm = rng.uniform(60.0, 150.0);
+    let mut storm_end = 0.0f64;
+    for id in 0..n as u64 {
+        while t >= next_storm {
+            storm_end = next_storm + rng.uniform(10.0, 20.0);
+            next_storm = storm_end + rng.uniform(90.0, 180.0);
+        }
+        let in_storm = t < storm_end;
+        let rate = if in_storm { BASE_RPS + STORM_EXTRA_RPS } else { BASE_RPS };
+        t += rng.exp(rate);
+        // During a storm, the extra traffic is the high-priority flood.
+        let p_high = if in_storm {
+            STORM_EXTRA_RPS / (BASE_RPS + STORM_EXTRA_RPS)
+        } else {
+            0.02
+        };
+        let pri = if rng.bool(p_high) { Priority::High } else { Priority::Normal };
+        out.push(req(
+            id,
+            t,
+            rng.range_usize(128, 4000),
+            rng.range_usize(64, 512),
+            pri,
+        ));
+    }
+    out
+}
+
+fn mixed_shift(rng: &mut Rng, n: usize) -> Vec<Request> {
+    const REGIME_S: f64 = 60.0;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        let regime = ((t / REGIME_S) as usize) % 3;
+        let rate = match regime {
+            0 => 6.0,  // chat
+            1 => 5.0,  // ingest
+            _ => 10.0, // mixed
+        };
+        t += rng.exp(rate);
+        let (prompt, output, long_frac) = match ((t / REGIME_S) as usize) % 3 {
+            // Chat: short prompts, long generations.
+            0 => (rng.range_usize(64, 512), rng.range_usize(256, 512), 0.0),
+            // Ingest/summarize: long prompts, terse outputs.
+            1 => (rng.range_usize(2500, 4000), rng.range_usize(32, 64), 0.0),
+            // Mixed with a long-context tail.
+            _ => (rng.range_usize(128, 4000), rng.range_usize(64, 512), 0.10),
+        };
+        let prompt = if long_frac > 0.0 && rng.bool(long_frac) {
+            rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1)
+        } else {
+            prompt
+        };
+        out.push(req(id, t, prompt, output, Priority::Normal));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_csv, to_csv, validate};
+    use super::*;
+
+    #[test]
+    fn labels_round_trip_through_fromstr() {
+        for sc in Scenario::ALL {
+            let parsed: Scenario = sc.label().parse().unwrap();
+            assert_eq!(parsed, sc);
+        }
+        assert!("nope".parse::<Scenario>().is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_distinct_across_scenarios() {
+        for sc in Scenario::ALL {
+            let a = sc.generate(7, 300);
+            let b = sc.generate(7, 300);
+            assert_eq!(a.len(), 300);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival, y.arrival, "{sc}");
+                assert_eq!(x.prompt_len, y.prompt_len, "{sc}");
+            }
+        }
+        let d = Scenario::Diurnal.generate(7, 50);
+        let p = Scenario::PoissonBurst.generate(7, 50);
+        assert!(d.iter().zip(&p).any(|(a, b)| a.arrival != b.arrival));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_valid_for_every_scenario() {
+        for sc in Scenario::ALL {
+            let reqs = sc.generate(3, 500);
+            validate(&reqs).unwrap();
+            let mut last = 0.0;
+            for r in &reqs {
+                assert!(r.arrival >= last, "{sc}: arrivals must be monotone");
+                last = r.arrival;
+                assert!(r.prompt_len >= 1 && r.output_len >= 1, "{sc}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_round_trip_preserves_every_scenario() {
+        for sc in Scenario::ALL {
+            let reqs = sc.generate(11, 200);
+            let parsed = from_csv(&to_csv(&reqs)).unwrap();
+            assert_eq!(parsed.len(), reqs.len(), "{sc}");
+            for (a, b) in reqs.iter().zip(&parsed) {
+                assert_eq!(a.id, b.id);
+                assert!((a.arrival - b.arrival).abs() < 1e-5, "{sc}");
+                assert_eq!(a.prompt_len, b.prompt_len, "{sc}");
+                assert_eq!(a.output_len, b.output_len, "{sc}");
+                assert_eq!(a.priority, b.priority, "{sc}");
+                assert_eq!(a.tp_demand, b.tp_demand, "{sc}");
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_actually_swings() {
+        let reqs = Scenario::Diurnal.generate(1, 4000);
+        // Compare arrival density where sin(phase) is high vs low.
+        let phase = |t: f64| (2.0 * std::f64::consts::PI * t / 240.0).sin();
+        let peak = reqs.iter().filter(|r| phase(r.arrival) > 0.5).count();
+        let trough = reqs.iter().filter(|r| phase(r.arrival) < -0.5).count();
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "peak={peak} trough={trough}"
+        );
+    }
+
+    #[test]
+    fn poisson_burst_has_dense_windows() {
+        let reqs = Scenario::PoissonBurst.generate(2, 3000);
+        let span = reqs.last().unwrap().arrival;
+        let n_buckets = (span / 10.0).ceil() as usize + 1;
+        let mut buckets = vec![0usize; n_buckets];
+        for r in &reqs {
+            buckets[(r.arrival / 10.0) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap() as f64;
+        let mean = reqs.len() as f64 / n_buckets as f64;
+        assert!(max > 2.5 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn long_context_arrives_in_waves() {
+        let reqs = Scenario::LongContextWave.generate(3, 3000);
+        let wave = |t: f64| 0.25 * (1.0 - (2.0 * std::f64::consts::PI * t / 180.0).cos());
+        let longs: Vec<f64> = reqs
+            .iter()
+            .filter(|r| r.prompt_len >= LONG_CTX_RANGE.0)
+            .map(|r| wave(r.arrival))
+            .collect();
+        let shorts: Vec<f64> = reqs
+            .iter()
+            .filter(|r| r.prompt_len < LONG_CTX_RANGE.0)
+            .map(|r| wave(r.arrival))
+            .collect();
+        let frac = longs.len() as f64 / reqs.len() as f64;
+        assert!((0.08..0.45).contains(&frac), "long frac={frac}");
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        // Longs concentrate at wave crests.
+        assert!(
+            mean(&longs) > mean(&shorts) + 0.05,
+            "longs={} shorts={}",
+            mean(&longs),
+            mean(&shorts)
+        );
+    }
+
+    #[test]
+    fn priority_storms_cluster_high_priority() {
+        let reqs = Scenario::PriorityStorm.generate(4, 3000);
+        let span = reqs.last().unwrap().arrival;
+        let n_buckets = (span / 15.0).ceil() as usize + 1;
+        let mut high = vec![0usize; n_buckets];
+        let mut all = vec![0usize; n_buckets];
+        for r in &reqs {
+            let b = (r.arrival / 15.0) as usize;
+            all[b] += 1;
+            if r.priority == Priority::High {
+                high[b] += 1;
+            }
+        }
+        let overall =
+            reqs.iter().filter(|r| r.priority == Priority::High).count() as f64 / reqs.len() as f64;
+        assert!((0.05..0.6).contains(&overall), "overall high frac={overall}");
+        let max_frac = high
+            .iter()
+            .zip(&all)
+            .filter(|(_, &a)| a >= 20)
+            .map(|(&h, &a)| h as f64 / a as f64)
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_frac > 2.0 * overall,
+            "max storm frac={max_frac} overall={overall}"
+        );
+    }
+
+    #[test]
+    fn mixed_shift_changes_the_mix_between_regimes() {
+        let reqs = Scenario::MixedShift.generate(5, 3000);
+        let regime = |t: f64| ((t / 60.0) as usize) % 3;
+        let mean_prompt = |k: usize| {
+            let v: Vec<usize> = reqs
+                .iter()
+                .filter(|r| regime(r.arrival) == k && r.prompt_len < LONG_CTX_RANGE.0)
+                .map(|r| r.prompt_len)
+                .collect();
+            v.iter().sum::<usize>() as f64 / v.len() as f64
+        };
+        let chat = mean_prompt(0);
+        let ingest = mean_prompt(1);
+        assert!(ingest > 3.0 * chat, "chat={chat} ingest={ingest}");
+        let mean_out = |k: usize| {
+            let v: Vec<usize> = reqs
+                .iter()
+                .filter(|r| regime(r.arrival) == k)
+                .map(|r| r.output_len)
+                .collect();
+            v.iter().sum::<usize>() as f64 / v.len() as f64
+        };
+        assert!(mean_out(0) > 2.0 * mean_out(1));
+    }
+}

@@ -11,12 +11,13 @@
 //! blocked-idle timestamps by a heartbeat quantum without changing any
 //! scheduling decision.
 
+use flying_serving::control::{ControlConfig, ControlRuntime, StaticController};
 use flying_serving::sim::{
-    outcomes_equivalent, simulate, simulate_reference, CostModel, HwSpec, PaperModel, SimConfig,
-    SimSystem,
+    outcomes_equivalent, simulate, simulate_adaptive, simulate_reference, CostModel, HwSpec,
+    PaperModel, SimConfig, SimSystem,
 };
 use flying_serving::util::prop::prop_check;
-use flying_serving::workload::{generate, Priority, Request, WorkloadCfg};
+use flying_serving::workload::{generate, Priority, Request, Scenario, WorkloadCfg};
 
 fn check_equivalent(
     system: SimSystem,
@@ -192,6 +193,58 @@ fn table2_switching_scenario_equivalence() {
         .collect();
     for sys in [SimSystem::Flying, SimSystem::FlyingSequential] {
         assert_equivalent(sys, &cm, &trace, &SimConfig::default());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane no-op equivalence: with StaticController::hold() the
+// ControlRuntime threaded through the event core must not perturb a single
+// decision — outcomes must match both the plain event core AND the loop
+// reference, on the property traces and on every scenario-library workload.
+// ---------------------------------------------------------------------------
+
+fn check_adaptive_hold_equivalent(
+    cm: &CostModel,
+    trace: &[Request],
+    cfg: &SimConfig,
+) -> Result<(), String> {
+    let mut rt = ControlRuntime::new(
+        Box::new(StaticController::hold()),
+        ControlConfig::default(),
+    );
+    let adaptive = simulate_adaptive(cm, trace, cfg, &mut rt);
+    if rt.plan_changes() != 0 {
+        return Err(format!("hold controller changed plans ({})", rt.plan_changes()));
+    }
+    let event = simulate(SimSystem::Flying, cm, trace, cfg);
+    outcomes_equivalent(&adaptive, &event).map_err(|e| format!("adaptive-hold vs event: {e}"))?;
+    let reference = simulate_reference(SimSystem::Flying, cm, trace, cfg);
+    outcomes_equivalent(&adaptive, &reference)
+        .map_err(|e| format!("adaptive-hold vs reference: {e}"))
+}
+
+#[test]
+fn prop_adaptive_hold_equivalent_on_random_traces() {
+    let cm = llama();
+    let dp_cap = cm.kv_capacity_tokens(cm.model.min_gpus);
+    prop_check("adaptive(hold) ≡ reference on random traces", 10, |g| {
+        let mut wl = WorkloadCfg::paper_full(g.u64(0, 1 << 30), g.usize(40, 160));
+        wl.priority_frac = g.f64(0.0, 0.3);
+        wl.long_frac = g.f64(0.0, 0.2);
+        wl.long_ctx_range = (dp_cap / 2, dp_cap * 3);
+        let trace = generate(&wl);
+        check_adaptive_hold_equivalent(&cm, &trace, &SimConfig::default())
+    });
+}
+
+#[test]
+fn adaptive_hold_equivalent_on_every_scenario() {
+    let cm = llama();
+    for scenario in Scenario::ALL {
+        let trace = scenario.generate(11, 150);
+        if let Err(e) = check_adaptive_hold_equivalent(&cm, &trace, &SimConfig::default()) {
+            panic!("{scenario}: {e}");
+        }
     }
 }
 

@@ -7,6 +7,9 @@
 //! live DP<->TP switches.
 
 use flying_serving::baselines::{StaticDpPolicy, StaticTpPolicy};
+use flying_serving::control::{
+    AdaptivePolicy, ControlConfig, ControlRuntime, ThresholdController,
+};
 use flying_serving::coordinator::policy::FlyingPolicy;
 use flying_serving::coordinator::strategy::Strategy;
 use flying_serving::coordinator::{Cluster, ServeRequest};
@@ -237,6 +240,48 @@ fn sequential_strategy_drains_then_binds() {
     c.shutdown();
     assert_eq!(out.outputs[&1].len(), 6);
     assert_eq!(out.outputs[&2].len(), 4);
+}
+
+#[test]
+fn adaptive_policy_serves_real_path_deterministically() {
+    // The control plane's real-path adaptor: the same ControlRuntime the
+    // simulator threads through its event core, driven here by the actual
+    // coordinator over stub engines.  The real path's clock is wall time,
+    // so *mode decisions* may differ between runs (a control tick can land
+    // before or after an arrival) — but the asserted outcomes cannot:
+    // greedy stub decoding emits identical tokens under DP, TP, and across
+    // switches (the suite's core invariant), and rejection is decided by
+    // the plan-independent constraint tiers, never by the fleet plan.
+    let mk_trace = || {
+        (0..20u64)
+            .map(|i| {
+                let mut r = req(i, 8 + (i as usize % 11), 3 + (i as usize % 3));
+                r.priority = if i % 9 == 0 { Priority::High } else { Priority::Normal };
+                r.arrival = 0.02 * i as f64;
+                r
+            })
+            .collect::<Vec<_>>()
+    };
+    let run = || {
+        let mut policy = AdaptivePolicy::new(ControlRuntime::new(
+            Box::new(ThresholdController::default()),
+            ControlConfig::default(),
+        ));
+        let mut c = cluster(2);
+        let out = c
+            .run_trace(mk_trace(), &mut policy, Strategy::HardPreempt)
+            .unwrap();
+        c.shutdown();
+        (out.outputs, out.rejected)
+    };
+    let (outputs_a, rejected_a) = run();
+    assert_eq!(outputs_a.len() + rejected_a.len(), 20);
+    for (id, toks) in &outputs_a {
+        assert!(!toks.is_empty(), "request {id} produced no tokens");
+    }
+    let (outputs_b, rejected_b) = run();
+    assert_eq!(outputs_a, outputs_b);
+    assert_eq!(rejected_a, rejected_b);
 }
 
 #[test]
