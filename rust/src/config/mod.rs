@@ -22,6 +22,10 @@ pub struct ServeConfig {
     pub seed: u64,
     pub n_requests: usize,
     pub verbose: bool,
+    /// Drain backfill + incremental settle on the switch path
+    /// (`coordinator::strategy::SwitchConfig`).  Off by default: the
+    /// transition then behaves exactly as PR 1/2.
+    pub switch_backfill: bool,
 }
 
 impl Default for ServeConfig {
@@ -37,6 +41,7 @@ impl Default for ServeConfig {
             seed: 42,
             n_requests: 64,
             verbose: false,
+            switch_backfill: false,
         }
     }
 }
@@ -80,10 +85,20 @@ impl ServeConfig {
                 "seed" => c.seed = v.parse()?,
                 "requests" => c.n_requests = v.parse()?,
                 "verbose" => c.verbose = v == "true",
+                "switch-backfill" => c.switch_backfill = v == "true",
                 _ => bail!("unknown flag --{k}"),
             }
         }
         Ok(c)
+    }
+
+    /// Switch-transition tuning for the real coordinator, derived from the
+    /// `--switch-backfill` flag (other knobs keep their defaults).
+    pub fn make_switch_config(&self) -> crate::coordinator::strategy::SwitchConfig {
+        crate::coordinator::strategy::SwitchConfig {
+            backfill: self.switch_backfill,
+            ..Default::default()
+        }
     }
 
     /// Instantiate the configured policy.
@@ -144,6 +159,15 @@ mod tests {
         let c = ServeConfig::from_flags(&flags).unwrap();
         let p = c.make_policy().unwrap();
         assert_eq!(p.name(), "threshold");
+    }
+
+    #[test]
+    fn switch_backfill_flag_parses() {
+        let (_, flags) = parse_args(&s(&["--switch-backfill", "true"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert!(c.switch_backfill);
+        assert!(c.make_switch_config().backfill);
+        assert!(!ServeConfig::default().make_switch_config().backfill);
     }
 
     #[test]

@@ -402,6 +402,13 @@ impl ControlRuntime {
         now >= self.next_tick
     }
 
+    /// Windowed telemetry view at `now` (what the next tick's controller
+    /// would see).  Exposed for tests and diagnostics; runs the same
+    /// O(window) walk as a tick, so keep it off per-event paths.
+    pub fn window_stats(&mut self, now: f64) -> WindowStats {
+        self.telemetry.window_stats(now)
+    }
+
     /// Run one control tick: fold the window into the forecaster, ask the
     /// controller for a plan, and adopt it if the cooldown allows.
     pub fn tick(&mut self, now: f64, queue_len: usize, kv_frac: f64, idle_units: usize, n_units: usize) {
@@ -484,20 +491,60 @@ pub fn plan_decision(
 
 /// The real serving path's adaptor: a `Policy` whose decisions come from a
 /// [`ControlRuntime`].  Telemetry on this path is fed from the scheduler's
-/// own decide stream (each assignment attempt notes an arrival sample), a
-/// slight over-count under requeue pressure — which biases the controller
-/// *toward* scale-out exactly when requeues signal congestion.
+/// decide stream through [`Policy::decide_for`], **deduplicated by request
+/// id**: the scheduler re-decides every waiting request each iteration, so
+/// under requeue pressure the same request is decided many times — counting
+/// each attempt as an arrival (the pre-ISSUE-3 behavior, still reachable
+/// through the id-less `decide`) inflated the window's arrival rate exactly
+/// when the queue backed up.  A bounded FIFO of recently-seen ids keeps the
+/// dedupe O(log n) per attempt with a fixed memory footprint.
 pub struct AdaptivePolicy {
     rt: ControlRuntime,
+    seen: std::collections::BTreeSet<u64>,
+    seen_fifo: std::collections::VecDeque<u64>,
 }
+
+/// Dedupe window: ids remembered at once.  Far above any realistic
+/// in-flight+waiting population; eviction exists only to bound memory on
+/// unbounded id streams.
+const SEEN_CAP: usize = 8192;
 
 impl AdaptivePolicy {
     pub fn new(rt: ControlRuntime) -> Self {
-        AdaptivePolicy { rt }
+        AdaptivePolicy {
+            rt,
+            seen: Default::default(),
+            seen_fifo: std::collections::VecDeque::with_capacity(SEEN_CAP),
+        }
     }
 
     pub fn runtime(&self) -> &ControlRuntime {
         &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut ControlRuntime {
+        &mut self.rt
+    }
+
+    fn tick_and_decide(
+        &mut self,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        if self.rt.due(snap.now) {
+            self.rt.tick(
+                snap.now,
+                snap.queue_len,
+                snap.kv_frac,
+                snap.idle_engines,
+                snap.n_engines,
+            );
+        }
+        self.rt
+            .decide(prompt_len, output_len_hint, priority, tp_demand, snap)
     }
 }
 
@@ -514,19 +561,37 @@ impl Policy for AdaptivePolicy {
         tp_demand: Option<usize>,
         snap: &Snapshot,
     ) -> ModeDecision {
+        // No id: every attempt counts as an arrival (legacy over-counting
+        // path — prefer `decide_for`, which the coordinator uses).
         self.rt
             .note_arrival(snap.now, prompt_len, output_len_hint, priority == Priority::High);
-        if self.rt.due(snap.now) {
-            self.rt.tick(
+        self.tick_and_decide(prompt_len, output_len_hint, priority, tp_demand, snap)
+    }
+
+    fn decide_for(
+        &mut self,
+        rid: u64,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        if self.seen.insert(rid) {
+            self.seen_fifo.push_back(rid);
+            if self.seen_fifo.len() > SEEN_CAP {
+                if let Some(old) = self.seen_fifo.pop_front() {
+                    self.seen.remove(&old);
+                }
+            }
+            self.rt.note_arrival(
                 snap.now,
-                snap.queue_len,
-                snap.kv_frac,
-                snap.idle_engines,
-                snap.n_engines,
+                prompt_len,
+                output_len_hint,
+                priority == Priority::High,
             );
         }
-        self.rt
-            .decide(prompt_len, output_len_hint, priority, tp_demand, snap)
+        self.tick_and_decide(prompt_len, output_len_hint, priority, tp_demand, snap)
     }
 }
 
@@ -687,6 +752,27 @@ mod tests {
             plan_decision(Plan::ScaleUp { width: 4 }, &mut inner, 10_000, 0, Priority::Normal, None, &s),
             ModeDecision::Reject
         );
+    }
+
+    #[test]
+    fn adaptive_policy_dedupes_requeue_arrivals() {
+        let mut p = AdaptivePolicy::new(ControlRuntime::new(
+            Box::new(StaticController::hold()),
+            ControlConfig::default(),
+        ));
+        let s = policy_snap();
+        // The scheduler re-decides a queued request every iteration; only
+        // the first attempt per id may count as an arrival (the ROADMAP's
+        // requeue over-count).
+        for _ in 0..5 {
+            p.decide_for(42, 100, 50, Priority::Normal, None, &s);
+        }
+        p.decide_for(43, 100, 50, Priority::Normal, None, &s);
+        assert_eq!(p.runtime_mut().window_stats(0.0).n_arrivals, 2);
+        // The id-less legacy path still counts every call.
+        p.decide(100, 50, Priority::Normal, None, &s);
+        p.decide(100, 50, Priority::Normal, None, &s);
+        assert_eq!(p.runtime_mut().window_stats(0.0).n_arrivals, 4);
     }
 
     #[test]

@@ -26,21 +26,40 @@
 //! coordinator thread once warm** (asserted by the counting allocator in
 //! `benches/sched_hotpath.rs`):
 //!
+//!  * request state lives in a generational dense slab
+//!    (`util::slab::Slab<Active>`): the id→handle map is consulted once at
+//!    admission, and every per-step access afterwards — scheduling walks,
+//!    batch building, token publication, finish — is an O(1) array index
+//!    through a `SlabHandle`;
+//!  * the waiting queue is one FIFO ring per priority level (drained
+//!    high-first; arrivals are admitted in time order and requeues keep
+//!    relative order), replacing the seed's per-iteration O(n log n) sort;
 //!  * step inputs live in per-engine `Arc`'d arenas — by the lockstep
 //!    protocol the engine has dropped its clone by reply time, so
 //!    `Arc::make_mut` recycles the same allocation every step;
 //!  * block-table rows are copied from the KV adaptor's incrementally
-//!    maintained cache (`table_row_ref`), never rebuilt;
+//!    maintained cache (`table_row_ref_h`), never rebuilt, addressed by the
+//!    `KvHandle` captured at registration;
 //!  * plan/collection bookkeeping uses `StepScratch` buffers swapped in
 //!    and out of the cluster;
 //!  * engine lookups (`idle`, unit-mode, draining) are O(1) bitmask reads
 //!    maintained by `refresh_engine`/`refresh_draining` instead of linear
 //!    scans per waiting request.
+//!
+//! # Switch transitions (ISSUE 3)
+//!
+//! With `SwitchConfig::backfill` off (default) a pending TP bind masks the
+//! whole member set out of elastic assignment until the slowest resident
+//! request drains — the PR-1/2 behavior, byte-identical for the harness.
+//! With it on, draining members accept bounded elastic work predicted (in
+//! scheduler steps) to finish inside the drain horizon, and members switch
+//! into the target mode *incrementally* as they drain (`Group::settled_mask`)
+//! so the final promotion only pays the stragglers' mode RPCs.
 
 pub mod policy;
 pub mod strategy;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -48,12 +67,13 @@ use anyhow::{bail, Result};
 
 use crate::comm::CommunicatorPool;
 use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChunk};
-use crate::kv::KvCacheAdaptor;
-use crate::metrics::Recorder;
+use crate::kv::{KvCacheAdaptor, KvHandle};
+use crate::metrics::{RecSlot, Recorder};
 use crate::model::{ModelCfg, StaticShapes};
+use crate::util::slab::{Slab, SlabHandle};
 use crate::workload::Priority;
 use policy::{ModeDecision, Policy, Snapshot};
-use strategy::Strategy;
+use strategy::{Strategy, SwitchConfig};
 
 pub const EOS: i32 = 257;
 
@@ -70,11 +90,13 @@ pub struct ServeRequest {
     pub arrival: f64,
 }
 
+// No `Done` variant: terminal requests leave the slab immediately
+// (`maybe_finish` / the reject path remove the entry), so a live entry is
+// always either prefilling or decoding.
 #[derive(Clone, Debug, PartialEq)]
 enum Phase {
     Prefill,
     Decode,
-    Done,
 }
 
 #[derive(Clone, Debug)]
@@ -90,20 +112,28 @@ struct Active {
     paused: bool,
     /// Soft-preempt: running speculatively in DP while its TP group drains.
     speculative: bool,
-    /// Forced next inputs after a soft-preempt recompute (already emitted).
-    forced: Vec<i32>,
     /// Worst-case block commitment per engine (admission control): the
     /// blocks this request may grow into, reserved at bind time so the pool
     /// can never be overcommitted mid-decode.
     committed: Vec<(usize, usize)>,
+    /// Metrics slot, resolved once at admission (O(1) token recording).
+    rec: RecSlot,
+    /// KV handles per registered engine, resolved once at bind time —
+    /// `slot`/`table_row_ref` become O(1) slab lookups through these.
+    kvh: Vec<(usize, KvHandle)>,
+    /// Admitted onto a draining engine under the backfill predicate.
+    backfill: bool,
 }
 
 #[derive(Clone, Debug, Default)]
 struct Group {
     p: usize,
-    tp_active: Vec<u64>,
+    tp_active: Vec<SlabHandle>,
     /// TP requests waiting for this group to finish draining.
-    tp_pending: Vec<u64>,
+    tp_pending: Vec<SlabHandle>,
+    /// Members already switched into the target mode by incremental settle
+    /// (backfill mode only; always 0 when `SwitchConfig::backfill` is off).
+    settled_mask: u64,
 }
 
 /// Mode-switch event log (feeds the Table-2 switching-latency measurement).
@@ -126,7 +156,7 @@ pub struct ClusterOutcome {
 }
 
 /// One work-issue record: enough to collect replies and publish results
-/// without any per-step allocation (rids are read back from the engine
+/// without any per-step allocation (handles are read back from the engine
 /// scratch arenas).
 #[derive(Clone, Copy, Debug)]
 struct Issued {
@@ -143,6 +173,10 @@ struct EngineScratch {
     prefill_chunk: Arc<PrefillChunk>,
     /// Retired `DecodeSlot`s (with their row buffers) for reuse.
     spare_slots: Vec<DecodeSlot>,
+    /// Handles of the requests in the step just issued to this engine
+    /// (prefill: one entry; decode: batch order) — read back at publish
+    /// time so result routing needs no id lookups.
+    issued_hs: Vec<SlabHandle>,
 }
 
 impl Default for EngineScratch {
@@ -151,6 +185,7 @@ impl Default for EngineScratch {
             decode_batch: Arc::new(Vec::new()),
             prefill_chunk: Arc::new(PrefillChunk::default()),
             spare_slots: Vec::new(),
+            issued_hs: Vec::new(),
         }
     }
 }
@@ -162,12 +197,18 @@ impl Default for EngineScratch {
 struct StepScratch {
     covered: Vec<bool>,
     issued: Vec<Issued>,
-    decode_rids: Vec<u64>,
-    publish_rids: Vec<u64>,
+    decode_hs: Vec<SlabHandle>,
+    publish_hs: Vec<SlabHandle>,
     starts: Vec<usize>,
-    busy: Vec<u64>,
-    ids: Vec<u64>,
-    waiting_buf: Vec<u64>,
+    busy: Vec<SlabHandle>,
+    ids: Vec<SlabHandle>,
+    /// Ping-pong buffers for the waiting-ring drain in `assign_waiting`.
+    drain_hi: VecDeque<SlabHandle>,
+    drain_lo: VecDeque<SlabHandle>,
+    /// Per-engine drain-horizon step counts, recomputed once per
+    /// `assign_waiting` pass (0 = engine not backfillable).  Horizons only
+    /// move between execute steps, so one scan serves the whole walk.
+    horizon_by_engine: Vec<usize>,
     /// Engines with a command in flight whose reply has not been collected
     /// yet.  Used to re-synchronize the persistent per-engine reply
     /// channels if a step aborts mid-collection.
@@ -186,18 +227,27 @@ pub struct Cluster {
     c_prefill: usize,
 
     // scheduler state
-    waiting: Vec<u64>,
-    active: BTreeMap<u64, Active>,
-    engine_active: Vec<Vec<u64>>, // DP requests per engine
+    /// One FIFO ring per priority level: drained high-first, refilled in
+    /// admission/requeue order — structurally the (priority desc, arrival
+    /// asc) order the seed re-sorted every iteration.
+    waiting_hi: VecDeque<SlabHandle>,
+    waiting_lo: VecDeque<SlabHandle>,
+    /// Dense request-state slab; finished/rejected entries are removed, so
+    /// occupancy equals in-flight requests.
+    active: Slab<Active>,
+    /// id → handle, consulted only at admission boundaries.
+    by_id: BTreeMap<u64, SlabHandle>,
+    engine_active: Vec<Vec<SlabHandle>>, // DP requests per engine
     engine_mode: Vec<usize>,
     /// Blocks committed per engine by admission control.
     engine_committed: Vec<usize>,
     groups: BTreeMap<usize, Group>,
-    outputs: BTreeMap<u64, Vec<i32>>,
+    outputs: Vec<(u64, Vec<i32>)>,
     rejected: Vec<u64>,
     switches: Vec<SwitchEvent>,
     t0: Instant,
     n_steps: usize,
+    switch_cfg: SwitchConfig,
 
     // O(1) engine-state indexes (≤ 64 engines):
     /// Engines currently in unit (DP) mode.
@@ -298,17 +348,20 @@ impl Cluster {
             max_tp,
             b_dec: shapes.b_dec,
             c_prefill: shapes.c_prefill,
-            waiting: Vec::new(),
-            active: BTreeMap::new(),
+            waiting_hi: VecDeque::new(),
+            waiting_lo: VecDeque::new(),
+            active: Slab::new(),
+            by_id: BTreeMap::new(),
             engine_active: vec![Vec::new(); n_engines],
             engine_mode: vec![1; n_engines],
             engine_committed: vec![0; n_engines],
             groups: BTreeMap::new(),
-            outputs: BTreeMap::new(),
+            outputs: Vec::new(),
             rejected: Vec::new(),
             switches: Vec::new(),
             t0: Instant::now(),
             n_steps: 0,
+            switch_cfg: SwitchConfig::default(),
             unit_mask: 0,
             idle_mask: 0,
             draining_mask: 0,
@@ -327,6 +380,16 @@ impl Cluster {
 
     pub fn now(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Switch-transition tuning (drain backfill + incremental settle).
+    /// Off by default; set before submitting work.
+    pub fn set_switch_config(&mut self, cfg: SwitchConfig) {
+        self.switch_cfg = cfg;
+    }
+
+    pub fn switch_config(&self) -> SwitchConfig {
+        self.switch_cfg
     }
 
     fn members(&self, start: usize, p: usize) -> std::ops::Range<usize> {
@@ -364,18 +427,40 @@ impl Cluster {
         self.draining_mask = mask;
     }
 
-    /// Live mode switch: SetMode RPC to every member + communicator fetch.
-    /// Returns the measured latency (the Table-2 "live" number).
-    fn switch_group(&mut self, start: usize, p_to: usize) -> Result<f64> {
-        let p_from = self.engine_mode[start];
+    /// Whether the whole member set already runs at mode `p`.  With
+    /// incremental settle a *subset* of members can be at `p` mid-drain, so
+    /// `engine_mode[start]` alone is no longer a valid group-liveness
+    /// witness.
+    fn group_live(&self, start: usize, p: usize) -> bool {
+        self.members(start, p).all(|e| self.engine_mode[e] == p)
+    }
+
+    /// Live mode switch over `width` members: SetMode RPC to every member +
+    /// communicator fetch.  Returns the measured latency (the Table-2
+    /// "live" number).
+    fn switch_group(&mut self, start: usize, width: usize, p_to: usize) -> Result<f64> {
+        // The logged from-mode is the first member mode that still differs
+        // from the target — under incremental settle `engine_mode[start]`
+        // can already equal `p_to` while siblings lag, which would log a
+        // meaningless p→p (or 1→1) transition in the Table-2 event stream.
+        let scan_width = width.max(p_to);
+        let p_from = self
+            .members(start, scan_width)
+            .filter(|&e| e < self.engines.len())
+            .map(|e| self.engine_mode[e])
+            .find(|&m| m != p_to)
+            .unwrap_or(self.engine_mode[start]);
         let t_start = Instant::now();
         // Communicator activation: O(1) pool lookup (pre-initialized).
         if p_to > 1 {
             let _ = self.comm.group_of(start, p_to)?;
         }
-        let width = p_to.max(p_from);
+        let width = scan_width.max(p_from);
         for e in self.members(start, width) {
-            if e < self.engines.len() {
+            // Members already at the target mode (incrementally settled, or
+            // SetMode is otherwise redundant) are skipped: the final
+            // promotion pays only the stragglers' mode RPCs.
+            if e < self.engines.len() && self.engine_mode[e] != p_to {
                 self.engines[e].call(EngineCmd::SetMode { p: p_to })?;
                 self.engine_mode[e] = p_to;
                 self.refresh_engine(e);
@@ -420,19 +505,15 @@ impl Cluster {
             // ① Input processing: admit due arrivals into the task pool.
             while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
                 let sr = trace[next_arrival].clone();
-                recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
-                self.admit(sr);
+                let rec = recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
+                self.admit(sr, rec);
                 next_arrival += 1;
             }
 
-            // ② Globally-agreed waiting order: priority first, then arrival.
-            self.waiting.sort_by(|a, b| {
-                let ra = &self.active[a].sr;
-                let rb = &self.active[b].sr;
-                rb.priority
-                    .cmp(&ra.priority)
-                    .then(ra.arrival.total_cmp(&rb.arrival))
-            });
+            // ② The globally-agreed waiting order (priority desc, arrival
+            // asc) is maintained structurally by the per-priority rings:
+            // arrivals are admitted in time order and requeues keep their
+            // relative order, so no per-iteration sort is needed.
 
             // ③+④+⑤ Mode determination, KV parameterization, binding.
             self.assign_waiting(policy, strategy, &mut recorder)?;
@@ -443,11 +524,10 @@ impl Cluster {
                 self.n_steps += 1;
             }
 
-            // Exit/idle handling.
-            let done = self.active.values().all(|a| a.phase == Phase::Done)
-                && next_arrival >= trace.len()
-                && self.waiting.is_empty();
-            if done {
+            // Exit/idle handling.  Finished requests leave the slab, so
+            // emptiness == everything reached a terminal state.
+            if self.active.is_empty() && next_arrival >= trace.len() {
+                debug_assert!(self.waiting_hi.is_empty() && self.waiting_lo.is_empty());
                 break;
             }
             if !stepped {
@@ -462,7 +542,13 @@ impl Cluster {
                     // Requests exist but nothing has run for many
                     // iterations: genuine scheduling bug, fail loudly
                     // instead of hanging.
-                    bail!("scheduler stall: waiting={:?}", self.waiting);
+                    let stuck: Vec<u64> = self
+                        .waiting_hi
+                        .iter()
+                        .chain(self.waiting_lo.iter())
+                        .filter_map(|&h| self.active.get(h).map(|a| a.sr.id))
+                        .collect();
+                    bail!("scheduler stall: waiting={stuck:?}");
                 }
             } else {
                 idle_iters = 0;
@@ -471,7 +557,7 @@ impl Cluster {
 
         Ok(ClusterOutcome {
             recorder,
-            outputs: std::mem::take(&mut self.outputs),
+            outputs: std::mem::take(&mut self.outputs).into_iter().collect(),
             rejected: std::mem::take(&mut self.rejected),
             switches: std::mem::take(&mut self.switches),
             n_steps: self.n_steps,
@@ -482,8 +568,8 @@ impl Cluster {
     /// next iteration).  Fine-grained alternative to [`Self::run_trace`]
     /// for streaming drivers and the scheduler benches.
     pub fn submit(&mut self, sr: ServeRequest, recorder: &mut Recorder) {
-        recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
-        self.admit(sr);
+        let rec = recorder.on_arrival(sr.id, sr.arrival, sr.priority, sr.prompt.len());
+        self.admit(sr, rec);
     }
 
     /// Run one full scheduling iteration (settle → sync → assign →
@@ -496,13 +582,6 @@ impl Cluster {
         recorder: &mut Recorder,
     ) -> Result<bool> {
         self.settle_groups(recorder)?;
-        self.waiting.sort_by(|a, b| {
-            let ra = &self.active[a].sr;
-            let rb = &self.active[b].sr;
-            rb.priority
-                .cmp(&ra.priority)
-                .then(ra.arrival.total_cmp(&rb.arrival))
-        });
         self.assign_waiting(policy, strategy, recorder)?;
         let stepped = self.execute_step(recorder)?;
         if stepped {
@@ -511,25 +590,29 @@ impl Cluster {
         Ok(stepped)
     }
 
-    fn admit(&mut self, sr: ServeRequest) {
+    fn admit(&mut self, sr: ServeRequest, rec: RecSlot) {
         let id = sr.id;
+        let pri = sr.priority;
         let emitted = Vec::with_capacity(sr.max_new + 1);
-        self.active.insert(
-            id,
-            Active {
-                sr,
-                mode_p: 0,
-                home: 0,
-                phase: Phase::Prefill,
-                pos: 0,
-                emitted,
-                paused: false,
-                speculative: false,
-                forced: Vec::new(),
-                committed: Vec::new(),
-            },
-        );
-        self.waiting.push(id);
+        let h = self.active.insert(Active {
+            sr,
+            mode_p: 0,
+            home: 0,
+            phase: Phase::Prefill,
+            pos: 0,
+            emitted,
+            paused: false,
+            speculative: false,
+            committed: Vec::new(),
+            rec,
+            kvh: Vec::new(),
+            backfill: false,
+        });
+        self.by_id.insert(id, h);
+        match pri {
+            Priority::High => self.waiting_hi.push_back(h),
+            Priority::Normal => self.waiting_lo.push_back(h),
+        }
     }
 
     fn snapshot(&self) -> Snapshot {
@@ -537,7 +620,7 @@ impl Cluster {
         let capacity = self.engines.len() * (self.cfg.n_blocks - 1);
         Snapshot {
             now: self.now(),
-            queue_len: self.waiting.len(),
+            queue_len: self.waiting_hi.len() + self.waiting_lo.len(),
             idle_engines: self.idle_mask.count_ones() as usize,
             n_engines: self.engines.len(),
             dp_capacity_tokens: self.cfg.dp_token_capacity(),
@@ -550,6 +633,15 @@ impl Cluster {
         }
     }
 
+    /// Requeue a request that could not bind this iteration, preserving
+    /// FIFO order within its priority level.
+    fn requeue(&mut self, h: SlabHandle) {
+        match self.active.get(h).expect("requeue of dead request").sr.priority {
+            Priority::High => self.waiting_hi.push_back(h),
+            Priority::Normal => self.waiting_lo.push_back(h),
+        }
+    }
+
     /// Steps ③–⑤ for every waiting request.
     fn assign_waiting(
         &mut self,
@@ -557,61 +649,80 @@ impl Cluster {
         strategy: Strategy,
         recorder: &mut Recorder,
     ) -> Result<()> {
-        // Ping-pong the waiting list through a warm scratch buffer so the
-        // requeue path never allocates.
-        std::mem::swap(&mut self.waiting, &mut self.scratch.waiting_buf);
-        let backlog_total = self.scratch.waiting_buf.len();
-        for qi in 0..backlog_total {
-            let rid = self.scratch.waiting_buf[qi];
-            let mut snap = self.snapshot();
-            // Include requests later in this same drain in the backlog so
-            // the burst signal sees the true queue depth.
-            snap.queue_len += backlog_total - qi - 1;
-            let (plen, hint, pri, demand) = {
-                let a = &self.active[&rid];
-                (
-                    a.sr.prompt.len(),
-                    a.sr.max_new,
-                    a.sr.priority,
-                    a.sr.tp_demand,
-                )
-            };
-            match policy.decide(plen, hint, pri, demand, &snap) {
-                ModeDecision::Reject => {
-                    self.active.get_mut(&rid).unwrap().phase = Phase::Done;
-                    self.rejected.push(rid);
-                    recorder.on_finish(rid, self.now());
-                }
-                ModeDecision::Dp => self.try_bind_dp(rid, recorder)?,
-                ModeDecision::Tp(p) => {
-                    let p = self.clamp_tp(p);
-                    if p == 1 {
-                        // Degenerate TP (single engine / unsupported width).
-                        self.try_bind_dp(rid, recorder)?;
-                    } else {
-                        self.bind_tp(rid, p, strategy, recorder)?;
+        if self.waiting_hi.is_empty() && self.waiting_lo.is_empty() {
+            return Ok(());
+        }
+        if self.switch_cfg.backfill {
+            self.refresh_drain_horizons();
+        }
+        // Ping-pong the rings through warm scratch buffers so the requeue
+        // path never allocates.
+        std::mem::swap(&mut self.waiting_hi, &mut self.scratch.drain_hi);
+        std::mem::swap(&mut self.waiting_lo, &mut self.scratch.drain_lo);
+        let backlog_total = self.scratch.drain_hi.len() + self.scratch.drain_lo.len();
+        let mut processed = 0usize;
+        for high_pass in [true, false] {
+            loop {
+                let popped = if high_pass {
+                    self.scratch.drain_hi.pop_front()
+                } else {
+                    self.scratch.drain_lo.pop_front()
+                };
+                let Some(h) = popped else { break };
+                processed += 1;
+                let mut snap = self.snapshot();
+                // Include requests later in this same drain in the backlog
+                // so the burst signal sees the true queue depth (requeued
+                // ones are already in the live rings snapshot() counted).
+                snap.queue_len += backlog_total - processed;
+                let (rid, plen, hint, pri, demand) = {
+                    let a = self.active.get(h).expect("waiting handle must be live");
+                    (
+                        a.sr.id,
+                        a.sr.prompt.len(),
+                        a.sr.max_new,
+                        a.sr.priority,
+                        a.sr.tp_demand,
+                    )
+                };
+                match policy.decide_for(rid, plen, hint, pri, demand, &snap) {
+                    ModeDecision::Reject => {
+                        let now = self.now();
+                        let a = self.active.remove(h).expect("live");
+                        self.by_id.remove(&a.sr.id);
+                        self.rejected.push(a.sr.id);
+                        recorder.on_finish_at(a.rec, now);
+                    }
+                    ModeDecision::Dp => self.try_bind_dp(h, recorder)?,
+                    ModeDecision::Tp(p) => {
+                        let p = self.clamp_tp(p);
+                        if p == 1 {
+                            // Degenerate TP (single engine / unsupported width).
+                            self.try_bind_dp(h, recorder)?;
+                        } else {
+                            self.bind_tp(h, p, strategy, recorder)?;
+                        }
                     }
                 }
             }
         }
-        self.scratch.waiting_buf.clear();
         Ok(())
     }
 
-    /// Worst-case block demand of `rid` under layout `p` (admission unit).
-    fn block_need(&self, rid: u64, p: usize) -> usize {
-        let a = &self.active[&rid];
+    /// Worst-case block demand under layout `p` (admission unit).
+    fn block_need(&self, h: SlabHandle, p: usize) -> usize {
+        let a = self.active.get(h).expect("live");
         let total = a.sr.prompt.len() + a.sr.max_new;
         total.div_ceil(self.cfg.block_tokens(p))
     }
 
-    fn commit(&mut self, rid: u64, e: usize, blocks: usize) {
+    fn commit(&mut self, h: SlabHandle, e: usize, blocks: usize) {
         self.engine_committed[e] += blocks;
-        self.active.get_mut(&rid).unwrap().committed.push((e, blocks));
+        self.active.get_mut(h).expect("live").committed.push((e, blocks));
     }
 
-    fn uncommit_all(&mut self, rid: u64) {
-        let committed = std::mem::take(&mut self.active.get_mut(&rid).unwrap().committed);
+    fn uncommit_all(&mut self, h: SlabHandle) {
+        let committed = std::mem::take(&mut self.active.get_mut(h).expect("live").committed);
         for (e, blocks) in committed {
             self.engine_committed[e] -= blocks;
         }
@@ -619,9 +730,11 @@ impl Cluster {
 
     /// Bind to the least-loaded unbound engine with KV headroom, or queue.
     /// Candidates come from the unit/draining bitmask indexes — O(set bits)
-    /// instead of a predicate scan over every engine.
-    fn try_bind_dp(&mut self, rid: u64, recorder: &mut Recorder) -> Result<()> {
-        let need = self.block_need(rid, 1);
+    /// instead of a predicate scan over every engine.  In backfill mode a
+    /// draining engine is a second-choice candidate when the request's
+    /// predicted step count fits the drain horizon.
+    fn try_bind_dp(&mut self, h: SlabHandle, recorder: &mut Recorder) -> Result<()> {
+        let need = self.block_need(h, 1);
         let mut candidates = self.unit_mask & !self.draining_mask;
         let mut pick: Option<usize> = None;
         while candidates != 0 {
@@ -638,16 +751,118 @@ impl Cluster {
                 _ => {}
             }
         }
+        if pick.is_none() && self.switch_cfg.backfill {
+            pick = self.pick_backfill_engine(h, need);
+            if pick.is_some() {
+                self.active.get_mut(h).expect("live").backfill = true;
+            }
+        }
         match pick {
             Some(e) => {
-                self.commit(rid, e, need);
-                self.bind_dp(rid, e, recorder)
+                self.commit(h, e, need);
+                self.bind_dp(h, e, recorder)
             }
             None => {
-                self.waiting.push(rid);
+                self.requeue(h);
                 Ok(())
             }
         }
+    }
+
+    /// Scheduler steps a request still needs: remaining prefill chunks plus
+    /// remaining decode tokens — the unit the backfill admission predicate
+    /// is denominated in (the real path has no wall-clock cost model; step
+    /// counts advance in lockstep across engines, so they are the honest
+    /// analogue of the simulator's cost-model seconds).
+    fn remaining_steps(&self, a: &Active) -> usize {
+        let total = a.sr.prompt.len() + a.emitted.len().saturating_sub(1);
+        let pre_left = total.saturating_sub(a.pos).div_ceil(self.c_prefill);
+        let dec_left = a.sr.max_new.saturating_sub(a.emitted.len());
+        pre_left + dec_left
+    }
+
+    /// Recompute every draining engine's drain horizon — the largest
+    /// remaining-step count among resident (non-paused, non-speculative,
+    /// non-backfill) requests on any member of its group — into the
+    /// per-pass scratch cache.  One group/member scan serves the whole
+    /// `assign_waiting` walk: horizons only change when engines step, never
+    /// mid-walk (backfill admissions are excluded from the horizon).
+    fn refresh_drain_horizons(&mut self) {
+        let mut horizons = std::mem::take(&mut self.scratch.horizon_by_engine);
+        horizons.clear();
+        horizons.resize(self.engines.len(), 0);
+        for (&start, g) in &self.groups {
+            if g.tp_pending.is_empty() {
+                continue;
+            }
+            let mut horizon = 0usize;
+            for m in self.members(start, g.p) {
+                for &x in &self.engine_active[m] {
+                    if let Some(a) = self.active.get(x) {
+                        if !a.paused && !a.speculative && !a.backfill
+                        {
+                            horizon = horizon.max(self.remaining_steps(a));
+                        }
+                    }
+                }
+            }
+            if horizon > 0 {
+                for m in self.members(start, g.p) {
+                    if m < horizons.len() {
+                        horizons[m] = horizon;
+                    }
+                }
+            }
+        }
+        self.scratch.horizon_by_engine = horizons;
+    }
+
+    /// Backfill candidate among draining unit engines: block headroom, a
+    /// free backfill slot, and predicted steps within the drain horizon.
+    /// The request's prefill chunks are charged **twice**: engines issue
+    /// prefill-first, so each backfill prefill step also displaces one
+    /// resident decode step on that engine and extends the drain by a step
+    /// — the predicate must absorb that displacement, not just the
+    /// request's own length, or backfill would systematically overrun the
+    /// horizon it was admitted against.
+    fn pick_backfill_engine(&self, h: SlabHandle, need: usize) -> Option<usize> {
+        let steps_needed = {
+            let a = self.active.get(h)?;
+            let pre_chunks = a.sr.prompt.len().div_ceil(self.c_prefill);
+            2 * pre_chunks + a.sr.max_new
+        };
+        let mut candidates = self.unit_mask & self.draining_mask;
+        let mut pick: Option<usize> = None;
+        while candidates != 0 {
+            let e = candidates.trailing_zeros() as usize;
+            candidates &= candidates - 1;
+            if self.engine_committed[e] + need > self.cfg.n_blocks - 1 {
+                continue;
+            }
+            let n_bf = self
+                .engine_active[e]
+                .iter()
+                .filter(|&&x| self.active.get(x).map(|a| a.backfill).unwrap_or(false))
+                .count();
+            if n_bf >= self.switch_cfg.max_backfill_per_engine {
+                continue;
+            }
+            let horizon = *self.scratch.horizon_by_engine.get(e).unwrap_or(&0);
+            if horizon == 0 {
+                continue;
+            }
+            if steps_needed as f64 > self.switch_cfg.backfill_margin * horizon as f64 {
+                continue;
+            }
+            match pick {
+                None => pick = Some(e),
+                Some(p) if self.engine_active[p].len() > self.engine_active[e].len() => {
+                    pick = Some(e)
+                }
+                _ => {}
+            }
+        }
+        pick
     }
 
     fn clamp_tp(&self, p: usize) -> usize {
@@ -658,21 +873,25 @@ impl Cluster {
         q
     }
 
-    fn bind_dp(&mut self, rid: u64, e: usize, recorder: &mut Recorder) -> Result<()> {
-        self.adaptors[e].register(rid, 1)?;
-        let a = self.active.get_mut(&rid).unwrap();
+    fn bind_dp(&mut self, h: SlabHandle, e: usize, recorder: &mut Recorder) -> Result<()> {
+        let rid = self.active.get(h).expect("live").sr.id;
+        let kh = self.adaptors[e].register(rid, 1)?;
+        let now = self.now();
+        let a = self.active.get_mut(h).expect("live");
         a.mode_p = 1;
         a.home = e;
-        self.engine_active[e].push(rid);
+        a.kvh.push((e, kh));
+        let rec = a.rec;
+        self.engine_active[e].push(h);
         self.refresh_engine(e);
-        recorder.on_first_sched(rid, self.now());
+        recorder.on_first_sched_at(rec, now);
         Ok(())
     }
 
     /// Bind (or queue) a TP request onto an aligned group of width p.
     fn bind_tp(
         &mut self,
-        rid: u64,
+        h: SlabHandle,
         p: usize,
         strategy: Strategy,
         recorder: &mut Recorder,
@@ -722,33 +941,33 @@ impl Cluster {
         }
         if !any_start {
             // No compatible group right now; retry next iteration.
-            self.waiting.push(rid);
+            self.requeue(h);
             return Ok(());
         }
         let start = bound.unwrap_or_else(|| best.map(|(_, s)| s).unwrap());
 
         // Admission control: all members must have block headroom for the
         // request's worst case under layout p.
-        let need_p = self.block_need(rid, p);
+        let need_p = self.block_need(h, p);
         let room = self
             .members(start, p)
             .all(|e| self.engine_committed[e] + need_p <= self.cfg.n_blocks - 1);
         if !room {
-            self.waiting.push(rid);
+            self.requeue(h);
             return Ok(());
         }
 
         let mut busy = std::mem::take(&mut self.scratch.busy);
         busy.clear();
         for e in self.members(start, p) {
-            for &r in &self.engine_active[e] {
+            for &x in &self.engine_active[e] {
                 if self
                     .active
-                    .get(&r)
-                    .map(|a| a.phase != Phase::Done && !a.paused)
+                    .get(x)
+                    .map(|a| !a.paused)
                     .unwrap_or(false)
                 {
-                    busy.push(r);
+                    busy.push(x);
                 }
             }
         }
@@ -756,23 +975,26 @@ impl Cluster {
         let g = self.groups.entry(start).or_insert_with(|| Group { p, ..Default::default() });
         g.p = p;
 
-        if busy.is_empty() && self.engine_mode[start] != p {
+        if busy.is_empty() && !self.group_live(start, p) {
             // Immediate bind at a safe point.
-            self.switch_group(start, p)?;
+            self.switch_group(start, p, p)?;
         }
 
-        if self.engine_mode[start] == p {
+        if self.group_live(start, p) {
             // Register in every member adaptor (identical logical content,
             // per-member physical block ids).
+            let rid = self.active.get(h).expect("live").sr.id;
             for e in self.members(start, p) {
-                self.commit(rid, e, need_p);
-                self.adaptors[e].register(rid, p)?;
+                self.commit(h, e, need_p);
+                let kh = self.adaptors[e].register(rid, p)?;
+                self.active.get_mut(h).expect("live").kvh.push((e, kh));
             }
-            let a = self.active.get_mut(&rid).unwrap();
+            let a = self.active.get_mut(h).expect("live");
             a.mode_p = p;
             a.home = start;
-            self.groups.get_mut(&start).unwrap().tp_active.push(rid);
-            recorder.on_first_sched(rid, self.now());
+            let rec = a.rec;
+            self.groups.get_mut(&start).unwrap().tp_active.push(h);
+            recorder.on_first_sched_at(rec, self.now());
             self.scratch.busy = busy;
             return Ok(());
         }
@@ -780,55 +1002,66 @@ impl Cluster {
         // Members still busy: strategy decides.
         match strategy {
             Strategy::Sequential => {
-                self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                self.groups.get_mut(&start).unwrap().tp_pending.push(h);
                 self.refresh_draining();
-                let a = self.active.get_mut(&rid).unwrap();
+                let a = self.active.get_mut(h).expect("live");
                 a.mode_p = p;
                 a.home = start;
             }
             Strategy::SoftPreempt => {
-                self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                self.groups.get_mut(&start).unwrap().tp_pending.push(h);
                 self.refresh_draining();
-                let a = self.active.get_mut(&rid).unwrap();
-                a.mode_p = p;
-                a.home = start;
+                {
+                    let a = self.active.get_mut(h).expect("live");
+                    a.mode_p = p;
+                    a.home = start;
+                }
                 // Speculatively run in DP on the least-loaded member (only
                 // if a member has DP-layout headroom).
-                let need_dp = self.block_need(rid, 1);
+                let need_dp = self.block_need(h, 1);
                 let e = self
                     .members(start, p)
                     .filter(|&e| self.engine_committed[e] + need_dp <= self.cfg.n_blocks - 1)
                     .min_by_key(|&e| self.engine_active[e].len());
                 if let Some(e) = e {
-                    self.commit(rid, e, need_dp);
-                    self.adaptors[e].register(rid, 1)?;
-                    let a = self.active.get_mut(&rid).unwrap();
+                    self.commit(h, e, need_dp);
+                    let rid = self.active.get(h).expect("live").sr.id;
+                    let kh = self.adaptors[e].register(rid, 1)?;
+                    let a = self.active.get_mut(h).expect("live");
                     a.speculative = true;
                     a.mode_p = 1; // runs as DP for now
                     a.home = e;
-                    self.engine_active[e].push(rid);
+                    a.kvh.push((e, kh));
+                    let rec = a.rec;
+                    self.engine_active[e].push(h);
                     self.refresh_engine(e);
-                    recorder.on_first_sched(rid, self.now());
+                    recorder.on_first_sched_at(rec, self.now());
                 }
             }
             Strategy::HardPreempt => {
                 // Pause members' DP requests in place (KV stays resident).
-                for &other in busy.iter() {
-                    if let Some(a) = self.active.get_mut(&other) {
+                for &x in busy.iter() {
+                    let info = self.active.get_mut(x).map(|a| {
                         a.paused = true;
-                        self.adaptors[a.home].pause(other)?;
+                        (a.home, a.sr.id)
+                    });
+                    if let Some((home, rid)) = info {
+                        self.adaptors[home].pause(rid)?;
                     }
                 }
-                self.switch_group(start, p)?;
+                self.switch_group(start, p, p)?;
+                let rid = self.active.get(h).expect("live").sr.id;
                 for e in self.members(start, p) {
-                    self.commit(rid, e, need_p);
-                    self.adaptors[e].register(rid, p)?;
+                    self.commit(h, e, need_p);
+                    let kh = self.adaptors[e].register(rid, p)?;
+                    self.active.get_mut(h).expect("live").kvh.push((e, kh));
                 }
-                let a = self.active.get_mut(&rid).unwrap();
+                let a = self.active.get_mut(h).expect("live");
                 a.mode_p = p;
                 a.home = start;
-                self.groups.get_mut(&start).unwrap().tp_active.push(rid);
-                recorder.on_first_sched(rid, self.now());
+                let rec = a.rec;
+                self.groups.get_mut(&start).unwrap().tp_active.push(h);
+                recorder.on_first_sched_at(rec, self.now());
             }
         }
         self.scratch.busy = busy;
@@ -836,7 +1069,9 @@ impl Cluster {
     }
 
     /// Promote pending TP requests whose group has finished draining, and
-    /// dissolve groups whose TP work is done.
+    /// dissolve groups whose TP work is done.  In backfill mode, members
+    /// settle incrementally: each is switched into the target mode as soon
+    /// as its own work drains.
     fn settle_groups(&mut self, recorder: &mut Recorder) -> Result<()> {
         if self.groups.is_empty() {
             return Ok(());
@@ -853,20 +1088,23 @@ impl Cluster {
             };
 
             // Dissolve: TP work done -> back to DP, resume paused requests.
+            // (`any mode != 1` rather than `mode[start] == p`: incremental
+            // settle can leave a proper subset of members switched.)
             if pending_empty && active_empty {
-                if self.engine_mode[start] == p && p > 1 {
-                    self.switch_group(start, 1)?;
+                if p > 1 && self.members(start, p).any(|e| self.engine_mode[e] != 1) {
+                    self.switch_group(start, p, 1)?;
                     let mut resumed = std::mem::take(&mut self.scratch.ids);
                     for e in self.members(start, p) {
                         resumed.clear();
-                        for &r in &self.engine_active[e] {
-                            if self.active.get(&r).map(|a| a.paused).unwrap_or(false) {
-                                resumed.push(r);
+                        for &x in &self.engine_active[e] {
+                            if self.active.get(x).map(|a| a.paused).unwrap_or(false) {
+                                resumed.push(x);
                             }
                         }
-                        for &r in resumed.iter() {
-                            self.adaptors[e].resume(r)?;
-                            self.active.get_mut(&r).unwrap().paused = false;
+                        for &x in resumed.iter() {
+                            let rid = self.active.get(x).expect("live").sr.id;
+                            self.adaptors[e].resume(rid)?;
+                            self.active.get_mut(x).expect("live").paused = false;
                         }
                     }
                     self.scratch.ids = resumed;
@@ -876,31 +1114,98 @@ impl Cluster {
                 continue;
             }
 
-            // Drained? (no unpaused DP work on members)
             if !pending_empty {
+                // Incremental settle: members whose own work has drained
+                // merge into the target mode now instead of idling behind
+                // the slowest straggler (backfill mode only — off keeps the
+                // one-shot switch, byte-identical to PR 1/2).
+                if self.switch_cfg.backfill {
+                    for e in self.members(start, p) {
+                        let bit = 1u64 << e;
+                        if self.groups[&start].settled_mask & bit != 0
+                            || self.engine_mode[e] != 1
+                        {
+                            continue;
+                        }
+                        let member_busy = self.engine_active[e].iter().any(|&x| {
+                            self.active
+                                .get(x)
+                                .map(|a| !a.paused)
+                                .unwrap_or(false)
+                        });
+                        if member_busy {
+                            continue;
+                        }
+                        self.engines[e].call(EngineCmd::SetMode { p })?;
+                        self.engine_mode[e] = p;
+                        self.refresh_engine(e);
+                        self.groups.get_mut(&start).unwrap().settled_mask |= bit;
+                    }
+                }
+
+                // Drained? (no unpaused DP work on members; the speculative
+                // request IS the pending one — it yields now.)
                 let busy = self
                     .members(start, p)
                     .flat_map(|e| self.engine_active[e].iter())
-                    .any(|r| {
+                    .any(|&x| {
                         self.active
-                            .get(r)
-                            .map(|a| a.phase != Phase::Done && !a.paused && !a.speculative)
+                            .get(x)
+                            .map(|a| !a.paused && !a.speculative)
                             .unwrap_or(false)
                     });
-                // Speculative requests also block the bind until... no: the
-                // speculative request IS the pending one; it yields now.
                 if !busy {
-                    if self.engine_mode[start] != p {
-                        self.switch_group(start, p)?;
+                    // Every pending request may have finished speculatively
+                    // during the drain (stale handles): then there is
+                    // nothing to promote — drop the list without the p→p
+                    // mode round-trip and let the next settle pass dissolve
+                    // the group (resetting any incrementally-settled
+                    // members), instead of logging a spurious switch.
+                    let any_live_pending = self.groups[&start]
+                        .tp_pending
+                        .iter()
+                        .any(|&x| self.active.get(x).is_some());
+                    if !any_live_pending {
+                        let g = self.groups.get_mut(&start).unwrap();
+                        g.tp_pending.clear();
+                        g.settled_mask = 0;
+                        dirty_draining = true;
+                        continue;
                     }
-                    let pending = std::mem::take(&mut self.groups.get_mut(&start).unwrap().tp_pending);
+                    if !self.group_live(start, p) {
+                        self.switch_group(start, p, p)?;
+                    } else if self.groups[&start].settled_mask != 0 {
+                        // Every member settled incrementally: the final hop
+                        // is free — log it so Table-2 switch counts stay
+                        // comparable across modes.
+                        let t = self.now();
+                        self.switches.push(SwitchEvent {
+                            t,
+                            group_start: start,
+                            p_from: 1,
+                            p_to: p,
+                            latency_s: 0.0,
+                        });
+                    }
+                    self.groups.get_mut(&start).unwrap().settled_mask = 0;
+                    let pending =
+                        std::mem::take(&mut self.groups.get_mut(&start).unwrap().tp_pending);
                     dirty_draining = true;
-                    for rid in pending {
+                    for h in pending {
+                        // A soft-preempted speculative request can finish
+                        // during the drain; its handle has gone stale
+                        // (generation check) and is skipped, not promoted.
+                        if self.active.get(h).is_none() {
+                            continue;
+                        }
                         // Admission: TP-layout headroom on every member
                         // (the request's own held commitment is discounted).
-                        let need_p = self.block_need(rid, p);
+                        let need_p = self.block_need(h, p);
                         let room = self.members(start, p).all(|e| {
-                            let held = self.active[&rid]
+                            let held = self
+                                .active
+                                .get(h)
+                                .expect("live")
                                 .committed
                                 .iter()
                                 .filter(|&&(ce, _)| ce == e)
@@ -909,40 +1214,41 @@ impl Cluster {
                             self.engine_committed[e] - held + need_p <= self.cfg.n_blocks - 1
                         });
                         if !room {
-                            self.groups.get_mut(&start).unwrap().tp_pending.push(rid);
+                            self.groups.get_mut(&start).unwrap().tp_pending.push(h);
                             continue;
                         }
                         // If it ran speculatively, drop its DP-layout KV and
                         // schedule the TP recompute (§5.2.2).
-                        let (was_spec, spec_home) = {
-                            let a = &self.active[&rid];
-                            (a.speculative, a.home)
+                        let (was_spec, spec_home, rid) = {
+                            let a = self.active.get(h).expect("live");
+                            (a.speculative, a.home, a.sr.id)
                         };
                         if was_spec {
                             self.adaptors[spec_home].release(rid)?;
-                            self.engine_active[spec_home].retain(|&r| r != rid);
+                            self.engine_active[spec_home].retain(|&x| x != h);
                             self.refresh_engine(spec_home);
-                            let a = self.active.get_mut(&rid).unwrap();
+                            let a = self.active.get_mut(h).expect("live");
+                            a.kvh.retain(|&(e, _)| e != spec_home);
                             a.speculative = false;
-                            // Recompute prompt + already-fed output tokens.
-                            a.forced = if a.emitted.is_empty() {
-                                vec![]
-                            } else {
-                                vec![*a.emitted.last().unwrap()]
-                            };
+                            // Recompute prompt + already-fed output tokens;
+                            // the emitted tail token is re-fed automatically
+                            // (decode always feeds `emitted.last()`).
                             a.pos = 0;
                             a.phase = Phase::Prefill;
                         }
-                        self.uncommit_all(rid);
+                        self.uncommit_all(h);
                         for e in self.members(start, p) {
-                            self.commit(rid, e, need_p);
-                            self.adaptors[e].register(rid, p)?;
+                            self.commit(h, e, need_p);
+                            let kh = self.adaptors[e].register(rid, p)?;
+                            self.active.get_mut(h).expect("live").kvh.push((e, kh));
                         }
-                        let a = self.active.get_mut(&rid).unwrap();
+                        let a = self.active.get_mut(h).expect("live");
                         a.mode_p = p;
                         a.home = start;
-                        self.groups.get_mut(&start).unwrap().tp_active.push(rid);
-                        recorder.on_first_sched(rid, self.now());
+                        a.backfill = false;
+                        let rec = a.rec;
+                        self.groups.get_mut(&start).unwrap().tp_active.push(h);
+                        recorder.on_first_sched_at(rec, self.now());
                     }
                 }
             }
@@ -1005,33 +1311,34 @@ impl Cluster {
             // Prefill-first within the group (chunked prefill).
             let pre = {
                 let g = &self.groups[&start];
-                g.tp_active.iter().copied().find(|r| {
-                    self.active.get(r).map(|a| a.phase == Phase::Prefill).unwrap_or(false)
+                g.tp_active.iter().copied().find(|&x| {
+                    self.active.get(x).map(|a| a.phase == Phase::Prefill).unwrap_or(false)
                 })
             };
-            if let Some(rid) = pre {
+            if let Some(hh) = pre {
                 for e in self.members(start, p) {
-                    let chunk = self.make_prefill_chunk(rid, e)?;
+                    let chunk = self.make_prefill_chunk(hh, e)?;
                     self.engines[e].send(EngineCmd::TpPrefill { p, chunk });
                     sc.pending_mask |= 1u64 << e;
                 }
                 sc.issued.push(Issued { home: start, p, is_prefill: true });
             } else {
-                sc.decode_rids.clear();
+                sc.decode_hs.clear();
                 {
                     let g = &self.groups[&start];
-                    for &r in g.tp_active.iter() {
-                        if self.active.get(&r).map(|a| a.phase == Phase::Decode).unwrap_or(false) {
-                            if sc.decode_rids.len() == self.b_dec {
+                    for &x in g.tp_active.iter() {
+                        if self.active.get(x).map(|a| a.phase == Phase::Decode).unwrap_or(false)
+                        {
+                            if sc.decode_hs.len() == self.b_dec {
                                 break;
                             }
-                            sc.decode_rids.push(r);
+                            sc.decode_hs.push(x);
                         }
                     }
                 }
-                if !sc.decode_rids.is_empty() {
+                if !sc.decode_hs.is_empty() {
                     for e in self.members(start, p) {
-                        let batch = self.make_decode_batch(e, &sc.decode_rids)?;
+                        let batch = self.make_decode_batch(e, &sc.decode_hs)?;
                         self.engines[e].send(EngineCmd::TpDecode { p, batch });
                         sc.pending_mask |= 1u64 << e;
                     }
@@ -1045,28 +1352,28 @@ impl Cluster {
             if sc.covered[e] {
                 continue;
             }
-            let mut pre: Option<u64> = None;
-            sc.decode_rids.clear();
-            for &r in &self.engine_active[e] {
-                let Some(a) = self.active.get(&r) else { continue };
-                if a.paused || a.phase == Phase::Done {
+            let mut pre: Option<SlabHandle> = None;
+            sc.decode_hs.clear();
+            for &x in &self.engine_active[e] {
+                let Some(a) = self.active.get(x) else { continue };
+                if a.paused {
                     continue;
                 }
                 if a.phase == Phase::Prefill {
                     if pre.is_none() {
-                        pre = Some(r);
+                        pre = Some(x);
                     }
-                } else if sc.decode_rids.len() < self.b_dec {
-                    sc.decode_rids.push(r);
+                } else if sc.decode_hs.len() < self.b_dec {
+                    sc.decode_hs.push(x);
                 }
             }
-            if let Some(rid) = pre {
-                let chunk = self.make_prefill_chunk(rid, e)?;
+            if let Some(hh) = pre {
+                let chunk = self.make_prefill_chunk(hh, e)?;
                 self.engines[e].send(EngineCmd::DpPrefill { chunk });
                 sc.pending_mask |= 1u64 << e;
                 sc.issued.push(Issued { home: e, p: 1, is_prefill: true });
-            } else if !sc.decode_rids.is_empty() {
-                let batch = self.make_decode_batch(e, &sc.decode_rids)?;
+            } else if !sc.decode_hs.is_empty() {
+                let batch = self.make_decode_batch(e, &sc.decode_hs)?;
                 self.engines[e].send(EngineCmd::DpDecode { batch });
                 sc.pending_mask |= 1u64 << e;
                 sc.issued.push(Issued { home: e, p: 1, is_prefill: false });
@@ -1096,15 +1403,14 @@ impl Cluster {
             let now = self.now();
             match (first.unwrap(), is_prefill) {
                 (EngineReply::LastLogits(logits), true) => {
-                    let rid = self.engine_scratch[home].prefill_chunk.rid;
-                    self.advance_prefill(rid, &logits, now, recorder)?;
+                    let hh = self.engine_scratch[home].issued_hs[0];
+                    self.advance_prefill(hh, &logits, now, recorder)?;
                 }
                 (EngineReply::Logits(rows), false) => {
-                    sc.publish_rids.clear();
-                    sc.publish_rids
-                        .extend(self.engine_scratch[home].decode_batch.iter().map(|s| s.rid));
-                    for (rid, row) in sc.publish_rids.iter().zip(rows) {
-                        self.advance_decode(*rid, &row, now, recorder)?;
+                    sc.publish_hs.clear();
+                    sc.publish_hs.extend_from_slice(&self.engine_scratch[home].issued_hs);
+                    for (hh, row) in sc.publish_hs.iter().zip(rows) {
+                        self.advance_decode(*hh, &row, now, recorder)?;
                     }
                 }
                 (r, _) => bail!("unexpected engine reply {r:?}"),
@@ -1113,22 +1419,43 @@ impl Cluster {
         Ok(true)
     }
 
-    /// Build the next prefill chunk for `rid` into engine `e`'s recycled
-    /// arena (Algorithm 1 step 4: allocate + slot mapping).  No allocation
-    /// once warm: tokens are indexed straight out of the request, the
-    /// block-table row is copied from the adaptor's cached row.
-    fn make_prefill_chunk(&mut self, rid: u64, e: usize) -> Result<Arc<PrefillChunk>> {
-        let (start, end, plen) = {
-            let a = &self.active[&rid];
+    /// Build the next prefill chunk into engine `e`'s recycled arena
+    /// (Algorithm 1 step 4: allocate + slot mapping).  No allocation once
+    /// warm: tokens are indexed straight out of the request, the block-table
+    /// row is copied from the adaptor's cached row via the KV handle
+    /// resolved at bind time — every lookup here is O(1).
+    fn make_prefill_chunk(&mut self, h: SlabHandle, e: usize) -> Result<Arc<PrefillChunk>> {
+        let (start, end, plen, rid, kh) = {
+            let a = self
+                .active
+                .get(h)
+                .ok_or_else(|| anyhow::anyhow!("prefill for finished request"))?;
             let full_len = a.sr.prompt.len() + a.emitted.len().saturating_sub(1);
             let start = a.pos;
-            (start, (start + self.c_prefill).min(full_len), a.sr.prompt.len())
+            let kh = a
+                .kvh
+                .iter()
+                .find(|&&(ke, _)| ke == e)
+                .map(|&(_, kh)| kh)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has no kv registration on engine {e}", a.sr.id)
+                })?;
+            (
+                start,
+                (start + self.c_prefill).min(full_len),
+                a.sr.prompt.len(),
+                a.sr.id,
+                kh,
+            )
         };
         anyhow::ensure!(end > start, "empty prefill chunk for {rid}");
-        self.adaptors[e].ensure_capacity(rid, end)?;
+        self.adaptors[e].ensure_capacity_h(kh, end)?;
         {
-            let a = &self.active[&rid];
-            let ch = Arc::make_mut(&mut self.engine_scratch[e].prefill_chunk);
+            let a = self.active.get(h).expect("live");
+            let scratch = &mut self.engine_scratch[e];
+            scratch.issued_hs.clear();
+            scratch.issued_hs.push(h);
+            let ch = Arc::make_mut(&mut scratch.prefill_chunk);
             ch.rid = rid;
             ch.start = start;
             ch.tokens.clear();
@@ -1146,41 +1473,58 @@ impl Cluster {
             let ch = Arc::make_mut(&mut self.engine_scratch[e].prefill_chunk);
             ch.slot_ids.clear();
             for i in start..end {
-                ch.slot_ids.push(self.adaptors[e].slot(rid, i)?);
+                ch.slot_ids.push(self.adaptors[e].slot_h(kh, i)?);
             }
             ch.table_row.clear();
-            ch.table_row.extend_from_slice(self.adaptors[e].table_row_ref(rid)?);
+            ch.table_row.extend_from_slice(self.adaptors[e].table_row_ref_h(kh)?);
         }
         Ok(self.engine_scratch[e].prefill_chunk.clone())
     }
 
     /// Build a decode batch for engine `e` into its recycled arena.
-    fn make_decode_batch(&mut self, e: usize, rids: &[u64]) -> Result<Arc<Vec<DecodeSlot>>> {
+    fn make_decode_batch(&mut self, e: usize, hs: &[SlabHandle]) -> Result<Arc<Vec<DecodeSlot>>> {
         // Grow/shrink the slot list, recycling retired slots (and their row
-        // buffers) through the spare pool.
+        // buffers) through the spare pool; remember the issue order for the
+        // publish pass.
         {
             let scratch = &mut self.engine_scratch[e];
             let slots = Arc::make_mut(&mut scratch.decode_batch);
-            while slots.len() > rids.len() {
+            while slots.len() > hs.len() {
                 scratch.spare_slots.push(slots.pop().unwrap());
             }
-            while slots.len() < rids.len() {
+            while slots.len() < hs.len() {
                 slots.push(scratch.spare_slots.pop().unwrap_or_default());
             }
+            scratch.issued_hs.clear();
+            scratch.issued_hs.extend_from_slice(hs);
         }
-        for (i, &rid) in rids.iter().enumerate() {
-            let (token, pos) = {
-                let a = &self.active[&rid];
+        for (i, &hh) in hs.iter().enumerate() {
+            let (rid, token, pos, kh) = {
+                let a = self
+                    .active
+                    .get(hh)
+                    .ok_or_else(|| anyhow::anyhow!("decode for finished request"))?;
                 let token = *a
                     .emitted
                     .last()
                     .ok_or_else(|| anyhow::anyhow!("decode with no emitted token"))?;
-                (token, a.pos)
+                let kh = a
+                    .kvh
+                    .iter()
+                    .find(|&&(ke, _)| ke == e)
+                    .map(|&(_, kh)| kh)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "request {} has no kv registration on engine {e}",
+                            a.sr.id
+                        )
+                    })?;
+                (a.sr.id, token, a.pos, kh)
             };
-            self.adaptors[e].ensure_capacity(rid, pos + 1)?;
-            self.adaptors[e].set_seq_len(rid, pos + 1)?;
-            let slot_id = self.adaptors[e].slot(rid, pos)?;
-            let row = self.adaptors[e].table_row_ref(rid)?;
+            self.adaptors[e].ensure_capacity_h(kh, pos + 1)?;
+            self.adaptors[e].set_seq_len_h(kh, pos + 1)?;
+            let slot_id = self.adaptors[e].slot_h(kh, pos)?;
+            let row = self.adaptors[e].table_row_ref_h(kh)?;
             let slots = Arc::make_mut(&mut self.engine_scratch[e].decode_batch);
             let s = &mut slots[i];
             s.rid = rid;
@@ -1193,21 +1537,22 @@ impl Cluster {
         Ok(self.engine_scratch[e].decode_batch.clone())
     }
 
-    fn prefill_total_len(&self, rid: u64) -> usize {
-        let a = &self.active[&rid];
+    fn prefill_total_len(&self, h: SlabHandle) -> usize {
+        let a = self.active.get(h).expect("live");
         a.sr.prompt.len() + a.emitted.len().saturating_sub(1)
     }
 
     fn advance_prefill(
         &mut self,
-        rid: u64,
+        h: SlabHandle,
         logits: &[f32],
         now: f64,
         recorder: &mut Recorder,
     ) -> Result<()> {
-        let total = self.prefill_total_len(rid);
-        let a = self.active.get_mut(&rid).unwrap();
-        let chunk_len = (total - a.pos).min(self.c_prefill);
+        let total = self.prefill_total_len(h);
+        let c_prefill = self.c_prefill;
+        let a = self.active.get_mut(h).expect("live");
+        let chunk_len = (total - a.pos).min(c_prefill);
         a.pos += chunk_len;
         if a.pos < total {
             return Ok(()); // more chunks to go
@@ -1217,57 +1562,61 @@ impl Cluster {
         if a.emitted.is_empty() {
             let tok = argmax(logits);
             a.emitted.push(tok);
-            recorder.on_token(rid, now);
-            self.maybe_finish(rid, now, recorder)?;
+            let rec = a.rec;
+            recorder.on_token_at(rec, now);
+            self.maybe_finish(h, now, recorder)?;
         }
-        // else: soft-preempt recompute — logits discarded, the already-
-        // emitted tail token is fed next via `forced` semantics (it is the
-        // last element of `emitted`, which decode feeds automatically).
+        // else: soft-preempt recompute — logits discarded; the already-
+        // emitted tail token is the last element of `emitted`, which the
+        // decode path feeds automatically.
         Ok(())
     }
 
     fn advance_decode(
         &mut self,
-        rid: u64,
+        h: SlabHandle,
         logits: &[f32],
         now: f64,
         recorder: &mut Recorder,
     ) -> Result<()> {
-        let a = self.active.get_mut(&rid).unwrap();
+        let a = self.active.get_mut(h).expect("live");
         a.pos += 1; // the fed token's KV is now cached
         let tok = argmax(logits);
         a.emitted.push(tok);
-        recorder.on_token(rid, now);
-        self.maybe_finish(rid, now, recorder)
+        let rec = a.rec;
+        recorder.on_token_at(rec, now);
+        self.maybe_finish(h, now, recorder)
     }
 
-    fn maybe_finish(&mut self, rid: u64, now: f64, recorder: &mut Recorder) -> Result<()> {
-        let (done, mode_p, home) = {
-            let a = &self.active[&rid];
+    /// Terminal handling: publish the output, release every KV registration
+    /// through the handles captured at bind time, and remove the slab entry
+    /// — invalidating every outstanding copy of the handle (engine lists
+    /// are cleaned here; a stale copy parked in `tp_pending` is skipped by
+    /// the generation check at promotion).
+    fn maybe_finish(&mut self, h: SlabHandle, now: f64, recorder: &mut Recorder) -> Result<()> {
+        let (done, mode_p, home, rec) = {
+            let a = self.active.get(h).expect("live");
             let done = a.emitted.len() >= a.sr.max_new || a.emitted.last() == Some(&EOS);
-            (done, a.mode_p, a.home)
+            (done, a.mode_p, a.home, a.rec)
         };
         if !done {
             return Ok(());
         }
-        let a = self.active.get_mut(&rid).unwrap();
-        a.phase = Phase::Done;
-        let emitted = a.emitted.clone();
-        recorder.on_finish(rid, now);
-        self.outputs.insert(rid, emitted);
-        self.uncommit_all(rid);
-        if mode_p <= 1 {
-            self.adaptors[home].release(rid)?;
-            self.engine_active[home].retain(|&r| r != rid);
-            self.refresh_engine(home);
-        } else {
-            for e in self.members(home, mode_p) {
-                self.adaptors[e].release(rid)?;
-            }
-            if let Some(g) = self.groups.get_mut(&home) {
-                g.tp_active.retain(|&r| r != rid);
-            }
+        recorder.on_finish_at(rec, now);
+        self.uncommit_all(h);
+        let kvh = std::mem::take(&mut self.active.get_mut(h).expect("live").kvh);
+        for &(e, kh) in kvh.iter() {
+            self.adaptors[e].release_h(kh)?;
         }
+        if mode_p <= 1 {
+            self.engine_active[home].retain(|&x| x != h);
+            self.refresh_engine(home);
+        } else if let Some(g) = self.groups.get_mut(&home) {
+            g.tp_active.retain(|&x| x != h);
+        }
+        let a = self.active.remove(h).expect("live");
+        self.by_id.remove(&a.sr.id);
+        self.outputs.push((a.sr.id, a.emitted));
         Ok(())
     }
 

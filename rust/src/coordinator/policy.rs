@@ -47,6 +47,24 @@ pub trait Policy: Send {
         tp_demand: Option<usize>,
         snap: &Snapshot,
     ) -> ModeDecision;
+
+    /// Per-request decision with the request's id attached.  The scheduler
+    /// re-decides every waiting request each iteration, so a request that
+    /// cannot bind is decided many times; stateless policies don't care (the
+    /// default forwards to [`Policy::decide`]) but stateful ones — e.g. the
+    /// control plane's telemetry tap — override this to deduplicate repeated
+    /// attempts by id instead of over-counting requeues as fresh arrivals.
+    fn decide_for(
+        &mut self,
+        _rid: u64,
+        prompt_len: usize,
+        output_len_hint: usize,
+        priority: Priority,
+        tp_demand: Option<usize>,
+        snap: &Snapshot,
+    ) -> ModeDecision {
+        self.decide(prompt_len, output_len_hint, priority, tp_demand, snap)
+    }
 }
 
 /// FLYING SERVING's workload-aware policy:

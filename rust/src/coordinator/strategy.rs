@@ -42,3 +42,46 @@ impl std::str::FromStr for Strategy {
         }
     }
 }
+
+/// Switch-transition tuning (ISSUE 3): how aggressively the coordinator
+/// keeps capacity busy *through* a DP→TP transition.
+///
+/// With `backfill = false` (the default) the transition path is exactly the
+/// PR-1/2 behavior: once a TP bind is pending on a group, every member is
+/// masked out of elastic assignment and the group switches in one shot when
+/// the last resident request drains — the differential harness stays
+/// byte-identical.
+///
+/// With `backfill = true`:
+///
+/// * **Drain backfill** — draining members may still accept elastic DP
+///   requests whose predicted cost (in scheduler steps: prefill chunks
+///   charged twice — prefill-first issue displaces resident decodes —
+///   plus decode tokens) fits inside the group's drain horizon (the largest
+///   remaining-step count among resident requests), bounded to
+///   `max_backfill_per_engine` concurrent backfill requests per member.
+///   Capacity that would idle behind the slowest straggler serves short
+///   requests instead.
+/// * **Incremental settle** — members whose own work has drained are
+///   switched into the target TP mode one by one instead of waiting for the
+///   last straggler, so the final promotion only pays the stragglers' mode
+///   RPCs.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchConfig {
+    pub backfill: bool,
+    /// Max concurrently-resident backfill requests per draining engine.
+    pub max_backfill_per_engine: usize,
+    /// Admission slack: a request is backfillable when its predicted step
+    /// count is <= `backfill_margin` x the drain-horizon step count.
+    pub backfill_margin: f64,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig {
+            backfill: false,
+            max_backfill_per_engine: 1,
+            backfill_margin: 1.0,
+        }
+    }
+}

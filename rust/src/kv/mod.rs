@@ -14,10 +14,29 @@
 //! device-resident PJRT buffers owned by the engines.  `slot()` is the
 //! "stride and capacity" information the worker hands the attention kernel
 //! (§4.2.3) — here surfaced as flat slot ids and padded block-table rows.
+//!
+//! # Hot-path discipline
+//!
+//! Per-request state lives in a generational dense slab
+//! ([`crate::util::slab::Slab`]); [`register`](KvCacheAdaptor::register)
+//! returns a [`KvHandle`] that the coordinator resolves **once at bind
+//! time** and then uses for every per-step access — `slot_h`,
+//! `table_row_ref_h`, `ensure_capacity_h`, `set_seq_len_h` are O(1) array
+//! indexes, no id-map walk.  The id-keyed methods remain as thin wrappers
+//! over a `BTreeMap<u64, KvHandle>` side index for cold paths (registration,
+//! release, tests, external tooling); `check_invariants` asserts the side
+//! index and the slab agree at all times.
 
 use anyhow::{bail, Result};
 
 use crate::model::ModelCfg;
+use crate::util::slab::{Slab, SlabHandle};
+
+/// Generation-checked O(1) handle to one request's KV state, returned by
+/// [`KvCacheAdaptor::register`].  Each adaptor instance hands out its own
+/// handles (TP members register the same rid independently, so the same
+/// request has one handle *per member adaptor*).
+pub type KvHandle = SlabHandle;
 
 /// Reserved physical block: padded batch slots write their (masked) tokens
 /// here so kernels need no conditionals.  Never allocated to a request.
@@ -25,6 +44,7 @@ pub const TRASH_BLOCK: u32 = 0;
 
 #[derive(Clone, Debug)]
 pub struct RequestKv {
+    pub rid: u64,         // external request id (for invariants/iteration)
     pub layout_p: usize,  // TP degree the KV bytes were written under
     pub blocks: Vec<u32>, // physical block ids, logical order
     pub seq_len: usize,   // tokens currently cached
@@ -41,7 +61,9 @@ pub struct RequestKv {
 pub struct KvCacheAdaptor {
     cfg: ModelCfg,
     free: Vec<u32>, // LIFO free list of physical block ids
-    requests: std::collections::BTreeMap<u64, RequestKv>,
+    requests: Slab<RequestKv>,
+    /// rid -> handle side index (cold paths only; hot paths carry handles).
+    by_id: std::collections::BTreeMap<u64, KvHandle>,
 }
 
 impl KvCacheAdaptor {
@@ -51,7 +73,8 @@ impl KvCacheAdaptor {
         KvCacheAdaptor {
             cfg,
             free,
-            requests: Default::default(),
+            requests: Slab::new(),
+            by_id: Default::default(),
         }
     }
 
@@ -67,54 +90,72 @@ impl KvCacheAdaptor {
         (self.cfg.n_blocks - 1) - self.free.len()
     }
 
+    /// Handle for a registered rid (cold path; hot paths keep the handle
+    /// returned by [`Self::register`]).
+    pub fn handle_of(&self, rid: u64) -> Option<KvHandle> {
+        self.by_id.get(&rid).copied()
+    }
+
     pub fn request(&self, rid: u64) -> Option<&RequestKv> {
-        self.requests.get(&rid)
+        self.by_id.get(&rid).and_then(|&h| self.requests.get(h))
     }
 
-    pub fn active_requests(&self) -> impl Iterator<Item = (&u64, &RequestKv)> {
-        self.requests.iter()
+    pub fn request_h(&self, h: KvHandle) -> Option<&RequestKv> {
+        self.requests.get(h)
     }
 
-    /// Register a request under layout `p` (no blocks yet).
-    pub fn register(&mut self, rid: u64, p: usize) -> Result<()> {
+    pub fn active_requests(&self) -> impl Iterator<Item = (u64, &RequestKv)> {
+        self.requests.iter().map(|(_, r)| (r.rid, r))
+    }
+
+    /// Register a request under layout `p` (no blocks yet).  The returned
+    /// handle is the O(1) key for every subsequent hot-path access.
+    pub fn register(&mut self, rid: u64, p: usize) -> Result<KvHandle> {
         if !self.cfg.supports_tp(p) {
             bail!("unsupported TP degree {p}");
         }
-        if self.requests.contains_key(&rid) {
+        if self.by_id.contains_key(&rid) {
             bail!("request {rid} already registered");
         }
-        self.requests.insert(
+        let h = self.requests.insert(RequestKv {
             rid,
-            RequestKv {
-                layout_p: p,
-                blocks: Vec::new(),
-                seq_len: 0,
-                paused: false,
-                row: vec![TRASH_BLOCK as i32; self.cfg.n_blocks],
-            },
-        );
-        Ok(())
+            layout_p: p,
+            blocks: Vec::new(),
+            seq_len: 0,
+            paused: false,
+            row: vec![TRASH_BLOCK as i32; self.cfg.n_blocks],
+        });
+        self.by_id.insert(rid, h);
+        Ok(h)
     }
 
-    /// Grow `rid`'s block list so it can hold `n_tokens` under its layout.
-    /// Fails (leaving state unchanged) if the pool can't supply the blocks —
-    /// the scheduler's OOM signal for Use Case 3 routing.
-    pub fn ensure_capacity(&mut self, rid: u64, n_tokens: usize) -> Result<()> {
-        let req = match self.requests.get(&rid) {
-            Some(r) => r,
-            None => bail!("request {rid} not registered"),
+    fn resolve(&self, rid: u64) -> Result<KvHandle> {
+        self.by_id
+            .get(&rid)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+    }
+
+    /// Grow the request's block list so it can hold `n_tokens` under its
+    /// layout.  Fails (leaving state unchanged) if the pool can't supply the
+    /// blocks — the scheduler's OOM signal for Use Case 3 routing.  O(new
+    /// blocks) — zero work when capacity already suffices.
+    pub fn ensure_capacity_h(&mut self, h: KvHandle, n_tokens: usize) -> Result<()> {
+        let (need, have, rid, layout_p) = match self.requests.get(h) {
+            Some(req) => {
+                let bt = self.cfg.block_tokens(req.layout_p);
+                (n_tokens.div_ceil(bt), req.blocks.len(), req.rid, req.layout_p)
+            }
+            None => bail!("stale kv handle (request gone)"),
         };
-        let bt = self.cfg.block_tokens(req.layout_p);
-        let need = n_tokens.div_ceil(bt);
         if need > self.cfg.n_blocks - 1 {
             bail!(
                 "request {rid} needs {need} blocks > pool capacity {} (max ctx at p={} is {})",
                 self.cfg.n_blocks - 1,
-                req.layout_p,
-                self.cfg.tp_token_capacity(req.layout_p)
+                layout_p,
+                self.cfg.tp_token_capacity(layout_p)
             );
         }
-        let have = req.blocks.len();
         if need > have {
             let short = need - have;
             if short > self.free.len() {
@@ -123,7 +164,7 @@ impl KvCacheAdaptor {
                     self.free.len()
                 );
             }
-            let req = self.requests.get_mut(&rid).unwrap();
+            let req = self.requests.get_mut(h).unwrap();
             for _ in 0..short {
                 let b = self.free.pop().unwrap();
                 // Incremental row maintenance: only the newly-granted
@@ -135,12 +176,18 @@ impl KvCacheAdaptor {
         Ok(())
     }
 
-    /// Record that `rid` now caches `seq_len` tokens (post-append).
-    pub fn set_seq_len(&mut self, rid: u64, seq_len: usize) -> Result<()> {
+    /// Id-keyed convenience form of [`Self::ensure_capacity_h`].
+    pub fn ensure_capacity(&mut self, rid: u64, n_tokens: usize) -> Result<()> {
+        let h = self.resolve(rid)?;
+        self.ensure_capacity_h(h, n_tokens)
+    }
+
+    /// Record that the request now caches `seq_len` tokens (post-append).
+    pub fn set_seq_len_h(&mut self, h: KvHandle, seq_len: usize) -> Result<()> {
         let req = self
             .requests
-            .get_mut(&rid)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+            .get_mut(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
         let bt = self.cfg.block_tokens(req.layout_p);
         if seq_len.div_ceil(bt) > req.blocks.len() {
             bail!("seq_len {seq_len} exceeds allocated capacity");
@@ -149,13 +196,19 @@ impl KvCacheAdaptor {
         Ok(())
     }
 
-    /// Flat slot id for token position `pos` of `rid` — the kernel-facing
-    /// "stride and capacity" mapping (§4.2.3).
-    pub fn slot(&self, rid: u64, pos: usize) -> Result<u32> {
+    pub fn set_seq_len(&mut self, rid: u64, seq_len: usize) -> Result<()> {
+        let h = self.resolve(rid)?;
+        self.set_seq_len_h(h, seq_len)
+    }
+
+    /// Flat slot id for token position `pos` — the kernel-facing "stride and
+    /// capacity" mapping (§4.2.3).  O(1): one slab index + one block index.
+    #[inline]
+    pub fn slot_h(&self, h: KvHandle, pos: usize) -> Result<u32> {
         let req = self
             .requests
-            .get(&rid)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+            .get(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
         let bt = self.cfg.block_tokens(req.layout_p);
         let blk = *req
             .blocks
@@ -164,15 +217,26 @@ impl KvCacheAdaptor {
         Ok(blk * bt as u32 + (pos % bt) as u32)
     }
 
+    pub fn slot(&self, rid: u64, pos: usize) -> Result<u32> {
+        let h = self.resolve(rid)?;
+        self.slot_h(h, pos)
+    }
+
     /// Borrowed view of the block-table row, padded to the static artifact
     /// width (n_blocks).  This is the hot-path accessor: the row is cached
-    /// and maintained incrementally, so this is a pointer handoff — callers
-    /// copy it straight into their step buffers without any rebuild.
-    pub fn table_row_ref(&self, rid: u64) -> Result<&[i32]> {
+    /// and maintained incrementally, so this is an O(1) pointer handoff —
+    /// callers copy it straight into their step buffers without any rebuild.
+    #[inline]
+    pub fn table_row_ref_h(&self, h: KvHandle) -> Result<&[i32]> {
         self.requests
-            .get(&rid)
+            .get(h)
             .map(|req| req.row.as_slice())
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))
+    }
+
+    pub fn table_row_ref(&self, rid: u64) -> Result<&[i32]> {
+        let h = self.resolve(rid)?;
+        self.table_row_ref_h(h)
     }
 
     /// Block-table row padded to the static artifact width (n_blocks).
@@ -184,31 +248,28 @@ impl KvCacheAdaptor {
     /// Hard Preempt: pause a request in place.  Its blocks stay resident
     /// under their original layout tag; O(1), no data movement (§5.2.3).
     pub fn pause(&mut self, rid: u64) -> Result<()> {
-        self.requests
-            .get_mut(&rid)
-            .map(|r| r.paused = true)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+        let h = self.resolve(rid)?;
+        self.requests.get_mut(h).unwrap().paused = true;
+        Ok(())
     }
 
     pub fn resume(&mut self, rid: u64) -> Result<()> {
-        self.requests
-            .get_mut(&rid)
-            .map(|r| r.paused = false)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))
+        let h = self.resolve(rid)?;
+        self.requests.get_mut(h).unwrap().paused = false;
+        Ok(())
     }
 
     /// Soft Preempt bind: the request's speculative DP-layout KV is
     /// incompatible with the target TP layout; drop its blocks and re-tag so
     /// prefill re-runs under the new layout (§5.2.2).  Returns the number of
-    /// tokens that must be recomputed.
+    /// tokens that must be recomputed.  The handle stays valid (same
+    /// registration, new layout tag).
     pub fn relayout_for_recompute(&mut self, rid: u64, new_p: usize) -> Result<usize> {
         if !self.cfg.supports_tp(new_p) {
             bail!("unsupported TP degree {new_p}");
         }
-        let req = self
-            .requests
-            .get_mut(&rid)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+        let h = self.resolve(rid)?;
+        let req = self.requests.get_mut(h).unwrap();
         let recompute = req.seq_len;
         let blocks = std::mem::take(&mut req.blocks);
         req.seq_len = 0;
@@ -218,14 +279,21 @@ impl KvCacheAdaptor {
         Ok(recompute)
     }
 
-    /// Finish/abort a request: return its blocks to the pool.
-    pub fn release(&mut self, rid: u64) -> Result<()> {
+    /// Finish/abort a request: return its blocks to the pool and invalidate
+    /// every copy of its handle.
+    pub fn release_h(&mut self, h: KvHandle) -> Result<()> {
         let req = self
             .requests
-            .remove(&rid)
-            .ok_or_else(|| anyhow::anyhow!("request {rid} not registered"))?;
+            .remove(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
+        self.by_id.remove(&req.rid);
         self.free.extend(req.blocks.into_iter().rev());
         Ok(())
+    }
+
+    pub fn release(&mut self, rid: u64) -> Result<()> {
+        let h = self.resolve(rid)?;
+        self.release_h(h)
     }
 
     /// The mode-switch primitive measured in Table 2: binding/releasing a
@@ -238,7 +306,9 @@ impl KvCacheAdaptor {
     }
 
     /// Sanity invariant (checked in tests): every block is either free or
-    /// owned by exactly one request, and block 0 is owned by nobody.
+    /// owned by exactly one request, block 0 is owned by nobody, the cached
+    /// rows agree with the authoritative block lists, and the id side index
+    /// agrees with the slab (same population, handle→rid→handle closes).
     pub fn check_invariants(&self) -> Result<()> {
         let mut seen = vec![0u8; self.cfg.n_blocks];
         seen[TRASH_BLOCK as usize] = 1;
@@ -251,7 +321,17 @@ impl KvCacheAdaptor {
             }
             seen[b as usize] = 1;
         }
-        for (rid, req) in &self.requests {
+        let mut n_live = 0usize;
+        for (h, req) in self.requests.iter() {
+            n_live += 1;
+            let rid = req.rid;
+            // Handle/id agreement: the side index must map this entry's rid
+            // back to exactly this handle.
+            match self.by_id.get(&rid) {
+                Some(&hid) if hid == h => {}
+                Some(_) => bail!("request {rid}: side index maps to a different handle"),
+                None => bail!("request {rid}: live in slab but missing from side index"),
+            }
             let bt = self.cfg.block_tokens(req.layout_p);
             if req.seq_len > req.blocks.len() * bt {
                 bail!("request {rid} seq_len beyond capacity");
@@ -275,6 +355,18 @@ impl KvCacheAdaptor {
                 if cell != want {
                     bail!("request {rid} row cache stale at {i}: {cell} != {want}");
                 }
+            }
+        }
+        if n_live != self.by_id.len() {
+            bail!(
+                "side index size {} != live slab entries {n_live}",
+                self.by_id.len()
+            );
+        }
+        for (&rid, &h) in &self.by_id {
+            match self.requests.get(h) {
+                Some(req) if req.rid == rid => {}
+                _ => bail!("side index entry {rid} points at a stale handle"),
             }
         }
         if seen.iter().any(|&s| s == 0) {
@@ -333,6 +425,44 @@ mod tests {
     }
 
     #[test]
+    fn handle_paths_agree_with_id_paths() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h = a.register(7, 1).unwrap();
+        assert_eq!(a.handle_of(7), Some(h));
+        a.ensure_capacity_h(h, 9).unwrap();
+        a.set_seq_len_h(h, 9).unwrap();
+        for pos in 0..9 {
+            assert_eq!(a.slot_h(h, pos).unwrap(), a.slot(7, pos).unwrap());
+        }
+        assert_eq!(a.table_row_ref_h(h).unwrap(), a.table_row_ref(7).unwrap());
+        a.check_invariants().unwrap();
+        a.release_h(h).unwrap();
+        // Every copy of the handle is dead after release; the id is free for
+        // re-registration and gets a fresh handle.
+        assert!(a.slot_h(h, 0).is_err());
+        assert!(a.table_row_ref_h(h).is_err());
+        let h2 = a.register(7, 2).unwrap();
+        assert_ne!(h, h2);
+        assert!(a.request_h(h).is_none());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_handle_does_not_alias_reused_slot() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 4).unwrap();
+        a.release_h(h1).unwrap();
+        // New registration reuses the slab slot; the old handle must not
+        // see it.
+        let h2 = a.register(2, 1).unwrap();
+        assert_eq!(h1.index(), h2.index());
+        assert!(a.request_h(h1).is_none());
+        assert!(a.slot_h(h1, 0).is_err());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
     fn oom_is_clean_and_state_preserving() {
         let mut a = KvCacheAdaptor::new(cfg());
         a.register(1, 1).unwrap();
@@ -378,7 +508,7 @@ mod tests {
     #[test]
     fn soft_preempt_relayout_frees_and_retags() {
         let mut a = KvCacheAdaptor::new(cfg());
-        a.register(1, 1).unwrap();
+        let h = a.register(1, 1).unwrap();
         a.ensure_capacity(1, 12).unwrap();
         a.set_seq_len(1, 12).unwrap();
         let free_before = a.free_blocks();
@@ -387,6 +517,8 @@ mod tests {
         assert_eq!(a.request(1).unwrap().layout_p, 4);
         assert_eq!(a.request(1).unwrap().seq_len, 0);
         assert_eq!(a.free_blocks(), free_before + 3);
+        // Relayout keeps the registration: the handle survives.
+        assert!(a.request_h(h).is_some());
         a.check_invariants().unwrap();
     }
 
@@ -527,6 +659,133 @@ mod tests {
             let b2: std::collections::BTreeSet<u32> =
                 a.request(2).unwrap().blocks.iter().copied().collect();
             crate::prop_assert!(b1.is_disjoint(&b2), "block overlap");
+            Ok(())
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Slab-vs-BTreeMap oracle: drive the slab-backed adaptor and a naive
+    // BTreeMap model through the same randomized op sequence and demand
+    // observational equality on every query surface (ISSUE 3 satellite).
+    // -----------------------------------------------------------------
+
+    /// The pre-slab adaptor's semantics, restated as a trivially-correct
+    /// BTreeMap model (block grants replayed from a shared free-list
+    /// discipline so physical ids match the adaptor's exactly).
+    struct MapModel {
+        cfg: ModelCfg,
+        free: Vec<u32>,
+        reqs: std::collections::BTreeMap<u64, (usize, Vec<u32>, usize)>, // p, blocks, seq_len
+    }
+
+    impl MapModel {
+        fn new(cfg: ModelCfg) -> Self {
+            let free = (1..cfg.n_blocks as u32).rev().collect();
+            MapModel { cfg, free, reqs: Default::default() }
+        }
+
+        fn register(&mut self, rid: u64, p: usize) -> Result<(), String> {
+            if self.reqs.contains_key(&rid) {
+                return Err("already registered".into());
+            }
+            self.reqs.insert(rid, (p, Vec::new(), 0));
+            Ok(())
+        }
+
+        fn ensure_capacity(&mut self, rid: u64, n: usize) -> Result<(), String> {
+            let (p, blocks, _) = self.reqs.get(&rid).ok_or("not registered")?;
+            let bt = self.cfg.block_tokens(*p);
+            let need = n.div_ceil(bt);
+            if need > self.cfg.n_blocks - 1 {
+                return Err("over pool capacity".into());
+            }
+            let short = need.saturating_sub(blocks.len());
+            if short > self.free.len() {
+                return Err("pool exhausted".into());
+            }
+            let (_, blocks, _) = self.reqs.get_mut(&rid).unwrap();
+            for _ in 0..short {
+                blocks.push(self.free.pop().unwrap());
+            }
+            Ok(())
+        }
+
+        fn slot(&self, rid: u64, pos: usize) -> Option<u32> {
+            let (p, blocks, _) = self.reqs.get(&rid)?;
+            let bt = self.cfg.block_tokens(*p);
+            blocks.get(pos / bt).map(|&b| b * bt as u32 + (pos % bt) as u32)
+        }
+
+        fn table_row(&self, rid: u64) -> Option<Vec<i32>> {
+            let (_, blocks, _) = self.reqs.get(&rid)?;
+            let mut row = vec![TRASH_BLOCK as i32; self.cfg.n_blocks];
+            for (i, &b) in blocks.iter().enumerate() {
+                row[i] = b as i32;
+            }
+            Some(row)
+        }
+
+        fn release(&mut self, rid: u64) -> Result<(), String> {
+            let (_, blocks, _) = self.reqs.remove(&rid).ok_or("not registered")?;
+            self.free.extend(blocks.into_iter().rev());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn prop_slab_adaptor_matches_btreemap_oracle() {
+        prop_check("slab adaptor ≡ BTreeMap oracle", 120, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            let mut m = MapModel::new(c.clone());
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_rid = 0u64;
+            for _ in 0..g.usize(1, 80) {
+                match g.usize(0, 2) {
+                    0 => {
+                        let p = *g.choose(&[1usize, 2, 4]);
+                        next_rid += 1;
+                        let ra = a.register(next_rid, p).is_ok();
+                        let rm = m.register(next_rid, p).is_ok();
+                        crate::prop_assert_eq!(ra, rm);
+                        if ra {
+                            live.push(next_rid);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let rid = *g.choose(&live);
+                        let want = g.usize(0, 70);
+                        let ra = a.ensure_capacity(rid, want).is_ok();
+                        let rm = m.ensure_capacity(rid, want).is_ok();
+                        crate::prop_assert_eq!(ra, rm);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.raw_usize(0, live.len() - 1);
+                        let rid = live.swap_remove(i);
+                        a.release(rid).map_err(|e| e.to_string())?;
+                        m.release(rid)?;
+                    }
+                    _ => {}
+                }
+                // Observational equality on every query surface.
+                crate::prop_assert_eq!(a.free_blocks(), m.free.len());
+                for &rid in &live {
+                    crate::prop_assert_eq!(
+                        a.table_row(rid).ok(),
+                        m.table_row(rid)
+                    );
+                    let n_tok =
+                        m.reqs[&rid].1.len() * c.block_tokens(m.reqs[&rid].0);
+                    for pos in (0..n_tok).step_by(3) {
+                        crate::prop_assert_eq!(a.slot(rid, pos).ok(), m.slot(rid, pos));
+                    }
+                    crate::prop_assert!(
+                        a.slot(rid, n_tok).is_err(),
+                        "slot past capacity must fail"
+                    );
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
             Ok(())
         });
     }

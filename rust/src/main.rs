@@ -65,6 +65,7 @@ fn replay(_cfg: &ServeConfig) -> Result<()> {
 fn serve(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    cluster.set_switch_config(cfg.make_switch_config());
     let mut policy = cfg.make_policy()?;
     flying_serving::server::serve(&mut cluster, policy.as_mut(), cfg.strategy, &cfg.listen)
 }
@@ -74,6 +75,7 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
     use flying_serving::workload::synth_prompt_tokens;
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
+    cluster.set_switch_config(cfg.make_switch_config());
     let mut policy = cfg.make_policy()?;
 
     let wl = WorkloadCfg::paper_scaled(cfg.seed, cfg.n_requests);
@@ -124,21 +126,26 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
         println!("== {} ==", model.name);
         let cm = CostModel::new(HwSpec::default(), model);
         let trace = generate(&WorkloadCfg::paper_full(cfg.seed, cfg.n_requests.max(500)));
+        let sim_cfg = SimConfig {
+            switch_backfill: cfg.switch_backfill,
+            ..SimConfig::default()
+        };
         for sys in [
             SimSystem::StaticDp,
             SimSystem::StaticTp(4),
             SimSystem::Shift,
             SimSystem::Flying,
         ] {
-            let o = simulate(sys, &cm, &trace, &SimConfig::default());
+            let o = simulate(sys, &cm, &trace, &sim_cfg);
             let s = o.recorder.summary(None);
             println!(
-                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s rejected={}",
+                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s switch-stall={:6.1}s rejected={}",
                 sys.label(),
                 s.mean_ttft,
                 s.p90_ttft,
                 s.p50_tpot * 1e3,
                 s.peak_throughput,
+                o.switch_stall_s,
                 o.rejected.len()
             );
         }

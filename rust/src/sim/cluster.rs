@@ -58,6 +58,18 @@ pub struct SimConfig {
     pub max_batch: usize,
     /// Scheduling-iteration quantum lower bound (control-plane heartbeat).
     pub heartbeat_s: f64,
+    /// Drain backfill + incremental settle (ISSUE 3).  Off (default): a
+    /// merge idles every chosen member from its free point until the
+    /// slowest straggler's step completes plus the live-switch latency —
+    /// byte-identical to `sim::reference`.  On: chosen members become
+    /// *backfill shells* that keep executing through the transition window
+    /// (resident decode steps that fit before the settle point, plus
+    /// bounded new elastic work whose exact solo-run completion fits the
+    /// horizon) and fold into the forming TP group per-member at their
+    /// settle stamp.  Outcomes may legitimately differ from the reference
+    /// when on; `SimOutcome::switch_stall_s` measures the reclaimed idle
+    /// capacity either way.
+    pub switch_backfill: bool,
 }
 
 impl Default for SimConfig {
@@ -66,6 +78,7 @@ impl Default for SimConfig {
             chunk_tokens: 2048,
             max_batch: 48,
             heartbeat_s: 0.004,
+            switch_backfill: false,
         }
     }
 }
@@ -102,6 +115,14 @@ pub struct SimOutcome {
     pub recorder: Recorder,
     pub rejected: Vec<u64>,
     pub n_switches: usize,
+    /// Switch-stall engine-seconds: idle instance-time spent inside
+    /// merge-transition windows (from each chosen member's free point to
+    /// the group's settle point), minus the work backfill shells executed
+    /// inside those windows.  With `switch_backfill` off nothing is
+    /// credited back, so off-vs-on on the same trace measures exactly the
+    /// capacity the drain barrier wastes.  (The loop reference does not
+    /// track this; `outcomes_equivalent` ignores it.)
+    pub switch_stall_s: f64,
 }
 
 /// Outcome equivalence between two simulator runs: identical completion
@@ -182,6 +203,24 @@ struct VEng {
     stamp: u32,
     /// Σ kv_tokens over `active`, maintained incrementally.
     kv_used: usize,
+    /// Backfill shell (`switch_backfill` only): this unit instance is
+    /// committed to a forming TP group and keeps serving until `settle_at`,
+    /// when its remaining residents pause into `merge_into` and the shell
+    /// disappears.  `f64::INFINITY` = not a shell.
+    settle_at: f64,
+    /// Handle of the forming group this shell folds into at `settle_at`.
+    merge_into: u32,
+    /// KV tokens pre-pledged into the forming group at merge time (the
+    /// residents' footprint snapshot), reconciled against their actual
+    /// footprint at settle so mid-window joins to the group cannot
+    /// over-commit its KV.
+    pledged_kv: usize,
+}
+
+impl VEng {
+    fn is_shell(&self) -> bool {
+        self.settle_at.is_finite()
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -315,41 +354,27 @@ fn simulate_inner(
     let dp_cap = cap_by_m[1];
     let live_switch_s = cm.live_switch_s();
 
+    let new_veng = |m: usize, handle: u32| VEng {
+        m,
+        free_at: 0.0,
+        active: vec![],
+        transient: false,
+        handle,
+        stamp: 0,
+        kv_used: 0,
+        settle_at: f64::INFINITY,
+        merge_into: u32::MAX,
+        pledged_kv: 0,
+    };
     let mut vengs: Vec<VEng> = match system {
-        SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => (0..n_inst)
-            .map(|i| VEng {
-                m: 1,
-                free_at: 0.0,
-                active: vec![],
-                transient: false,
-                handle: i as u32,
-                stamp: 0,
-                kv_used: 0,
-            })
-            .collect(),
+        SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => {
+            (0..n_inst).map(|i| new_veng(1, i as u32)).collect()
+        }
         SimSystem::StaticTp(m) => {
             let m = m.min(n_inst).max(1);
-            (0..n_inst / m)
-                .map(|i| VEng {
-                    m,
-                    free_at: 0.0,
-                    active: vec![],
-                    transient: false,
-                    handle: i as u32,
-                    stamp: 0,
-                    kv_used: 0,
-                })
-                .collect()
+            (0..n_inst / m).map(|i| new_veng(m, i as u32)).collect()
         }
-        SimSystem::Shift => vec![VEng {
-            m: n_inst,
-            free_at: 0.0,
-            active: vec![],
-            transient: false,
-            handle: 0,
-            stamp: 0,
-            kv_used: 0,
-        }],
+        SimSystem::Shift => vec![new_veng(n_inst, 0)],
     };
     let mut next_handle = vengs.len() as u32;
     let mut handle_pos: Vec<usize> = (0..vengs.len()).collect();
@@ -363,6 +388,8 @@ fn simulate_inner(
     let mut rec = Recorder::new();
     let mut rejected: Vec<u64> = Vec::new();
     let mut n_switches = 0usize;
+    let mut switch_stall_s = 0.0f64;
+    let backfill = cfg.switch_backfill;
     let mut policy = crate::coordinator::policy::FlyingPolicy::default();
 
     let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(4 * vengs.len() + 8);
@@ -448,6 +475,41 @@ fn simulate_inner(
             rounds += 1;
             assert!(rounds < 100_000, "simulate: same-time livelock at t={t}");
 
+            // ---- incremental settle: fold due backfill shells -------------
+            // Each shell's remaining residents hard-pause into the forming
+            // group it merged toward (the per-member half of the switch);
+            // the shell itself disappears.  Residents that completed during
+            // the transition window simply never pause — the backfill win.
+            if backfill && vengs.iter().any(|v| v.settle_at <= t) {
+                for si in 0..vengs.len() {
+                    if vengs[si].settle_at > t {
+                        continue;
+                    }
+                    let target = handle_pos[vengs[si].merge_into as usize];
+                    debug_assert!(
+                        target < vengs.len()
+                            && vengs[target].handle == vengs[si].merge_into,
+                        "shell settle: forming group vanished"
+                    );
+                    let moved = std::mem::take(&mut vengs[si].active);
+                    vengs[si].kv_used = 0;
+                    // Reconcile the merge-time pledge against the residents'
+                    // actual footprint now (some finished, others grew).
+                    vengs[target].kv_used -= vengs[si].pledged_kv;
+                    for &r in moved.iter() {
+                        let q = &mut reqs[r as usize];
+                        q.paused = true;
+                        vengs[target].kv_used += kv_tokens(q);
+                        vengs[target].active.push(r);
+                    }
+                }
+                vengs.retain(|v| !(v.settle_at <= t));
+                for (idx, v) in vengs.iter().enumerate() {
+                    handle_pos[v.handle as usize] = idx;
+                }
+                queue_dirty = true;
+            }
+
             // ---- admissions ----------------------------------------------
             let mut consumed_arrival = false;
             while next_arr < order.len() && trace[order[next_arr] as usize].arrival <= t {
@@ -490,13 +552,17 @@ fn simulate_inner(
             // the `due` guard keeps non-tick iterations O(1).
             if let Some(rt) = ctrl.as_mut() {
                 if rt.due(t) {
+                    // Shells are committed capacity (their instances are
+                    // already represented by the forming group's width), so
+                    // they never count as idle or contribute pool capacity.
                     let idle: usize = vengs
                         .iter()
-                        .filter(|v| v.active.is_empty())
+                        .filter(|v| v.active.is_empty() && !v.is_shell())
                         .map(|v| v.m)
                         .sum();
                     let (kv_used, kv_cap) = vengs
                         .iter()
+                        .filter(|v| !v.is_shell())
                         .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
                     let kv_frac =
                         if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
@@ -517,6 +583,7 @@ fn simulate_inner(
                 // the per-request path PR 1 optimized.
                 let (kv_used, kv_cap) = vengs
                     .iter()
+                    .filter(|v| !v.is_shell())
                     .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
                 let walk_kv_frac = if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
                 requeue_high.clear();
@@ -553,10 +620,11 @@ fn simulate_inner(
                             SimSystem::Flying | SimSystem::FlyingSequential => {
                                 // Idle capacity in *unit-instance* terms so
                                 // the snapshot semantics match the real
-                                // (fixed-engine) coordinator.
+                                // (fixed-engine) coordinator.  Shells are
+                                // committed to a forming group, never idle.
                                 let idle: usize = vengs
                                     .iter()
-                                    .filter(|v| v.active.is_empty())
+                                    .filter(|v| v.active.is_empty() && !v.is_shell())
                                     .map(|v| v.m)
                                     .sum();
                                 let snap = Snapshot {
@@ -603,6 +671,30 @@ fn simulate_inner(
                                     }
                                     if cap_by_m[v.m].saturating_sub(v.kv_used) < total {
                                         continue;
+                                    }
+                                    if v.is_shell() {
+                                        // Drain backfill: a shell takes at
+                                        // most one new request, and only
+                                        // when its exact solo-run finish
+                                        // (the cost model IS the execution
+                                        // model here) lands before the
+                                        // shell's settle point.
+                                        if !v.active.is_empty() {
+                                            continue;
+                                        }
+                                        let q = &reqs[riu];
+                                        let fin = cm.solo_completion_t(
+                                            t.max(v.free_at),
+                                            q.prompt_len,
+                                            q.output_len,
+                                            gpus_per_inst,
+                                            cfg.chunk_tokens,
+                                            cfg.heartbeat_s,
+                                            v.settle_at,
+                                        );
+                                        if fin > v.settle_at {
+                                            continue;
+                                        }
                                     }
                                     match pick {
                                         None => pick = Some(vi),
@@ -703,6 +795,8 @@ fn simulate_inner(
                                     &cap_by_m,
                                     cfg,
                                     &mut n_switches,
+                                    backfill,
+                                    &mut switch_stall_s,
                                 ) {
                                     Some(bind_t) => {
                                         rec.on_first_sched_at(reqs[riu].rec, bind_t);
@@ -745,11 +839,26 @@ fn simulate_inner(
                     }
                 }
                 if let Some(rid) = pre {
-                    let q = &mut reqs[rid as usize];
-                    let chunk = (q.prompt_len - q.prefilled).min(cfg.chunk_tokens);
-                    let dur = cm.prefill_s(chunk, g).max(cfg.heartbeat_s);
+                    let (chunk, dur) = {
+                        let q = &reqs[rid as usize];
+                        let chunk = (q.prompt_len - q.prefilled).min(cfg.chunk_tokens);
+                        (chunk, cm.prefill_s(chunk, g).max(cfg.heartbeat_s))
+                    };
                     let done_t = t + dur;
+                    if vengs[vi].is_shell() {
+                        if done_t > vengs[vi].settle_at {
+                            // The step would cross the settle point: park
+                            // until the shell folds into its group (the
+                            // remaining window is unreclaimed stall).
+                            vengs[vi].free_at = vengs[vi].settle_at;
+                            continue;
+                        }
+                        // Work executed inside the transition window is
+                        // reclaimed stall.
+                        switch_stall_s -= dur;
+                    }
                     vengs[vi].free_at = done_t;
+                    let q = &mut reqs[rid as usize];
                     q.prefilled += chunk;
                     if q.prefilled >= q.prompt_len {
                         q.phase = RPhase::Decode;
@@ -825,6 +934,15 @@ fn simulate_inner(
                     }
                     .max(cfg.heartbeat_s);
                     let done_t = t + dur;
+                    if vengs[vi].is_shell() {
+                        if done_t > vengs[vi].settle_at {
+                            // Step would cross the settle point: park until
+                            // the shell folds into its forming group.
+                            vengs[vi].free_at = vengs[vi].settle_at;
+                            continue;
+                        }
+                        switch_stall_s -= dur;
+                    }
                     vengs[vi].free_at = done_t;
                     if let Some(rt) = ctrl.as_mut() {
                         // Each batched request advances one token this step:
@@ -908,6 +1026,9 @@ fn simulate_inner(
                                 handle: next_handle,
                                 stamp: 0,
                                 kv_used: 0,
+                                settle_at: f64::INFINITY,
+                                merge_into: u32::MAX,
+                                pledged_kv: 0,
                             };
                             next_handle += 1;
                             handle_pos.push(usize::MAX);
@@ -956,7 +1077,7 @@ fn simulate_inner(
         }
     }
 
-    SimOutcome { recorder: rec, rejected, n_switches }
+    SimOutcome { recorder: rec, rejected, n_switches, switch_stall_s }
 }
 
 /// Merge contiguous unit vengs into a transient TP group for `ri`, or join
@@ -978,15 +1099,21 @@ fn bind_tp_sim(
     cap_by_m: &[usize],
     cfg: &SimConfig,
     n_switches: &mut usize,
+    backfill: bool,
+    switch_stall_s: &mut f64,
 ) -> Option<f64> {
     let riu = ri as usize;
     let total = reqs[riu].prompt_len + reqs[riu].output_len;
 
     // An existing group of the right width with KV + batch room?  (First
     // match only, as the reference's `find` — a non-joinable first match
-    // falls through to the merge path.)
+    // falls through to the merge path.)  Shells never match: their instance
+    // is committed to a forming group.
     let mut joined = false;
     for v in vengs.iter_mut() {
+        if v.is_shell() {
+            continue;
+        }
         let batch_cap = if matches!(system, SimSystem::Shift) {
             cfg.max_batch * v.m
         } else {
@@ -1026,9 +1153,11 @@ fn bind_tp_sim(
     }
 
     // Collect want_m unit vengs to merge (prefer idle ones; stable sort so
-    // ties fall back to vector order, as the reference).
+    // ties fall back to vector order, as the reference).  Shells are
+    // already committed to another forming group and are never re-chosen.
     unit_scratch.clear();
-    unit_scratch.extend((0..vengs.len()).filter(|&i| vengs[i].m == 1));
+    unit_scratch
+        .extend((0..vengs.len()).filter(|&i| vengs[i].m == 1 && !vengs[i].is_shell()));
     if unit_scratch.len() < want_m {
         return None;
     }
@@ -1042,19 +1171,78 @@ fn bind_tp_sim(
         return None;
     }
 
+    // The group settles when the slowest member's in-flight step completes
+    // plus the live-switch latency.  Until then each chosen member is idle
+    // from its own free point — that window is the switch stall (per
+    // member, in instance-seconds); backfill reclaims it by crediting work
+    // shells execute inside the window.
+    let horizon = unit_scratch
+        .iter()
+        .map(|&i| vengs[i].free_at)
+        .fold(t, f64::max)
+        + live_switch_s;
+    for &i in unit_scratch.iter() {
+        *switch_stall_s += horizon - vengs[i].free_at.max(t);
+    }
+
+    if backfill {
+        // Drain-stall elimination: chosen members become backfill shells
+        // that keep serving their residents (and bounded new elastic work)
+        // until the settle point, then fold into the forming group member
+        // by member (incremental settle).  The TP request's bind time is
+        // unchanged — only the would-be idle capacity is reclaimed.
+        let merged_handle = *next_handle;
+        *next_handle += 1;
+        handle_pos.push(usize::MAX);
+        let mut merged = VEng {
+            m: want_m,
+            free_at: horizon,
+            active: Vec::with_capacity(8),
+            transient: true,
+            handle: merged_handle,
+            stamp: 0,
+            kv_used: 0,
+            settle_at: f64::INFINITY,
+            merge_into: u32::MAX,
+            pledged_kv: 0,
+        };
+        merged.active.push(ri);
+        merged.kv_used += kv_tokens(&reqs[riu]);
+        reqs[riu].phase = RPhase::Prefill;
+        heap.push(Event {
+            t: horizon,
+            kind: EvKind::SwitchSettle { veng: merged_handle, stamp: 0 },
+        });
+        for &i in unit_scratch.iter() {
+            let v = &mut vengs[i];
+            v.settle_at = horizon;
+            v.merge_into = merged_handle;
+            // Pre-pledge the residents' KV footprint into the forming group
+            // so mid-window joins see the capacity the fold will consume
+            // (reconciled against actual footprints at settle).
+            v.pledged_kv = v.kv_used;
+            merged.kv_used += v.kv_used;
+        }
+        vengs.push(merged);
+        for (idx, v) in vengs.iter().enumerate() {
+            handle_pos[v.handle as usize] = idx;
+        }
+        *n_switches += 1;
+        return Some(horizon);
+    }
+
     // Hard preempt (Fig 7c): pause members' DP requests in place.
     let mut merged = VEng {
         m: want_m,
-        free_at: unit_scratch
-            .iter()
-            .map(|&i| vengs[i].free_at)
-            .fold(t, f64::max)
-            + live_switch_s,
+        free_at: horizon,
         active: Vec::with_capacity(8),
         transient: true,
         handle: *next_handle,
         stamp: 0,
         kv_used: 0,
+        settle_at: f64::INFINITY,
+        merge_into: u32::MAX,
+        pledged_kv: 0,
     };
     *next_handle += 1;
     handle_pos.push(usize::MAX);
@@ -1279,6 +1467,52 @@ mod tests {
             (s.finished, o.rejected.len(), o.n_switches, s.mean_ttft)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn switch_stall_is_tracked_and_zero_without_merges() {
+        // Static systems never merge at runtime: no transition windows.
+        let o = run(SimSystem::StaticDp, 200);
+        assert_eq!(o.switch_stall_s, 0.0);
+        // Flying merges pay at least the live-switch latency per member.
+        let o = run(SimSystem::Flying, 300);
+        assert!(o.n_switches > 0);
+        assert!(o.switch_stall_s > 0.0);
+    }
+
+    #[test]
+    fn backfill_mode_terminates_with_terminal_records_and_nonnegative_stall() {
+        use crate::workload::Scenario;
+        let c = cm();
+        for scenario in [Scenario::PriorityStorm, Scenario::PoissonBurst] {
+            let trace = scenario.generate(7, 220);
+            let on_cfg = SimConfig { switch_backfill: true, ..SimConfig::default() };
+            let on = simulate(SimSystem::Flying, &c, &trace, &on_cfg);
+            // Every request reaches a terminal record (finish or reject —
+            // both stamp a finish time); shells must never strand work.
+            assert_eq!(on.recorder.summary(None).finished, 220, "{scenario}");
+            // Credits are bounded by each shell's window: reclaimed work
+            // can never exceed the stall potential.
+            assert!(
+                on.switch_stall_s >= -1e-9,
+                "{scenario}: negative stall {}",
+                on.switch_stall_s
+            );
+        }
+    }
+
+    #[test]
+    fn backfill_mode_is_deterministic() {
+        use crate::workload::Scenario;
+        let c = cm();
+        let trace = Scenario::PriorityStorm.generate(11, 200);
+        let cfg = SimConfig { switch_backfill: true, ..SimConfig::default() };
+        let go = || {
+            let o = simulate(SimSystem::Flying, &c, &trace, &cfg);
+            let s = o.recorder.summary(None);
+            (s.finished, o.rejected.len(), o.n_switches, o.switch_stall_s, s.mean_ttft)
+        };
+        assert_eq!(go(), go());
     }
 
     #[test]

@@ -206,6 +206,50 @@ impl CostModel {
     pub fn live_switch_s(&self) -> f64 {
         0.015
     }
+
+    /// Absolute finish time of a request executed **alone** on a g-GPU
+    /// instance starting at `start`: chunked prefill (chunks of
+    /// `chunk_tokens`), then one decode step per remaining output token,
+    /// every step floored at `heartbeat_s` — step for step the sequence the
+    /// event-driven simulator runs for a solo request, accumulated in the
+    /// same order so the timestamps match to the bit.
+    ///
+    /// This is the admission predicate for drain-horizon backfill
+    /// (`SimConfig::switch_backfill`): in the simulator the cost model IS
+    /// the execution model, so "predicted to complete inside the drain
+    /// horizon" is exact, never optimistic.  `budget` short-circuits the
+    /// walk: once the accumulated time passes it the exact value no longer
+    /// matters and the current (lower-bound) estimate is returned.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solo_completion_t(
+        &self,
+        start: f64,
+        prompt: usize,
+        output: usize,
+        g: usize,
+        chunk_tokens: usize,
+        heartbeat_s: f64,
+        budget: f64,
+    ) -> f64 {
+        let mut t = start;
+        let mut remaining = prompt;
+        while remaining > 0 {
+            let chunk = remaining.min(chunk_tokens);
+            t += self.prefill_s(chunk, g).max(heartbeat_s);
+            remaining -= chunk;
+            if t > budget {
+                return t;
+            }
+        }
+        // The final prefill chunk emits token 1; each decode step one more.
+        for e in 1..output {
+            t += self.decode_step_s(1, prompt + e, g).max(heartbeat_s);
+            if t > budget {
+                return t;
+            }
+        }
+        t
+    }
 }
 
 #[cfg(test)]

@@ -388,7 +388,9 @@ pub fn simulate_reference(
         vengs = new_vengs;
     }
 
-    SimOutcome { recorder: rec, rejected, n_switches }
+    // The reference does not model transition windows; its stall metric is
+    // reported as 0 and deliberately excluded from `outcomes_equivalent`.
+    SimOutcome { recorder: rec, rejected, n_switches, switch_stall_s: 0.0 }
 }
 
 fn kv_room(

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 
 use std::sync::atomic::{AtomicU8, Ordering};

@@ -1,0 +1,253 @@
+//! Generational dense slab: O(1) insert/lookup/remove over a `Vec`, with
+//! handles that detect reuse.
+//!
+//! This is the request-state substrate for the serving hot path (ISSUE 3):
+//! the coordinator's `Active` table and the KV adaptor's per-request state
+//! used to live in `BTreeMap<u64, _>`, which put an O(log n) pointer-chase
+//! on every `slot()` / `table_row_ref()` / `advance_*` call.  A slab handle
+//! is resolved once at admission and is a plain array index afterwards.
+//!
+//! Handles are *generational*: removing an entry bumps the slot's
+//! generation, so a stale handle held by some queue or group list resolves
+//! to `None` instead of silently aliasing an unrelated request that reused
+//! the slot.  That property is load-bearing — e.g. a soft-preempted
+//! speculative request can finish (and be removed) while its handle is
+//! still parked in a group's `tp_pending` list.
+//!
+//! Free slots are recycled LIFO, so a serving steady state with bounded
+//! concurrency reaches a fixed footprint and inserts stop allocating.
+
+/// Copyable, comparable handle into a [`Slab`].  `idx` is the dense slot
+/// index; `gen` must match the slot's current generation for the handle to
+/// resolve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlabHandle {
+    idx: u32,
+    gen: u32,
+}
+
+impl SlabHandle {
+    /// Dense index — stable for the entry's lifetime.  Exposed so callers
+    /// can maintain parallel per-entry arrays; resolving data through the
+    /// slab itself (generation-checked) is the safe default.
+    pub fn index(&self) -> usize {
+        self.idx as usize
+    }
+
+    /// A handle that never resolves (useful as an initializer).
+    pub fn dangling() -> Self {
+        SlabHandle { idx: u32::MAX, gen: u32::MAX }
+    }
+}
+
+struct Slot<T> {
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Dense generational slab.  All operations are O(1); iteration is O(cap).
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab { slots: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Slab {
+            slots: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total slots ever allocated (live + free).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn insert(&mut self, val: T) -> SlabHandle {
+        self.len += 1;
+        if let Some(idx) = self.free.pop() {
+            let slot = &mut self.slots[idx as usize];
+            debug_assert!(slot.val.is_none());
+            slot.val = Some(val);
+            SlabHandle { idx, gen: slot.gen }
+        } else {
+            let idx = self.slots.len() as u32;
+            assert!(idx < u32::MAX, "slab exhausted");
+            self.slots.push(Slot { gen: 0, val: Some(val) });
+            SlabHandle { idx, gen: 0 }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, h: SlabHandle) -> Option<&T> {
+        match self.slots.get(h.idx as usize) {
+            Some(s) if s.gen == h.gen => s.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, h: SlabHandle) -> Option<&mut T> {
+        match self.slots.get_mut(h.idx as usize) {
+            Some(s) if s.gen == h.gen => s.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, h: SlabHandle) -> bool {
+        self.get(h).is_some()
+    }
+
+    /// Remove the entry, invalidating `h` (and every copy of it).
+    pub fn remove(&mut self, h: SlabHandle) -> Option<T> {
+        let slot = self.slots.get_mut(h.idx as usize)?;
+        if slot.gen != h.gen || slot.val.is_none() {
+            return None;
+        }
+        let val = slot.val.take();
+        // Bump the generation *at removal* so every outstanding copy of the
+        // handle goes stale immediately, whether or not the slot is reused.
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(h.idx);
+        self.len -= 1;
+        val
+    }
+
+    /// Live entries, in slot order (not insertion order).
+    pub fn iter(&self) -> impl Iterator<Item = (SlabHandle, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| {
+            s.val
+                .as_ref()
+                .map(|v| (SlabHandle { idx: i as u32, gen: s.gen }, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.len(), 1);
+        // Double remove is a no-op.
+        assert_eq!(s.remove(a), None);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn stale_handle_never_aliases_reused_slot() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        let b = s.insert(2); // reuses slot 0 (LIFO free list)
+        assert_eq!(b.index(), a.index());
+        assert_eq!(s.get(a), None, "stale handle must not see the new entry");
+        assert_eq!(s.get(b), Some(&2));
+    }
+
+    #[test]
+    fn steady_state_reuses_slots() {
+        let mut s: Slab<u64> = Slab::new();
+        let mut hs: Vec<SlabHandle> = (0..8).map(|i| s.insert(i)).collect();
+        for round in 0..100u64 {
+            let h = hs.remove(0);
+            s.remove(h);
+            hs.push(s.insert(round));
+        }
+        assert_eq!(s.len(), 8);
+        assert!(s.capacity() <= 9, "cap={} grew past working set", s.capacity());
+    }
+
+    #[test]
+    fn dangling_never_resolves() {
+        let mut s: Slab<u8> = Slab::new();
+        s.insert(1);
+        assert_eq!(s.get(SlabHandle::dangling()), None);
+        assert!(!s.contains(SlabHandle::dangling()));
+    }
+
+    #[test]
+    fn iter_yields_live_entries() {
+        let mut s: Slab<u8> = Slab::new();
+        let a = s.insert(10);
+        let _b = s.insert(20);
+        s.remove(a);
+        let got: Vec<u8> = s.iter().map(|(_, &v)| v).collect();
+        assert_eq!(got, vec![20]);
+    }
+
+    #[test]
+    fn prop_slab_matches_btreemap_model() {
+        // Random op sequence against a BTreeMap oracle keyed by an
+        // ever-increasing id; handles map ids 1:1.
+        prop_check("slab ≡ map model", 100, |g| {
+            let mut slab: Slab<u64> = Slab::new();
+            let mut model: BTreeMap<u64, (SlabHandle, u64)> = BTreeMap::new();
+            let mut retired: Vec<SlabHandle> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1, 120) {
+                match g.usize(0, 2) {
+                    0 => {
+                        next_id += 1;
+                        let h = slab.insert(next_id * 1000);
+                        model.insert(next_id, (h, next_id * 1000));
+                    }
+                    1 if !model.is_empty() => {
+                        let keys: Vec<u64> = model.keys().copied().collect();
+                        let k = *g.choose(&keys);
+                        let (h, v) = model.remove(&k).unwrap();
+                        crate::prop_assert!(
+                            slab.remove(h) == Some(v),
+                            "remove({k}) mismatched"
+                        );
+                        retired.push(h);
+                    }
+                    _ => {}
+                }
+                crate::prop_assert!(slab.len() == model.len(), "len mismatch");
+                for (k, &(h, v)) in &model {
+                    crate::prop_assert!(
+                        slab.get(h) == Some(&v),
+                        "live handle for {k} lost"
+                    );
+                }
+                for &h in &retired {
+                    crate::prop_assert!(slab.get(h).is_none(), "stale handle resolved");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -100,7 +100,7 @@ fn prop_equivalent_across_models_and_configs() {
         let cfg = SimConfig {
             chunk_tokens: *g.choose(&[512usize, 2048, 4096]),
             max_batch: *g.choose(&[8usize, 48]),
-            heartbeat_s: 0.004,
+            ..SimConfig::default()
         };
         let wl = WorkloadCfg::paper_full(g.u64(0, 1 << 30), g.usize(40, 120));
         let trace = generate(&wl);
@@ -245,6 +245,66 @@ fn adaptive_hold_equivalent_on_every_scenario() {
         if let Err(e) = check_adaptive_hold_equivalent(&cm, &trace, &SimConfig::default()) {
             panic!("{scenario}: {e}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Switch-backfill differential guarantees (ISSUE 3): with
+// `switch_backfill = false` (explicitly, not just by default) the event
+// core must stay byte-identical to the loop reference on every
+// scenario-library workload and on randomized traces; with it on, the
+// transition path may legitimately re-time work but must keep every
+// request terminal and never *add* stall to a merge window.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backfill_off_is_byte_identical_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { switch_backfill: false, ..SimConfig::default() };
+    for scenario in Scenario::ALL {
+        let trace = scenario.generate(23, 150);
+        for sys in [SimSystem::Flying, SimSystem::FlyingSequential] {
+            if let Err(e) = check_equivalent(sys, &cm, &trace, &cfg) {
+                panic!("{scenario}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_backfill_off_is_byte_identical_on_random_traces() {
+    let cm = llama();
+    let dp_cap = cm.kv_capacity_tokens(cm.model.min_gpus);
+    prop_check("backfill-off ≡ reference", 10, |g| {
+        let mut wl = WorkloadCfg::paper_full(g.u64(0, 1 << 30), g.usize(40, 160));
+        wl.priority_frac = g.f64(0.0, 0.4);
+        wl.long_frac = g.f64(0.0, 0.2);
+        wl.long_ctx_range = (dp_cap / 2, dp_cap * 3);
+        let trace = generate(&wl);
+        let cfg = SimConfig { switch_backfill: false, ..SimConfig::default() };
+        check_equivalent(*g.choose(&ALL_SYSTEMS), &cm, &trace, &cfg)
+    });
+}
+
+#[test]
+fn backfill_on_keeps_every_request_terminal_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { switch_backfill: true, ..SimConfig::default() };
+    for scenario in Scenario::ALL {
+        let n = 150;
+        let trace = scenario.generate(23, n);
+        let on = simulate(SimSystem::Flying, &cm, &trace, &cfg);
+        // Finish records cover completions AND rejections: nothing may be
+        // stranded in a shell or a forming group.
+        assert_eq!(
+            on.recorder.summary(None).finished,
+            n,
+            "{scenario}: lost requests under backfill"
+        );
+        assert!(
+            on.switch_stall_s >= -1e-9,
+            "{scenario}: backfill credited more work than the window held"
+        );
     }
 }
 

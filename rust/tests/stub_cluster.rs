@@ -11,8 +11,9 @@ use flying_serving::control::{
     AdaptivePolicy, ControlConfig, ControlRuntime, ThresholdController,
 };
 use flying_serving::coordinator::policy::FlyingPolicy;
-use flying_serving::coordinator::strategy::Strategy;
+use flying_serving::coordinator::strategy::{Strategy, SwitchConfig};
 use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::metrics::Recorder;
 use flying_serving::model::{ModelCfg, StaticShapes};
 use flying_serving::workload::{synth_prompt_tokens, Priority};
 
@@ -282,6 +283,101 @@ fn adaptive_policy_serves_real_path_deterministically() {
     let (outputs_b, rejected_b) = run();
     assert_eq!(outputs_a, outputs_b);
     assert_eq!(rejected_a, rejected_b);
+}
+
+/// Drive the drain scenario by hand: a long DP resident opens a drain via
+/// an explicit TP demand, then a short elastic request arrives.  With
+/// backfill on the short request must bind onto a draining engine within a
+/// couple of iterations (its predicted steps fit the drain horizon); with
+/// backfill off the drain mask blocks it until the resident finishes.
+fn drive_drain_scenario(backfill: bool) -> (Option<f64>, Recorder) {
+    let mut c = cluster(2);
+    c.set_switch_config(SwitchConfig { backfill, ..SwitchConfig::default() });
+    let mut recorder = Recorder::new();
+    let mut policy = FlyingPolicy::default();
+
+    // Long-running DP resident: 1 prefill chunk + 27 decode steps.
+    c.submit(req(1, 12, 28), &mut recorder);
+    for _ in 0..3 {
+        c.step_once(&mut policy, Strategy::Sequential, &mut recorder).unwrap();
+    }
+    // Explicit TP demand opens a sequential drain over both engines.
+    let mut tp = req(2, 16, 4);
+    tp.tp_demand = Some(2);
+    c.submit(tp, &mut recorder);
+    c.step_once(&mut policy, Strategy::Sequential, &mut recorder).unwrap();
+    // Short elastic request: 1 prefill chunk + 1 decode step — far inside
+    // the ~25-step drain horizon the resident still owes.
+    c.submit(req(3, 8, 2), &mut recorder);
+    for _ in 0..2 {
+        c.step_once(&mut policy, Strategy::Sequential, &mut recorder).unwrap();
+    }
+    let first_sched_short = recorder.get(3).and_then(|r| r.first_sched);
+
+    // Run everything to completion (settle promotes the TP bind once the
+    // residents — including any backfill — drain).
+    for _ in 0..10_000 {
+        if !c.step_once(&mut policy, Strategy::Sequential, &mut recorder).unwrap() {
+            break;
+        }
+    }
+    c.shutdown();
+    (first_sched_short, recorder)
+}
+
+#[test]
+fn backfill_admits_bounded_work_on_draining_engines() {
+    let (sched_on, rec_on) = drive_drain_scenario(true);
+    assert!(
+        sched_on.is_some(),
+        "backfill on: short request must bind onto the draining engine"
+    );
+    let (sched_off, rec_off) = drive_drain_scenario(false);
+    assert!(
+        sched_off.is_none(),
+        "backfill off: the drain mask must block elastic admission"
+    );
+    // Both modes finish every request with full token counts.
+    for rec in [&rec_on, &rec_off] {
+        for (id, want) in [(1u64, 28usize), (2, 4), (3, 2)] {
+            let r = rec.get(id).unwrap_or_else(|| panic!("request {id} lost"));
+            assert!(r.finished.is_some(), "request {id} never finished");
+            assert_eq!(r.token_times.len(), want, "request {id} token count");
+        }
+    }
+}
+
+#[test]
+fn backfill_on_emits_identical_tokens_to_backfill_off() {
+    // Backfill re-times work but must never change greedy token values:
+    // the same trace under both switch configs produces identical outputs.
+    let mk_trace = || {
+        let mut trace = vec![req(1, 12, 20)];
+        let mut tp = req(2, 16, 4);
+        tp.tp_demand = Some(2);
+        tp.arrival = 0.05;
+        trace.push(tp);
+        let mut short = req(3, 8, 3);
+        short.arrival = 0.08;
+        trace.push(short);
+        trace
+    };
+    let run = |backfill: bool| {
+        let mut c = cluster(2);
+        c.set_switch_config(SwitchConfig { backfill, ..SwitchConfig::default() });
+        let out = c
+            .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::Sequential)
+            .unwrap();
+        c.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.outputs, on.outputs);
+    assert!(off.rejected.is_empty() && on.rejected.is_empty());
+    // Both exercised the switch path (incremental settle still logs the
+    // final promotion hop).
+    assert!(!off.switches.is_empty() && !on.switches.is_empty());
 }
 
 #[test]
