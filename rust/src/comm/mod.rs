@@ -38,6 +38,10 @@ pub enum CommError {
     NoSuchGroup(Vec<usize>),
     #[error("rank {rank} is not a member of group {ranks:?}")]
     NotAMember { rank: usize, ranks: Vec<usize> },
+    #[error("scatter payload of {len} elements is not divisible by group size {p}")]
+    ScatterShape { len: usize, p: usize },
+    #[error("gather contributions have mismatched shapes")]
+    GatherShape,
 }
 
 #[derive(Debug)]
@@ -47,6 +51,10 @@ struct Inner {
     buf: Vec<f32>,
     result: Vec<f32>,
     gather: Vec<Vec<f32>>,
+    /// Set by the completing arrival of a `gather_into` round whose member
+    /// contributions disagree in shape; every waiter of that round reads it
+    /// and surfaces `CommError::GatherShape` instead of a misaligned result.
+    shape_err: bool,
 }
 
 /// One pre-built communicator (the NCCL process-group analog).
@@ -69,6 +77,7 @@ impl Communicator {
                 buf: Vec::new(),
                 result: Vec::new(),
                 gather: vec![Vec::new(); p],
+                shape_err: false,
             }),
             cv: Condvar::new(),
             timeout,
@@ -244,6 +253,138 @@ impl Communicator {
             }
             out.clear();
             out.extend_from_slice(&g.result);
+            Ok(())
+        }
+    }
+
+    /// Scatter from `root`: the root contributes `p * chunk` elements and
+    /// member `i` (in member-index order) receives elements
+    /// `[i*chunk, (i+1)*chunk)` into `out`.  Non-root members pass an empty
+    /// `send`.  This is the KV-migration data plane (ISSUE 4): the home
+    /// engine distributes the other members' shard slices through the
+    /// eagerly-initialized group, so a DP→TP promotion moves KV bytes once
+    /// over the interconnect instead of recomputing them.  Buffers recycle:
+    /// neither the communicator nor the caller allocates once warm.
+    pub fn scatter_into(
+        &self,
+        rank: usize,
+        root: usize,
+        send: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), CommError> {
+        let idx = self.member_index(rank)?;
+        let root_idx = self.member_index(root)?;
+        let p = self.size();
+        if p == 1 {
+            out.clear();
+            out.extend_from_slice(send);
+            return Ok(());
+        }
+        if rank == root && send.len() % p != 0 {
+            // Silent flooring would truncate the tail slice; fail loudly
+            // instead (the waiting members surface it as a watchdog timeout,
+            // like any other contract violation).
+            return Err(CommError::ScatterShape { len: send.len(), p });
+        }
+        let mut g = self.m.lock().unwrap();
+        if idx == root_idx {
+            // Stage into `buf`; only the completing arrival publishes it to
+            // `result` (same protocol as broadcast), so a next-round root can
+            // never clobber a result a slow reader has yet to slice.
+            g.buf.clear();
+            g.buf.extend_from_slice(send);
+        }
+        g.arrived += 1;
+        if g.arrived == p {
+            std::mem::swap(&mut g.buf, &mut g.result);
+            g.arrived = 0;
+            g.generation += 1;
+            let chunk = g.result.len() / p;
+            out.clear();
+            out.extend_from_slice(&g.result[idx * chunk..(idx + 1) * chunk]);
+            self.cv.notify_all();
+            Ok(())
+        } else {
+            let gen0 = g.generation;
+            let (g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            let chunk = g.result.len() / p;
+            out.clear();
+            out.extend_from_slice(&g.result[idx * chunk..(idx + 1) * chunk]);
+            Ok(())
+        }
+    }
+
+    /// Gather to `root`: every member contributes identically-shaped `data`;
+    /// the root's `out` receives the concatenation in member-index order
+    /// (`p * data.len()` elements) and every other member's `out` is
+    /// cleared.  Inverse of [`Self::scatter_into`] — the TP→DP direction of
+    /// KV migration, where the DP target collects the shard slices it does
+    /// not already hold.  Allocation-free once warm.
+    pub fn gather_into(
+        &self,
+        rank: usize,
+        root: usize,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), CommError> {
+        let idx = self.member_index(rank)?;
+        let root_idx = self.member_index(root)?;
+        let p = self.size();
+        if p == 1 {
+            out.clear();
+            out.extend_from_slice(data);
+            return Ok(());
+        }
+        let mut g = self.m.lock().unwrap();
+        g.gather[idx].clear();
+        g.gather[idx].extend_from_slice(data);
+        g.arrived += 1;
+        if g.arrived == p {
+            g.arrived = 0;
+            g.generation += 1;
+            let inner = &mut *g;
+            // Shape agreement is checked loudly (mirroring scatter_into's
+            // ScatterShape): a silently shifted concatenation would hand the
+            // root misaligned slices with no signal.
+            inner.shape_err = inner.gather.iter().any(|m| m.len() != data.len());
+            inner.result.clear();
+            if !inner.shape_err {
+                for m in inner.gather.iter() {
+                    inner.result.extend_from_slice(m);
+                }
+            }
+            let failed = inner.shape_err;
+            out.clear();
+            if !failed && idx == root_idx {
+                out.extend_from_slice(&inner.result);
+            }
+            self.cv.notify_all();
+            if failed {
+                return Err(CommError::GatherShape);
+            }
+            Ok(())
+        } else {
+            let gen0 = g.generation;
+            let (g, to) = self
+                .cv
+                .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
+                .unwrap();
+            if to.timed_out() {
+                return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            if g.shape_err {
+                return Err(CommError::GatherShape);
+            }
+            out.clear();
+            if idx == root_idx {
+                out.extend_from_slice(&g.result);
+            }
             Ok(())
         }
     }
@@ -496,6 +637,142 @@ mod tests {
                 assert_eq!(x, step as f32);
             }
         }
+    }
+
+    #[test]
+    fn scatter_into_distributes_chunks_by_member_index() {
+        let pool = pool();
+        let g = pool.get(&[4, 5, 6, 7]).unwrap();
+        // Root mid-group (rank 6) and three rounds through the same caller
+        // buffers: member i must receive chunk i of that round's payload.
+        let handles: Vec<_> = [4usize, 5, 6, 7]
+            .into_iter()
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut out = Vec::new();
+                    let mut rounds = Vec::new();
+                    for round in 0..3 {
+                        let send: Vec<f32> = if r == 6 {
+                            (0..8).map(|i| (100 * round + i) as f32).collect()
+                        } else {
+                            Vec::new()
+                        };
+                        g.scatter_into(r, 6, &send, &mut out).unwrap();
+                        rounds.push(out.clone());
+                    }
+                    rounds
+                })
+            })
+            .collect();
+        for (m, h) in handles.into_iter().enumerate() {
+            let rounds = h.join().unwrap();
+            for (round, out) in rounds.iter().enumerate() {
+                let want: Vec<f32> =
+                    (0..2).map(|i| (100 * round + 2 * m + i) as f32).collect();
+                assert_eq!(out, &want, "member {m} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_into_concatenates_at_root_only() {
+        let pool = pool();
+        let g = pool.get(&[0, 1, 2, 3]).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut out = vec![9.0; 3]; // stale contents must vanish
+                    g.gather_into(r, 1, &[r as f32, 0.25], &mut out).unwrap();
+                    out
+                })
+            })
+            .collect();
+        for (m, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            if m == 1 {
+                let want: Vec<f32> = (0..4).flat_map(|i| [i as f32, 0.25]).collect();
+                assert_eq!(out, want, "root gather");
+            } else {
+                assert!(out.is_empty(), "non-root member {m} must receive nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_and_gather_singletons_are_copies() {
+        let pool = pool();
+        let g = pool.get(&[3]).unwrap();
+        let mut out = vec![0.0; 4];
+        g.scatter_into(3, 3, &[1.0, 2.0], &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0]);
+        g.gather_into(3, 3, &[5.0], &mut out).unwrap();
+        assert_eq!(out, vec![5.0]);
+    }
+
+    #[test]
+    fn scatter_rejects_non_member_root() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let mut out = Vec::new();
+        assert!(matches!(
+            g.scatter_into(0, 5, &[1.0, 2.0], &mut out).unwrap_err(),
+            CommError::NotAMember { .. }
+        ));
+    }
+
+    #[test]
+    fn gather_rejects_mismatched_shapes_loudly() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        // One member contributes a short buffer: every member must get the
+        // shape error, not a silently misaligned concatenation.
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let data: Vec<f32> = if r == 0 { vec![1.0, 2.0] } else { vec![3.0] };
+                    let mut out = Vec::new();
+                    g.gather_into(r, 0, &data, &mut out).unwrap_err()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), CommError::GatherShape);
+        }
+        // The communicator stays usable for the next (well-shaped) round.
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut out = Vec::new();
+                    g.gather_into(r, 0, &[r as f32], &mut out).unwrap();
+                    out
+                })
+            })
+            .collect();
+        for (m, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            if m == 0 {
+                assert_eq!(out, vec![0.0, 1.0]);
+            } else {
+                assert!(out.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_rejects_indivisible_payload() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        let mut out = Vec::new();
+        // Root-side contract violation fails loudly before entering the
+        // collective (no silent tail truncation).
+        assert!(matches!(
+            g.scatter_into(0, 0, &[1.0, 2.0, 3.0], &mut out).unwrap_err(),
+            CommError::ScatterShape { len: 3, p: 2 }
+        ));
     }
 
     #[test]

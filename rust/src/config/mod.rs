@@ -26,6 +26,10 @@ pub struct ServeConfig {
     /// (`coordinator::strategy::SwitchConfig`).  Off by default: the
     /// transition then behaves exactly as PR 1/2.
     pub switch_backfill: bool,
+    /// Layout-preserving KV migration on DP→TP promotion
+    /// (`SwitchConfig::migrate`).  Off by default: promotion then
+    /// re-prefills speculative KV exactly as PR 1/3.
+    pub switch_migrate: bool,
 }
 
 impl Default for ServeConfig {
@@ -42,6 +46,7 @@ impl Default for ServeConfig {
             n_requests: 64,
             verbose: false,
             switch_backfill: false,
+            switch_migrate: false,
         }
     }
 }
@@ -86,6 +91,7 @@ impl ServeConfig {
                 "requests" => c.n_requests = v.parse()?,
                 "verbose" => c.verbose = v == "true",
                 "switch-backfill" => c.switch_backfill = v == "true",
+                "switch-migrate" => c.switch_migrate = v == "true",
                 _ => bail!("unknown flag --{k}"),
             }
         }
@@ -93,10 +99,12 @@ impl ServeConfig {
     }
 
     /// Switch-transition tuning for the real coordinator, derived from the
-    /// `--switch-backfill` flag (other knobs keep their defaults).
+    /// `--switch-backfill` / `--switch-migrate` flags (other knobs keep
+    /// their defaults).
     pub fn make_switch_config(&self) -> crate::coordinator::strategy::SwitchConfig {
         crate::coordinator::strategy::SwitchConfig {
             backfill: self.switch_backfill,
+            migrate: self.switch_migrate,
             ..Default::default()
         }
     }
@@ -168,6 +176,16 @@ mod tests {
         assert!(c.switch_backfill);
         assert!(c.make_switch_config().backfill);
         assert!(!ServeConfig::default().make_switch_config().backfill);
+    }
+
+    #[test]
+    fn switch_migrate_flag_parses() {
+        let (_, flags) = parse_args(&s(&["--switch-migrate"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert!(c.switch_migrate);
+        assert!(c.make_switch_config().migrate);
+        assert!(!c.make_switch_config().backfill, "flags stay independent");
+        assert!(!ServeConfig::default().make_switch_config().migrate);
     }
 
     #[test]

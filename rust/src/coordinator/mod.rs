@@ -55,6 +55,19 @@
 //! scheduler steps) to finish inside the drain horizon, and members switch
 //! into the target mode *incrementally* as they drain (`Group::settled_mask`)
 //! so the final promotion only pays the stragglers' mode RPCs.
+//!
+//! # KV migration (ISSUE 4)
+//!
+//! With `SwitchConfig::migrate` on, promoting a soft-preempted speculative
+//! request *carries* its cached KV across the DP→TP layout change instead of
+//! re-prefilling it: the home engine re-tags a prefix of the request's
+//! blocks in place as TP shard views (Eqs. 2–3 make the bytes
+//! layout-invariant), the other members allocate fresh blocks and receive
+//! their head slices through `Communicator::scatter_into`, and decoding
+//! resumes at the same position.  The per-request migrate-vs-recompute
+//! decision is `CostModel::migrate_wins` — the identical rule the simulator
+//! event core applies.  Off (the default) keeps the PR-1/3 recompute path
+//! byte-identical.
 
 pub mod policy;
 pub mod strategy;
@@ -67,9 +80,10 @@ use anyhow::{bail, Result};
 
 use crate::comm::CommunicatorPool;
 use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChunk};
-use crate::kv::{KvCacheAdaptor, KvHandle};
+use crate::kv::{KvCacheAdaptor, KvHandle, MigrationPlan};
 use crate::metrics::{RecSlot, Recorder};
 use crate::model::{ModelCfg, StaticShapes};
+use crate::sim::{CostModel, HwSpec, PaperModel};
 use crate::util::slab::{Slab, SlabHandle};
 use crate::workload::Priority;
 use policy::{ModeDecision, Policy, Snapshot};
@@ -153,6 +167,10 @@ pub struct ClusterOutcome {
     pub switches: Vec<SwitchEvent>,
     /// Scheduling iterations that issued at least one engine step.
     pub n_steps: usize,
+    /// Tokens whose cached KV was carried across a DP→TP layout change by
+    /// migration instead of being re-prefilled (`SwitchConfig::migrate`;
+    /// always 0 with the flag off).
+    pub recompute_tokens_avoided: usize,
 }
 
 /// One work-issue record: enough to collect replies and publish results
@@ -205,6 +223,14 @@ struct StepScratch {
     /// Ping-pong buffers for the waiting-ring drain in `assign_waiting`.
     drain_hi: VecDeque<SlabHandle>,
     drain_lo: VecDeque<SlabHandle>,
+    /// Held-committed-blocks per engine for the request currently being
+    /// promoted (filled once per request in `settle_groups` instead of
+    /// re-filtering its committed list for every group member).
+    held_by_engine: Vec<usize>,
+    /// Reusable KV-migration plan buffers (`SwitchConfig::migrate`): the
+    /// promotion path plans/applies into these, so migration performs zero
+    /// steady-state heap allocation once warm.
+    migration_plan: MigrationPlan,
     /// Per-engine drain-horizon step counts, recomputed once per
     /// `assign_waiting` pass (0 = engine not backfillable).  Horizons only
     /// move between execute steps, so one scan serves the whole walk.
@@ -248,6 +274,14 @@ pub struct Cluster {
     t0: Instant,
     n_steps: usize,
     switch_cfg: SwitchConfig,
+    /// Cumulative tokens carried across layout changes by KV migration.
+    recompute_tokens_avoided: usize,
+    /// Cost model backing the shared migrate-vs-recompute rule
+    /// (`CostModel::migrate_wins`) — the identical rule the simulator event
+    /// core applies, so decisions stay byte-comparable across paths.
+    /// Calibrated to the paper-scale node; fitting a testbed-scale model
+    /// from measured stub/PJRT step times is a ROADMAP open item.
+    migrate_cm: CostModel,
 
     // O(1) engine-state indexes (≤ 64 engines):
     /// Engines currently in unit (DP) mode.
@@ -362,6 +396,8 @@ impl Cluster {
             t0: Instant::now(),
             n_steps: 0,
             switch_cfg: SwitchConfig::default(),
+            recompute_tokens_avoided: 0,
+            migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
             unit_mask: 0,
             idle_mask: 0,
             draining_mask: 0,
@@ -390,6 +426,16 @@ impl Cluster {
 
     pub fn switch_config(&self) -> SwitchConfig {
         self.switch_cfg
+    }
+
+    /// Override the cost model behind the migrate-vs-recompute rule.  The
+    /// default is the paper-scale Llama-70B model (always-migrate at any
+    /// realistic context); deployments serving a different model — or a
+    /// future testbed-calibrated fit (ROADMAP open item) — install the
+    /// matching model here so the real path and the simulator keep applying
+    /// the same rule to the same hardware story.
+    pub fn set_migration_cost_model(&mut self, cm: CostModel) {
+        self.migrate_cm = cm;
     }
 
     fn members(&self, start: usize, p: usize) -> std::ops::Range<usize> {
@@ -492,6 +538,7 @@ impl Cluster {
         let mut recorder = Recorder::new();
         self.t0 = Instant::now();
         self.n_steps = 0;
+        self.recompute_tokens_avoided = 0;
         let mut next_arrival = 0usize;
         let mut idle_iters = 0usize;
 
@@ -561,7 +608,15 @@ impl Cluster {
             rejected: std::mem::take(&mut self.rejected),
             switches: std::mem::take(&mut self.switches),
             n_steps: self.n_steps,
+            recompute_tokens_avoided: self.recompute_tokens_avoided,
         })
+    }
+
+    /// Cumulative tokens carried across DP→TP layout changes by KV
+    /// migration instead of recompute (for `step_once`-driven harnesses;
+    /// [`Self::run_trace`] reports the same figure in its outcome).
+    pub fn recompute_tokens_avoided(&self) -> usize {
+        self.recompute_tokens_avoided
     }
 
     /// Submit a request straight into the task pool (schedulable from the
@@ -1079,6 +1134,8 @@ impl Cluster {
         let mut starts = std::mem::take(&mut self.scratch.starts);
         starts.clear();
         starts.extend(self.groups.keys().copied());
+        let mut held = std::mem::take(&mut self.scratch.held_by_engine);
+        let mut plan = std::mem::take(&mut self.scratch.migration_plan);
         let mut dirty_draining = false;
         for si in 0..starts.len() {
             let start = starts[si];
@@ -1200,47 +1257,140 @@ impl Cluster {
                         }
                         // Admission: TP-layout headroom on every member
                         // (the request's own held commitment is discounted).
+                        // Held-per-engine is filled once per request —
+                        // O(|committed|) total — instead of re-filtering the
+                        // committed list for every group member.
                         let need_p = self.block_need(h, p);
+                        held.clear();
+                        held.resize(self.engines.len(), 0);
+                        for &(ce, b) in &self.active.get(h).expect("live").committed {
+                            held[ce] += b;
+                        }
                         let room = self.members(start, p).all(|e| {
-                            let held = self
-                                .active
-                                .get(h)
-                                .expect("live")
-                                .committed
-                                .iter()
-                                .filter(|&&(ce, _)| ce == e)
-                                .map(|&(_, b)| b)
-                                .sum::<usize>();
-                            self.engine_committed[e] - held + need_p <= self.cfg.n_blocks - 1
+                            self.engine_committed[e] - held[e] + need_p
+                                <= self.cfg.n_blocks - 1
                         });
                         if !room {
                             self.groups.get_mut(&start).unwrap().tp_pending.push(h);
                             continue;
                         }
-                        // If it ran speculatively, drop its DP-layout KV and
-                        // schedule the TP recompute (§5.2.2).
-                        let (was_spec, spec_home, rid) = {
+                        let (was_spec, spec_home, rid, kv_pos) = {
                             let a = self.active.get(h).expect("live");
-                            (a.speculative, a.home, a.sr.id)
+                            (a.speculative, a.home, a.sr.id, a.pos)
                         };
-                        if was_spec {
-                            self.adaptors[spec_home].release(rid)?;
+                        // Migrate-vs-recompute (ISSUE 4): the cost model's
+                        // shared rule — the identical comparison the sim
+                        // event core applies — decides whether the
+                        // speculative request's KV bytes are carried across
+                        // the layout change or re-prefilled.
+                        let migrate_kv = was_spec
+                            && self.switch_cfg.migrate
+                            && kv_pos > 0
+                            && self
+                                .migrate_cm
+                                .migrate_wins(kv_pos, p * self.migrate_cm.model.min_gpus);
+                        if migrate_kv {
+                            // Home side: pin seq_len to the cached position
+                            // (prefill never advances it), then re-tag the
+                            // DP blocks in place as TP shard views through
+                            // the reusable scratch plan — zero copy, zero
+                            // steady-state allocation.
+                            let kh_home = self
+                                .active
+                                .get(h)
+                                .expect("live")
+                                .kvh
+                                .iter()
+                                .find(|&&(ke, _)| ke == spec_home)
+                                .map(|&(_, kh)| kh)
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "speculative request {rid} has no kv registration on engine {spec_home}"
+                                    )
+                                })?;
+                            self.adaptors[spec_home].set_seq_len_h(kh_home, kv_pos)?;
+                            self.adaptors[spec_home].plan_migration(kh_home, p, &mut plan)?;
+                            self.adaptors[spec_home].apply_migration(kh_home, &plan)?;
                             self.engine_active[spec_home].retain(|&x| x != h);
                             self.refresh_engine(spec_home);
-                            let a = self.active.get_mut(h).expect("live");
-                            a.kvh.retain(|&(e, _)| e != spec_home);
-                            a.speculative = false;
-                            // Recompute prompt + already-fed output tokens;
-                            // the emitted tail token is re-fed automatically
-                            // (decode always feeds `emitted.last()`).
-                            a.pos = 0;
-                            a.phase = Phase::Prefill;
-                        }
-                        self.uncommit_all(h);
-                        for e in self.members(start, p) {
-                            self.commit(h, e, need_p);
-                            let kh = self.adaptors[e].register(rid, p)?;
-                            self.active.get_mut(h).expect("live").kvh.push((e, kh));
+                            self.active.get_mut(h).expect("live").speculative = false;
+                            self.uncommit_all(h);
+                            // The other members allocate fresh blocks for
+                            // their shard slices; the home registration (and
+                            // its handle) survives as-is.
+                            for e in self.members(start, p) {
+                                self.commit(h, e, need_p);
+                                if e != spec_home {
+                                    let kh = self.adaptors[e].register(rid, p)?;
+                                    self.adaptors[e].ensure_capacity_h(kh, kv_pos)?;
+                                    self.adaptors[e].set_seq_len_h(kh, kv_pos)?;
+                                    self.active.get_mut(h).expect("live").kvh.push((e, kh));
+                                }
+                            }
+                            // Data plane: the whole group meets the scatter
+                            // at this safe point (lockstep guarantees no
+                            // step is in flight), moving only the other
+                            // members' head slices over the interconnect.
+                            for e in self.members(start, p) {
+                                self.engines[e].send(EngineCmd::KvMigrate {
+                                    p,
+                                    root: spec_home,
+                                    n_elems: plan.elems_per_member,
+                                });
+                            }
+                            // Collect every member's reply before surfacing
+                            // an error: bailing mid-collection would leave
+                            // replies queued on the persistent channels and
+                            // mis-attribute them to the next command a
+                            // `step_once`-driven host issues.
+                            let mut first_err: Option<String> = None;
+                            for e in self.members(start, p) {
+                                match self.engines[e].recv() {
+                                    Ok(EngineReply::Err(msg)) => {
+                                        if first_err.is_none() {
+                                            first_err =
+                                                Some(format!("engine {e}: {msg}"));
+                                        }
+                                    }
+                                    Ok(_) => {}
+                                    Err(dead) => {
+                                        if first_err.is_none() {
+                                            first_err = Some(dead.to_string());
+                                        }
+                                    }
+                                }
+                            }
+                            if let Some(msg) = first_err {
+                                bail!("kv migration failed: {msg}");
+                            }
+                            self.recompute_tokens_avoided += kv_pos;
+                            // pos/phase stay untouched: decode (or the
+                            // remaining prefill) resumes exactly where the
+                            // speculative run left off — nothing recomputed.
+                        } else {
+                            if was_spec {
+                                // Drop the speculative DP-layout KV and
+                                // schedule the TP recompute (§5.2.2) — the
+                                // PR-1/3 path, byte-identical with the
+                                // migrate flag off.
+                                self.adaptors[spec_home].release(rid)?;
+                                self.engine_active[spec_home].retain(|&x| x != h);
+                                self.refresh_engine(spec_home);
+                                let a = self.active.get_mut(h).expect("live");
+                                a.kvh.retain(|&(e, _)| e != spec_home);
+                                a.speculative = false;
+                                // Recompute prompt + already-fed output tokens;
+                                // the emitted tail token is re-fed automatically
+                                // (decode always feeds `emitted.last()`).
+                                a.pos = 0;
+                                a.phase = Phase::Prefill;
+                            }
+                            self.uncommit_all(h);
+                            for e in self.members(start, p) {
+                                self.commit(h, e, need_p);
+                                let kh = self.adaptors[e].register(rid, p)?;
+                                self.active.get_mut(h).expect("live").kvh.push((e, kh));
+                            }
                         }
                         let a = self.active.get_mut(h).expect("live");
                         a.mode_p = p;
@@ -1254,6 +1404,8 @@ impl Cluster {
             }
         }
         self.scratch.starts = starts;
+        self.scratch.held_by_engine = held;
+        self.scratch.migration_plan = plan;
         if dirty_draining {
             self.refresh_draining();
         }

@@ -66,6 +66,20 @@ impl std::str::FromStr for Strategy {
 ///   switched into the target TP mode one by one instead of waiting for the
 ///   last straggler, so the final promotion only pays the stragglers' mode
 ///   RPCs.
+/// With `migrate = true` (ISSUE 4):
+///
+/// * **Layout-preserving KV migration** — when a soft-preempted speculative
+///   request is promoted into its TP group, its DP-layout KV is *carried*
+///   instead of recomputed: the home engine re-tags a prefix of the
+///   request's blocks in place as TP shard views (Eqs. 2–3 make the bytes
+///   layout-invariant — zero copy), the other members allocate fresh blocks
+///   and receive their head slices through `Communicator::scatter_into`,
+///   and decoding resumes exactly where it left off.  Per request the
+///   coordinator applies the cost model's migrate-vs-recompute rule
+///   (`CostModel::migrate_wins`: KV bytes over the link vs re-prefill
+///   FLOPs), the identical rule the simulator event core applies, so the
+///   two paths stay byte-comparable.  Off (the default) keeps the PR-1/3
+///   recompute path untouched.
 #[derive(Clone, Copy, Debug)]
 pub struct SwitchConfig {
     pub backfill: bool,
@@ -74,6 +88,8 @@ pub struct SwitchConfig {
     /// Admission slack: a request is backfillable when its predicted step
     /// count is <= `backfill_margin` x the drain-horizon step count.
     pub backfill_margin: f64,
+    /// Layout-preserving KV migration on DP→TP promotion (`--switch-migrate`).
+    pub migrate: bool,
 }
 
 impl Default for SwitchConfig {
@@ -82,6 +98,7 @@ impl Default for SwitchConfig {
             backfill: false,
             max_backfill_per_engine: 1,
             backfill_margin: 1.0,
+            migrate: false,
         }
     }
 }

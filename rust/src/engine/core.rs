@@ -401,4 +401,54 @@ impl super::EngineBackend for EngineCore {
     fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>> {
         EngineCore::tp_prefill(self, p, chunk)
     }
+
+    fn migrate_kv(&mut self, p: usize, root: usize, n_elems: usize) -> Result<()> {
+        // KV-migration data plane (ISSUE 4): the root's re-tagged pool
+        // already holds every member's slice (Eq. 2 keeps block bytes
+        // layout-invariant), so the scatter distributes the other ranks'
+        // head slices through the pre-built communicator.  The repro's KV
+        // pools are host-resident f32 vectors and the command carries only
+        // the byte volume, so this models the transfer (correct volume,
+        // correct synchronization) without placing the bytes; block-
+        // granular placement needs the slot table threaded through the
+        // command — extend this alongside the TP engine-path arena work
+        // (ROADMAP open item) once a PJRT environment exists to verify
+        // against.
+        if !self.cfg().supports_tp(p) {
+            bail!("model {} does not support TP degree {p}", self.model);
+        }
+        if self.mode_p != p {
+            bail!("engine {} not in TP-{p} mode for kv migration", self.id);
+        }
+        if p == 1 {
+            return Ok(());
+        }
+        let group = self.comm.group_of(self.id, p)?;
+        let send: Vec<f32> = if self.id == root {
+            let total = p * n_elems;
+            let mut v = vec![0f32; total];
+            if let Some(kp) = self.k_pools.first() {
+                let take = total.min(kp.len());
+                v[..take].copy_from_slice(&kp[..take]);
+            }
+            v
+        } else {
+            Vec::new()
+        };
+        let mut recv = Vec::new();
+        group.scatter_into(self.id, root, &send, &mut recv)?;
+        anyhow::ensure!(
+            recv.len() == n_elems,
+            "engine {}: migration slice {} != {n_elems}",
+            self.id,
+            recv.len()
+        );
+        // The received slice is deliberately NOT written into the pools
+        // yet: without the request's slot table there is no correct
+        // destination, and writing to any fixed region would corrupt
+        // resident requests' live KV.  The staged buffer is dropped; the
+        // coordinator's adaptor metadata stays authoritative until the
+        // slot-aware placement lands (see the comment above).
+        Ok(())
+    }
 }

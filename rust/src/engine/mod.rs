@@ -63,6 +63,11 @@ pub trait EngineBackend {
     /// One TP decode step for this rank (meets the group in collectives).
     fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>>;
     fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>>;
+    /// KV-migration data plane (ISSUE 4): meet the p-wide group in a
+    /// scatter that distributes `n_elems` f32 slice elements from `root`'s
+    /// re-tagged KV to every other member.  Issued to all members at the
+    /// same safe point, like the TP step commands.
+    fn migrate_kv(&mut self, p: usize, root: usize, n_elems: usize) -> Result<()>;
 }
 
 #[derive(Debug)]
@@ -76,6 +81,11 @@ pub enum EngineCmd {
     /// point and meet in the communicator's collectives.
     TpDecode { p: usize, batch: Arc<Vec<DecodeSlot>> },
     TpPrefill { p: usize, chunk: Arc<PrefillChunk> },
+    /// Layout-preserving KV migration (ISSUE 4): every member of the p-wide
+    /// group receives this at the same safe point; the `root` rank scatters
+    /// the other members' shard slices (`n_elems` f32 each) through the
+    /// pre-built communicator.
+    KvMigrate { p: usize, root: usize, n_elems: usize },
     Stop,
 }
 
@@ -149,6 +159,12 @@ impl EngineHandle {
                             Ok(l) => EngineReply::LastLogits(l),
                             Err(e) => EngineReply::Err(format!("{e:#}")),
                         },
+                        EngineCmd::KvMigrate { p, root, n_elems } => {
+                            match backend.migrate_kv(p, root, n_elems) {
+                                Ok(()) => EngineReply::Ok,
+                                Err(e) => EngineReply::Err(format!("{e:#}")),
+                            }
+                        }
                         EngineCmd::Stop => {
                             let _ = reply_tx.send(EngineReply::Ok);
                             break;
@@ -317,6 +333,24 @@ mod tests {
             r => panic!("unexpected {r:?}"),
         };
         assert_eq!(r0, r1);
+    }
+
+    #[test]
+    fn stub_pair_meets_in_kv_migration_scatter() {
+        let comm = Arc::new(CommunicatorPool::new(2, &[1, 2], Duration::from_secs(2)));
+        let e0 = EngineHandle::spawn_stub(0, cfg(), shapes(), comm.clone()).unwrap();
+        let e1 = EngineHandle::spawn_stub(1, cfg(), shapes(), comm).unwrap();
+        e0.call(EngineCmd::SetMode { p: 2 }).unwrap();
+        e1.call(EngineCmd::SetMode { p: 2 }).unwrap();
+        // Both members must be launched concurrently (they meet in the
+        // scatter); root mid-command works like the TP step commands.
+        e0.send(EngineCmd::KvMigrate { p: 2, root: 1, n_elems: 64 });
+        e1.send(EngineCmd::KvMigrate { p: 2, root: 1, n_elems: 64 });
+        assert!(matches!(e0.recv().unwrap(), EngineReply::Ok));
+        assert!(matches!(e1.recv().unwrap(), EngineReply::Ok));
+        // Wrong mode surfaces as an error, not a hang.
+        e0.call(EngineCmd::SetMode { p: 1 }).unwrap();
+        assert!(e0.call(EngineCmd::KvMigrate { p: 2, root: 0, n_elems: 8 }).is_err());
     }
 
     #[test]

@@ -47,6 +47,10 @@ pub struct StubEngine {
     /// communicator pool so group lockstep (and its failure modes) are
     /// exercised, allocation-free.
     reduce_scratch: Vec<f32>,
+    /// Reused staging buffers for the KV-migration scatter (root-side
+    /// payload / member-side received slice).
+    migrate_send: Vec<f32>,
+    migrate_recv: Vec<f32>,
 }
 
 impl StubEngine {
@@ -56,7 +60,16 @@ impl StubEngine {
         shapes: StaticShapes,
         comm: Arc<CommunicatorPool>,
     ) -> Self {
-        StubEngine { id, cfg, shapes, comm, mode_p: 1, reduce_scratch: vec![0.0; 8] }
+        StubEngine {
+            id,
+            cfg,
+            shapes,
+            comm,
+            mode_p: 1,
+            reduce_scratch: vec![0.0; 8],
+            migrate_send: Vec::new(),
+            migrate_recv: Vec::new(),
+        }
     }
 
     fn logits_row(&self, token: i32, pos: usize) -> Vec<f32> {
@@ -109,6 +122,37 @@ impl EngineBackend for StubEngine {
         ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
         self.tp_sync(p)?;
         self.dp_prefill(chunk)
+    }
+
+    fn migrate_kv(&mut self, p: usize, root: usize, n_elems: usize) -> Result<()> {
+        ensure!(
+            self.mode_p == p,
+            "engine {} not in TP-{p} mode for kv migration",
+            self.id
+        );
+        if p == 1 {
+            return Ok(());
+        }
+        let group = self.comm.group_of(self.id, p)?;
+        // The stub holds no real KV bytes (logits are a pure function of the
+        // fed token/position), so the payload is synthetic — what this
+        // exercises is the real data-plane mechanism: every member meeting
+        // the same scatter at the same safe point, watchdog included.
+        self.migrate_send.clear();
+        if self.id == root {
+            self.migrate_send.resize(p * n_elems, 0.0);
+            for (i, x) in self.migrate_send.iter_mut().enumerate() {
+                *x = (i % 251) as f32;
+            }
+        }
+        group.scatter_into(self.id, root, &self.migrate_send, &mut self.migrate_recv)?;
+        ensure!(
+            self.migrate_recv.len() == n_elems,
+            "engine {}: migration slice {} != {n_elems}",
+            self.id,
+            self.migrate_recv.len()
+        );
+        Ok(())
     }
 }
 

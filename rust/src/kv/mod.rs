@@ -42,6 +42,48 @@ pub type KvHandle = SlabHandle;
 /// here so kernels need no conditionals.  Never allocated to a request.
 pub const TRASH_BLOCK: u32 = 0;
 
+/// One request's cross-layout migration recipe (ISSUE 4): how its cached KV
+/// is carried from `from_p` to `to_p` **without recompute**, exploiting the
+/// block invariants of Eqs. 2–3 — the same physical bytes cover the home
+/// rank's `1/p` head slice for `p×` tokens, so the home side re-tags a
+/// prefix of its existing blocks in place (zero copy) and only the other
+/// members' slices cross the interconnect (scatter; the TP→DP direction is
+/// the inverse gather).
+///
+/// Produced by [`KvCacheAdaptor::plan_migration`] against current adaptor
+/// state and executed by [`KvCacheAdaptor::apply_migration`].  Every field
+/// is a reusable buffer/scalar: callers keep one plan in their step scratch
+/// and the plan/apply pair performs zero steady-state heap allocation once
+/// warm (the PR-1 coordinator invariant).
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    pub rid: u64,
+    pub from_p: usize,
+    pub to_p: usize,
+    /// Tokens whose KV the plan carries across the layout change.
+    pub seq_len: usize,
+    /// Home-side blocks re-tagged in place as `to_p`-layout views: always a
+    /// prefix of the request's block list, zero bytes moved.
+    pub retag: Vec<u32>,
+    /// Home-side surplus blocks returned to the pool (promote direction:
+    /// `to_p > from_p` shrinks the per-member block count).
+    pub free: Vec<u32>,
+    /// Blocks the home side must newly allocate (demote/gather direction:
+    /// `to_p < from_p` grows the per-member block count).
+    pub grow: usize,
+    /// Blocks each of the other group members must allocate fresh to hold
+    /// their scattered slice (equals `retag.len() + grow`).
+    pub peer_blocks: usize,
+    /// f32 elements of one member's slice (`seq_len * kv_width(wide)`), the
+    /// unit the scatter/gather data plane moves per member.
+    pub elems_per_member: usize,
+    /// Bytes that must cross the interconnect: the `(wide-1)/wide` fraction
+    /// of the request's KV footprint not already resident at its
+    /// destination (`wide = max(from_p, to_p)`).  This is the numerator of
+    /// the cost model's `migrate_t`.
+    pub link_bytes: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct RequestKv {
     pub rid: u64,         // external request id (for invariants/iteration)
@@ -277,6 +319,105 @@ impl KvCacheAdaptor {
         req.row.fill(TRASH_BLOCK as i32);
         self.free.extend(blocks.into_iter().rev());
         Ok(recompute)
+    }
+
+    /// Plan a layout-preserving migration of this request's cached KV to
+    /// degree `new_p` (ISSUE 4): the recipe that lets a DP↔TP switch carry
+    /// the KV instead of recomputing it.  Read-only — computes into the
+    /// caller's reusable `plan` buffers and fails (leaving everything
+    /// unchanged) if the pool cannot supply a demote-direction grow.
+    pub fn plan_migration(
+        &self,
+        h: KvHandle,
+        new_p: usize,
+        plan: &mut MigrationPlan,
+    ) -> Result<()> {
+        if !self.cfg.supports_tp(new_p) {
+            bail!("unsupported TP degree {new_p}");
+        }
+        let req = self
+            .requests
+            .get(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
+        let seq = req.seq_len;
+        let bt_new = self.cfg.block_tokens(new_p);
+        let need_new = seq.div_ceil(bt_new);
+        let have = req.blocks.len();
+        let keep = need_new.min(have);
+        let grow = need_new - keep;
+        if grow > self.free.len() {
+            bail!(
+                "kv pool exhausted: migration of request {} to p={new_p} needs {grow} more blocks, {} free",
+                req.rid,
+                self.free.len()
+            );
+        }
+        plan.rid = req.rid;
+        plan.from_p = req.layout_p;
+        plan.to_p = new_p;
+        plan.seq_len = seq;
+        plan.retag.clear();
+        plan.retag.extend_from_slice(&req.blocks[..keep]);
+        plan.free.clear();
+        plan.free.extend_from_slice(&req.blocks[keep..]);
+        plan.grow = grow;
+        plan.peer_blocks = need_new;
+        let wide = req.layout_p.max(new_p);
+        plan.elems_per_member = seq * self.cfg.kv_width(wide);
+        plan.link_bytes = 4 * plan.elems_per_member * (wide - 1);
+        Ok(())
+    }
+
+    /// Execute a [`MigrationPlan`] on this (home-side) adaptor: re-tag the
+    /// kept prefix in place, return surplus blocks to the pool (promote) or
+    /// allocate the shortfall (demote), and re-tag the request under the new
+    /// layout.  The cached row is maintained incrementally (prefix ids are
+    /// untouched); `seq_len` is preserved — nothing needs recomputing.  The
+    /// handle stays valid.  Other group members hold no prior state for the
+    /// request and simply `register` + `ensure_capacity` their fresh blocks,
+    /// then receive their slices through `Communicator::scatter_into`.
+    pub fn apply_migration(&mut self, h: KvHandle, plan: &MigrationPlan) -> Result<()> {
+        if !self.cfg.supports_tp(plan.to_p) {
+            bail!("unsupported TP degree {}", plan.to_p);
+        }
+        if plan.grow > self.free.len() {
+            bail!("kv pool exhausted mid-migration (plan is stale)");
+        }
+        let req = self
+            .requests
+            .get(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
+        if req.rid != plan.rid || req.layout_p != plan.from_p || req.seq_len != plan.seq_len {
+            bail!(
+                "stale migration plan for request {} (state moved since planning)",
+                req.rid
+            );
+        }
+        let keep = plan.retag.len();
+        if req.blocks.len() != keep + plan.free.len()
+            || req.blocks[..keep] != plan.retag[..]
+            || req.blocks[keep..] != plan.free[..]
+        {
+            bail!("migration plan does not match request {}'s block list", req.rid);
+        }
+        let req = self.requests.get_mut(h).unwrap();
+        // Promote: surplus blocks leave from the tail (the retagged prefix
+        // keeps its ids, so the cached row prefix is already correct).
+        for i in (keep..req.blocks.len()).rev() {
+            let b = req.blocks[i];
+            req.row[i] = TRASH_BLOCK as i32;
+            self.free.push(b);
+        }
+        req.blocks.truncate(keep);
+        // Demote: grow the shortfall from the pool (checked above).
+        for _ in 0..plan.grow {
+            let b = self.free.pop().unwrap();
+            req.row[req.blocks.len()] = b as i32;
+            req.blocks.push(b);
+        }
+        req.layout_p = plan.to_p;
+        debug_assert!(req.seq_len <= req.blocks.len() * self.cfg.block_tokens(plan.to_p));
+        Ok(())
     }
 
     /// Finish/abort a request: return its blocks to the pool and invalidate
@@ -574,6 +715,168 @@ mod tests {
     fn mode_switch_is_metadata_only() {
         let a = KvCacheAdaptor::new(cfg());
         assert_eq!(a.switch_mode_metadata_cost(), 0);
+    }
+
+    // -----------------------------------------------------------------
+    // Layout-preserving migration (ISSUE 4)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn migration_promote_retags_prefix_in_place() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h, 12).unwrap(); // 3 blocks of 4 tokens
+        a.set_seq_len_h(h, 12).unwrap();
+        let before = a.request_h(h).unwrap().blocks.clone();
+        let free_before = a.free_blocks();
+        let mut plan = MigrationPlan::default();
+        a.plan_migration(h, 2, &mut plan).unwrap();
+        // 12 tokens under B(2)=8 need 2 blocks: keep 2, free 1, move the
+        // peer's half-width slice only.
+        assert_eq!(plan.retag, &before[..2]);
+        assert_eq!(plan.free, &before[2..]);
+        assert_eq!(plan.grow, 0);
+        assert_eq!(plan.peer_blocks, 2);
+        assert_eq!(plan.elems_per_member, 12 * cfg().kv_width(2));
+        assert_eq!(plan.link_bytes, 4 * plan.elems_per_member);
+        a.apply_migration(h, &plan).unwrap();
+        let req = a.request_h(h).unwrap();
+        assert_eq!(req.layout_p, 2);
+        assert_eq!(req.seq_len, 12, "migration must not lose cached tokens");
+        assert_eq!(req.blocks, &before[..2], "kept blocks re-tagged in place");
+        assert_eq!(a.free_blocks(), free_before + 1);
+        // Every cached position still resolves to a slot under the new
+        // layout (token coverage preserved).
+        for pos in 0..12 {
+            a.slot_h(h, pos).unwrap();
+        }
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migration_demote_grows_from_pool() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h = a.register(1, 4).unwrap();
+        a.ensure_capacity_h(h, 20).unwrap(); // 2 blocks of 16 tokens
+        a.set_seq_len_h(h, 20).unwrap();
+        let before = a.request_h(h).unwrap().blocks.clone();
+        let free_before = a.free_blocks();
+        let mut plan = MigrationPlan::default();
+        a.plan_migration(h, 1, &mut plan).unwrap();
+        // 20 tokens under B(1)=4 need 5 blocks: keep both, grow 3 (the
+        // gather direction — the DP target collects the slices it lacks).
+        assert_eq!(plan.retag, before);
+        assert!(plan.free.is_empty());
+        assert_eq!(plan.grow, 3);
+        assert_eq!(plan.elems_per_member, 20 * cfg().kv_width(4));
+        a.apply_migration(h, &plan).unwrap();
+        let req = a.request_h(h).unwrap();
+        assert_eq!(req.layout_p, 1);
+        assert_eq!(req.seq_len, 20);
+        assert_eq!(req.blocks.len(), 5);
+        assert_eq!(&req.blocks[..2], &before[..]);
+        assert_eq!(a.free_blocks(), free_before - 3);
+        for pos in 0..20 {
+            a.slot_h(h, pos).unwrap();
+        }
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migration_oom_fails_cleanly_without_mutation() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h = a.register(1, 4).unwrap();
+        a.ensure_capacity_h(h, 64).unwrap(); // 4 blocks of 16
+        a.set_seq_len_h(h, 64).unwrap();
+        // Exhaust the pool with a second request.
+        a.register(2, 1).unwrap();
+        a.ensure_capacity(2, 11 * 4).unwrap();
+        assert_eq!(a.free_blocks(), 0);
+        // 64 tokens at p=1 need 16 blocks (> 4 held): the grow cannot be
+        // supplied, the plan must fail, and nothing may change.
+        let mut plan = MigrationPlan::default();
+        assert!(a.plan_migration(h, 1, &mut plan).is_err());
+        let req = a.request_h(h).unwrap();
+        assert_eq!(req.layout_p, 4);
+        assert_eq!(req.seq_len, 64);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_migration_plan_is_rejected() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let h = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h, 8).unwrap();
+        a.set_seq_len_h(h, 8).unwrap();
+        let mut plan = MigrationPlan::default();
+        a.plan_migration(h, 2, &mut plan).unwrap();
+        // State moves between plan and apply: the apply must refuse.
+        a.ensure_capacity_h(h, 16).unwrap();
+        a.set_seq_len_h(h, 16).unwrap();
+        assert!(a.apply_migration(h, &plan).is_err());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_migration_conserves_blocks_and_coverage() {
+        // ISSUE 4 conservation property: across random grow/migrate
+        // sequences, every source block is mapped exactly once (re-tagged
+        // prefix + freed tail partition the old list), byte totals are
+        // preserved (pool delta == free.len() - grow), token coverage
+        // survives every hop, and no free block is double-used
+        // (check_invariants' exclusive-ownership sweep).
+        prop_check("kv migration conservation", 120, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            let mut plan = MigrationPlan::default();
+            let p0 = *g.choose(&[1usize, 2, 4]);
+            let h = a.register(1, p0).map_err(|e| e.to_string())?;
+            // A second request keeps pool pressure realistic.
+            a.register(2, 1).map_err(|e| e.to_string())?;
+            let _ = a.ensure_capacity(2, g.usize(0, 24));
+            for _ in 0..g.usize(1, 8) {
+                let cur_p = a.request_h(h).unwrap().layout_p;
+                let want = g.usize(0, c.tp_token_capacity(cur_p).min(60));
+                if a.ensure_capacity_h(h, want).is_ok() {
+                    let cap =
+                        a.request_h(h).unwrap().blocks.len() * c.block_tokens(cur_p);
+                    a.set_seq_len_h(h, want.min(cap)).map_err(|e| e.to_string())?;
+                }
+                let new_p = *g.choose(&[1usize, 2, 4]);
+                let before = a.request_h(h).unwrap().blocks.clone();
+                let free_before = a.free_blocks();
+                let seq = a.request_h(h).unwrap().seq_len;
+                if a.plan_migration(h, new_p, &mut plan).is_err() {
+                    continue; // demote OOM: state must be untouched
+                }
+                // Partition: retag ++ free == the old block list, exactly.
+                let mut mapped = plan.retag.clone();
+                mapped.extend_from_slice(&plan.free);
+                crate::prop_assert_eq!(mapped, before);
+                a.apply_migration(h, &plan).map_err(|e| e.to_string())?;
+                let req = a.request_h(h).unwrap();
+                crate::prop_assert_eq!(req.layout_p, new_p);
+                crate::prop_assert_eq!(req.seq_len, seq);
+                crate::prop_assert_eq!(
+                    req.blocks.len(),
+                    plan.retag.len() + plan.grow
+                );
+                // Byte totals: pool delta matches the plan's free/grow.
+                crate::prop_assert_eq!(
+                    a.free_blocks() as i64,
+                    free_before as i64 + plan.free.len() as i64 - plan.grow as i64
+                );
+                // Token coverage preserved under the new layout.
+                for pos in (0..seq).step_by(3) {
+                    crate::prop_assert!(
+                        a.slot_h(h, pos).is_ok(),
+                        "position {pos} lost by migration to p={new_p}"
+                    );
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

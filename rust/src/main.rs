@@ -13,6 +13,8 @@
 //!               --policy flying|static-dp|static-tp --static-tp P
 //!               --strategy sequential|soft|hard --seed S --requests N
 //!               --listen ADDR --verbose
+//!               --switch-backfill (drain backfill + incremental settle)
+//!               --switch-migrate  (layout-preserving KV migration)
 
 use anyhow::{bail, Result};
 
@@ -128,6 +130,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
         let trace = generate(&WorkloadCfg::paper_full(cfg.seed, cfg.n_requests.max(500)));
         let sim_cfg = SimConfig {
             switch_backfill: cfg.switch_backfill,
+            switch_migrate: cfg.switch_migrate,
             ..SimConfig::default()
         };
         for sys in [
@@ -139,13 +142,14 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
             let o = simulate(sys, &cm, &trace, &sim_cfg);
             let s = o.recorder.summary(None);
             println!(
-                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s switch-stall={:6.1}s rejected={}",
+                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s switch-stall={:6.1}s kv-carried={} rejected={}",
                 sys.label(),
                 s.mean_ttft,
                 s.p90_ttft,
                 s.p50_tpot * 1e3,
                 s.peak_throughput,
                 o.switch_stall_s,
+                o.recompute_tokens_avoided,
                 o.rejected.len()
             );
         }

@@ -70,6 +70,17 @@ pub struct SimConfig {
     /// when on; `SimOutcome::switch_stall_s` measures the reclaimed idle
     /// capacity either way.
     pub switch_backfill: bool,
+    /// Layout-preserving KV migration (ISSUE 4).  Off (default): a DP→TP
+    /// merge hard-pauses every resident until the group splits — byte-
+    /// identical to `sim::reference`.  On: each decode-phase resident is
+    /// judged by the shared `CostModel::migrate_wins` rule (KV bytes over
+    /// the link vs re-prefill FLOPs — the identical rule the real
+    /// coordinator applies); winners are *carried live* into the forming
+    /// group (their KV migrated into the TP layout, `migrate_t` charged to
+    /// the merge horizon) and keep decoding through the window, and are
+    /// gathered back to unit engines when the group splits.
+    /// `SimOutcome::recompute_tokens_avoided` counts the tokens carried.
+    pub switch_migrate: bool,
 }
 
 impl Default for SimConfig {
@@ -79,6 +90,7 @@ impl Default for SimConfig {
             max_batch: 48,
             heartbeat_s: 0.004,
             switch_backfill: false,
+            switch_migrate: false,
         }
     }
 }
@@ -123,6 +135,14 @@ pub struct SimOutcome {
     /// capacity the drain barrier wastes.  (The loop reference does not
     /// track this; `outcomes_equivalent` ignores it.)
     pub switch_stall_s: f64,
+    /// Tokens of cached KV carried live across a DP→TP layout flip by
+    /// migration (`switch_migrate`), counted once per carried request at
+    /// merge/fold time — tokens a recompute-based carry would have
+    /// re-prefilled, the same once-per-promotion semantics as
+    /// `ClusterOutcome::recompute_tokens_avoided` on the real path.  The
+    /// split-time inverse gather is not re-counted.  Always 0 with the flag
+    /// off (and in the loop reference); `outcomes_equivalent` ignores it.
+    pub recompute_tokens_avoided: usize,
 }
 
 /// Outcome equivalence between two simulator runs: identical completion
@@ -182,6 +202,10 @@ struct SimReq {
     prefilled: usize,
     emitted: usize,
     paused: bool,
+    /// Carried live into a TP group by KV migration (`switch_migrate`):
+    /// keeps decoding through the merge window and is gathered back to a
+    /// unit engine at split time.  Never set with the flag off.
+    migrated: bool,
     rec: RecSlot,
 }
 
@@ -389,7 +413,9 @@ fn simulate_inner(
     let mut rejected: Vec<u64> = Vec::new();
     let mut n_switches = 0usize;
     let mut switch_stall_s = 0.0f64;
+    let mut recompute_avoided = 0usize;
     let backfill = cfg.switch_backfill;
+    let migrate = cfg.switch_migrate;
     let mut policy = crate::coordinator::policy::FlyingPolicy::default();
 
     let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(4 * vengs.len() + 8);
@@ -496,9 +522,22 @@ fn simulate_inner(
                     // Reconcile the merge-time pledge against the residents'
                     // actual footprint now (some finished, others grew).
                     vengs[target].kv_used -= vengs[si].pledged_kv;
+                    let g_new = vengs[target].m * gpus_per_inst;
                     for &r in moved.iter() {
                         let q = &mut reqs[r as usize];
-                        q.paused = true;
+                        if migrate
+                            && q.phase == RPhase::Decode
+                            && cm.migrate_wins(kv_tokens(q), g_new)
+                        {
+                            // Carried live: the resident's KV migrates into
+                            // the TP layout and it keeps decoding inside the
+                            // group (the shell already absorbed the
+                            // transition window, so no extra charge here).
+                            q.migrated = true;
+                            recompute_avoided += kv_tokens(q);
+                        } else {
+                            q.paused = true;
+                        }
                         vengs[target].kv_used += kv_tokens(q);
                         vengs[target].active.push(r);
                     }
@@ -533,6 +572,7 @@ fn simulate_inner(
                     prefilled: 0,
                     emitted: 0,
                     paused: false,
+                    migrated: false,
                     rec: slot,
                 });
                 queue.push(r.priority, (reqs.len() - 1) as u32);
@@ -797,6 +837,9 @@ fn simulate_inner(
                                     &mut n_switches,
                                     backfill,
                                     &mut switch_stall_s,
+                                    cm,
+                                    migrate,
+                                    &mut recompute_avoided,
                                 ) {
                                     Some(bind_t) => {
                                         rec.on_first_sched_at(reqs[riu].rec, bind_t);
@@ -1007,15 +1050,21 @@ fn simulate_inner(
                 let queue_nonempty = !queue.is_empty();
                 let mut split_any = false;
                 for v in vengs.drain(..) {
+                    // Migrated residents are *carried* traffic, not TP work:
+                    // they ride the group while it exists and are gathered
+                    // back to unit engines at split time, so they must not
+                    // hold the split open (with `switch_migrate` off the
+                    // flag is never set and this is the PR-3 expression).
                     let tp_work_left = v.active.iter().any(|&r| {
                         let q = &reqs[r as usize];
-                        !q.paused && q.phase != RPhase::Done
+                        !q.paused && !q.migrated && q.phase != RPhase::Done
                     });
                     let has_paused = v.active.iter().any(|&r| reqs[r as usize].paused);
                     // Split only under pressure: queued DP work or
                     // hard-preempted requests waiting to resume.  An idle
                     // merged group is kept so low-load traffic stays in the
-                    // TP regime (Use Case 1).
+                    // TP regime (Use Case 1) — migrated residents keep
+                    // decoding inside it, so they add no pressure either.
                     if v.transient && !tp_work_left && (queue_nonempty || has_paused) {
                         for i in 0..v.m {
                             let mut unit = VEng {
@@ -1036,6 +1085,18 @@ fn simulate_inner(
                             for (j, &r) in v.active.iter().enumerate() {
                                 if j % v.m == i {
                                     let q = &mut reqs[r as usize];
+                                    // Inverse gather (TP→DP): the unit
+                                    // collects the request's shard slices
+                                    // and it decodes on without recompute
+                                    // or a frozen window.  Not re-counted
+                                    // in `recompute_tokens_avoided` (the
+                                    // metric is once per carried request,
+                                    // matching the real coordinator's
+                                    // once-per-promotion semantics) and,
+                                    // like the live-switch latency, not
+                                    // time-charged — splits are free in
+                                    // both implementations by convention.
+                                    q.migrated = false;
                                     q.paused = false;
                                     unit.kv_used += kv_tokens(q);
                                     unit.active.push(r);
@@ -1077,7 +1138,13 @@ fn simulate_inner(
         }
     }
 
-    SimOutcome { recorder: rec, rejected, n_switches, switch_stall_s }
+    SimOutcome {
+        recorder: rec,
+        rejected,
+        n_switches,
+        switch_stall_s,
+        recompute_tokens_avoided: recompute_avoided,
+    }
 }
 
 /// Merge contiguous unit vengs into a transient TP group for `ri`, or join
@@ -1101,6 +1168,9 @@ fn bind_tp_sim(
     n_switches: &mut usize,
     backfill: bool,
     switch_stall_s: &mut f64,
+    cm: &CostModel,
+    migrate: bool,
+    recompute_avoided: &mut usize,
 ) -> Option<f64> {
     let riu = ri as usize;
     let total = reqs[riu].prompt_len + reqs[riu].output_len;
@@ -1231,7 +1301,12 @@ fn bind_tp_sim(
         return Some(horizon);
     }
 
-    // Hard preempt (Fig 7c): pause members' DP requests in place.
+    // Hard preempt (Fig 7c): pause members' DP requests in place — unless
+    // KV migration (`switch_migrate`) carries a decode-phase resident live
+    // into the forming group: the shared cost-model rule decides per
+    // request, the carried KV's `migrate_t` is charged to the merge
+    // horizon, and the resident keeps decoding through the window instead
+    // of freezing behind it.
     let mut merged = VEng {
         m: want_m,
         free_at: horizon,
@@ -1246,13 +1321,24 @@ fn bind_tp_sim(
     };
     *next_handle += 1;
     handle_pos.push(usize::MAX);
+    let g_new = want_m * cm.model.min_gpus;
+    let mut migrate_cost = 0.0f64;
     for &i in unit_scratch.iter() {
         for &r in &vengs[i].active {
-            reqs[r as usize].paused = true;
+            let q = &mut reqs[r as usize];
+            if migrate && q.phase == RPhase::Decode && cm.migrate_wins(kv_tokens(q), g_new)
+            {
+                q.migrated = true;
+                *recompute_avoided += kv_tokens(q);
+                migrate_cost += cm.migrate_t(kv_tokens(q), g_new);
+            } else {
+                q.paused = true;
+            }
             merged.active.push(r);
         }
         merged.kv_used += vengs[i].kv_used;
     }
+    merged.free_at = horizon + migrate_cost;
     merged.active.push(ri);
     merged.kv_used += kv_tokens(&reqs[riu]);
     reqs[riu].phase = RPhase::Prefill;
@@ -1513,6 +1599,63 @@ mod tests {
             (s.finished, o.rejected.len(), o.n_switches, o.switch_stall_s, s.mean_ttft)
         };
         assert_eq!(go(), go());
+    }
+
+    #[test]
+    fn migrate_mode_terminates_and_counts_carried_tokens() {
+        use crate::workload::Scenario;
+        let c = cm();
+        for scenario in [Scenario::LongContextWave, Scenario::SwitchChurn] {
+            let trace = scenario.generate(7, 260);
+            let on_cfg = SimConfig { switch_migrate: true, ..SimConfig::default() };
+            let on = simulate(SimSystem::Flying, &c, &trace, &on_cfg);
+            // Every request reaches a terminal record: carried residents
+            // must never strand inside a group or a split.
+            assert_eq!(on.recorder.summary(None).finished, 260, "{scenario}");
+            // Merges on these scenarios hit busy decode residents, so live
+            // KV crosses the layout boundary instead of recomputing.
+            assert!(
+                on.recompute_tokens_avoided > 0,
+                "{scenario}: no KV carried across merges"
+            );
+            let off = simulate(SimSystem::Flying, &c, &trace, &SimConfig::default());
+            assert_eq!(off.recompute_tokens_avoided, 0, "{scenario}");
+        }
+    }
+
+    #[test]
+    fn migrate_mode_is_deterministic() {
+        use crate::workload::Scenario;
+        let c = cm();
+        let trace = Scenario::SwitchChurn.generate(11, 200);
+        let cfg = SimConfig { switch_migrate: true, ..SimConfig::default() };
+        let go = || {
+            let o = simulate(SimSystem::Flying, &c, &trace, &cfg);
+            let s = o.recorder.summary(None);
+            (
+                s.finished,
+                o.rejected.len(),
+                o.n_switches,
+                o.recompute_tokens_avoided,
+                s.mean_ttft,
+            )
+        };
+        assert_eq!(go(), go());
+    }
+
+    #[test]
+    fn migrate_composes_with_backfill() {
+        use crate::workload::Scenario;
+        let c = cm();
+        let trace = Scenario::SwitchChurn.generate(5, 220);
+        let cfg = SimConfig {
+            switch_migrate: true,
+            switch_backfill: true,
+            ..SimConfig::default()
+        };
+        let o = simulate(SimSystem::Flying, &c, &trace, &cfg);
+        assert_eq!(o.recorder.summary(None).finished, 220);
+        assert!(o.switch_stall_s >= -1e-9, "negative stall {}", o.switch_stall_s);
     }
 
     #[test]

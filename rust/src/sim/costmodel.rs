@@ -207,6 +207,32 @@ impl CostModel {
         0.015
     }
 
+    /// Layout-preserving KV migration of `tokens` cached tokens into a
+    /// g-GPU layout (ISSUE 4): the home rank re-tags its own shard in place
+    /// (zero copy — Eqs. 2–3 make the bytes layout-invariant), so only the
+    /// other `g-1` ranks' slices cross NVLink.  One scatter launch plus
+    /// bytes over link bandwidth.
+    pub fn migrate_t(&self, tokens: usize, g: usize) -> f64 {
+        if g <= 1 || tokens == 0 {
+            return 0.0;
+        }
+        let bytes =
+            tokens as f64 * self.model.kv_bytes_per_token() * (g - 1) as f64 / g as f64;
+        self.hw.kernel_launch_s + bytes / self.hw.nvlink_bw
+    }
+
+    /// The migrate-vs-recompute decision (shared verbatim by the simulator
+    /// event core and the real coordinator, so the two paths stay
+    /// byte-comparable): carry the KV when moving its bytes beats
+    /// re-prefilling it on the target layout.  Shift Parallelism's
+    /// observation (arXiv:2509.16495) — KV bytes over NVLink are orders of
+    /// magnitude cheaper than prefill FLOPs — makes this true at every
+    /// realistic context length; the rule only flips on a link slow enough
+    /// to invert the ratio.
+    pub fn migrate_wins(&self, tokens: usize, g: usize) -> bool {
+        self.migrate_t(tokens, g) < self.prefill_s(tokens, g)
+    }
+
     /// Absolute finish time of a request executed **alone** on a g-GPU
     /// instance starting at `start`: chunked prefill (chunks of
     /// `chunk_tokens`), then one decode step per remaining output token,
@@ -313,6 +339,55 @@ mod tests {
         // Active params dominate decode: the 120B MoE steps faster than the
         // dense 70B.
         assert!(moe.decode_step_s(8, 1000, 2) < dense.decode_step_s(8, 1000, 2));
+    }
+
+    #[test]
+    fn migration_beats_recompute_at_paper_scale() {
+        let cm = llama();
+        for tokens in [512usize, 8_192, 300_000] {
+            for g in [2usize, 4, 8] {
+                assert!(
+                    cm.migrate_wins(tokens, g),
+                    "migrate_t={} prefill_s={} at tokens={tokens} g={g}",
+                    cm.migrate_t(tokens, g),
+                    cm.prefill_s(tokens, g)
+                );
+                // The gap is what makes re-prefill the wrong default: at
+                // long context it is orders of magnitude.
+                if tokens >= 8_192 {
+                    assert!(cm.prefill_s(tokens, g) > 10.0 * cm.migrate_t(tokens, g));
+                }
+            }
+        }
+        // Degenerate cases cost nothing.
+        assert_eq!(cm.migrate_t(0, 4), 0.0);
+        assert_eq!(cm.migrate_t(1000, 1), 0.0);
+    }
+
+    #[test]
+    fn migration_decision_flips_when_kv_outweighs_compute() {
+        // The rule is a genuine comparison, not a constant: a model whose
+        // per-token KV footprint dwarfs its per-token FLOPs (tiny active
+        // parameters, very wide KV) makes re-prefill the cheaper carry.
+        let heavy_kv = PaperModel {
+            name: "kv-heavy-toy",
+            params_b: 0.1,
+            active_params_b: 0.1,
+            n_layers: 100,
+            d_model: 512,
+            n_kv_heads: 64,
+            d_head: 256,
+            min_gpus: 1,
+            max_model_ctx: 1_000_000,
+            bytes_per_param: 2.0,
+        };
+        let cm = CostModel::new(HwSpec::default(), heavy_kv);
+        assert!(
+            !cm.migrate_wins(8_192, 2),
+            "migrate_t={} prefill_s={}",
+            cm.migrate_t(8_192, 2),
+            cm.prefill_s(8_192, 2)
+        );
     }
 
     #[test]

@@ -388,9 +388,16 @@ pub fn simulate_reference(
         vengs = new_vengs;
     }
 
-    // The reference does not model transition windows; its stall metric is
-    // reported as 0 and deliberately excluded from `outcomes_equivalent`.
-    SimOutcome { recorder: rec, rejected, n_switches, switch_stall_s: 0.0 }
+    // The reference models neither transition windows nor KV migration; its
+    // stall/carry metrics are reported as 0 and deliberately excluded from
+    // `outcomes_equivalent`.
+    SimOutcome {
+        recorder: rec,
+        rejected,
+        n_switches,
+        switch_stall_s: 0.0,
+        recompute_tokens_avoided: 0,
+    }
 }
 
 fn kv_room(

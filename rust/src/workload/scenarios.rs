@@ -44,15 +44,24 @@ pub enum Scenario {
     /// The prompt/output mix itself shifts regime every minute:
     /// chat-shaped, ingest-shaped, then mixed with long-context stragglers.
     MixedShift,
+    /// Alternating short phases of bursty elastic traffic and long-context
+    /// TP demand: every long phase opens while the elastic phase's
+    /// residents are still mid-decode, forcing frequent DP↔TP flips with
+    /// live KV on the chosen engines — the KV-migration stress shape
+    /// (ISSUE 4).  A slice of the long-phase short traffic carries explicit
+    /// `tp_demand`, so merges happen even when memory alone would not force
+    /// them.
+    SwitchChurn,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 5] = [
+    pub const ALL: [Scenario; 6] = [
         Scenario::Diurnal,
         Scenario::PoissonBurst,
         Scenario::LongContextWave,
         Scenario::PriorityStorm,
         Scenario::MixedShift,
+        Scenario::SwitchChurn,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -62,6 +71,7 @@ impl Scenario {
             Scenario::LongContextWave => "long_context_wave",
             Scenario::PriorityStorm => "priority_storm",
             Scenario::MixedShift => "mixed_shift",
+            Scenario::SwitchChurn => "switch_churn",
         }
     }
 
@@ -76,6 +86,7 @@ impl Scenario {
             Scenario::LongContextWave => long_context_wave(&mut rng, n_requests),
             Scenario::PriorityStorm => priority_storm(&mut rng, n_requests),
             Scenario::MixedShift => mixed_shift(&mut rng, n_requests),
+            Scenario::SwitchChurn => switch_churn(&mut rng, n_requests),
         }
     }
 }
@@ -95,7 +106,7 @@ impl std::str::FromStr for Scenario {
             .find(|sc| sc.label() == s)
             .ok_or_else(|| {
                 anyhow::anyhow!(
-                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift)"
+                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift|switch_churn)"
                 )
             })
     }
@@ -253,6 +264,61 @@ fn mixed_shift(rng: &mut Rng, n: usize) -> Vec<Request> {
     out
 }
 
+fn switch_churn(rng: &mut Rng, n: usize) -> Vec<Request> {
+    // Short alternating phases so even small traces (the differential
+    // harness runs 150-request slices) see several full cycles: an elastic
+    // burst (8 r/s of short chat traffic whose decodes outlive the phase)
+    // immediately followed by a long-context phase (3 r/s, half of it above
+    // single-engine KV capacity → memory-driven TP merges while the elastic
+    // residents are still live).  A slice of the long phase's *short*
+    // traffic carries explicit `tp_demand`, so flips also happen with small
+    // KV in flight.
+    const PHASE_S: f64 = 8.0;
+    const ELASTIC_RPS: f64 = 8.0;
+    const LONG_PHASE_RPS: f64 = 3.0;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        let elastic_phase = ((t / PHASE_S) as usize) % 2 == 0;
+        let rate = if elastic_phase { ELASTIC_RPS } else { LONG_PHASE_RPS };
+        t += rng.exp(rate);
+        // Classify by the phase the request actually lands in.
+        let landed_elastic = ((t / PHASE_S) as usize) % 2 == 0;
+        if landed_elastic {
+            out.push(req(
+                id,
+                t,
+                rng.range_usize(128, 4000),
+                rng.range_usize(64, 512),
+                Priority::Normal,
+            ));
+        } else if rng.bool(0.5) {
+            // Long-context TP demand (memory-driven merge).
+            out.push(req(
+                id,
+                t,
+                rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1),
+                rng.range_usize(64, 256),
+                Priority::Normal,
+            ));
+        } else {
+            // Short long-phase traffic; a slice demands TP explicitly.
+            let mut r = req(
+                id,
+                t,
+                rng.range_usize(128, 4000),
+                rng.range_usize(64, 512),
+                Priority::Normal,
+            );
+            if rng.bool(0.25) {
+                r.tp_demand = Some(*rng.choose(&[2usize, 4]));
+            }
+            out.push(r);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{from_csv, to_csv, validate};
@@ -394,6 +460,56 @@ mod tests {
             max_frac > 2.0 * overall,
             "max storm frac={max_frac} overall={overall}"
         );
+    }
+
+    #[test]
+    fn switch_churn_alternates_elastic_and_tp_pressure() {
+        let reqs = Scenario::SwitchChurn.generate(6, 3000);
+        let elastic_phase = |t: f64| ((t / 8.0) as usize) % 2 == 0;
+        // Long-context demand lives (exclusively) in the odd phases.
+        let longs_elastic = reqs
+            .iter()
+            .filter(|r| r.prompt_len >= LONG_CTX_RANGE.0 && elastic_phase(r.arrival))
+            .count();
+        let longs_tp = reqs
+            .iter()
+            .filter(|r| r.prompt_len >= LONG_CTX_RANGE.0 && !elastic_phase(r.arrival))
+            .count();
+        assert_eq!(longs_elastic, 0, "elastic phases must stay elastic");
+        assert!(longs_tp > 20, "long-context pressure missing ({longs_tp})");
+        // Elastic phases are the bursts: clearly denser arrivals.
+        let span = reqs.last().unwrap().arrival;
+        let n_phases = (span / 8.0).ceil() as usize + 1;
+        let (mut elastic_n, mut tp_n, mut elastic_ph, mut tp_ph) = (0usize, 0usize, 0usize, 0usize);
+        for ph in 0..n_phases {
+            let lo = ph as f64 * 8.0;
+            let cnt = reqs
+                .iter()
+                .filter(|r| r.arrival >= lo && r.arrival < lo + 8.0)
+                .count();
+            if ph % 2 == 0 {
+                elastic_n += cnt;
+                elastic_ph += 1;
+            } else {
+                tp_n += cnt;
+                tp_ph += 1;
+            }
+        }
+        let elastic_rate = elastic_n as f64 / elastic_ph as f64;
+        let tp_rate = tp_n as f64 / tp_ph.max(1) as f64;
+        assert!(
+            elastic_rate > 1.8 * tp_rate,
+            "elastic {elastic_rate} vs long-phase {tp_rate}"
+        );
+        // Explicit TP demand present, confined to the long phases, and a
+        // minority of the trace.
+        let demands = reqs.iter().filter(|r| r.tp_demand.is_some()).count();
+        assert!(demands > 10, "no explicit TP demand generated");
+        assert!(demands < reqs.len() / 4);
+        assert!(reqs
+            .iter()
+            .filter(|r| r.tp_demand.is_some())
+            .all(|r| !elastic_phase(r.arrival)));
     }
 
     #[test]

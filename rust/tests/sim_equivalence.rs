@@ -308,6 +308,86 @@ fn backfill_on_keeps_every_request_terminal_on_every_scenario() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// KV-migration differential guarantees (ISSUE 4): with
+// `switch_migrate = false` (explicitly, not just by default) the event core
+// must stay byte-identical to the loop reference on every scenario-library
+// workload — all six, including switch_churn — and on randomized traces;
+// with it on, every request stays terminal and live KV measurably crosses
+// the DP↔TP boundary on the switch-heavy scenarios.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migrate_off_is_byte_identical_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { switch_migrate: false, ..SimConfig::default() };
+    for scenario in Scenario::ALL {
+        let trace = scenario.generate(29, 150);
+        for sys in [SimSystem::Flying, SimSystem::FlyingSequential] {
+            if let Err(e) = check_equivalent(sys, &cm, &trace, &cfg) {
+                panic!("{scenario}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_migrate_off_is_byte_identical_on_random_traces() {
+    let cm = llama();
+    let dp_cap = cm.kv_capacity_tokens(cm.model.min_gpus);
+    prop_check("migrate-off ≡ reference", 10, |g| {
+        let mut wl = WorkloadCfg::paper_full(g.u64(0, 1 << 30), g.usize(40, 160));
+        wl.priority_frac = g.f64(0.0, 0.4);
+        wl.long_frac = g.f64(0.0, 0.2);
+        wl.long_ctx_range = (dp_cap / 2, dp_cap * 3);
+        let mut trace = generate(&wl);
+        // Explicit TP demands exercise the merge path the migrate flag
+        // gates; with the flag off they must not perturb a single decision.
+        for r in trace.iter_mut() {
+            if r.id % 13 == 0 {
+                r.tp_demand = Some(*g.choose(&[2usize, 4]));
+            }
+        }
+        let cfg = SimConfig { switch_migrate: false, ..SimConfig::default() };
+        check_equivalent(*g.choose(&ALL_SYSTEMS), &cm, &trace, &cfg)
+    });
+}
+
+#[test]
+fn migrate_on_keeps_every_request_terminal_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { switch_migrate: true, ..SimConfig::default() };
+    let mut any_carried = false;
+    for scenario in Scenario::ALL {
+        let n = 150;
+        let trace = scenario.generate(23, n);
+        let on = simulate(SimSystem::Flying, &cm, &trace, &cfg);
+        assert_eq!(
+            on.recorder.summary(None).finished,
+            n,
+            "{scenario}: lost requests under migration"
+        );
+        any_carried |= on.recompute_tokens_avoided > 0;
+    }
+    assert!(any_carried, "no scenario carried KV across a flip");
+}
+
+#[test]
+fn migrate_on_carries_live_kv_on_switch_churn() {
+    // switch_churn is built so merges land on busy decode residents: live
+    // KV must cross the layout boundary, and the carried token count is
+    // deterministic per seed.
+    let cm = llama();
+    let trace = Scenario::SwitchChurn.generate(7, 250);
+    let on_cfg = SimConfig { switch_migrate: true, ..SimConfig::default() };
+    let a = simulate(SimSystem::Flying, &cm, &trace, &on_cfg);
+    assert!(a.recompute_tokens_avoided > 0);
+    let b = simulate(SimSystem::Flying, &cm, &trace, &on_cfg);
+    assert_eq!(a.recompute_tokens_avoided, b.recompute_tokens_avoided);
+    let off = simulate(SimSystem::Flying, &cm, &trace, &SimConfig::default());
+    assert_eq!(off.recompute_tokens_avoided, 0);
+}
+
 #[test]
 fn stall_semantics_match_reference() {
     // Both implementations must resolve the blocked-idle stall by

@@ -12,7 +12,7 @@ use flying_serving::control::{
 };
 use flying_serving::coordinator::policy::FlyingPolicy;
 use flying_serving::coordinator::strategy::{Strategy, SwitchConfig};
-use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::coordinator::{Cluster, ClusterOutcome, ServeRequest};
 use flying_serving::metrics::Recorder;
 use flying_serving::model::{ModelCfg, StaticShapes};
 use flying_serving::workload::{synth_prompt_tokens, Priority};
@@ -378,6 +378,92 @@ fn backfill_on_emits_identical_tokens_to_backfill_off() {
     // Both exercised the switch path (incremental settle still logs the
     // final promotion hop).
     assert!(!off.switches.is_empty() && !on.switches.is_empty());
+}
+
+/// A burst of four DP residents (the burst keeps `FlyingPolicy` from
+/// opportunistically widening them to TP) plus an explicit-TP request that
+/// soft-preempts: it runs speculatively on a member while the residents
+/// drain, so the promotion always happens mid-decode with cached KV
+/// (pos > 0) — the recompute path with `migrate` off, layout-preserving KV
+/// migration (home-side re-tag + peer scatter) with it on.
+fn spec_promotion_trace() -> Vec<ServeRequest> {
+    // 1 prefill chunk + 3 decode steps each; 3 committed blocks per
+    // resident leaves DP-layout headroom for the speculative bind.
+    let mut trace: Vec<ServeRequest> = (1..=4).map(|i| req(i, 8, 4)).collect();
+    let mut tp = req(5, 12, 20);
+    tp.tp_demand = Some(2);
+    trace.push(tp);
+    trace
+}
+
+fn run_spec_promotion(migrate: bool) -> ClusterOutcome {
+    let mut c = cluster(2);
+    c.set_switch_config(SwitchConfig { migrate, ..SwitchConfig::default() });
+    let out = c
+        .run_trace(
+            spec_promotion_trace(),
+            &mut FlyingPolicy::default(),
+            Strategy::SoftPreempt,
+        )
+        .unwrap();
+    c.shutdown();
+    out
+}
+
+#[test]
+fn migrated_promotion_emits_identical_tokens_to_recompute() {
+    let off = run_spec_promotion(false);
+    let on = run_spec_promotion(true);
+    assert_eq!(off.outputs.len(), 5);
+    for i in 1..=4u64 {
+        assert_eq!(off.outputs[&i].len(), 4);
+    }
+    assert_eq!(off.outputs[&5].len(), 20);
+    // Migration re-times the promotion but must never change greedy tokens.
+    assert_eq!(off.outputs, on.outputs, "migration changed token values");
+    assert_eq!(off.recompute_tokens_avoided, 0, "flag off must recompute");
+    assert!(
+        on.recompute_tokens_avoided > 0,
+        "promotion must carry the speculative KV instead of re-prefilling"
+    );
+    assert!(!on.switches.is_empty(), "promotion never formed the TP group");
+    // The carried request's tokens also match an undisturbed static run —
+    // the suite's core invariant, now across a migrated layout change.
+    let mut c = cluster(2);
+    let solo = c
+        .run_trace(vec![req(5, 12, 20)], &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(on.outputs[&5], solo.outputs[&5]);
+}
+
+#[test]
+fn migration_composes_with_backfill_switch_config() {
+    // Both switch optimizations on at once: the drain admits bounded
+    // elastic work AND the promotion migrates — outputs still match the
+    // all-off baseline.
+    let run = |cfg: SwitchConfig| {
+        let mut c = cluster(2);
+        c.set_switch_config(cfg);
+        let mut trace = spec_promotion_trace();
+        // Short elastic request behind the drain: blocked until the group
+        // resolves with the optimizations off, backfilled onto a draining
+        // member with them on — token values must not care either way.
+        trace.push(req(6, 8, 2));
+        let out = c
+            .run_trace(trace, &mut FlyingPolicy::default(), Strategy::SoftPreempt)
+            .unwrap();
+        c.shutdown();
+        out
+    };
+    let base = run(SwitchConfig::default());
+    let both = run(SwitchConfig {
+        backfill: true,
+        migrate: true,
+        ..SwitchConfig::default()
+    });
+    assert_eq!(base.outputs, both.outputs);
+    assert!(base.rejected.is_empty() && both.rejected.is_empty());
 }
 
 #[test]
