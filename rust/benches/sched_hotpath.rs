@@ -35,6 +35,16 @@
 //!     coordinator alloc probe in part 2 runs with the migrate path armed,
 //!     so the zero-alloc gate covers it too.
 //!
+//! And the scheduling-kernel probe (ISSUE 5):
+//!
+//!  6. **Kernel dispatch overhead**: the same admission-decision stream
+//!     through the `sched::Kernel` walk and through a hand-inlined replica
+//!     of the identical semantics.  Decision-sequence equality is a hard
+//!     gate (the abstraction may cost nanoseconds, never decisions); the
+//!     ns/decision overhead is reported for the perf trail.  The zero-alloc
+//!     coordinator gate in part 2 now also covers the kernel walk, since
+//!     the coordinator routes every admission through it.
+//!
 //! Usage:  cargo bench --bench sched_hotpath [-- --quick]
 //!   --quick  : 20k-request simulator trace (CI smoke; full mode uses 100k
 //!              and can take minutes in the O(n²) reference).
@@ -416,6 +426,242 @@ fn migrate_compare(scenario: Scenario, cm: &CostModel, n: usize) -> MigrateRow {
 }
 
 // ---------------------------------------------------------------------------
+// Part 3c — scheduling-kernel dispatch overhead (ISSUE 5)
+// ---------------------------------------------------------------------------
+
+struct KernelRow {
+    n_decisions: usize,
+    kernel_ns: f64,
+    reference_ns: f64,
+    overhead_frac: f64,
+    equivalent: bool,
+}
+
+/// Drive the same admission-decision stream once through the scheduling
+/// kernel (`sched::Kernel` walk + `EngineIndex` + trace) and once through a
+/// hand-inlined replica of the identical ring/requeue/dirty semantics.  The
+/// decision sequences must be byte-identical (hard gate — the kernel
+/// abstraction may cost nanoseconds, never decisions); the per-decision
+/// overhead is reported for the perf trail.
+fn kernel_dispatch_probe() -> KernelRow {
+    use flying_serving::coordinator::policy::{ModeDecision, Policy, Snapshot};
+    use flying_serving::sched::{Kernel, LeastLoaded, Placement, SchedAction, SchedEvent};
+    use std::collections::VecDeque;
+
+    let n_engines = 8usize;
+    let cap_tokens = 200_000u64;
+    let trace = Scenario::ElasticTiers.generate(4242, 4000);
+
+    let snap = |backlog: usize, idle: usize| Snapshot {
+        now: 0.0,
+        queue_len: backlog,
+        idle_engines: idle,
+        n_engines,
+        dp_capacity_tokens: cap_tokens as usize,
+        max_tp: n_engines,
+        kv_frac: 0.0,
+    };
+
+    // ---- kernel path ------------------------------------------------------
+    let t0 = Instant::now();
+    let kernel_actions: Vec<SchedAction> = {
+        let mut kernel: Kernel<u32> = Kernel::new();
+        kernel.enable_trace();
+        for e in 0..n_engines {
+            kernel.index.refresh_engine(e, true, true);
+        }
+        let mut policy = FlyingPolicy::default();
+        let mut used = vec![0u64; n_engines];
+        let mut load = vec![0usize; n_engines];
+        let mut bound: VecDeque<(usize, u64)> = VecDeque::new();
+        for (i, r) in trace.iter().enumerate() {
+            kernel.on_event(SchedEvent::Arrival { h: i as u32, priority: r.priority });
+            if i % 3 == 2 {
+                if let Some((e, occ)) = bound.pop_front() {
+                    used[e] -= occ;
+                    load[e] -= 1;
+                    if load[e] == 0 {
+                        kernel.index.refresh_engine(e, true, true);
+                    }
+                    kernel.on_event(SchedEvent::StepComplete);
+                }
+            }
+            if !kernel.should_walk() {
+                continue;
+            }
+            let mut walk = kernel.begin_walk();
+            while let Some((h, high)) = walk.next() {
+                let q = &trace[h as usize];
+                let total = (q.prompt_len + q.output_len) as u64;
+                let s = snap(walk.backlog_now(), kernel.index.idle_count());
+                let placement = match policy.decide_for(
+                    q.id,
+                    q.prompt_len,
+                    q.output_len,
+                    q.priority,
+                    q.tp_demand,
+                    &s,
+                ) {
+                    ModeDecision::Reject => Placement::Reject,
+                    ModeDecision::Tp(p) => Placement::Tp { width: p.min(n_engines) as u32 },
+                    ModeDecision::Dp => {
+                        let mut ll = LeastLoaded::new();
+                        let mut cands = kernel.index.dp_candidates();
+                        while cands != 0 {
+                            let e = cands.trailing_zeros() as usize;
+                            cands &= cands - 1;
+                            if used[e] + total <= cap_tokens {
+                                ll.offer(e, load[e]);
+                            }
+                        }
+                        match ll.pick() {
+                            Some(e) => {
+                                used[e] += total;
+                                load[e] += 1;
+                                kernel.index.refresh_engine(e, true, false);
+                                bound.push_back((e, total));
+                                Placement::Dp { unit: e as u32, backfill: false }
+                            }
+                            None => Placement::Defer,
+                        }
+                    }
+                };
+                walk.settle(h, high, q.id, placement);
+            }
+            kernel.end_walk(walk);
+        }
+        kernel.take_trace()
+    };
+    let kernel_s = t0.elapsed().as_secs_f64();
+
+    // ---- hand-inlined reference (same semantics, no kernel) ---------------
+    let t0 = Instant::now();
+    let ref_actions: Vec<SchedAction> = {
+        let mut high: VecDeque<u32> = VecDeque::new();
+        let mut normal: VecDeque<u32> = VecDeque::new();
+        let mut req_hi: VecDeque<u32> = VecDeque::new();
+        let mut req_lo: VecDeque<u32> = VecDeque::new();
+        let mut dirty = false;
+        let mut actions = Vec::new();
+        let mut policy = FlyingPolicy::default();
+        let mut used = vec![0u64; n_engines];
+        let mut load = vec![0usize; n_engines];
+        let mut idle_mask = (1u64 << n_engines) - 1;
+        let mut bound: VecDeque<(usize, u64)> = VecDeque::new();
+        for (i, r) in trace.iter().enumerate() {
+            match r.priority {
+                Priority::High => high.push_back(i as u32),
+                Priority::Normal => normal.push_back(i as u32),
+            }
+            dirty = true;
+            if i % 3 == 2 {
+                if let Some((e, occ)) = bound.pop_front() {
+                    used[e] -= occ;
+                    load[e] -= 1;
+                    if load[e] == 0 {
+                        idle_mask |= 1 << e;
+                    }
+                    dirty = true;
+                }
+            }
+            if !dirty || (high.is_empty() && normal.is_empty()) {
+                continue;
+            }
+            let backlog_total = high.len() + normal.len();
+            let mut processed = 0usize;
+            let mut progress = false;
+            req_hi.clear();
+            req_lo.clear();
+            for phase_high in [true, false] {
+                loop {
+                    let popped =
+                        if phase_high { high.pop_front() } else { normal.pop_front() };
+                    let Some(h) = popped else { break };
+                    processed += 1;
+                    let backlog =
+                        req_hi.len() + req_lo.len() + (backlog_total - processed);
+                    let q = &trace[h as usize];
+                    let total = (q.prompt_len + q.output_len) as u64;
+                    let s = snap(backlog, idle_mask.count_ones() as usize);
+                    let placement = match policy.decide_for(
+                        q.id,
+                        q.prompt_len,
+                        q.output_len,
+                        q.priority,
+                        q.tp_demand,
+                        &s,
+                    ) {
+                        ModeDecision::Reject => Placement::Reject,
+                        ModeDecision::Tp(p) => {
+                            Placement::Tp { width: p.min(n_engines) as u32 }
+                        }
+                        ModeDecision::Dp => {
+                            let mut pick: Option<usize> = None;
+                            for e in 0..n_engines {
+                                if used[e] + total > cap_tokens {
+                                    continue;
+                                }
+                                match pick {
+                                    None => pick = Some(e),
+                                    Some(p) if load[p] > load[e] => pick = Some(e),
+                                    _ => {}
+                                }
+                            }
+                            match pick {
+                                Some(e) => {
+                                    used[e] += total;
+                                    load[e] += 1;
+                                    idle_mask &= !(1 << e);
+                                    bound.push_back((e, total));
+                                    Placement::Dp { unit: e as u32, backfill: false }
+                                }
+                                None => Placement::Defer,
+                            }
+                        }
+                    };
+                    actions.push(SchedAction { rid: q.id, placement });
+                    if matches!(placement, Placement::Defer) {
+                        if phase_high {
+                            req_hi.push_back(h);
+                        } else {
+                            req_lo.push_back(h);
+                        }
+                    } else {
+                        progress = true;
+                    }
+                }
+            }
+            std::mem::swap(&mut high, &mut req_hi);
+            std::mem::swap(&mut normal, &mut req_lo);
+            if !progress {
+                dirty = false;
+            }
+        }
+        actions
+    };
+    let ref_s = t0.elapsed().as_secs_f64();
+
+    let equivalent = kernel_actions == ref_actions;
+    let n_decisions = kernel_actions.len().max(1);
+    let row = KernelRow {
+        n_decisions,
+        kernel_ns: kernel_s * 1e9 / n_decisions as f64,
+        reference_ns: ref_s * 1e9 / n_decisions as f64,
+        overhead_frac: kernel_s / ref_s.max(1e-12) - 1.0,
+        equivalent,
+    };
+    println!(
+        "kernel dispatch: {} decisions  kernel={:.1} ns/decision  inlined={:.1} ns/decision  overhead={:+.1}%  decisions-equal={}",
+        row.n_decisions,
+        row.kernel_ns,
+        row.reference_ns,
+        row.overhead_frac * 100.0,
+        row.equivalent,
+    );
+    row
+}
+
+// ---------------------------------------------------------------------------
 // Part 4 — KV lookup microbench: slab handle vs id side-index
 // ---------------------------------------------------------------------------
 
@@ -549,6 +795,16 @@ fn main() -> anyhow::Result<()> {
         if migrate_off_equiv { "PASS" } else { "FAIL" },
     );
 
+    println!("\n== sched_hotpath: scheduling-kernel dispatch overhead ==");
+    let kernel = kernel_dispatch_probe();
+    // The kernel abstraction may cost nanoseconds, never decisions: the
+    // decision-sequence equality is a deterministic hard gate; the
+    // overhead figure is advisory (machine-dependent) like the speedup.
+    println!(
+        "kernel decisions identical to hand-inlined reference: {}",
+        if kernel.equivalent { "PASS" } else { "FAIL" },
+    );
+
     println!("\n== sched_hotpath: KV lookup (slab handle vs id index) ==");
     let lookup = kv_lookup_microbench();
 
@@ -604,7 +860,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     writeln!(
         f,
-        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}}}}",
+        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}}}}",
         n_requests,
         quick,
         sims.join(","),
@@ -615,6 +871,11 @@ fn main() -> anyhow::Result<()> {
         migrates.join(","),
         migrate_carried,
         migrate_ttft_ok,
+        kernel.n_decisions,
+        kernel.kernel_ns,
+        kernel.reference_ns,
+        kernel.overhead_frac,
+        kernel.equivalent,
         lookup.n_requests,
         lookup.handle_ns,
         lookup.id_ns,
@@ -628,6 +889,9 @@ fn main() -> anyhow::Result<()> {
     println!("\nwrote bench_out/sched_hotpath.json");
     if !all_equiv {
         anyhow::bail!("event core diverged from the reference simulator");
+    }
+    if !kernel.equivalent {
+        anyhow::bail!("scheduling-kernel decisions diverged from the hand-inlined reference");
     }
     if !switch_off_equiv {
         anyhow::bail!("switch-heavy backfill-off run diverged from the reference simulator");

@@ -98,6 +98,16 @@ impl ServeConfig {
         Ok(c)
     }
 
+    /// Whether this configuration has a cost-model consumer on the real
+    /// path — the adaptive policy's `CostModelController`, the wall-clock
+    /// backfill predicate, or the migrate gate — and the cluster should
+    /// therefore run `Cluster::calibrate()` before serving.  The single
+    /// definition both `serve` and `replay` gate on: a future cost-model
+    /// consumer is added here, not at each call site.
+    pub fn needs_calibration(&self) -> bool {
+        self.policy == "adaptive" || self.switch_backfill || self.switch_migrate
+    }
+
     /// Switch-transition tuning for the real coordinator, derived from the
     /// `--switch-backfill` / `--switch-migrate` flags (other knobs keep
     /// their defaults).
@@ -109,26 +119,43 @@ impl ServeConfig {
         }
     }
 
-    /// Instantiate the configured policy.
+    /// Instantiate the configured policy with no testbed calibration:
+    /// `adaptive` falls back to the scale-free threshold controller.
     pub fn make_policy(&self) -> Result<Box<dyn crate::coordinator::policy::Policy>> {
+        self.make_policy_with(None)
+    }
+
+    /// Instantiate the configured policy.  For `--policy adaptive`, a
+    /// testbed-calibrated [`crate::sim::CostModel`] (from
+    /// `Cluster::calibrate`) upgrades the control plane to the
+    /// `CostModelController` — layout scoring in this testbed's measured
+    /// seconds (ROADMAP open item, resolved in PR 5); without one the
+    /// scale-free `ThresholdController` (queue depth and idle fractions)
+    /// keeps working on any hardware.
+    pub fn make_policy_with(
+        &self,
+        calibrated: Option<crate::sim::CostModel>,
+    ) -> Result<Box<dyn crate::coordinator::policy::Policy>> {
         use crate::baselines::{StaticDpPolicy, StaticTpPolicy};
         use crate::control::{
-            AdaptivePolicy, ControlConfig, ControlRuntime, ThresholdController,
+            AdaptivePolicy, ControlConfig, ControlRuntime, Controller, CostModelController,
+            ThresholdController,
         };
         use crate::coordinator::policy::FlyingPolicy;
         Ok(match self.policy.as_str() {
             "flying" => Box::new(FlyingPolicy::default()),
             "static-dp" => Box::new(StaticDpPolicy),
             "static-tp" => Box::new(StaticTpPolicy { p: self.static_tp }),
-            // Real-path control plane.  The threshold controller is
-            // scale-free (queue depth and idle fractions), so it works on
-            // the testbed's tiny models; the cost-model controller is
-            // calibrated to paper-scale hardware and stays simulator-only
-            // until the real path carries a testbed-calibrated CostModel.
-            "adaptive" => Box::new(AdaptivePolicy::new(ControlRuntime::new(
-                Box::new(ThresholdController::default()),
-                ControlConfig::default(),
-            ))),
+            "adaptive" => {
+                let controller: Box<dyn Controller> = match calibrated {
+                    Some(cm) => Box::new(CostModelController::new(cm)),
+                    None => Box::new(ThresholdController::default()),
+                };
+                Box::new(AdaptivePolicy::new(ControlRuntime::new(
+                    controller,
+                    ControlConfig::default(),
+                )))
+            }
             p => bail!("unknown policy '{p}' (flying|static-dp|static-tp|adaptive)"),
         })
     }
@@ -186,6 +213,22 @@ mod tests {
         assert!(c.make_switch_config().migrate);
         assert!(!c.make_switch_config().backfill, "flags stay independent");
         assert!(!ServeConfig::default().make_switch_config().migrate);
+    }
+
+    #[test]
+    fn calibration_gate_covers_every_cost_model_consumer() {
+        assert!(!ServeConfig::default().needs_calibration());
+        for flags in [
+            &["--policy", "adaptive"][..],
+            &["--switch-backfill"][..],
+            &["--switch-migrate"][..],
+        ] {
+            let (_, f) = parse_args(&s(flags)).unwrap();
+            assert!(
+                ServeConfig::from_flags(&f).unwrap().needs_calibration(),
+                "{flags:?} must calibrate"
+            );
+        }
     }
 
     #[test]

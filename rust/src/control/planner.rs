@@ -473,10 +473,10 @@ pub fn plan_decision(
     tp_demand: Option<usize>,
     snap: &Snapshot,
 ) -> ModeDecision {
-    // The shared constraint tiers (the single definition FlyingPolicy
-    // itself runs) decide everything that is not elastic.
+    // The scheduling kernel's constraint tiers (the single definition
+    // FlyingPolicy itself runs) decide everything that is not elastic.
     if let Some(d) =
-        FlyingPolicy::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
+        crate::sched::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
     {
         return d;
     }

@@ -31,9 +31,14 @@
 //!    admission, and every per-step access afterwards — scheduling walks,
 //!    batch building, token publication, finish — is an O(1) array index
 //!    through a `SlabHandle`;
-//!  * the waiting queue is one FIFO ring per priority level (drained
+//!  * the waiting queue and admission walk live in the scheduling kernel
+//!    (`crate::sched`, ISSUE 5): one FIFO ring per priority level (drained
 //!    high-first; arrivals are admitted in time order and requeues keep
-//!    relative order), replacing the seed's per-iteration O(n log n) sort;
+//!    relative order) replacing the seed's per-iteration O(n log n) sort,
+//!    with ring order, backlog accounting, and every decision predicate
+//!    (constraint tiers, least-loaded pick, backfill horizon, migrate
+//!    gate) shared verbatim with the simulator — this module is the
+//!    driver that turns kernel placements into adaptor/engine commands;
 //!  * step inputs live in per-engine `Arc`'d arenas — by the lockstep
 //!    protocol the engine has dropped its clone by reply time, so
 //!    `Arc::make_mut` recycles the same allocation every step;
@@ -42,9 +47,10 @@
 //!    `KvHandle` captured at registration;
 //!  * plan/collection bookkeeping uses `StepScratch` buffers swapped in
 //!    and out of the cluster;
-//!  * engine lookups (`idle`, unit-mode, draining) are O(1) bitmask reads
-//!    maintained by `refresh_engine`/`refresh_draining` instead of linear
-//!    scans per waiting request.
+//!  * engine lookups (`idle`, unit-mode, draining) are O(1) reads of the
+//!    kernel's `EngineIndex` bitmasks, maintained by
+//!    `refresh_engine`/`refresh_draining` instead of linear scans per
+//!    waiting request.
 //!
 //! # Switch transitions (ISSUE 3)
 //!
@@ -52,7 +58,9 @@
 //! whole member set out of elastic assignment until the slowest resident
 //! request drains — the PR-1/2 behavior, byte-identical for the harness.
 //! With it on, draining members accept bounded elastic work predicted (in
-//! scheduler steps) to finish inside the drain horizon, and members switch
+//! calibrated wall-clock seconds — the kernel's `backfill_fit`, the same
+//! predicate the simulator runs) to finish inside the drain horizon, and
+//! members switch
 //! into the target mode *incrementally* as they drain (`Group::settled_mask`)
 //! so the final promotion only pays the stragglers' mode RPCs.
 //!
@@ -72,7 +80,7 @@
 pub mod policy;
 pub mod strategy;
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -83,6 +91,7 @@ use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChu
 use crate::kv::{KvCacheAdaptor, KvHandle, MigrationPlan};
 use crate::metrics::{RecSlot, Recorder};
 use crate::model::{ModelCfg, StaticShapes};
+use crate::sched::{lifecycle, Kernel, LeastLoaded, Placement, SchedEvent};
 use crate::sim::{CostModel, HwSpec, PaperModel};
 use crate::util::slab::{Slab, SlabHandle};
 use crate::workload::Priority;
@@ -220,9 +229,6 @@ struct StepScratch {
     starts: Vec<usize>,
     busy: Vec<SlabHandle>,
     ids: Vec<SlabHandle>,
-    /// Ping-pong buffers for the waiting-ring drain in `assign_waiting`.
-    drain_hi: VecDeque<SlabHandle>,
-    drain_lo: VecDeque<SlabHandle>,
     /// Held-committed-blocks per engine for the request currently being
     /// promoted (filled once per request in `settle_groups` instead of
     /// re-filtering its committed list for every group member).
@@ -231,10 +237,13 @@ struct StepScratch {
     /// promotion path plans/applies into these, so migration performs zero
     /// steady-state heap allocation once warm.
     migration_plan: MigrationPlan,
-    /// Per-engine drain-horizon step counts, recomputed once per
-    /// `assign_waiting` pass (0 = engine not backfillable).  Horizons only
-    /// move between execute steps, so one scan serves the whole walk.
-    horizon_by_engine: Vec<usize>,
+    /// Per-engine drain horizons in calibrated wall-clock seconds,
+    /// recomputed once per `assign_waiting` pass (0.0 = engine not
+    /// backfillable).  Horizons only move between execute steps, so one
+    /// scan serves the whole walk.  Denominated by the same cost model as
+    /// the kernel's `backfill_fit` request side — the simulator's exact
+    /// predicate, now shared (ISSUE 5).
+    horizon_s_by_engine: Vec<f64>,
     /// Engines with a command in flight whose reply has not been collected
     /// yet.  Used to re-synchronize the persistent per-engine reply
     /// channels if a step aborts mid-collection.
@@ -253,11 +262,13 @@ pub struct Cluster {
     c_prefill: usize,
 
     // scheduler state
-    /// One FIFO ring per priority level: drained high-first, refilled in
-    /// admission/requeue order — structurally the (priority desc, arrival
-    /// asc) order the seed re-sorted every iteration.
-    waiting_hi: VecDeque<SlabHandle>,
-    waiting_lo: VecDeque<SlabHandle>,
+    /// The scheduling kernel (ISSUE 5): per-priority waiting rings, the
+    /// admission-walk skeleton, and the unit/idle/draining engine bitmask
+    /// index — the identical state machine the simulator drives, so
+    /// decisions cannot fork between paths.  This coordinator is a driver:
+    /// it feeds the kernel arrivals and turns its placements into
+    /// adaptor/engine commands.
+    kernel: Kernel<SlabHandle>,
     /// Dense request-state slab; finished/rejected entries are removed, so
     /// occupancy equals in-flight requests.
     active: Slab<Active>,
@@ -279,17 +290,11 @@ pub struct Cluster {
     /// Cost model backing the shared migrate-vs-recompute rule
     /// (`CostModel::migrate_wins`) — the identical rule the simulator event
     /// core applies, so decisions stay byte-comparable across paths.
-    /// Calibrated to the paper-scale node; fitting a testbed-scale model
-    /// from measured stub/PJRT step times is a ROADMAP open item.
+    /// Defaults to the paper-scale Llama-70B model; [`Self::calibrate`]
+    /// replaces it with a testbed-scale fit measured from the live
+    /// engines' step times, which also arms the wall-clock backfill
+    /// predicate and the `CostModelController` behind `--policy adaptive`.
     migrate_cm: CostModel,
-
-    // O(1) engine-state indexes (≤ 64 engines):
-    /// Engines currently in unit (DP) mode.
-    unit_mask: u64,
-    /// Unit-mode engines with no bound requests (the policy's idle count).
-    idle_mask: u64,
-    /// Engines inside a group that is draining toward a pending TP bind.
-    draining_mask: u64,
 
     // hot-path arenas
     engine_scratch: Vec<EngineScratch>,
@@ -382,8 +387,7 @@ impl Cluster {
             max_tp,
             b_dec: shapes.b_dec,
             c_prefill: shapes.c_prefill,
-            waiting_hi: VecDeque::new(),
-            waiting_lo: VecDeque::new(),
+            kernel: Kernel::new(),
             active: Slab::new(),
             by_id: BTreeMap::new(),
             engine_active: vec![Vec::new(); n_engines],
@@ -398,9 +402,6 @@ impl Cluster {
             switch_cfg: SwitchConfig::default(),
             recompute_tokens_avoided: 0,
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
-            unit_mask: 0,
-            idle_mask: 0,
-            draining_mask: 0,
             engine_scratch: (0..n_engines).map(|_| EngineScratch::default()).collect(),
             scratch: StepScratch::default(),
         };
@@ -438,29 +439,185 @@ impl Cluster {
         self.migrate_cm = cm;
     }
 
+    /// The cost model currently backing the migrate gate, the wall-clock
+    /// backfill predicate, and (after [`Self::calibrate`]) the
+    /// `CostModelController` behind `--policy adaptive`.
+    pub fn migration_cost_model(&self) -> &CostModel {
+        &self.migrate_cm
+    }
+
+    /// Fit a testbed-scale [`CostModel`] from measured engine step times
+    /// (ROADMAP open item, resolved in PR 5).  Runs a short solo probe
+    /// request through the live engines — a few chunked-prefill steps and a
+    /// few dozen decode steps — and solves the analytic model's two
+    /// operating points against the medians: effective FLOP/s from the
+    /// prefill chunk time (compute-bound) and effective memory bandwidth
+    /// from the decode step time (weight-read-bound), with the model's
+    /// KV capacity pinned to the adaptor's real block pool.  A coarse
+    /// two-point fit, but denominated in this testbed's actual seconds,
+    /// which is what the wall-clock backfill predicate and the
+    /// migrate-vs-recompute gate need to compare like with like.
+    ///
+    /// Installs the fitted model as this cluster's scheduling cost model
+    /// (`migrate_cm`) and returns a clone for the caller — `--policy
+    /// adaptive` feeds it to a `CostModelController` so the control plane's
+    /// layout scoring finally runs on the real path.  Must be called on an
+    /// idle cluster (before serving traffic); the probe leaves no residue.
+    pub fn calibrate(&mut self) -> Result<CostModel> {
+        anyhow::ensure!(
+            self.active.is_empty() && self.kernel.rings.is_empty(),
+            "calibrate: cluster must be idle"
+        );
+        const PROBE_ID: u64 = u64::MAX - 7;
+        let mut recorder = Recorder::new();
+        let mut policy = crate::baselines::StaticDpPolicy;
+        // Size the probe to this cluster: a few prefill chunks and a decode
+        // tail, but never past a single engine's KV capacity (tiny testbed
+        // configs have pools of only a few dozen tokens).
+        let cap = self.cfg.dp_token_capacity();
+        let prompt_len = (4 * self.c_prefill).min(cap / 2).max(2);
+        let max_new = 32usize.min(cap.saturating_sub(prompt_len).max(4) / 2).max(4);
+        self.submit(
+            ServeRequest {
+                id: PROBE_ID,
+                prompt: (0..prompt_len).map(|i| (i % 250) as i32).collect(),
+                max_new,
+                priority: Priority::Normal,
+                tp_demand: None,
+                arrival: 0.0,
+            },
+            &mut recorder,
+        );
+        let mut prefill_samples: Vec<f64> = Vec::new();
+        let mut decode_samples: Vec<f64> = Vec::new();
+        for _ in 0..(prompt_len / self.c_prefill.max(1) + max_new + 64) {
+            let in_prefill = match self
+                .by_id
+                .get(&PROBE_ID)
+                .copied()
+                .and_then(|h| self.active.get(h))
+            {
+                Some(a) => a.phase == Phase::Prefill,
+                None => break, // probe finished
+            };
+            let t0 = Instant::now();
+            let stepped = self.step_once(&mut policy, Strategy::Sequential, &mut recorder)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if !stepped {
+                break;
+            }
+            if in_prefill {
+                prefill_samples.push(dt);
+            } else {
+                decode_samples.push(dt);
+            }
+        }
+        // Drain defensively, then scrub the probe from the outcome buffers
+        // so a later `run_trace` on this cluster reports only its own trace.
+        while self.by_id.contains_key(&PROBE_ID) {
+            if !self.step_once(&mut policy, Strategy::Sequential, &mut recorder)? {
+                break;
+            }
+        }
+        self.outputs.retain(|(id, _)| *id != PROBE_ID);
+        self.rejected.retain(|id| *id != PROBE_ID);
+        anyhow::ensure!(
+            !prefill_samples.is_empty() && !decode_samples.is_empty(),
+            "calibrate: probe produced no timed steps (prefill {}, decode {})",
+            prefill_samples.len(),
+            decode_samples.len()
+        );
+        prefill_samples.sort_by(f64::total_cmp);
+        decode_samples.sort_by(f64::total_cmp);
+        let pre_s = prefill_samples[prefill_samples.len() / 2].max(1e-9);
+        let dec_s = decode_samples[decode_samples.len() / 2].max(1e-9);
+        let cm = self.fit_cost_model(pre_s, dec_s);
+        self.migrate_cm = cm.clone();
+        Ok(cm)
+    }
+
+    /// Solve the analytic cost model against the two measured operating
+    /// points (one prefill chunk of `c_prefill` tokens, one batch-1 decode
+    /// step), with the model description taken from this cluster's real
+    /// `ModelCfg`.
+    fn fit_cost_model(&self, prefill_chunk_s: f64, decode_step_s: f64) -> CostModel {
+        let cfg = &self.cfg;
+        let d = cfg.d_model as f64;
+        let qo = 2.0 * d * (cfg.n_heads * cfg.d_head) as f64;
+        let kv = 2.0 * d * (cfg.n_kv_heads * cfg.d_head) as f64;
+        let ffn = 3.0 * d * cfg.ffn_hidden as f64;
+        let experts = cfg.n_experts.max(1) as f64;
+        let active_experts = if cfg.n_experts == 0 { 1.0 } else { cfg.top_k.max(1) as f64 };
+        let per_layer = qo + kv + experts * ffn;
+        let per_layer_active = qo + kv + active_experts * ffn;
+        let embed = d * cfg.vocab as f64;
+        let model = PaperModel {
+            name: "testbed-calibrated",
+            params_b: (cfg.n_layers as f64 * per_layer + embed) / 1e9,
+            active_params_b: (cfg.n_layers as f64 * per_layer_active + embed) / 1e9,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            n_kv_heads: cfg.n_kv_heads,
+            d_head: cfg.d_head,
+            min_gpus: 1,
+            max_model_ctx: cfg.max_ctx,
+            bytes_per_param: 4.0,   // testbed weights are f32
+            kv_bytes_per_elem: 4.0, // testbed KV pools are f32 too
+        };
+        // Effective FLOP/s so prefill_s(c_prefill, 1) reproduces the
+        // measured chunk time (mfu folded in), and effective bandwidth so
+        // decode_step_s(1, ·, 1) reproduces the measured weight-read-bound
+        // step; launch overheads fold into the measurements themselves.
+        let flops = (2.0 * model.active_params_b * 1e9 * self.c_prefill.max(1) as f64
+            / prefill_chunk_s)
+            .max(1.0);
+        let weight_bytes = model.weight_bytes();
+        // Bandwidth from the bytes a b=1 decode step actually reads: for
+        // MoE shapes that is the *active* expert slice, not the full
+        // checkpoint — dividing total weight bytes by the measured step
+        // would under-predict decode time by the active/total ratio.
+        let touched_bytes =
+            model.active_params_b.min(model.params_b) * 1e9 * model.bytes_per_param;
+        let hbm_bw = (touched_bytes / decode_step_s).max(1.0);
+        // KV capacity pinned to the adaptor's real block pool so capacity
+        // reasoning on the fitted model matches admission control.
+        let kv_tokens = cfg.dp_token_capacity() as f64;
+        let hbm_gb = (weight_bytes + kv_tokens * model.kv_bytes_per_token()) / 1e9;
+        let hw = HwSpec {
+            n_gpus: self.engines.len(),
+            hbm_gb,
+            hbm_bw,
+            // The testbed "interconnect" is the same memory fabric the
+            // engines share; migrations move bytes at memory speed.
+            nvlink_bw: hbm_bw,
+            flops_bf16: flops,
+            mfu_prefill: 1.0,
+            mfu_decode: 1.0,
+            kernel_launch_s: 0.0,
+            overhead_gb_per_gpu: 0.0,
+            cold_base_s: 1.0,
+            cold_s_per_gb: 0.0,
+        };
+        CostModel::new(hw, model)
+    }
+
     fn members(&self, start: usize, p: usize) -> std::ops::Range<usize> {
         start..start + p
     }
 
-    /// Recompute the unit/idle index bits for engine `e`.  Must be called
-    /// after any mutation of `engine_mode[e]` or `engine_active[e]`.
+    /// Recompute the kernel index's unit/idle bits for engine `e`.  Must be
+    /// called after any mutation of `engine_mode[e]` or `engine_active[e]`.
+    /// (An empty draining unit engine counts as idle until its switch lands
+    /// — the policy sees it — which is this path's pre-kernel semantics,
+    /// encoded in maintenance as `sched::index` documents.)
     fn refresh_engine(&mut self, e: usize) {
-        let bit = 1u64 << e;
-        if self.engine_mode[e] == 1 {
-            self.unit_mask |= bit;
-            if self.engine_active[e].is_empty() {
-                self.idle_mask |= bit;
-            } else {
-                self.idle_mask &= !bit;
-            }
-        } else {
-            self.unit_mask &= !bit;
-            self.idle_mask &= !bit;
-        }
+        let unit = self.engine_mode[e] == 1;
+        let idle = unit && self.engine_active[e].is_empty();
+        self.kernel.index.refresh_engine(e, unit, idle);
     }
 
-    /// Recompute the draining mask.  Must be called after any mutation of a
-    /// group's `tp_pending`.
+    /// Recompute the kernel index's draining mask.  Must be called after
+    /// any mutation of a group's `tp_pending`.
     fn refresh_draining(&mut self) {
         let mut mask = 0u64;
         for (&start, g) in &self.groups {
@@ -470,7 +627,7 @@ impl Cluster {
                 }
             }
         }
-        self.draining_mask = mask;
+        self.kernel.index.set_draining_mask(mask);
     }
 
     /// Whether the whole member set already runs at mode `p`.  With
@@ -574,7 +731,7 @@ impl Cluster {
             // Exit/idle handling.  Finished requests leave the slab, so
             // emptiness == everything reached a terminal state.
             if self.active.is_empty() && next_arrival >= trace.len() {
-                debug_assert!(self.waiting_hi.is_empty() && self.waiting_lo.is_empty());
+                debug_assert!(self.kernel.rings.is_empty());
                 break;
             }
             if !stepped {
@@ -590,9 +747,9 @@ impl Cluster {
                     // iterations: genuine scheduling bug, fail loudly
                     // instead of hanging.
                     let stuck: Vec<u64> = self
-                        .waiting_hi
+                        .kernel
+                        .rings
                         .iter()
-                        .chain(self.waiting_lo.iter())
                         .filter_map(|&h| self.active.get(h).map(|a| a.sr.id))
                         .collect();
                     bail!("scheduler stall: waiting={stuck:?}");
@@ -664,19 +821,19 @@ impl Cluster {
             backfill: false,
         });
         self.by_id.insert(id, h);
-        match pri {
-            Priority::High => self.waiting_hi.push_back(h),
-            Priority::Normal => self.waiting_lo.push_back(h),
-        }
+        self.kernel.on_event(SchedEvent::Arrival { h, priority: pri });
     }
 
-    fn snapshot(&self) -> Snapshot {
+    /// Policy snapshot for one walk position; `queue_len` is the kernel
+    /// walk's `backlog_now` (requeued-so-far plus not-yet-processed), so
+    /// the burst signal sees the true queue depth.
+    fn snapshot(&self, queue_len: usize) -> Snapshot {
         let committed: usize = self.engine_committed.iter().sum();
         let capacity = self.engines.len() * (self.cfg.n_blocks - 1);
         Snapshot {
             now: self.now(),
-            queue_len: self.waiting_hi.len() + self.waiting_lo.len(),
-            idle_engines: self.idle_mask.count_ones() as usize,
+            queue_len,
+            idle_engines: self.kernel.index.idle_count(),
             n_engines: self.engines.len(),
             dp_capacity_tokens: self.cfg.dp_token_capacity(),
             max_tp: self.max_tp,
@@ -688,80 +845,92 @@ impl Cluster {
         }
     }
 
-    /// Requeue a request that could not bind this iteration, preserving
-    /// FIFO order within its priority level.
-    fn requeue(&mut self, h: SlabHandle) {
-        match self.active.get(h).expect("requeue of dead request").sr.priority {
-            Priority::High => self.waiting_hi.push_back(h),
-            Priority::Normal => self.waiting_lo.push_back(h),
-        }
-    }
-
-    /// Steps ③–⑤ for every waiting request.
+    /// Steps ③–⑤ for every waiting request, as one kernel admission walk:
+    /// the kernel owns ring order, backlog accounting, and defer/requeue
+    /// semantics; this driver supplies the per-request placement (policy
+    /// decision + binding mechanics).
     fn assign_waiting(
         &mut self,
         policy: &mut dyn Policy,
         strategy: Strategy,
         recorder: &mut Recorder,
     ) -> Result<()> {
-        if self.waiting_hi.is_empty() && self.waiting_lo.is_empty() {
+        // The real path never event-gates its walks: decisions are wall-
+        // clock-time-varying (an `AdaptivePolicy` control tick can flip a
+        // decision with no kernel event at all), so every iteration dirties
+        // unconditionally.  Do NOT replace this with `SchedEvent`-driven
+        // dirtying (completions/settles/plan changes): it would be sound
+        // for stateless policies but silently starve adaptive re-walks.
+        self.kernel.note_dirty();
+        if !self.kernel.should_walk() {
             return Ok(());
         }
         if self.switch_cfg.backfill {
             self.refresh_drain_horizons();
         }
-        // Ping-pong the rings through warm scratch buffers so the requeue
-        // path never allocates.
-        std::mem::swap(&mut self.waiting_hi, &mut self.scratch.drain_hi);
-        std::mem::swap(&mut self.waiting_lo, &mut self.scratch.drain_lo);
-        let backlog_total = self.scratch.drain_hi.len() + self.scratch.drain_lo.len();
-        let mut processed = 0usize;
-        for high_pass in [true, false] {
-            loop {
-                let popped = if high_pass {
-                    self.scratch.drain_hi.pop_front()
-                } else {
-                    self.scratch.drain_lo.pop_front()
-                };
-                let Some(h) = popped else { break };
-                processed += 1;
-                let mut snap = self.snapshot();
-                // Include requests later in this same drain in the backlog
-                // so the burst signal sees the true queue depth (requeued
-                // ones are already in the live rings snapshot() counted).
-                snap.queue_len += backlog_total - processed;
-                let (rid, plen, hint, pri, demand) = {
-                    let a = self.active.get(h).expect("waiting handle must be live");
-                    (
-                        a.sr.id,
-                        a.sr.prompt.len(),
-                        a.sr.max_new,
-                        a.sr.priority,
-                        a.sr.tp_demand,
-                    )
-                };
-                match policy.decide_for(rid, plen, hint, pri, demand, &snap) {
-                    ModeDecision::Reject => {
-                        let now = self.now();
-                        let a = self.active.remove(h).expect("live");
-                        self.by_id.remove(&a.sr.id);
-                        self.rejected.push(a.sr.id);
-                        recorder.on_finish_at(a.rec, now);
-                    }
-                    ModeDecision::Dp => self.try_bind_dp(h, recorder)?,
-                    ModeDecision::Tp(p) => {
-                        let p = self.clamp_tp(p);
-                        if p == 1 {
-                            // Degenerate TP (single engine / unsupported width).
-                            self.try_bind_dp(h, recorder)?;
-                        } else {
-                            self.bind_tp(h, p, strategy, recorder)?;
-                        }
-                    }
+        let mut walk = self.kernel.begin_walk();
+        let mut result = Ok(());
+        while let Some((h, high)) = walk.next() {
+            let backlog_now = walk.backlog_now();
+            match self.place_waiting(h, backlog_now, policy, strategy, recorder) {
+                Ok((rid, placement)) => walk.settle(h, high, rid, placement),
+                Err(e) => {
+                    // The request may be partially bound (blocks committed,
+                    // adaptor registrations issued) when a placement errors:
+                    // do NOT requeue it — a re-walk could double-bind it.
+                    // Consuming the entry without settling matches the
+                    // pre-kernel error path; the undrained remainder is
+                    // restored in order by end_walk.
+                    result = Err(e);
+                    break;
                 }
             }
         }
-        Ok(())
+        self.kernel.end_walk(walk);
+        result
+    }
+
+    /// Decide and bind one waiting request (the driver half of the walk).
+    fn place_waiting(
+        &mut self,
+        h: SlabHandle,
+        backlog_now: usize,
+        policy: &mut dyn Policy,
+        strategy: Strategy,
+        recorder: &mut Recorder,
+    ) -> Result<(u64, Placement)> {
+        let snap = self.snapshot(backlog_now);
+        let (rid, plen, hint, pri, demand) = {
+            let a = self.active.get(h).expect("waiting handle must be live");
+            (
+                a.sr.id,
+                a.sr.prompt.len(),
+                a.sr.max_new,
+                a.sr.priority,
+                a.sr.tp_demand,
+            )
+        };
+        let placement = match policy.decide_for(rid, plen, hint, pri, demand, &snap) {
+            ModeDecision::Reject => {
+                let now = self.now();
+                let a = self.active.remove(h).expect("live");
+                self.by_id.remove(&a.sr.id);
+                self.rejected.push(a.sr.id);
+                recorder.on_finish_at(a.rec, now);
+                Placement::Reject
+            }
+            ModeDecision::Dp => self.try_bind_dp(h, recorder)?,
+            ModeDecision::Tp(p) => {
+                let p = self.clamp_tp(p);
+                if p == 1 {
+                    // Degenerate TP (single engine / unsupported width).
+                    self.try_bind_dp(h, recorder)?
+                } else {
+                    self.bind_tp(h, p, strategy, recorder)?
+                }
+            }
+        };
+        Ok((rid, placement))
     }
 
     /// Worst-case block demand under layout `p` (admission unit).
@@ -783,85 +952,91 @@ impl Cluster {
         }
     }
 
-    /// Bind to the least-loaded unbound engine with KV headroom, or queue.
-    /// Candidates come from the unit/draining bitmask indexes — O(set bits)
-    /// instead of a predicate scan over every engine.  In backfill mode a
-    /// draining engine is a second-choice candidate when the request's
-    /// predicted step count fits the drain horizon.
-    fn try_bind_dp(&mut self, h: SlabHandle, recorder: &mut Recorder) -> Result<()> {
+    /// Bind to the least-loaded unbound engine with KV headroom, or defer.
+    /// Candidates come from the kernel's unit/draining bitmask index —
+    /// O(set bits) instead of a predicate scan over every engine.  In
+    /// backfill mode a draining engine is a second-choice candidate when
+    /// the kernel's horizon predicate admits the request.
+    fn try_bind_dp(&mut self, h: SlabHandle, recorder: &mut Recorder) -> Result<Placement> {
         let need = self.block_need(h, 1);
-        let mut candidates = self.unit_mask & !self.draining_mask;
-        let mut pick: Option<usize> = None;
+        let mut candidates = self.kernel.index.dp_candidates();
+        let mut ll = LeastLoaded::new();
         while candidates != 0 {
             let e = candidates.trailing_zeros() as usize;
             candidates &= candidates - 1;
             if self.engine_committed[e] + need > self.cfg.n_blocks - 1 {
                 continue;
             }
-            match pick {
-                None => pick = Some(e),
-                Some(p) if self.engine_active[p].len() > self.engine_active[e].len() => {
-                    pick = Some(e)
-                }
-                _ => {}
-            }
+            ll.offer(e, self.engine_active[e].len());
         }
+        let mut pick = ll.pick();
+        let mut backfill = false;
         if pick.is_none() && self.switch_cfg.backfill {
             pick = self.pick_backfill_engine(h, need);
             if pick.is_some() {
                 self.active.get_mut(h).expect("live").backfill = true;
+                backfill = true;
             }
         }
         match pick {
             Some(e) => {
                 self.commit(h, e, need);
-                self.bind_dp(h, e, recorder)
+                self.bind_dp(h, e, recorder)?;
+                Ok(Placement::Dp { unit: e as u32, backfill })
             }
-            None => {
-                self.requeue(h);
-                Ok(())
-            }
+            None => Ok(Placement::Defer),
         }
     }
 
-    /// Scheduler steps a request still needs: remaining prefill chunks plus
-    /// remaining decode tokens — the unit the backfill admission predicate
-    /// is denominated in (the real path has no wall-clock cost model; step
-    /// counts advance in lockstep across engines, so they are the honest
-    /// analogue of the simulator's cost-model seconds).
-    fn remaining_steps(&self, a: &Active) -> usize {
+    /// Wall-clock seconds of work a resident request still owes its engine
+    /// under the calibrated cost model (remaining chunked prefill + decode
+    /// tail) — the per-resident term of the drain horizon, computed by the
+    /// kernel so it is denominated identically to the predicate's request
+    /// side.
+    fn remaining_work_s(&self, a: &Active) -> f64 {
         let total = a.sr.prompt.len() + a.emitted.len().saturating_sub(1);
-        let pre_left = total.saturating_sub(a.pos).div_ceil(self.c_prefill);
+        let pre_left = total.saturating_sub(a.pos);
         let dec_left = a.sr.max_new.saturating_sub(a.emitted.len());
-        pre_left + dec_left
+        let g = self.migrate_cm.model.min_gpus;
+        crate::sched::remaining_work_s(
+            &self.migrate_cm,
+            pre_left,
+            dec_left,
+            a.pos,
+            g,
+            self.c_prefill,
+            0.0,
+        )
     }
 
     /// Recompute every draining engine's drain horizon — the largest
-    /// remaining-step count among resident (non-paused, non-speculative,
-    /// non-backfill) requests on any member of its group — into the
-    /// per-pass scratch cache.  One group/member scan serves the whole
-    /// `assign_waiting` walk: horizons only change when engines step, never
-    /// mid-walk (backfill admissions are excluded from the horizon).
+    /// predicted remaining work (calibrated wall-clock seconds) among
+    /// resident (non-paused, non-speculative, non-backfill) requests on any
+    /// member of its group — into the per-pass scratch cache.  One
+    /// group/member scan serves the whole `assign_waiting` walk: horizons
+    /// only change when engines step, never mid-walk (backfill admissions
+    /// are excluded from the horizon).  Formerly denominated in scheduler
+    /// steps; the calibrated `CostModel` (see [`Self::calibrate`]) lets the
+    /// real path run the simulator's exact wall-clock predicate instead.
     fn refresh_drain_horizons(&mut self) {
-        let mut horizons = std::mem::take(&mut self.scratch.horizon_by_engine);
+        let mut horizons = std::mem::take(&mut self.scratch.horizon_s_by_engine);
         horizons.clear();
-        horizons.resize(self.engines.len(), 0);
+        horizons.resize(self.engines.len(), 0.0);
         for (&start, g) in &self.groups {
             if g.tp_pending.is_empty() {
                 continue;
             }
-            let mut horizon = 0usize;
+            let mut horizon = 0.0f64;
             for m in self.members(start, g.p) {
                 for &x in &self.engine_active[m] {
                     if let Some(a) = self.active.get(x) {
-                        if !a.paused && !a.speculative && !a.backfill
-                        {
-                            horizon = horizon.max(self.remaining_steps(a));
+                        if !a.paused && !a.speculative && !a.backfill {
+                            horizon = horizon.max(self.remaining_work_s(a));
                         }
                     }
                 }
             }
-            if horizon > 0 {
+            if horizon > 0.0 {
                 for m in self.members(start, g.p) {
                     if m < horizons.len() {
                         horizons[m] = horizon;
@@ -869,25 +1044,51 @@ impl Cluster {
                 }
             }
         }
-        self.scratch.horizon_by_engine = horizons;
+        self.scratch.horizon_s_by_engine = horizons;
     }
 
     /// Backfill candidate among draining unit engines: block headroom, a
-    /// free backfill slot, and predicted steps within the drain horizon.
-    /// The request's prefill chunks are charged **twice**: engines issue
-    /// prefill-first, so each backfill prefill step also displaces one
-    /// resident decode step on that engine and extends the drain by a step
-    /// — the predicate must absorb that displacement, not just the
-    /// request's own length, or backfill would systematically overrun the
-    /// horizon it was admitted against.
+    /// free backfill slot, and the kernel's horizon predicate — the
+    /// request's predicted solo completion (prefill charged twice: engines
+    /// issue prefill-first, so each backfill prefill chunk also displaces a
+    /// resident decode step and extends the drain) must land inside
+    /// `backfill_margin ×` the drain window.
     fn pick_backfill_engine(&self, h: SlabHandle, need: usize) -> Option<usize> {
-        let steps_needed = {
+        let (prompt, max_new) = {
             let a = self.active.get(h)?;
-            let pre_chunks = a.sr.prompt.len().div_ceil(self.c_prefill);
-            2 * pre_chunks + a.sr.max_new
+            (a.sr.prompt.len(), a.sr.max_new)
         };
-        let mut candidates = self.unit_mask & self.draining_mask;
-        let mut pick: Option<usize> = None;
+        let g = self.migrate_cm.model.min_gpus;
+        // The request's predicted completion is engine-independent (start
+        // 0, fixed width/chunk), so run the kernel predicate once against
+        // the largest candidate window — the budget short-circuits the walk
+        // past it — and compare the returned finish per engine, instead of
+        // re-walking the chunk/decode schedule per candidate.
+        let margin = self.switch_cfg.backfill_margin;
+        let mut max_deadline = 0.0f64;
+        let mut candidates = self.kernel.index.backfill_candidates();
+        while candidates != 0 {
+            let e = candidates.trailing_zeros() as usize;
+            candidates &= candidates - 1;
+            let horizon_s = *self.scratch.horizon_s_by_engine.get(e).unwrap_or(&0.0);
+            max_deadline = max_deadline.max(margin * horizon_s);
+        }
+        if max_deadline <= 0.0 {
+            return None;
+        }
+        let fin = crate::sched::backfill_fit(
+            &self.migrate_cm,
+            0.0,
+            prompt,
+            max_new,
+            g,
+            self.c_prefill,
+            0.0,
+            true,
+            max_deadline,
+        )?;
+        let mut candidates = self.kernel.index.backfill_candidates();
+        let mut ll = LeastLoaded::new();
         while candidates != 0 {
             let e = candidates.trailing_zeros() as usize;
             candidates &= candidates - 1;
@@ -902,22 +1103,13 @@ impl Cluster {
             if n_bf >= self.switch_cfg.max_backfill_per_engine {
                 continue;
             }
-            let horizon = *self.scratch.horizon_by_engine.get(e).unwrap_or(&0);
-            if horizon == 0 {
+            let horizon_s = *self.scratch.horizon_s_by_engine.get(e).unwrap_or(&0.0);
+            if horizon_s <= 0.0 || fin > margin * horizon_s {
                 continue;
             }
-            if steps_needed as f64 > self.switch_cfg.backfill_margin * horizon as f64 {
-                continue;
-            }
-            match pick {
-                None => pick = Some(e),
-                Some(p) if self.engine_active[p].len() > self.engine_active[e].len() => {
-                    pick = Some(e)
-                }
-                _ => {}
-            }
+            ll.offer(e, self.engine_active[e].len());
         }
-        pick
+        ll.pick()
     }
 
     fn clamp_tp(&self, p: usize) -> usize {
@@ -943,14 +1135,15 @@ impl Cluster {
         Ok(())
     }
 
-    /// Bind (or queue) a TP request onto an aligned group of width p.
+    /// Bind (or make pending) a TP request onto an aligned group of width
+    /// p; `Placement::Defer` when no compatible group is formable now.
     fn bind_tp(
         &mut self,
         h: SlabHandle,
         p: usize,
         strategy: Strategy,
         recorder: &mut Recorder,
-    ) -> Result<()> {
+    ) -> Result<Placement> {
         // Prefer an already-bound group at this width with batch room, else
         // the group whose members have the least DP work.  Starts whose
         // members belong to a live group of a *different* width are excluded
@@ -996,8 +1189,7 @@ impl Cluster {
         }
         if !any_start {
             // No compatible group right now; retry next iteration.
-            self.requeue(h);
-            return Ok(());
+            return Ok(Placement::Defer);
         }
         let start = bound.unwrap_or_else(|| best.map(|(_, s)| s).unwrap());
 
@@ -1008,8 +1200,7 @@ impl Cluster {
             .members(start, p)
             .all(|e| self.engine_committed[e] + need_p <= self.cfg.n_blocks - 1);
         if !room {
-            self.requeue(h);
-            return Ok(());
+            return Ok(Placement::Defer);
         }
 
         let mut busy = std::mem::take(&mut self.scratch.busy);
@@ -1051,7 +1242,7 @@ impl Cluster {
             self.groups.get_mut(&start).unwrap().tp_active.push(h);
             recorder.on_first_sched_at(rec, self.now());
             self.scratch.busy = busy;
-            return Ok(());
+            return Ok(Placement::Tp { width: p as u32 });
         }
 
         // Members still busy: strategy decides.
@@ -1120,7 +1311,7 @@ impl Cluster {
             }
         }
         self.scratch.busy = busy;
-        Ok(())
+        Ok(Placement::Tp { width: p as u32 })
     }
 
     /// Promote pending TP requests whose group has finished draining, and
@@ -1179,9 +1370,17 @@ impl Cluster {
                 if self.switch_cfg.backfill {
                     for e in self.members(start, p) {
                         let bit = 1u64 << e;
-                        if self.groups[&start].settled_mask & bit != 0
-                            || self.engine_mode[e] != 1
-                        {
+                        // The kernel's settle rule: a member flips as soon
+                        // as its own work drains, once.  Check the cheap
+                        // flags first so the O(|engine_active|) busy scan
+                        // only runs for members the rule could still pass
+                        // (already-settled members are the steady state
+                        // late in a drain).
+                        if !lifecycle::member_settle_due(
+                            self.groups[&start].settled_mask & bit != 0,
+                            self.engine_mode[e] == 1,
+                            false,
+                        ) {
                             continue;
                         }
                         let member_busy = self.engine_active[e].iter().any(|&x| {
@@ -1278,17 +1477,18 @@ impl Cluster {
                             let a = self.active.get(h).expect("live");
                             (a.speculative, a.home, a.sr.id, a.pos)
                         };
-                        // Migrate-vs-recompute (ISSUE 4): the cost model's
-                        // shared rule — the identical comparison the sim
-                        // event core applies — decides whether the
-                        // speculative request's KV bytes are carried across
-                        // the layout change or re-prefilled.
-                        let migrate_kv = was_spec
-                            && self.switch_cfg.migrate
-                            && kv_pos > 0
-                            && self
-                                .migrate_cm
-                                .migrate_wins(kv_pos, p * self.migrate_cm.model.min_gpus);
+                        // Migrate-vs-recompute (ISSUE 4/5): the kernel's
+                        // carry gate — the identical rule the sim event
+                        // core applies — decides whether the speculative
+                        // request's KV bytes are carried across the layout
+                        // change or re-prefilled.
+                        let migrate_kv = lifecycle::carry_wins(
+                            &self.migrate_cm,
+                            self.switch_cfg.migrate,
+                            was_spec,
+                            kv_pos,
+                            p * self.migrate_cm.model.min_gpus,
+                        );
                         if migrate_kv {
                             // Home side: pin seq_len to the cached position
                             // (prefill never advances it), then re-tag the

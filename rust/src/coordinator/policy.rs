@@ -86,57 +86,6 @@ impl Default for FlyingPolicy {
     }
 }
 
-impl FlyingPolicy {
-    /// Narrowest TP degree whose pooled KV capacity fits `total_tokens`
-    /// (Use Case 3's memory-driven binding).  Public so the control plane's
-    /// plan mapping applies the identical memory constraint.
-    pub fn fit_tp(total_tokens: usize, snap: &Snapshot) -> Option<usize> {
-        let mut p = 1;
-        while p <= snap.max_tp {
-            if total_tokens <= snap.dp_capacity_tokens * p {
-                return Some(p);
-            }
-            p *= 2;
-        }
-        None
-    }
-
-    /// The correctness-constrained decision tiers — explicit TP demand,
-    /// memory-driven binding (Use Case 3), priority binding (Use Case 2) —
-    /// or `None` when the request is elastic (Use Case 1).  This is the
-    /// single definition shared by `decide` and the control plane's
-    /// `plan_decision`: a fleet plan may steer only the elastic tail, so
-    /// both paths must agree on where that tail begins.
-    pub fn constrained(
-        prompt_len: usize,
-        output_len_hint: usize,
-        priority: Priority,
-        tp_demand: Option<usize>,
-        snap: &Snapshot,
-    ) -> Option<ModeDecision> {
-        let total = prompt_len + output_len_hint;
-        // Explicit demand wins (latency-strict clients).
-        if let Some(p) = tp_demand {
-            return Some(ModeDecision::Tp(p.min(snap.max_tp).max(1)));
-        }
-        // Use Case 3: memory-driven.
-        if total > snap.dp_capacity_tokens {
-            return Some(match Self::fit_tp(total, snap) {
-                Some(p) => ModeDecision::Tp(p),
-                None => ModeDecision::Reject,
-            });
-        }
-        // Use Case 2: priority-driven.  The binding takes at most half the
-        // cluster so best-effort traffic keeps DP engines (paper §2.3:
-        // "normal tasks continue to execute on remaining DP engines").
-        if priority == Priority::High {
-            let width = (snap.n_engines / 2).max(2).min(snap.max_tp);
-            return Some(ModeDecision::Tp(width));
-        }
-        None
-    }
-}
-
 impl Policy for FlyingPolicy {
     fn name(&self) -> &'static str {
         "flying"
@@ -150,7 +99,11 @@ impl Policy for FlyingPolicy {
         tp_demand: Option<usize>,
         snap: &Snapshot,
     ) -> ModeDecision {
-        if let Some(d) = Self::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
+        // The constraint tiers (explicit demand / memory / priority) are the
+        // scheduling kernel's single definition — shared verbatim with the
+        // control plane's `plan_decision`, never re-implemented per path.
+        if let Some(d) =
+            crate::sched::constrained(prompt_len, output_len_hint, priority, tp_demand, snap)
         {
             return d;
         }

@@ -55,10 +55,11 @@ impl std::str::FromStr for Strategy {
 /// With `backfill = true`:
 ///
 /// * **Drain backfill** — draining members may still accept elastic DP
-///   requests whose predicted cost (in scheduler steps: prefill chunks
-///   charged twice — prefill-first issue displaces resident decodes —
-///   plus decode tokens) fits inside the group's drain horizon (the largest
-///   remaining-step count among resident requests), bounded to
+///   requests whose predicted cost (the scheduling kernel's `backfill_fit`
+///   in calibrated wall-clock seconds — the simulator's exact predicate;
+///   prefill charged twice because prefill-first issue displaces resident
+///   decodes) fits inside the group's drain horizon (the largest predicted
+///   remaining work among resident requests), bounded to
 ///   `max_backfill_per_engine` concurrent backfill requests per member.
 ///   Capacity that would idle behind the slowest straggler serves short
 ///   requests instead.
@@ -85,8 +86,9 @@ pub struct SwitchConfig {
     pub backfill: bool,
     /// Max concurrently-resident backfill requests per draining engine.
     pub max_backfill_per_engine: usize,
-    /// Admission slack: a request is backfillable when its predicted step
-    /// count is <= `backfill_margin` x the drain-horizon step count.
+    /// Admission slack: a request is backfillable when its predicted
+    /// completion (kernel `backfill_fit`) lands within `backfill_margin` x
+    /// the drain-horizon window.
     pub backfill_margin: f64,
     /// Layout-preserving KV migration on DP→TP promotion (`--switch-migrate`).
     pub migrate: bool,

@@ -30,6 +30,7 @@ pub mod kv;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod sim;
 pub mod util;

@@ -68,7 +68,11 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
-    let mut policy = cfg.make_policy()?;
+    // Calibrate whenever something consumes the cost model on this cluster
+    // (`ServeConfig::needs_calibration`): predictions must be denominated
+    // in this testbed's measured seconds, not the paper-scale default's.
+    let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
+    let mut policy = cfg.make_policy_with(calibrated)?;
     flying_serving::server::serve(&mut cluster, policy.as_mut(), cfg.strategy, &cfg.listen)
 }
 
@@ -78,7 +82,9 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
-    let mut policy = cfg.make_policy()?;
+    // Same calibration rule as `serve` (`ServeConfig::needs_calibration`).
+    let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
+    let mut policy = cfg.make_policy_with(calibrated)?;
 
     let wl = WorkloadCfg::paper_scaled(cfg.seed, cfg.n_requests);
     let trace = generate(&wl);

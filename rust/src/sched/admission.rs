@@ -1,0 +1,287 @@
+//! Shared admission predicates: the constraint tiers every mode decision
+//! passes through, the least-loaded engine pick, and the drain-horizon
+//! backfill predicate.
+//!
+//! Each predicate here has exactly one definition and one call-site layer —
+//! this module.  The simulator and the coordinator (and the control plane's
+//! `plan_decision`) call these; they never re-implement them.
+
+use crate::coordinator::policy::{ModeDecision, Snapshot};
+use crate::sim::costmodel::CostModel;
+use crate::workload::Priority;
+
+/// Narrowest TP degree whose pooled KV capacity fits `total_tokens`
+/// (Use Case 3's memory-driven binding).  `None` when no supported width
+/// fits — the request is unservable.
+pub fn fit_tp(total_tokens: usize, snap: &Snapshot) -> Option<usize> {
+    let mut p = 1;
+    while p <= snap.max_tp {
+        if total_tokens <= snap.dp_capacity_tokens * p {
+            return Some(p);
+        }
+        p *= 2;
+    }
+    None
+}
+
+/// The correctness-constrained decision tiers — explicit TP demand,
+/// memory-driven binding (Use Case 3), priority binding (Use Case 2) — or
+/// `None` when the request is elastic (Use Case 1).  This is the single
+/// definition shared by `FlyingPolicy::decide` and the control plane's
+/// `plan_decision`: a fleet plan may steer only the elastic tail, so every
+/// path must agree on where that tail begins.
+pub fn constrained(
+    prompt_len: usize,
+    output_len_hint: usize,
+    priority: Priority,
+    tp_demand: Option<usize>,
+    snap: &Snapshot,
+) -> Option<ModeDecision> {
+    let total = prompt_len + output_len_hint;
+    // Explicit demand wins (latency-strict clients).
+    if let Some(p) = tp_demand {
+        return Some(ModeDecision::Tp(p.min(snap.max_tp).max(1)));
+    }
+    // Use Case 3: memory-driven.
+    if total > snap.dp_capacity_tokens {
+        return Some(match fit_tp(total, snap) {
+            Some(p) => ModeDecision::Tp(p),
+            None => ModeDecision::Reject,
+        });
+    }
+    // Use Case 2: priority-driven.  The binding takes at most half the
+    // cluster so best-effort traffic keeps DP engines (paper §2.3:
+    // "normal tasks continue to execute on remaining DP engines").
+    if priority == Priority::High {
+        let width = (snap.n_engines / 2).max(2).min(snap.max_tp);
+        return Some(ModeDecision::Tp(width));
+    }
+    None
+}
+
+/// Least-loaded candidate selection with the shared tie-break (first among
+/// equals wins — `Iterator::min_by_key` semantics, which both paths
+/// historically implemented by hand).  Offer candidates in scan order.
+#[derive(Default)]
+pub struct LeastLoaded {
+    best: Option<(usize, usize)>, // (load, candidate)
+}
+
+impl LeastLoaded {
+    pub fn new() -> Self {
+        LeastLoaded::default()
+    }
+
+    #[inline]
+    pub fn offer(&mut self, candidate: usize, load: usize) {
+        if self.best.map(|(l, _)| load < l).unwrap_or(true) {
+            self.best = Some((load, candidate));
+        }
+    }
+
+    #[inline]
+    pub fn pick(&self) -> Option<usize> {
+        self.best.map(|(_, c)| c)
+    }
+}
+
+/// Wall-clock cost of chunked prefill of `tokens` on a g-GPU instance:
+/// per-chunk `prefill_s` floored at the scheduling heartbeat.  Every full
+/// chunk costs the same, so this is closed-form — O(1), not O(tokens/chunk)
+/// — which matters because the coordinator evaluates it per resident on
+/// every drain-horizon refresh and long-context prompts run to hundreds of
+/// thousands of tokens.  (The simulator's byte-exact step-for-step
+/// accumulation lives in `CostModel::solo_completion_t`, not here.)
+pub fn chunked_prefill_s(
+    cm: &CostModel,
+    tokens: usize,
+    g: usize,
+    chunk_tokens: usize,
+    heartbeat_s: f64,
+) -> f64 {
+    if tokens == 0 {
+        return 0.0;
+    }
+    let chunk = chunk_tokens.max(1);
+    let full = tokens / chunk;
+    let rem = tokens % chunk;
+    let mut t = full as f64 * cm.prefill_s(chunk, g).max(heartbeat_s);
+    if rem > 0 {
+        t += cm.prefill_s(rem, g).max(heartbeat_s);
+    }
+    t
+}
+
+/// The drain-horizon backfill admission predicate — the one rule both
+/// paths apply (ISSUE 5; formerly the simulator's exact
+/// `solo_completion_t <= settle_at` check and the coordinator's separate
+/// scheduler-step count heuristic).
+///
+/// A request is backfillable onto a draining/shell engine iff its solo-run
+/// completion, started at `start`, lands at or before `deadline`.
+///
+/// * Simulator shells: `start` is the later of now, the shell's free point,
+///   and the shell's current backfill-work bound (the batched-shell
+///   over-approximation — see `sim::cluster`); `deadline` is the shell's
+///   absolute settle stamp; `displace_prefill` is false (shells admit only
+///   onto backfill-only residency, so there is no resident decode to
+///   displace).  In the simulator the cost model IS the execution model,
+///   so the prediction is exact.
+/// * Coordinator: `start` is 0 and `deadline` is
+///   `backfill_margin × horizon_s` (the drain window in calibrated
+///   wall-clock seconds — see [`remaining_work_s`]); `displace_prefill` is
+///   true because engines issue prefill-first, so each backfill prefill
+///   chunk also displaces one resident decode step and extends the drain —
+///   the request's prefill is charged twice to absorb that displacement.
+///
+/// Returns the predicted completion time when the request fits (callers
+/// fold it into their running shell bound), `None` otherwise.
+#[allow(clippy::too_many_arguments)]
+pub fn backfill_fit(
+    cm: &CostModel,
+    start: f64,
+    prompt: usize,
+    output: usize,
+    g: usize,
+    chunk_tokens: usize,
+    heartbeat_s: f64,
+    displace_prefill: bool,
+    deadline: f64,
+) -> Option<f64> {
+    let s0 = if displace_prefill {
+        start + chunked_prefill_s(cm, prompt, g, chunk_tokens, heartbeat_s)
+    } else {
+        start
+    };
+    let fin = cm.solo_completion_t(s0, prompt, output, g, chunk_tokens, heartbeat_s, deadline);
+    (fin <= deadline).then_some(fin)
+}
+
+/// Predicted wall-clock work a partially-served request still owes a g-GPU
+/// engine: remaining chunked prefill plus one decode step per remaining
+/// output token at the request's mid-tail context.  This is the per-
+/// resident term of the coordinator's drain horizon (the largest value over
+/// a draining group's residents), denominated in the same calibrated
+/// seconds as [`backfill_fit`]'s request side, so the predicate compares
+/// like with like.  The decode tail uses a closed-form midpoint context
+/// instead of the exact per-step walk: the horizon is a bound, not a
+/// schedule, and residents can owe thousands of tokens.
+#[allow(clippy::too_many_arguments)]
+pub fn remaining_work_s(
+    cm: &CostModel,
+    prefill_left_tokens: usize,
+    decode_left: usize,
+    ctx_now: usize,
+    g: usize,
+    chunk_tokens: usize,
+    heartbeat_s: f64,
+) -> f64 {
+    let pre = chunked_prefill_s(cm, prefill_left_tokens, g, chunk_tokens, heartbeat_s);
+    let mid_ctx = (ctx_now + decode_left / 2).max(1);
+    let dec = decode_left as f64 * cm.decode_step_s(1, mid_ctx, g).max(heartbeat_s);
+    pre + dec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{HwSpec, PaperModel};
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            now: 0.0,
+            queue_len: 0,
+            idle_engines: 4,
+            n_engines: 4,
+            dp_capacity_tokens: 1000,
+            max_tp: 4,
+            kv_frac: 0.0,
+        }
+    }
+
+    fn llama() -> CostModel {
+        CostModel::new(HwSpec::default(), PaperModel::llama70b())
+    }
+
+    #[test]
+    fn fit_tp_picks_narrowest_and_rejects_oversize() {
+        let s = snap();
+        assert_eq!(fit_tp(900, &s), Some(1));
+        assert_eq!(fit_tp(1000, &s), Some(1));
+        assert_eq!(fit_tp(1001, &s), Some(2));
+        assert_eq!(fit_tp(4000, &s), Some(4));
+        assert_eq!(fit_tp(4001, &s), None);
+    }
+
+    #[test]
+    fn constrained_tiers_in_precedence_order() {
+        let s = snap();
+        // Explicit demand beats everything, clamped to max_tp.
+        assert_eq!(
+            constrained(5000, 0, Priority::High, Some(8), &s),
+            Some(ModeDecision::Tp(4))
+        );
+        // Memory tier beats priority tier.
+        assert_eq!(
+            constrained(3500, 100, Priority::High, None, &s),
+            Some(ModeDecision::Tp(4))
+        );
+        // Priority tier binds half the cluster.
+        assert_eq!(
+            constrained(100, 50, Priority::High, None, &s),
+            Some(ModeDecision::Tp(2))
+        );
+        // Elastic tail: no constraint.
+        assert_eq!(constrained(100, 50, Priority::Normal, None, &s), None);
+        // Unservable: reject.
+        assert_eq!(
+            constrained(10_000, 0, Priority::Normal, None, &s),
+            Some(ModeDecision::Reject)
+        );
+    }
+
+    #[test]
+    fn least_loaded_keeps_first_among_equals() {
+        let mut ll = LeastLoaded::new();
+        ll.offer(3, 2);
+        ll.offer(1, 2); // tie: first offer wins
+        assert_eq!(ll.pick(), Some(3));
+        ll.offer(5, 1); // strictly better: replaces
+        assert_eq!(ll.pick(), Some(5));
+        assert_eq!(LeastLoaded::new().pick(), None);
+    }
+
+    #[test]
+    fn backfill_fit_matches_solo_completion_against_deadline() {
+        let cm = llama();
+        let g = 2;
+        let exact = cm.solo_completion_t(1.0, 512, 16, g, 2048, 0.004, f64::INFINITY);
+        // Deadline just after the exact finish: fits, returns the finish.
+        let fit = backfill_fit(&cm, 1.0, 512, 16, g, 2048, 0.004, false, exact + 1e-9);
+        assert_eq!(fit, Some(exact));
+        // Deadline just before: does not fit.
+        assert!(backfill_fit(&cm, 1.0, 512, 16, g, 2048, 0.004, false, exact - 1e-9).is_none());
+    }
+
+    #[test]
+    fn displaced_prefill_is_charged_twice() {
+        let cm = llama();
+        let g = 2;
+        let pre = chunked_prefill_s(&cm, 512, g, 2048, 0.0);
+        let plain =
+            backfill_fit(&cm, 0.0, 512, 4, g, 2048, 0.0, false, f64::INFINITY).unwrap();
+        let displaced =
+            backfill_fit(&cm, 0.0, 512, 4, g, 2048, 0.0, true, f64::INFINITY).unwrap();
+        assert!((displaced - plain - pre).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remaining_work_shrinks_as_the_request_progresses() {
+        let cm = llama();
+        let early = remaining_work_s(&cm, 4096, 256, 0, 2, 2048, 0.0);
+        let mid = remaining_work_s(&cm, 0, 256, 4096, 2, 2048, 0.0);
+        let late = remaining_work_s(&cm, 0, 8, 4344, 2, 2048, 0.0);
+        assert!(early > mid && mid > late);
+        assert_eq!(remaining_work_s(&cm, 0, 0, 5000, 2, 2048, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Unit/idle/draining engine bitmask index — O(1) engine-state queries for
+//! the admission walk, shared by both scheduling paths.
+//!
+//! The coordinator maintains one bit per physical engine
+//! ([`EngineIndex::refresh_engine`], [`EngineIndex::set_draining_mask`]);
+//! the simulator maintains one bit per *serving instance*, with each
+//! virtual engine owning the bits of the instances merged into it (a
+//! merged TP group of `m` instances carries `m` bits, so
+//! [`EngineIndex::idle_count`] equals the old Σ-over-vengs idle fold
+//! exactly).  Maintenance discipline is the driver's: every mutation of
+//! engine mode / active set / drain state must update the bits — queries
+//! never re-derive by scanning.
+//!
+//! Semantic note: what "idle" *excludes* differs legitimately per path and
+//! is encoded in maintenance, not in the query.  The simulator never marks
+//! a backfill shell idle (committed capacity is represented by its forming
+//! group); the coordinator counts an empty draining unit engine as idle
+//! (the policy sees it until the switch lands) — both are the exact
+//! pre-kernel behaviors of their paths.
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineIndex {
+    unit: u64,
+    idle: u64,
+    draining: u64,
+}
+
+impl EngineIndex {
+    pub fn new() -> Self {
+        EngineIndex::default()
+    }
+
+    /// Coordinator-style per-engine refresh: call after any mutation of
+    /// `engine_mode[e]` or `engine_active[e]`.
+    #[inline]
+    pub fn refresh_engine(&mut self, e: usize, unit: bool, idle: bool) {
+        let bit = 1u64 << e;
+        if unit {
+            self.unit |= bit;
+        } else {
+            self.unit &= !bit;
+        }
+        if idle {
+            self.idle |= bit;
+        } else {
+            self.idle &= !bit;
+        }
+    }
+
+    /// Mask-granular setters (simulator-style: a veng's `unit_bits` move
+    /// together through merges, shells, folds, and splits).
+    #[inline]
+    pub fn set_unit(&mut self, bits: u64, on: bool) {
+        if on {
+            self.unit |= bits;
+        } else {
+            self.unit &= !bits;
+        }
+    }
+
+    #[inline]
+    pub fn set_idle(&mut self, bits: u64, on: bool) {
+        if on {
+            self.idle |= bits;
+        } else {
+            self.idle &= !bits;
+        }
+    }
+
+    #[inline]
+    pub fn set_draining(&mut self, bits: u64, on: bool) {
+        if on {
+            self.draining |= bits;
+        } else {
+            self.draining &= !bits;
+        }
+    }
+
+    /// Replace the whole draining mask (coordinator: recomputed from the
+    /// group table after any `tp_pending` mutation).
+    #[inline]
+    pub fn set_draining_mask(&mut self, mask: u64) {
+        self.draining = mask;
+    }
+
+    #[inline]
+    pub fn unit_mask(&self) -> u64 {
+        self.unit
+    }
+
+    #[inline]
+    pub fn idle_mask(&self) -> u64 {
+        self.idle
+    }
+
+    #[inline]
+    pub fn draining_mask(&self) -> u64 {
+        self.draining
+    }
+
+    /// Idle serving capacity in unit-instance terms — the policy snapshot's
+    /// `idle_engines`.
+    #[inline]
+    pub fn idle_count(&self) -> usize {
+        self.idle.count_ones() as usize
+    }
+
+    /// Engines eligible for a fresh elastic DP bind: unit mode, not
+    /// committed to a draining group.
+    #[inline]
+    pub fn dp_candidates(&self) -> u64 {
+        self.unit & !self.draining
+    }
+
+    /// Draining unit engines — the backfill candidate set (admission still
+    /// gated per engine by the horizon predicate).
+    #[inline]
+    pub fn backfill_candidates(&self) -> u64 {
+        self.unit & self.draining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refresh_engine_tracks_unit_and_idle() {
+        let mut ix = EngineIndex::new();
+        ix.refresh_engine(0, true, true);
+        ix.refresh_engine(1, true, false);
+        ix.refresh_engine(2, false, false);
+        assert_eq!(ix.unit_mask(), 0b011);
+        assert_eq!(ix.idle_mask(), 0b001);
+        assert_eq!(ix.idle_count(), 1);
+        // Back to unit+idle.
+        ix.refresh_engine(2, true, true);
+        assert_eq!(ix.dp_candidates(), 0b111);
+    }
+
+    #[test]
+    fn draining_partitions_candidates() {
+        let mut ix = EngineIndex::new();
+        for e in 0..4 {
+            ix.refresh_engine(e, true, true);
+        }
+        ix.set_draining_mask(0b1100);
+        assert_eq!(ix.dp_candidates(), 0b0011);
+        assert_eq!(ix.backfill_candidates(), 0b1100);
+        ix.set_draining_mask(0);
+        assert_eq!(ix.dp_candidates(), 0b1111);
+    }
+
+    #[test]
+    fn mask_setters_move_bit_groups_together() {
+        let mut ix = EngineIndex::new();
+        // A 2-instance veng owning bits {1,2}.
+        ix.set_unit(0b110, true);
+        ix.set_idle(0b110, true);
+        assert_eq!(ix.idle_count(), 2);
+        // Shell conversion: committed capacity, never idle.
+        ix.set_idle(0b110, false);
+        ix.set_draining(0b110, true);
+        assert_eq!(ix.idle_count(), 0);
+        assert_eq!(ix.backfill_candidates(), 0b110);
+        // Fold: bits leave the unit/draining sets (now inside a group).
+        ix.set_draining(0b110, false);
+        ix.set_unit(0b110, false);
+        assert_eq!(ix.unit_mask(), 0);
+        assert_eq!(ix.draining_mask(), 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Group-lifecycle decision points: form → drain → backfill-shell →
+//! incremental settle → promote, and the split inverse.
+//!
+//! The *state* of a group lives in each driver (the simulator's transient
+//! vengs and backfill shells; the coordinator's `Group` table) because the
+//! two paths genuinely differ in mechanism — but every *decision* along the
+//! lifecycle is one of the functions below, so the rule can never fork.
+
+use crate::sim::costmodel::CostModel;
+
+/// Whether a drained transient TP group should split back to unit engines
+/// now.  Splits happen only under pressure: queued work that wants DP
+/// capacity, or hard-preempted requests waiting to resume.  An idle merged
+/// group is kept so low-load traffic stays in the TP regime (Use Case 1);
+/// carried (migrated) residents keep decoding inside it and add no
+/// pressure.
+#[inline]
+pub fn split_due(tp_work_left: bool, queue_pressure: bool, paused_waiting: bool) -> bool {
+    !tp_work_left && (queue_pressure || paused_waiting)
+}
+
+/// Incremental settle (backfill mode): whether one member of a draining
+/// group should switch into the target mode now instead of idling behind
+/// the slowest straggler.  A member settles as soon as its own work drains;
+/// already-settled or already-switched members are skipped so the final
+/// promotion only pays the stragglers' mode RPCs.
+#[inline]
+pub fn member_settle_due(already_settled: bool, at_unit_mode: bool, member_busy: bool) -> bool {
+    !already_settled && at_unit_mode && !member_busy
+}
+
+/// The migrate-vs-recompute gate (ISSUE 4/5): whether a request's cached KV
+/// is carried live across a DP→TP layout change instead of being
+/// re-prefilled.  This is the single call site of
+/// `CostModel::migrate_wins`; both paths answer through it:
+///
+/// * simulator — per resident at merge/fold time, `eligible` = the
+///   resident is in decode phase (prefill-phase residents pause as before);
+/// * coordinator — per promotion, `eligible` = the request ran
+///   speculatively (soft preempt), so it owns DP-layout KV to carry.
+///
+/// `cached_tokens == 0` (nothing cached yet) or a disabled flag always
+/// recomputes — the flag-off path must stay byte-identical to PR 1/3.
+#[inline]
+pub fn carry_wins(
+    cm: &CostModel,
+    migrate_enabled: bool,
+    eligible: bool,
+    cached_tokens: usize,
+    g: usize,
+) -> bool {
+    migrate_enabled && eligible && cached_tokens > 0 && cm.migrate_wins(cached_tokens, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::costmodel::{HwSpec, PaperModel};
+
+    #[test]
+    fn split_only_under_pressure() {
+        // Work left: never split.
+        assert!(!split_due(true, true, true));
+        // Drained + queued work or paused requests: split.
+        assert!(split_due(false, true, false));
+        assert!(split_due(false, false, true));
+        // Drained but idle cluster: keep the group (Use Case 1).
+        assert!(!split_due(false, false, false));
+    }
+
+    #[test]
+    fn member_settles_once_when_drained() {
+        assert!(member_settle_due(false, true, false));
+        assert!(!member_settle_due(true, true, false), "already settled");
+        assert!(!member_settle_due(false, false, false), "already switched");
+        assert!(!member_settle_due(false, true, true), "still busy");
+    }
+
+    #[test]
+    fn carry_gated_by_flag_eligibility_and_cache() {
+        let cm = CostModel::new(HwSpec::default(), PaperModel::llama70b());
+        // At paper scale the cost rule always favors migration...
+        assert!(carry_wins(&cm, true, true, 8192, 4));
+        // ...but the flag, eligibility, and a non-empty cache all gate it.
+        assert!(!carry_wins(&cm, false, true, 8192, 4));
+        assert!(!carry_wins(&cm, true, false, 8192, 4));
+        assert!(!carry_wins(&cm, true, true, 0, 4));
+    }
+}

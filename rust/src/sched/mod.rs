@@ -1,0 +1,449 @@
+//! The unified scheduling kernel (ISSUE 5): one switch/admission state
+//! machine shared by the discrete-event simulator (`sim::cluster`) and the
+//! real coordinator (`coordinator`).
+//!
+//! Before this module existed, the paper's deadlock-free scheduler
+//! (§ component iv) was implemented twice — once per path — and held in
+//! sync only by differential tests and "one rule, two paths" ROADMAP
+//! clauses.  The kernel extracts everything that must never fork:
+//!
+//! * **[`ReadyRings`]** — the per-priority FIFO waiting rings.  Arrivals
+//!   are admitted in time order and requeues keep relative order, so
+//!   draining high-first reproduces the seed's (priority desc, arrival
+//!   asc) sort without per-iteration sorting.
+//! * **[`Walk`]** — the admission-walk skeleton: ring drain order, backlog
+//!   accounting (`backlog_now` for burst detection), defer/requeue
+//!   semantics, progress tracking, and the optional decision trace.  Both
+//!   paths run the *identical* walk; only the driver-side `place` body
+//!   (capacity checks, binding mechanics) differs.
+//! * **[`EngineIndex`]** — the unit/idle/draining engine bitmask index.
+//!   Queries are O(1); drivers maintain the bits at each state mutation.
+//! * **[`admission`]** — the shared decision predicates: the
+//!   `fit_tp`/priority/memory constraint tiers ([`constrained`]), the
+//!   least-loaded tie-break ([`LeastLoaded`]), and the drain-horizon
+//!   backfill predicate ([`backfill_fit`] — the only caller of
+//!   `CostModel::solo_completion_t`).
+//! * **[`lifecycle`]** — the group state machine's decision points
+//!   (form → drain → backfill-shell → incremental settle → promote, and
+//!   the split inverse): [`lifecycle::split_due`],
+//!   [`lifecycle::member_settle_due`], and the migrate-vs-recompute gate
+//!   [`lifecycle::carry_wins`] (the only caller of
+//!   `CostModel::migrate_wins`).
+//!
+//! # Event/action shape
+//!
+//! The kernel consumes a [`SchedEvent`] stream — arrivals, capacity-freeing
+//! step completions, group settles, control-plan changes — and each walk
+//! emits one [`Placement`] per waiting request (recorded as
+//! [`SchedAction`]s when tracing is enabled).  `sim/cluster.rs` is a driver
+//! that stamps kernel placements onto its event heap; `coordinator/mod.rs`
+//! is a driver that turns them into `EngineCmd`s.  Because the ring order,
+//! backlog math, constraint tiers, horizon predicate, and migrate gate are
+//! single definitions here, byte-identical decisions across the two paths
+//! hold **by construction**; `tests/sim_equivalence.rs` remains as
+//! regression insurance and `tests/sched_kernel.rs` asserts the decision
+//! traces directly.
+//!
+//! # Dirty tracking
+//!
+//! The kernel re-walks the rings only after an event that can change an
+//! admission decision (arrival, completion, settle, plan change) — pure
+//! decode steps ([`SchedEvent::EngineFree`]) only shrink capacity and never
+//! flip a failed admission, so skipped walks are provably no-ops.  The
+//! simulator relies on this (it is the PR-1 dirty-tracking optimization);
+//! the real coordinator calls [`Kernel::note_dirty`] every iteration
+//! because its policies are wall-clock-time-varying (an `AdaptivePolicy`
+//! control tick can change a decision with no kernel event at all), which
+//! makes event-gating unsound there.
+//!
+//! # Hot-path discipline
+//!
+//! Kernel scratch (ring deques, requeue ping-pong buffers, the trace
+//! buffer) is allocated once and recycled: a steady-state walk performs
+//! zero heap allocations, preserving the `sched_hotpath` alloc gate.
+
+pub mod admission;
+pub mod index;
+pub mod lifecycle;
+pub mod rings;
+
+pub use admission::{backfill_fit, chunked_prefill_s, constrained, fit_tp, remaining_work_s, LeastLoaded};
+pub use index::EngineIndex;
+pub use lifecycle::{carry_wins, member_settle_due, split_due};
+pub use rings::ReadyRings;
+
+use crate::workload::Priority;
+
+/// An event the kernel's dirty tracking consumes.  `H` is the driver's
+/// request handle (dense index for the simulator, `SlabHandle` for the
+/// coordinator).
+#[derive(Clone, Copy, Debug)]
+pub enum SchedEvent<H: Copy> {
+    /// A request became visible to the scheduler.  Pushes onto the ring of
+    /// its priority level and dirties the walk.
+    Arrival { h: H, priority: Priority },
+    /// A step completed and freed capacity (some request finished).
+    /// Dirties the walk: a previously failed admission may now succeed.
+    StepComplete,
+    /// An engine finished a step with no terminal request.  Does NOT dirty:
+    /// pure decode steps only shrink capacity, so a failed admission stays
+    /// failed and the skipped walk is provably a no-op.
+    EngineFree,
+    /// A group transition settled (merge formed, shell folded, group
+    /// dissolved, split completed).  Dirties the walk.
+    Settle,
+    /// The control plane adopted a new fleet plan.  Dirties the walk.
+    /// Reserved for event-gated drivers: neither current driver emits it —
+    /// the simulator deliberately preserves the PR-1/2 behavior of not
+    /// re-walking on plan adoption (see `sim::cluster`), and the real
+    /// coordinator dirties every iteration via [`Kernel::note_dirty`]
+    /// because its policies are wall-clock-time-varying.
+    ControlPlan,
+}
+
+/// What the driver did with one waiting request during a walk.  `Defer`
+/// requeues it (FIFO within its priority level); everything else counts as
+/// walk progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Bound as DP onto the driver-local engine/unit `unit`; `backfill` is
+    /// set when the bind landed on a draining engine under the horizon
+    /// predicate.
+    Dp { unit: u32, backfill: bool },
+    /// Bound into (or made pending on) a TP group of `width` instances.
+    Tp { width: u32 },
+    /// Rejected (unservable under the policy).
+    Reject,
+    /// No placement possible this walk; requeued in arrival order.
+    Defer,
+}
+
+/// One recorded kernel decision: the request id plus its placement.  The
+/// decision-trace differential (`tests/sched_kernel.rs`) asserts these are
+/// byte-identical when the same `SchedEvent` stream is driven through
+/// differently-shaped drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedAction {
+    pub rid: u64,
+    pub placement: Placement,
+}
+
+/// The scheduling kernel: rings + index + dirty tracking + decision trace.
+pub struct Kernel<H: Copy> {
+    pub rings: ReadyRings<H>,
+    pub index: EngineIndex,
+    dirty: bool,
+    /// Requeue ping-pong scratch, recycled across walks (zero steady-state
+    /// allocation).
+    scratch_hi: std::collections::VecDeque<H>,
+    scratch_lo: std::collections::VecDeque<H>,
+    trace_on: bool,
+    trace_buf: Vec<SchedAction>,
+}
+
+impl<H: Copy> Default for Kernel<H> {
+    fn default() -> Self {
+        Kernel::new()
+    }
+}
+
+impl<H: Copy> Kernel<H> {
+    pub fn new() -> Self {
+        Kernel {
+            rings: ReadyRings::new(),
+            index: EngineIndex::new(),
+            dirty: false,
+            scratch_hi: std::collections::VecDeque::new(),
+            scratch_lo: std::collections::VecDeque::new(),
+            trace_on: false,
+            trace_buf: Vec::new(),
+        }
+    }
+
+    /// Feed one event into the kernel (ring push + dirty tracking).
+    pub fn on_event(&mut self, ev: SchedEvent<H>) {
+        match ev {
+            SchedEvent::Arrival { h, priority } => {
+                self.rings.push(priority, h);
+                self.dirty = true;
+            }
+            SchedEvent::StepComplete | SchedEvent::Settle | SchedEvent::ControlPlan => {
+                self.dirty = true;
+            }
+            SchedEvent::EngineFree => {}
+        }
+    }
+
+    /// Force the next walk (for drivers whose decisions are wall-clock-
+    /// time-varying and therefore cannot be event-gated).
+    pub fn note_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    /// Whether something since the last no-progress walk could have changed
+    /// an admission decision.
+    pub fn walk_pending(&self) -> bool {
+        self.dirty
+    }
+
+    /// Whether a walk should run now: something dirtied the queue and there
+    /// is work waiting.
+    pub fn should_walk(&self) -> bool {
+        self.dirty && !self.rings.is_empty()
+    }
+
+    /// Record decisions into a trace readable via [`Self::take_trace`].
+    pub fn enable_trace(&mut self) {
+        self.trace_on = true;
+    }
+
+    pub fn take_trace(&mut self) -> Vec<SchedAction> {
+        std::mem::take(&mut self.trace_buf)
+    }
+
+    /// Start an admission walk: moves the ring contents into a [`Walk`]
+    /// that owns them, so the driver keeps full mutable access to its own
+    /// state (including `self.index`) while iterating.
+    pub fn begin_walk(&mut self) -> Walk<H> {
+        let drain_hi = std::mem::take(self.rings.high_mut());
+        let drain_lo = std::mem::take(self.rings.normal_mut());
+        let backlog_total = drain_hi.len() + drain_lo.len();
+        Walk {
+            drain_hi,
+            drain_lo,
+            requeue_hi: std::mem::take(&mut self.scratch_hi),
+            requeue_lo: std::mem::take(&mut self.scratch_lo),
+            backlog_total,
+            processed: 0,
+            progress: false,
+            phase_high: true,
+            trace_on: self.trace_on,
+            trace: std::mem::take(&mut self.trace_buf),
+        }
+    }
+
+    /// Finish a walk: restore the rings (requeued entries first, then any
+    /// undrained leftovers from an aborted walk, preserving order), recycle
+    /// the scratch buffers, and clear the dirty flag when the walk made no
+    /// progress (identical future walks would be no-ops until the next
+    /// dirtying event).  Returns whether the walk made progress.
+    pub fn end_walk(&mut self, mut w: Walk<H>) -> bool {
+        // On a normal completion the drain deques are empty and these are
+        // no-ops; on an aborted walk the leftovers keep their order behind
+        // the requeues.
+        w.requeue_hi.append(&mut w.drain_hi);
+        w.requeue_lo.append(&mut w.drain_lo);
+        std::mem::swap(self.rings.high_mut(), &mut w.requeue_hi);
+        std::mem::swap(self.rings.normal_mut(), &mut w.requeue_lo);
+        // Keep the larger-capacity deques as next walk's scratch.
+        self.scratch_hi = w.drain_hi;
+        self.scratch_lo = w.drain_lo;
+        self.trace_buf = w.trace;
+        if !w.progress {
+            self.dirty = false;
+        }
+        w.progress
+    }
+}
+
+/// An in-progress admission walk.  Owns the drained ring contents, so the
+/// driver's placement code runs with unrestricted access to its own state.
+///
+/// Protocol per request: `next()` → driver decides/binds → `settle(...)`.
+/// The walk drains the high ring first, then normal — with FIFO rings this
+/// is exactly the (priority desc, arrival asc) order both paths promise.
+pub struct Walk<H: Copy> {
+    drain_hi: std::collections::VecDeque<H>,
+    drain_lo: std::collections::VecDeque<H>,
+    requeue_hi: std::collections::VecDeque<H>,
+    requeue_lo: std::collections::VecDeque<H>,
+    backlog_total: usize,
+    processed: usize,
+    progress: bool,
+    phase_high: bool,
+    trace_on: bool,
+    trace: Vec<SchedAction>,
+}
+
+impl<H: Copy> Walk<H> {
+    /// Next waiting request, with its priority level.  High-priority ring
+    /// drains fully before the normal ring.
+    pub fn next(&mut self) -> Option<(H, bool)> {
+        if self.phase_high {
+            if let Some(h) = self.drain_hi.pop_front() {
+                self.processed += 1;
+                return Some((h, true));
+            }
+            self.phase_high = false;
+        }
+        let h = self.drain_lo.pop_front()?;
+        self.processed += 1;
+        Some((h, false))
+    }
+
+    /// Queue depth as seen by the request currently being decided: already-
+    /// requeued entries plus everything not yet processed.  This is the
+    /// burst signal both paths feed their policy snapshots.
+    pub fn backlog_now(&self) -> usize {
+        self.requeue_hi.len() + self.requeue_lo.len() + (self.backlog_total - self.processed)
+    }
+
+    /// Report the placement for the request returned by the last `next()`.
+    /// `Defer` requeues it on its priority ring; anything else marks walk
+    /// progress.  Records the decision when tracing is enabled.
+    pub fn settle(&mut self, h: H, high: bool, rid: u64, placement: Placement) {
+        if self.trace_on {
+            self.trace.push(SchedAction { rid, placement });
+        }
+        match placement {
+            Placement::Defer => {
+                if high {
+                    self.requeue_hi.push_back(h);
+                } else {
+                    self.requeue_lo.push_back(h);
+                }
+            }
+            _ => self.progress = true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walk_drains_high_first_and_preserves_fifo_within_level() {
+        let mut k: Kernel<u32> = Kernel::new();
+        k.on_event(SchedEvent::Arrival { h: 1, priority: Priority::Normal });
+        k.on_event(SchedEvent::Arrival { h: 2, priority: Priority::High });
+        k.on_event(SchedEvent::Arrival { h: 3, priority: Priority::Normal });
+        k.on_event(SchedEvent::Arrival { h: 4, priority: Priority::High });
+        assert!(k.should_walk());
+        let mut walk = k.begin_walk();
+        let mut order = Vec::new();
+        while let Some((h, high)) = walk.next() {
+            order.push((h, high));
+            walk.settle(h, high, h as u64, Placement::Dp { unit: 0, backfill: false });
+        }
+        assert!(k.end_walk(walk));
+        assert_eq!(order, vec![(2, true), (4, true), (1, false), (3, false)]);
+        assert!(k.rings.is_empty());
+    }
+
+    #[test]
+    fn defer_requeues_in_order_and_clears_dirty_on_no_progress() {
+        let mut k: Kernel<u32> = Kernel::new();
+        for h in [10u32, 11, 12] {
+            k.on_event(SchedEvent::Arrival { h, priority: Priority::Normal });
+        }
+        let mut walk = k.begin_walk();
+        while let Some((h, high)) = walk.next() {
+            walk.settle(h, high, h as u64, Placement::Defer);
+        }
+        assert!(!k.end_walk(walk));
+        // No progress: dirty cleared, next walk suppressed...
+        assert!(!k.should_walk());
+        // ...until a dirtying event; order preserved.
+        k.on_event(SchedEvent::StepComplete);
+        assert!(k.should_walk());
+        let mut walk = k.begin_walk();
+        let mut order = Vec::new();
+        while let Some((h, high)) = walk.next() {
+            order.push(h);
+            walk.settle(h, high, h as u64, Placement::Reject);
+        }
+        k.end_walk(walk);
+        assert_eq!(order, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn backlog_now_counts_requeues_and_remaining() {
+        let mut k: Kernel<u32> = Kernel::new();
+        for h in 0..4u32 {
+            k.on_event(SchedEvent::Arrival { h, priority: Priority::Normal });
+        }
+        let mut walk = k.begin_walk();
+        // First pop: 3 others remain.
+        let (h, high) = walk.next().unwrap();
+        assert_eq!(walk.backlog_now(), 3);
+        walk.settle(h, high, 0, Placement::Defer);
+        // Second pop: 1 requeued + 2 remaining.
+        let (h, high) = walk.next().unwrap();
+        assert_eq!(walk.backlog_now(), 3);
+        walk.settle(h, high, 1, Placement::Dp { unit: 0, backfill: false });
+        let (h, high) = walk.next().unwrap();
+        // 1 requeued + 1 remaining.
+        assert_eq!(walk.backlog_now(), 2);
+        walk.settle(h, high, 2, Placement::Defer);
+        k.end_walk(walk);
+    }
+
+    #[test]
+    fn engine_free_does_not_dirty() {
+        let mut k: Kernel<u32> = Kernel::new();
+        k.on_event(SchedEvent::Arrival { h: 1, priority: Priority::Normal });
+        let mut walk = k.begin_walk();
+        while let Some((h, high)) = walk.next() {
+            walk.settle(h, high, 1, Placement::Defer);
+        }
+        k.end_walk(walk);
+        k.on_event(SchedEvent::EngineFree);
+        assert!(!k.should_walk(), "pure decode steps must not re-trigger the walk");
+        k.on_event(SchedEvent::Settle);
+        assert!(k.should_walk());
+    }
+
+    #[test]
+    fn control_plan_dirties_like_any_decision_changing_event() {
+        let mut k: Kernel<u32> = Kernel::new();
+        k.on_event(SchedEvent::Arrival { h: 1, priority: Priority::Normal });
+        let mut walk = k.begin_walk();
+        while let Some((h, high)) = walk.next() {
+            walk.settle(h, high, 1, Placement::Defer);
+        }
+        k.end_walk(walk);
+        assert!(!k.should_walk());
+        // A plan change can flip an elastic decision, so it must re-walk.
+        k.on_event(SchedEvent::ControlPlan);
+        assert!(k.should_walk());
+    }
+
+    #[test]
+    fn trace_records_decisions_in_walk_order() {
+        let mut k: Kernel<u32> = Kernel::new();
+        k.enable_trace();
+        k.on_event(SchedEvent::Arrival { h: 1, priority: Priority::Normal });
+        k.on_event(SchedEvent::Arrival { h: 2, priority: Priority::High });
+        let mut walk = k.begin_walk();
+        while let Some((h, high)) = walk.next() {
+            let p = if high { Placement::Tp { width: 4 } } else { Placement::Defer };
+            walk.settle(h, high, h as u64, p);
+        }
+        k.end_walk(walk);
+        assert_eq!(
+            k.take_trace(),
+            vec![
+                SchedAction { rid: 2, placement: Placement::Tp { width: 4 } },
+                SchedAction { rid: 1, placement: Placement::Defer },
+            ]
+        );
+    }
+
+    #[test]
+    fn aborted_walk_keeps_leftovers_after_requeues() {
+        let mut k: Kernel<u32> = Kernel::new();
+        for h in 0..4u32 {
+            k.on_event(SchedEvent::Arrival { h, priority: Priority::Normal });
+        }
+        let mut walk = k.begin_walk();
+        // Process two (one defers), then abort mid-walk.
+        let (h, high) = walk.next().unwrap();
+        walk.settle(h, high, 0, Placement::Defer);
+        let (h, high) = walk.next().unwrap();
+        walk.settle(h, high, 1, Placement::Dp { unit: 0, backfill: false });
+        k.end_walk(walk);
+        let left: Vec<u32> = k.rings.iter().copied().collect();
+        assert_eq!(left, vec![0, 2, 3], "requeues first, then undrained leftovers");
+    }
+}

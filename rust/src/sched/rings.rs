@@ -1,0 +1,91 @@
+//! Per-priority FIFO waiting rings — the single waiting-queue structure
+//! behind both scheduling paths (the simulator's former `ReadyQueue` and
+//! the coordinator's former `waiting_hi`/`waiting_lo`).
+//!
+//! Arrivals are pushed in admission (time) order and requeues preserve
+//! relative order, so draining high-priority-first reproduces the seed's
+//! full (priority desc, arrival asc) sort without any per-iteration
+//! sorting.  New priority levels mean new rings, never a sort.
+
+use std::collections::VecDeque;
+
+use crate::workload::Priority;
+
+pub struct ReadyRings<H> {
+    high: VecDeque<H>,
+    normal: VecDeque<H>,
+}
+
+impl<H> Default for ReadyRings<H> {
+    fn default() -> Self {
+        ReadyRings::new()
+    }
+}
+
+impl<H> ReadyRings<H> {
+    pub fn new() -> Self {
+        ReadyRings { high: VecDeque::new(), normal: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.high.is_empty() && self.normal.is_empty()
+    }
+
+    pub fn push(&mut self, pri: Priority, h: H) {
+        match pri {
+            Priority::High => self.high.push_back(h),
+            Priority::Normal => self.normal.push_back(h),
+        }
+    }
+
+    /// Pop in drain order (high first, then normal).  Used by stall
+    /// resolution, which rejects the entire queue deterministically.
+    pub fn pop_any(&mut self) -> Option<H> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+
+    /// Waiting entries in drain order (diagnostics; not a hot path).
+    pub fn iter(&self) -> impl Iterator<Item = &H> {
+        self.high.iter().chain(self.normal.iter())
+    }
+
+    pub(super) fn high_mut(&mut self) -> &mut VecDeque<H> {
+        &mut self.high
+    }
+
+    pub(super) fn normal_mut(&mut self) -> &mut VecDeque<H> {
+        &mut self.normal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_any_drains_high_first() {
+        let mut r: ReadyRings<u32> = ReadyRings::new();
+        r.push(Priority::Normal, 1);
+        r.push(Priority::High, 2);
+        r.push(Priority::Normal, 3);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.pop_any(), Some(2));
+        assert_eq!(r.pop_any(), Some(1));
+        assert_eq!(r.pop_any(), Some(3));
+        assert_eq!(r.pop_any(), None);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn iter_matches_drain_order() {
+        let mut r: ReadyRings<u32> = ReadyRings::new();
+        r.push(Priority::Normal, 7);
+        r.push(Priority::High, 8);
+        let got: Vec<u32> = r.iter().copied().collect();
+        assert_eq!(got, vec![8, 7]);
+    }
+}

@@ -19,15 +19,21 @@
 //!  * **Typed event heap.**  A `BinaryHeap` of (arrival, engine-free,
 //!    switch-settle) events replaces the per-iteration min-scan; stale
 //!    events are invalidated lazily by per-veng stamps.
-//!  * **Priority-indexed ready queues.**  One FIFO ring per priority level
-//!    replaces the full (priority, arrival) re-sort each iteration: rings
-//!    are drained high-priority-first and refilled in place, which yields
-//!    exactly the sorted order because arrivals are admitted in time order.
-//!  * **Dirty-tracked assignment.**  The ready queue is only re-walked when
-//!    something that can change an admission decision happened (arrival,
-//!    completion, merge/split).  Between those events, decode steps only
-//!    shrink capacity and never flip a decision, so skipped walks are
-//!    provably identical to the reference's no-op walks.
+//!  * **The scheduling kernel (ISSUE 5).**  Waiting rings, the admission-
+//!    walk skeleton, dirty tracking, the engine bitmask index, and every
+//!    decision predicate (constraint tiers, least-loaded pick, backfill
+//!    horizon, migrate gate) live in `crate::sched` — the same kernel the
+//!    real coordinator drives, so decisions cannot fork between the two
+//!    paths.  This file is the *driver*: it feeds the kernel `SchedEvent`s
+//!    and stamps its placements onto the event heap.  One FIFO ring per
+//!    priority level replaces the full (priority, arrival) re-sort each
+//!    iteration; the walk runs only after an event that can change an
+//!    admission decision (arrival, completion, merge/split) — between
+//!    those, decode steps only shrink capacity and never flip a decision,
+//!    so skipped walks are provably identical to the reference's no-op
+//!    walks.  (The sim deliberately does not emit `ControlPlan` dirtying:
+//!    re-walking on plan adoption was never the PR-1/2 behavior the
+//!    differential harness pins.)
 //!  * **Dense request slab + incremental KV accounting.**  Requests live in
 //!    a `Vec` indexed by admission order (no id-map lookups on the hot
 //!    path), and each veng tracks Σ(prompt+emitted) incrementally instead
@@ -41,11 +47,12 @@
 //! from heap growth during warmup.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 
 use crate::control::ControlRuntime;
 use crate::coordinator::policy::{ModeDecision, Policy, Snapshot};
 use crate::metrics::{RecSlot, Recorder};
+use crate::sched::{lifecycle, EngineIndex, Kernel, Placement, SchedEvent};
 use crate::workload::{Priority, Request};
 
 use super::costmodel::CostModel;
@@ -64,8 +71,13 @@ pub struct SimConfig {
     /// byte-identical to `sim::reference`.  On: chosen members become
     /// *backfill shells* that keep executing through the transition window
     /// (resident decode steps that fit before the settle point, plus
-    /// bounded new elastic work whose exact solo-run completion fits the
-    /// horizon) and fold into the forming TP group per-member at their
+    /// bounded new elastic work admitted by the kernel's horizon
+    /// predicate) and fold into the forming TP group per-member at their
+    /// settle stamp.  A shell whose original residents have drained may
+    /// hold *several* concurrent backfills (ISSUE 5): each admission is
+    /// charged behind the shell's running work bound — a decode batch
+    /// never takes longer than the sum of its members' solo steps, so the
+    /// bound is a sound over-approximation and no backfill can cross the
     /// settle stamp.  Outcomes may legitimately differ from the reference
     /// when on; `SimOutcome::switch_stall_s` measures the reclaimed idle
     /// capacity either way.
@@ -206,6 +218,10 @@ struct SimReq {
     /// keeps decoding through the merge window and is gathered back to a
     /// unit engine at split time.  Never set with the flag off.
     migrated: bool,
+    /// Admitted onto a backfill shell under the horizon predicate
+    /// (`switch_backfill` only).  A shell may host several concurrent
+    /// backfills, but never a backfill alongside an original resident.
+    backfill: bool,
     rec: RecSlot,
 }
 
@@ -239,6 +255,20 @@ struct VEng {
     /// footprint at settle so mid-window joins to the group cannot
     /// over-commit its KV.
     pledged_kv: usize,
+    /// Instance-bit ownership for the kernel's `EngineIndex`: a veng of
+    /// width `m` carries the `m` bits of the serving instances merged into
+    /// it.  Bits travel with the instances — merges union them, shells keep
+    /// them (marked draining) until the fold hands them to the forming
+    /// group, splits deal them back one per unit — so the index's
+    /// `idle_count` is exactly the old Σ-m-over-idle-vengs fold, O(1).
+    unit_bits: u64,
+    /// Batched-shell backfill bound (`switch_backfill`): a running upper
+    /// bound on when every backfill admitted to this shell completes.  The
+    /// next admission starts no earlier than this, which makes concurrent
+    /// backfills a sound over-approximation (a decode batch never takes
+    /// longer than the sum of its members' solo steps), so a shell can hold
+    /// several backfills without ever crossing its settle stamp.
+    bf_bound: f64,
 }
 
 impl VEng {
@@ -292,32 +322,6 @@ impl Ord for Event {
             .t
             .total_cmp(&self.t)
             .then_with(|| other.rank().cmp(&self.rank()))
-    }
-}
-
-/// One FIFO ring per priority level.  Arrivals are admitted in time order
-/// and requeued entries keep their relative order, so draining high-first
-/// reproduces the reference's full (priority desc, arrival asc) sort.
-#[derive(Default)]
-struct ReadyQueue {
-    high: VecDeque<u32>,
-    normal: VecDeque<u32>,
-}
-
-impl ReadyQueue {
-    fn len(&self) -> usize {
-        self.high.len() + self.normal.len()
-    }
-
-    fn is_empty(&self) -> bool {
-        self.high.is_empty() && self.normal.is_empty()
-    }
-
-    fn push(&mut self, pri: Priority, ri: u32) {
-        match pri {
-            Priority::High => self.high.push_back(ri),
-            Priority::Normal => self.normal.push_back(ri),
-        }
     }
 }
 
@@ -378,6 +382,7 @@ fn simulate_inner(
     let dp_cap = cap_by_m[1];
     let live_switch_s = cm.live_switch_s();
 
+    assert!(n_inst <= 64, "EngineIndex bitmasks support at most 64 serving instances");
     let new_veng = |m: usize, handle: u32| VEng {
         m,
         free_at: 0.0,
@@ -389,6 +394,8 @@ fn simulate_inner(
         settle_at: f64::INFINITY,
         merge_into: u32::MAX,
         pledged_kv: 0,
+        unit_bits: 0,
+        bf_bound: f64::NEG_INFINITY,
     };
     let mut vengs: Vec<VEng> = match system {
         SimSystem::StaticDp | SimSystem::Flying | SimSystem::FlyingSequential => {
@@ -402,6 +409,24 @@ fn simulate_inner(
     };
     let mut next_handle = vengs.len() as u32;
     let mut handle_pos: Vec<usize> = (0..vengs.len()).collect();
+
+    // The scheduling kernel: waiting rings + engine index + dirty tracking.
+    // Assign each veng its instance bits and seed the index (everything
+    // starts unit-or-group, idle).
+    let mut kernel: Kernel<u32> = Kernel::new();
+    {
+        let mut next_bit = 0usize;
+        for v in vengs.iter_mut() {
+            let mut bits = 0u64;
+            for _ in 0..v.m {
+                bits |= 1u64 << next_bit;
+                next_bit += 1;
+            }
+            v.unit_bits = bits;
+            kernel.index.set_unit(bits, v.m == 1);
+            kernel.index.set_idle(bits, true);
+        }
+    }
 
     // Arrival order (stable by arrival time, ties by trace position — the
     // same order the reference's stable sort produces).
@@ -427,17 +452,9 @@ fn simulate_inner(
         });
     }
 
-    let mut queue = ReadyQueue::default();
-    // True whenever something happened that could change an assignment
-    // decision (arrival, completion, rejection, merge, split).  Pure decode
-    // steps never set it: they only shrink capacity, so a failed admission
-    // stays failed — the walk would be a no-op and is skipped.
-    let mut queue_dirty = false;
     let mut t = 0.0f64;
 
     // Reusable scratch (allocated once, recycled every round).
-    let mut requeue_high: VecDeque<u32> = VecDeque::new();
-    let mut requeue_normal: VecDeque<u32> = VecDeque::new();
     let mut batch: Vec<u32> = Vec::new();
     let mut unit_scratch: Vec<usize> = Vec::new();
     let mut split_buf: Vec<VEng> = Vec::new();
@@ -463,14 +480,14 @@ fn simulate_inner(
             break;
         }
         if next_t.is_infinite() {
-            if queue.is_empty() {
+            if kernel.rings.is_empty() {
                 break 'outer;
             }
-            if !queue_dirty {
+            if !kernel.walk_pending() {
                 // Stall (the reference's heartbeat spin): queue non-empty,
                 // nothing running, nothing arriving, and the last scheduling
                 // pass changed nothing.  Reject deterministically.
-                while let Some(ri) = queue.high.pop_front().or_else(|| queue.normal.pop_front()) {
+                while let Some(ri) = kernel.rings.pop_any() {
                     let q = &mut reqs[ri as usize];
                     q.phase = RPhase::Done;
                     rejected.push(q.id);
@@ -478,7 +495,7 @@ fn simulate_inner(
                 }
                 break 'outer;
             }
-            // queue_dirty: fall through and run one more scheduling pass at
+            // Walk pending: fall through and run one more scheduling pass at
             // the current time (a split/merge may still unblock the queue).
         } else {
             t = t.max(next_t);
@@ -519,16 +536,28 @@ fn simulate_inner(
                     );
                     let moved = std::mem::take(&mut vengs[si].active);
                     vengs[si].kv_used = 0;
+                    // The shell's instance bits join the forming group: no
+                    // longer unit, no longer draining (idle stays cleared —
+                    // the group is executing its TP work).
+                    let shell_bits = vengs[si].unit_bits;
+                    vengs[si].unit_bits = 0;
+                    kernel.index.set_draining(shell_bits, false);
+                    kernel.index.set_unit(shell_bits, false);
+                    vengs[target].unit_bits |= shell_bits;
                     // Reconcile the merge-time pledge against the residents'
                     // actual footprint now (some finished, others grew).
                     vengs[target].kv_used -= vengs[si].pledged_kv;
                     let g_new = vengs[target].m * gpus_per_inst;
                     for &r in moved.iter() {
                         let q = &mut reqs[r as usize];
-                        if migrate
-                            && q.phase == RPhase::Decode
-                            && cm.migrate_wins(kv_tokens(q), g_new)
-                        {
+                        q.backfill = false;
+                        if lifecycle::carry_wins(
+                            cm,
+                            migrate,
+                            q.phase == RPhase::Decode,
+                            kv_tokens(q),
+                            g_new,
+                        ) {
                             // Carried live: the resident's KV migrates into
                             // the TP layout and it keeps decoding inside the
                             // group (the shell already absorbed the
@@ -546,7 +575,7 @@ fn simulate_inner(
                 for (idx, v) in vengs.iter().enumerate() {
                     handle_pos[v.handle as usize] = idx;
                 }
-                queue_dirty = true;
+                kernel.on_event(SchedEvent::Settle);
             }
 
             // ---- admissions ----------------------------------------------
@@ -573,12 +602,15 @@ fn simulate_inner(
                     emitted: 0,
                     paused: false,
                     migrated: false,
+                    backfill: false,
                     rec: slot,
                 });
-                queue.push(r.priority, (reqs.len() - 1) as u32);
+                kernel.on_event(SchedEvent::Arrival {
+                    h: (reqs.len() - 1) as u32,
+                    priority: r.priority,
+                });
                 next_arr += 1;
                 consumed_arrival = true;
-                queue_dirty = true;
             }
             if consumed_arrival && next_arr < order.len() {
                 heap.push(Event {
@@ -594,27 +626,32 @@ fn simulate_inner(
                 if rt.due(t) {
                     // Shells are committed capacity (their instances are
                     // already represented by the forming group's width), so
-                    // they never count as idle or contribute pool capacity.
-                    let idle: usize = vengs
-                        .iter()
-                        .filter(|v| v.active.is_empty() && !v.is_shell())
-                        .map(|v| v.m)
-                        .sum();
+                    // they never count as idle or contribute pool capacity —
+                    // encoded in the index maintenance (shell bits drop out
+                    // of the idle mask at conversion), making this O(1).
+                    let idle = kernel.index.idle_count();
+                    debug_assert_eq!(
+                        idle,
+                        vengs
+                            .iter()
+                            .filter(|v| v.active.is_empty() && !v.is_shell())
+                            .map(|v| v.m)
+                            .sum::<usize>(),
+                        "EngineIndex idle bits drifted from veng state"
+                    );
                     let (kv_used, kv_cap) = vengs
                         .iter()
                         .filter(|v| !v.is_shell())
                         .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
                     let kv_frac =
                         if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
-                    rt.tick(t, queue.len(), kv_frac, idle, n_inst);
+                    rt.tick(t, kernel.rings.len(), kv_frac, idle, n_inst);
                 }
             }
 
-            // ---- assignment (the policy layer, shared with the real path)
-            if queue_dirty && !queue.is_empty() {
-                let backlog_total = queue.len();
-                let mut processed = 0usize;
-                let mut walk_progress = false;
+            // ---- assignment (the kernel walk; decision layer shared with
+            // the real path) ------------------------------------------------
+            if kernel.should_walk() {
                 // KV pressure for the per-request snapshots, computed once
                 // per walk: no sim-side decide path reads kv_frac (the
                 // control plane consumes KV pressure at tick time, above),
@@ -626,21 +663,12 @@ fn simulate_inner(
                     .filter(|v| !v.is_shell())
                     .fold((0usize, 0usize), |(u, c), v| (u + v.kv_used, c + cap_by_m[v.m]));
                 let walk_kv_frac = if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
-                requeue_high.clear();
-                requeue_normal.clear();
-                for pri_high in [true, false] {
-                    loop {
-                        let popped = if pri_high {
-                            queue.high.pop_front()
-                        } else {
-                            queue.normal.pop_front()
-                        };
-                        let Some(ri) = popped else { break };
-                        processed += 1;
+                let mut walk = kernel.begin_walk();
+                while let Some((ri, pri_high)) = walk.next() {
+                    let placement = {
                         let riu = ri as usize;
                         let total = reqs[riu].prompt_len + reqs[riu].output_len;
-                        let backlog_now =
-                            requeue_high.len() + requeue_normal.len() + (backlog_total - processed);
+                        let backlog_now = walk.backlog_now();
                         let decision = match system {
                             SimSystem::StaticDp => {
                                 if total > dp_cap {
@@ -661,12 +689,19 @@ fn simulate_inner(
                                 // Idle capacity in *unit-instance* terms so
                                 // the snapshot semantics match the real
                                 // (fixed-engine) coordinator.  Shells are
-                                // committed to a forming group, never idle.
-                                let idle: usize = vengs
-                                    .iter()
-                                    .filter(|v| v.active.is_empty() && !v.is_shell())
-                                    .map(|v| v.m)
-                                    .sum();
+                                // committed to a forming group, never idle —
+                                // both facts are encoded in the kernel's
+                                // index bits, so the query is O(1).
+                                let idle = kernel.index.idle_count();
+                                debug_assert_eq!(
+                                    idle,
+                                    vengs
+                                        .iter()
+                                        .filter(|v| v.active.is_empty() && !v.is_shell())
+                                        .map(|v| v.m)
+                                        .sum::<usize>(),
+                                    "EngineIndex idle bits drifted from veng state"
+                                );
                                 let snap = Snapshot {
                                     now: t,
                                     queue_len: backlog_now,
@@ -695,13 +730,19 @@ fn simulate_inner(
                                 q.phase = RPhase::Done;
                                 rejected.push(q.id);
                                 rec.on_finish_at(q.rec, t);
-                                walk_progress = true;
+                                Placement::Reject
                             }
                             ModeDecision::Dp => {
                                 // Least-loaded unit veng with KV room and
-                                // batch room (first among equals, matching
-                                // Iterator::min_by_key).
-                                let mut pick: Option<usize> = None;
+                                // batch room (the kernel's first-among-
+                                // equals tie-break).
+                                let mut pick = crate::sched::LeastLoaded::new();
+                                // Predicted shell completion of the picked
+                                // candidate (None for non-shell picks),
+                                // carried out of the filter loop so the
+                                // admission below never re-runs the
+                                // solo-completion walk.
+                                let mut picked_fin: Option<f64> = None;
                                 for (vi, v) in vengs.iter().enumerate() {
                                     if !(v.m == 1 || matches!(system, SimSystem::StaticDp)) {
                                         continue;
@@ -712,44 +753,62 @@ fn simulate_inner(
                                     if cap_by_m[v.m].saturating_sub(v.kv_used) < total {
                                         continue;
                                     }
+                                    let mut shell_fin: Option<f64> = None;
                                     if v.is_shell() {
-                                        // Drain backfill: a shell takes at
-                                        // most one new request, and only
-                                        // when its exact solo-run finish
-                                        // (the cost model IS the execution
-                                        // model here) lands before the
-                                        // shell's settle point.
-                                        if !v.active.is_empty() {
+                                        // Drain backfill: a shell admits only
+                                        // backfill work (never alongside an
+                                        // original resident), and only when
+                                        // the kernel's horizon predicate —
+                                        // exact here, since the cost model IS
+                                        // the execution model — lands the
+                                        // request inside the settle stamp.
+                                        // Concurrent backfills start behind
+                                        // the shell's running work bound
+                                        // (`bf_bound`), the batched-shell
+                                        // over-approximation.
+                                        if v.active.iter().any(|&r| !reqs[r as usize].backfill) {
                                             continue;
                                         }
                                         let q = &reqs[riu];
-                                        let fin = cm.solo_completion_t(
-                                            t.max(v.free_at),
+                                        let start = t.max(v.free_at).max(v.bf_bound);
+                                        shell_fin = crate::sched::backfill_fit(
+                                            cm,
+                                            start,
                                             q.prompt_len,
                                             q.output_len,
                                             gpus_per_inst,
                                             cfg.chunk_tokens,
                                             cfg.heartbeat_s,
+                                            false,
                                             v.settle_at,
                                         );
-                                        if fin > v.settle_at {
+                                        if shell_fin.is_none() {
                                             continue;
                                         }
                                     }
-                                    match pick {
-                                        None => pick = Some(vi),
-                                        Some(p) if vengs[p].active.len() > v.active.len() => {
-                                            pick = Some(vi)
-                                        }
-                                        _ => {}
+                                    let prev = pick.pick();
+                                    pick.offer(vi, v.active.len());
+                                    if pick.pick() != prev {
+                                        picked_fin = shell_fin;
                                     }
                                 }
-                                match pick {
+                                match pick.pick() {
                                     Some(vi) => {
+                                        let was_shell = vengs[vi].is_shell();
+                                        if let Some(fin) = picked_fin {
+                                            // Fold this admission into the
+                                            // shell's work bound so the next
+                                            // concurrent backfill is charged
+                                            // behind it.
+                                            debug_assert!(was_shell);
+                                            vengs[vi].bf_bound = fin;
+                                            reqs[riu].backfill = true;
+                                        }
                                         let used = kv_tokens(&reqs[riu]);
                                         let v = &mut vengs[vi];
                                         v.active.push(ri);
                                         v.kv_used += used;
+                                        kernel.index.set_idle(v.unit_bits, false);
                                         if v.free_at > t {
                                             v.stamp += 1;
                                             heap.push(Event {
@@ -763,7 +822,7 @@ fn simulate_inner(
                                         let q = &mut reqs[riu];
                                         q.phase = RPhase::Prefill;
                                         rec.on_first_sched_at(q.rec, t);
-                                        walk_progress = true;
+                                        Placement::Dp { unit: vi as u32, backfill: was_shell }
                                     }
                                     None => {
                                         // FLYING at low load: if every engine
@@ -771,13 +830,13 @@ fn simulate_inner(
                                         // there is NO backlog, the request
                                         // joins the group (the paper's
                                         // "opportunistically TP" regime).
-                                        let mut joined = false;
+                                        let mut joined: Option<usize> = None;
                                         if matches!(
                                             system,
                                             SimSystem::Flying | SimSystem::FlyingSequential
                                         ) && backlog_now == 0
                                         {
-                                            for v in vengs.iter_mut() {
+                                            for (vi, v) in vengs.iter_mut().enumerate() {
                                                 if v.transient
                                                     && v.active
                                                         .iter()
@@ -790,6 +849,7 @@ fn simulate_inner(
                                                     let used = kv_tokens(&reqs[riu]);
                                                     v.active.push(ri);
                                                     v.kv_used += used;
+                                                    kernel.index.set_idle(v.unit_bits, false);
                                                     if v.free_at > t {
                                                         v.stamp += 1;
                                                         heap.push(Event {
@@ -800,20 +860,22 @@ fn simulate_inner(
                                                             },
                                                         });
                                                     }
-                                                    joined = true;
+                                                    joined = Some(vi);
                                                     break;
                                                 }
                                             }
                                         }
-                                        if joined {
-                                            let q = &mut reqs[riu];
-                                            q.phase = RPhase::Prefill;
-                                            rec.on_first_sched_at(q.rec, t);
-                                            walk_progress = true;
-                                        } else if pri_high {
-                                            requeue_high.push_back(ri);
-                                        } else {
-                                            requeue_normal.push_back(ri);
+                                        match joined {
+                                            Some(vi) => {
+                                                let q = &mut reqs[riu];
+                                                q.phase = RPhase::Prefill;
+                                                rec.on_first_sched_at(q.rec, t);
+                                                Placement::Dp {
+                                                    unit: vi as u32,
+                                                    backfill: false,
+                                                }
+                                            }
+                                            None => Placement::Defer,
                                         }
                                     }
                                 }
@@ -828,6 +890,7 @@ fn simulate_inner(
                                     &mut reqs,
                                     &mut heap,
                                     &mut unit_scratch,
+                                    &mut kernel.index,
                                     ri,
                                     want_m,
                                     t,
@@ -843,27 +906,16 @@ fn simulate_inner(
                                 ) {
                                     Some(bind_t) => {
                                         rec.on_first_sched_at(reqs[riu].rec, bind_t);
-                                        walk_progress = true;
+                                        Placement::Tp { width: want_m as u32 }
                                     }
-                                    None => {
-                                        if pri_high {
-                                            requeue_high.push_back(ri);
-                                        } else {
-                                            requeue_normal.push_back(ri);
-                                        }
-                                    }
+                                    None => Placement::Defer,
                                 }
                             }
                         }
-                    }
+                    };
+                    walk.settle(ri, pri_high, reqs[ri as usize].id, placement);
                 }
-                std::mem::swap(&mut queue.high, &mut requeue_high);
-                std::mem::swap(&mut queue.normal, &mut requeue_normal);
-                if !walk_progress {
-                    // Nothing changed: identical future walks would be
-                    // no-ops until the next dirtying event.
-                    queue_dirty = false;
-                }
+                kernel.end_walk(walk);
             }
 
             // ---- execute one step on every ready veng with work -----------
@@ -1016,12 +1068,13 @@ fn simulate_inner(
                 {
                     let v = &mut vengs[vi];
                     let mut w = 0usize;
+                    let mut freed = false;
                     for k in 0..v.active.len() {
                         let r = v.active[k];
                         let q = &reqs[r as usize];
                         if q.phase == RPhase::Done {
                             v.kv_used -= kv_tokens(q);
-                            queue_dirty = true; // capacity freed
+                            freed = true; // capacity freed
                         } else {
                             v.active[w] = r;
                             w += 1;
@@ -1032,6 +1085,14 @@ fn simulate_inner(
                         // Idle vengs never gate the clock (the reference's
                         // work_t ignores them): cancel the pending event.
                         v.stamp += 1;
+                        // Shells stay committed capacity (never idle) even
+                        // when their backfill work drains early.
+                        if !v.is_shell() {
+                            kernel.index.set_idle(v.unit_bits, true);
+                        }
+                    }
+                    if freed {
+                        kernel.on_event(SchedEvent::StepComplete);
                     }
                 }
                 debug_assert_eq!(
@@ -1047,7 +1108,7 @@ fn simulate_inner(
             // ---- split transient TP groups whose work drained -------------
             if vengs.iter().any(|v| v.transient) {
                 split_buf.clear();
-                let queue_nonempty = !queue.is_empty();
+                let queue_nonempty = !kernel.rings.is_empty();
                 let mut split_any = false;
                 for v in vengs.drain(..) {
                     // Migrated residents are *carried* traffic, not TP work:
@@ -1060,13 +1121,29 @@ fn simulate_inner(
                         !q.paused && !q.migrated && q.phase != RPhase::Done
                     });
                     let has_paused = v.active.iter().any(|&r| reqs[r as usize].paused);
-                    // Split only under pressure: queued DP work or
-                    // hard-preempted requests waiting to resume.  An idle
-                    // merged group is kept so low-load traffic stays in the
-                    // TP regime (Use Case 1) — migrated residents keep
-                    // decoding inside it, so they add no pressure either.
-                    if v.transient && !tp_work_left && (queue_nonempty || has_paused) {
+                    // The kernel's split rule: only under pressure (queued
+                    // DP work or hard-preempted requests waiting to
+                    // resume).  An idle merged group is kept so low-load
+                    // traffic stays in the TP regime (Use Case 1) —
+                    // migrated residents keep decoding inside it, so they
+                    // add no pressure either.
+                    if v.transient
+                        && lifecycle::split_due(tp_work_left, queue_nonempty, has_paused)
+                    {
+                        let mut bits_left = v.unit_bits;
+                        debug_assert_eq!(
+                            bits_left.count_ones() as usize,
+                            v.m,
+                            "split: group must own one instance bit per member"
+                        );
                         for i in 0..v.m {
+                            let bit = if bits_left != 0 {
+                                let b = bits_left & bits_left.wrapping_neg();
+                                bits_left &= bits_left - 1;
+                                b
+                            } else {
+                                0
+                            };
                             let mut unit = VEng {
                                 m: 1,
                                 free_at: v.free_at,
@@ -1078,6 +1155,8 @@ fn simulate_inner(
                                 settle_at: f64::INFINITY,
                                 merge_into: u32::MAX,
                                 pledged_kv: 0,
+                                unit_bits: bit,
+                                bf_bound: f64::NEG_INFINITY,
                             };
                             next_handle += 1;
                             handle_pos.push(usize::MAX);
@@ -1112,11 +1191,12 @@ fn simulate_inner(
                                     },
                                 });
                             }
+                            kernel.index.set_unit(bit, true);
+                            kernel.index.set_idle(bit, unit.active.is_empty());
                             split_buf.push(unit);
                         }
                         n_switches += 1;
                         split_any = true;
-                        queue_dirty = true;
                     } else {
                         split_buf.push(v);
                     }
@@ -1126,6 +1206,7 @@ fn simulate_inner(
                     for (idx, v) in vengs.iter().enumerate() {
                         handle_pos[v.handle as usize] = idx;
                     }
+                    kernel.on_event(SchedEvent::Settle);
                 }
             }
 
@@ -1159,6 +1240,7 @@ fn bind_tp_sim(
     reqs: &mut [SimReq],
     heap: &mut BinaryHeap<Event>,
     unit_scratch: &mut Vec<usize>,
+    index: &mut EngineIndex,
     ri: u32,
     want_m: usize,
     t: f64,
@@ -1202,6 +1284,7 @@ fn bind_tp_sim(
                 let used = kv_tokens(&reqs[riu]);
                 v.active.push(ri);
                 v.kv_used += used;
+                index.set_idle(v.unit_bits, false);
                 if v.free_at > t {
                     v.stamp += 1;
                     heap.push(Event {
@@ -1275,6 +1358,10 @@ fn bind_tp_sim(
             settle_at: f64::INFINITY,
             merge_into: u32::MAX,
             pledged_kv: 0,
+            // The forming group inherits the shells' instance bits at fold
+            // time; until then the shells carry them (marked draining).
+            unit_bits: 0,
+            bf_bound: f64::NEG_INFINITY,
         };
         merged.active.push(ri);
         merged.kv_used += kv_tokens(&reqs[riu]);
@@ -1287,11 +1374,15 @@ fn bind_tp_sim(
             let v = &mut vengs[i];
             v.settle_at = horizon;
             v.merge_into = merged_handle;
+            v.bf_bound = f64::NEG_INFINITY;
             // Pre-pledge the residents' KV footprint into the forming group
             // so mid-window joins see the capacity the fold will consume
             // (reconciled against actual footprints at settle).
             v.pledged_kv = v.kv_used;
             merged.kv_used += v.kv_used;
+            // Shell conversion: committed capacity — draining, never idle.
+            index.set_draining(v.unit_bits, true);
+            index.set_idle(v.unit_bits, false);
         }
         vengs.push(merged);
         for (idx, v) in vengs.iter().enumerate() {
@@ -1318,6 +1409,8 @@ fn bind_tp_sim(
         settle_at: f64::INFINITY,
         merge_into: u32::MAX,
         pledged_kv: 0,
+        unit_bits: 0,
+        bf_bound: f64::NEG_INFINITY,
     };
     *next_handle += 1;
     handle_pos.push(usize::MAX);
@@ -1326,7 +1419,7 @@ fn bind_tp_sim(
     for &i in unit_scratch.iter() {
         for &r in &vengs[i].active {
             let q = &mut reqs[r as usize];
-            if migrate && q.phase == RPhase::Decode && cm.migrate_wins(kv_tokens(q), g_new)
+            if lifecycle::carry_wins(cm, migrate, q.phase == RPhase::Decode, kv_tokens(q), g_new)
             {
                 q.migrated = true;
                 *recompute_avoided += kv_tokens(q);
@@ -1337,7 +1430,11 @@ fn bind_tp_sim(
             merged.active.push(r);
         }
         merged.kv_used += vengs[i].kv_used;
+        // The consumed units' instance bits move into the merged group.
+        merged.unit_bits |= vengs[i].unit_bits;
     }
+    index.set_unit(merged.unit_bits, false);
+    index.set_idle(merged.unit_bits, false);
     merged.free_at = horizon + migrate_cost;
     merged.active.push(ri);
     merged.kv_used += kv_tokens(&reqs[riu]);
@@ -1656,6 +1753,69 @@ mod tests {
         let o = simulate(SimSystem::Flying, &c, &trace, &cfg);
         assert_eq!(o.recorder.summary(None).finished, 220);
         assert!(o.switch_stall_s >= -1e-9, "negative stall {}", o.switch_stall_s);
+    }
+
+    #[test]
+    fn batched_shell_admits_concurrent_backfills() {
+        // ISSUE 5 satellite: a backfill shell whose residents have drained
+        // may hold several concurrent backfills, each admitted behind the
+        // shell's running work bound.  Construct the situation exactly:
+        //
+        //   * 2 serving instances (4 GPUs, min_gpus 2);
+        //   * e0 carries a resident mid-way through a long prefill chunk
+        //     (~0.26 s), so the merge window is wide; e1 drains early;
+        //   * an explicit TP-2 demand merges both into backfill shells;
+        //   * two micro requests (output 2, so the first stays resident on
+        //     the shell after its prefill step) arrive 1 ms apart inside
+        //     the window — the only admissible engine is shell e1 (e0's
+        //     residents are not backfill work), so the second admission is
+        //     concurrent with the first if and only if the batched-shell
+        //     bound admits it alongside a live backfill.
+        let c = CostModel::new(HwSpec { n_gpus: 4, ..HwSpec::default() }, PaperModel::llama70b());
+        let mk = |id: u64, arrival: f64, prompt: usize, output: usize, demand: Option<usize>| {
+            Request {
+                id,
+                arrival,
+                prompt_len: prompt,
+                output_len: output,
+                priority: Priority::Normal,
+                tp_demand: demand,
+            }
+        };
+        let trace = vec![
+            mk(1, 0.0, 6000, 300, None), // long resident (lands on e0)
+            // Filler burst so request 1 is decided under backlog (stays DP
+            // instead of opportunistically widening); e1's fillers finish
+            // within a step or two.
+            mk(2, 0.0, 16, 1, None),
+            mk(3, 0.0, 16, 1, None),
+            mk(4, 0.0, 16, 1, None),
+            mk(5, 0.1, 64, 5, Some(2)), // explicit TP-2: merges both units
+            mk(6, 0.101, 16, 2, None),  // micro backfill #1
+            mk(7, 0.102, 16, 2, None),  // micro backfill #2
+        ];
+        let cfg = SimConfig { switch_backfill: true, ..SimConfig::default() };
+        let o = simulate(SimSystem::Flying, &c, &trace, &cfg);
+        assert!(o.rejected.is_empty(), "rejected {:?}", o.rejected);
+        assert_eq!(o.recorder.summary(None).finished, 7);
+        assert!(o.n_switches >= 2, "merge+split expected, got {}", o.n_switches);
+        let first_sched = |id: u64| o.recorder.get(id).unwrap().first_sched.unwrap();
+        let finished = |id: u64| o.recorder.get(id).unwrap().finished.unwrap();
+        // Both micros were admitted essentially at arrival — inside the
+        // transition window, not after the group resolved.
+        assert!(first_sched(6) < 0.11, "micro 6 waited: {}", first_sched(6));
+        assert!(first_sched(7) < 0.11, "micro 7 waited: {}", first_sched(7));
+        // The concurrency witness: micro 7 was admitted to the shell while
+        // micro 6 was still running on it (single-backfill shells would
+        // defer it until 6 retired).
+        assert!(
+            first_sched(7) < finished(6) - 1e-9,
+            "no concurrent backfill: sched(7)={} fin(6)={}",
+            first_sched(7),
+            finished(6)
+        );
+        // The long resident outlives the whole transition and still finishes.
+        assert!(finished(1) > finished(7));
     }
 
     #[test]

@@ -66,6 +66,9 @@ pub struct PaperModel {
     pub max_model_ctx: usize,
     /// Weight bytes per parameter (bf16 = 2; GPT-OSS ships MXFP4 ≈ 1).
     pub bytes_per_param: f64,
+    /// KV-cache bytes per element (bf16 = 2 for the paper-scale models;
+    /// the testbed-calibrated fit uses 4 — its pools are f32).
+    pub kv_bytes_per_elem: f64,
 }
 
 impl PaperModel {
@@ -81,6 +84,7 @@ impl PaperModel {
             min_gpus: 2,
             max_model_ctx: 8192,
             bytes_per_param: 2.0,
+            kv_bytes_per_elem: 2.0,
         }
     }
 
@@ -96,6 +100,7 @@ impl PaperModel {
             min_gpus: 2,
             max_model_ctx: 131072,
             bytes_per_param: 1.0, // MXFP4 checkpoint
+            kv_bytes_per_elem: 2.0,
         }
     }
 
@@ -111,6 +116,7 @@ impl PaperModel {
             min_gpus: 1,
             max_model_ctx: 4_000_000,
             bytes_per_param: 2.0,
+            kv_bytes_per_elem: 2.0,
         }
     }
 
@@ -118,9 +124,12 @@ impl PaperModel {
         self.params_b * 1e9 * self.bytes_per_param
     }
 
-    /// KV bytes per token (all layers, k+v, bf16).
+    /// KV bytes per token (all layers, k+v, at this model's element width).
     pub fn kv_bytes_per_token(&self) -> f64 {
-        2.0 * self.n_layers as f64 * self.n_kv_heads as f64 * self.d_head as f64 * 2.0
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.d_head as f64
+            * self.kv_bytes_per_elem
     }
 }
 
@@ -380,6 +389,7 @@ mod tests {
             min_gpus: 1,
             max_model_ctx: 1_000_000,
             bytes_per_param: 2.0,
+            kv_bytes_per_elem: 2.0,
         };
         let cm = CostModel::new(HwSpec::default(), heavy_kv);
         assert!(

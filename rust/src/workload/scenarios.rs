@@ -52,16 +52,25 @@ pub enum Scenario {
     /// `tp_demand`, so merges happen even when memory alone would not force
     /// them.
     SwitchChurn,
+    /// Three client tiers served simultaneously — latency-strict clients
+    /// with explicit `tp_demand`, high-priority interactive traffic, and an
+    /// elastic best-effort bulk — with the tier *mix* rotating every phase
+    /// (ISSUE 5: tiered requests multiply the switch-decision surface, the
+    /// scheduling kernel's stress shape).  Every constraint tier of the
+    /// admission walk (explicit demand, priority binding, elastic
+    /// steering) is live in the same queue at once.
+    ElasticTiers,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 6] = [
+    pub const ALL: [Scenario; 7] = [
         Scenario::Diurnal,
         Scenario::PoissonBurst,
         Scenario::LongContextWave,
         Scenario::PriorityStorm,
         Scenario::MixedShift,
         Scenario::SwitchChurn,
+        Scenario::ElasticTiers,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -72,6 +81,7 @@ impl Scenario {
             Scenario::PriorityStorm => "priority_storm",
             Scenario::MixedShift => "mixed_shift",
             Scenario::SwitchChurn => "switch_churn",
+            Scenario::ElasticTiers => "elastic_tiers",
         }
     }
 
@@ -87,6 +97,7 @@ impl Scenario {
             Scenario::PriorityStorm => priority_storm(&mut rng, n_requests),
             Scenario::MixedShift => mixed_shift(&mut rng, n_requests),
             Scenario::SwitchChurn => switch_churn(&mut rng, n_requests),
+            Scenario::ElasticTiers => elastic_tiers(&mut rng, n_requests),
         }
     }
 }
@@ -106,7 +117,7 @@ impl std::str::FromStr for Scenario {
             .find(|sc| sc.label() == s)
             .ok_or_else(|| {
                 anyhow::anyhow!(
-                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift|switch_churn)"
+                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift|switch_churn|elastic_tiers)"
                 )
             })
     }
@@ -319,6 +330,65 @@ fn switch_churn(rng: &mut Rng, n: usize) -> Vec<Request> {
     out
 }
 
+fn elastic_tiers(rng: &mut Rng, n: usize) -> Vec<Request> {
+    // Three tiers, all live at once; the dominant tier rotates per phase so
+    // the scheduler sees every admission constraint simultaneously and the
+    // dominant pressure keeps shifting: 0 = elastic-heavy (bursty DP bulk),
+    // 1 = demand-heavy (explicit TP clients), 2 = priority-heavy
+    // (interactive flood over the bulk).
+    const PHASE_S: f64 = 20.0;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        let phase = ((t / PHASE_S) as usize) % 3;
+        let rate = match phase {
+            0 => 10.0, // elastic burst
+            1 => 4.0,  // steady latency-tier load
+            _ => 7.0,  // priority storm over the bulk
+        };
+        t += rng.exp(rate);
+        // Classify by the phase the request actually lands in.
+        let landed = ((t / PHASE_S) as usize) % 3;
+        let (p_demand, p_high) = match landed {
+            0 => (0.05, 0.02),
+            1 => (0.45, 0.05),
+            _ => (0.05, 0.45),
+        };
+        let roll = rng.uniform(0.0, 1.0);
+        if roll < p_demand {
+            // Latency-strict tier: short work, explicit TP width.
+            let mut r = req(
+                id,
+                t,
+                rng.range_usize(128, 2000),
+                rng.range_usize(32, 256),
+                Priority::Normal,
+            );
+            r.tp_demand = Some(*rng.choose(&[2usize, 4]));
+            out.push(r);
+        } else if roll < p_demand + p_high {
+            // Interactive priority tier: chat-shaped.
+            out.push(req(
+                id,
+                t,
+                rng.range_usize(64, 1000),
+                rng.range_usize(128, 512),
+                Priority::High,
+            ));
+        } else {
+            // Elastic bulk, with a thin long-context tail so the memory
+            // tier is exercised too.
+            let prompt = if rng.bool(0.03) {
+                rng.range_usize(LONG_CTX_RANGE.0, LONG_CTX_RANGE.1)
+            } else {
+                rng.range_usize(128, 4000)
+            };
+            out.push(req(id, t, prompt, rng.range_usize(64, 512), Priority::Normal));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{from_csv, to_csv, validate};
@@ -510,6 +580,54 @@ mod tests {
             .iter()
             .filter(|r| r.tp_demand.is_some())
             .all(|r| !elastic_phase(r.arrival)));
+    }
+
+    #[test]
+    fn elastic_tiers_keeps_every_tier_live_and_rotates_dominance() {
+        let reqs = Scenario::ElasticTiers.generate(9, 3000);
+        let phase = |t: f64| ((t / 20.0) as usize) % 3;
+        // All three tiers are present overall.
+        let demands = reqs.iter().filter(|r| r.tp_demand.is_some()).count();
+        let highs = reqs.iter().filter(|r| r.priority == Priority::High).count();
+        let elastic = reqs
+            .iter()
+            .filter(|r| r.tp_demand.is_none() && r.priority == Priority::Normal)
+            .count();
+        assert!(demands > 50, "latency tier missing ({demands})");
+        assert!(highs > 50, "priority tier missing ({highs})");
+        assert!(elastic > reqs.len() / 3, "elastic bulk missing ({elastic})");
+        // Dominance rotates: demand concentrates in phase 1, priority in
+        // phase 2, relative to the other phases.
+        let frac = |pred: &dyn Fn(&Request) -> bool, k: usize| {
+            let in_phase: Vec<&Request> =
+                reqs.iter().filter(|r| phase(r.arrival) == k).collect();
+            in_phase.iter().filter(|r| pred(r)).count() as f64 / in_phase.len().max(1) as f64
+        };
+        let is_demand = |r: &Request| r.tp_demand.is_some();
+        let is_high = |r: &Request| r.priority == Priority::High;
+        assert!(
+            frac(&is_demand, 1) > 2.0 * frac(&is_demand, 0),
+            "demand tier never dominates"
+        );
+        assert!(
+            frac(&is_high, 2) > 2.0 * frac(&is_high, 0),
+            "priority tier never dominates"
+        );
+        // The elastic phase is the burst (densest arrivals).
+        let span = reqs.last().unwrap().arrival;
+        let mut counts = [0usize; 3];
+        let mut phases = [0usize; 3];
+        let n_phases = (span / 20.0).ceil() as usize + 1;
+        for ph in 0..n_phases {
+            let lo = ph as f64 * 20.0;
+            counts[ph % 3] += reqs
+                .iter()
+                .filter(|r| r.arrival >= lo && r.arrival < lo + 20.0)
+                .count();
+            phases[ph % 3] += 1;
+        }
+        let rate = |k: usize| counts[k] as f64 / phases[k].max(1) as f64;
+        assert!(rate(0) > 1.5 * rate(1), "elastic burst missing");
     }
 
     #[test]
