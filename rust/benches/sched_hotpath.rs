@@ -45,6 +45,20 @@
 //!     coordinator gate in part 2 now also covers the kernel walk, since
 //!     the coordinator routes every admission through it.
 //!
+//! And the fault-tolerance probes (ISSUE 6):
+//!
+//!  7. **Watchdog differential**: the same coordinator trace with the
+//!     lockstep watchdog off (the pre-watchdog blocking path) and on with
+//!     no faults injected.  Outputs, rejections, and zero fault counters
+//!     must match exactly (hard gate — same discipline as the
+//!     backfill-off / migrate-off gates).
+//!  8. **Chaos probe**: one switch-churn trace under seeded randomized
+//!     fault plans; request conservation and KV invariants are hard
+//!     gates, and the fault/recovery counters land in the JSON trail.
+//!  9. **Backfill-margin sweep**: `SwitchConfig::backfill_margin` over a
+//!     drain-heavy ladder of elastic requests; admitted-bind counts per
+//!     margin justify the tuned default (recorded in the JSON trail).
+//!
 //! Usage:  cargo bench --bench sched_hotpath [-- --quick]
 //!   --quick  : 20k-request simulator trace (CI smoke; full mode uses 100k
 //!              and can take minutes in the O(n²) reference).
@@ -53,16 +67,18 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::collections::BTreeSet;
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use flying_serving::baselines::StaticDpPolicy;
 use flying_serving::coordinator::policy::FlyingPolicy;
-use flying_serving::coordinator::strategy::{Strategy, SwitchConfig};
+use flying_serving::coordinator::strategy::{Strategy, SwitchConfig, WatchdogConfig};
 use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::engine::FaultPlan;
 use flying_serving::kv::KvCacheAdaptor;
-use flying_serving::metrics::Recorder;
+use flying_serving::metrics::{FaultStats, Recorder};
 use flying_serving::model::{ModelCfg, StaticShapes};
 use flying_serving::sim::{
     outcomes_equivalent, simulate, simulate_reference, CostModel, HwSpec, PaperModel, SimConfig,
@@ -718,6 +734,199 @@ fn kv_lookup_microbench() -> LookupRow {
 }
 
 // ---------------------------------------------------------------------------
+// Part 5 — fault tolerance: watchdog differential + chaos + margin sweep
+// (ISSUE 6)
+// ---------------------------------------------------------------------------
+
+/// Hard gate: with no faults injected, arming the lockstep watchdog must
+/// not move a single token — outputs, rejections, and all-zero fault
+/// counters match the blocking pre-watchdog path exactly.
+fn watchdog_off_differential() -> anyhow::Result<bool> {
+    let shapes = StaticShapes { b_dec: 16, c_prefill: 64 };
+    let mk_trace = || -> Vec<ServeRequest> {
+        (0..200u64)
+            .map(|id| ServeRequest {
+                id,
+                prompt: vec![(id % 250) as i32; 12],
+                max_new: 12,
+                priority: if id % 16 == 0 { Priority::High } else { Priority::Normal },
+                tp_demand: if id % 64 == 0 { Some(2) } else { None },
+                arrival: 0.0,
+            })
+            .collect()
+    };
+
+    let mut c = Cluster::start_stub(stub_cfg(), shapes, 4)?;
+    let off = c.run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::HardPreempt)?;
+    c.shutdown();
+
+    let mut c = Cluster::start_stub(stub_cfg(), shapes, 4)?;
+    c.set_watchdog(WatchdogConfig { enabled: true, ..WatchdogConfig::default() });
+    let on = c.run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::HardPreempt)?;
+    let counters_clean = on.fault_stats == FaultStats::default() && c.failed_mask() == 0;
+    c.shutdown();
+
+    let equal = off.outputs == on.outputs && off.rejected == on.rejected && counters_clean;
+    println!(
+        "watchdog differential: outputs-equal={} rejected-equal={} counters-zero={}",
+        off.outputs == on.outputs,
+        off.rejected == on.rejected,
+        counters_clean,
+    );
+    Ok(equal)
+}
+
+struct ChaosRow {
+    seed: u64,
+    wall_s: f64,
+    conserved: bool,
+    invariants_ok: bool,
+    stats: FaultStats,
+}
+
+/// Chaos probe: the switch-churn scenario (the fault-injection stress
+/// shape: frequent DP↔TP flips with live KV) under seeded randomized
+/// per-engine fault plans.  Conservation and KV invariants are the hard
+/// gates; the counters go to the JSON trail so fault-handling behavior has
+/// a perf-history record.
+fn chaos_probe(seed: u64) -> anyhow::Result<ChaosRow> {
+    let shapes = StaticShapes { b_dec: 8, c_prefill: 32 };
+    let plans: Vec<FaultPlan> = (0..4).map(|e| FaultPlan::randomized(seed, e)).collect();
+    let raw = Scenario::SwitchChurn.generate(seed, 24);
+    let span = raw.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
+    let trace: Vec<ServeRequest> = raw
+        .iter()
+        .map(|r| ServeRequest {
+            id: r.id,
+            prompt: vec![(r.id % 250) as i32; r.prompt_len.clamp(1, 24)],
+            max_new: r.output_len.clamp(1, 6),
+            priority: r.priority,
+            tp_demand: r.tp_demand,
+            arrival: r.arrival / span,
+        })
+        .collect();
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let mut c =
+        Cluster::start_stub_with(stub_cfg(), shapes, 4, Duration::from_millis(400), &plans)?;
+    c.set_watchdog(WatchdogConfig {
+        enabled: true,
+        reply_timeout: Duration::from_millis(150),
+        retries: 2,
+        backoff: Duration::from_millis(100),
+        max_request_retries: 2,
+    });
+    let t0 = Instant::now();
+    let out = c.run_trace(trace, &mut FlyingPolicy::default(), Strategy::SoftPreempt)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let done: BTreeSet<u64> = out.outputs.keys().copied().collect();
+    let rejected: BTreeSet<u64> = out.rejected.iter().copied().collect();
+    let conserved = done.is_disjoint(&rejected)
+        && done.union(&rejected).copied().collect::<BTreeSet<u64>>() == submitted;
+    let invariants_ok = match c.check_invariants() {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("chaos seed={seed:#x}: KV invariants violated: {e:#}");
+            false
+        }
+    };
+    let stats = out.fault_stats;
+    c.shutdown();
+    println!(
+        "chaos seed={seed:#x}: {} done / {} rejected in {}  faults={} timeouts={} ridden-out={} step-errors={} recovered={} aborted={}  conserved={} invariants={}",
+        done.len(),
+        rejected.len(),
+        fmt_dur(wall_s),
+        stats.engine_faults,
+        stats.reply_timeouts,
+        stats.stalls_ridden_out,
+        stats.step_errors,
+        stats.requests_recovered,
+        stats.requests_aborted,
+        conserved,
+        invariants_ok,
+    );
+    Ok(ChaosRow { seed, wall_s, conserved, invariants_ok, stats })
+}
+
+struct MarginRow {
+    margin: f64,
+    binds: usize,
+    completed: usize,
+}
+
+/// Sweep `SwitchConfig::backfill_margin` over a drain-heavy ladder: one
+/// long DP resident opens a TP-2 drain, then elastic requests whose
+/// predicted completions straddle the drain horizon are offered for
+/// backfill.  A wider margin admits more of the ladder; the bind counts
+/// justify the tuned default.  Every run must still complete every request
+/// (hard gate — the margin re-times work, never loses it).
+fn backfill_margin_sweep() -> anyhow::Result<Vec<MarginRow>> {
+    let margins = [0.6, 0.8, 1.0, 1.2, 1.5];
+    let shapes = StaticShapes { b_dec: 8, c_prefill: 32 };
+    let mut rows = Vec::new();
+    for &margin in &margins {
+        let mut c = Cluster::start_stub(stub_cfg(), shapes, 2)?;
+        c.set_switch_config(SwitchConfig {
+            backfill: true,
+            backfill_margin: margin,
+            ..SwitchConfig::default()
+        });
+        let mut recorder = Recorder::new();
+        let mut policy = FlyingPolicy::default();
+        let mut n_submitted = 0usize;
+        let mut submit = |c: &mut Cluster, rec: &mut Recorder, id: u64, max_new: usize, tp: Option<usize>| {
+            c.submit(
+                ServeRequest {
+                    id,
+                    prompt: vec![(id % 250) as i32; if tp.is_some() { 16 } else { 8 }],
+                    max_new,
+                    priority: Priority::Normal,
+                    tp_demand: tp,
+                    arrival: 0.0,
+                },
+                rec,
+            );
+            n_submitted += 1;
+        };
+        // Long resident: 1 prefill chunk + 27 decode steps of drain horizon.
+        submit(&mut c, &mut recorder, 1, 28, None);
+        for _ in 0..3 {
+            c.step_once(&mut policy, Strategy::Sequential, &mut recorder)?;
+        }
+        // Explicit TP demand opens the sequential drain over both engines.
+        submit(&mut c, &mut recorder, 2, 4, Some(2));
+        c.step_once(&mut policy, Strategy::Sequential, &mut recorder)?;
+        // The ladder: predicted completions from well inside the remaining
+        // ~25-step horizon to well past it — which rungs bind is exactly
+        // what the margin decides.
+        for (i, max_new) in [2usize, 6, 10, 14, 18, 22].into_iter().enumerate() {
+            submit(&mut c, &mut recorder, 10 + i as u64, max_new, None);
+        }
+        for _ in 0..20_000 {
+            if !c.step_once(&mut policy, Strategy::Sequential, &mut recorder)? {
+                break;
+            }
+        }
+        let binds = c.backfill_binds();
+        c.shutdown();
+        let completed = (1..=2u64)
+            .chain(10..16)
+            .filter(|&id| recorder.get(id).map(|r| r.finished.is_some()).unwrap_or(false))
+            .count();
+        anyhow::ensure!(
+            completed == n_submitted,
+            "margin {margin}: {completed}/{n_submitted} requests completed — margin must re-time, not lose"
+        );
+        println!(
+            "backfill margin {margin:>4}: {binds} binds admitted, {completed}/{n_submitted} completed"
+        );
+        rows.push(MarginRow { margin, binds, completed });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -816,6 +1025,31 @@ fn main() -> anyhow::Result<()> {
     );
     let rps = coordinator_throughput_probe()?;
 
+    println!("\n== sched_hotpath: fault tolerance (watchdog + chaos + margin sweep) ==");
+    let watchdog_equal = watchdog_off_differential()?;
+    println!(
+        "watchdog-off byte-identical to baseline: {}",
+        if watchdog_equal { "PASS" } else { "FAIL" },
+    );
+    let chaos_seed = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let chaos = chaos_probe(chaos_seed)?;
+    println!(
+        "chaos conservation + KV invariants: {}",
+        if chaos.conserved && chaos.invariants_ok { "PASS" } else { "FAIL" },
+    );
+    let margin_rows = backfill_margin_sweep()?;
+    let default_margin = SwitchConfig::default().backfill_margin;
+    // Admission must widen with the margin (advisory: schedule divergence
+    // between runs can blur single rungs, but the envelope is monotone).
+    let margin_monotone = margin_rows.windows(2).all(|w| w[0].binds <= w[1].binds);
+    println!(
+        "backfill binds nondecreasing in margin (default {default_margin}): {}",
+        if margin_monotone { "PASS" } else { "MISS" },
+    );
+
     // ---- JSON artifact ----------------------------------------------------
     std::fs::create_dir_all("bench_out")?;
     let mut f = std::fs::File::create("bench_out/sched_hotpath.json")?;
@@ -858,9 +1092,18 @@ fn main() -> anyhow::Result<()> {
             )
         })
         .collect();
+    let margins_json: Vec<String> = margin_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"margin\":{:.2},\"backfill_binds\":{},\"completed\":{}}}",
+                r.margin, r.binds, r.completed
+            )
+        })
+        .collect();
     writeln!(
         f,
-        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}}}}",
+        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}},\"fault_tolerance\":{{\"watchdog_off_equivalent\":{},\"chaos\":{{\"seed\":{},\"wall_s\":{:.3},\"conserved\":{},\"invariants_ok\":{},\"engine_faults\":{},\"reply_timeouts\":{},\"stalls_ridden_out\":{},\"step_errors\":{},\"requests_recovered\":{},\"requests_aborted\":{}}},\"margin_sweep\":{{\"default_margin\":{:.2},\"monotone\":{},\"rows\":[{}]}}}}}}",
         n_requests,
         quick,
         sims.join(","),
@@ -885,6 +1128,20 @@ fn main() -> anyhow::Result<()> {
         alloc.mean_allocs,
         alloc.steps_per_s,
         rps,
+        watchdog_equal,
+        chaos.seed,
+        chaos.wall_s,
+        chaos.conserved,
+        chaos.invariants_ok,
+        chaos.stats.engine_faults,
+        chaos.stats.reply_timeouts,
+        chaos.stats.stalls_ridden_out,
+        chaos.stats.step_errors,
+        chaos.stats.requests_recovered,
+        chaos.stats.requests_aborted,
+        default_margin,
+        margin_monotone,
+        margins_json.join(","),
     )?;
     println!("\nwrote bench_out/sched_hotpath.json");
     if !all_equiv {
@@ -907,6 +1164,15 @@ fn main() -> anyhow::Result<()> {
             "coordinator steady state allocates (median {} allocs/step, expected 0)",
             alloc.median_allocs
         );
+    }
+    if !watchdog_equal {
+        anyhow::bail!("fault-free watchdog run diverged from the blocking baseline");
+    }
+    if !chaos.conserved {
+        anyhow::bail!("chaos probe lost or invented requests (seed {:#x})", chaos.seed);
+    }
+    if !chaos.invariants_ok {
+        anyhow::bail!("chaos probe violated KV invariants (seed {:#x})", chaos.seed);
     }
     Ok(())
 }

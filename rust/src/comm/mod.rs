@@ -58,6 +58,16 @@ struct Inner {
 }
 
 /// One pre-built communicator (the NCCL process-group analog).
+///
+/// Lock discipline (ISSUE 6): every collective takes `m` with
+/// `unwrap_or_else(|p| p.into_inner())` rather than `unwrap()`.  A peer
+/// that panics while holding the rendezvous lock poisons it; cascading
+/// that panic into every surviving member would turn one engine fault
+/// into a whole-group crash.  The `Inner` state is a counter/buffer
+/// rendezvous that the generation protocol re-validates on every pass, so
+/// entering a poisoned lock is safe — the *logical* fallout of the dead
+/// peer (a member that never arrives) is what the timeout below and the
+/// coordinator's watchdog are for.
 #[derive(Debug)]
 pub struct Communicator {
     pub ranks: Vec<usize>,
@@ -107,7 +117,7 @@ impl Communicator {
         if p == 1 {
             return Ok(()); // singleton group: no-op (DP mode)
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         if g.arrived == 0 {
             g.buf.clear();
             g.buf.extend_from_slice(data);
@@ -132,7 +142,7 @@ impl Communicator {
             let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
@@ -148,7 +158,7 @@ impl Communicator {
         if p == 1 {
             return Ok(());
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         g.arrived += 1;
         if g.arrived == p {
             g.arrived = 0;
@@ -160,7 +170,7 @@ impl Communicator {
             let (_g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
@@ -175,7 +185,7 @@ impl Communicator {
         if p == 1 {
             return Ok(());
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         if idx == 0 {
             // Stage into `buf`; only the completing arrival publishes it to
             // `result`.  A next-round root can therefore never clobber a
@@ -197,7 +207,7 @@ impl Communicator {
             let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
@@ -225,7 +235,7 @@ impl Communicator {
             out.extend_from_slice(data);
             return Ok(());
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         g.gather[idx].clear();
         g.gather[idx].extend_from_slice(data);
         g.arrived += 1;
@@ -247,7 +257,7 @@ impl Communicator {
             let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
@@ -286,7 +296,7 @@ impl Communicator {
             // like any other contract violation).
             return Err(CommError::ScatterShape { len: send.len(), p });
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         if idx == root_idx {
             // Stage into `buf`; only the completing arrival publishes it to
             // `result` (same protocol as broadcast), so a next-round root can
@@ -309,7 +319,7 @@ impl Communicator {
             let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
@@ -341,7 +351,7 @@ impl Communicator {
             out.extend_from_slice(data);
             return Ok(());
         }
-        let mut g = self.m.lock().unwrap();
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         g.gather[idx].clear();
         g.gather[idx].extend_from_slice(data);
         g.arrived += 1;
@@ -374,7 +384,7 @@ impl Communicator {
             let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
-                .unwrap();
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }

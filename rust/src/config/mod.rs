@@ -30,6 +30,13 @@ pub struct ServeConfig {
     /// (`SwitchConfig::migrate`).  Off by default: promotion then
     /// re-prefills speculative KV exactly as PR 1/3.
     pub switch_migrate: bool,
+    /// Lockstep watchdog + graceful degradation (ISSUE 6,
+    /// `coordinator::strategy::WatchdogConfig`).  Off by default: reply
+    /// collection then blocks exactly as the pre-watchdog coordinator.
+    pub watchdog: bool,
+    /// First per-command reply deadline in milliseconds (retries extend
+    /// it; see `WatchdogConfig`).  0 keeps the default.
+    pub watchdog_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -47,6 +54,8 @@ impl Default for ServeConfig {
             verbose: false,
             switch_backfill: false,
             switch_migrate: false,
+            watchdog: false,
+            watchdog_timeout_ms: 0,
         }
     }
 }
@@ -92,6 +101,8 @@ impl ServeConfig {
                 "verbose" => c.verbose = v == "true",
                 "switch-backfill" => c.switch_backfill = v == "true",
                 "switch-migrate" => c.switch_migrate = v == "true",
+                "watchdog" => c.watchdog = v == "true",
+                "watchdog-timeout-ms" => c.watchdog_timeout_ms = v.parse()?,
                 _ => bail!("unknown flag --{k}"),
             }
         }
@@ -117,6 +128,20 @@ impl ServeConfig {
             migrate: self.switch_migrate,
             ..Default::default()
         }
+    }
+
+    /// Lockstep-watchdog tuning from `--watchdog` /
+    /// `--watchdog-timeout-ms` (other knobs keep their defaults).
+    pub fn make_watchdog_config(&self) -> crate::coordinator::strategy::WatchdogConfig {
+        let mut w = crate::coordinator::strategy::WatchdogConfig {
+            enabled: self.watchdog,
+            ..Default::default()
+        };
+        if self.watchdog_timeout_ms > 0 {
+            w.reply_timeout = std::time::Duration::from_millis(self.watchdog_timeout_ms);
+            w.backoff = w.reply_timeout;
+        }
+        w
     }
 
     /// Instantiate the configured policy with no testbed calibration:
@@ -229,6 +254,22 @@ mod tests {
                 "{flags:?} must calibrate"
             );
         }
+    }
+
+    #[test]
+    fn watchdog_flags_parse() {
+        let (_, flags) =
+            parse_args(&s(&["--watchdog", "--watchdog-timeout-ms", "250"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert!(c.watchdog);
+        assert_eq!(c.watchdog_timeout_ms, 250);
+        let w = c.make_watchdog_config();
+        assert!(w.enabled);
+        assert_eq!(w.reply_timeout, std::time::Duration::from_millis(250));
+        // Off by default, and the default timeouts survive a bare --watchdog.
+        let d = ServeConfig::default().make_watchdog_config();
+        assert!(!d.enabled);
+        assert_eq!(d.reply_timeout, std::time::Duration::from_secs(5));
     }
 
     #[test]

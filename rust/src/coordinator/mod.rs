@@ -81,24 +81,30 @@ pub mod policy;
 pub mod strategy;
 
 use std::collections::BTreeMap;
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::comm::CommunicatorPool;
-use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, PrefillChunk};
+use crate::engine::{DecodeSlot, EngineCmd, EngineHandle, EngineReply, FaultPlan, PrefillChunk};
+use crate::error::FaultKind;
 use crate::kv::{KvCacheAdaptor, KvHandle, MigrationPlan};
-use crate::metrics::{RecSlot, Recorder};
+use crate::metrics::{FaultStats, RecSlot, Recorder};
 use crate::model::{ModelCfg, StaticShapes};
 use crate::sched::{lifecycle, Kernel, LeastLoaded, Placement, SchedEvent};
 use crate::sim::{CostModel, HwSpec, PaperModel};
 use crate::util::slab::{Slab, SlabHandle};
 use crate::workload::Priority;
 use policy::{ModeDecision, Policy, Snapshot};
-use strategy::{Strategy, SwitchConfig};
+use strategy::{Strategy, SwitchConfig, WatchdogConfig};
 
 pub const EOS: i32 = 257;
+
+/// Consecutive degraded step errors after which a live engine is treated
+/// as failed (see `Cluster::step_err_streak`).
+const MAX_STEP_ERR_STREAK: u32 = 32;
 
 /// A request as submitted to the cluster (the real serving path).
 #[derive(Clone, Debug)]
@@ -146,6 +152,11 @@ struct Active {
     kvh: Vec<(usize, KvHandle)>,
     /// Admitted onto a draining engine under the backfill predicate.
     backfill: bool,
+    /// Fault-recovery count (ISSUE 6): how many times this request was
+    /// rescued off a failed engine and requeued for recompute.  Bounded by
+    /// `WatchdogConfig::max_request_retries`; past the budget the request
+    /// is rejected instead of recovered.
+    retries: u32,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -180,6 +191,8 @@ pub struct ClusterOutcome {
     /// migration instead of being re-prefilled (`SwitchConfig::migrate`;
     /// always 0 with the flag off).
     pub recompute_tokens_avoided: usize,
+    /// Fault/recovery counters (ISSUE 6); all zero on a fault-free run.
+    pub fault_stats: FaultStats,
 }
 
 /// One work-issue record: enough to collect replies and publish results
@@ -285,6 +298,27 @@ pub struct Cluster {
     t0: Instant,
     n_steps: usize,
     switch_cfg: SwitchConfig,
+    /// Lockstep watchdog configuration (ISSUE 6).  Disabled by default:
+    /// the fault-free path then uses the exact blocking collection the
+    /// pre-watchdog coordinator ran, byte-identical.
+    watchdog: WatchdogConfig,
+    /// Per-trace fault/recovery counters (reset by `run_trace`).
+    fault_stats: FaultStats,
+    /// Engines whose fault was detected but whose graceful degradation has
+    /// not run yet — drained at safe points by `process_faults` (removing
+    /// groups mid-`settle_groups` would invalidate its iteration state).
+    pending_faults: Vec<usize>,
+    /// Requests marked for recovery at the next safe point (e.g. a
+    /// transition whose migration step faulted mid-flight).
+    fault_recover: Vec<SlabHandle>,
+    /// Consecutive degraded step errors per engine: a live engine that
+    /// errors every step (a deterministic failure rather than a transient
+    /// collective timeout) is escalated to fail-stop after a bounded
+    /// streak instead of being retried forever.
+    step_err_streak: Vec<u32>,
+    /// Elastic binds admitted through the backfill predicate (for the
+    /// `backfill_margin` sweep in `sched_hotpath`).
+    backfill_binds: usize,
     /// Cumulative tokens carried across layout changes by KV migration.
     recompute_tokens_avoided: usize,
     /// Cost model backing the shared migrate-vs-recompute rule
@@ -343,6 +377,22 @@ impl Cluster {
     /// full scheduler/adaptor/collective path with no PJRT dependency.
     /// Used by CI integration tests and the scheduler benches.
     pub fn start_stub(cfg: ModelCfg, shapes: StaticShapes, n_engines: usize) -> Result<Cluster> {
+        Self::start_stub_with(cfg, shapes, n_engines, Duration::from_secs(30), &[])
+    }
+
+    /// [`Self::start_stub`] with an explicit collective watchdog timeout
+    /// and per-engine fault plans (ISSUE 6).  `plans` is indexed by engine
+    /// id; missing entries inject nothing.  The communicator timeout must
+    /// stay *below* the lockstep watchdog's total reply budget so a group
+    /// stranded by a dead peer errors out of its collective (and replies)
+    /// before the coordinator escalates the surviving members.
+    pub fn start_stub_with(
+        cfg: ModelCfg,
+        shapes: StaticShapes,
+        n_engines: usize,
+        comm_timeout: Duration,
+        plans: &[FaultPlan],
+    ) -> Result<Cluster> {
         let mut degrees = Vec::new();
         let mut p = 1usize;
         while p <= n_engines {
@@ -354,14 +404,21 @@ impl Cluster {
         if !degrees.contains(&1) {
             degrees.push(1);
         }
-        let comm = Arc::new(CommunicatorPool::new(
-            n_engines,
-            &degrees,
-            Duration::from_secs(30),
-        ));
+        let comm = Arc::new(CommunicatorPool::new(n_engines, &degrees, comm_timeout));
         let mut engines = Vec::new();
         for id in 0..n_engines {
-            engines.push(EngineHandle::spawn_stub(id, cfg.clone(), shapes, comm.clone())?);
+            let plan = plans.get(id).cloned().unwrap_or_default();
+            if plan.is_none() {
+                engines.push(EngineHandle::spawn_stub(id, cfg.clone(), shapes, comm.clone())?);
+            } else {
+                engines.push(EngineHandle::spawn_stub_faulty(
+                    id,
+                    cfg.clone(),
+                    shapes,
+                    comm.clone(),
+                    plan,
+                )?);
+            }
         }
         Self::assemble(cfg, engines, comm, degrees, shapes)
     }
@@ -400,6 +457,12 @@ impl Cluster {
             t0: Instant::now(),
             n_steps: 0,
             switch_cfg: SwitchConfig::default(),
+            watchdog: WatchdogConfig::default(),
+            fault_stats: FaultStats::default(),
+            pending_faults: Vec::new(),
+            fault_recover: Vec::new(),
+            step_err_streak: vec![0; n_engines],
+            backfill_binds: 0,
             recompute_tokens_avoided: 0,
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
             engine_scratch: (0..n_engines).map(|_| EngineScratch::default()).collect(),
@@ -427,6 +490,61 @@ impl Cluster {
 
     pub fn switch_config(&self) -> SwitchConfig {
         self.switch_cfg
+    }
+
+    /// Lockstep watchdog + graceful-degradation tuning (ISSUE 6).  Off by
+    /// default: the coordinator then blocks on replies exactly as before —
+    /// a fault-free run is byte-identical to the pre-watchdog path.
+    pub fn set_watchdog(&mut self, cfg: WatchdogConfig) {
+        self.watchdog = cfg;
+    }
+
+    pub fn watchdog(&self) -> WatchdogConfig {
+        self.watchdog
+    }
+
+    /// Fault/recovery counters accumulated since the last `run_trace`
+    /// reset (for `step_once`-driven harnesses).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault_stats
+    }
+
+    /// Bitmask of fail-stopped engines.
+    pub fn failed_mask(&self) -> u64 {
+        self.kernel.index.failed_mask()
+    }
+
+    /// Elastic binds admitted through the backfill predicate (for the
+    /// `backfill_margin` sweep in `sched_hotpath`).
+    pub fn backfill_binds(&self) -> usize {
+        self.backfill_binds
+    }
+
+    /// Structural invariants that must hold at every safe point, fault or
+    /// no fault: every adaptor's internal block accounting balances, and
+    /// the per-engine committed-block counters equal the sum over live
+    /// requests' commitments.  The chaos harness calls this after every
+    /// trace.
+    pub fn check_invariants(&self) -> Result<()> {
+        for (e, ad) in self.adaptors.iter().enumerate() {
+            ad.check_invariants()
+                .map_err(|err| anyhow::anyhow!("adaptor {e}: {err:#}"))?;
+        }
+        let mut per_engine = vec![0usize; self.engines.len()];
+        for (_, a) in self.active.iter() {
+            for &(e, blocks) in &a.committed {
+                per_engine[e] += blocks;
+            }
+        }
+        for e in 0..self.engines.len() {
+            anyhow::ensure!(
+                per_engine[e] == self.engine_committed[e],
+                "engine {e}: committed counter {} != sum over live requests {}",
+                self.engine_committed[e],
+                per_engine[e]
+            );
+        }
+        Ok(())
     }
 
     /// Override the cost model behind the migrate-vs-recompute rule.  The
@@ -662,9 +780,14 @@ impl Cluster {
         for e in self.members(start, width) {
             // Members already at the target mode (incrementally settled, or
             // SetMode is otherwise redundant) are skipped: the final
-            // promotion pays only the stragglers' mode RPCs.
-            if e < self.engines.len() && self.engine_mode[e] != p_to {
-                self.engines[e].call(EngineCmd::SetMode { p: p_to })?;
+            // promotion pays only the stragglers' mode RPCs.  Failed
+            // members are skipped too (`set_mode_watched` returns false) —
+            // a fault here surfaces through the group-health checks at the
+            // call sites, not as a blocked RPC.
+            if e < self.engines.len()
+                && self.engine_mode[e] != p_to
+                && self.set_mode_watched(e, p_to)?
+            {
                 self.engine_mode[e] = p_to;
                 self.refresh_engine(e);
             }
@@ -678,6 +801,260 @@ impl Cluster {
             latency_s: dt,
         });
         Ok(dt)
+    }
+
+    // ------------------------------------------------------------------
+    // Lockstep watchdog + graceful degradation (ISSUE 6)
+    // ------------------------------------------------------------------
+
+    /// Watched receive on engine `e`'s persistent reply channel: wait up
+    /// to `reply_timeout`, then retry with the deadline extended by
+    /// `backoff` up to `retries` times (a stall ridden out this way is
+    /// counted, not escalated), then escalate to a typed fault.  The
+    /// total budget must exceed the communicator timeout so a survivor
+    /// stuck in a collective against a dead peer gets to reply `Err`
+    /// before being declared failed itself.  Known-failed engines
+    /// short-circuit — fail-stop means never draining their channel again.
+    fn recv_reply_watched(&mut self, e: usize) -> std::result::Result<EngineReply, FaultKind> {
+        if self.kernel.index.is_failed(e) {
+            return Err(FaultKind::Disconnected);
+        }
+        let mut attempt = 0u32;
+        let mut deadline = self.watchdog.reply_timeout;
+        loop {
+            match self.engines[e].recv_timeout(deadline) {
+                Ok(r) => {
+                    if attempt > 0 {
+                        self.fault_stats.stalls_ridden_out += 1;
+                    }
+                    return Ok(r);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    attempt += 1;
+                    if attempt > self.watchdog.retries {
+                        self.fault_stats.reply_timeouts += 1;
+                        return Err(FaultKind::Timeout);
+                    }
+                    deadline += self.watchdog.backoff;
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(FaultKind::Disconnected),
+            }
+        }
+    }
+
+    /// Record a detected engine fault: fail-stop in the kernel index (the
+    /// engine leaves every candidate set immediately, and is never sent
+    /// to or received from again) and queue graceful degradation for the
+    /// next safe point — dissolving groups mid-`settle_groups` would
+    /// invalidate its iteration state.
+    fn note_engine_fault(&mut self, e: usize, kind: FaultKind) {
+        if self.kernel.index.is_failed(e) {
+            return;
+        }
+        crate::info!("engine {e} failed: {kind}");
+        self.kernel.index.mark_failed(e);
+        self.pending_faults.push(e);
+        self.fault_stats.engine_faults += 1;
+    }
+
+    /// Fault-aware SetMode on engine `e`; returns whether the mode RPC
+    /// actually completed (false: the engine is failed, already or
+    /// newly).  With the watchdog off this is the exact blocking call
+    /// the pre-watchdog coordinator made — byte-identical fault-free.
+    fn set_mode_watched(&mut self, e: usize, p: usize) -> Result<bool> {
+        if self.kernel.index.is_failed(e) {
+            return Ok(false);
+        }
+        if !self.watchdog.enabled {
+            self.engines[e].call(EngineCmd::SetMode { p })?;
+            return Ok(true);
+        }
+        self.engines[e].send(EngineCmd::SetMode { p });
+        match self.recv_reply_watched(e) {
+            Ok(EngineReply::Err(msg)) => bail!("engine {e}: set_mode: {msg}"),
+            Ok(_) => Ok(true),
+            Err(kind) => {
+                self.note_engine_fault(e, kind);
+                Ok(false)
+            }
+        }
+    }
+
+    /// Drain the queue of detected faults at a safe point (no step in
+    /// flight, no group iteration borrowed): dissolve every group the
+    /// failed engines belonged to back to the surviving members, then
+    /// recover (requeue for recompute) or reject every request that was
+    /// resident on a failed engine or aborted mid-transition.
+    fn process_faults(&mut self, recorder: &mut Recorder) -> Result<()> {
+        if self.pending_faults.is_empty() && self.fault_recover.is_empty() {
+            return Ok(());
+        }
+        while let Some(e) = self.pending_faults.pop() {
+            self.degrade_engine(e, recorder)?;
+        }
+        let mut rec_hs = std::mem::take(&mut self.fault_recover);
+        for h in rec_hs.drain(..) {
+            self.recover_request(h, true, recorder)?;
+        }
+        self.fault_recover = rec_hs;
+        self.refresh_draining();
+        Ok(())
+    }
+
+    /// Graceful degradation for one failed engine.
+    fn degrade_engine(&mut self, e: usize, recorder: &mut Recorder) -> Result<()> {
+        // Groups overlapping the failed engine dissolve back to their
+        // surviving units.  `settled_mask`/`group_live` invariants hold
+        // trivially afterwards: the group row is gone, and survivors are
+        // switched to unit mode through the failed-skipping RPC path.
+        let mut starts = std::mem::take(&mut self.scratch.starts);
+        starts.clear();
+        starts.extend(
+            self.groups
+                .iter()
+                .filter(|&(&s, g)| s <= e && e < s + g.p)
+                .map(|(&s, _)| s),
+        );
+        for &start in &starts {
+            let g = self.groups.remove(&start).expect("listed start");
+            // TP-active requests lost a shard of their KV: recover them.
+            for &h in &g.tp_active {
+                if self.active.get(h).is_some() && !self.fault_recover.contains(&h) {
+                    self.fault_recover.push(h);
+                }
+            }
+            for &h in &g.tp_pending {
+                let Some(a) = self.active.get(h) else { continue };
+                if a.speculative && a.home != e && !self.kernel.index.is_failed(a.home) {
+                    // Its speculative DP run on a surviving member is
+                    // intact: demote to a plain DP request and let it
+                    // finish there instead of recomputing.
+                    self.active.get_mut(h).expect("live").speculative = false;
+                } else if a.speculative {
+                    // The speculative home died too; it sits in that
+                    // engine's resident list and is recovered below.
+                } else {
+                    // Never bound anywhere: requeue uncharged.
+                    self.recover_request(h, false, recorder)?;
+                }
+            }
+            // Survivors return to unit mode (the failed member is
+            // skipped by `set_mode_watched`) and resume paused work.
+            self.switch_group(start, g.p, 1)?;
+            for m in self.members(start, g.p) {
+                if m >= self.engines.len() || self.kernel.index.is_failed(m) {
+                    continue;
+                }
+                let mut resumed = std::mem::take(&mut self.scratch.ids);
+                resumed.clear();
+                for &x in &self.engine_active[m] {
+                    if self.active.get(x).map(|a| a.paused).unwrap_or(false) {
+                        resumed.push(x);
+                    }
+                }
+                for &x in resumed.iter() {
+                    let rid = self.active.get(x).expect("live").sr.id;
+                    let _ = self.adaptors[m].resume(rid);
+                    self.active.get_mut(x).expect("live").paused = false;
+                }
+                self.scratch.ids = resumed;
+                self.refresh_engine(m);
+            }
+        }
+        self.scratch.starts = starts;
+        // The failed engine's resident DP requests (incl. paused and
+        // speculative ones homed there) are recovered with a retry
+        // charge.  Its adaptor is coordinator-owned metadata, so the
+        // reclaim is safe even though the worker is gone.
+        let resident = std::mem::take(&mut self.engine_active[e]);
+        for &h in &resident {
+            if self.active.get(h).is_some() && !self.fault_recover.contains(&h) {
+                self.fault_recover.push(h);
+            }
+        }
+        self.engine_active[e] = resident;
+        self.engine_active[e].clear();
+        self.refresh_engine(e);
+        Ok(())
+    }
+
+    /// Rescue one request off a failed engine (or an aborted transition):
+    /// reclaim its blocks and registrations everywhere (stale handles are
+    /// skipped, never a panic), strip it from every placement list, and
+    /// requeue it for a from-scratch recompute (`pos = 0`; already-
+    /// emitted tokens are kept and re-fed, exactly the soft-preempt
+    /// recompute discipline).  Past the retry budget it is rejected.
+    fn recover_request(
+        &mut self,
+        h: SlabHandle,
+        charge: bool,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        if self.active.get(h).is_none() {
+            return Ok(()); // stale handle: finished or already recovered
+        }
+        self.uncommit_all(h);
+        let kvh = std::mem::take(&mut self.active.get_mut(h).expect("live").kvh);
+        for (e, kh) in kvh {
+            let _ = self.adaptors[e].release_if_live_h(kh);
+        }
+        for e in 0..self.engines.len() {
+            if self.engine_active[e].contains(&h) {
+                self.engine_active[e].retain(|&x| x != h);
+                self.refresh_engine(e);
+            }
+        }
+        for g in self.groups.values_mut() {
+            g.tp_active.retain(|&x| x != h);
+            g.tp_pending.retain(|&x| x != h);
+        }
+        let (pri, over_budget, rec) = {
+            let a = self.active.get_mut(h).expect("live");
+            a.mode_p = 0;
+            a.home = 0;
+            a.phase = Phase::Prefill;
+            a.pos = 0;
+            a.paused = false;
+            a.speculative = false;
+            a.backfill = false;
+            if charge {
+                a.retries += 1;
+            }
+            (
+                a.sr.priority,
+                a.retries > self.watchdog.max_request_retries,
+                a.rec,
+            )
+        };
+        if over_budget {
+            let now = self.now();
+            let a = self.active.remove(h).expect("live");
+            self.by_id.remove(&a.sr.id);
+            self.rejected.push(a.sr.id);
+            recorder.on_finish_at(rec, now);
+            self.fault_stats.requests_aborted += 1;
+        } else {
+            self.kernel.on_event(SchedEvent::Arrival { h, priority: pri });
+            self.fault_stats.requests_recovered += 1;
+        }
+        Ok(())
+    }
+
+    /// Degraded-cell backstop: reject every request still waiting in the
+    /// kernel rings.  Invoked by `run_trace` when a degraded cluster has
+    /// made no progress for many iterations — the surviving engines
+    /// cannot host the remaining waiters (e.g. a TP demand wider than
+    /// what is left), so conservation is settled by rejection rather
+    /// than a hang.
+    fn reject_stranded(&mut self, recorder: &mut Recorder) {
+        let now = self.now();
+        while let Some(h) = self.kernel.rings.pop_any() {
+            let Some(a) = self.active.remove(h) else { continue };
+            self.by_id.remove(&a.sr.id);
+            self.rejected.push(a.sr.id);
+            recorder.on_finish_at(a.rec, now);
+            self.fault_stats.requests_aborted += 1;
+        }
     }
 
     // ------------------------------------------------------------------
@@ -696,6 +1073,8 @@ impl Cluster {
         self.t0 = Instant::now();
         self.n_steps = 0;
         self.recompute_tokens_avoided = 0;
+        self.fault_stats = FaultStats::default();
+        self.backfill_binds = 0;
         let mut next_arrival = 0usize;
         let mut idle_iters = 0usize;
 
@@ -703,8 +1082,11 @@ impl Cluster {
             let now = self.now();
 
             // Dissolve/settle groups first so freshly-freed engines are
-            // visible to this iteration's mode decisions.
+            // visible to this iteration's mode decisions, then run the
+            // graceful-degradation pass for any fault the settle detected
+            // (a no-op while the fault queues are empty).
             self.settle_groups(&mut recorder)?;
+            self.process_faults(&mut recorder)?;
 
             // ① Input processing: admit due arrivals into the task pool.
             while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
@@ -724,6 +1106,7 @@ impl Cluster {
 
             // ⑥ Execute one step on every engine/group with work.
             let stepped = self.execute_step(&mut recorder)?;
+            self.process_faults(&mut recorder)?;
             if stepped {
                 self.n_steps += 1;
             }
@@ -742,6 +1125,15 @@ impl Cluster {
                     if dt > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
                     }
+                } else if self.watchdog.enabled
+                    && self.kernel.index.failed_mask() != 0
+                    && idle_iters > 1_000
+                {
+                    // Degraded cell wedged: the surviving engines cannot
+                    // host the remaining waiters (e.g. a TP demand wider
+                    // than what is left).  Settle conservation by
+                    // rejection instead of spinning into the stall bail.
+                    self.reject_stranded(&mut recorder);
                 } else if idle_iters > 10_000 {
                     // Requests exist but nothing has run for many
                     // iterations: genuine scheduling bug, fail loudly
@@ -766,6 +1158,7 @@ impl Cluster {
             switches: std::mem::take(&mut self.switches),
             n_steps: self.n_steps,
             recompute_tokens_avoided: self.recompute_tokens_avoided,
+            fault_stats: self.fault_stats,
         })
     }
 
@@ -794,8 +1187,10 @@ impl Cluster {
         recorder: &mut Recorder,
     ) -> Result<bool> {
         self.settle_groups(recorder)?;
+        self.process_faults(recorder)?;
         self.assign_waiting(policy, strategy, recorder)?;
         let stepped = self.execute_step(recorder)?;
+        self.process_faults(recorder)?;
         if stepped {
             self.n_steps += 1;
         }
@@ -819,6 +1214,7 @@ impl Cluster {
             rec,
             kvh: Vec::new(),
             backfill: false,
+            retries: 0,
         });
         self.by_id.insert(id, h);
         self.kernel.on_event(SchedEvent::Arrival { h, priority: pri });
@@ -976,6 +1372,7 @@ impl Cluster {
             if pick.is_some() {
                 self.active.get_mut(h).expect("live").backfill = true;
                 backfill = true;
+                self.backfill_binds += 1;
             }
         }
         match pick {
@@ -1156,12 +1553,16 @@ impl Cluster {
                     && (!g.tp_active.is_empty() || !g.tp_pending.is_empty())
             })
         };
+        let failed = self.kernel.index.failed_mask();
         let mut bound: Option<usize> = None;
         let mut best: Option<(usize, usize)> = None; // (load, start)
         let mut any_start = false;
         let mut s = 0usize;
         while s + p <= self.engines.len() {
-            if !conflict(s) {
+            // A span containing a fail-stopped engine can never form a
+            // group (no-op while the failed mask is zero).
+            let span = (((1u128 << p) - 1) as u64) << s;
+            if failed & span == 0 && !conflict(s) {
                 any_start = true;
                 if self
                     .groups
@@ -1363,6 +1764,15 @@ impl Cluster {
             }
 
             if !pending_empty {
+                // A group that lost a member cannot settle or promote —
+                // leave it untouched for the fault pass to dissolve (a
+                // no-op scan while the failed mask is zero).
+                if self
+                    .members(start, p)
+                    .any(|e| self.kernel.index.is_failed(e))
+                {
+                    continue;
+                }
                 // Incremental settle: members whose own work has drained
                 // merge into the target mode now instead of idling behind
                 // the slowest straggler (backfill mode only — off keeps the
@@ -1392,7 +1802,9 @@ impl Cluster {
                         if member_busy {
                             continue;
                         }
-                        self.engines[e].call(EngineCmd::SetMode { p })?;
+                        if !self.set_mode_watched(e, p)? {
+                            continue;
+                        }
                         self.engine_mode[e] = p;
                         self.refresh_engine(e);
                         self.groups.get_mut(&start).unwrap().settled_mask |= bit;
@@ -1430,6 +1842,14 @@ impl Cluster {
                     }
                     if !self.group_live(start, p) {
                         self.switch_group(start, p, p)?;
+                        // The switch itself can detect a member fault:
+                        // abort the promotion, the fault pass dissolves.
+                        if self
+                            .members(start, p)
+                            .any(|e| self.kernel.index.is_failed(e))
+                        {
+                            continue;
+                        }
                     } else if self.groups[&start].settled_mask != 0 {
                         // Every member settled incrementally: the final hop
                         // is free — log it so Table-2 switch counts stay
@@ -1544,21 +1964,50 @@ impl Cluster {
                             // mis-attribute them to the next command a
                             // `step_once`-driven host issues.
                             let mut first_err: Option<String> = None;
+                            let mut faulted = false;
                             for e in self.members(start, p) {
-                                match self.engines[e].recv() {
-                                    Ok(EngineReply::Err(msg)) => {
-                                        if first_err.is_none() {
-                                            first_err =
-                                                Some(format!("engine {e}: {msg}"));
+                                if self.watchdog.enabled {
+                                    match self.recv_reply_watched(e) {
+                                        Ok(EngineReply::Err(msg)) => {
+                                            if first_err.is_none() {
+                                                first_err =
+                                                    Some(format!("engine {e}: {msg}"));
+                                            }
+                                        }
+                                        Ok(_) => {}
+                                        Err(kind) => {
+                                            self.note_engine_fault(e, kind);
+                                            faulted = true;
                                         }
                                     }
-                                    Ok(_) => {}
-                                    Err(dead) => {
-                                        if first_err.is_none() {
-                                            first_err = Some(dead.to_string());
+                                } else {
+                                    match self.engines[e].recv() {
+                                        Ok(EngineReply::Err(msg)) => {
+                                            if first_err.is_none() {
+                                                first_err =
+                                                    Some(format!("engine {e}: {msg}"));
+                                            }
+                                        }
+                                        Ok(_) => {}
+                                        Err(dead) => {
+                                            if first_err.is_none() {
+                                                first_err = Some(dead.to_string());
+                                            }
                                         }
                                     }
                                 }
+                            }
+                            if faulted || (self.watchdog.enabled && first_err.is_some()) {
+                                // Safe transition abort (ISSUE 6): the
+                                // adaptor metadata is self-consistent after
+                                // `apply_migration`, so recovery can reclaim
+                                // the re-tagged blocks and requeue the
+                                // request for recompute at the next fault
+                                // pass — no state violates the group
+                                // invariants in the meantime.
+                                self.fault_stats.step_errors += usize::from(!faulted);
+                                self.fault_recover.push(h);
+                                continue;
                             }
                             if let Some(msg) = first_err {
                                 bail!("kv migration failed: {msg}");
@@ -1623,11 +2072,22 @@ impl Cluster {
             // Re-synchronize the persistent per-engine reply channels: any
             // reply still outstanding from this aborted step would otherwise
             // be mis-attributed to the next command on this cluster.
+            // Failed engines are never drained (fail-stop); under the
+            // watchdog the drain itself is deadline-bounded.
             let mut pending = sc.pending_mask;
             while pending != 0 {
                 let e = pending.trailing_zeros() as usize;
                 pending &= pending - 1;
-                let _ = self.engines[e].recv();
+                if self.kernel.index.is_failed(e) {
+                    continue;
+                }
+                if self.watchdog.enabled {
+                    if let Err(kind) = self.recv_reply_watched(e) {
+                        self.note_engine_fault(e, kind);
+                    }
+                } else {
+                    let _ = self.engines[e].recv();
+                }
             }
         }
         sc.pending_mask = 0;
@@ -1659,6 +2119,16 @@ impl Cluster {
             }
             for e in self.members(start, p) {
                 sc.covered[e] = true;
+            }
+            // A group that lost a member issues nothing this step — its
+            // requests are recovered by the fault pass right after.  The
+            // members stay covered so survivors (still in TP mode) are
+            // not handed DP work.  No-op while the failed mask is zero.
+            if self
+                .members(start, p)
+                .any(|e| self.kernel.index.is_failed(e))
+            {
+                continue;
             }
             // Prefill-first within the group (chunked prefill).
             let pre = {
@@ -1701,7 +2171,7 @@ impl Cluster {
 
         // DP engines.
         for e in 0..self.engines.len() {
-            if sc.covered[e] {
+            if sc.covered[e] || self.kernel.index.is_failed(e) {
                 continue;
             }
             let mut pre: Option<SlabHandle> = None;
@@ -1738,6 +2208,14 @@ impl Cluster {
 
         // ---- collect + publish (issue order; TP members meet in the
         // collectives, so all their commands are already in flight) --------
+        if self.watchdog.enabled {
+            // Deadline-bounded collection with per-group degradation
+            // (ISSUE 6).  The blocking path below stays verbatim so runs
+            // with the watchdog off are byte-identical to the
+            // pre-watchdog coordinator.
+            self.collect_watched(sc, recorder)?;
+            return Ok(true);
+        }
         for ii in 0..sc.issued.len() {
             let Issued { home, p, is_prefill } = sc.issued[ii];
             let mut first: Option<EngineReply> = None;
@@ -1769,6 +2247,69 @@ impl Cluster {
             }
         }
         Ok(true)
+    }
+
+    /// Watched collect (ISSUE 6): the blocking collect with every reply
+    /// bounded by the watchdog deadline.  A faulting or erroring member
+    /// *degrades its own group's step* instead of aborting the trace:
+    /// nothing is published for that group — the issued requests' state
+    /// is untouched, so the work is simply reissued once the fault pass
+    /// has recovered or dissolved whatever broke.  Survivors of a dead
+    /// peer's collective surface here as `EngineReply::Err` (their
+    /// communicator rendezvous times out) and are absorbed the same way.
+    fn collect_watched(&mut self, sc: &mut StepScratch, recorder: &mut Recorder) -> Result<()> {
+        for ii in 0..sc.issued.len() {
+            let Issued { home, p, is_prefill } = sc.issued[ii];
+            let mut first: Option<EngineReply> = None;
+            let mut degraded = false;
+            for e in self.members(home, p) {
+                match self.recv_reply_watched(e) {
+                    Ok(EngineReply::Err(msg)) => {
+                        self.step_err_streak[e] += 1;
+                        if self.step_err_streak[e] >= MAX_STEP_ERR_STREAK {
+                            crate::info!(
+                                "engine {e} exceeded the consecutive step-error budget: {msg}"
+                            );
+                            self.note_engine_fault(e, FaultKind::Timeout);
+                        } else {
+                            crate::info!("engine {e} step error (degraded): {msg}");
+                            self.fault_stats.step_errors += 1;
+                        }
+                        degraded = true;
+                    }
+                    Ok(r) => {
+                        self.step_err_streak[e] = 0;
+                        if first.is_none() {
+                            first = Some(r);
+                        }
+                    }
+                    Err(kind) => {
+                        self.note_engine_fault(e, kind);
+                        degraded = true;
+                    }
+                }
+                sc.pending_mask &= !(1u64 << e);
+            }
+            if degraded {
+                continue;
+            }
+            let now = self.now();
+            match (first.unwrap(), is_prefill) {
+                (EngineReply::LastLogits(logits), true) => {
+                    let hh = self.engine_scratch[home].issued_hs[0];
+                    self.advance_prefill(hh, &logits, now, recorder)?;
+                }
+                (EngineReply::Logits(rows), false) => {
+                    sc.publish_hs.clear();
+                    sc.publish_hs.extend_from_slice(&self.engine_scratch[home].issued_hs);
+                    for (hh, row) in sc.publish_hs.iter().zip(rows) {
+                        self.advance_decode(*hh, &row, now, recorder)?;
+                    }
+                }
+                (r, _) => bail!("unexpected engine reply {r:?}"),
+            }
+        }
+        Ok(())
     }
 
     /// Build the next prefill chunk into engine `e`'s recycled arena

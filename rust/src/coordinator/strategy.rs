@@ -99,8 +99,58 @@ impl Default for SwitchConfig {
         SwitchConfig {
             backfill: false,
             max_backfill_per_engine: 1,
-            backfill_margin: 1.0,
+            // Tuned by the margin sweep in `benches/sched_hotpath.rs`
+            // (ISSUE 6): on the stub testbed against the calibrated cost
+            // model, 1.2 admits the short-request tail that a strict 1.0
+            // margin rejects without measurably extending drains; past
+            // ~1.5 drain extensions start eating the win.
+            backfill_margin: 1.2,
             migrate: false,
+        }
+    }
+}
+
+/// Lockstep-watchdog + graceful-degradation tuning (ISSUE 6).
+///
+/// With `enabled = false` (the default) the coordinator collects engine
+/// replies with the exact blocking receives the pre-watchdog code ran —
+/// byte-identical, the same differential-gate discipline as
+/// `--switch-backfill`/`--switch-migrate`.  With it on, every reply is
+/// deadline-bounded: a stall inside the budget is ridden out (counted,
+/// not escalated), a stall past `reply_timeout + retries × backoff` or a
+/// disconnected worker escalates to a typed `EngineFault`, and the
+/// coordinator degrades gracefully — the failed engine fail-stops, its
+/// groups dissolve to the survivors, and its requests are requeued for
+/// recompute up to `max_request_retries` times before being rejected.
+///
+/// Invariant: the total reply budget must exceed the communicator
+/// timeout, so the survivors of a dead peer's collective get to report
+/// the timeout as a step error (absorbed, retried) before the watchdog
+/// would misclassify *them* as failed.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    pub enabled: bool,
+    /// First reply deadline per engine command.
+    pub reply_timeout: std::time::Duration,
+    /// Bounded retries after the first deadline; each retry extends the
+    /// deadline by a further `backoff` (linear backoff).
+    pub retries: u32,
+    pub backoff: std::time::Duration,
+    /// Times a request may be rescued off a failed engine and requeued
+    /// before it is rejected instead.
+    pub max_request_retries: u32,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            enabled: false,
+            // 5s + 10s + 15s + 20s = 50s total budget, comfortably above
+            // the 30s default communicator timeout (see invariant above).
+            reply_timeout: std::time::Duration::from_secs(5),
+            retries: 3,
+            backoff: std::time::Duration::from_secs(5),
+            max_request_retries: 2,
         }
     }
 }

@@ -1,0 +1,209 @@
+//! Deterministic fault injection for the stub engine (ISSUE 6).
+//!
+//! A [`FaultPlan`] scripts one engine's misbehavior in terms of its own
+//! *executed command count* ("steps"): stall windows, a permanent slowdown,
+//! dropped replies, and permanent death.  Plans are plain data — seeded,
+//! per-engine, and replayable — so every chaos-test failure reproduces from
+//! `(seed, engine_id)` alone.
+//!
+//! Death and dropped replies cannot be expressed as ordinary backend
+//! errors (an `EngineReply::Err` is still a reply, and the lockstep
+//! coordinator would stay perfectly healthy).  They are signalled through
+//! the sentinel error types [`EngineDown`] / [`DropReply`], which the
+//! worker loop in `engine/mod.rs` downcasts: `EngineDown` makes the worker
+//! thread exit without replying (the reply channel disconnects, exactly
+//! like a crashed process), `DropReply` swallows exactly one reply (the
+//! coordinator sees silence and must ride it out or escalate).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Nominal per-step execution time charged by the stub when a slow-step
+/// multiplier is active.  The stub's real step cost is sub-microsecond, so
+/// a multiplicative slowdown needs a baseline to multiply.
+pub const STUB_NOMINAL_STEP_S: f64 = 0.002;
+
+/// Sentinel: the engine dies permanently — the worker thread exits without
+/// sending a reply, so the coordinator observes a channel disconnect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineDown;
+
+impl std::fmt::Display for EngineDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine killed by fault plan")
+    }
+}
+
+impl std::error::Error for EngineDown {}
+
+/// Sentinel: the command's reply is dropped on the floor — the worker
+/// keeps running but sends nothing, so the coordinator observes silence
+/// for exactly one in-flight command.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DropReply;
+
+impl std::fmt::Display for DropReply {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine reply dropped by fault plan")
+    }
+}
+
+impl std::error::Error for DropReply {}
+
+/// Scripted misbehavior for one engine, indexed by that engine's executed
+/// command count (every `EngineCmd` the worker runs advances the clock by
+/// one, whatever its kind).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Steps in `[stall_at, stall_at + stall_steps)` sleep `stall_s`
+    /// seconds before executing — a transient stall the watchdog should
+    /// ride out within its retry budget.
+    pub stall_at: Option<u64>,
+    pub stall_steps: u64,
+    pub stall_s: f64,
+    /// From this step on, every command is slowed to
+    /// `slow_mult × STUB_NOMINAL_STEP_S` — permanent execution skew.
+    pub slow_from: Option<u64>,
+    pub slow_mult: f64,
+    /// Steps whose reply is dropped (executed or not, the coordinator
+    /// never hears back for that command).
+    pub drop_reply_at: Vec<u64>,
+    /// The engine dies permanently at this step: the worker thread exits
+    /// and its channels disconnect.
+    pub die_at: Option<u64>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (the default).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True when the plan injects nothing — the gate's fast path.
+    pub fn is_none(&self) -> bool {
+        self.stall_at.is_none()
+            && self.slow_from.is_none()
+            && self.drop_reply_at.is_empty()
+            && self.die_at.is_none()
+    }
+
+    /// Seeded randomized plan for one engine.  Fault probabilities are
+    /// tuned so a small cluster usually sees one or two fault kinds per
+    /// run and occasionally a fully healthy or fully dead engine — the
+    /// chaos harness must survive all of it.  Stall durations stay well
+    /// under typical chaos-test communicator timeouts so transient stalls
+    /// are distinguishable from death.
+    pub fn randomized(seed: u64, engine_id: usize) -> Self {
+        let mut rng = Rng::new(seed ^ (engine_id as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut plan = FaultPlan::default();
+        if rng.bool(0.35) {
+            plan.stall_at = Some(rng.range(2, 80));
+            plan.stall_steps = rng.range(1, 3);
+            plan.stall_s = rng.uniform(0.02, 0.08);
+        }
+        if rng.bool(0.3) {
+            plan.slow_from = Some(rng.range(2, 120));
+            plan.slow_mult = rng.uniform(2.0, 6.0);
+        }
+        if rng.bool(0.25) {
+            plan.drop_reply_at = vec![rng.range(2, 80)];
+        }
+        if rng.bool(0.25) {
+            plan.die_at = Some(rng.range(3, 160));
+        }
+        plan
+    }
+}
+
+/// Per-engine fault clock: owns the plan plus the executed-command count,
+/// and turns both into concrete actions at each step.
+#[derive(Clone, Debug, Default)]
+pub struct FaultClock {
+    plan: FaultPlan,
+    step: u64,
+}
+
+impl FaultClock {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultClock { plan, step: 0 }
+    }
+
+    /// Advance the clock by one executed command and apply the plan:
+    /// sleeps for stall/slow windows, `Err(EngineDown)` at death,
+    /// `Err(DropReply)` for dropped-reply steps.
+    pub fn tick(&mut self) -> anyhow::Result<()> {
+        if self.plan.is_none() {
+            return Ok(());
+        }
+        let step = self.step;
+        self.step += 1;
+        if let Some(k) = self.plan.die_at {
+            if step >= k {
+                return Err(anyhow::Error::new(EngineDown));
+            }
+        }
+        if let Some(at) = self.plan.stall_at {
+            if step >= at && step < at + self.plan.stall_steps && self.plan.stall_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(self.plan.stall_s));
+            }
+        }
+        if let Some(from) = self.plan.slow_from {
+            if step >= from && self.plan.slow_mult > 1.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    self.plan.slow_mult * STUB_NOMINAL_STEP_S,
+                ));
+            }
+        }
+        if self.plan.drop_reply_at.iter().any(|&d| d == step) {
+            return Err(anyhow::Error::new(DropReply));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_faults() {
+        let mut clock = FaultClock::new(FaultPlan::none());
+        for _ in 0..1000 {
+            clock.tick().unwrap();
+        }
+    }
+
+    #[test]
+    fn death_is_permanent_from_its_step() {
+        let mut clock = FaultClock::new(FaultPlan { die_at: Some(3), ..FaultPlan::none() });
+        for _ in 0..3 {
+            clock.tick().unwrap();
+        }
+        for _ in 0..5 {
+            let e = clock.tick().unwrap_err();
+            assert!(e.is::<EngineDown>());
+        }
+    }
+
+    #[test]
+    fn dropped_reply_hits_exactly_its_step() {
+        let mut clock =
+            FaultClock::new(FaultPlan { drop_reply_at: vec![2], ..FaultPlan::none() });
+        clock.tick().unwrap();
+        clock.tick().unwrap();
+        assert!(clock.tick().unwrap_err().is::<DropReply>());
+        clock.tick().unwrap();
+    }
+
+    #[test]
+    fn randomized_is_deterministic_per_seed_and_engine() {
+        let a = FaultPlan::randomized(7, 2);
+        let b = FaultPlan::randomized(7, 2);
+        assert_eq!(a, b);
+        // Engines under the same seed get independent plans (some seed will
+        // collide on "no faults at all"; 7/0 vs 7/1 differ).
+        let plans: Vec<FaultPlan> = (0..8).map(|e| FaultPlan::randomized(7, e)).collect();
+        assert!(plans.windows(2).any(|w| w[0] != w[1]));
+    }
+}

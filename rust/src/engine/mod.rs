@@ -21,14 +21,17 @@
 
 #[cfg(feature = "pjrt")]
 pub mod core;
+pub mod fault;
 pub mod stub;
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
+pub use fault::FaultPlan;
 pub use stub::StubEngine;
 
 /// One decode slot: a request with its adaptor-derived addressing.
@@ -139,36 +142,37 @@ impl EngineHandle {
                 };
                 while let Ok(cmd) = cmd_rx.recv() {
                     let resp = match cmd {
-                        EngineCmd::SetMode { p } => match backend.set_mode(p) {
-                            Ok(()) => EngineReply::Ok,
-                            Err(e) => EngineReply::Err(format!("{e:#}")),
-                        },
-                        EngineCmd::DpDecode { batch } => match backend.dp_decode(&batch) {
-                            Ok(l) => EngineReply::Logits(l),
-                            Err(e) => EngineReply::Err(format!("{e:#}")),
-                        },
-                        EngineCmd::DpPrefill { chunk } => match backend.dp_prefill(&chunk) {
-                            Ok(l) => EngineReply::LastLogits(l),
-                            Err(e) => EngineReply::Err(format!("{e:#}")),
-                        },
-                        EngineCmd::TpDecode { p, batch } => match backend.tp_decode(p, &batch) {
-                            Ok(l) => EngineReply::Logits(l),
-                            Err(e) => EngineReply::Err(format!("{e:#}")),
-                        },
-                        EngineCmd::TpPrefill { p, chunk } => match backend.tp_prefill(p, &chunk) {
-                            Ok(l) => EngineReply::LastLogits(l),
-                            Err(e) => EngineReply::Err(format!("{e:#}")),
-                        },
+                        EngineCmd::SetMode { p } => {
+                            backend.set_mode(p).map(|()| EngineReply::Ok)
+                        }
+                        EngineCmd::DpDecode { batch } => {
+                            backend.dp_decode(&batch).map(EngineReply::Logits)
+                        }
+                        EngineCmd::DpPrefill { chunk } => {
+                            backend.dp_prefill(&chunk).map(EngineReply::LastLogits)
+                        }
+                        EngineCmd::TpDecode { p, batch } => {
+                            backend.tp_decode(p, &batch).map(EngineReply::Logits)
+                        }
+                        EngineCmd::TpPrefill { p, chunk } => {
+                            backend.tp_prefill(p, &chunk).map(EngineReply::LastLogits)
+                        }
                         EngineCmd::KvMigrate { p, root, n_elems } => {
-                            match backend.migrate_kv(p, root, n_elems) {
-                                Ok(()) => EngineReply::Ok,
-                                Err(e) => EngineReply::Err(format!("{e:#}")),
-                            }
+                            backend.migrate_kv(p, root, n_elems).map(|()| EngineReply::Ok)
                         }
                         EngineCmd::Stop => {
                             let _ = reply_tx.send(EngineReply::Ok);
                             break;
                         }
+                    };
+                    let resp = match resp {
+                        Ok(r) => r,
+                        // Injected death: exit without replying — the reply
+                        // channel disconnects like a crashed process.
+                        Err(e) if e.is::<fault::EngineDown>() => break,
+                        // Injected reply loss: swallow exactly this reply.
+                        Err(e) if e.is::<fault::DropReply>() => continue,
+                        Err(e) => EngineReply::Err(format!("{e:#}")),
                     };
                     let _ = reply_tx.send(resp);
                 }
@@ -202,6 +206,18 @@ impl EngineHandle {
         Self::spawn_with(id, move || Ok(StubEngine::new(id, cfg, shapes, comm)))
     }
 
+    /// Spawn a stub worker carrying a scripted [`FaultPlan`] (ISSUE 6).
+    /// An empty plan behaves exactly like [`Self::spawn_stub`].
+    pub fn spawn_stub_faulty(
+        id: usize,
+        cfg: crate::model::ModelCfg,
+        shapes: crate::model::StaticShapes,
+        comm: Arc<crate::comm::CommunicatorPool>,
+        plan: FaultPlan,
+    ) -> Result<Self> {
+        Self::spawn_with(id, move || Ok(StubEngine::with_faults(id, cfg, shapes, comm, plan)))
+    }
+
     /// Fire a command without waiting for its reply.  Used to launch a
     /// whole TP group concurrently so members can meet in the collectives;
     /// pair every `send` with exactly one [`Self::recv`].
@@ -212,9 +228,22 @@ impl EngineHandle {
 
     /// Receive the reply for the oldest in-flight command.
     pub fn recv(&self) -> Result<EngineReply> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine {} died mid-step", self.id))
+        self.rx.recv().map_err(|_| {
+            anyhow::Error::new(crate::error::ServeError::EngineFault {
+                engine: self.id,
+                kind: crate::error::FaultKind::Disconnected,
+            })
+        })
+    }
+
+    /// Deadline-bounded receive — the lockstep watchdog's primitive.  The
+    /// caller owns retry/backoff/escalation policy; this just exposes the
+    /// channel's timed wait.
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<EngineReply, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
     }
 
     /// Synchronous call.
@@ -351,6 +380,46 @@ mod tests {
         // Wrong mode surfaces as an error, not a hang.
         e0.call(EngineCmd::SetMode { p: 1 }).unwrap();
         assert!(e0.call(EngineCmd::KvMigrate { p: 2, root: 0, n_elems: 8 }).is_err());
+    }
+
+    #[test]
+    fn fault_death_disconnects_instead_of_replying() {
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let plan = FaultPlan { die_at: Some(1), ..FaultPlan::none() };
+        let mut eng = EngineHandle::spawn_stub_faulty(0, cfg(), shapes(), comm, plan).unwrap();
+        // Step 0 executes normally.
+        assert!(matches!(eng.call(EngineCmd::SetMode { p: 1 }).unwrap(), EngineReply::Ok));
+        // Step 1 is death: no reply ever arrives; the channel disconnects.
+        eng.send(EngineCmd::SetMode { p: 1 });
+        let err = eng.recv().unwrap_err();
+        assert!(err.downcast_ref::<crate::error::ServeError>().is_some());
+        // recv_timeout on a dead engine reports Disconnected, not Timeout.
+        assert!(matches!(
+            eng.recv_timeout(Duration::from_millis(50)),
+            Err(RecvTimeoutError::Disconnected)
+        ));
+        // The worker already exited; stop() must not hang.
+        eng.stop();
+    }
+
+    #[test]
+    fn fault_dropped_reply_is_silence_then_recovery() {
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let plan = FaultPlan { drop_reply_at: vec![1], ..FaultPlan::none() };
+        let eng = EngineHandle::spawn_stub_faulty(0, cfg(), shapes(), comm, plan).unwrap();
+        assert!(matches!(eng.call(EngineCmd::SetMode { p: 1 }).unwrap(), EngineReply::Ok));
+        // Step 1's reply is dropped: a timed wait observes pure silence...
+        eng.send(EngineCmd::SetMode { p: 1 });
+        assert!(matches!(
+            eng.recv_timeout(Duration::from_millis(100)),
+            Err(RecvTimeoutError::Timeout)
+        ));
+        // ...but the worker survives and serves the next command normally.
+        eng.send(EngineCmd::SetMode { p: 1 });
+        assert!(matches!(
+            eng.recv_timeout(Duration::from_secs(2)).unwrap(),
+            EngineReply::Ok
+        ));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use anyhow::{bail, ensure, Result};
 use crate::comm::CommunicatorPool;
 use crate::model::{ModelCfg, StaticShapes};
 
+use super::fault::{FaultClock, FaultPlan};
 use super::{DecodeSlot, EngineBackend, PrefillChunk};
 
 /// Deterministic pseudo-logits argmax target for a fed (token, position).
@@ -51,6 +52,8 @@ pub struct StubEngine {
     /// payload / member-side received slice).
     migrate_send: Vec<f32>,
     migrate_recv: Vec<f32>,
+    /// Scripted-fault clock (ISSUE 6); an empty plan is a no-op.
+    fault: FaultClock,
 }
 
 impl StubEngine {
@@ -59,6 +62,18 @@ impl StubEngine {
         cfg: ModelCfg,
         shapes: StaticShapes,
         comm: Arc<CommunicatorPool>,
+    ) -> Self {
+        Self::with_faults(id, cfg, shapes, comm, FaultPlan::none())
+    }
+
+    /// Stub backend with a scripted fault plan.  Every executed command
+    /// (SetMode, steps, migration) advances the plan's step clock by one.
+    pub fn with_faults(
+        id: usize,
+        cfg: ModelCfg,
+        shapes: StaticShapes,
+        comm: Arc<CommunicatorPool>,
+        plan: FaultPlan,
     ) -> Self {
         StubEngine {
             id,
@@ -69,6 +84,7 @@ impl StubEngine {
             reduce_scratch: vec![0.0; 8],
             migrate_send: Vec::new(),
             migrate_recv: Vec::new(),
+            fault: FaultClock::new(plan),
         }
     }
 
@@ -88,10 +104,26 @@ impl StubEngine {
         group.all_reduce_sum(self.id, &mut self.reduce_scratch)?;
         Ok(())
     }
+
+    /// Ungated decode body, shared by the DP and TP entry points (the
+    /// fault clock ticks once per *command*, not per helper call).
+    fn decode_rows(&self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        ensure!(batch.len() <= self.shapes.b_dec, "batch too large");
+        Ok(batch.iter().map(|s| self.logits_row(s.token, s.pos)).collect())
+    }
+
+    fn prefill_last(&self, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        let nv = chunk.tokens.len();
+        ensure!(nv >= 1 && nv <= self.shapes.c_prefill, "chunk size {nv}");
+        ensure!(chunk.slot_ids.len() == nv, "slot ids / tokens mismatch");
+        let last = *chunk.tokens.last().unwrap();
+        Ok(self.logits_row(last, chunk.start + nv - 1))
+    }
 }
 
 impl EngineBackend for StubEngine {
     fn set_mode(&mut self, p: usize) -> Result<()> {
+        self.fault.tick()?;
         if !self.cfg.supports_tp(p) {
             bail!("model {} does not support TP degree {p}", self.cfg.name);
         }
@@ -100,31 +132,31 @@ impl EngineBackend for StubEngine {
     }
 
     fn dp_decode(&mut self, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
-        ensure!(batch.len() <= self.shapes.b_dec, "batch too large");
-        Ok(batch.iter().map(|s| self.logits_row(s.token, s.pos)).collect())
+        self.fault.tick()?;
+        self.decode_rows(batch)
     }
 
     fn dp_prefill(&mut self, chunk: &PrefillChunk) -> Result<Vec<f32>> {
-        let nv = chunk.tokens.len();
-        ensure!(nv >= 1 && nv <= self.shapes.c_prefill, "chunk size {nv}");
-        ensure!(chunk.slot_ids.len() == nv, "slot ids / tokens mismatch");
-        let last = *chunk.tokens.last().unwrap();
-        Ok(self.logits_row(last, chunk.start + nv - 1))
+        self.fault.tick()?;
+        self.prefill_last(chunk)
     }
 
     fn tp_decode(&mut self, p: usize, batch: &[DecodeSlot]) -> Result<Vec<Vec<f32>>> {
+        self.fault.tick()?;
         ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
         self.tp_sync(p)?;
-        self.dp_decode(batch)
+        self.decode_rows(batch)
     }
 
     fn tp_prefill(&mut self, p: usize, chunk: &PrefillChunk) -> Result<Vec<f32>> {
+        self.fault.tick()?;
         ensure!(self.mode_p == p, "engine {} not in TP-{p} mode", self.id);
         self.tp_sync(p)?;
-        self.dp_prefill(chunk)
+        self.prefill_last(chunk)
     }
 
     fn migrate_kv(&mut self, p: usize, root: usize, n_elems: usize) -> Result<()> {
+        self.fault.tick()?;
         ensure!(
             self.mode_p == p,
             "engine {} not in TP-{p} mode for kv migration",

@@ -1,0 +1,82 @@
+//! Typed cross-thread failure domain (ISSUE 6).
+//!
+//! The coordinator's lockstep loop talks to engine workers over bounded
+//! channels and (through them) to the communicator's shared state.  Every
+//! way that conversation can break — a worker thread dying, a reply
+//! deadline expiring, a peer panicking while holding a lock — used to
+//! surface as an `unwrap` panic or an untyped `anyhow!` string.  This
+//! module gives those failures one typed shape so callers can tell a
+//! *fault* (degrade: mark the engine failed, recover its requests) from a
+//! *bug* (propagate: clean shutdown), and so the server frontend can
+//! distinguish "this request failed" from "the cell lost an engine".
+
+use std::fmt;
+
+/// How an engine fault was detected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The reply deadline (plus the bounded retry budget) expired while
+    /// the worker was still connected — stall escalated to fail-stop.
+    Timeout,
+    /// The worker's channel disconnected: the thread exited or panicked.
+    Disconnected,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Timeout => write!(f, "reply deadline expired"),
+            FaultKind::Disconnected => write!(f, "channel disconnected (worker died)"),
+        }
+    }
+}
+
+/// Typed serving-layer failure, carried through `anyhow` so existing
+/// `Result` plumbing keeps working — callers downcast to branch on it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// An engine stopped holding up its end of the lockstep protocol.
+    /// With the watchdog enabled this is absorbed by graceful degradation;
+    /// without it, it propagates as a fatal cluster error.
+    EngineFault { engine: usize, kind: FaultKind },
+    /// A coordinator-side channel closed unexpectedly.
+    ChannelClosed { what: &'static str },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::EngineFault { engine, kind } => {
+                write!(f, "engine {engine} fault: {kind}")
+            }
+            ServeError::ChannelClosed { what } => write!(f, "channel closed: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// Whether the error means the cell can no longer serve (the frontend
+    /// should shut down cleanly rather than keep accepting connections).
+    pub fn is_fatal(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let e = anyhow::Error::new(ServeError::EngineFault {
+            engine: 3,
+            kind: FaultKind::Timeout,
+        });
+        let se = e.downcast_ref::<ServeError>().unwrap();
+        assert!(matches!(se, ServeError::EngineFault { engine: 3, .. }));
+        assert!(se.is_fatal());
+        assert!(format!("{se}").contains("engine 3"));
+    }
+}

@@ -437,6 +437,19 @@ impl KvCacheAdaptor {
         self.release_h(h)
     }
 
+    /// Stale-tolerant release (ISSUE 6): reclaim the registration if the
+    /// handle is still live, report whether anything was released.  Fault
+    /// recovery walks a request's captured handles after arbitrary
+    /// interleavings of finish/migrate/recovery — a handle that already
+    /// died (generation bumped) is a no-op here, never a panic and never
+    /// an error.
+    pub fn release_if_live_h(&mut self, h: KvHandle) -> bool {
+        if self.requests.get(h).is_none() {
+            return false;
+        }
+        self.release_h(h).is_ok()
+    }
+
     /// The mode-switch primitive measured in Table 2: binding/releasing a
     /// TP group changes no adaptor state at all — existing requests keep
     /// their layout tags, new requests are registered under the new degree.

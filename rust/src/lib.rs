@@ -25,6 +25,7 @@ pub mod config;
 pub mod control;
 pub mod coordinator;
 pub mod engine;
+pub mod error;
 pub mod json;
 pub mod kv;
 pub mod metrics;

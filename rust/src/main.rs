@@ -15,6 +15,8 @@
 //!               --listen ADDR --verbose
 //!               --switch-backfill (drain backfill + incremental settle)
 //!               --switch-migrate  (layout-preserving KV migration)
+//!               --watchdog        (lockstep watchdog + graceful degradation)
+//!               --watchdog-timeout-ms MS (first reply deadline override)
 
 use anyhow::{bail, Result};
 
@@ -68,6 +70,7 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
+    cluster.set_watchdog(cfg.make_watchdog_config());
     // Calibrate whenever something consumes the cost model on this cluster
     // (`ServeConfig::needs_calibration`): predictions must be denominated
     // in this testbed's measured seconds, not the paper-scale default's.
@@ -82,6 +85,7 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
+    cluster.set_watchdog(cfg.make_watchdog_config());
     // Same calibration rule as `serve` (`ServeConfig::needs_calibration`).
     let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
     let mut policy = cfg.make_policy_with(calibrated)?;
@@ -113,6 +117,18 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
         out.rejected.len(),
         out.switches.len()
     );
+    if cfg.watchdog {
+        let f = out.fault_stats;
+        println!(
+            "faults={} timeouts={} stalls-ridden-out={} step-errors={} recovered={} aborted={}",
+            f.engine_faults,
+            f.reply_timeouts,
+            f.stalls_ridden_out,
+            f.step_errors,
+            f.requests_recovered,
+            f.requests_aborted
+        );
+    }
     println!(
         "TTFT mean={:.1}ms p90={:.1}ms | TPOT p50={:.1}ms | queue p90={:.1}ms | peak={:.0} tok/s",
         s.mean_ttft * 1e3,

@@ -47,6 +47,26 @@ impl ReqRecord {
     }
 }
 
+/// Fault/recovery counters (ISSUE 6), reported per trace in
+/// `ClusterOutcome::fault_stats`.  All zero on a fault-free run — the
+/// faults-off differential gates assert exactly that.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Engines escalated to permanent fail-stop.
+    pub engine_faults: usize,
+    /// Watchdog deadlines that exhausted their retry budget.
+    pub reply_timeouts: usize,
+    /// Late replies that arrived within the retry budget (stall survived).
+    pub stalls_ridden_out: usize,
+    /// Error replies absorbed by retrying the step instead of bailing.
+    pub step_errors: usize,
+    /// Requests rescued off a failed engine and requeued for recompute.
+    pub requests_recovered: usize,
+    /// Requests rejected because their recovery budget ran out (or no
+    /// capacity survived to place them).
+    pub requests_aborted: usize,
+}
+
 /// O(1) handle to a request's record, returned by [`Recorder::on_arrival`]
 /// / [`Recorder::slot_of`].  Hot loops (the simulator's token emission, the
 /// coordinator's step publication) record through slots so the per-token

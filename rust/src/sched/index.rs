@@ -23,6 +23,10 @@ pub struct EngineIndex {
     unit: u64,
     idle: u64,
     draining: u64,
+    /// Fail-stopped engines (ISSUE 6): permanently excluded from every
+    /// candidate set.  A failed engine's bit is sticky — `refresh_engine`
+    /// cannot resurrect it.
+    failed: u64,
 }
 
 impl EngineIndex {
@@ -31,10 +35,16 @@ impl EngineIndex {
     }
 
     /// Coordinator-style per-engine refresh: call after any mutation of
-    /// `engine_mode[e]` or `engine_active[e]`.
+    /// `engine_mode[e]` or `engine_active[e]`.  Failed engines stay out of
+    /// every set regardless of the arguments.
     #[inline]
     pub fn refresh_engine(&mut self, e: usize, unit: bool, idle: bool) {
         let bit = 1u64 << e;
+        if self.failed & bit != 0 {
+            self.unit &= !bit;
+            self.idle &= !bit;
+            return;
+        }
         if unit {
             self.unit |= bit;
         } else {
@@ -45,6 +55,28 @@ impl EngineIndex {
         } else {
             self.idle &= !bit;
         }
+    }
+
+    /// Fail-stop engine `e`: sticky-failed, removed from the unit/idle
+    /// candidate sets immediately.  Draining membership is the group
+    /// table's to clean up (the coordinator rebuilds the draining mask
+    /// when it dissolves the group).
+    #[inline]
+    pub fn mark_failed(&mut self, e: usize) {
+        let bit = 1u64 << e;
+        self.failed |= bit;
+        self.unit &= !bit;
+        self.idle &= !bit;
+    }
+
+    #[inline]
+    pub fn is_failed(&self, e: usize) -> bool {
+        self.failed & (1u64 << e) != 0
+    }
+
+    #[inline]
+    pub fn failed_mask(&self) -> u64 {
+        self.failed
     }
 
     /// Mask-granular setters (simulator-style: a veng's `unit_bits` move
@@ -102,21 +134,21 @@ impl EngineIndex {
     /// `idle_engines`.
     #[inline]
     pub fn idle_count(&self) -> usize {
-        self.idle.count_ones() as usize
+        (self.idle & !self.failed).count_ones() as usize
     }
 
     /// Engines eligible for a fresh elastic DP bind: unit mode, not
-    /// committed to a draining group.
+    /// committed to a draining group, not failed.
     #[inline]
     pub fn dp_candidates(&self) -> u64 {
-        self.unit & !self.draining
+        self.unit & !self.draining & !self.failed
     }
 
     /// Draining unit engines — the backfill candidate set (admission still
     /// gated per engine by the horizon predicate).
     #[inline]
     pub fn backfill_candidates(&self) -> u64 {
-        self.unit & self.draining
+        self.unit & self.draining & !self.failed
     }
 }
 
@@ -149,6 +181,27 @@ mod tests {
         assert_eq!(ix.backfill_candidates(), 0b1100);
         ix.set_draining_mask(0);
         assert_eq!(ix.dp_candidates(), 0b1111);
+    }
+
+    #[test]
+    fn failed_is_sticky_and_excluded_everywhere() {
+        let mut ix = EngineIndex::new();
+        for e in 0..4 {
+            ix.refresh_engine(e, true, true);
+        }
+        ix.mark_failed(2);
+        assert!(ix.is_failed(2));
+        assert_eq!(ix.failed_mask(), 0b0100);
+        assert_eq!(ix.unit_mask(), 0b1011);
+        assert_eq!(ix.idle_count(), 3);
+        assert_eq!(ix.dp_candidates(), 0b1011);
+        // A refresh cannot resurrect a failed engine.
+        ix.refresh_engine(2, true, true);
+        assert_eq!(ix.unit_mask(), 0b1011);
+        assert_eq!(ix.idle_mask() & 0b0100, 0);
+        // Nor can it join the backfill set while draining.
+        ix.set_draining_mask(0b0100);
+        assert_eq!(ix.backfill_candidates(), 0);
     }
 
     #[test]

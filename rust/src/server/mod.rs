@@ -105,6 +105,19 @@ pub fn serve(
     for stream in listener.incoming() {
         let stream = stream?;
         if let Err(e) = handle_conn(cluster, policy, strategy, stream, &mut next_id) {
+            // A typed serving fault (ISSUE 6) means the cell itself can no
+            // longer serve — an engine fail-stopped with the watchdog off,
+            // or a coordinator channel closed.  Shut the frontend down
+            // cleanly instead of accepting connections we cannot honor.
+            // Anything else is a per-connection problem (client hung up,
+            // bad socket): log and keep serving.
+            if e.downcast_ref::<crate::error::ServeError>()
+                .map(|se| se.is_fatal())
+                .unwrap_or(false)
+            {
+                crate::info!("fatal serving error, shutting down: {e:#}");
+                return Err(e);
+            }
             crate::info!("connection error: {e:#}");
         }
     }
@@ -137,7 +150,15 @@ fn handle_conn(
             }
         };
         *next_id = req.id.max(*next_id) + 1;
-        let outcome = cluster.run_trace(vec![req.clone()], policy, strategy)?;
+        let outcome = match cluster.run_trace(vec![req.clone()], policy, strategy) {
+            Ok(o) => o,
+            Err(e) => {
+                // Tell the client its request died before propagating the
+                // cluster error (best-effort: the connection may be gone).
+                let _ = writeln!(out, "{}", error_json(req.id, "internal serving error"));
+                return Err(e);
+            }
+        };
         let rec = outcome.recorder.get(req.id);
         let (ttft, tpot) = rec
             .map(|r| {

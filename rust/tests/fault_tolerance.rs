@@ -1,0 +1,355 @@
+//! Fault-tolerance chaos harness (ISSUE 6): the coordinator under injected
+//! engine faults — stalls, slowdowns, dropped replies, permanent death —
+//! with the lockstep watchdog on.  The contract these tests enforce:
+//!
+//! * **no deadlock** — every trace finishes inside a wall-clock bound, even
+//!   with engines dying mid-switch;
+//! * **no panic** — faults surface as typed degradation, never unwraps;
+//! * **conservation** — completed + rejected ids partition the submitted
+//!   ids exactly (no request is lost, none is double-reported);
+//! * **KV invariants** — every adaptor's block accounting survives
+//!   recovery (`Cluster::check_invariants`);
+//! * **faults off ≡ baseline** — a fault-free watchdog run is
+//!   byte-identical to the pre-watchdog path.
+//!
+//! Failures reproduce from the seed alone: `CHAOS_SEED=<n> cargo test`.
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use flying_serving::baselines::StaticDpPolicy;
+use flying_serving::coordinator::policy::FlyingPolicy;
+use flying_serving::coordinator::strategy::{Strategy, WatchdogConfig};
+use flying_serving::coordinator::{Cluster, ServeRequest};
+use flying_serving::engine::FaultPlan;
+use flying_serving::kv::KvCacheAdaptor;
+use flying_serving::metrics::FaultStats;
+use flying_serving::model::{ModelCfg, StaticShapes};
+use flying_serving::workload::{synth_prompt_tokens, Priority, Scenario};
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        name: "stub-tiny".into(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_head: 8,
+        ffn_hidden: 48,
+        n_experts: 0,
+        top_k: 0,
+        // More block headroom than the fault-free suite: recovery
+        // re-prefills rescued requests, which transiently double-books
+        // capacity on the survivors.
+        n_blocks: 32,
+        block_base: 4,
+        max_ctx: 256,
+        vocab: 258,
+        pool_elems: 16 * 4 * 4 * 8,
+    }
+}
+
+fn shapes() -> StaticShapes {
+    StaticShapes { b_dec: 4, c_prefill: 16 }
+}
+
+/// Chaos-test watchdog: total reply budget 150 + 250 + 350 = 750ms, above
+/// the 400ms communicator timeout — survivors of a dead peer's collective
+/// reply `Err` (comm timeout) before the coordinator would misclassify
+/// them as failed too.
+fn chaos_watchdog() -> WatchdogConfig {
+    WatchdogConfig {
+        enabled: true,
+        reply_timeout: Duration::from_millis(150),
+        retries: 2,
+        backoff: Duration::from_millis(100),
+        max_request_retries: 2,
+    }
+}
+
+const CHAOS_COMM_TIMEOUT: Duration = Duration::from_millis(400);
+
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: synth_prompt_tokens(id, prompt_len),
+        max_new,
+        priority: Priority::Normal,
+        tp_demand: None,
+        arrival: 0.0,
+    }
+}
+
+/// Shrink a simulator-scale scenario trace onto the stub testbed: tiny
+/// prompts/outputs, arrivals compressed into ~1 wall-clock second.  The
+/// arrival *order* and the priority/TP-demand mix survive — that is what
+/// the chaos runs stress.
+fn scenario_trace(sc: Scenario, seed: u64, n: usize) -> Vec<ServeRequest> {
+    let raw = sc.generate(seed, n);
+    let span = raw.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
+    raw.iter()
+        .map(|r| ServeRequest {
+            id: r.id,
+            prompt: synth_prompt_tokens(r.id, r.prompt_len.clamp(1, 24)),
+            max_new: r.output_len.clamp(1, 6),
+            priority: r.priority,
+            tp_demand: r.tp_demand,
+            arrival: r.arrival / span,
+        })
+        .collect()
+}
+
+/// Conservation: completed ∪ rejected must equal the submitted ids with no
+/// overlap — a recovered request ends up on exactly one side.
+fn assert_conserved(tag: &str, submitted: &BTreeSet<u64>, outcome: &flying_serving::coordinator::ClusterOutcome) {
+    let done: BTreeSet<u64> = outcome.outputs.keys().copied().collect();
+    let rejected: BTreeSet<u64> = outcome.rejected.iter().copied().collect();
+    assert!(
+        done.is_disjoint(&rejected),
+        "{tag}: ids both completed and rejected: {:?}",
+        done.intersection(&rejected).collect::<Vec<_>>()
+    );
+    let all: BTreeSet<u64> = done.union(&rejected).copied().collect();
+    assert_eq!(
+        &all, submitted,
+        "{tag}: request conservation violated (lost: {:?}, invented: {:?})",
+        submitted.difference(&all).collect::<Vec<_>>(),
+        all.difference(submitted).collect::<Vec<_>>()
+    );
+}
+
+/// The tentpole gate: every scenario in the library, four engines, a fresh
+/// randomized fault plan per engine — the run must terminate, conserve
+/// every request, and keep KV accounting exact, whatever the plans do.
+#[test]
+fn chaos_randomized_all_scenarios() {
+    let seed = chaos_seed();
+    let strategies = [Strategy::Sequential, Strategy::SoftPreempt, Strategy::HardPreempt];
+    for (i, sc) in Scenario::ALL.into_iter().enumerate() {
+        let t0 = Instant::now();
+        let run_seed = seed.wrapping_add(i as u64);
+        let plans: Vec<FaultPlan> =
+            (0..4).map(|e| FaultPlan::randomized(run_seed, e)).collect();
+        let trace = scenario_trace(sc, run_seed, 36);
+        let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+        let strategy = strategies[i % strategies.len()];
+        let tag = format!("{sc} seed={run_seed:#x} strategy={}", strategy.name());
+
+        let mut c = Cluster::start_stub_with(cfg(), shapes(), 4, CHAOS_COMM_TIMEOUT, &plans)
+            .unwrap_or_else(|e| panic!("{tag}: start: {e:#}"));
+        c.set_watchdog(chaos_watchdog());
+        let out = c
+            .run_trace(trace, &mut FlyingPolicy::default(), strategy)
+            .unwrap_or_else(|e| panic!("{tag}: run_trace must degrade, not error: {e:#}"));
+
+        assert_conserved(&tag, &submitted, &out);
+        c.check_invariants()
+            .unwrap_or_else(|e| panic!("{tag}: KV invariants: {e:#}"));
+        // Fail-stop bookkeeping is consistent: engines either faulted and
+        // are masked out, or the stats say nothing happened.
+        let stats = c.fault_stats();
+        assert_eq!(
+            c.failed_mask().count_ones() as usize,
+            stats.engine_faults,
+            "{tag}: failed mask vs fault count"
+        );
+        c.shutdown(); // must not hang on dead engines
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(30),
+            "{tag}: chaos run took {elapsed:?} — lockstep stalled instead of degrading"
+        );
+    }
+}
+
+/// Engine death exactly mid-switch (the acceptance scenario): a DP
+/// resident opens a drain for an explicit-TP request, then the group's
+/// second member dies.  The group must dissolve to the survivor, the dead
+/// engine's work must be recovered or rejected — and the coordinator must
+/// come out with exact conservation and clean KV accounting.
+#[test]
+fn engine_death_mid_switch_dissolves_group_and_recovers() {
+    let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+    // Engine 1 dies a few commands in: after the residents' first steps,
+    // while the TP-2 drain (which needs both engines) is still pending.
+    plans[1].die_at = Some(6);
+
+    let mut trace = vec![req(1, 16, 10), req(2, 12, 8)];
+    let mut tp = req(3, 10, 3);
+    tp.tp_demand = Some(2);
+    tp.arrival = 0.05;
+    trace.push(tp);
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let t0 = Instant::now();
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(chaos_watchdog());
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::Sequential)
+        .expect("death mid-switch must degrade, not error");
+
+    assert_conserved("death-mid-switch", &submitted, &out);
+    let stats = c.fault_stats();
+    assert!(stats.engine_faults >= 1, "engine 1's death was never detected");
+    assert_eq!(c.failed_mask() & 0b10, 0b10, "engine 1 must be fail-stopped");
+    // The TP-2 request can never bind with one of two engines dead: it is
+    // either served before the death lands or rejected — never stranded.
+    c.check_invariants().unwrap();
+    c.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "death mid-switch stalled: {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Hard differential gate: with the watchdog enabled but no faults
+/// injected, outputs and rejections are identical to the pre-watchdog
+/// blocking path, and every fault counter stays zero.
+#[test]
+fn faults_off_is_byte_identical_to_baseline() {
+    let mk_trace = || {
+        let mut trace: Vec<ServeRequest> = (1..=4).map(|i| req(i, 8 + i as usize, 4)).collect();
+        let mut tp = req(5, 12, 5);
+        tp.tp_demand = Some(2);
+        trace.push(tp);
+        trace
+    };
+
+    // Baseline: the default cluster, watchdog off (blocking collection).
+    let mut c = Cluster::start_stub(cfg(), shapes(), 2).unwrap();
+    let base = c
+        .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::SoftPreempt)
+        .unwrap();
+    assert_eq!(c.fault_stats(), FaultStats::default());
+    c.shutdown();
+
+    // Watchdog on, empty fault plans: the watched collect path publishes
+    // results — token values, completion set, rejections must not move.
+    let mut c = Cluster::start_stub_with(cfg(), shapes(), 2, Duration::from_secs(30), &[]).unwrap();
+    c.set_watchdog(WatchdogConfig { enabled: true, ..WatchdogConfig::default() });
+    let watched = c
+        .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::SoftPreempt)
+        .unwrap();
+    assert_eq!(base.outputs, watched.outputs, "watchdog changed token values");
+    assert_eq!(base.rejected, watched.rejected);
+    assert_eq!(
+        watched.fault_stats,
+        FaultStats::default(),
+        "fault-free run must not count faults"
+    );
+    assert_eq!(c.failed_mask(), 0);
+    c.shutdown();
+}
+
+/// Satellite (d): generational KV handles tolerate staleness — releasing
+/// through a dead engine's recovery path must skip (never panic, never
+/// touch a recycled slot), and the pool accounting stays exact.
+#[test]
+fn stale_kv_handle_release_skips_never_panics() {
+    let mut ad = KvCacheAdaptor::new(cfg());
+    let h1 = ad.register(1, 1).unwrap();
+    ad.ensure_capacity_h(h1, 10).unwrap();
+    let used = ad.used_blocks();
+    assert!(used > 0);
+
+    // Live release succeeds and frees the blocks.
+    assert!(ad.release_if_live_h(h1), "live handle must release");
+    assert_eq!(ad.used_blocks(), 0);
+
+    // The handle is now stale; a second recovery pass over the same engine
+    // must no-op — even after the slot is recycled by a new request.
+    assert!(!ad.release_if_live_h(h1), "stale handle must be skipped");
+    let h2 = ad.register(2, 1).unwrap();
+    ad.ensure_capacity_h(h2, 6).unwrap();
+    let used2 = ad.used_blocks();
+    assert!(!ad.release_if_live_h(h1), "stale handle must not hit the recycled slot");
+    assert_eq!(ad.used_blocks(), used2, "stale release disturbed a live request");
+    assert!(ad.request_h(h2).is_some());
+    ad.check_invariants().unwrap();
+}
+
+/// Satellite (d), PR 3 regression: a speculative request that *completes*
+/// while the drain it rode is still open must publish its tokens and leave
+/// the group able to settle — identically with the watchdog on and off.
+#[test]
+fn mid_drain_speculative_completion_consistent_under_watchdog() {
+    // Four long DP residents hold the drain open; the explicit-TP request
+    // is short enough to finish speculatively before promotion.
+    let mk_trace = || {
+        let mut trace: Vec<ServeRequest> = (1..=4).map(|i| req(i, 8, 10)).collect();
+        let mut tp = req(5, 8, 2);
+        tp.tp_demand = Some(2);
+        trace.push(tp);
+        trace
+    };
+    let run = |watchdog: bool| {
+        let mut c = Cluster::start_stub(cfg(), shapes(), 2).unwrap();
+        if watchdog {
+            c.set_watchdog(WatchdogConfig { enabled: true, ..WatchdogConfig::default() });
+        }
+        let out = c
+            .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::SoftPreempt)
+            .unwrap();
+        c.check_invariants().unwrap();
+        c.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.outputs.len(), 5);
+    assert_eq!(off.outputs[&5].len(), 2, "speculative request must complete mid-drain");
+    assert_eq!(off.outputs, on.outputs, "watchdog changed mid-drain completion");
+    assert!(off.rejected.is_empty() && on.rejected.is_empty());
+
+    // The completed tokens match an undisturbed static run — the suite's
+    // core invariant, here across a mid-drain speculative completion.
+    let mut c = Cluster::start_stub(cfg(), shapes(), 2).unwrap();
+    let solo = c
+        .run_trace(vec![req(5, 8, 2)], &mut StaticDpPolicy, Strategy::Sequential)
+        .unwrap();
+    c.shutdown();
+    assert_eq!(off.outputs[&5], solo.outputs[&5]);
+}
+
+/// Recovery budget: a request rescued more times than
+/// `max_request_retries` is rejected, not retried forever.  With every
+/// engine eventually dead there is nowhere left to recover to — the run
+/// must still terminate with all ids accounted for.
+#[test]
+fn all_engines_dead_terminates_with_everything_accounted() {
+    let plans: Vec<FaultPlan> = (0..2)
+        .map(|e| FaultPlan { die_at: Some(4 + 2 * e as u64), ..FaultPlan::none() })
+        .collect();
+    let trace = vec![req(1, 16, 12), req(2, 12, 12)];
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let t0 = Instant::now();
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(chaos_watchdog());
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::Sequential)
+        .expect("total cluster death must degrade, not error");
+    assert_conserved("all-dead", &submitted, &out);
+    assert_eq!(c.failed_mask(), 0b11, "both engines must be fail-stopped");
+    assert!(
+        c.fault_stats().requests_aborted >= out.rejected.len(),
+        "rejections under total death must be charged to the abort counter"
+    );
+    c.check_invariants().unwrap();
+    c.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "total-death run stalled: {:?}",
+        t0.elapsed()
+    );
+}
