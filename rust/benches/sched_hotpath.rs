@@ -59,6 +59,14 @@
 //!     drain-heavy ladder of elastic requests; admitted-bind counts per
 //!     margin justify the tuned default (recorded in the JSON trail).
 //!
+//! And the flight-recorder probes (ISSUE 7):
+//!
+//! 10. **Stall attribution**: priority_storm and switch_churn under Flying
+//!     with backfill + migrate armed; the `StallBreakdown` components must
+//!     reconstruct `switch_stall_s` within 1e-9 (hard gate, in the JSON).
+//!     The coordinator alloc probe in part 2 runs with `set_trace(true)`,
+//!     so the zero-alloc gate also covers an armed journal.
+//!
 //! Usage:  cargo bench --bench sched_hotpath [-- --quick]
 //!   --quick  : 20k-request simulator trace (CI smoke; full mode uses 100k
 //!              and can take minutes in the O(n²) reference).
@@ -230,6 +238,11 @@ fn coordinator_alloc_probe() -> anyhow::Result<AllocRow> {
     // is exercised by the stub-cluster e2e tests; its plan buffers live in
     // StepScratch precisely so promotions stay allocation-free too).
     cluster.set_switch_config(SwitchConfig { migrate: true, ..SwitchConfig::default() });
+    // The flight recorder is armed too (ISSUE 7): its ring is allocated
+    // once here, before tracking starts, and an armed-but-idle journal on
+    // the steady-state decode path must record nothing and allocate
+    // nothing — the same zero-alloc gate covers it.
+    cluster.set_trace(true);
     let mut recorder = Recorder::new();
     let mut policy = StaticDpPolicy;
 
@@ -442,7 +455,67 @@ fn migrate_compare(scenario: Scenario, cm: &CostModel, n: usize) -> MigrateRow {
 }
 
 // ---------------------------------------------------------------------------
-// Part 3c — scheduling-kernel dispatch overhead (ISSUE 5)
+// Part 3c — stall attribution: the breakdown must reconstruct the
+// aggregate (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+struct StallRow {
+    scenario: &'static str,
+    drain_wait_s: f64,
+    settle_s: f64,
+    migration_s: f64,
+    backfill_recovered_s: f64,
+    aggregate_s: f64,
+    components_sum_ok: bool,
+}
+
+/// Run one switch-heavy scenario with backfill + migrate armed (the richest
+/// transition path: every stall component can be nonzero) and check the
+/// attribution identity
+/// `switch_stall_s = drain_wait + settle + migration - backfill_recovered`
+/// to 1e-9 — the components are accumulated at the exact sites the
+/// aggregate is touched, so any drift means a site was missed.
+fn stall_attribution_probe(scenario: Scenario, cm: &CostModel, n: usize) -> StallRow {
+    let trace = scenario.generate(4242, n);
+    let cfg = SimConfig {
+        switch_backfill: true,
+        switch_migrate: true,
+        ..SimConfig::default()
+    };
+    let o = simulate(SimSystem::Flying, cm, &trace, &cfg);
+    let err = (o.stall.total() - o.switch_stall_s).abs();
+    let ok = err < 1e-9;
+    if !ok {
+        eprintln!(
+            "stall attribution {scenario}: components {} vs aggregate {} (err {err:e})",
+            o.stall.total(),
+            o.switch_stall_s
+        );
+    }
+    let row = StallRow {
+        scenario: scenario.label(),
+        drain_wait_s: o.stall.drain_wait_s,
+        settle_s: o.stall.settle_s,
+        migration_s: o.stall.migration_s,
+        backfill_recovered_s: o.stall.backfill_recovered_s,
+        aggregate_s: o.switch_stall_s,
+        components_sum_ok: ok,
+    };
+    println!(
+        "stall {:18} drain-wait={:8.3} settle={:8.3} migration={:8.3} backfill-recovered={:8.3} aggregate={:8.3} sum-ok={}",
+        row.scenario,
+        row.drain_wait_s,
+        row.settle_s,
+        row.migration_s,
+        row.backfill_recovered_s,
+        row.aggregate_s,
+        row.components_sum_ok,
+    );
+    row
+}
+
+// ---------------------------------------------------------------------------
+// Part 3d — scheduling-kernel dispatch overhead (ISSUE 5)
 // ---------------------------------------------------------------------------
 
 struct KernelRow {
@@ -1004,6 +1077,17 @@ fn main() -> anyhow::Result<()> {
         if migrate_off_equiv { "PASS" } else { "FAIL" },
     );
 
+    println!("\n== sched_hotpath: stall attribution (components reconstruct aggregate) ==");
+    let stall_rows = vec![
+        stall_attribution_probe(Scenario::PriorityStorm, &cm, n_switchy),
+        stall_attribution_probe(Scenario::SwitchChurn, &cm, n_switchy),
+    ];
+    let stall_sum_ok = stall_rows.iter().all(|r| r.components_sum_ok);
+    println!(
+        "stall components sum to switch_stall_s within 1e-9: {}",
+        if stall_sum_ok { "PASS" } else { "FAIL" },
+    );
+
     println!("\n== sched_hotpath: scheduling-kernel dispatch overhead ==");
     let kernel = kernel_dispatch_probe();
     // The kernel abstraction may cost nanoseconds, never decisions: the
@@ -1092,6 +1176,21 @@ fn main() -> anyhow::Result<()> {
             )
         })
         .collect();
+    let stalls_json: Vec<String> = stall_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"scenario\":\"{}\",\"drain_wait_s\":{:.6},\"settle_s\":{:.6},\"migration_s\":{:.6},\"backfill_recovered_s\":{:.6},\"aggregate_s\":{:.6},\"components_sum_ok\":{}}}",
+                r.scenario,
+                r.drain_wait_s,
+                r.settle_s,
+                r.migration_s,
+                r.backfill_recovered_s,
+                r.aggregate_s,
+                r.components_sum_ok,
+            )
+        })
+        .collect();
     let margins_json: Vec<String> = margin_rows
         .iter()
         .map(|r| {
@@ -1103,7 +1202,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     writeln!(
         f,
-        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}},\"fault_tolerance\":{{\"watchdog_off_equivalent\":{},\"chaos\":{{\"seed\":{},\"wall_s\":{:.3},\"conserved\":{},\"invariants_ok\":{},\"engine_faults\":{},\"reply_timeouts\":{},\"stalls_ridden_out\":{},\"step_errors\":{},\"requests_recovered\":{},\"requests_aborted\":{}}},\"margin_sweep\":{{\"default_margin\":{:.2},\"monotone\":{},\"rows\":[{}]}}}}}}",
+        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"stall_attribution\":{{\"n_requests\":{},\"rows\":[{}],\"components_sum_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}},\"fault_tolerance\":{{\"watchdog_off_equivalent\":{},\"chaos\":{{\"seed\":{},\"wall_s\":{:.3},\"conserved\":{},\"invariants_ok\":{},\"engine_faults\":{},\"reply_timeouts\":{},\"stalls_ridden_out\":{},\"step_errors\":{},\"requests_recovered\":{},\"requests_aborted\":{}}},\"margin_sweep\":{{\"default_margin\":{:.2},\"monotone\":{},\"rows\":[{}]}}}}}}",
         n_requests,
         quick,
         sims.join(","),
@@ -1114,6 +1213,9 @@ fn main() -> anyhow::Result<()> {
         migrates.join(","),
         migrate_carried,
         migrate_ttft_ok,
+        n_switchy,
+        stalls_json.join(","),
+        stall_sum_ok,
         kernel.n_decisions,
         kernel.kernel_ns,
         kernel.reference_ns,
@@ -1158,6 +1260,9 @@ fn main() -> anyhow::Result<()> {
     }
     if !migrate_carried {
         anyhow::bail!("KV migration carried no tokens on a switch-heavy scenario");
+    }
+    if !stall_sum_ok {
+        anyhow::bail!("stall components do not reconstruct switch_stall_s within 1e-9");
     }
     if alloc.median_allocs != 0 {
         anyhow::bail!(

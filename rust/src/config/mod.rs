@@ -37,6 +37,15 @@ pub struct ServeConfig {
     /// First per-command reply deadline in milliseconds (retries extend
     /// it; see `WatchdogConfig`).  0 keeps the default.
     pub watchdog_timeout_ms: u64,
+    /// Flight recorder (ISSUE 7).  Off by default: no journal is
+    /// allocated and behavior is byte-identical to an untraced run; on,
+    /// both execution paths record switch/migration/backfill/fault/
+    /// control-tick events into a fixed ring, drained to JSONL after the
+    /// run.
+    pub trace: bool,
+    /// JSONL path the journal is written to when `--trace` is on (the
+    /// sim/ctrl subcommands suffix it per run).
+    pub trace_out: String,
 }
 
 impl Default for ServeConfig {
@@ -56,6 +65,8 @@ impl Default for ServeConfig {
             switch_migrate: false,
             watchdog: false,
             watchdog_timeout_ms: 0,
+            trace: false,
+            trace_out: "bench_out/trace.jsonl".into(),
         }
     }
 }
@@ -103,6 +114,8 @@ impl ServeConfig {
                 "switch-migrate" => c.switch_migrate = v == "true",
                 "watchdog" => c.watchdog = v == "true",
                 "watchdog-timeout-ms" => c.watchdog_timeout_ms = v.parse()?,
+                "trace" => c.trace = v == "true",
+                "trace-out" => c.trace_out = v.clone(),
                 _ => bail!("unknown flag --{k}"),
             }
         }
@@ -254,6 +267,17 @@ mod tests {
                 "{flags:?} must calibrate"
             );
         }
+    }
+
+    #[test]
+    fn trace_flag_parses() {
+        let (_, flags) =
+            parse_args(&s(&["--trace", "--trace-out", "out/run.jsonl"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert!(c.trace);
+        assert_eq!(c.trace_out, "out/run.jsonl");
+        // Off by default — the byte-identical discipline's anchor.
+        assert!(!ServeConfig::default().trace);
     }
 
     #[test]

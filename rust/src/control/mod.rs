@@ -29,6 +29,6 @@ pub mod telemetry;
 pub use forecast::{Ewma, Forecaster};
 pub use planner::{
     plan_decision, AdaptivePolicy, ControlConfig, ControlRuntime, Controller,
-    CostModelController, CtrlSnapshot, Plan, StaticController, ThresholdController,
+    CostModelController, CtrlSnapshot, Plan, StaticController, ThresholdController, TickInfo,
 };
 pub use telemetry::{Telemetry, WindowStats};

@@ -76,6 +76,34 @@ pub struct CtrlSnapshot {
     pub cur_plan: Plan,
 }
 
+/// Decision audit record of one control tick, kept `Copy` so storing it is
+/// output-invariant (no allocation, no behavior change).  The flight
+/// recorder (`obs::Event::CtrlTick`) carries this verbatim: telemetry
+/// snapshot, forecaster state, the plan the controller wanted, the plan
+/// actually adopted, and whether the cooldown held the change back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TickInfo {
+    /// Monotonic tick counter (1-based) — dedupe key for journal consumers
+    /// that poll rather than subscribe.
+    pub seq: usize,
+    pub now: f64,
+    pub arrival_rate: f64,
+    pub rate_fast: f64,
+    pub rate_slow: f64,
+    pub forecast_rate: f64,
+    pub burst: bool,
+    pub queue_len: usize,
+    pub kv_frac: f64,
+    pub idle_units: usize,
+    pub n_units: usize,
+    /// What the controller asked for this tick.
+    pub desired: Plan,
+    /// What the runtime is actually running after the tick.
+    pub adopted: Plan,
+    /// `desired != adopted` solely because the cooldown dwell rejected it.
+    pub held_by_cooldown: bool,
+}
+
 /// A reconfiguration controller: pure function of telemetry snapshots to
 /// plans (plus private hysteresis state).  Deterministic by contract — the
 /// same snapshot stream must yield the same plan stream, which is what
@@ -343,6 +371,7 @@ pub struct ControlRuntime {
     last_change: f64,
     plan_changes: usize,
     ticks: usize,
+    last_tick: Option<TickInfo>,
 }
 
 impl ControlRuntime {
@@ -357,6 +386,7 @@ impl ControlRuntime {
             last_change: f64::NEG_INFINITY,
             plan_changes: 0,
             ticks: 0,
+            last_tick: None,
             cfg,
         }
     }
@@ -376,6 +406,12 @@ impl ControlRuntime {
 
     pub fn ticks(&self) -> usize {
         self.ticks
+    }
+
+    /// Audit record of the most recent tick (None before the first).  The
+    /// flight recorder journals this; consumers dedupe on `seq`.
+    pub fn last_tick(&self) -> Option<TickInfo> {
+        self.last_tick
     }
 
     // ---- telemetry taps (O(1), allocation-free) --------------------------
@@ -430,11 +466,30 @@ impl ControlRuntime {
             cur_plan: self.plan,
         };
         let desired = self.controller.plan(&snap);
-        if desired != self.plan && now - self.last_change >= self.cfg.cooldown_s {
+        let changeable = now - self.last_change >= self.cfg.cooldown_s;
+        if desired != self.plan && changeable {
             self.plan = desired;
             self.last_change = now;
             self.plan_changes += 1;
         }
+        // Output-invariant audit store: `Copy` struct, no allocation.  The
+        // flight recorder picks this up when tracing is armed.
+        self.last_tick = Some(TickInfo {
+            seq: self.ticks,
+            now,
+            arrival_rate: snap.window.arrival_rate,
+            rate_fast: snap.rate_fast,
+            rate_slow: snap.rate_slow,
+            forecast_rate: snap.forecast_rate,
+            burst: snap.burst,
+            queue_len,
+            kv_frac,
+            idle_units,
+            n_units,
+            desired,
+            adopted: self.plan,
+            held_by_cooldown: desired != self.plan && !changeable,
+        });
     }
 
     /// Per-request mode decision under the current plan (steps ③ of
@@ -551,6 +606,10 @@ impl AdaptivePolicy {
 impl Policy for AdaptivePolicy {
     fn name(&self) -> &'static str {
         self.rt.controller_name()
+    }
+
+    fn last_tick(&self) -> Option<TickInfo> {
+        self.rt.last_tick()
     }
 
     fn decide(

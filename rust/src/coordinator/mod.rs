@@ -330,6 +330,15 @@ pub struct Cluster {
     /// predicate and the `CostModelController` behind `--policy adaptive`.
     migrate_cm: CostModel,
 
+    /// Flight recorder (ISSUE 7).  `Journal::off()` unless `set_trace(true)`
+    /// armed it: recording is then O(1)/allocation-free (fixed ring), and
+    /// disabled it is a branch-and-return — either way the zero-alloc
+    /// steady-state gate holds and scheduling decisions are untouched.
+    journal: crate::obs::Journal,
+    /// Last control-tick `seq` journaled (adaptive policy only), so polling
+    /// `Policy::last_tick` once per scheduling round records each tick once.
+    journal_tick_seq: usize,
+
     // hot-path arenas
     engine_scratch: Vec<EngineScratch>,
     scratch: StepScratch,
@@ -465,6 +474,8 @@ impl Cluster {
             backfill_binds: 0,
             recompute_tokens_avoided: 0,
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
+            journal: crate::obs::Journal::off(),
+            journal_tick_seq: 0,
             engine_scratch: (0..n_engines).map(|_| EngineScratch::default()).collect(),
             scratch: StepScratch::default(),
         };
@@ -518,6 +529,25 @@ impl Cluster {
     /// `backfill_margin` sweep in `sched_hotpath`).
     pub fn backfill_binds(&self) -> usize {
         self.backfill_binds
+    }
+
+    /// Arm (or disarm) the flight recorder (ISSUE 7).  Arming preallocates
+    /// the ring once; recording is then O(1)/allocation-free and observes
+    /// decisions without steering them.  Off by default — the journal is a
+    /// disabled stub and every record call is a branch-and-return.
+    pub fn set_trace(&mut self, on: bool) {
+        if on && !self.journal.is_enabled() {
+            self.journal = crate::obs::Journal::new(crate::obs::DEFAULT_JOURNAL_CAP);
+        } else if !on && self.journal.is_enabled() {
+            self.journal = crate::obs::Journal::off();
+        }
+        self.journal_tick_seq = 0;
+    }
+
+    /// The flight-recorder journal (empty and disabled unless `set_trace`
+    /// armed it).
+    pub fn journal(&self) -> &crate::obs::Journal {
+        &self.journal
     }
 
     /// Structural invariants that must hold at every safe point, fault or
@@ -793,13 +823,28 @@ impl Cluster {
             }
         }
         let dt = t_start.elapsed().as_secs_f64();
+        let t_now = self.now();
         self.switches.push(SwitchEvent {
-            t: self.now(),
+            t: t_now,
             group_start: start,
             p_from,
             p_to,
             latency_s: dt,
         });
+        let members = self
+            .members(start, width)
+            .filter(|&e| e < self.engines.len())
+            .fold(0u64, |acc, e| acc | (1u64 << e));
+        self.journal.record(
+            t_now,
+            crate::obs::Event::Promote {
+                group: start as u32,
+                p_from: p_from as u32,
+                p_to: p_to as u32,
+                members,
+                latency_s: dt,
+            },
+        );
         Ok(dt)
     }
 
@@ -826,6 +871,11 @@ impl Cluster {
                 Ok(r) => {
                     if attempt > 0 {
                         self.fault_stats.stalls_ridden_out += 1;
+                        let t_now = self.now();
+                        self.journal.record(
+                            t_now,
+                            crate::obs::Event::WatchdogRetry { engine: e as u32, attempt },
+                        );
                     }
                     return Ok(r);
                 }
@@ -833,6 +883,11 @@ impl Cluster {
                     attempt += 1;
                     if attempt > self.watchdog.retries {
                         self.fault_stats.reply_timeouts += 1;
+                        let t_now = self.now();
+                        self.journal.record(
+                            t_now,
+                            crate::obs::Event::WatchdogTimeout { engine: e as u32 },
+                        );
                         return Err(FaultKind::Timeout);
                     }
                     deadline += self.watchdog.backoff;
@@ -855,6 +910,8 @@ impl Cluster {
         self.kernel.index.mark_failed(e);
         self.pending_faults.push(e);
         self.fault_stats.engine_faults += 1;
+        let t_now = self.now();
+        self.journal.record(t_now, crate::obs::Event::EngineFault { engine: e as u32 });
     }
 
     /// Fault-aware SetMode on engine `e`; returns whether the mode RPC
@@ -903,6 +960,7 @@ impl Cluster {
 
     /// Graceful degradation for one failed engine.
     fn degrade_engine(&mut self, e: usize, recorder: &mut Recorder) -> Result<()> {
+        let recover_before = self.fault_recover.len();
         // Groups overlapping the failed engine dissolve back to their
         // surviving units.  `settled_mask`/`group_live` invariants hold
         // trivially afterwards: the group row is gone, and survivors are
@@ -975,6 +1033,12 @@ impl Cluster {
         self.engine_active[e] = resident;
         self.engine_active[e].clear();
         self.refresh_engine(e);
+        let t_now = self.now();
+        let requeued = (self.fault_recover.len() - recover_before) as u32;
+        self.journal.record(
+            t_now,
+            crate::obs::Event::EngineDegraded { engine: e as u32, requeued },
+        );
         Ok(())
     }
 
@@ -1008,7 +1072,7 @@ impl Cluster {
             g.tp_active.retain(|&x| x != h);
             g.tp_pending.retain(|&x| x != h);
         }
-        let (pri, over_budget, rec) = {
+        let (pri, over_budget, rec, rid, retries) = {
             let a = self.active.get_mut(h).expect("live");
             a.mode_p = 0;
             a.home = 0;
@@ -1024,6 +1088,8 @@ impl Cluster {
                 a.sr.priority,
                 a.retries > self.watchdog.max_request_retries,
                 a.rec,
+                a.sr.id,
+                a.retries,
             )
         };
         if over_budget {
@@ -1033,9 +1099,15 @@ impl Cluster {
             self.rejected.push(a.sr.id);
             recorder.on_finish_at(rec, now);
             self.fault_stats.requests_aborted += 1;
+            self.journal.record(now, crate::obs::Event::RequestAborted { rid });
         } else {
             self.kernel.on_event(SchedEvent::Arrival { h, priority: pri });
             self.fault_stats.requests_recovered += 1;
+            let t_now = self.now();
+            self.journal.record(
+                t_now,
+                crate::obs::Event::RequestRecovered { rid, retry: retries },
+            );
         }
         Ok(())
     }
@@ -1054,6 +1126,7 @@ impl Cluster {
             self.rejected.push(a.sr.id);
             recorder.on_finish_at(a.rec, now);
             self.fault_stats.requests_aborted += 1;
+            self.journal.record(now, crate::obs::Event::RequestAborted { rid: a.sr.id });
         }
     }
 
@@ -1075,6 +1148,8 @@ impl Cluster {
         self.recompute_tokens_avoided = 0;
         self.fault_stats = FaultStats::default();
         self.backfill_binds = 0;
+        self.journal.clear();
+        self.journal_tick_seq = 0;
         let mut next_arrival = 0usize;
         let mut idle_iters = 0usize;
 
@@ -1103,6 +1178,19 @@ impl Cluster {
 
             // ③+④+⑤ Mode determination, KV parameterization, binding.
             self.assign_waiting(policy, strategy, &mut recorder)?;
+
+            // Journal any fresh control tick the adaptive policy ran during
+            // the walk (deduped on `seq`; non-adaptive policies return None
+            // and the disabled journal makes this a branch either way).
+            if self.journal.is_enabled() {
+                if let Some(info) = policy.last_tick() {
+                    if info.seq > self.journal_tick_seq {
+                        self.journal_tick_seq = info.seq;
+                        let t_now = self.now();
+                        self.journal.record(t_now, crate::obs::Event::CtrlTick { info });
+                    }
+                }
+            }
 
             // ⑥ Execute one step on every engine/group with work.
             let stepped = self.execute_step(&mut recorder)?;
@@ -1368,11 +1456,24 @@ impl Cluster {
         let mut pick = ll.pick();
         let mut backfill = false;
         if pick.is_none() && self.switch_cfg.backfill {
-            pick = self.pick_backfill_engine(h, need);
-            if pick.is_some() {
+            if let Some((e, fit_s)) = self.pick_backfill_engine(h, need) {
+                pick = Some(e);
                 self.active.get_mut(h).expect("live").backfill = true;
                 backfill = true;
                 self.backfill_binds += 1;
+                let rid = self.active.get(h).expect("live").sr.id;
+                let horizon_s =
+                    *self.scratch.horizon_s_by_engine.get(e).unwrap_or(&0.0);
+                let t_now = self.now();
+                self.journal.record(
+                    t_now,
+                    crate::obs::Event::BackfillAdmit {
+                        rid,
+                        engine: e as u32,
+                        fit_s,
+                        horizon_s,
+                    },
+                );
             }
         }
         match pick {
@@ -1449,8 +1550,10 @@ impl Cluster {
     /// request's predicted solo completion (prefill charged twice: engines
     /// issue prefill-first, so each backfill prefill chunk also displaces a
     /// resident decode step and extends the drain) must land inside
-    /// `backfill_margin ×` the drain window.
-    fn pick_backfill_engine(&self, h: SlabHandle, need: usize) -> Option<usize> {
+    /// `backfill_margin ×` the drain window.  Returns the engine and the
+    /// request's predicted solo completion (the flight recorder logs the
+    /// fit against the drain horizon it was admitted under).
+    fn pick_backfill_engine(&self, h: SlabHandle, need: usize) -> Option<(usize, f64)> {
         let (prompt, max_new) = {
             let a = self.active.get(h)?;
             (a.sr.prompt.len(), a.sr.max_new)
@@ -1506,7 +1609,7 @@ impl Cluster {
             }
             ll.offer(e, self.engine_active[e].len());
         }
-        ll.pick()
+        ll.pick().map(|e| (e, fin))
     }
 
     fn clamp_tp(&self, p: usize) -> usize {
@@ -1646,7 +1749,29 @@ impl Cluster {
             return Ok(Placement::Tp { width: p as u32 });
         }
 
-        // Members still busy: strategy decides.
+        // Members still busy: strategy decides.  The first pending request
+        // opens the group's transition window — journal it (later joins
+        // extend the same drain, not a new one).
+        let member_bits = self
+            .members(start, p)
+            .filter(|&e| e < self.engines.len())
+            .fold(0u64, |acc, e| acc | (1u64 << e));
+        let opening = self.groups[&start].tp_pending.is_empty();
+        if opening && matches!(strategy, Strategy::Sequential | Strategy::SoftPreempt) {
+            let t_now = self.now();
+            self.journal.record(
+                t_now,
+                crate::obs::Event::DrainBegin {
+                    group: start as u32,
+                    width: p as u32,
+                    members: member_bits,
+                    // The real path predicts drain horizons per assign pass
+                    // (see `refresh_drain_horizons`); none exists yet when
+                    // the window opens, so the span's horizon is unknown.
+                    horizon_s: 0.0,
+                },
+            );
+        }
         match strategy {
             Strategy::Sequential => {
                 self.groups.get_mut(&start).unwrap().tp_pending.push(h);
@@ -1808,6 +1933,14 @@ impl Cluster {
                         self.engine_mode[e] = p;
                         self.refresh_engine(e);
                         self.groups.get_mut(&start).unwrap().settled_mask |= bit;
+                        let t_now = self.now();
+                        self.journal.record(
+                            t_now,
+                            crate::obs::Event::MemberSettle {
+                                group: start as u32,
+                                members: bit,
+                            },
+                        );
                     }
                 }
 
@@ -1930,6 +2063,15 @@ impl Cluster {
                                 })?;
                             self.adaptors[spec_home].set_seq_len_h(kh_home, kv_pos)?;
                             self.adaptors[spec_home].plan_migration(kh_home, p, &mut plan)?;
+                            let t_now = self.now();
+                            self.journal.record(
+                                t_now,
+                                crate::obs::Event::MigratePlan {
+                                    rid,
+                                    tokens: kv_pos as u64,
+                                    elems: plan.elems_per_member as u64,
+                                },
+                            );
                             self.adaptors[spec_home].apply_migration(kh_home, &plan)?;
                             self.engine_active[spec_home].retain(|&x| x != h);
                             self.refresh_engine(spec_home);
@@ -2006,6 +2148,16 @@ impl Cluster {
                                 // pass — no state violates the group
                                 // invariants in the meantime.
                                 self.fault_stats.step_errors += usize::from(!faulted);
+                                if !faulted {
+                                    let t_now = self.now();
+                                    self.journal.record(
+                                        t_now,
+                                        crate::obs::Event::StepError {
+                                            engine: start as u32,
+                                            streak: 0,
+                                        },
+                                    );
+                                }
                                 self.fault_recover.push(h);
                                 continue;
                             }
@@ -2013,6 +2165,15 @@ impl Cluster {
                                 bail!("kv migration failed: {msg}");
                             }
                             self.recompute_tokens_avoided += kv_pos;
+                            let t_now = self.now();
+                            self.journal.record(
+                                t_now,
+                                crate::obs::Event::MigrateApply {
+                                    rid,
+                                    tokens: kv_pos as u64,
+                                    cost_s: 0.0,
+                                },
+                            );
                             // pos/phase stay untouched: decode (or the
                             // remaining prefill) resumes exactly where the
                             // speculative run left off — nothing recomputed.
@@ -2274,6 +2435,12 @@ impl Cluster {
                         } else {
                             crate::info!("engine {e} step error (degraded): {msg}");
                             self.fault_stats.step_errors += 1;
+                            let t_now = self.now();
+                            let streak = self.step_err_streak[e];
+                            self.journal.record(
+                                t_now,
+                                crate::obs::Event::StepError { engine: e as u32, streak },
+                            );
                         }
                         degraded = true;
                     }

@@ -65,6 +65,13 @@ pub trait Policy: Send {
     ) -> ModeDecision {
         self.decide(prompt_len, output_len_hint, priority, tp_demand, snap)
     }
+
+    /// Audit record of the policy's most recent control tick, if it runs a
+    /// control plane (the flight recorder journals it; consumers dedupe on
+    /// `TickInfo::seq`).  Plain heuristics have no ticks — default None.
+    fn last_tick(&self) -> Option<crate::control::TickInfo> {
+        None
+    }
 }
 
 /// FLYING SERVING's workload-aware policy:

@@ -138,7 +138,11 @@ impl fmt::Display for Value {
             Value::Null => write!(f, "null"),
             Value::Bool(b) => write!(f, "{b}"),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; `{n}` would emit
+                    // unparseable output (empty-class metric means are NaN).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -408,6 +412,17 @@ mod tests {
         let src = r#"{"arr":[1,2.5,true,null,"s"],"obj":{"k":-3}}"#;
         let v = Value::parse(src).unwrap();
         assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_string(), "null");
+        // A metrics object with an empty-class NaN mean must stay parseable.
+        let v = Value::obj(vec![("mean", Value::num(f64::NAN)), ("n", Value::num(0.0))]);
+        let back = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(back.get("mean"), Some(&Value::Null));
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod json;
 pub mod kv;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod server;

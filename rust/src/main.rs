@@ -7,6 +7,7 @@
 //!   sim     — run the 8×H200 discrete-event comparison (all systems)
 //!   ctrl    — run the adaptive control-plane ablation (controllers ×
 //!             scenario library) on the simulator
+//!   trace   — summarize a flight-recorder JSONL journal (obs/SCHEMA.md)
 //!   info    — print manifest/model inventory
 //!
 //! Common flags: --artifacts DIR --model NAME --engines N
@@ -17,10 +18,13 @@
 //!               --switch-migrate  (layout-preserving KV migration)
 //!               --watchdog        (lockstep watchdog + graceful degradation)
 //!               --watchdog-timeout-ms MS (first reply deadline override)
+//!               --trace           (flight recorder; off = byte-identical run)
+//!               --trace-out PATH  (JSONL base path, suffixed per run)
 
 use anyhow::{bail, Result};
 
 use flying_serving::config::{parse_args, ServeConfig};
+use flying_serving::json::Value;
 use flying_serving::runtime::Manifest;
 use flying_serving::sim::{simulate, CostModel, HwSpec, PaperModel, SimConfig, SimSystem};
 use flying_serving::util;
@@ -45,10 +49,11 @@ fn run() -> Result<()> {
         Some("replay") => replay(&cfg),
         Some("sim") => sim(&cfg),
         Some("ctrl") => ctrl(&cfg),
+        Some("trace") => trace_summary(&pos),
         Some("info") => print_info(&cfg),
         other => {
             bail!(
-                "usage: flying-serving <serve|replay|sim|ctrl|info> [flags]\n  (got {:?})",
+                "usage: flying-serving <serve|replay|sim|ctrl|trace|info> [flags]\n  (got {:?})",
                 other
             )
         }
@@ -153,6 +158,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
         let sim_cfg = SimConfig {
             switch_backfill: cfg.switch_backfill,
             switch_migrate: cfg.switch_migrate,
+            trace: cfg.trace,
             ..SimConfig::default()
         };
         for sys in [
@@ -174,8 +180,66 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
                 o.recompute_tokens_avoided,
                 o.rejected.len()
             );
+            if let Some(j) = &o.journal {
+                let meta = Value::obj(vec![
+                    ("model", Value::str(cm.model.name)),
+                    ("system", Value::str(sys.label())),
+                    ("dropped", Value::num(j.dropped() as f64)),
+                    ("stall", o.stall.to_value()),
+                ]);
+                let tag = format!("{}_{}", cm.model.name, sys.label());
+                let path = dump_journal(&cfg.trace_out, &tag, j, &meta)?;
+                println!("  trace -> {}", path.display());
+            }
         }
     }
+    Ok(())
+}
+
+/// Derive the per-run JSONL path from the `--trace-out` base: insert a
+/// sanitized tag before the extension.
+fn trace_path(base: &str, tag: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new(base);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let ext = p.extension().and_then(|s| s.to_str()).unwrap_or("jsonl");
+    let tag: String = tag
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect();
+    p.with_file_name(format!("{stem}_{tag}.{ext}"))
+}
+
+/// Drain a journal to its per-run JSONL file (off the critical path: the
+/// run is already over).
+fn dump_journal(
+    base: &str,
+    tag: &str,
+    j: &flying_serving::obs::Journal,
+    meta: &Value,
+) -> Result<std::path::PathBuf> {
+    use std::io::Write as _;
+    let path = trace_path(base, tag);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    j.write_jsonl(&mut w, Some(meta))?;
+    w.flush()?;
+    Ok(path)
+}
+
+/// `trace FILE` — parse a flight-recorder JSONL dump (every line must
+/// round-trip through `json::parse`; the CI smoke step runs exactly this)
+/// and print the summary.
+fn trace_summary(pos: &[String]) -> Result<()> {
+    let Some(path) = pos.get(1) else {
+        bail!("usage: flying-serving trace FILE.jsonl");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let s = flying_serving::obs::summarize_jsonl(&text)?;
+    print!("{s}");
     Ok(())
 }
 
@@ -193,6 +257,7 @@ fn ctrl(cfg: &ServeConfig) -> Result<()> {
     let cm = CostModel::new(HwSpec::default(), PaperModel::llama70b());
     let n_units = cm.hw.n_gpus / cm.model.min_gpus;
     let n = cfg.n_requests.max(500);
+    let sim_cfg = SimConfig { trace: cfg.trace, ..SimConfig::default() };
     for scenario in Scenario::ALL {
         println!("== {scenario} (n={n}) ==");
         let trace = scenario.generate(cfg.seed, n);
@@ -210,7 +275,7 @@ fn ctrl(cfg: &ServeConfig) -> Result<()> {
                     ..ControlConfig::default()
                 },
             );
-            let o = simulate_adaptive(&cm, &trace, &SimConfig::default(), &mut rt);
+            let o = simulate_adaptive(&cm, &trace, &sim_cfg, &mut rt);
             let s = o.recorder.summary(None);
             let attained = o
                 .recorder
@@ -224,6 +289,17 @@ fn ctrl(cfg: &ServeConfig) -> Result<()> {
                 o.n_switches,
                 rt.plan_changes(),
             );
+            if let Some(j) = &o.journal {
+                let meta = Value::obj(vec![
+                    ("scenario", Value::str(format!("{scenario}"))),
+                    ("controller", Value::str(rt.controller_name())),
+                    ("dropped", Value::num(j.dropped() as f64)),
+                    ("stall", o.stall.to_value()),
+                ]);
+                let tag = format!("{scenario}_{}", rt.controller_name());
+                let path = dump_journal(&cfg.trace_out, &tag, j, &meta)?;
+                println!("  trace -> {}", path.display());
+            }
         }
     }
     Ok(())

@@ -406,6 +406,71 @@ mod tests {
         assert_eq!(s[2].1, 1.0); // t=2: req2 only
     }
 
+    // ---- bucket-edge coverage (ISSUE 7 satellite) ------------------------
+
+    #[test]
+    fn ttft_p90_series_buckets_by_arrival_floor() {
+        // `TimeSeries::add` buckets by floor(t / interval): an arrival
+        // exactly on a bucket boundary belongs to the *later* bucket, and
+        // untouched buckets in between render as NaN rows at i*interval.
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0, Priority::Normal, 1);
+        r.on_token(1, 0.5); // ttft 0.5, bucket 0
+        r.on_arrival(2, 1.0, Priority::Normal, 1); // exact edge -> bucket 1
+        r.on_token(2, 1.2); // ttft 0.2
+        r.on_arrival(3, 2.5, Priority::Normal, 1); // no tokens: no ttft
+        r.on_arrival(4, 3.0, Priority::Normal, 1);
+        r.on_token(4, 3.3); // ttft 0.3, bucket 3
+        let s = r.ttft_p90_series(1.0);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].0, 0.0);
+        assert!((s[0].1 - 0.5).abs() < 1e-9, "single sample p90 = value");
+        assert_eq!(s[1].0, 1.0);
+        assert!((s[1].1 - 0.2).abs() < 1e-9, "edge arrival lands in bucket 1");
+        assert_eq!(s[2].0, 2.0);
+        assert!(s[2].1.is_nan(), "tokenless request leaves its bucket empty");
+        assert_eq!(s[3].0, 3.0);
+        assert!((s[3].1 - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_series_applies_edge_events_inclusively() {
+        // Sampling is inclusive of events at the sample instant
+        // (`events[i].0 <= t`): a request finishing exactly at t and one
+        // arriving exactly at t cancel out in the same sample.
+        let mut r = Recorder::new();
+        r.on_arrival(1, 0.0, Priority::Normal, 1);
+        r.on_finish(1, 1.0);
+        r.on_arrival(2, 1.0, Priority::Normal, 1);
+        r.on_finish(2, 2.0);
+        let s = r.concurrency_series(1.0);
+        // Samples at t = 0, 1, 2 (the grid is end-inclusive).
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], (0.0, 1.0));
+        assert_eq!(s[1], (1.0, 1.0), "-1 at t=1 and +1 at t=1 both apply");
+        assert_eq!(s[2], (2.0, 0.0));
+    }
+
+    #[test]
+    fn concurrency_series_grid_starts_at_zero() {
+        // The sample grid anchors at t=0 regardless of the first arrival,
+        // and a request with no finish/token ends at its own arrival.
+        let mut r = Recorder::new();
+        r.on_arrival(1, 2.0, Priority::Normal, 1);
+        r.on_finish(1, 2.5);
+        let s = r.concurrency_series(1.0);
+        assert_eq!(s.len(), 3); // t = 0, 1, 2 (2.5 < 3)
+        assert_eq!(s[0], (0.0, 0.0));
+        assert_eq!(s[1], (1.0, 0.0));
+        assert_eq!(s[2], (2.0, 1.0), "arrival at 2.0 seen, finish at 2.5 not yet");
+        // Arrival-only record: +1/-1 at the same instant, never observed >0.
+        let mut r2 = Recorder::new();
+        r2.on_arrival(1, 1.0, Priority::Normal, 1);
+        let s2 = r2.concurrency_series(1.0);
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2[1], (1.0, 0.0));
+    }
+
     #[test]
     fn slo_attainment_counts_finished_within_budget() {
         let mut r = Recorder::new();

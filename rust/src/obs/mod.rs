@@ -1,0 +1,739 @@
+//! Flight recorder (ISSUE 7): switch-aware structured tracing shared by the
+//! real coordinator and the discrete-event simulator.
+//!
+//! Both execution paths feed one [`Journal`] — a preallocated ring buffer of
+//! typed, timestamped [`Event`]s covering the switch lifecycle (drain-begin →
+//! per-member settle → promote), KV migration plan/apply, backfill
+//! admissions with their predicted horizons, watchdog retries / degradations
+//! / fault escalations, and control-plane ticks carrying the telemetry
+//! snapshot plus the chosen plan and its rejection reason.
+//!
+//! The recording discipline mirrors `control::Telemetry`: [`Journal::record`]
+//! is O(1) and allocation-free on the hot path (fixed-capacity ring,
+//! overwrite-oldest, every event `Copy`), so an armed-but-idle recorder
+//! passes the `sched_hotpath` zero-alloc gate.  Draining to JSONL
+//! ([`Journal::write_jsonl`], schema in `obs/SCHEMA.md`) happens strictly
+//! off the critical path, after the run.
+//!
+//! On top of the journal:
+//!  * [`StallBreakdown`] — decomposes `switch_stall_s` into drain-wait /
+//!    settle / migration / backfill-recovered components whose
+//!    [`StallBreakdown::total`] must equal the aggregate within 1e-9 (the
+//!    bench hard-gates this on `priority_storm` and `switch_churn`);
+//!  * [`Journal::mode_timeline`] / [`Journal::utilization`] — per-engine
+//!    mode and busy-time timelines derived from the event stream;
+//!  * [`summarize_jsonl`] — the `trace` CLI subcommand's parser (every line
+//!    must round-trip through `json::parse`, which is the CI smoke gate);
+//!  * [`Exposition`] — Prometheus-style text exposition for the socket
+//!    server's `metrics` request.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+
+use crate::control::{Plan, TickInfo};
+use crate::json::Value;
+
+/// Default ring capacity: large enough that a bench-scale run keeps every
+/// switch-lifecycle event while the (much denser) exec stream wraps.
+/// ~16k entries × ~120 B ≈ 2 MB, allocated once when tracing is armed.
+pub const DEFAULT_JOURNAL_CAP: usize = 16_384;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One journal entry.  Every variant is `Copy` and fixed-size: recording
+/// never allocates, and the ring can overwrite in place.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A DP→TP merge opened its transition window: `members` is the chosen
+    /// instances' bitmask, `horizon_s` the predicted settle point.
+    DrainBegin {
+        group: u32,
+        width: u32,
+        members: u64,
+        horizon_s: f64,
+    },
+    /// One member settled into the target mode ahead of the stragglers
+    /// (incremental settle, backfill mode only).
+    MemberSettle { group: u32, members: u64 },
+    /// The group promoted: the mode switch executed (`latency_s` is the
+    /// span from decision to group-ready).
+    Promote {
+        group: u32,
+        p_from: u32,
+        p_to: u32,
+        members: u64,
+        latency_s: f64,
+    },
+    /// A TP group dissolved back to DP units.
+    Split { group: u32, width: u32, members: u64 },
+    /// KV migration planned for a carried request (layout-preserving
+    /// re-tag): `elems` is the per-member element count of the scatter.
+    MigratePlan { rid: u64, tokens: u64, elems: u64 },
+    /// KV migration applied: the request's cache crossed the layout change
+    /// live, `cost_s` charged to the merge horizon.
+    MigrateApply { rid: u64, tokens: u64, cost_s: f64 },
+    /// A request admitted onto a draining engine under the backfill horizon
+    /// predicate: predicted completion `fit_s` against window `horizon_s`.
+    BackfillAdmit {
+        rid: u64,
+        engine: u32,
+        fit_s: f64,
+        horizon_s: f64,
+    },
+    /// One engine/group executed a step: `members` is its instance bitmask,
+    /// `busy_s` the step duration (feeds the utilization timeline).
+    Exec {
+        members: u64,
+        busy_s: f64,
+        batch: u32,
+        prefill: bool,
+    },
+    /// One control-plane tick: telemetry snapshot, forecaster state, the
+    /// desired plan and whether adoption was held by the cooldown.
+    CtrlTick { info: TickInfo },
+    /// A late reply arrived within the watchdog's retry budget.
+    WatchdogRetry { engine: u32, attempt: u32 },
+    /// A reply deadline exhausted its retry budget (escalates to fault).
+    WatchdogTimeout { engine: u32 },
+    /// An engine was escalated to permanent fail-stop.
+    EngineFault { engine: u32 },
+    /// Graceful degradation ran for a failed engine; `requeued` requests
+    /// were rescued off it.
+    EngineDegraded { engine: u32, requeued: u32 },
+    /// A rescued request re-entered the waiting rings (`retry` so far).
+    RequestRecovered { rid: u64, retry: u32 },
+    /// A request was aborted (recovery budget exhausted, or no surviving
+    /// capacity could ever host it).
+    RequestAborted { rid: u64 },
+    /// A degraded step error was absorbed (streak below the fail-stop
+    /// escalation budget).
+    StepError { engine: u32, streak: u32 },
+}
+
+impl Event {
+    /// Stable kind tag, shared by the JSONL schema and the summaries.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::DrainBegin { .. } => "drain_begin",
+            Event::MemberSettle { .. } => "member_settle",
+            Event::Promote { .. } => "promote",
+            Event::Split { .. } => "split",
+            Event::MigratePlan { .. } => "migrate_plan",
+            Event::MigrateApply { .. } => "migrate_apply",
+            Event::BackfillAdmit { .. } => "backfill_admit",
+            Event::Exec { .. } => "exec",
+            Event::CtrlTick { .. } => "ctrl_tick",
+            Event::WatchdogRetry { .. } => "watchdog_retry",
+            Event::WatchdogTimeout { .. } => "watchdog_timeout",
+            Event::EngineFault { .. } => "engine_fault",
+            Event::EngineDegraded { .. } => "engine_degraded",
+            Event::RequestRecovered { .. } => "request_recovered",
+            Event::RequestAborted { .. } => "request_aborted",
+            Event::StepError { .. } => "step_error",
+        }
+    }
+}
+
+fn plan_fields(plan: Plan) -> (&'static str, usize) {
+    match plan {
+        Plan::Hold => ("hold", 0),
+        Plan::ScaleOut => ("scale-out", 0),
+        Plan::ScaleUp { width } => ("scale-up", width),
+    }
+}
+
+/// One event as a JSON value (`{"t":..,"ev":"..",..}` — see `SCHEMA.md`).
+pub fn event_value(t: f64, ev: &Event) -> Value {
+    let mut pairs: Vec<(&str, Value)> = vec![
+        ("t", Value::num(t)),
+        ("ev", Value::str(ev.kind())),
+    ];
+    match *ev {
+        Event::DrainBegin { group, width, members, horizon_s } => {
+            pairs.push(("group", Value::num(group as f64)));
+            pairs.push(("width", Value::num(width as f64)));
+            pairs.push(("members", Value::num(members as f64)));
+            pairs.push(("horizon_s", Value::num(horizon_s)));
+        }
+        Event::MemberSettle { group, members } => {
+            pairs.push(("group", Value::num(group as f64)));
+            pairs.push(("members", Value::num(members as f64)));
+        }
+        Event::Promote { group, p_from, p_to, members, latency_s } => {
+            pairs.push(("group", Value::num(group as f64)));
+            pairs.push(("p_from", Value::num(p_from as f64)));
+            pairs.push(("p_to", Value::num(p_to as f64)));
+            pairs.push(("members", Value::num(members as f64)));
+            pairs.push(("latency_s", Value::num(latency_s)));
+        }
+        Event::Split { group, width, members } => {
+            pairs.push(("group", Value::num(group as f64)));
+            pairs.push(("width", Value::num(width as f64)));
+            pairs.push(("members", Value::num(members as f64)));
+        }
+        Event::MigratePlan { rid, tokens, elems } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("tokens", Value::num(tokens as f64)));
+            pairs.push(("elems", Value::num(elems as f64)));
+        }
+        Event::MigrateApply { rid, tokens, cost_s } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("tokens", Value::num(tokens as f64)));
+            pairs.push(("cost_s", Value::num(cost_s)));
+        }
+        Event::BackfillAdmit { rid, engine, fit_s, horizon_s } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("fit_s", Value::num(fit_s)));
+            pairs.push(("horizon_s", Value::num(horizon_s)));
+        }
+        Event::Exec { members, busy_s, batch, prefill } => {
+            pairs.push(("members", Value::num(members as f64)));
+            pairs.push(("busy_s", Value::num(busy_s)));
+            pairs.push(("batch", Value::num(batch as f64)));
+            pairs.push(("prefill", Value::Bool(prefill)));
+        }
+        Event::CtrlTick { info } => {
+            let (want, want_w) = plan_fields(info.desired);
+            let (got, got_w) = plan_fields(info.adopted);
+            pairs.push(("arrival_rate", Value::num(info.arrival_rate)));
+            pairs.push(("rate_fast", Value::num(info.rate_fast)));
+            pairs.push(("rate_slow", Value::num(info.rate_slow)));
+            pairs.push(("forecast_rate", Value::num(info.forecast_rate)));
+            pairs.push(("burst", Value::Bool(info.burst)));
+            pairs.push(("queue_len", Value::num(info.queue_len as f64)));
+            pairs.push(("kv_frac", Value::num(info.kv_frac)));
+            pairs.push(("idle_units", Value::num(info.idle_units as f64)));
+            pairs.push(("n_units", Value::num(info.n_units as f64)));
+            pairs.push(("desired", Value::str(want)));
+            pairs.push(("desired_width", Value::num(want_w as f64)));
+            pairs.push(("adopted", Value::str(got)));
+            pairs.push(("adopted_width", Value::num(got_w as f64)));
+            pairs.push((
+                "rejected_reason",
+                if info.held_by_cooldown {
+                    Value::str("cooldown")
+                } else {
+                    Value::Null
+                },
+            ));
+        }
+        Event::WatchdogRetry { engine, attempt } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("attempt", Value::num(attempt as f64)));
+        }
+        Event::WatchdogTimeout { engine } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+        }
+        Event::EngineFault { engine } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+        }
+        Event::EngineDegraded { engine, requeued } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("requeued", Value::num(requeued as f64)));
+        }
+        Event::RequestRecovered { rid, retry } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("retry", Value::num(retry as f64)));
+        }
+        Event::RequestAborted { rid } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+        }
+        Event::StepError { engine, streak } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("streak", Value::num(streak as f64)));
+        }
+    }
+    Value::obj(pairs)
+}
+
+// ---------------------------------------------------------------------------
+// Stall attribution
+// ---------------------------------------------------------------------------
+
+/// Decomposition of `switch_stall_s` into where transition time goes.  Each
+/// component is accumulated at the exact site the aggregate is touched, so
+/// the identity
+///
+/// ```text
+/// switch_stall_s = drain_wait_s + settle_s + migration_s - backfill_recovered_s
+/// ```
+///
+/// holds to floating-point rounding (the bench hard-gates 1e-9 on
+/// `priority_storm` and `switch_churn`).  Accumulation is unconditional —
+/// four f64 adds per switch — so the breakdown is available even with the
+/// journal off.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StallBreakdown {
+    /// Chosen members idle from their own free point to the slowest
+    /// straggler's drain point.
+    pub drain_wait_s: f64,
+    /// The live-switch latency itself, per member.
+    pub settle_s: f64,
+    /// KV-transfer wait charged to the merge horizon (`switch_migrate`
+    /// carries; 0 with the flag off).
+    pub migration_s: f64,
+    /// Work backfill shells executed inside transition windows (credited
+    /// back against the aggregate; 0 with `switch_backfill` off).
+    pub backfill_recovered_s: f64,
+}
+
+impl StallBreakdown {
+    /// The aggregate the components must reconstruct.
+    pub fn total(&self) -> f64 {
+        self.drain_wait_s + self.settle_s + self.migration_s - self.backfill_recovered_s
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("drain_wait_s", Value::num(self.drain_wait_s)),
+            ("settle_s", Value::num(self.settle_s)),
+            ("migration_s", Value::num(self.migration_s)),
+            ("backfill_recovered_s", Value::num(self.backfill_recovered_s)),
+            ("total_s", Value::num(self.total())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity, overwrite-oldest event ring.  A disabled journal
+/// ([`Journal::off`]) records nothing and holds no storage, so call sites
+/// can thread `&mut Journal` unconditionally.
+#[derive(Debug)]
+pub struct Journal {
+    buf: Vec<(f64, Event)>,
+    cap: usize,
+    /// Oldest entry once the ring has wrapped (0 until then).
+    head: usize,
+    /// Entries overwritten after the ring filled.
+    dropped: u64,
+    enabled: bool,
+}
+
+impl Journal {
+    /// An armed journal with storage for `cap` events, allocated up front
+    /// (the hot path never grows it).
+    pub fn new(cap: usize) -> Self {
+        Journal {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+            enabled: cap > 0,
+        }
+    }
+
+    /// A disabled journal: `record` is a branch and a return.
+    pub fn off() -> Self {
+        Journal {
+            buf: Vec::new(),
+            cap: 0,
+            head: 0,
+            dropped: 0,
+            enabled: false,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events overwritten since the last clear (ring exhaustion indicator).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+
+    /// Record one event.  O(1), allocation-free: within capacity this is a
+    /// push into preallocated storage; once full it overwrites the oldest
+    /// entry in place.
+    #[inline]
+    pub fn record(&mut self, t: f64, ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push((t, ev));
+        } else {
+            self.buf[self.head] = (t, ev);
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Entries oldest-first.
+    pub fn iter(&self) -> impl Iterator<Item = &(f64, Event)> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Event counts by kind (cheap journal-level summary).
+    pub fn counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for (_, ev) in self.iter() {
+            *m.entry(ev.kind()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Drain to JSONL: one `{"t":..,"ev":..}` object per line, oldest
+    /// first, preceded by `meta` lines (`{"meta": ...}`) if given.  Runs
+    /// strictly off the critical path.
+    pub fn write_jsonl<W: Write>(&self, w: &mut W, meta: Option<&Value>) -> io::Result<()> {
+        if let Some(m) = meta {
+            writeln!(w, "{}", Value::obj(vec![("meta", m.clone())]))?;
+        }
+        for (t, ev) in self.iter() {
+            writeln!(w, "{}", event_value(*t, ev))?;
+        }
+        Ok(())
+    }
+
+    // ---- timelines (derived, off the hot path) ---------------------------
+
+    /// Per-engine mode timeline: `(t, width)` transitions for each of
+    /// `n_engines` unit instances, derived from the switch-lifecycle
+    /// events.  Width 0 marks a fail-stopped engine.  Engines start (and
+    /// may stay) implicitly at width 1 — the timeline records changes.
+    pub fn mode_timeline(&self, n_engines: usize) -> Vec<Vec<(f64, u32)>> {
+        let mut out: Vec<Vec<(f64, u32)>> = vec![Vec::new(); n_engines];
+        let mut group_width: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut mark = |out: &mut Vec<Vec<(f64, u32)>>, bits: u64, t: f64, w: u32| {
+            let mut b = bits;
+            while b != 0 {
+                let e = b.trailing_zeros() as usize;
+                b &= b - 1;
+                if e < n_engines {
+                    out[e].push((t, w));
+                }
+            }
+        };
+        for &(t, ev) in self.iter() {
+            match ev {
+                Event::DrainBegin { group, width, .. } => {
+                    group_width.insert(group, width);
+                }
+                Event::MemberSettle { group, members } => {
+                    let w = group_width.get(&group).copied().unwrap_or(1);
+                    mark(&mut out, members, t, w);
+                }
+                Event::Promote { group, p_to, members, .. } => {
+                    group_width.insert(group, p_to);
+                    mark(&mut out, members, t, p_to);
+                }
+                Event::Split { group, members, .. } => {
+                    group_width.remove(&group);
+                    mark(&mut out, members, t, 1);
+                }
+                Event::EngineFault { engine } => {
+                    if (engine as usize) < n_engines {
+                        out[engine as usize].push((t, 0));
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Per-engine busy seconds bucketed by `bucket_s`, from `Exec` events
+    /// (a group step charges each member instance its full duration).
+    pub fn utilization(&self, n_engines: usize, bucket_s: f64) -> Vec<Vec<f64>> {
+        assert!(bucket_s > 0.0);
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); n_engines];
+        for &(t, ev) in self.iter() {
+            if let Event::Exec { members, busy_s, .. } = ev {
+                let idx = (t / bucket_s).floor().max(0.0) as usize;
+                let mut b = members;
+                while b != 0 {
+                    let e = b.trailing_zeros() as usize;
+                    b &= b - 1;
+                    if e < n_engines {
+                        if out[e].len() <= idx {
+                            out[e].resize(idx + 1, 0.0);
+                        }
+                        out[e][idx] += busy_s;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-file summary (`trace` CLI subcommand, CI smoke parser)
+// ---------------------------------------------------------------------------
+
+/// Aggregate view of a JSONL journal file.  Built through `json::parse` on
+/// every line, so summarizing doubles as the round-trip validity check.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    pub lines: usize,
+    pub meta_lines: usize,
+    pub events: usize,
+    pub t_min: f64,
+    pub t_max: f64,
+    pub by_kind: BTreeMap<String, usize>,
+    pub promote_latency_sum_s: f64,
+    pub promotes: usize,
+    pub stall_reclaimed_s: f64,
+}
+
+impl TraceSummary {
+    pub fn mean_promote_latency_s(&self) -> f64 {
+        if self.promotes == 0 {
+            0.0
+        } else {
+            self.promote_latency_sum_s / self.promotes as f64
+        }
+    }
+}
+
+impl std::fmt::Display for TraceSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "journal: {} events ({} lines, {} meta) over [{:.3}s, {:.3}s]",
+            self.events, self.lines, self.meta_lines, self.t_min, self.t_max
+        )?;
+        for (kind, n) in &self.by_kind {
+            writeln!(f, "  {kind:18} {n}")?;
+        }
+        if self.promotes > 0 {
+            writeln!(
+                f,
+                "  mean promote latency: {:.4}s over {} promotions",
+                self.mean_promote_latency_s(),
+                self.promotes
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a JSONL journal dump and summarize it.  Every non-empty line must
+/// be valid JSON (an event object with `t`/`ev`, or a `{"meta":..}` line) —
+/// anything else is an error, which is exactly what the CI trace-smoke step
+/// asserts.
+pub fn summarize_jsonl(text: &str) -> anyhow::Result<TraceSummary> {
+    let mut s = TraceSummary {
+        t_min: f64::INFINITY,
+        t_max: f64::NEG_INFINITY,
+        ..TraceSummary::default()
+    };
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Value::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        s.lines += 1;
+        if v.get("meta").is_some() {
+            s.meta_lines += 1;
+            continue;
+        }
+        let t = v.f64_field("t").map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        let kind = v
+            .str_field("ev")
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        s.events += 1;
+        s.t_min = s.t_min.min(t);
+        s.t_max = s.t_max.max(t);
+        *s.by_kind.entry(kind.to_string()).or_insert(0) += 1;
+        if kind == "promote" {
+            s.promotes += 1;
+            s.promote_latency_sum_s += v.get("latency_s").and_then(|x| x.as_f64()).unwrap_or(0.0);
+        }
+    }
+    if s.events == 0 {
+        s.t_min = 0.0;
+        s.t_max = 0.0;
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus-style exposition
+// ---------------------------------------------------------------------------
+
+/// Minimal Prometheus text-format builder (counters and gauges, no labels)
+/// behind the socket server's `metrics` request.
+#[derive(Default)]
+pub struct Exposition {
+    out: String,
+}
+
+impl Exposition {
+    pub fn new() -> Self {
+        Exposition::default()
+    }
+
+    fn push(&mut self, name: &str, mtype: &str, help: &str, value: f64) {
+        use std::fmt::Write as _;
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {mtype}");
+        if value.is_finite() && value.fract() == 0.0 && value.abs() < 1e15 {
+            let _ = writeln!(self.out, "{name} {}", value as i64);
+        } else {
+            let _ = writeln!(self.out, "{name} {value}");
+        }
+    }
+
+    pub fn counter(mut self, name: &str, help: &str, value: f64) -> Self {
+        self.push(name, "counter", help, value);
+        self
+    }
+
+    pub fn gauge(mut self, name: &str, help: &str, value: f64) -> Self {
+        self.push(name, "gauge", help, value);
+        self
+    }
+
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(engine: u32) -> Event {
+        Event::EngineFault { engine }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_in_order() {
+        let mut j = Journal::new(3);
+        for i in 0..5 {
+            j.record(i as f64, ev(i));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.dropped(), 2);
+        let ts: Vec<f64> = j.iter().map(|&(t, _)| t).collect();
+        assert_eq!(ts, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        let mut j = Journal::off();
+        j.record(1.0, ev(0));
+        assert!(j.is_empty());
+        assert!(!j.is_enabled());
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn record_within_capacity_never_reallocates() {
+        let mut j = Journal::new(64);
+        let ptr = j.buf.as_ptr();
+        for i in 0..200 {
+            j.record(i as f64, ev(0));
+        }
+        assert_eq!(j.buf.as_ptr(), ptr, "ring storage must never move");
+    }
+
+    #[test]
+    fn jsonl_roundtrips_through_parser() {
+        let mut j = Journal::new(16);
+        j.record(
+            0.5,
+            Event::DrainBegin { group: 7, width: 4, members: 0b1111, horizon_s: 1.25 },
+        );
+        j.record(
+            1.25,
+            Event::Promote { group: 7, p_from: 1, p_to: 4, members: 0b1111, latency_s: 0.75 },
+        );
+        j.record(2.0, Event::RequestAborted { rid: 42 });
+        let mut buf = Vec::new();
+        j.write_jsonl(&mut buf, Some(&Value::str("unit-test"))).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let s = summarize_jsonl(&text).unwrap();
+        assert_eq!(s.events, 3);
+        assert_eq!(s.meta_lines, 1);
+        assert_eq!(s.by_kind["promote"], 1);
+        assert!((s.mean_promote_latency_s() - 0.75).abs() < 1e-12);
+        assert!((s.t_min - 0.5).abs() < 1e-12 && (s.t_max - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summarize_rejects_non_json_lines() {
+        assert!(summarize_jsonl("{\"t\":1,\"ev\":\"split\"}\nnot json\n").is_err());
+    }
+
+    #[test]
+    fn stall_breakdown_identity() {
+        let b = StallBreakdown {
+            drain_wait_s: 3.0,
+            settle_s: 0.5,
+            migration_s: 0.25,
+            backfill_recovered_s: 1.0,
+        };
+        assert!((b.total() - 2.75).abs() < 1e-12);
+        let v = b.to_value();
+        assert!((v.f64_field("total_s").unwrap() - 2.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_timeline_tracks_lifecycle() {
+        let mut j = Journal::new(16);
+        j.record(
+            0.0,
+            Event::DrainBegin { group: 9, width: 2, members: 0b11, horizon_s: 1.0 },
+        );
+        j.record(0.4, Event::MemberSettle { group: 9, members: 0b01 });
+        j.record(
+            1.0,
+            Event::Promote { group: 9, p_from: 1, p_to: 2, members: 0b11, latency_s: 1.0 },
+        );
+        j.record(3.0, Event::Split { group: 9, width: 2, members: 0b11 });
+        j.record(4.0, Event::EngineFault { engine: 1 });
+        let tl = j.mode_timeline(2);
+        assert_eq!(tl[0], vec![(0.4, 2), (1.0, 2), (3.0, 1)]);
+        assert_eq!(tl[1], vec![(1.0, 2), (3.0, 1), (4.0, 0)]);
+    }
+
+    #[test]
+    fn utilization_buckets_group_steps_per_member() {
+        let mut j = Journal::new(16);
+        j.record(0.2, Event::Exec { members: 0b11, busy_s: 0.5, batch: 4, prefill: false });
+        j.record(1.7, Event::Exec { members: 0b01, busy_s: 0.25, batch: 1, prefill: true });
+        let u = j.utilization(2, 1.0);
+        assert!((u[0][0] - 0.5).abs() < 1e-12);
+        assert!((u[0][1] - 0.25).abs() < 1e-12);
+        assert!((u[1][0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exposition_renders_prometheus_text() {
+        let text = Exposition::new()
+            .counter("flying_requests_total", "Requests admitted.", 42.0)
+            .gauge("flying_kv_frac", "KV utilization.", 0.5)
+            .render();
+        assert!(text.contains("# TYPE flying_requests_total counter"));
+        assert!(text.contains("flying_requests_total 42\n"));
+        assert!(text.contains("flying_kv_frac 0.5\n"));
+    }
+}

@@ -9,6 +9,10 @@
 //!
 //! Prompts are byte-level tokenized (vocab = 256 bytes + BOS/EOS), matching
 //! the synthetic-weight models.
+//!
+//! A line consisting of the bare word `metrics` (not JSON) is answered with
+//! a Prometheus text exposition (ISSUE 7, [`metrics_text`]) instead of an
+//! inference reply; the connection then keeps serving requests.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -87,6 +91,41 @@ pub fn response_json(id: u64, tokens: &[i32], ttft_ms: f64, tpot_ms: f64) -> Str
     .to_string()
 }
 
+/// Frontend counters behind the `metrics` exposition, accumulated across
+/// every connection of one `serve` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Request lines that parsed and were submitted to the cluster.
+    pub requests_total: u64,
+    /// Tokens generated across all completed requests.
+    pub tokens_total: u64,
+    /// Requests the cluster rejected (capacity).
+    pub rejected_total: u64,
+    /// Malformed request lines answered with an error reply.
+    pub bad_lines_total: u64,
+    /// Mode switches executed while serving.
+    pub switches_total: u64,
+}
+
+/// Render the Prometheus text exposition for the `metrics` request: the
+/// frontend's serving counters plus the cluster's fault-tolerance stats.
+/// Pure — unit tests exercise it without a socket.
+pub fn metrics_text(s: &ServerStats, f: &crate::metrics::FaultStats) -> String {
+    crate::obs::Exposition::new()
+        .counter("flying_requests_total", "Request lines submitted to the cluster.", s.requests_total as f64)
+        .counter("flying_tokens_total", "Tokens generated across completed requests.", s.tokens_total as f64)
+        .counter("flying_rejected_total", "Requests rejected for capacity.", s.rejected_total as f64)
+        .counter("flying_bad_lines_total", "Malformed request lines answered with an error.", s.bad_lines_total as f64)
+        .counter("flying_switches_total", "Mode switches executed while serving.", s.switches_total as f64)
+        .counter("flying_engine_faults_total", "Engines escalated to permanent fail-stop.", f.engine_faults as f64)
+        .counter("flying_reply_timeouts_total", "Watchdog deadlines that exhausted retries.", f.reply_timeouts as f64)
+        .counter("flying_stalls_ridden_out_total", "Late replies absorbed within the retry budget.", f.stalls_ridden_out as f64)
+        .counter("flying_step_errors_total", "Degraded step errors absorbed by retry.", f.step_errors as f64)
+        .counter("flying_requests_recovered_total", "Requests rescued off failed engines.", f.requests_recovered as f64)
+        .counter("flying_requests_aborted_total", "Requests aborted after recovery exhaustion.", f.requests_aborted as f64)
+        .render()
+}
+
 /// Serve forever on `addr`.  Each connection may send multiple request
 /// lines; responses are written back in completion order.
 pub fn serve(
@@ -102,9 +141,10 @@ pub fn serve(
         strategy.name()
     );
     let mut next_id = 1u64;
+    let mut stats = ServerStats::default();
     for stream in listener.incoming() {
         let stream = stream?;
-        if let Err(e) = handle_conn(cluster, policy, strategy, stream, &mut next_id) {
+        if let Err(e) = handle_conn(cluster, policy, strategy, stream, &mut next_id, &mut stats) {
             // A typed serving fault (ISSUE 6) means the cell itself can no
             // longer serve — an engine fail-stopped with the watchdog off,
             // or a coordinator channel closed.  Shut the frontend down
@@ -130,6 +170,7 @@ fn handle_conn(
     strategy: Strategy,
     stream: TcpStream,
     next_id: &mut u64,
+    stats: &mut ServerStats,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -142,14 +183,23 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
+        if line.trim() == "metrics" {
+            // Exposition request: answer with the Prometheus text block and
+            // keep the connection serving.  Checked before the JSON parse —
+            // a bare word would otherwise be a malformed request.
+            out.write_all(metrics_text(stats, &cluster.fault_stats()).as_bytes())?;
+            continue;
+        }
         let req = match parse_request(line.trim(), *next_id) {
             Ok(r) => r,
             Err(e) => {
+                stats.bad_lines_total += 1;
                 writeln!(out, "{}", error_json(line_id(line.trim(), *next_id), &format!("{e:#}")))?;
                 continue;
             }
         };
         *next_id = req.id.max(*next_id) + 1;
+        stats.requests_total += 1;
         let outcome = match cluster.run_trace(vec![req.clone()], policy, strategy) {
             Ok(o) => o,
             Err(e) => {
@@ -168,9 +218,16 @@ fn handle_conn(
                 )
             })
             .unwrap_or((f64::NAN, f64::NAN));
+        stats.switches_total += outcome.switches.len() as u64;
         match outcome.outputs.get(&req.id) {
-            Some(tokens) => writeln!(out, "{}", response_json(req.id, tokens, ttft, tpot))?,
-            None => writeln!(out, "{}", error_json(req.id, "rejected (capacity)"))?,
+            Some(tokens) => {
+                stats.tokens_total += tokens.len() as u64;
+                writeln!(out, "{}", response_json(req.id, tokens, ttft, tpot))?
+            }
+            None => {
+                stats.rejected_total += 1;
+                writeln!(out, "{}", error_json(req.id, "rejected (capacity)"))?
+            }
         }
     }
 }
@@ -229,6 +286,43 @@ mod tests {
         // Messages with JSON-hostile characters still serialize cleanly.
         let s = error_json(1, "bad \"quote\"\nline");
         assert!(Value::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn metrics_exposition_renders_all_counters() {
+        let stats = ServerStats {
+            requests_total: 12,
+            tokens_total: 340,
+            rejected_total: 2,
+            bad_lines_total: 1,
+            switches_total: 3,
+        };
+        let faults = crate::metrics::FaultStats {
+            engine_faults: 1,
+            reply_timeouts: 2,
+            stalls_ridden_out: 4,
+            step_errors: 5,
+            requests_recovered: 6,
+            requests_aborted: 0,
+        };
+        let text = metrics_text(&stats, &faults);
+        // Prometheus text format: every family gets HELP + TYPE + a sample.
+        for (name, val) in [
+            ("flying_requests_total", 12),
+            ("flying_tokens_total", 340),
+            ("flying_rejected_total", 2),
+            ("flying_bad_lines_total", 1),
+            ("flying_switches_total", 3),
+            ("flying_engine_faults_total", 1),
+            ("flying_reply_timeouts_total", 2),
+            ("flying_stalls_ridden_out_total", 4),
+            ("flying_step_errors_total", 5),
+            ("flying_requests_recovered_total", 6),
+            ("flying_requests_aborted_total", 0),
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} counter")), "{name} TYPE");
+            assert!(text.contains(&format!("{name} {val}\n")), "{name} sample");
+        }
     }
 
     #[test]

@@ -93,6 +93,14 @@ pub struct SimConfig {
     /// gathered back to unit engines when the group splits.
     /// `SimOutcome::recompute_tokens_avoided` counts the tokens carried.
     pub switch_migrate: bool,
+    /// Flight recorder (ISSUE 7).  Off (default): no journal is allocated
+    /// and every `record` call is a branch-and-return — byte-identical
+    /// outcomes and metrics.  On: switch lifecycle, migration, backfill
+    /// admission, exec, and control-tick events land in a fixed-capacity
+    /// ring (`obs::DEFAULT_JOURNAL_CAP`), surfaced as
+    /// `SimOutcome::journal`.  Recording is O(1)/allocation-free either
+    /// way; only decisions already made are observed, never steered.
+    pub trace: bool,
 }
 
 impl Default for SimConfig {
@@ -103,6 +111,7 @@ impl Default for SimConfig {
             heartbeat_s: 0.004,
             switch_backfill: false,
             switch_migrate: false,
+            trace: false,
         }
     }
 }
@@ -141,10 +150,12 @@ pub struct SimOutcome {
     pub n_switches: usize,
     /// Switch-stall engine-seconds: idle instance-time spent inside
     /// merge-transition windows (from each chosen member's free point to
-    /// the group's settle point), minus the work backfill shells executed
-    /// inside those windows.  With `switch_backfill` off nothing is
-    /// credited back, so off-vs-on on the same trace measures exactly the
-    /// capacity the drain barrier wastes.  (The loop reference does not
+    /// the group's settle point), plus KV-migration transfer time charged
+    /// to the horizon when `switch_migrate` carries residents, minus the
+    /// work backfill shells executed inside those windows.  With
+    /// `switch_backfill` off nothing is credited back, so off-vs-on on the
+    /// same trace measures exactly the capacity the drain barrier wastes.
+    /// `stall` decomposes this aggregate.  (The loop reference does not
     /// track this; `outcomes_equivalent` ignores it.)
     pub switch_stall_s: f64,
     /// Tokens of cached KV carried live across a DP→TP layout flip by
@@ -155,6 +166,15 @@ pub struct SimOutcome {
     /// split-time inverse gather is not re-counted.  Always 0 with the flag
     /// off (and in the loop reference); `outcomes_equivalent` ignores it.
     pub recompute_tokens_avoided: usize,
+    /// Stall attribution (ISSUE 7): where `switch_stall_s` goes.  Each
+    /// component accumulates at the exact site the aggregate is touched, so
+    /// `stall.total()` reconstructs `switch_stall_s` to FP rounding (the
+    /// bench hard-gates 1e-9).  Always populated — four f64 adds per
+    /// switch, no flag.  (The loop reference leaves it zeroed;
+    /// `outcomes_equivalent` ignores it.)
+    pub stall: crate::obs::StallBreakdown,
+    /// Flight-recorder journal when `SimConfig::trace` is on, else `None`.
+    pub journal: Option<crate::obs::Journal>,
 }
 
 /// Outcome equivalence between two simulator runs: identical completion
@@ -439,6 +459,12 @@ fn simulate_inner(
     let mut n_switches = 0usize;
     let mut switch_stall_s = 0.0f64;
     let mut recompute_avoided = 0usize;
+    let mut stall = crate::obs::StallBreakdown::default();
+    let mut journal = if cfg.trace {
+        crate::obs::Journal::new(crate::obs::DEFAULT_JOURNAL_CAP)
+    } else {
+        crate::obs::Journal::off()
+    };
     let backfill = cfg.switch_backfill;
     let migrate = cfg.switch_migrate;
     let mut policy = crate::coordinator::policy::FlyingPolicy::default();
@@ -540,6 +566,13 @@ fn simulate_inner(
                     // longer unit, no longer draining (idle stays cleared —
                     // the group is executing its TP work).
                     let shell_bits = vengs[si].unit_bits;
+                    journal.record(
+                        t,
+                        crate::obs::Event::MemberSettle {
+                            group: vengs[si].merge_into,
+                            members: shell_bits,
+                        },
+                    );
                     vengs[si].unit_bits = 0;
                     kernel.index.set_draining(shell_bits, false);
                     kernel.index.set_unit(shell_bits, false);
@@ -564,6 +597,14 @@ fn simulate_inner(
                             // transition window, so no extra charge here).
                             q.migrated = true;
                             recompute_avoided += kv_tokens(q);
+                            journal.record(
+                                t,
+                                crate::obs::Event::MigrateApply {
+                                    rid: q.id,
+                                    tokens: kv_tokens(q) as u64,
+                                    cost_s: 0.0,
+                                },
+                            );
                         } else {
                             q.paused = true;
                         }
@@ -646,6 +687,9 @@ fn simulate_inner(
                     let kv_frac =
                         if kv_cap == 0 { 0.0 } else { kv_used as f64 / kv_cap as f64 };
                     rt.tick(t, kernel.rings.len(), kv_frac, idle, n_inst);
+                    if let Some(info) = rt.last_tick() {
+                        journal.record(t, crate::obs::Event::CtrlTick { info });
+                    }
                 }
             }
 
@@ -803,6 +847,15 @@ fn simulate_inner(
                                             debug_assert!(was_shell);
                                             vengs[vi].bf_bound = fin;
                                             reqs[riu].backfill = true;
+                                            journal.record(
+                                                t,
+                                                crate::obs::Event::BackfillAdmit {
+                                                    rid: reqs[riu].id,
+                                                    engine: vengs[vi].handle,
+                                                    fit_s: fin,
+                                                    horizon_s: vengs[vi].settle_at,
+                                                },
+                                            );
                                         }
                                         let used = kv_tokens(&reqs[riu]);
                                         let v = &mut vengs[vi];
@@ -903,6 +956,8 @@ fn simulate_inner(
                                     cm,
                                     migrate,
                                     &mut recompute_avoided,
+                                    &mut stall,
+                                    &mut journal,
                                 ) {
                                     Some(bind_t) => {
                                         rec.on_first_sched_at(reqs[riu].rec, bind_t);
@@ -951,6 +1006,7 @@ fn simulate_inner(
                         // Work executed inside the transition window is
                         // reclaimed stall.
                         switch_stall_s -= dur;
+                        stall.backfill_recovered_s += dur;
                     }
                     vengs[vi].free_at = done_t;
                     let q = &mut reqs[rid as usize];
@@ -994,6 +1050,15 @@ fn simulate_inner(
                         }
                     }
                     vengs[vi].kv_used += batch.len();
+                    journal.record(
+                        t,
+                        crate::obs::Event::Exec {
+                            members: vengs[vi].unit_bits,
+                            busy_s: dur,
+                            batch: (batch.len() + 1) as u32,
+                            prefill: true,
+                        },
+                    );
                 } else {
                     // SP (Shift) executes token-parallel across all
                     // instances, so its effective batch is cluster-wide.
@@ -1037,6 +1102,7 @@ fn simulate_inner(
                             continue;
                         }
                         switch_stall_s -= dur;
+                        stall.backfill_recovered_s += dur;
                     }
                     vengs[vi].free_at = done_t;
                     if let Some(rt) = ctrl.as_mut() {
@@ -1054,6 +1120,15 @@ fn simulate_inner(
                         }
                     }
                     vengs[vi].kv_used += batch.len();
+                    journal.record(
+                        t,
+                        crate::obs::Event::Exec {
+                            members: vengs[vi].unit_bits,
+                            busy_s: dur,
+                            batch: batch.len() as u32,
+                            prefill: false,
+                        },
+                    );
                 }
                 // Schedule the engine-free event for the step just issued.
                 {
@@ -1196,6 +1271,14 @@ fn simulate_inner(
                             split_buf.push(unit);
                         }
                         n_switches += 1;
+                        journal.record(
+                            t,
+                            crate::obs::Event::Split {
+                                group: v.handle,
+                                width: v.m as u32,
+                                members: v.unit_bits,
+                            },
+                        );
                         split_any = true;
                     } else {
                         split_buf.push(v);
@@ -1225,6 +1308,8 @@ fn simulate_inner(
         n_switches,
         switch_stall_s,
         recompute_tokens_avoided: recompute_avoided,
+        stall,
+        journal: if cfg.trace { Some(journal) } else { None },
     }
 }
 
@@ -1253,6 +1338,8 @@ fn bind_tp_sim(
     cm: &CostModel,
     migrate: bool,
     recompute_avoided: &mut usize,
+    stall: &mut crate::obs::StallBreakdown,
+    journal: &mut crate::obs::Journal,
 ) -> Option<f64> {
     let riu = ri as usize;
     let total = reqs[riu].prompt_len + reqs[riu].output_len;
@@ -1329,14 +1416,32 @@ fn bind_tp_sim(
     // from its own free point — that window is the switch stall (per
     // member, in instance-seconds); backfill reclaims it by crediting work
     // shells execute inside the window.
-    let horizon = unit_scratch
+    let drain_done = unit_scratch
         .iter()
         .map(|&i| vengs[i].free_at)
-        .fold(t, f64::max)
-        + live_switch_s;
+        .fold(t, f64::max);
+    let horizon = drain_done + live_switch_s;
     for &i in unit_scratch.iter() {
         *switch_stall_s += horizon - vengs[i].free_at.max(t);
+        // Attribution mirror of the aggregate charge, term by term: the
+        // member waits for the slowest straggler (drain-wait), then rides
+        // the live switch (settle).  Same inputs, so the components
+        // reconstruct the aggregate to FP rounding.
+        stall.drain_wait_s += drain_done - vengs[i].free_at.max(t);
+        stall.settle_s += live_switch_s;
     }
+    let member_bits = unit_scratch
+        .iter()
+        .fold(0u64, |acc, &i| acc | vengs[i].unit_bits);
+    journal.record(
+        t,
+        crate::obs::Event::DrainBegin {
+            group: *next_handle,
+            width: want_m as u32,
+            members: member_bits,
+            horizon_s: horizon,
+        },
+    );
 
     if backfill {
         // Drain-stall elimination: chosen members become backfill shells
@@ -1389,6 +1494,16 @@ fn bind_tp_sim(
             handle_pos[v.handle as usize] = idx;
         }
         *n_switches += 1;
+        journal.record(
+            horizon,
+            crate::obs::Event::Promote {
+                group: merged_handle,
+                p_from: 1,
+                p_to: want_m as u32,
+                members: member_bits,
+                latency_s: horizon - t,
+            },
+        );
         return Some(horizon);
     }
 
@@ -1423,7 +1538,16 @@ fn bind_tp_sim(
             {
                 q.migrated = true;
                 *recompute_avoided += kv_tokens(q);
-                migrate_cost += cm.migrate_t(kv_tokens(q), g_new);
+                let cost = cm.migrate_t(kv_tokens(q), g_new);
+                migrate_cost += cost;
+                journal.record(
+                    t,
+                    crate::obs::Event::MigrateApply {
+                        rid: q.id,
+                        tokens: kv_tokens(q) as u64,
+                        cost_s: cost,
+                    },
+                );
             } else {
                 q.paused = true;
             }
@@ -1436,6 +1560,14 @@ fn bind_tp_sim(
     index.set_unit(merged.unit_bits, false);
     index.set_idle(merged.unit_bits, false);
     merged.free_at = horizon + migrate_cost;
+    if migrate_cost > 0.0 {
+        // The carried KV's transfer holds every member at the migration-
+        // augmented horizon; charge that wait to the aggregate and
+        // attribute it to the migration component (guarded so a zero cost
+        // adds nothing, keeping migrate-off byte-identical).
+        *switch_stall_s += migrate_cost * want_m as f64;
+        stall.migration_s += migrate_cost * want_m as f64;
+    }
     merged.active.push(ri);
     merged.kv_used += kv_tokens(&reqs[riu]);
     reqs[riu].phase = RPhase::Prefill;
@@ -1455,6 +1587,16 @@ fn bind_tp_sim(
         handle_pos[v.handle as usize] = idx;
     }
     *n_switches += 1;
+    journal.record(
+        bind_t,
+        crate::obs::Event::Promote {
+            group: vengs.last().map(|v| v.handle).unwrap_or(0),
+            p_from: 1,
+            p_to: want_m as u32,
+            members: member_bits,
+            latency_s: bind_t - t,
+        },
+    );
     Some(bind_t)
 }
 

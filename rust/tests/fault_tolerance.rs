@@ -22,6 +22,7 @@ use flying_serving::coordinator::policy::FlyingPolicy;
 use flying_serving::coordinator::strategy::{Strategy, WatchdogConfig};
 use flying_serving::coordinator::{Cluster, ServeRequest};
 use flying_serving::engine::FaultPlan;
+use flying_serving::json::Value;
 use flying_serving::kv::KvCacheAdaptor;
 use flying_serving::metrics::FaultStats;
 use flying_serving::model::{ModelCfg, StaticShapes};
@@ -125,12 +126,32 @@ fn assert_conserved(tag: &str, submitted: &BTreeSet<u64>, outcome: &flying_servi
     );
 }
 
+/// Dump a chaos run's journal to `bench_out/chaos_trace.jsonl` (appending)
+/// — written *before* any assertion so a failing run leaves the trace
+/// behind for the CI failure artifact.
+fn append_chaos_trace(c: &Cluster, meta: Value) {
+    use std::io::Write as _;
+    let _ = std::fs::create_dir_all("bench_out");
+    let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_out/chaos_trace.jsonl")
+    else {
+        return; // best-effort: the dump must never fail the test itself
+    };
+    let _ = c.journal().write_jsonl(&mut f, Some(&meta));
+    let _ = f.flush();
+}
+
 /// The tentpole gate: every scenario in the library, four engines, a fresh
 /// randomized fault plan per engine — the run must terminate, conserve
 /// every request, and keep KV accounting exact, whatever the plans do.
 #[test]
 fn chaos_randomized_all_scenarios() {
     let seed = chaos_seed();
+    // Fresh trace file per test invocation; runs below append to it.
+    let _ = std::fs::create_dir_all("bench_out");
+    let _ = std::fs::File::create("bench_out/chaos_trace.jsonl");
     let strategies = [Strategy::Sequential, Strategy::SoftPreempt, Strategy::HardPreempt];
     for (i, sc) in Scenario::ALL.into_iter().enumerate() {
         let t0 = Instant::now();
@@ -145,9 +166,17 @@ fn chaos_randomized_all_scenarios() {
         let mut c = Cluster::start_stub_with(cfg(), shapes(), 4, CHAOS_COMM_TIMEOUT, &plans)
             .unwrap_or_else(|e| panic!("{tag}: start: {e:#}"));
         c.set_watchdog(chaos_watchdog());
+        c.set_trace(true);
         let out = c
             .run_trace(trace, &mut FlyingPolicy::default(), strategy)
             .unwrap_or_else(|e| panic!("{tag}: run_trace must degrade, not error: {e:#}"));
+        append_chaos_trace(
+            &c,
+            Value::obj(vec![
+                ("run", Value::str(tag.clone())),
+                ("dropped", Value::num(c.journal().dropped() as f64)),
+            ]),
+        );
 
         assert_conserved(&tag, &submitted, &out);
         c.check_invariants()
@@ -352,4 +381,45 @@ fn all_engines_dead_terminates_with_everything_accounted() {
         "total-death run stalled: {:?}",
         t0.elapsed()
     );
+}
+
+/// ISSUE 7 satellite: every `FaultStats` counter is paired 1:1 with a
+/// journal event at its increment site, so on a scripted fault plan the
+/// end-of-run counters and the flight recorder's event counts must agree
+/// exactly — the journal is an audit log of the stats, not an estimate.
+#[test]
+fn fault_stats_counters_match_journal_events() {
+    let plans: Vec<FaultPlan> = (0..2)
+        .map(|e| FaultPlan { die_at: Some(4 + 2 * e as u64), ..FaultPlan::none() })
+        .collect();
+    let trace = vec![req(1, 16, 12), req(2, 12, 12)];
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(chaos_watchdog());
+    c.set_trace(true);
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::Sequential)
+        .expect("scripted death must degrade, not error");
+    assert_conserved("stats-vs-journal", &submitted, &out);
+
+    let stats = c.fault_stats();
+    let j = c.journal();
+    assert!(j.is_enabled());
+    assert_eq!(j.dropped(), 0, "ring overflowed — counts below would undercount");
+    let counts = j.counts();
+    let n = |k: &str| counts.get(k).copied().unwrap_or(0);
+    assert_eq!(stats.engine_faults, n("engine_fault"), "{counts:?}");
+    assert_eq!(stats.reply_timeouts, n("watchdog_timeout"), "{counts:?}");
+    assert_eq!(stats.stalls_ridden_out, n("watchdog_retry"), "{counts:?}");
+    assert_eq!(stats.step_errors, n("step_error"), "{counts:?}");
+    assert_eq!(stats.requests_recovered, n("request_recovered"), "{counts:?}");
+    assert_eq!(stats.requests_aborted, n("request_aborted"), "{counts:?}");
+    // The scripted deaths must actually have produced faults to audit, and
+    // each death degrades its engine exactly once.
+    assert_eq!(stats.engine_faults, 2, "both scripted deaths must escalate");
+    assert_eq!(n("engine_degraded"), 2, "{counts:?}");
+    c.check_invariants().unwrap();
+    c.shutdown();
 }
