@@ -888,6 +888,7 @@ fn chaos_probe(seed: u64) -> anyhow::Result<ChaosRow> {
         retries: 2,
         backoff: Duration::from_millis(100),
         max_request_retries: 2,
+        ..WatchdogConfig::default()
     });
     let t0 = Instant::now();
     let out = c.run_trace(trace, &mut FlyingPolicy::default(), Strategy::SoftPreempt)?;

@@ -42,6 +42,8 @@ pub enum CommError {
     ScatterShape { len: usize, p: usize },
     #[error("gather contributions have mismatched shapes")]
     GatherShape,
+    #[error("collective abandoned: a member slot was reset for rejoin")]
+    MemberReset,
 }
 
 #[derive(Debug)]
@@ -55,6 +57,12 @@ struct Inner {
     /// contributions disagree in shape; every waiter of that round reads it
     /// and surfaces `CommError::GatherShape` instead of a misaligned result.
     shape_err: bool,
+    /// Set by [`Communicator::reset_member`] when a rejoin tears down an
+    /// in-flight round (ISSUE 8): the round's surviving waiters wake on
+    /// the generation bump and surface `CommError::MemberReset` instead of
+    /// reading a result no completed round produced.  Cleared by the first
+    /// arrival of the next (fresh) round.
+    torn: bool,
 }
 
 /// One pre-built communicator (the NCCL process-group analog).
@@ -88,6 +96,7 @@ impl Communicator {
                 result: Vec::new(),
                 gather: vec![Vec::new(); p],
                 shape_err: false,
+                torn: false,
             }),
             cv: Condvar::new(),
             timeout,
@@ -119,6 +128,7 @@ impl Communicator {
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         if g.arrived == 0 {
+            g.torn = false;
             g.buf.clear();
             g.buf.extend_from_slice(data);
         } else {
@@ -146,6 +156,9 @@ impl Communicator {
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
+            if g.torn {
+                return Err(CommError::MemberReset);
+            }
             data.copy_from_slice(&g.result);
             Ok(())
         }
@@ -159,6 +172,9 @@ impl Communicator {
             return Ok(());
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived == 0 {
+            g.torn = false;
+        }
         g.arrived += 1;
         if g.arrived == p {
             g.arrived = 0;
@@ -167,12 +183,15 @@ impl Communicator {
             Ok(())
         } else {
             let gen0 = g.generation;
-            let (_g, to) = self
+            let (g, to) = self
                 .cv
                 .wait_timeout_while(g, self.timeout, |g| g.generation == gen0)
                 .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            if g.torn {
+                return Err(CommError::MemberReset);
             }
             Ok(())
         }
@@ -186,6 +205,9 @@ impl Communicator {
             return Ok(());
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived == 0 {
+            g.torn = false;
+        }
         if idx == 0 {
             // Stage into `buf`; only the completing arrival publishes it to
             // `result`.  A next-round root can therefore never clobber a
@@ -210,6 +232,9 @@ impl Communicator {
                 .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            if g.torn {
+                return Err(CommError::MemberReset);
             }
             data.clear();
             data.extend_from_slice(&g.result);
@@ -236,6 +261,9 @@ impl Communicator {
             return Ok(());
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived == 0 {
+            g.torn = false;
+        }
         g.gather[idx].clear();
         g.gather[idx].extend_from_slice(data);
         g.arrived += 1;
@@ -260,6 +288,9 @@ impl Communicator {
                 .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            if g.torn {
+                return Err(CommError::MemberReset);
             }
             out.clear();
             out.extend_from_slice(&g.result);
@@ -297,6 +328,9 @@ impl Communicator {
             return Err(CommError::ScatterShape { len: send.len(), p });
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived == 0 {
+            g.torn = false;
+        }
         if idx == root_idx {
             // Stage into `buf`; only the completing arrival publishes it to
             // `result` (same protocol as broadcast), so a next-round root can
@@ -322,6 +356,9 @@ impl Communicator {
                 .unwrap_or_else(|poisoned| poisoned.into_inner());
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
+            }
+            if g.torn {
+                return Err(CommError::MemberReset);
             }
             let chunk = g.result.len() / p;
             out.clear();
@@ -352,6 +389,9 @@ impl Communicator {
             return Ok(());
         }
         let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived == 0 {
+            g.torn = false;
+        }
         g.gather[idx].clear();
         g.gather[idx].extend_from_slice(data);
         g.arrived += 1;
@@ -388,6 +428,9 @@ impl Communicator {
             if to.timed_out() {
                 return Err(CommError::CollectiveTimeout(self.timeout));
             }
+            if g.torn {
+                return Err(CommError::MemberReset);
+            }
             if g.shape_err {
                 return Err(CommError::GatherShape);
             }
@@ -397,6 +440,34 @@ impl Communicator {
             }
             Ok(())
         }
+    }
+
+    /// Re-register a member slot for a rejoining incarnation of `rank`
+    /// (ISSUE 8).  If the dead incarnation left a torn round behind (it
+    /// arrived and died before completion), the round is abandoned:
+    /// `arrived` resets, the generation bumps, and every surviving waiter
+    /// wakes with [`CommError::MemberReset`] instead of deadlocking until
+    /// its timeout or reading a result no completed round produced.  With
+    /// no round in flight this is a no-op — the pre-built group needs no
+    /// re-initialization (the paper's eager pool is exactly what makes
+    /// rejoin O(1)).
+    ///
+    /// The lockstep coordinator only calls this at a safe point (no
+    /// commands in flight), so a fresh round can never race the torn
+    /// round's wake-up.
+    pub fn reset_member(&self, rank: usize) -> Result<(), CommError> {
+        self.member_index(rank)?;
+        if self.size() == 1 {
+            return Ok(());
+        }
+        let mut g = self.m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if g.arrived > 0 {
+            g.arrived = 0;
+            g.torn = true;
+            g.generation += 1;
+            self.cv.notify_all();
+        }
+        Ok(())
     }
 
     /// All-gather, allocating convenience form: every member's contribution,
@@ -455,6 +526,22 @@ impl CommunicatorPool {
 
     pub fn n_groups(&self) -> usize {
         self.groups.len()
+    }
+
+    /// Rejoin `rank` across every pre-built group containing it (ISSUE 8):
+    /// each group's member slot is reset ([`Communicator::reset_member`]),
+    /// abandoning any round the dead incarnation tore.  Returns the number
+    /// of groups touched.  No group is rebuilt — the eagerly-initialized
+    /// pool is generation-protected, so a restarted worker re-registers in
+    /// O(groups-of-rank) metadata work.
+    pub fn rejoin_member(&self, rank: usize) -> usize {
+        let mut n = 0;
+        for g in self.groups.values() {
+            if g.ranks.contains(&rank) && g.reset_member(rank).is_ok() {
+                n += 1;
+            }
+        }
+        n
     }
 
     /// All group rank-sets (sorted), for introspection/tests.
@@ -793,6 +880,75 @@ mod tests {
         let mut d = vec![1.0];
         let err = g.all_reduce_sum(0, &mut d).unwrap_err();
         assert!(matches!(err, CommError::CollectiveTimeout(_)));
+    }
+
+    #[test]
+    fn reset_member_unblocks_torn_round_with_error() {
+        // Long timeout: without the reset, the waiter would block ~5s.
+        let pool = CommunicatorPool::new(2, &[2], Duration::from_secs(5));
+        let g = pool.get(&[0, 1]).unwrap();
+        let g0 = g.clone();
+        let t0 = std::time::Instant::now();
+        let waiter = thread::spawn(move || {
+            let mut d = vec![1.0];
+            g0.all_reduce_sum(0, &mut d)
+        });
+        // Let rank 0 enter the round, then tear it down as a rejoin would.
+        thread::sleep(Duration::from_millis(50));
+        g.reset_member(1).unwrap();
+        let err = waiter.join().unwrap().unwrap_err();
+        assert_eq!(err, CommError::MemberReset);
+        assert!(t0.elapsed() < Duration::from_secs(2), "woke on reset, not timeout");
+        // The group is immediately usable by the next (full) round.
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut d = vec![r as f32 + 1.0];
+                    g.all_reduce_sum(r, &mut d).unwrap();
+                    d[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 3.0);
+        }
+    }
+
+    #[test]
+    fn reset_member_is_a_noop_without_inflight_round() {
+        let pool = pool();
+        let g = pool.get(&[0, 1]).unwrap();
+        g.reset_member(0).unwrap();
+        assert!(matches!(
+            g.reset_member(9).unwrap_err(),
+            CommError::NotAMember { .. }
+        ));
+        // Singleton groups have no rendezvous state to reset.
+        pool.get(&[3]).unwrap().reset_member(3).unwrap();
+    }
+
+    #[test]
+    fn rejoin_member_touches_every_group_of_rank() {
+        let pool = pool(); // 8 engines, degrees 1/2/4/8
+        // Rank 2 sits in [2], [2,3], [0..4], [0..8] — the singleton resets
+        // trivially, so 4 groups are touched.
+        assert_eq!(pool.rejoin_member(2), 4);
+        // Pool stays fully usable.
+        let g = pool.get(&[2, 3]).unwrap();
+        let handles: Vec<_> = (2..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut d = vec![r as f32];
+                    g.all_reduce_sum(r, &mut d).unwrap();
+                    d[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 5.0);
+        }
     }
 
     #[test]

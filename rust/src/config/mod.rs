@@ -37,6 +37,22 @@ pub struct ServeConfig {
     /// First per-command reply deadline in milliseconds (retries extend
     /// it; see `WatchdogConfig`).  0 keeps the default.
     pub watchdog_timeout_ms: u64,
+    /// Engine fail-recover (ISSUE 8, `WatchdogConfig::recover`).  Off by
+    /// default: a failed engine then stays fail-stopped exactly as PR 6.
+    /// Requires `--watchdog` (validated at startup).
+    pub recover: bool,
+    /// Rejoin attempts per engine before recovery re-escalates to
+    /// permanent fail-stop.  0 keeps the default (3).
+    pub rejoin_attempts: u32,
+    /// Base rejoin backoff in milliseconds (doubles per attempt).  0 keeps
+    /// the default (1000).
+    pub rejoin_backoff_ms: u64,
+    /// Consecutive degraded step errors before fail-stop
+    /// (`WatchdogConfig::max_step_err_streak`).  0 keeps the default (32).
+    pub max_step_err_streak: u32,
+    /// Idle iterations before the degraded-cell stranded sweep
+    /// (`WatchdogConfig::stranded_sweep_iters`).  0 keeps the default (1000).
+    pub stranded_sweep_iters: usize,
     /// Flight recorder (ISSUE 7).  Off by default: no journal is
     /// allocated and behavior is byte-identical to an untraced run; on,
     /// both execution paths record switch/migration/backfill/fault/
@@ -65,6 +81,11 @@ impl Default for ServeConfig {
             switch_migrate: false,
             watchdog: false,
             watchdog_timeout_ms: 0,
+            recover: false,
+            rejoin_attempts: 0,
+            rejoin_backoff_ms: 0,
+            max_step_err_streak: 0,
+            stranded_sweep_iters: 0,
             trace: false,
             trace_out: "bench_out/trace.jsonl".into(),
         }
@@ -114,6 +135,11 @@ impl ServeConfig {
                 "switch-migrate" => c.switch_migrate = v == "true",
                 "watchdog" => c.watchdog = v == "true",
                 "watchdog-timeout-ms" => c.watchdog_timeout_ms = v.parse()?,
+                "recover" => c.recover = v == "true",
+                "rejoin-attempts" => c.rejoin_attempts = v.parse()?,
+                "rejoin-backoff-ms" => c.rejoin_backoff_ms = v.parse()?,
+                "max-step-err-streak" => c.max_step_err_streak = v.parse()?,
+                "stranded-sweep-iters" => c.stranded_sweep_iters = v.parse()?,
                 "trace" => c.trace = v == "true",
                 "trace-out" => c.trace_out = v.clone(),
                 _ => bail!("unknown flag --{k}"),
@@ -143,16 +169,34 @@ impl ServeConfig {
         }
     }
 
-    /// Lockstep-watchdog tuning from `--watchdog` /
-    /// `--watchdog-timeout-ms` (other knobs keep their defaults).
+    /// Lockstep-watchdog + fail-recover tuning from `--watchdog` /
+    /// `--watchdog-timeout-ms` / `--recover` / `--rejoin-attempts` /
+    /// `--rejoin-backoff-ms` / `--max-step-err-streak` /
+    /// `--stranded-sweep-iters` (a 0 keeps the corresponding default).
+    /// Ordering invariants are checked by the cluster's
+    /// `set_watchdog_checked` against its real communicator timeout, not
+    /// here.
     pub fn make_watchdog_config(&self) -> crate::coordinator::strategy::WatchdogConfig {
         let mut w = crate::coordinator::strategy::WatchdogConfig {
             enabled: self.watchdog,
+            recover: self.recover,
             ..Default::default()
         };
         if self.watchdog_timeout_ms > 0 {
             w.reply_timeout = std::time::Duration::from_millis(self.watchdog_timeout_ms);
             w.backoff = w.reply_timeout;
+        }
+        if self.rejoin_attempts > 0 {
+            w.max_rejoin_attempts = self.rejoin_attempts;
+        }
+        if self.rejoin_backoff_ms > 0 {
+            w.rejoin_backoff = std::time::Duration::from_millis(self.rejoin_backoff_ms);
+        }
+        if self.max_step_err_streak > 0 {
+            w.max_step_err_streak = self.max_step_err_streak;
+        }
+        if self.stranded_sweep_iters > 0 {
+            w.stranded_sweep_iters = self.stranded_sweep_iters;
         }
         w
     }
@@ -294,6 +338,41 @@ mod tests {
         let d = ServeConfig::default().make_watchdog_config();
         assert!(!d.enabled);
         assert_eq!(d.reply_timeout, std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn recover_flags_parse_and_stay_off_by_default() {
+        let (_, flags) = parse_args(&s(&[
+            "--watchdog",
+            "--recover",
+            "--rejoin-attempts",
+            "5",
+            "--rejoin-backoff-ms",
+            "200",
+            "--max-step-err-streak",
+            "8",
+            "--stranded-sweep-iters",
+            "50",
+        ]))
+        .unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        let w = c.make_watchdog_config();
+        assert!(w.enabled && w.recover);
+        assert_eq!(w.max_rejoin_attempts, 5);
+        assert_eq!(w.rejoin_backoff, std::time::Duration::from_millis(200));
+        assert_eq!(w.max_step_err_streak, 8);
+        assert_eq!(w.stranded_sweep_iters, 50);
+        // Off by default, with the PR-6 defaults intact — the
+        // byte-identical discipline's anchor.
+        let d = ServeConfig::default().make_watchdog_config();
+        assert!(!d.recover);
+        assert_eq!(d.max_rejoin_attempts, 3);
+        assert_eq!(d.max_step_err_streak, 32);
+        assert_eq!(d.stranded_sweep_iters, 1_000);
+        // --recover without --watchdog is rejected by validation.
+        let (_, f) = parse_args(&s(&["--recover"])).unwrap();
+        let w = ServeConfig::from_flags(&f).unwrap().make_watchdog_config();
+        assert!(w.validate(std::time::Duration::from_secs(30)).is_err());
     }
 
     #[test]

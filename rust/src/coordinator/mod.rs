@@ -102,9 +102,23 @@ use strategy::{Strategy, SwitchConfig, WatchdogConfig};
 
 pub const EOS: i32 = 257;
 
-/// Consecutive degraded step errors after which a live engine is treated
-/// as failed (see `Cluster::step_err_streak`).
-const MAX_STEP_ERR_STREAK: u32 = 32;
+/// Per-engine fail-recover bookkeeping (ISSUE 8, `--recover`).
+///
+/// `attempts` is *cumulative per engine* — it is never reset, not even by a
+/// successful rejoin — so a crash-looping engine consumes its budget across
+/// incarnations and re-escalates to permanent fail-stop instead of riding
+/// revive/die cycles forever.
+#[derive(Clone, Copy, Debug, Default)]
+struct RejoinState {
+    /// Rejoin attempts consumed (bounded by `WatchdogConfig::max_rejoin_attempts`).
+    attempts: u32,
+    /// Deadline of the current exponential-backoff window; `None` until the
+    /// next `process_rejoins` pass arms it for a freshly-detected fault.
+    next_try: Option<Instant>,
+    /// Budget exhausted: the engine is permanently fail-stopped and no
+    /// further revive is attempted.
+    abandoned: bool,
+}
 
 /// A request as submitted to the cluster (the real serving path).
 #[derive(Clone, Debug)]
@@ -316,6 +330,22 @@ pub struct Cluster {
     /// collective timeout) is escalated to fail-stop after a bounded
     /// streak instead of being retried forever.
     step_err_streak: Vec<u32>,
+    /// Communicator timeout this cluster was booted with — kept so
+    /// [`Self::set_watchdog_checked`] can validate the watchdog's ordering
+    /// invariants against it.
+    comm_timeout: Duration,
+    /// Per-engine scripted fault plan of the *current incarnation* (stub
+    /// clusters; `FaultPlan::none()` elsewhere).  Consulted at rejoin time:
+    /// [`FaultPlan::revivable`] gates revive, [`FaultPlan::revive_plan`]
+    /// scripts the next incarnation.  Revive only targets plans whose death
+    /// is a worker *exit* (`die_at`), so replacing the handle never joins a
+    /// still-running thread.
+    plans: Vec<FaultPlan>,
+    /// Incarnation counter per engine, bumped on every respawn (mirrors
+    /// `EngineHandle::generation`).
+    engine_generation: Vec<u32>,
+    /// Fail-recover state machine per engine (ISSUE 8).
+    rejoin: Vec<RejoinState>,
     /// Elastic binds admitted through the backfill predicate (for the
     /// `backfill_margin` sweep in `sched_hotpath`).
     backfill_binds: usize,
@@ -379,7 +409,7 @@ impl Cluster {
                     .with_context(|| format!("starting engine {id}"))?,
             );
         }
-        Self::assemble(cfg, engines, comm, degrees, manifest.shapes)
+        Self::assemble(cfg, engines, comm, degrees, manifest.shapes, Duration::from_secs(30), Vec::new())
     }
 
     /// Boot `n_engines` workers over the deterministic stub backend — the
@@ -415,6 +445,7 @@ impl Cluster {
         }
         let comm = Arc::new(CommunicatorPool::new(n_engines, &degrees, comm_timeout));
         let mut engines = Vec::new();
+        let mut all_plans = Vec::with_capacity(n_engines);
         for id in 0..n_engines {
             let plan = plans.get(id).cloned().unwrap_or_default();
             if plan.is_none() {
@@ -425,11 +456,12 @@ impl Cluster {
                     cfg.clone(),
                     shapes,
                     comm.clone(),
-                    plan,
+                    plan.clone(),
                 )?);
             }
+            all_plans.push(plan);
         }
-        Self::assemble(cfg, engines, comm, degrees, shapes)
+        Self::assemble(cfg, engines, comm, degrees, shapes, comm_timeout, all_plans)
     }
 
     fn assemble(
@@ -438,6 +470,8 @@ impl Cluster {
         comm: Arc<CommunicatorPool>,
         degrees: Vec<usize>,
         shapes: StaticShapes,
+        comm_timeout: Duration,
+        mut plans: Vec<FaultPlan>,
     ) -> Result<Cluster> {
         let n_engines = engines.len();
         if n_engines > 64 {
@@ -471,6 +505,13 @@ impl Cluster {
             pending_faults: Vec::new(),
             fault_recover: Vec::new(),
             step_err_streak: vec![0; n_engines],
+            comm_timeout,
+            plans: {
+                plans.resize(n_engines, FaultPlan::none());
+                plans
+            },
+            engine_generation: vec![0; n_engines],
+            rejoin: vec![RejoinState::default(); n_engines],
             backfill_binds: 0,
             recompute_tokens_avoided: 0,
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
@@ -510,8 +551,36 @@ impl Cluster {
         self.watchdog = cfg;
     }
 
+    /// [`Self::set_watchdog`] with [`WatchdogConfig::validate`] run against
+    /// this cluster's actual communicator timeout first — the CLI path, so
+    /// a budget ordering that would misclassify collective survivors as
+    /// failed is rejected at startup instead of discovered mid-trace.
+    pub fn set_watchdog_checked(&mut self, cfg: WatchdogConfig) -> Result<()> {
+        cfg.validate(self.comm_timeout)?;
+        self.watchdog = cfg;
+        Ok(())
+    }
+
     pub fn watchdog(&self) -> WatchdogConfig {
         self.watchdog
+    }
+
+    /// Idle serving capacity as the kernel index counts it (excludes
+    /// failed and quarantined engines) — the healing witness the chaos
+    /// harness asserts returns to `n_engines` after rejoins quiesce.
+    pub fn idle_count(&self) -> usize {
+        self.kernel.index.idle_count()
+    }
+
+    /// Incarnation counter of engine `e` (0 = original spawn; bumped on
+    /// every fail-recover respawn).
+    pub fn engine_generation(&self, e: usize) -> u32 {
+        self.engine_generation[e]
+    }
+
+    /// Bitmask of respawned-but-unprobed engines.
+    pub fn quarantined_mask(&self) -> u64 {
+        self.kernel.index.quarantined_mask()
     }
 
     /// Fault/recovery counters accumulated since the last `run_trace`
@@ -573,6 +642,29 @@ impl Cluster {
                 self.engine_committed[e],
                 per_engine[e]
             );
+        }
+        // Rejoin invariants (ISSUE 8): a quarantined engine was re-admitted
+        // with an empty pool and must host nothing until its probe clears;
+        // no live request may hold a KV registration on a failed or
+        // quarantined engine (degradation reclaims them, and the rejoin
+        // path installs a fresh adaptor).
+        let excluded = self.kernel.index.failed_mask() | self.kernel.index.quarantined_mask();
+        for e in 0..self.engines.len() {
+            if excluded & (1u64 << e) != 0 {
+                anyhow::ensure!(
+                    self.engine_active[e].is_empty(),
+                    "engine {e} is failed/quarantined but hosts resident requests"
+                );
+            }
+        }
+        for (_, a) in self.active.iter() {
+            for &(e, _) in &a.kvh {
+                anyhow::ensure!(
+                    excluded & (1u64 << e) == 0,
+                    "request {} holds a kv registration on failed/quarantined engine {e}",
+                    a.sr.id
+                );
+            }
         }
         Ok(())
     }
@@ -909,6 +1001,11 @@ impl Cluster {
         crate::info!("engine {e} failed: {kind}");
         self.kernel.index.mark_failed(e);
         self.pending_faults.push(e);
+        // Re-arm the rejoin backoff clock for this fault: the next
+        // `process_rejoins` pass schedules the revive attempt at
+        // `rejoin_backoff · 2^attempts` from then (attempts are cumulative,
+        // so each crash-loop lap waits longer).
+        self.rejoin[e].next_try = None;
         self.fault_stats.engine_faults += 1;
         let t_now = self.now();
         self.journal.record(t_now, crate::obs::Event::EngineFault { engine: e as u32 });
@@ -1131,6 +1228,162 @@ impl Cluster {
     }
 
     // ------------------------------------------------------------------
+    // Engine fail-recover (ISSUE 8, `--recover`)
+    // ------------------------------------------------------------------
+
+    /// Whether engine `e` is a revive candidate *right now*: recovery is
+    /// armed, the engine is fail-stopped but not abandoned, and its death
+    /// was a transient worker exit (`FaultPlan::revivable` — a stalled
+    /// thread is never revived, only a dead one, so replacing the handle
+    /// can never join a still-running worker).
+    fn rejoinable(&self, e: usize) -> bool {
+        self.watchdog.enabled
+            && self.watchdog.recover
+            && !self.rejoin[e].abandoned
+            && self.kernel.index.is_failed(e)
+            && self.plans[e].revivable()
+    }
+
+    /// Whether any engine still has a pending (non-abandoned) revive.
+    /// `run_trace` holds the stranded sweep and the stall bail while this
+    /// is true — the idle window is a legitimate backoff wait, not a wedge
+    /// — and the chaos harness drives rejoins to quiescence through it.
+    pub fn rejoin_pending(&self) -> bool {
+        (0..self.engines.len()).any(|e| self.rejoinable(e))
+    }
+
+    /// Safe-point pass of the recovery state machine: arm backoff clocks
+    /// for freshly-detected faults, abandon engines whose cumulative
+    /// attempt budget is spent, and run the revive sequence for engines
+    /// whose backoff window has elapsed.  A no-op (single branch) unless
+    /// `--recover` armed it.
+    fn process_rejoins(&mut self, recorder: &mut Recorder) -> Result<()> {
+        if !(self.watchdog.enabled && self.watchdog.recover) {
+            return Ok(());
+        }
+        for e in 0..self.engines.len() {
+            // Never revive ahead of the engine's own degradation pass:
+            // `degrade_engine` must reclaim its residents first.
+            if !self.rejoinable(e) || self.pending_faults.contains(&e) {
+                continue;
+            }
+            if self.rejoin[e].attempts >= self.watchdog.max_rejoin_attempts {
+                self.rejoin[e].abandoned = true;
+                self.fault_stats.rejoins_abandoned += 1;
+                let t_now = self.now();
+                self.journal
+                    .record(t_now, crate::obs::Event::RejoinAbandoned { engine: e as u32 });
+                crate::info!(
+                    "engine {e}: rejoin abandoned after {} attempts (permanent fail-stop)",
+                    self.rejoin[e].attempts
+                );
+                continue;
+            }
+            match self.rejoin[e].next_try {
+                None => {
+                    // Fresh fault: schedule the attempt one exponential-
+                    // backoff window out (2^attempts, capped well below
+                    // overflow).
+                    let shift = self.rejoin[e].attempts.min(16);
+                    let delay = self.watchdog.rejoin_backoff * (1u32 << shift);
+                    self.rejoin[e].next_try = Some(Instant::now() + delay);
+                }
+                Some(t) if Instant::now() < t => {}
+                Some(_) => self.try_rejoin(e, recorder)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// One revive attempt for engine `e`: respawn (fresh backend, fresh
+    /// channels, generation-bumped identity), communicator rejoin, KV
+    /// re-warm, then quarantine + probe.  Candidate sets stay closed until
+    /// a real command round-trips on the new incarnation; a failed probe
+    /// re-escalates through the ordinary fault path (each incarnation's
+    /// death is one `engine_faults` count).
+    fn try_rejoin(&mut self, e: usize, recorder: &mut Recorder) -> Result<()> {
+        self.rejoin[e].attempts += 1;
+        let attempt = self.rejoin[e].attempts;
+        // Next-incarnation script: healthy for `revive_after == 0`, dies
+        // again at command k for a crash loop (`revive_after == k > 0`).
+        let plan = self.plans[e].revive_plan();
+        self.plans[e] = plan.clone();
+        self.engine_generation[e] += 1;
+        let gen = self.engine_generation[e];
+        let t_now = self.now();
+        self.fault_stats.engine_revives += 1;
+        self.journal.record(t_now, crate::obs::Event::EngineRevive { engine: e as u32 });
+        crate::info!("engine {e}: revive attempt {attempt} (incarnation {gen})");
+        // Degradation must have left nothing of the old incarnation behind.
+        debug_assert!(self.engine_active[e].is_empty(), "revive with residents");
+        // 1. Communicator rejoin: tear any round the dead incarnation
+        //    stranded (survivors normally already timed out — the watchdog
+        //    budget exceeds the comm timeout — so this is usually the
+        //    generation-bump no-op) and free the member slot for reuse.
+        self.comm.rejoin_member(e);
+        // 2. Engine restart.  The old handle's Drop tolerates the dead
+        //    worker (send fails silently, join returns immediately); the
+        //    fresh channel pair makes stale replies structurally impossible.
+        let shapes = StaticShapes { b_dec: self.b_dec, c_prefill: self.c_prefill };
+        let handle = EngineHandle::respawn_stub_faulty(
+            e,
+            gen,
+            self.cfg.clone(),
+            shapes,
+            self.comm.clone(),
+            plan,
+        )?;
+        drop(std::mem::replace(&mut self.engines[e], handle));
+        // 3. KV re-warm: the engine restarted empty, so re-admit its block
+        //    pool empty too — a fresh adaptor makes that structural.  All
+        //    old registrations were reclaimed at degradation time, so no
+        //    live request can hold a handle into the replaced slab
+        //    (`check_invariants` asserts exactly this).
+        self.adaptors[e] = KvCacheAdaptor::new(self.cfg.clone());
+        self.engine_mode[e] = 1; // fresh backend boots in unit mode
+        self.step_err_streak[e] = 0;
+        // 4. Quarantine + probe: the engine leaves the failed set but joins
+        //    no candidate set until a real command round-trips.
+        self.kernel.index.clear_failed(e);
+        self.fault_stats.rejoin_probes += 1;
+        self.journal
+            .record(t_now, crate::obs::Event::RejoinProbe { engine: e as u32, attempt });
+        if self.set_mode_watched(e, 1)? {
+            self.kernel.index.clear_quarantine(e);
+            self.refresh_engine(e);
+            self.kernel.on_event(SchedEvent::EngineRejoin { engine: e });
+            self.fault_stats.rejoins_ok += 1;
+            let t_ok = self.now();
+            self.journal.record(t_ok, crate::obs::Event::RejoinOk { engine: e as u32 });
+            crate::info!("engine {e}: rejoined (incarnation {gen})");
+            self.rejoin[e].next_try = None;
+        } else {
+            // Probe failed: `note_engine_fault` already re-failed and
+            // re-armed the backoff; run degradation now (trivially — the
+            // incarnation never hosted anything).
+            self.process_faults(recorder)?;
+        }
+        Ok(())
+    }
+
+    /// Drive the recovery state machine to quiescence: process rejoins
+    /// (sleeping through backoff windows) until every transiently-dead
+    /// engine is either back in service or abandoned.  Terminates because
+    /// the cumulative per-engine attempt budget is finite.  Used by the
+    /// chaos harness to assert capacity healing after a trace ends (a trace
+    /// can complete all its work while a revive is still waiting out its
+    /// backoff).
+    pub fn drive_rejoins_to_quiescence(&mut self, recorder: &mut Recorder) -> Result<()> {
+        while self.rejoin_pending() {
+            self.process_rejoins(recorder)?;
+            self.process_faults(recorder)?;
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.process_faults(recorder)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
     // Trace replay driver: submit all requests with arrival offsets, run
     // Algorithm 1 until everything finishes.
     // ------------------------------------------------------------------
@@ -1158,9 +1411,11 @@ impl Cluster {
 
             // Dissolve/settle groups first so freshly-freed engines are
             // visible to this iteration's mode decisions, then run the
-            // graceful-degradation pass for any fault the settle detected
-            // (a no-op while the fault queues are empty).
+            // recovery and graceful-degradation passes for any fault the
+            // settle detected (no-ops while the fault queues are empty and
+            // `--recover` is off).
             self.settle_groups(&mut recorder)?;
+            self.process_rejoins(&mut recorder)?;
             self.process_faults(&mut recorder)?;
 
             // ① Input processing: admit due arrivals into the task pool.
@@ -1213,9 +1468,18 @@ impl Cluster {
                     if dt > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
                     }
+                } else if self.rejoin_pending() {
+                    // A transiently-dead engine is waiting out its rejoin
+                    // backoff: this idle window is legitimate, so hold the
+                    // stranded sweep and the stall bail (both would
+                    // mis-fire) and let the clock advance.  Bounded — the
+                    // cumulative attempt budget abandons a crash loop, after
+                    // which `rejoin_pending` turns false for good.
+                    idle_iters = idle_iters.saturating_sub(1);
+                    std::thread::sleep(Duration::from_millis(1));
                 } else if self.watchdog.enabled
                     && self.kernel.index.failed_mask() != 0
-                    && idle_iters > 1_000
+                    && idle_iters > self.watchdog.stranded_sweep_iters
                 {
                     // Degraded cell wedged: the surviving engines cannot
                     // host the remaining waiters (e.g. a TP demand wider
@@ -1275,6 +1539,7 @@ impl Cluster {
         recorder: &mut Recorder,
     ) -> Result<bool> {
         self.settle_groups(recorder)?;
+        self.process_rejoins(recorder)?;
         self.process_faults(recorder)?;
         self.assign_waiting(policy, strategy, recorder)?;
         let stepped = self.execute_step(recorder)?;
@@ -2427,7 +2692,7 @@ impl Cluster {
                 match self.recv_reply_watched(e) {
                     Ok(EngineReply::Err(msg)) => {
                         self.step_err_streak[e] += 1;
-                        if self.step_err_streak[e] >= MAX_STEP_ERR_STREAK {
+                        if self.step_err_streak[e] >= self.watchdog.max_step_err_streak {
                             crate::info!(
                                 "engine {e} exceeded the consecutive step-error budget: {msg}"
                             );

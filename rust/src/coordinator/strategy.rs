@@ -139,6 +139,27 @@ pub struct WatchdogConfig {
     /// Times a request may be rescued off a failed engine and requeued
     /// before it is rejected instead.
     pub max_request_retries: u32,
+    /// Consecutive degraded step-error replies from one engine before it
+    /// escalates to fail-stop (anti-livelock: degraded-retry must be
+    /// bounded).  Was a hard-coded const before ISSUE 8; 32 remains the
+    /// default.
+    pub max_step_err_streak: u32,
+    /// Idle scheduler iterations (watchdog on, failed engines present)
+    /// before waiting requests that no surviving capacity can ever host
+    /// are swept into rejection instead of hanging the trace.
+    pub stranded_sweep_iters: usize,
+    /// Fail-recover (ISSUE 8, `--recover`): revive transiently-dead
+    /// engines and rejoin them through quarantine + probe.  Off by
+    /// default — the PR-6 fail-stop path stays byte-identical.
+    pub recover: bool,
+    /// Rejoin attempts per engine before recovery re-escalates to
+    /// permanent fail-stop (crash-loop anti-livelock, same rule as
+    /// `max_step_err_streak`).  The budget is cumulative per engine, not
+    /// per fault, so a crash loop can never ride the budget forever.
+    pub max_rejoin_attempts: u32,
+    /// Base delay before the first rejoin attempt; doubles per attempt
+    /// (exponential backoff).
+    pub rejoin_backoff: std::time::Duration,
 }
 
 impl Default for WatchdogConfig {
@@ -146,11 +167,98 @@ impl Default for WatchdogConfig {
         WatchdogConfig {
             enabled: false,
             // 5s + 10s + 15s + 20s = 50s total budget, comfortably above
-            // the 30s default communicator timeout (see invariant above).
+            // the 30s default communicator timeout (see invariant above,
+            // now asserted by `WatchdogConfig::validate`).
             reply_timeout: std::time::Duration::from_secs(5),
             retries: 3,
             backoff: std::time::Duration::from_secs(5),
             max_request_retries: 2,
+            max_step_err_streak: 32,
+            stranded_sweep_iters: 1_000,
+            recover: false,
+            max_rejoin_attempts: 3,
+            rejoin_backoff: std::time::Duration::from_secs(1),
         }
+    }
+}
+
+impl WatchdogConfig {
+    /// Total per-command reply budget: the first deadline plus every
+    /// linear-backoff retry window,
+    /// `Σ_{i=0..=retries} (reply_timeout + i·backoff)`.
+    /// Defaults: 5+10+15+20 s = 50 s.
+    pub fn total_reply_budget(&self) -> std::time::Duration {
+        let n = self.retries;
+        self.reply_timeout * (n + 1) + self.backoff * (n * (n + 1) / 2)
+    }
+
+    /// Check the config's internal ordering invariants against the
+    /// communicator timeout it will run next to.  The load-bearing one
+    /// (previously prose-only): the total reply budget must exceed the
+    /// communicator timeout, so survivors of a dead peer's collective get
+    /// to report `CollectiveTimeout` as an absorbable step error before
+    /// the watchdog misclassifies *them* as failed.
+    pub fn validate(&self, comm_timeout: std::time::Duration) -> anyhow::Result<()> {
+        if !self.enabled {
+            if self.recover {
+                anyhow::bail!("--recover requires the watchdog (faults are only survivable with it on)");
+            }
+            return Ok(());
+        }
+        if self.total_reply_budget() <= comm_timeout {
+            anyhow::bail!(
+                "watchdog total reply budget {:?} must exceed the communicator timeout {:?} \
+                 (survivors must surface a dead peer's collective timeout before being \
+                 misclassified as failed themselves)",
+                self.total_reply_budget(),
+                comm_timeout
+            );
+        }
+        if self.max_step_err_streak == 0 {
+            anyhow::bail!("max_step_err_streak must be >= 1 (0 would fail-stop on any step error)");
+        }
+        if self.recover && self.max_rejoin_attempts == 0 {
+            anyhow::bail!("--recover with max_rejoin_attempts = 0 can never rejoin anything");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn watchdog_budget_ordering_is_validated() {
+        let mut w = WatchdogConfig { enabled: true, ..WatchdogConfig::default() };
+        // 5 + 10 + 15 + 20 s of deadline windows.
+        assert_eq!(w.total_reply_budget(), Duration::from_secs(50));
+        w.validate(Duration::from_secs(30)).unwrap();
+        // Budget == timeout is not enough; neither is below.
+        assert!(w.validate(Duration::from_secs(50)).is_err());
+        assert!(w.validate(Duration::from_secs(60)).is_err());
+        w.max_step_err_streak = 0;
+        assert!(w.validate(Duration::from_secs(30)).is_err());
+    }
+
+    #[test]
+    fn recover_requires_watchdog_and_a_rejoin_budget() {
+        let w = WatchdogConfig { recover: true, ..WatchdogConfig::default() };
+        assert!(w.validate(Duration::from_secs(30)).is_err());
+        let w = WatchdogConfig {
+            enabled: true,
+            recover: true,
+            max_rejoin_attempts: 0,
+            ..WatchdogConfig::default()
+        };
+        assert!(w.validate(Duration::from_secs(30)).is_err());
+        let w = WatchdogConfig { enabled: true, recover: true, ..WatchdogConfig::default() };
+        w.validate(Duration::from_secs(30)).unwrap();
+    }
+
+    #[test]
+    fn disabled_watchdog_validates_vacuously() {
+        WatchdogConfig::default().validate(Duration::from_secs(999)).unwrap();
     }
 }

@@ -72,6 +72,15 @@ pub struct FaultPlan {
     /// The engine dies permanently at this step: the worker thread exits
     /// and its channels disconnect.
     pub die_at: Option<u64>,
+    /// Revive phase (ISSUE 8): `Some(k)` marks the `die_at` death
+    /// *transient* — a recovery-armed coordinator may respawn the engine
+    /// with [`FaultPlan::revive_plan`].  The respawned incarnation is
+    /// healthy when `k == 0`; otherwise it dies again after `k` executed
+    /// commands (crash-loop modeling — the bounded rejoin budget must
+    /// re-escalate to permanent fail-stop).  Ignored entirely when
+    /// recovery is off, so the field's presence is behavior-invariant on
+    /// the PR-6 degradation path.
+    pub revive_after: Option<u64>,
 }
 
 impl FaultPlan {
@@ -81,11 +90,34 @@ impl FaultPlan {
     }
 
     /// True when the plan injects nothing — the gate's fast path.
+    /// `revive_after` is deliberately excluded: without a `die_at` it is
+    /// inert, and with one the plan is already non-none.
     pub fn is_none(&self) -> bool {
         self.stall_at.is_none()
             && self.slow_from.is_none()
             && self.drop_reply_at.is_empty()
             && self.die_at.is_none()
+    }
+
+    /// True when the plan's death (if any) is declared transient — the
+    /// coordinator's rejoin eligibility test (ISSUE 8).
+    pub fn revivable(&self) -> bool {
+        self.die_at.is_some() && self.revive_after.is_some()
+    }
+
+    /// The respawned incarnation's plan after a transient death: healthy
+    /// for `revive_after == Some(0)`, otherwise a crash-looping clone that
+    /// dies again after that many executed commands (and stays revivable,
+    /// so only the coordinator's attempt budget ends the loop).
+    pub fn revive_plan(&self) -> FaultPlan {
+        match self.revive_after {
+            Some(k) if k > 0 => FaultPlan {
+                die_at: Some(k),
+                revive_after: Some(k),
+                ..FaultPlan::none()
+            },
+            _ => FaultPlan::none(),
+        }
     }
 
     /// Seeded randomized plan for one engine.  Fault probabilities are
@@ -111,6 +143,12 @@ impl FaultPlan {
         }
         if rng.bool(0.25) {
             plan.die_at = Some(rng.range(3, 160));
+            // Half the deaths are transient (ISSUE 8): a recovery-armed
+            // run revives them into a healthy incarnation; with recovery
+            // off the marker is inert and the death stays permanent.
+            if rng.bool(0.5) {
+                plan.revive_after = Some(0);
+            }
         }
         plan
     }
@@ -194,6 +232,35 @@ mod tests {
         clock.tick().unwrap();
         assert!(clock.tick().unwrap_err().is::<DropReply>());
         clock.tick().unwrap();
+    }
+
+    #[test]
+    fn revive_plan_models_healthy_and_crash_loop_incarnations() {
+        // No revive marker: permanent death, not revivable.
+        let permanent = FaultPlan { die_at: Some(5), ..FaultPlan::none() };
+        assert!(!permanent.revivable());
+        // Healthy revive: next incarnation injects nothing.
+        let transient = FaultPlan {
+            die_at: Some(5),
+            revive_after: Some(0),
+            ..FaultPlan::none()
+        };
+        assert!(transient.revivable());
+        assert!(transient.revive_plan().is_none());
+        // Crash loop: next incarnation dies again and stays revivable.
+        let looping = FaultPlan {
+            die_at: Some(5),
+            revive_after: Some(2),
+            ..FaultPlan::none()
+        };
+        let next = looping.revive_plan();
+        assert_eq!(next.die_at, Some(2));
+        assert!(next.revivable());
+        assert_eq!(next.revive_plan().die_at, Some(2));
+        // The marker alone (no death) is inert.
+        let inert = FaultPlan { revive_after: Some(0), ..FaultPlan::none() };
+        assert!(inert.is_none());
+        assert!(!inert.revivable());
     }
 
     #[test]

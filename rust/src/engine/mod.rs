@@ -109,6 +109,13 @@ const CHANNEL_DEPTH: usize = 2;
 
 pub struct EngineHandle {
     pub id: usize,
+    /// Incarnation counter (ISSUE 8): 0 for the original spawn, bumped by
+    /// the coordinator on every fail-recover respawn.  Stale replies from a
+    /// dead incarnation are *structurally* impossible — each spawn owns a
+    /// fresh channel pair, and replacing the handle drops the old receiver —
+    /// so the generation is identity for journals, thread names, and tests,
+    /// not a filtering mechanism.
+    pub generation: u32,
     tx: SyncSender<EngineCmd>,
     rx: Receiver<EngineReply>,
     join: Option<JoinHandle<()>>,
@@ -124,11 +131,28 @@ impl EngineHandle {
         B: EngineBackend + 'static,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
+        Self::spawn_with_gen(id, 0, factory)
+    }
+
+    /// [`Self::spawn_with`] for a later incarnation of a revived engine:
+    /// generation `g > 0` names the thread `engine-{id}g{g}` so journals and
+    /// stack dumps distinguish incarnations; generation 0 keeps the original
+    /// `engine-{id}` name byte-identical.
+    pub fn spawn_with_gen<B, F>(id: usize, generation: u32, factory: F) -> Result<Self>
+    where
+        B: EngineBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, cmd_rx) = sync_channel::<EngineCmd>(CHANNEL_DEPTH);
         let (reply_tx, rx) = sync_channel::<EngineReply>(CHANNEL_DEPTH);
         let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+        let name = if generation == 0 {
+            format!("engine-{id}")
+        } else {
+            format!("engine-{id}g{generation}")
+        };
         let join = std::thread::Builder::new()
-            .name(format!("engine-{id}"))
+            .name(name)
             .spawn(move || {
                 let mut backend = match factory() {
                     Ok(b) => {
@@ -181,7 +205,7 @@ impl EngineHandle {
             .recv()
             .map_err(|_| anyhow::anyhow!("engine {id} thread died during init"))?
             .map_err(|e| anyhow::anyhow!("engine {id} init failed: {e}"))?;
-        Ok(EngineHandle { id, tx, rx, join: Some(join) })
+        Ok(EngineHandle { id, generation, tx, rx, join: Some(join) })
     }
 
     /// Spawn a worker over the real PJRT execution core.
@@ -216,6 +240,23 @@ impl EngineHandle {
         plan: FaultPlan,
     ) -> Result<Self> {
         Self::spawn_with(id, move || Ok(StubEngine::with_faults(id, cfg, shapes, comm, plan)))
+    }
+
+    /// Respawn a stub worker as incarnation `generation` of engine `id`
+    /// (ISSUE 8 revive).  Fresh backend, fresh channels, fresh fault plan —
+    /// the crashed incarnation's state is gone, exactly like an engine
+    /// process restart.
+    pub fn respawn_stub_faulty(
+        id: usize,
+        generation: u32,
+        cfg: crate::model::ModelCfg,
+        shapes: crate::model::StaticShapes,
+        comm: Arc<crate::comm::CommunicatorPool>,
+        plan: FaultPlan,
+    ) -> Result<Self> {
+        Self::spawn_with_gen(id, generation, move || {
+            Ok(StubEngine::with_faults(id, cfg, shapes, comm, plan))
+        })
     }
 
     /// Fire a command without waiting for its reply.  Used to launch a
@@ -400,6 +441,22 @@ mod tests {
         ));
         // The worker already exited; stop() must not hang.
         eng.stop();
+    }
+
+    #[test]
+    fn respawn_replaces_a_dead_incarnation() {
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let plan = FaultPlan { die_at: Some(0), ..FaultPlan::none() };
+        let mut eng = EngineHandle::spawn_stub_faulty(0, cfg(), shapes(), comm.clone(), plan).unwrap();
+        assert_eq!(eng.generation, 0);
+        // First command is death; the channel disconnects.
+        eng.send(EngineCmd::SetMode { p: 1 });
+        assert!(eng.recv().is_err());
+        // Replace the handle: fresh incarnation, fresh channels, healthy plan.
+        eng = EngineHandle::respawn_stub_faulty(0, 1, cfg(), shapes(), comm, FaultPlan::none())
+            .unwrap();
+        assert_eq!(eng.generation, 1);
+        assert!(matches!(eng.call(EngineCmd::SetMode { p: 1 }).unwrap(), EngineReply::Ok));
     }
 
     #[test]

@@ -18,6 +18,15 @@
 //!               --switch-migrate  (layout-preserving KV migration)
 //!               --watchdog        (lockstep watchdog + graceful degradation)
 //!               --watchdog-timeout-ms MS (first reply deadline override)
+//!               --recover         (engine fail-recover: revive + rejoin;
+//!                                  requires --watchdog)
+//!               --rejoin-attempts N      (per-engine revive budget, default 3)
+//!               --rejoin-backoff-ms MS   (base rejoin backoff, doubles per
+//!                                         attempt; default 1000)
+//!               --max-step-err-streak N  (step errors before fail-stop,
+//!                                         default 32)
+//!               --stranded-sweep-iters N (idle iterations before the
+//!                                         degraded-cell sweep, default 1000)
 //!               --trace           (flight recorder; off = byte-identical run)
 //!               --trace-out PATH  (JSONL base path, suffixed per run)
 
@@ -75,7 +84,7 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
-    cluster.set_watchdog(cfg.make_watchdog_config());
+    cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
     // Calibrate whenever something consumes the cost model on this cluster
     // (`ServeConfig::needs_calibration`): predictions must be denominated
     // in this testbed's measured seconds, not the paper-scale default's.
@@ -90,7 +99,7 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
-    cluster.set_watchdog(cfg.make_watchdog_config());
+    cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
     // Same calibration rule as `serve` (`ServeConfig::needs_calibration`).
     let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
     let mut policy = cfg.make_policy_with(calibrated)?;
@@ -133,6 +142,12 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
             f.requests_recovered,
             f.requests_aborted
         );
+        if cfg.recover {
+            println!(
+                "revives={} rejoin-probes={} rejoins-ok={} rejoins-abandoned={}",
+                f.engine_revives, f.rejoin_probes, f.rejoins_ok, f.rejoins_abandoned
+            );
+        }
     }
     println!(
         "TTFT mean={:.1}ms p90={:.1}ms | TPOT p50={:.1}ms | queue p90={:.1}ms | peak={:.0} tok/s",

@@ -65,6 +65,17 @@ pub struct FaultStats {
     /// Requests rejected because their recovery budget ran out (or no
     /// capacity survived to place them).
     pub requests_aborted: usize,
+    /// Failed engines respawned with a fresh backend and channels
+    /// (ISSUE 8; counted per incarnation, paired with `engine_revive`).
+    pub engine_revives: usize,
+    /// Probe steps issued to quarantined engines (paired `rejoin_probe`).
+    pub rejoin_probes: usize,
+    /// Probes that succeeded — quarantine lifted, capacity healed
+    /// (paired `rejoin_ok`).
+    pub rejoins_ok: usize,
+    /// Engines whose rejoin budget exhausted and re-escalated to
+    /// permanent fail-stop (paired `rejoin_abandoned`).
+    pub rejoins_abandoned: usize,
 }
 
 /// O(1) handle to a request's record, returned by [`Recorder::on_arrival`]

@@ -110,6 +110,19 @@ pub enum Event {
     /// A degraded step error was absorbed (streak below the fail-stop
     /// escalation budget).
     StepError { engine: u32, streak: u32 },
+    /// A failed engine was respawned (ISSUE 8): fresh backend, fresh
+    /// channels, generation-bumped identity.  Quarantined until probed.
+    EngineRevive { engine: u32 },
+    /// A probe step was issued to a quarantined (respawned) engine;
+    /// `attempt` is the engine's cumulative rejoin-attempt count.
+    RejoinProbe { engine: u32, attempt: u32 },
+    /// The probe succeeded: quarantine lifted, the engine is back in
+    /// unit/idle candidacy and the capacity healed.
+    RejoinOk { engine: u32 },
+    /// The rejoin-attempt budget exhausted: the engine re-escalated to
+    /// permanent fail-stop (crash-loop anti-livelock, same rule as the
+    /// step-error streak).
+    RejoinAbandoned { engine: u32 },
 }
 
 impl Event {
@@ -132,6 +145,10 @@ impl Event {
             Event::RequestRecovered { .. } => "request_recovered",
             Event::RequestAborted { .. } => "request_aborted",
             Event::StepError { .. } => "step_error",
+            Event::EngineRevive { .. } => "engine_revive",
+            Event::RejoinProbe { .. } => "rejoin_probe",
+            Event::RejoinOk { .. } => "rejoin_ok",
+            Event::RejoinAbandoned { .. } => "rejoin_abandoned",
         }
     }
 }
@@ -244,6 +261,19 @@ pub fn event_value(t: f64, ev: &Event) -> Value {
         Event::StepError { engine, streak } => {
             pairs.push(("engine", Value::num(engine as f64)));
             pairs.push(("streak", Value::num(streak as f64)));
+        }
+        Event::EngineRevive { engine } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+        }
+        Event::RejoinProbe { engine, attempt } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("attempt", Value::num(attempt as f64)));
+        }
+        Event::RejoinOk { engine } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+        }
+        Event::RejoinAbandoned { engine } => {
+            pairs.push(("engine", Value::num(engine as f64)));
         }
     }
     Value::obj(pairs)
@@ -414,8 +444,10 @@ impl Journal {
 
     /// Per-engine mode timeline: `(t, width)` transitions for each of
     /// `n_engines` unit instances, derived from the switch-lifecycle
-    /// events.  Width 0 marks a fail-stopped engine.  Engines start (and
-    /// may stay) implicitly at width 1 — the timeline records changes.
+    /// events.  Width 0 marks a fail-stopped engine; a later `rejoin_ok`
+    /// returns it to width 1 (the fault→heal bracket is the outage
+    /// window).  Engines start (and may stay) implicitly at width 1 — the
+    /// timeline records changes.
     pub fn mode_timeline(&self, n_engines: usize) -> Vec<Vec<(f64, u32)>> {
         let mut out: Vec<Vec<(f64, u32)>> = vec![Vec::new(); n_engines];
         let mut group_width: BTreeMap<u32, u32> = BTreeMap::new();
@@ -449,6 +481,14 @@ impl Journal {
                 Event::EngineFault { engine } => {
                     if (engine as usize) < n_engines {
                         out[engine as usize].push((t, 0));
+                    }
+                }
+                // A healed engine rejoins at unit width (the probe step
+                // re-established DP mode); width 0 ... rejoin_ok brackets
+                // the outage window in the timeline.
+                Event::RejoinOk { engine } => {
+                    if (engine as usize) < n_engines {
+                        out[engine as usize].push((t, 1));
                     }
                 }
                 _ => {}
@@ -713,6 +753,34 @@ mod tests {
         let tl = j.mode_timeline(2);
         assert_eq!(tl[0], vec![(0.4, 2), (1.0, 2), (3.0, 1)]);
         assert_eq!(tl[1], vec![(1.0, 2), (3.0, 1), (4.0, 0)]);
+    }
+
+    #[test]
+    fn mode_timeline_brackets_outage_with_rejoin() {
+        let mut j = Journal::new(16);
+        j.record(1.0, Event::EngineFault { engine: 0 });
+        j.record(1.5, Event::EngineRevive { engine: 0 });
+        j.record(1.6, Event::RejoinProbe { engine: 0, attempt: 1 });
+        j.record(2.0, Event::RejoinOk { engine: 0 });
+        let tl = j.mode_timeline(1);
+        assert_eq!(tl[0], vec![(1.0, 0), (2.0, 1)]);
+    }
+
+    #[test]
+    fn rejoin_events_roundtrip_through_jsonl() {
+        let mut j = Journal::new(16);
+        j.record(0.1, Event::EngineRevive { engine: 2 });
+        j.record(0.2, Event::RejoinProbe { engine: 2, attempt: 1 });
+        j.record(0.3, Event::RejoinOk { engine: 2 });
+        j.record(0.4, Event::RejoinAbandoned { engine: 3 });
+        let mut buf = Vec::new();
+        j.write_jsonl(&mut buf, None).unwrap();
+        let s = summarize_jsonl(&String::from_utf8(buf).unwrap()).unwrap();
+        assert_eq!(s.events, 4);
+        assert_eq!(s.by_kind["engine_revive"], 1);
+        assert_eq!(s.by_kind["rejoin_probe"], 1);
+        assert_eq!(s.by_kind["rejoin_ok"], 1);
+        assert_eq!(s.by_kind["rejoin_abandoned"], 1);
     }
 
     #[test]

@@ -27,6 +27,12 @@ pub struct EngineIndex {
     /// candidate set.  A failed engine's bit is sticky — `refresh_engine`
     /// cannot resurrect it.
     failed: u64,
+    /// Rejoining engines (ISSUE 8): respawned but not yet probed.  A
+    /// quarantined engine is excluded from every candidate set exactly
+    /// like a failed one — only [`EngineIndex::clear_quarantine`] (called
+    /// after a successful probe step) readmits it to candidacy, and only
+    /// through a subsequent `refresh_engine`.
+    quarantined: u64,
 }
 
 impl EngineIndex {
@@ -40,7 +46,7 @@ impl EngineIndex {
     #[inline]
     pub fn refresh_engine(&mut self, e: usize, unit: bool, idle: bool) {
         let bit = 1u64 << e;
-        if self.failed & bit != 0 {
+        if (self.failed | self.quarantined) & bit != 0 {
             self.unit &= !bit;
             self.idle &= !bit;
             return;
@@ -65,6 +71,7 @@ impl EngineIndex {
     pub fn mark_failed(&mut self, e: usize) {
         let bit = 1u64 << e;
         self.failed |= bit;
+        self.quarantined &= !bit;
         self.unit &= !bit;
         self.idle &= !bit;
     }
@@ -77,6 +84,36 @@ impl EngineIndex {
     #[inline]
     pub fn failed_mask(&self) -> u64 {
         self.failed
+    }
+
+    /// Begin a rejoin (ISSUE 8): move engine `e` from failed to
+    /// quarantined.  The engine is still excluded from every candidate
+    /// set; a failed probe re-escalates with [`EngineIndex::mark_failed`],
+    /// a successful one promotes with [`EngineIndex::clear_quarantine`].
+    #[inline]
+    pub fn clear_failed(&mut self, e: usize) {
+        let bit = 1u64 << e;
+        self.failed &= !bit;
+        self.quarantined |= bit;
+        self.unit &= !bit;
+        self.idle &= !bit;
+    }
+
+    /// Complete a rejoin: lift the quarantine.  The engine rejoins the
+    /// candidate sets only through the driver's next `refresh_engine`.
+    #[inline]
+    pub fn clear_quarantine(&mut self, e: usize) {
+        self.quarantined &= !(1u64 << e);
+    }
+
+    #[inline]
+    pub fn is_quarantined(&self, e: usize) -> bool {
+        self.quarantined & (1u64 << e) != 0
+    }
+
+    #[inline]
+    pub fn quarantined_mask(&self) -> u64 {
+        self.quarantined
     }
 
     /// Mask-granular setters (simulator-style: a veng's `unit_bits` move
@@ -134,21 +171,21 @@ impl EngineIndex {
     /// `idle_engines`.
     #[inline]
     pub fn idle_count(&self) -> usize {
-        (self.idle & !self.failed).count_ones() as usize
+        (self.idle & !self.failed & !self.quarantined).count_ones() as usize
     }
 
     /// Engines eligible for a fresh elastic DP bind: unit mode, not
-    /// committed to a draining group, not failed.
+    /// committed to a draining group, not failed or quarantined.
     #[inline]
     pub fn dp_candidates(&self) -> u64 {
-        self.unit & !self.draining & !self.failed
+        self.unit & !self.draining & !self.failed & !self.quarantined
     }
 
     /// Draining unit engines — the backfill candidate set (admission still
     /// gated per engine by the horizon predicate).
     #[inline]
     pub fn backfill_candidates(&self) -> u64 {
-        self.unit & self.draining & !self.failed
+        self.unit & self.draining & !self.failed & !self.quarantined
     }
 }
 
@@ -202,6 +239,40 @@ mod tests {
         // Nor can it join the backfill set while draining.
         ix.set_draining_mask(0b0100);
         assert_eq!(ix.backfill_candidates(), 0);
+    }
+
+    #[test]
+    fn rejoin_lifecycle_failed_quarantined_cleared() {
+        let mut ix = EngineIndex::new();
+        for e in 0..4 {
+            ix.refresh_engine(e, true, true);
+        }
+        ix.mark_failed(2);
+        // Respawn: failed -> quarantined.  Still excluded from everything.
+        ix.clear_failed(2);
+        assert!(!ix.is_failed(2));
+        assert!(ix.is_quarantined(2));
+        assert_eq!(ix.quarantined_mask(), 0b0100);
+        assert_eq!(ix.idle_count(), 3);
+        assert_eq!(ix.dp_candidates(), 0b1011);
+        // Quarantine blocks resurrection-by-refresh just like failed.
+        ix.refresh_engine(2, true, true);
+        assert_eq!(ix.unit_mask(), 0b1011);
+        ix.set_draining_mask(0b0100);
+        assert_eq!(ix.backfill_candidates(), 0);
+        ix.set_draining_mask(0);
+        // Probe failure path: quarantined re-escalates back to failed.
+        ix.mark_failed(2);
+        assert!(ix.is_failed(2));
+        assert!(!ix.is_quarantined(2));
+        // Probe success path: quarantine lifts, then refresh readmits.
+        ix.clear_failed(2);
+        ix.clear_quarantine(2);
+        assert!(!ix.is_quarantined(2) && !ix.is_failed(2));
+        assert_eq!(ix.idle_count(), 3, "candidacy returns only via refresh");
+        ix.refresh_engine(2, true, true);
+        assert_eq!(ix.idle_count(), 4);
+        assert_eq!(ix.dp_candidates(), 0b1111);
     }
 
     #[test]

@@ -99,6 +99,12 @@ pub enum SchedEvent<H: Copy> {
     /// coordinator dirties every iteration via [`Kernel::note_dirty`]
     /// because its policies are wall-clock-time-varying.
     ControlPlan,
+    /// A failed engine healed and rejoined candidacy (ISSUE 8): its probe
+    /// step succeeded, its quarantine lifted, and its capacity is back.
+    /// Dirties the walk — a previously failed admission may now succeed on
+    /// the recovered capacity.  Both drivers heal through this one event,
+    /// so recovery cannot fork the scheduling decision stream.
+    EngineRejoin { engine: usize },
 }
 
 /// What the driver did with one waiting request during a walk.  `Defer`
@@ -167,7 +173,10 @@ impl<H: Copy> Kernel<H> {
                 self.rings.push(priority, h);
                 self.dirty = true;
             }
-            SchedEvent::StepComplete | SchedEvent::Settle | SchedEvent::ControlPlan => {
+            SchedEvent::StepComplete
+            | SchedEvent::Settle
+            | SchedEvent::ControlPlan
+            | SchedEvent::EngineRejoin { .. } => {
                 self.dirty = true;
             }
             SchedEvent::EngineFree => {}
@@ -407,6 +416,29 @@ mod tests {
         // A plan change can flip an elastic decision, so it must re-walk.
         k.on_event(SchedEvent::ControlPlan);
         assert!(k.should_walk());
+    }
+
+    #[test]
+    fn engine_rejoin_dirties_and_heals_candidacy_through_the_kernel() {
+        // The full heal path as both drivers run it: fail → clear_failed
+        // (quarantine) → probe ok → clear_quarantine + refresh + rejoin
+        // event.  The deferred request becomes schedulable again.
+        let mut k: Kernel<u32> = Kernel::new();
+        k.index.refresh_engine(0, true, true);
+        k.index.mark_failed(0);
+        k.on_event(SchedEvent::Arrival { h: 1, priority: Priority::Normal });
+        let mut walk = k.begin_walk();
+        while let Some((h, high)) = walk.next() {
+            walk.settle(h, high, 1, Placement::Defer);
+        }
+        k.end_walk(walk);
+        assert!(!k.should_walk());
+        k.index.clear_failed(0);
+        k.index.clear_quarantine(0);
+        k.index.refresh_engine(0, true, true);
+        k.on_event(SchedEvent::EngineRejoin { engine: 0 });
+        assert!(k.should_walk(), "rejoin must re-trigger the walk");
+        assert_eq!(k.index.dp_candidates(), 0b1);
     }
 
     #[test]

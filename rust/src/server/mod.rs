@@ -123,6 +123,10 @@ pub fn metrics_text(s: &ServerStats, f: &crate::metrics::FaultStats) -> String {
         .counter("flying_step_errors_total", "Degraded step errors absorbed by retry.", f.step_errors as f64)
         .counter("flying_requests_recovered_total", "Requests rescued off failed engines.", f.requests_recovered as f64)
         .counter("flying_requests_aborted_total", "Requests aborted after recovery exhaustion.", f.requests_aborted as f64)
+        .counter("flying_engine_revives_total", "Failed engines respawned for rejoin.", f.engine_revives as f64)
+        .counter("flying_rejoin_probes_total", "Probe steps issued to quarantined engines.", f.rejoin_probes as f64)
+        .counter("flying_rejoins_ok_total", "Rejoins that healed capacity.", f.rejoins_ok as f64)
+        .counter("flying_rejoins_abandoned_total", "Rejoins abandoned back to permanent fail-stop.", f.rejoins_abandoned as f64)
         .render()
 }
 
@@ -304,6 +308,10 @@ mod tests {
             step_errors: 5,
             requests_recovered: 6,
             requests_aborted: 0,
+            engine_revives: 7,
+            rejoin_probes: 8,
+            rejoins_ok: 9,
+            rejoins_abandoned: 1,
         };
         let text = metrics_text(&stats, &faults);
         // Prometheus text format: every family gets HELP + TYPE + a sample.
@@ -319,6 +327,10 @@ mod tests {
             ("flying_step_errors_total", 5),
             ("flying_requests_recovered_total", 6),
             ("flying_requests_aborted_total", 0),
+            ("flying_engine_revives_total", 7),
+            ("flying_rejoin_probes_total", 8),
+            ("flying_rejoins_ok_total", 9),
+            ("flying_rejoins_abandoned_total", 1),
         ] {
             assert!(text.contains(&format!("# TYPE {name} counter")), "{name} TYPE");
             assert!(text.contains(&format!("{name} {val}\n")), "{name} sample");

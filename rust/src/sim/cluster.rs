@@ -1680,6 +1680,36 @@ mod tests {
     }
 
     #[test]
+    fn shared_kernel_rejoin_event_heals_mask_state_sim_style() {
+        // The sim has no fault injector (single-process — nothing to kill),
+        // but it drives the SAME kernel as the real coordinator, so the
+        // rejoin lifecycle (fail → quarantine → `SchedEvent::EngineRejoin`
+        // → mask refresh) must compose with sim-style mask-granular index
+        // maintenance.  This pins that contract: a future sim fault model
+        // plugs in by emitting the same event stream, and the two paths
+        // cannot fork on what "an engine came back" means.
+        let mut kernel: Kernel<usize> = Kernel::new();
+        kernel.index.set_unit(0b1111, true);
+        kernel.index.set_idle(0b1111, true);
+        assert_eq!(kernel.index.idle_count(), 4);
+        // Instance 2 fail-stops; capacity shrinks immediately.
+        kernel.index.mark_failed(2);
+        assert_eq!(kernel.index.idle_count(), 3);
+        assert_eq!(kernel.index.dp_candidates(), 0b1011);
+        // Revive: quarantine first (still excluded), then the rejoin event
+        // dirties the walk gate and the mask refresh readmits the bits.
+        kernel.index.clear_failed(2);
+        assert_eq!(kernel.index.idle_count(), 3);
+        kernel.index.clear_quarantine(2);
+        kernel.on_event(SchedEvent::EngineRejoin { engine: 2 });
+        assert!(kernel.walk_pending(), "rejoin must schedule a re-walk");
+        kernel.index.set_unit(0b0100, true);
+        kernel.index.set_idle(0b0100, true);
+        assert_eq!(kernel.index.idle_count(), 4);
+        assert_eq!(kernel.index.dp_candidates(), 0b1111);
+    }
+
+    #[test]
     fn stall_rejects_instead_of_spinning() {
         // max_batch = 0 blocks every DP admission forever: the seed loop
         // would advance the heartbeat clock indefinitely; the event core

@@ -12,6 +12,13 @@
 //! * **faults off ≡ baseline** — a fault-free watchdog run is
 //!   byte-identical to the pre-watchdog path.
 //!
+//! ISSUE 8 extends the contract with fail-*recover*: under `recover`,
+//! transiently-dead engines rejoin through quarantine + probe, idle
+//! capacity heals back to `n_engines`, crash loops re-escalate to
+//! permanent fail-stop inside a bounded attempt budget, and with recovery
+//! off the revive markers are inert — byte-identical to the PR-6
+//! degradation path.
+//!
 //! Failures reproduce from the seed alone: `CHAOS_SEED=<n> cargo test`.
 
 use std::collections::BTreeSet;
@@ -24,7 +31,7 @@ use flying_serving::coordinator::{Cluster, ServeRequest};
 use flying_serving::engine::FaultPlan;
 use flying_serving::json::Value;
 use flying_serving::kv::KvCacheAdaptor;
-use flying_serving::metrics::FaultStats;
+use flying_serving::metrics::{FaultStats, Recorder};
 use flying_serving::model::{ModelCfg, StaticShapes};
 use flying_serving::workload::{synth_prompt_tokens, Priority, Scenario};
 
@@ -65,6 +72,19 @@ fn chaos_watchdog() -> WatchdogConfig {
         retries: 2,
         backoff: Duration::from_millis(100),
         max_request_retries: 2,
+        ..WatchdogConfig::default()
+    }
+}
+
+/// `chaos_watchdog` with fail-recover armed: short rejoin backoff so a
+/// whole revive cycle (fault → backoff → respawn → probe) fits inside a
+/// compressed chaos trace.
+fn recover_watchdog(max_rejoin_attempts: u32, backoff_ms: u64) -> WatchdogConfig {
+    WatchdogConfig {
+        recover: true,
+        max_rejoin_attempts,
+        rejoin_backoff: Duration::from_millis(backoff_ms),
+        ..chaos_watchdog()
     }
 }
 
@@ -422,4 +442,309 @@ fn fault_stats_counters_match_journal_events() {
     assert_eq!(n("engine_degraded"), 2, "{counts:?}");
     c.check_invariants().unwrap();
     c.shutdown();
+}
+
+/// ISSUE 8 tentpole gate: kill-then-revive chaos across every scenario.
+/// Randomized fault plans with every death forced transient, recovery
+/// armed — each run must terminate, conserve every request, and *heal*:
+/// after rejoins quiesce, no engine is failed or quarantined and idle
+/// capacity is back to all four engines.
+#[test]
+fn chaos_kill_then_revive_all_scenarios() {
+    let seed = chaos_seed();
+    let strategies = [Strategy::Sequential, Strategy::SoftPreempt, Strategy::HardPreempt];
+    for (i, sc) in Scenario::ALL.into_iter().enumerate() {
+        let t0 = Instant::now();
+        // Offset from the recover-off sweep so the two chaos tests explore
+        // different plan draws under the same CHAOS_SEED.
+        let run_seed = seed.wrapping_add(0x5EC0).wrapping_add(i as u64);
+        let plans: Vec<FaultPlan> = (0..4)
+            .map(|e| {
+                let mut p = FaultPlan::randomized(run_seed, e);
+                // Every death is transient and revives healthy, and dropped
+                // replies (which escalate to a *permanent* timeout fault
+                // with no death to revive) are stripped: the healing
+                // assertion below needs every fault to be recoverable.
+                // Stalls and slowdowns stay in — recovery must coexist
+                // with the ride-out paths.
+                if p.die_at.is_some() {
+                    p.revive_after = Some(0);
+                }
+                p.drop_reply_at.clear();
+                p
+            })
+            .collect();
+        let trace = scenario_trace(sc, run_seed, 36);
+        let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+        let strategy = strategies[i % strategies.len()];
+        let tag = format!("revive {sc} seed={run_seed:#x} strategy={}", strategy.name());
+
+        let mut c = Cluster::start_stub_with(cfg(), shapes(), 4, CHAOS_COMM_TIMEOUT, &plans)
+            .unwrap_or_else(|e| panic!("{tag}: start: {e:#}"));
+        c.set_watchdog(recover_watchdog(3, 20));
+        c.set_trace(true);
+        let out = c
+            .run_trace(trace, &mut FlyingPolicy::default(), strategy)
+            .unwrap_or_else(|e| panic!("{tag}: run_trace must recover, not error: {e:#}"));
+        // The trace can complete on the survivors while a backoff clock is
+        // still ticking; quiesce the rejoin queue before asserting health.
+        c.drive_rejoins_to_quiescence(&mut Recorder::new())
+            .unwrap_or_else(|e| panic!("{tag}: rejoin quiescence: {e:#}"));
+        append_chaos_trace(
+            &c,
+            Value::obj(vec![
+                ("run", Value::str(tag.clone())),
+                ("dropped", Value::num(c.journal().dropped() as f64)),
+            ]),
+        );
+
+        assert_conserved(&tag, &submitted, &out);
+        c.check_invariants()
+            .unwrap_or_else(|e| panic!("{tag}: KV invariants: {e:#}"));
+        // Healing: every transient death was revived, probed, and
+        // readmitted — the cluster ends with full idle capacity.
+        assert_eq!(c.failed_mask(), 0, "{tag}: transient deaths must all heal");
+        assert_eq!(c.quarantined_mask(), 0, "{tag}: no engine may be stuck in quarantine");
+        assert_eq!(c.idle_count(), 4, "{tag}: idle capacity must heal to n_engines");
+        let stats = c.fault_stats();
+        assert_eq!(stats.rejoins_abandoned, 0, "{tag}: healthy revives must not abandon");
+        assert_eq!(
+            stats.engine_revives, stats.rejoin_probes,
+            "{tag}: every revive is probed exactly once"
+        );
+        assert_eq!(
+            stats.rejoin_probes, stats.rejoins_ok,
+            "{tag}: healthy incarnations must pass their probe"
+        );
+        assert_eq!(
+            stats.engine_revives, stats.engine_faults,
+            "{tag}: every fault is a revived death, so counts pair 1:1"
+        );
+        // Journal audit (skipped only if the ring overflowed, which these
+        // 36-request traces do not approach).
+        if c.journal().dropped() == 0 {
+            let counts = c.journal().counts();
+            let n = |k: &str| counts.get(k).copied().unwrap_or(0);
+            assert_eq!(stats.engine_revives, n("engine_revive"), "{tag}: {counts:?}");
+            assert_eq!(stats.rejoin_probes, n("rejoin_probe"), "{tag}: {counts:?}");
+            assert_eq!(stats.rejoins_ok, n("rejoin_ok"), "{tag}: {counts:?}");
+            assert_eq!(stats.rejoins_abandoned, n("rejoin_abandoned"), "{tag}: {counts:?}");
+        }
+        c.shutdown();
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(30),
+            "{tag}: revive chaos took {elapsed:?} — recovery stalled the trace"
+        );
+    }
+}
+
+/// Directed revive of the acceptance scenario: the engine that died
+/// mid-switch comes back.  The revive sequence must run end to end —
+/// generation bump, communicator rejoin, fresh KV adaptor, quarantine
+/// probe, scheduler readmission — and the journal must audit each stage
+/// exactly once.
+#[test]
+fn revive_mid_switch_rejoins_and_heals() {
+    let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+    plans[1].die_at = Some(6);
+    plans[1].revive_after = Some(0); // transient: revives healthy
+
+    let mut trace = vec![req(1, 16, 10), req(2, 12, 8)];
+    let mut tp = req(3, 10, 3);
+    tp.tp_demand = Some(2);
+    tp.arrival = 0.05;
+    trace.push(tp);
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let t0 = Instant::now();
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(recover_watchdog(3, 10));
+    c.set_trace(true);
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::Sequential)
+        .expect("revive mid-switch must recover, not error");
+    c.drive_rejoins_to_quiescence(&mut Recorder::new()).unwrap();
+
+    assert_conserved("revive-mid-switch", &submitted, &out);
+    let stats = c.fault_stats();
+    assert_eq!(stats.engine_faults, 1, "exactly one scripted death");
+    assert_eq!(stats.engine_revives, 1, "the death must be revived exactly once");
+    assert_eq!(stats.rejoin_probes, 1);
+    assert_eq!(stats.rejoins_ok, 1, "a healthy incarnation must pass its probe");
+    assert_eq!(stats.rejoins_abandoned, 0);
+    assert_eq!(c.failed_mask(), 0, "engine 1 must be healed, not fail-stopped");
+    assert_eq!(c.quarantined_mask(), 0);
+    assert_eq!(c.idle_count(), 2, "idle capacity must heal to both engines");
+    assert_eq!(c.engine_generation(0), 0, "the survivor keeps its original incarnation");
+    assert_eq!(c.engine_generation(1), 1, "the revived engine is generation-bumped");
+    // Journal audit of the revive sequence, stage by stage.
+    let j = c.journal();
+    assert_eq!(j.dropped(), 0);
+    let counts = j.counts();
+    let n = |k: &str| counts.get(k).copied().unwrap_or(0);
+    assert_eq!(n("engine_revive"), 1, "{counts:?}");
+    assert_eq!(n("rejoin_probe"), 1, "{counts:?}");
+    assert_eq!(n("rejoin_ok"), 1, "{counts:?}");
+    assert_eq!(n("rejoin_abandoned"), 0, "{counts:?}");
+    c.check_invariants().unwrap();
+    c.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "revive mid-switch stalled: {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Crash-loop anti-livelock: an engine whose every incarnation dies again
+/// must exhaust the cumulative rejoin-attempt budget and re-escalate to
+/// *permanent* fail-stop — recovery may never retry forever.  Driven via
+/// `step_once` with a trickle of work so each revived incarnation is
+/// actually handed the command that kills it.
+#[test]
+fn crash_loop_reescalates_to_permanent_fail_stop() {
+    let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+    plans[1].die_at = Some(2);
+    // Every revived incarnation dies on its first post-probe command.
+    plans[1].revive_after = Some(1);
+
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(recover_watchdog(2, 5));
+    let mut rec = Recorder::new();
+    let mut policy = FlyingPolicy::default();
+    let mut next_id = 1u64;
+    let t0 = Instant::now();
+    while c.fault_stats().rejoins_abandoned == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "crash loop never abandoned: {:?}",
+            c.fault_stats()
+        );
+        // Keep work flowing: whenever an engine is idle, feed it a short
+        // request — a rejoined crash-looper gets bound (least-loaded) and
+        // promptly dies again, burning one attempt per cycle.
+        if c.idle_count() > 0 && next_id <= 512 {
+            c.submit(req(next_id, 6, 2), &mut rec);
+            next_id += 1;
+        }
+        let stepped = c
+            .step_once(&mut policy, Strategy::Sequential, &mut rec)
+            .expect("crash loop must degrade, not error");
+        if !stepped {
+            // Nothing runnable: let the rejoin backoff clocks mature.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    let stats = c.fault_stats();
+    assert_eq!(stats.rejoins_abandoned, 1, "abandonment is terminal, once");
+    assert_eq!(stats.engine_revives, 2, "the budget allows exactly 2 attempts");
+    assert_eq!(stats.rejoin_probes, 2);
+    assert_eq!(stats.rejoins_ok, 2, "probes pass; the crash fires on real work");
+    assert_eq!(
+        stats.engine_faults, 3,
+        "original death + one per crash-looping incarnation"
+    );
+    assert_eq!(c.failed_mask() & 0b10, 0b10, "engine 1 ends permanently fail-stopped");
+    assert_eq!(c.quarantined_mask(), 0);
+    assert_eq!(c.engine_generation(1), 2, "two respawns were attempted");
+    assert!(
+        !c.rejoin_pending(),
+        "an abandoned engine must leave the rejoin queue for good"
+    );
+    // Quiescence is already reached: this must return without reviving.
+    c.drive_rejoins_to_quiescence(&mut rec).unwrap();
+    assert_eq!(c.fault_stats().engine_revives, 2, "abandoned engines stay down");
+    c.check_invariants().unwrap();
+    c.shutdown();
+}
+
+/// Differential gate for the new flag: with recovery *off*, `revive_after`
+/// markers are inert — outputs, rejections, and every fault counter are
+/// byte-identical to the same plans with the markers stripped, no engine
+/// is ever respawned, and the PR-6 degradation endstate is unchanged.
+#[test]
+fn recover_off_ignores_revive_markers_byte_identical() {
+    let mk_trace = || {
+        let mut trace = vec![req(1, 16, 10), req(2, 12, 8)];
+        let mut tp = req(3, 10, 3);
+        tp.tp_demand = Some(2);
+        tp.arrival = 0.05;
+        trace.push(tp);
+        trace
+    };
+    let run = |revive_marker: bool| {
+        let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+        plans[1].die_at = Some(6);
+        if revive_marker {
+            plans[1].revive_after = Some(0);
+        }
+        let mut c =
+            Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+        c.set_watchdog(chaos_watchdog()); // recover stays off
+        let out = c
+            .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::Sequential)
+            .unwrap();
+        assert_eq!(c.engine_generation(1), 0, "recover off must never respawn");
+        assert_eq!(c.failed_mask() & 0b10, 0b10, "death stays permanent");
+        assert!(!c.rejoin_pending(), "recover off must never queue rejoins");
+        c.check_invariants().unwrap();
+        c.shutdown();
+        out
+    };
+    let marked = run(true);
+    let plain = run(false);
+    assert_eq!(marked.outputs, plain.outputs, "revive marker changed token values");
+    assert_eq!(marked.rejected, plain.rejected);
+    assert_eq!(marked.fault_stats, plain.fault_stats);
+    assert_eq!(marked.fault_stats.engine_revives, 0);
+    assert_eq!(marked.fault_stats.rejoin_probes, 0);
+    assert_eq!(marked.fault_stats.rejoins_ok, 0);
+    assert_eq!(marked.fault_stats.rejoins_abandoned, 0);
+}
+
+/// ISSUE 8 satellite: the stranded-rejection sweep threshold (a hard-coded
+/// `1_000` before this PR) is a config field.  With a tiny threshold the
+/// sweep still only counts *idle* iterations — work that is progressing on
+/// the survivor completes untouched, while the unbindable TP-2 request is
+/// swept into rejection instead of hanging the trace.
+#[test]
+fn stranded_sweep_threshold_is_configurable() {
+    let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+    plans[1].die_at = Some(2); // dies early, before the TP drain can bind
+
+    let mut trace = vec![req(1, 8, 12), req(2, 8, 12)];
+    let mut tp = req(3, 10, 3);
+    tp.tp_demand = Some(2);
+    tp.arrival = 0.05;
+    trace.push(tp);
+    let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+
+    let t0 = Instant::now();
+    let mut c =
+        Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+    c.set_watchdog(WatchdogConfig { stranded_sweep_iters: 25, ..chaos_watchdog() });
+    assert_eq!(c.watchdog().stranded_sweep_iters, 25, "knob must plumb through");
+    let out = c
+        .run_trace(trace, &mut FlyingPolicy::default(), Strategy::Sequential)
+        .expect("stranded sweep must degrade, not error");
+
+    assert_conserved("stranded-sweep", &submitted, &out);
+    assert!(
+        out.rejected.contains(&3),
+        "TP-2 demand with one of two engines dead must be swept into rejection"
+    );
+    assert!(
+        out.outputs.contains_key(&1),
+        "a tiny sweep threshold must not reject requests that are progressing"
+    );
+    c.check_invariants().unwrap();
+    c.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a 25-iteration sweep threshold must terminate promptly: {:?}",
+        t0.elapsed()
+    );
 }
