@@ -67,6 +67,22 @@
 //!     The coordinator alloc probe in part 2 runs with `set_trace(true)`,
 //!     so the zero-alloc gate also covers an armed journal.
 //!
+//! And the step-pipeline overlap probes (ISSUE 9):
+//!
+//! 11. **Overlap differential**: switch_churn and poisson_burst under
+//!     Flying with `--overlap` off vs on (migrate armed on both sides so
+//!     there are transfer windows to hide).  Off must stay byte-identical
+//!     to the loop reference (hard gate); on reports the engine-seconds of
+//!     migration hidden inside drain windows (`pipeline_overlap_s`) and
+//!     the stall-reduction verdict.  The stall-attribution probe (10) now
+//!     runs with overlap armed too, so its 1e-9 reconstruction gate covers
+//!     the extended identity
+//!     `switch_stall_s = drain_wait + settle + migration
+//!                       - backfill_recovered - pipeline_overlap`.
+//!     The coordinator alloc probe in part 2 arms `--overlap` as well: the
+//!     double-buffered arenas are two warm slots, so the steady-state
+//!     decode path must still be allocation-free (median 0 allocs/step).
+//!
 //! Usage:  cargo bench --bench sched_hotpath [-- --quick]
 //!   --quick  : 20k-request simulator trace (CI smoke; full mode uses 100k
 //!              and can take minutes in the O(n²) reference).
@@ -82,7 +98,7 @@ use std::time::{Duration, Instant};
 
 use flying_serving::baselines::StaticDpPolicy;
 use flying_serving::coordinator::policy::FlyingPolicy;
-use flying_serving::coordinator::strategy::{Strategy, SwitchConfig, WatchdogConfig};
+use flying_serving::coordinator::strategy::{OverlapConfig, Strategy, SwitchConfig, WatchdogConfig};
 use flying_serving::coordinator::{Cluster, ServeRequest};
 use flying_serving::engine::FaultPlan;
 use flying_serving::kv::KvCacheAdaptor;
@@ -243,6 +259,12 @@ fn coordinator_alloc_probe() -> anyhow::Result<AllocRow> {
     // the steady-state decode path must record nothing and allocate
     // nothing — the same zero-alloc gate covers it.
     cluster.set_trace(true);
+    // And the step pipeline (ISSUE 9): double-buffering prebuilds batch
+    // N+1 into a second arena while batch N executes.  Both arenas warm up
+    // during the ramp below (the prebuild slot grows once, like the front
+    // slot), so with two warm slots the swap is a pointer exchange and the
+    // measured steady state must stay at 0 allocs/step.
+    cluster.set_overlap_config(OverlapConfig { enabled: true, ..OverlapConfig::default() });
     let mut recorder = Recorder::new();
     let mut policy = StaticDpPolicy;
 
@@ -465,14 +487,16 @@ struct StallRow {
     settle_s: f64,
     migration_s: f64,
     backfill_recovered_s: f64,
+    pipeline_overlap_s: f64,
     aggregate_s: f64,
     components_sum_ok: bool,
 }
 
-/// Run one switch-heavy scenario with backfill + migrate armed (the richest
-/// transition path: every stall component can be nonzero) and check the
-/// attribution identity
-/// `switch_stall_s = drain_wait + settle + migration - backfill_recovered`
+/// Run one switch-heavy scenario with backfill + migrate + overlap armed
+/// (the richest transition path: every stall component can be nonzero) and
+/// check the attribution identity
+/// `switch_stall_s = drain_wait + settle + migration
+///                   - backfill_recovered - pipeline_overlap`
 /// to 1e-9 — the components are accumulated at the exact sites the
 /// aggregate is touched, so any drift means a site was missed.
 fn stall_attribution_probe(scenario: Scenario, cm: &CostModel, n: usize) -> StallRow {
@@ -480,6 +504,7 @@ fn stall_attribution_probe(scenario: Scenario, cm: &CostModel, n: usize) -> Stal
     let cfg = SimConfig {
         switch_backfill: true,
         switch_migrate: true,
+        overlap: true,
         ..SimConfig::default()
     };
     let o = simulate(SimSystem::Flying, cm, &trace, &cfg);
@@ -498,18 +523,83 @@ fn stall_attribution_probe(scenario: Scenario, cm: &CostModel, n: usize) -> Stal
         settle_s: o.stall.settle_s,
         migration_s: o.stall.migration_s,
         backfill_recovered_s: o.stall.backfill_recovered_s,
+        pipeline_overlap_s: o.stall.pipeline_overlap_s,
         aggregate_s: o.switch_stall_s,
         components_sum_ok: ok,
     };
     println!(
-        "stall {:18} drain-wait={:8.3} settle={:8.3} migration={:8.3} backfill-recovered={:8.3} aggregate={:8.3} sum-ok={}",
+        "stall {:18} drain-wait={:8.3} settle={:8.3} migration={:8.3} backfill-recovered={:8.3} pipeline-overlap={:8.3} aggregate={:8.3} sum-ok={}",
         row.scenario,
         row.drain_wait_s,
         row.settle_s,
         row.migration_s,
         row.backfill_recovered_s,
+        row.pipeline_overlap_s,
         row.aggregate_s,
         row.components_sum_ok,
+    );
+    row
+}
+
+// ---------------------------------------------------------------------------
+// Part 3e — step-pipeline overlap: migration hidden inside drain windows
+// (ISSUE 9)
+// ---------------------------------------------------------------------------
+
+struct OverlapRow {
+    scenario: &'static str,
+    stall_off_s: f64,
+    stall_on_s: f64,
+    overlap_s: f64,
+    migration_equal: bool,
+    off_equivalent: bool,
+}
+
+/// Run one switch-heavy scenario under Flying with `overlap` off and on,
+/// migrate armed on both sides so there are transfer windows to hide.  Two
+/// gates: the plain overlap-off run must stay byte-identical to the loop
+/// reference (hard gate — same discipline as backfill/migrate/watchdog
+/// off), and overlap may only *re-attribute* migration time, never change
+/// how much migration happened (`migration_s` equal within 1e-9, hard
+/// gate).  The stall-reduction verdict is reported per scenario; the
+/// aggregate PASS/MISS in main is advisory like the other dynamics-
+/// dependent verdicts.
+fn overlap_compare(scenario: Scenario, cm: &CostModel, n: usize) -> OverlapRow {
+    let trace = scenario.generate(4242, n);
+
+    // Hard gate: overlap-off on the plain path is the seed behavior.
+    let base_cfg = SimConfig { overlap: false, ..SimConfig::default() };
+    let base = simulate(SimSystem::Flying, cm, &trace, &base_cfg);
+    let reference = simulate_reference(SimSystem::Flying, cm, &trace, &base_cfg);
+    let off_equivalent = match outcomes_equivalent(&base, &reference) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("overlap {scenario}: overlap-off diverged from reference: {e}");
+            false
+        }
+    };
+
+    let off_cfg = SimConfig { switch_migrate: true, overlap: false, ..SimConfig::default() };
+    let off = simulate(SimSystem::Flying, cm, &trace, &off_cfg);
+    let on_cfg = SimConfig { switch_migrate: true, overlap: true, ..SimConfig::default() };
+    let on = simulate(SimSystem::Flying, cm, &trace, &on_cfg);
+
+    let row = OverlapRow {
+        scenario: scenario.label(),
+        stall_off_s: off.switch_stall_s,
+        stall_on_s: on.switch_stall_s,
+        overlap_s: on.stall.pipeline_overlap_s,
+        migration_equal: (on.stall.migration_s - off.stall.migration_s).abs() < 1e-9,
+        off_equivalent,
+    };
+    println!(
+        "overlap {:18} stall_off={:8.3} engine-s stall_on={:8.3} engine-s hidden={:8.3} engine-s migration-equal={} off-equiv={}",
+        row.scenario,
+        row.stall_off_s,
+        row.stall_on_s,
+        row.overlap_s,
+        row.migration_equal,
+        row.off_equivalent,
     );
     row
 }
@@ -1089,6 +1179,33 @@ fn main() -> anyhow::Result<()> {
         if stall_sum_ok { "PASS" } else { "FAIL" },
     );
 
+    println!("\n== sched_hotpath: step-pipeline overlap (migration hidden in drain windows) ==");
+    let overlap_rows = vec![
+        overlap_compare(Scenario::SwitchChurn, &cm, n_switchy),
+        overlap_compare(Scenario::PoissonBurst, &cm, n_switchy),
+    ];
+    let overlap_off_equiv = overlap_rows.iter().all(|r| r.off_equivalent);
+    let overlap_migration_equal = overlap_rows.iter().all(|r| r.migration_equal);
+    let overlap_reduced = overlap_rows
+        .iter()
+        .all(|r| r.overlap_s > 0.0 && r.stall_on_s < r.stall_off_s);
+    // Stall reduction depends on the scenario producing carried migrations
+    // (switch_churn always does; burst shapes vary), so the verdict is
+    // advisory; the off-mode differential and the migration-conservation
+    // check are the deterministic gates.
+    println!(
+        "overlap hides migration on every scenario: {}",
+        if overlap_reduced { "PASS" } else { "MISS" },
+    );
+    println!(
+        "overlap re-attributes (never changes) migration time: {}",
+        if overlap_migration_equal { "PASS" } else { "FAIL" },
+    );
+    println!(
+        "overlap-off outcome equivalence vs reference: {}",
+        if overlap_off_equiv { "PASS" } else { "FAIL" },
+    );
+
     println!("\n== sched_hotpath: scheduling-kernel dispatch overhead ==");
     let kernel = kernel_dispatch_probe();
     // The kernel abstraction may cost nanoseconds, never decisions: the
@@ -1181,14 +1298,29 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|r| {
             format!(
-                "{{\"scenario\":\"{}\",\"drain_wait_s\":{:.6},\"settle_s\":{:.6},\"migration_s\":{:.6},\"backfill_recovered_s\":{:.6},\"aggregate_s\":{:.6},\"components_sum_ok\":{}}}",
+                "{{\"scenario\":\"{}\",\"drain_wait_s\":{:.6},\"settle_s\":{:.6},\"migration_s\":{:.6},\"backfill_recovered_s\":{:.6},\"pipeline_overlap_s\":{:.6},\"aggregate_s\":{:.6},\"components_sum_ok\":{}}}",
                 r.scenario,
                 r.drain_wait_s,
                 r.settle_s,
                 r.migration_s,
                 r.backfill_recovered_s,
+                r.pipeline_overlap_s,
                 r.aggregate_s,
                 r.components_sum_ok,
+            )
+        })
+        .collect();
+    let overlaps_json: Vec<String> = overlap_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"scenario\":\"{}\",\"stall_off_engine_s\":{:.4},\"stall_on_engine_s\":{:.4},\"pipeline_overlap_s\":{:.4},\"migration_equal\":{},\"off_equivalent\":{}}}",
+                r.scenario,
+                r.stall_off_s,
+                r.stall_on_s,
+                r.overlap_s,
+                r.migration_equal,
+                r.off_equivalent,
             )
         })
         .collect();
@@ -1203,7 +1335,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     writeln!(
         f,
-        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"stall_attribution\":{{\"n_requests\":{},\"rows\":[{}],\"components_sum_ok\":{}}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}},\"fault_tolerance\":{{\"watchdog_off_equivalent\":{},\"chaos\":{{\"seed\":{},\"wall_s\":{:.3},\"conserved\":{},\"invariants_ok\":{},\"engine_faults\":{},\"reply_timeouts\":{},\"stalls_ridden_out\":{},\"step_errors\":{},\"requests_recovered\":{},\"requests_aborted\":{}}},\"margin_sweep\":{{\"default_margin\":{:.2},\"monotone\":{},\"rows\":[{}]}}}}}}",
+        "{{\"n_requests\":{},\"quick\":{},\"simulator\":[{}],\"switch_stall\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{}}},\"kv_migrate\":{{\"n_requests\":{},\"rows\":[{}],\"carried_everywhere\":{},\"ttft_ok\":{}}},\"stall_attribution\":{{\"n_requests\":{},\"rows\":[{}],\"components_sum_ok\":{}}},\"overlap\":{{\"n_requests\":{},\"rows\":[{}],\"stall_reduced\":{},\"migration_equal\":{},\"alloc_probe_armed\":true}},\"sched_kernel\":{{\"n_decisions\":{},\"kernel_ns\":{:.2},\"reference_ns\":{:.2},\"overhead_frac\":{:.4},\"equivalent\":{}}},\"kv_lookup\":{{\"n_live\":{},\"handle_ns\":{:.2},\"id_ns\":{:.2},\"speedup\":{:.3}}},\"coordinator\":{{\"steps\":{},\"median_allocs_per_step\":{},\"mean_allocs_per_step\":{:.3},\"steps_per_s\":{:.1},\"run_trace_rps\":{:.1}}},\"fault_tolerance\":{{\"watchdog_off_equivalent\":{},\"chaos\":{{\"seed\":{},\"wall_s\":{:.3},\"conserved\":{},\"invariants_ok\":{},\"engine_faults\":{},\"reply_timeouts\":{},\"stalls_ridden_out\":{},\"step_errors\":{},\"requests_recovered\":{},\"requests_aborted\":{}}},\"margin_sweep\":{{\"default_margin\":{:.2},\"monotone\":{},\"rows\":[{}]}}}}}}",
         n_requests,
         quick,
         sims.join(","),
@@ -1217,6 +1349,10 @@ fn main() -> anyhow::Result<()> {
         n_switchy,
         stalls_json.join(","),
         stall_sum_ok,
+        n_switchy,
+        overlaps_json.join(","),
+        overlap_reduced,
+        overlap_migration_equal,
         kernel.n_decisions,
         kernel.kernel_ns,
         kernel.reference_ns,
@@ -1264,6 +1400,12 @@ fn main() -> anyhow::Result<()> {
     }
     if !stall_sum_ok {
         anyhow::bail!("stall components do not reconstruct switch_stall_s within 1e-9");
+    }
+    if !overlap_off_equiv {
+        anyhow::bail!("overlap-off run diverged from the reference simulator");
+    }
+    if !overlap_migration_equal {
+        anyhow::bail!("overlap changed migration_s instead of re-attributing it");
     }
     if alloc.median_allocs != 0 {
         anyhow::bail!(

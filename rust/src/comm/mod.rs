@@ -23,6 +23,17 @@
 //! per collective**.  `all_gather_into` exposes the same property to
 //! callers by writing the flat gathered vector into a caller-provided
 //! buffer.
+//!
+//! Asynchronous completion contract (ISSUE 9, `--overlap`): a collective
+//! may be *issued* by the coordinator without its replies being collected
+//! in the same scheduling round — the member workers still meet it in
+//! lockstep on their own threads, concurrently with commands running on
+//! non-member engines.  Two rules make this safe with no changes here:
+//! the coordinator sends **at most one** uncollected command per member
+//! (the engine channel depth is 2, so a queued reply can never block a
+//! worker), and the in-flight transfer is drained at the next safe point
+//! *before* any other command — in particular any `SetMode` that would
+//! re-enter this pool with a different membership — is sent to a member.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};

@@ -53,6 +53,12 @@ pub struct ServeConfig {
     /// Idle iterations before the degraded-cell stranded sweep
     /// (`WatchdogConfig::stranded_sweep_iters`).  0 keeps the default (1000).
     pub stranded_sweep_iters: usize,
+    /// Step-pipeline overlap (ISSUE 9, `coordinator::strategy::
+    /// OverlapConfig` / `SimConfig::overlap`).  Off by default: building,
+    /// issuing, and collecting then run the exact pre-overlap lockstep on
+    /// both execution paths.  On: double-buffered step arenas, asynchronous
+    /// migration collectives, and prefill/decode co-issue.
+    pub overlap: bool,
     /// Flight recorder (ISSUE 7).  Off by default: no journal is
     /// allocated and behavior is byte-identical to an untraced run; on,
     /// both execution paths record switch/migration/backfill/fault/
@@ -86,6 +92,7 @@ impl Default for ServeConfig {
             rejoin_backoff_ms: 0,
             max_step_err_streak: 0,
             stranded_sweep_iters: 0,
+            overlap: false,
             trace: false,
             trace_out: "bench_out/trace.jsonl".into(),
         }
@@ -140,6 +147,7 @@ impl ServeConfig {
                 "rejoin-backoff-ms" => c.rejoin_backoff_ms = v.parse()?,
                 "max-step-err-streak" => c.max_step_err_streak = v.parse()?,
                 "stranded-sweep-iters" => c.stranded_sweep_iters = v.parse()?,
+                "overlap" => c.overlap = v == "true",
                 "trace" => c.trace = v == "true",
                 "trace-out" => c.trace_out = v.clone(),
                 _ => bail!("unknown flag --{k}"),
@@ -199,6 +207,15 @@ impl ServeConfig {
             w.stranded_sweep_iters = self.stranded_sweep_iters;
         }
         w
+    }
+
+    /// Step-pipeline overlap tuning from `--overlap` (ISSUE 9; the three
+    /// sub-mechanisms ship armed and gate on the master switch).
+    pub fn make_overlap_config(&self) -> crate::coordinator::strategy::OverlapConfig {
+        crate::coordinator::strategy::OverlapConfig {
+            enabled: self.overlap,
+            ..Default::default()
+        }
     }
 
     /// Instantiate the configured policy with no testbed calibration:
@@ -373,6 +390,18 @@ mod tests {
         let (_, f) = parse_args(&s(&["--recover"])).unwrap();
         let w = ServeConfig::from_flags(&f).unwrap().make_watchdog_config();
         assert!(w.validate(std::time::Duration::from_secs(30)).is_err());
+    }
+
+    #[test]
+    fn overlap_flag_parses_and_stays_off_by_default() {
+        let (_, flags) = parse_args(&s(&["--overlap"])).unwrap();
+        let c = ServeConfig::from_flags(&flags).unwrap();
+        assert!(c.overlap);
+        let o = c.make_overlap_config();
+        assert!(o.enabled && o.double_buffer_on() && o.async_migrate_on() && o.co_issue_on());
+        // Off by default — the byte-identical discipline's anchor.
+        let d = ServeConfig::default().make_overlap_config();
+        assert!(!d.enabled && !d.double_buffer_on() && !d.async_migrate_on() && !d.co_issue_on());
     }
 
     #[test]

@@ -93,12 +93,12 @@ use crate::error::FaultKind;
 use crate::kv::{KvCacheAdaptor, KvHandle, MigrationPlan};
 use crate::metrics::{FaultStats, RecSlot, Recorder};
 use crate::model::{ModelCfg, StaticShapes};
-use crate::sched::{lifecycle, Kernel, LeastLoaded, Placement, SchedEvent};
+use crate::sched::{lifecycle, Kernel, LeastLoaded, Placement, PrebuildStamp, SchedEvent};
 use crate::sim::{CostModel, HwSpec, PaperModel};
 use crate::util::slab::{Slab, SlabHandle};
 use crate::workload::Priority;
 use policy::{ModeDecision, Policy, Snapshot};
-use strategy::{Strategy, SwitchConfig, WatchdogConfig};
+use strategy::{OverlapConfig, Strategy, SwitchConfig, WatchdogConfig};
 
 pub const EOS: i32 = 257;
 
@@ -217,6 +217,10 @@ struct Issued {
     home: usize,
     p: usize,
     is_prefill: bool,
+    /// Prefill/decode co-issue envelope (ISSUE 9, `--overlap` only): the
+    /// reply is `EngineReply::CoStep`, publishing the stashed prefill
+    /// handle *and* the decode batch in `issued_hs`.
+    co: bool,
 }
 
 /// Per-engine step-input arenas.  The `Arc`s are shared with the engine
@@ -231,6 +235,23 @@ struct EngineScratch {
     /// (prefill: one entry; decode: batch order) — read back at publish
     /// time so result routing needs no id lookups.
     issued_hs: Vec<SlabHandle>,
+    /// Back arena of the double-buffered pipeline (ISSUE 9,
+    /// `OverlapConfig::double_buffer` only): batch N+1's slots, pre-
+    /// materialized while batch N executes.  Never in flight — the engine
+    /// only ever holds `decode_batch`'s clone, so both arenas are uniquely
+    /// owned whenever the coordinator touches them (`Arc::make_mut` never
+    /// copies; the lockstep reply is the slot-swap barrier).
+    next_batch: Arc<Vec<DecodeSlot>>,
+    /// The exact `(handle, position)` sequence `next_batch` was built from
+    /// — the bounded-staleness stamp compared against live state at issue
+    /// time.  Empty = no prebuild pending.
+    next_stamp: PrebuildStamp<SlabHandle>,
+    /// Logical id (0/1) of the arena currently in `decode_batch`, for the
+    /// `slot_issue`/`slot_retire` journal events; flips on every swap.
+    front: u8,
+    /// Prefill handle stashed by a co-issue envelope (`issued_hs` carries
+    /// the decode batch); taken back when the `CoStep` reply publishes.
+    co_prefill_h: Option<SlabHandle>,
 }
 
 impl Default for EngineScratch {
@@ -240,6 +261,10 @@ impl Default for EngineScratch {
             prefill_chunk: Arc::new(PrefillChunk::default()),
             spare_slots: Vec::new(),
             issued_hs: Vec::new(),
+            next_batch: Arc::new(Vec::new()),
+            next_stamp: PrebuildStamp::default(),
+            front: 0,
+            co_prefill_h: None,
         }
     }
 }
@@ -369,9 +394,39 @@ pub struct Cluster {
     /// `Policy::last_tick` once per scheduling round records each tick once.
     journal_tick_seq: usize,
 
+    /// Step-pipeline overlap configuration (ISSUE 9).  Off by default: the
+    /// coordinator then builds, issues, and collects exactly as before —
+    /// differential tests pin the off path byte-identical per scenario.
+    overlap_cfg: OverlapConfig,
+    /// Tagged in-flight KV-migration transfers (`OverlapConfig::
+    /// async_migrate` only): the scatter was issued but its replies not yet
+    /// collected; the member engines keep running it while *other* engines
+    /// take decode steps.  Drained at the next safe point.
+    async_migrations: Vec<AsyncMigration>,
+    /// Bitmask of engines with an async transfer in flight — masked out of
+    /// step issue (their single in-flight command slot is the transfer;
+    /// `CHANNEL_DEPTH` is 2, so a second command plus its reply could
+    /// deadlock the lockstep against a third).
+    async_busy: u64,
+
     // hot-path arenas
     engine_scratch: Vec<EngineScratch>,
     scratch: StepScratch,
+}
+
+/// A KV-migration scatter issued without collecting its replies (ISSUE 9):
+/// everything the deferred completion needs to finish the bookkeeping the
+/// inline path does synchronously.  Generational handles make late
+/// completion stale-tolerant — if the request is recovered or finished by
+/// drain time, `fault_recover` simply resolves to a no-op.
+#[derive(Clone, Copy, Debug)]
+struct AsyncMigration {
+    h: SlabHandle,
+    rid: u64,
+    start: usize,
+    p: usize,
+    kv_pos: usize,
+    issued_at: f64,
 }
 
 impl Cluster {
@@ -517,6 +572,9 @@ impl Cluster {
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
             journal: crate::obs::Journal::off(),
             journal_tick_seq: 0,
+            overlap_cfg: OverlapConfig::default(),
+            async_migrations: Vec::new(),
+            async_busy: 0,
             engine_scratch: (0..n_engines).map(|_| EngineScratch::default()).collect(),
             scratch: StepScratch::default(),
         };
@@ -563,6 +621,17 @@ impl Cluster {
 
     pub fn watchdog(&self) -> WatchdogConfig {
         self.watchdog
+    }
+
+    /// Step-pipeline overlap tuning (ISSUE 9).  Off by default: building,
+    /// issuing, and collecting then run exactly the pre-overlap lockstep —
+    /// the differential suite pins the off path byte-identical.
+    pub fn set_overlap_config(&mut self, cfg: OverlapConfig) {
+        self.overlap_cfg = cfg;
+    }
+
+    pub fn overlap_config(&self) -> OverlapConfig {
+        self.overlap_cfg
     }
 
     /// Idle serving capacity as the kernel index counts it (excludes
@@ -845,6 +914,14 @@ impl Cluster {
         start..start + p
     }
 
+    fn member_mask(&self, start: usize, p: usize) -> u64 {
+        let mut m = 0u64;
+        for e in self.members(start, p) {
+            m |= 1u64 << e;
+        }
+        m
+    }
+
     /// Recompute the kernel index's unit/idle bits for engine `e`.  Must be
     /// called after any mutation of `engine_mode[e]` or `engine_active[e]`.
     /// (An empty draining unit engine counts as idle until its switch lands
@@ -1043,6 +1120,10 @@ impl Cluster {
         if self.pending_faults.is_empty() && self.fault_recover.is_empty() {
             return Ok(());
         }
+        // Degrading a group whose members still run an async transfer would
+        // interleave `SetMode` replies with the scatter's — complete every
+        // in-flight transfer first (ISSUE 9; no-op with `--overlap` off).
+        self.drain_async_migrations()?;
         while let Some(e) = self.pending_faults.pop() {
             self.degrade_engine(e, recorder)?;
         }
@@ -1409,6 +1490,13 @@ impl Cluster {
         loop {
             let now = self.now();
 
+            // Complete any KV-migration transfer still in flight from the
+            // previous iteration (ISSUE 9): the loop top is a safe point —
+            // no step outstanding anywhere — and the transfer has had a full
+            // execute-step round of the other engines to overlap with.
+            // No-op with `--overlap` off.
+            self.drain_async_migrations()?;
+
             // Dissolve/settle groups first so freshly-freed engines are
             // visible to this iteration's mode decisions, then run the
             // recovery and graceful-degradation passes for any fault the
@@ -1538,6 +1626,7 @@ impl Cluster {
         strategy: Strategy,
         recorder: &mut Recorder,
     ) -> Result<bool> {
+        self.drain_async_migrations()?;
         self.settle_groups(recorder)?;
         self.process_rejoins(recorder)?;
         self.process_faults(recorder)?;
@@ -2307,6 +2396,21 @@ impl Cluster {
                             kv_pos,
                             p * self.migrate_cm.model.min_gpus,
                         );
+                        if migrate_kv
+                            && self.overlap_cfg.async_migrate_on()
+                            && self.async_busy & self.member_mask(start, p) != 0
+                        {
+                            // One tagged transfer per member set (ISSUE 9):
+                            // `CHANNEL_DEPTH` is 2, so stacking a second
+                            // scatter on engines still running one could
+                            // deadlock the lockstep — complete the in-flight
+                            // transfer first, then re-check the members.
+                            self.drain_async_migrations()?;
+                            if self.members(start, p).any(|e| self.kernel.index.is_failed(e)) {
+                                self.groups.get_mut(&start).unwrap().tp_pending.push(h);
+                                continue;
+                            }
+                        }
                         if migrate_kv {
                             // Home side: pin seq_len to the cached position
                             // (prefill never advances it), then re-tag the
@@ -2365,80 +2469,116 @@ impl Cluster {
                                     n_elems: plan.elems_per_member,
                                 });
                             }
-                            // Collect every member's reply before surfacing
-                            // an error: bailing mid-collection would leave
-                            // replies queued on the persistent channels and
-                            // mis-attribute them to the next command a
-                            // `step_once`-driven host issues.
-                            let mut first_err: Option<String> = None;
-                            let mut faulted = false;
-                            for e in self.members(start, p) {
-                                if self.watchdog.enabled {
-                                    match self.recv_reply_watched(e) {
-                                        Ok(EngineReply::Err(msg)) => {
-                                            if first_err.is_none() {
-                                                first_err =
-                                                    Some(format!("engine {e}: {msg}"));
-                                            }
-                                        }
-                                        Ok(_) => {}
-                                        Err(kind) => {
-                                            self.note_engine_fault(e, kind);
-                                            faulted = true;
-                                        }
-                                    }
-                                } else {
-                                    match self.engines[e].recv() {
-                                        Ok(EngineReply::Err(msg)) => {
-                                            if first_err.is_none() {
-                                                first_err =
-                                                    Some(format!("engine {e}: {msg}"));
-                                            }
-                                        }
-                                        Ok(_) => {}
-                                        Err(dead) => {
-                                            if first_err.is_none() {
-                                                first_err = Some(dead.to_string());
-                                            }
-                                        }
-                                    }
-                                }
-                            }
-                            if faulted || (self.watchdog.enabled && first_err.is_some()) {
-                                // Safe transition abort (ISSUE 6): the
-                                // adaptor metadata is self-consistent after
-                                // `apply_migration`, so recovery can reclaim
-                                // the re-tagged blocks and requeue the
-                                // request for recompute at the next fault
-                                // pass — no state violates the group
-                                // invariants in the meantime.
-                                self.fault_stats.step_errors += usize::from(!faulted);
-                                if !faulted {
-                                    let t_now = self.now();
-                                    self.journal.record(
-                                        t_now,
-                                        crate::obs::Event::StepError {
-                                            engine: start as u32,
-                                            streak: 0,
-                                        },
-                                    );
-                                }
-                                self.fault_recover.push(h);
-                                continue;
-                            }
-                            if let Some(msg) = first_err {
-                                bail!("kv migration failed: {msg}");
-                            }
-                            self.recompute_tokens_avoided += kv_pos;
-                            let t_now = self.now();
-                            self.journal.record(
-                                t_now,
-                                crate::obs::Event::MigrateApply {
+                            if self.overlap_cfg.async_migrate_on() {
+                                // Overlap 2 (ISSUE 9): leave the scatter in
+                                // flight as a tagged transfer instead of
+                                // blocking here.  The member engines execute
+                                // it concurrently with the next decode steps
+                                // on every *other* engine; the replies (and
+                                // the deferred `MigrateApply` bookkeeping)
+                                // are collected at the next safe point by
+                                // `drain_async_migrations`.  The metadata
+                                // tail below still runs now — the adaptor
+                                // state is already migrated, only the data-
+                                // plane completion is outstanding, and the
+                                // busy mask keeps the group unstepped until
+                                // it lands.
+                                self.async_busy |= self.member_mask(start, p);
+                                let t_now = self.now();
+                                self.async_migrations.push(AsyncMigration {
+                                    h,
                                     rid,
-                                    tokens: kv_pos as u64,
-                                    cost_s: 0.0,
-                                },
-                            );
+                                    start,
+                                    p,
+                                    kv_pos,
+                                    issued_at: t_now,
+                                });
+                                self.journal.record(
+                                    t_now,
+                                    crate::obs::Event::AsyncMigrateBegin {
+                                        rid,
+                                        tokens: kv_pos as u64,
+                                        window_s: 0.0,
+                                    },
+                                );
+                            } else {
+                                // Collect every member's reply before
+                                // surfacing an error: bailing mid-collection
+                                // would leave replies queued on the
+                                // persistent channels and mis-attribute them
+                                // to the next command a `step_once`-driven
+                                // host issues.
+                                let mut first_err: Option<String> = None;
+                                let mut faulted = false;
+                                for e in self.members(start, p) {
+                                    if self.watchdog.enabled {
+                                        match self.recv_reply_watched(e) {
+                                            Ok(EngineReply::Err(msg)) => {
+                                                if first_err.is_none() {
+                                                    first_err =
+                                                        Some(format!("engine {e}: {msg}"));
+                                                }
+                                            }
+                                            Ok(_) => {}
+                                            Err(kind) => {
+                                                self.note_engine_fault(e, kind);
+                                                faulted = true;
+                                            }
+                                        }
+                                    } else {
+                                        match self.engines[e].recv() {
+                                            Ok(EngineReply::Err(msg)) => {
+                                                if first_err.is_none() {
+                                                    first_err =
+                                                        Some(format!("engine {e}: {msg}"));
+                                                }
+                                            }
+                                            Ok(_) => {}
+                                            Err(dead) => {
+                                                if first_err.is_none() {
+                                                    first_err = Some(dead.to_string());
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                                if faulted || (self.watchdog.enabled && first_err.is_some()) {
+                                    // Safe transition abort (ISSUE 6): the
+                                    // adaptor metadata is self-consistent
+                                    // after `apply_migration`, so recovery
+                                    // can reclaim the re-tagged blocks and
+                                    // requeue the request for recompute at
+                                    // the next fault pass — no state
+                                    // violates the group invariants in the
+                                    // meantime.
+                                    self.fault_stats.step_errors += usize::from(!faulted);
+                                    if !faulted {
+                                        let t_now = self.now();
+                                        self.journal.record(
+                                            t_now,
+                                            crate::obs::Event::StepError {
+                                                engine: start as u32,
+                                                streak: 0,
+                                            },
+                                        );
+                                    }
+                                    self.fault_recover.push(h);
+                                    continue;
+                                }
+                                if let Some(msg) = first_err {
+                                    bail!("kv migration failed: {msg}");
+                                }
+                                self.recompute_tokens_avoided += kv_pos;
+                                let t_now = self.now();
+                                self.journal.record(
+                                    t_now,
+                                    crate::obs::Event::MigrateApply {
+                                        rid,
+                                        tokens: kv_pos as u64,
+                                        cost_s: 0.0,
+                                    },
+                                );
+                            }
                             // pos/phase stay untouched: decode (or the
                             // remaining prefill) resumes exactly where the
                             // speculative run left off — nothing recomputed.
@@ -2484,6 +2624,107 @@ impl Cluster {
         if dirty_draining {
             self.refresh_draining();
         }
+        Ok(())
+    }
+
+    /// Complete every tagged in-flight KV-migration transfer (ISSUE 9).
+    /// Called only at safe points: the scheduling-loop top, `step_once`
+    /// entry, `process_faults` entry (before any group touching the members
+    /// could be degraded), before stacking a second transfer on the same
+    /// member set, and best-effort at shutdown.  A no-op — one branch —
+    /// unless `--overlap` issued a transfer, so the off path is untouched.
+    ///
+    /// Error semantics mirror the inline collection exactly: with the
+    /// watchdog on, a member fault or step error marks the request for
+    /// recovery at the next fault pass (the adaptor metadata is already
+    /// self-consistent after `apply_migration`); with it off, a reply-level
+    /// error is fatal after all members were collected.
+    fn drain_async_migrations(&mut self) -> Result<()> {
+        if self.async_migrations.is_empty() {
+            return Ok(());
+        }
+        let mut transfers = std::mem::take(&mut self.async_migrations);
+        self.async_busy = 0;
+        for m in transfers.drain(..) {
+            let mut first_err: Option<String> = None;
+            let mut faulted = false;
+            for e in self.members(m.start, m.p) {
+                if self.kernel.index.is_failed(e) {
+                    // Already fail-stopped by an earlier drain round: its
+                    // channel is dead, nothing to collect.
+                    faulted = true;
+                    continue;
+                }
+                if self.watchdog.enabled {
+                    match self.recv_reply_watched(e) {
+                        Ok(EngineReply::Err(msg)) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!("engine {e}: {msg}"));
+                            }
+                        }
+                        Ok(_) => {}
+                        Err(kind) => {
+                            self.note_engine_fault(e, kind);
+                            faulted = true;
+                        }
+                    }
+                } else {
+                    match self.engines[e].recv() {
+                        Ok(EngineReply::Err(msg)) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!("engine {e}: {msg}"));
+                            }
+                        }
+                        Ok(_) => {}
+                        Err(dead) => {
+                            if first_err.is_none() {
+                                first_err = Some(dead.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+            if faulted || (self.watchdog.enabled && first_err.is_some()) {
+                self.fault_stats.step_errors += usize::from(!faulted);
+                if !faulted {
+                    let t_now = self.now();
+                    self.journal.record(
+                        t_now,
+                        crate::obs::Event::StepError {
+                            engine: m.start as u32,
+                            streak: 0,
+                        },
+                    );
+                }
+                // Generational handle: if the request already finished or
+                // was recovered meanwhile, this resolves to a no-op.
+                self.fault_recover.push(m.h);
+                continue;
+            }
+            if let Some(msg) = first_err {
+                bail!("kv migration failed: {msg}");
+            }
+            self.recompute_tokens_avoided += m.kv_pos;
+            let t_now = self.now();
+            self.journal.record(
+                t_now,
+                crate::obs::Event::MigrateApply {
+                    rid: m.rid,
+                    tokens: m.kv_pos as u64,
+                    cost_s: 0.0,
+                },
+            );
+            self.journal.record(
+                t_now,
+                crate::obs::Event::AsyncMigrateEnd {
+                    rid: m.rid,
+                    overlapped_s: (t_now - m.issued_at).max(0.0),
+                },
+            );
+        }
+        // Hand the (now empty) vec back so its capacity is reused — the
+        // steady state stays allocation-free.
+        self.async_migrations = transfers;
         Ok(())
     }
 
@@ -2556,6 +2797,14 @@ impl Cluster {
             {
                 continue;
             }
+            // An async KV-migration transfer is still in flight on the
+            // members (ISSUE 9): their single free command slot is the
+            // scatter's, so the group sits this step out — that wait *is*
+            // the overlap window the other engines fill.  Always zero with
+            // `--overlap` off.
+            if self.async_busy & self.member_mask(start, p) != 0 {
+                continue;
+            }
             // Prefill-first within the group (chunked prefill).
             let pre = {
                 let g = &self.groups[&start];
@@ -2569,7 +2818,7 @@ impl Cluster {
                     self.engines[e].send(EngineCmd::TpPrefill { p, chunk });
                     sc.pending_mask |= 1u64 << e;
                 }
-                sc.issued.push(Issued { home: start, p, is_prefill: true });
+                sc.issued.push(Issued { home: start, p, is_prefill: true, co: false });
             } else {
                 sc.decode_hs.clear();
                 {
@@ -2590,14 +2839,17 @@ impl Cluster {
                         self.engines[e].send(EngineCmd::TpDecode { p, batch });
                         sc.pending_mask |= 1u64 << e;
                     }
-                    sc.issued.push(Issued { home: start, p, is_prefill: false });
+                    sc.issued.push(Issued { home: start, p, is_prefill: false, co: false });
                 }
             }
         }
 
         // DP engines.
         for e in 0..self.engines.len() {
-            if sc.covered[e] || self.kernel.index.is_failed(e) {
+            if sc.covered[e]
+                || self.kernel.index.is_failed(e)
+                || (self.async_busy >> e) & 1 != 0
+            {
                 continue;
             }
             let mut pre: Option<SlabHandle> = None;
@@ -2616,20 +2868,61 @@ impl Cluster {
                 }
             }
             if let Some(hh) = pre {
-                let chunk = self.make_prefill_chunk(hh, e)?;
-                self.engines[e].send(EngineCmd::DpPrefill { chunk });
-                sc.pending_mask |= 1u64 << e;
-                sc.issued.push(Issued { home: e, p: 1, is_prefill: true });
+                if self.overlap_cfg.co_issue_on() && !sc.decode_hs.is_empty() {
+                    // Overlap 3 (ISSUE 9): one command envelope carrying the
+                    // prefill chunk *and* the decode batch, so admission of
+                    // a new request no longer stalls the engine's resident
+                    // decodes for a full step.  Chunk first — it stashes the
+                    // prefill handle before the batch re-owns `issued_hs`.
+                    let chunk = self.make_prefill_chunk(hh, e)?;
+                    self.engine_scratch[e].co_prefill_h = Some(hh);
+                    let batch = self.make_decode_batch(e, &sc.decode_hs)?;
+                    self.engines[e].send(EngineCmd::CoIssue { chunk, batch });
+                    sc.pending_mask |= 1u64 << e;
+                    sc.issued.push(Issued { home: e, p: 1, is_prefill: false, co: true });
+                    if self.overlap_cfg.double_buffer_on() {
+                        let t_now = self.now();
+                        let slot = self.engine_scratch[e].front as u32;
+                        let batch_n = sc.decode_hs.len() as u32;
+                        self.journal.record(
+                            t_now,
+                            crate::obs::Event::SlotIssue { engine: e as u32, slot, batch: batch_n },
+                        );
+                    }
+                } else {
+                    let chunk = self.make_prefill_chunk(hh, e)?;
+                    self.engines[e].send(EngineCmd::DpPrefill { chunk });
+                    sc.pending_mask |= 1u64 << e;
+                    sc.issued.push(Issued { home: e, p: 1, is_prefill: true, co: false });
+                }
             } else if !sc.decode_hs.is_empty() {
                 let batch = self.make_decode_batch(e, &sc.decode_hs)?;
                 self.engines[e].send(EngineCmd::DpDecode { batch });
                 sc.pending_mask |= 1u64 << e;
-                sc.issued.push(Issued { home: e, p: 1, is_prefill: false });
+                sc.issued.push(Issued { home: e, p: 1, is_prefill: false, co: false });
+                if self.overlap_cfg.double_buffer_on() {
+                    let t_now = self.now();
+                    let slot = self.engine_scratch[e].front as u32;
+                    let batch_n = sc.decode_hs.len() as u32;
+                    self.journal.record(
+                        t_now,
+                        crate::obs::Event::SlotIssue { engine: e as u32, slot, batch: batch_n },
+                    );
+                }
             }
         }
 
         if sc.issued.is_empty() {
             return Ok(false);
+        }
+
+        // Overlap 1 (ISSUE 9): while batch N runs on the engines, pre-
+        // materialize batch N+1's decode slots into each DP engine's back
+        // arena.  Pure cached materialization — admission was snapshotted
+        // at issue time, and the bounded-staleness stamp forces a full
+        // rebuild at the next issue if the live state diverged at all.
+        if self.overlap_cfg.double_buffer_on() {
+            self.prebuild_next_batches(sc);
         }
 
         // ---- collect + publish (issue order; TP members meet in the
@@ -2643,7 +2936,7 @@ impl Cluster {
             return Ok(true);
         }
         for ii in 0..sc.issued.len() {
-            let Issued { home, p, is_prefill } = sc.issued[ii];
+            let Issued { home, p, is_prefill, co } = sc.issued[ii];
             let mut first: Option<EngineReply> = None;
             for e in self.members(home, p) {
                 let r = self.engines[e].recv();
@@ -2657,6 +2950,10 @@ impl Cluster {
                 }
             }
             let now = self.now();
+            if co {
+                self.publish_co_step(sc, home, first.unwrap(), now, recorder)?;
+                continue;
+            }
             match (first.unwrap(), is_prefill) {
                 (EngineReply::LastLogits(logits), true) => {
                     let hh = self.engine_scratch[home].issued_hs[0];
@@ -2685,7 +2982,7 @@ impl Cluster {
     /// communicator rendezvous times out) and are absorbed the same way.
     fn collect_watched(&mut self, sc: &mut StepScratch, recorder: &mut Recorder) -> Result<()> {
         for ii in 0..sc.issued.len() {
-            let Issued { home, p, is_prefill } = sc.issued[ii];
+            let Issued { home, p, is_prefill, co } = sc.issued[ii];
             let mut first: Option<EngineReply> = None;
             let mut degraded = false;
             for e in self.members(home, p) {
@@ -2726,6 +3023,10 @@ impl Cluster {
                 continue;
             }
             let now = self.now();
+            if co {
+                self.publish_co_step(sc, home, first.unwrap(), now, recorder)?;
+                continue;
+            }
             match (first.unwrap(), is_prefill) {
                 (EngineReply::LastLogits(logits), true) => {
                     let hh = self.engine_scratch[home].issued_hs[0];
@@ -2808,6 +3109,15 @@ impl Cluster {
 
     /// Build a decode batch for engine `e` into its recycled arena.
     fn make_decode_batch(&mut self, e: usize, hs: &[SlabHandle]) -> Result<Arc<Vec<DecodeSlot>>> {
+        // A prebuilt batch N+1 is waiting in the back arena (ISSUE 9):
+        // swap it in if — and only if — the live state still matches the
+        // stamp it was built under; any divergence discards it and falls
+        // through to the full rebuild below.
+        if self.overlap_cfg.double_buffer_on() && !self.engine_scratch[e].next_stamp.is_empty() {
+            if let Some(batch) = self.take_prebuilt(e, hs)? {
+                return Ok(batch);
+            }
+        }
         // Grow/shrink the slot list, recycling retired slots (and their row
         // buffers) through the spare pool; remember the issue order for the
         // publish pass.
@@ -2860,6 +3170,207 @@ impl Cluster {
             s.table_row.extend_from_slice(row);
         }
         Ok(self.engine_scratch[e].decode_batch.clone())
+    }
+
+    /// Publish one `CoStep` reply (ISSUE 9): the stashed prefill handle
+    /// advances first (the backend ran the chunk first), then the decode
+    /// batch in `issued_hs` order — the same per-request transitions the
+    /// two separate commands would have published.
+    fn publish_co_step(
+        &mut self,
+        sc: &mut StepScratch,
+        home: usize,
+        reply: EngineReply,
+        now: f64,
+        recorder: &mut Recorder,
+    ) -> Result<()> {
+        let EngineReply::CoStep { last, rows } = reply else {
+            bail!("unexpected engine reply {reply:?}");
+        };
+        let hh = self.engine_scratch[home]
+            .co_prefill_h
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("co-step reply without a stashed prefill handle"))?;
+        self.advance_prefill(hh, &last, now, recorder)?;
+        sc.publish_hs.clear();
+        sc.publish_hs.extend_from_slice(&self.engine_scratch[home].issued_hs);
+        for (dh, row) in sc.publish_hs.iter().zip(rows) {
+            self.advance_decode(*dh, &row, now, recorder)?;
+        }
+        Ok(())
+    }
+
+    /// Try to issue the prebuilt batch N+1 from engine `e`'s back arena.
+    /// The bounded-staleness rule (ISSUE 9): issueable iff the live batch
+    /// is exactly the stamped `(handle, position)` sequence — a finish,
+    /// recovery, pause, admission, or migration in between changes either
+    /// and forces the full rebuild.  The swap itself is the only state
+    /// change; the per-slot patch then fills in the one thing prebuild
+    /// could not know (the token batch N emitted) and runs the externally-
+    /// visible `set_seq_len_h` the off path would have run at build time.
+    fn take_prebuilt(
+        &mut self,
+        e: usize,
+        hs: &[SlabHandle],
+    ) -> Result<Option<Arc<Vec<DecodeSlot>>>> {
+        let fresh = {
+            let stamp = &self.engine_scratch[e].next_stamp;
+            // The `mode_p == 1 && home == e` pin matters: the slots were
+            // materialized under engine `e`'s DP layout, and a request that
+            // migrated into a TP group could otherwise stamp-match at the
+            // same `(handle, position)` with different slot ids and rows.
+            stamp.len() == hs.len()
+                && (0..hs.len()).all(|i| {
+                    let (sh, sp) = stamp.get(i);
+                    sh == hs[i]
+                        && self
+                            .active
+                            .get(hs[i])
+                            .map(|a| a.pos == sp && a.mode_p == 1 && a.home == e)
+                            .unwrap_or(false)
+                })
+        };
+        let t_now = self.now();
+        let retired_slot;
+        {
+            let scratch = &mut self.engine_scratch[e];
+            scratch.next_stamp.clear();
+            retired_slot = scratch.front ^ 1;
+            if fresh {
+                // Slot-swap barrier: the engine dropped its clone of the
+                // front arena when it replied to batch N, so both arenas
+                // are uniquely owned here and the swap is just a pointer
+                // exchange.
+                std::mem::swap(&mut scratch.decode_batch, &mut scratch.next_batch);
+                scratch.front ^= 1;
+                scratch.issued_hs.clear();
+                scratch.issued_hs.extend_from_slice(hs);
+            }
+        }
+        self.journal.record(
+            t_now,
+            crate::obs::Event::SlotRetire {
+                engine: e as u32,
+                slot: retired_slot as u32,
+                reused: fresh,
+            },
+        );
+        if !fresh {
+            return Ok(None);
+        }
+        for (i, &hh) in hs.iter().enumerate() {
+            let (token, pos, kh) = {
+                let a = self.active.get(hh).expect("stamp-checked live");
+                let token = *a
+                    .emitted
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("decode with no emitted token"))?;
+                let kh = a
+                    .kvh
+                    .iter()
+                    .find(|&&(ke, _)| ke == e)
+                    .map(|&(_, kh)| kh)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "request {} has no kv registration on engine {e}",
+                            a.sr.id
+                        )
+                    })?;
+                (token, a.pos, kh)
+            };
+            // Capacity was ensured at prebuild time; only the logical
+            // length advance is deferred to issue so migration planning
+            // never sees a speculative sequence length.
+            self.adaptors[e].set_seq_len_h(kh, pos + 1)?;
+            let slots = Arc::make_mut(&mut self.engine_scratch[e].decode_batch);
+            let s = &mut slots[i];
+            debug_assert_eq!(s.pos, pos, "prebuilt slot position diverged from stamp");
+            s.token = token;
+        }
+        Ok(Some(self.engine_scratch[e].decode_batch.clone()))
+    }
+
+    /// Pre-materialize batch N+1 for every DP engine that just got a decode
+    /// (or co-issue) envelope, while batch N executes (ISSUE 9).  Predicts
+    /// the survivor set of the in-flight batch; the prediction is captured
+    /// in the bounded-staleness stamp, so a wrong guess costs one discarded
+    /// prebuild, never a wrong batch.  Errors discard the prebuild — they
+    /// can only be resource races the issue-time rebuild resolves.
+    fn prebuild_next_batches(&mut self, sc: &StepScratch) {
+        for ii in 0..sc.issued.len() {
+            let Issued { home, p, is_prefill, .. } = sc.issued[ii];
+            if p != 1 || is_prefill {
+                continue;
+            }
+            if self.prebuild_engine(home).is_err() {
+                self.engine_scratch[home].next_stamp.clear();
+            }
+        }
+    }
+
+    fn prebuild_engine(&mut self, e: usize) -> Result<()> {
+        // Pass 1: predicted next-step composition — the in-flight batch's
+        // requests that will still be decoding after it publishes, at their
+        // advanced positions.
+        self.engine_scratch[e].next_stamp.clear();
+        let n = self.engine_scratch[e].issued_hs.len();
+        for i in 0..n {
+            let hh = self.engine_scratch[e].issued_hs[i];
+            let Some(a) = self.active.get(hh) else { continue };
+            // Survivor filter: after this step the request has emitted one
+            // more token; it continues only if that leaves headroom.  This
+            // also keeps the speculative `ensure_capacity_h` below inside
+            // the worst-case block commitment admission already charged.
+            if a.emitted.len() + 1 < a.sr.max_new {
+                self.engine_scratch[e].next_stamp.push(hh, a.pos + 1);
+            }
+        }
+        let m = self.engine_scratch[e].next_stamp.len();
+        if m == 0 {
+            return Ok(());
+        }
+        // Pass 2: size the back arena through the spare pool, then fill
+        // every slot except the fed token (unknown until batch N's reply).
+        {
+            let scratch = &mut self.engine_scratch[e];
+            let slots = Arc::make_mut(&mut scratch.next_batch);
+            while slots.len() > m {
+                scratch.spare_slots.push(slots.pop().unwrap());
+            }
+            while slots.len() < m {
+                slots.push(scratch.spare_slots.pop().unwrap_or_default());
+            }
+        }
+        for i in 0..m {
+            let (hh, pos_next) = self.engine_scratch[e].next_stamp.get(i);
+            let (rid, kh) = {
+                let a = self.active.get(hh).expect("stamped live");
+                let kh = a
+                    .kvh
+                    .iter()
+                    .find(|&&(ke, _)| ke == e)
+                    .map(|&(_, kh)| kh)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "request {} has no kv registration on engine {e}",
+                            a.sr.id
+                        )
+                    })?;
+                (a.sr.id, kh)
+            };
+            self.adaptors[e].ensure_capacity_h(kh, pos_next + 1)?;
+            let slot_id = self.adaptors[e].slot_h(kh, pos_next)?;
+            let row = self.adaptors[e].table_row_ref_h(kh)?;
+            let slots = Arc::make_mut(&mut self.engine_scratch[e].next_batch);
+            let s = &mut slots[i];
+            s.rid = rid;
+            s.token = 0;
+            s.pos = pos_next;
+            s.slot_id = slot_id;
+            s.table_row.clear();
+            s.table_row.extend_from_slice(row);
+        }
+        Ok(())
     }
 
     fn prefill_total_len(&self, h: SlabHandle) -> usize {
@@ -2946,6 +3457,9 @@ impl Cluster {
     }
 
     pub fn shutdown(&mut self) {
+        // Best-effort completion of any transfer still in flight (ISSUE 9)
+        // so `stop` never races a scatter mid-collective.
+        let _ = self.drain_async_migrations();
         for e in &mut self.engines {
             e.stop();
         }

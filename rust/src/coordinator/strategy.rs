@@ -224,10 +224,91 @@ impl WatchdogConfig {
     }
 }
 
+/// Pipelined-execution tuning (ISSUE 9, `--overlap`): break the lockstep
+/// protocol's strict build→issue→collect serialization without changing a
+/// single scheduling decision.
+///
+/// With `enabled = false` (the default) the step loop is exactly the PR-8
+/// behavior — byte-identical outputs, journals, and counters; the same
+/// differential-gate discipline as every other flag.  With it on, three
+/// overlaps open up, each individually gateable:
+///
+/// * **`double_buffer`** — two decode-batch arenas per engine.  While batch
+///   N executes, the coordinator pre-materializes batch N+1's block-table
+///   views into the back arena, stamped with the exact `(handle, position)`
+///   set it was built from.  At the next issue the stamp is compared
+///   against the live scheduler state (the *bounded-staleness rule*): on a
+///   match the arenas swap (the lockstep reply was the slot-swap barrier)
+///   and only per-slot tokens/seq-lens are patched; on any divergence —
+///   finish, preemption, recovery, a kernel decision that changed the
+///   batch — the prebuilt arena is discarded and the batch is rebuilt from
+///   scratch.  The prebuilt batch is a cached materialization of decisions
+///   already made, never a decision source, so kernel decision traces are
+///   byte-identical by construction.
+/// * **`async_migrate`** — `EngineCmd::KvMigrate` scatters become tagged
+///   in-flight transfers: the coordinator issues them and returns to the
+///   step loop instead of blocking inside `settle_groups`, so non-member
+///   engines keep decoding through the transfer window.  The transfer is
+///   drained at the next safe point (settle entry / idle / shutdown);
+///   at most one transfer is in flight per engine (the bounded engine
+///   channels hold `CHANNEL_DEPTH = 2` commands — a second outstanding
+///   migrate could deadlock the lockstep).
+/// * **`co_issue`** — an engine with both a prefill chunk and a decode
+///   batch pending receives them in one `EngineCmd::CoIssue` envelope
+///   (one reply, one fault-clock tick) so the backend can interleave them.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapConfig {
+    pub enabled: bool,
+    /// Double-buffered step arenas (overlap 1).
+    pub double_buffer: bool,
+    /// Asynchronous KV-migration collectives (overlap 2).
+    pub async_migrate: bool,
+    /// Prefill/decode co-issue envelopes (overlap 3).
+    pub co_issue: bool,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        // Sub-knobs default on so `--overlap` alone arms all three; the
+        // master switch off keeps the whole path byte-identical.
+        OverlapConfig { enabled: false, double_buffer: true, async_migrate: true, co_issue: true }
+    }
+}
+
+impl OverlapConfig {
+    #[inline]
+    pub fn double_buffer_on(&self) -> bool {
+        self.enabled && self.double_buffer
+    }
+
+    #[inline]
+    pub fn async_migrate_on(&self) -> bool {
+        self.enabled && self.async_migrate
+    }
+
+    #[inline]
+    pub fn co_issue_on(&self) -> bool {
+        self.enabled && self.co_issue
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::time::Duration;
+
+    #[test]
+    fn overlap_defaults_off_with_all_sub_knobs_armed() {
+        let o = OverlapConfig::default();
+        assert!(!o.enabled);
+        assert!(o.double_buffer && o.async_migrate && o.co_issue);
+        // Master switch gates every sub-knob.
+        assert!(!o.double_buffer_on() && !o.async_migrate_on() && !o.co_issue_on());
+        let on = OverlapConfig { enabled: true, ..OverlapConfig::default() };
+        assert!(on.double_buffer_on() && on.async_migrate_on() && on.co_issue_on());
+        let partial = OverlapConfig { enabled: true, co_issue: false, ..OverlapConfig::default() };
+        assert!(partial.double_buffer_on() && !partial.co_issue_on());
+    }
 
     #[test]
     fn watchdog_budget_ordering_is_validated() {

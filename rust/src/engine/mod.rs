@@ -71,6 +71,21 @@ pub trait EngineBackend {
     /// re-tagged KV to every other member.  Issued to all members at the
     /// same safe point, like the TP step commands.
     fn migrate_kv(&mut self, p: usize, root: usize, n_elems: usize) -> Result<()>;
+    /// Prefill/decode co-issue (ISSUE 9, `--overlap` only): execute one DP
+    /// prefill chunk *and* one DP decode batch from a single command
+    /// envelope, returning `(last_logits, decode_rows)`.  The default
+    /// serializes the two existing entry points — numerically identical to
+    /// issuing them as two commands — so backends gain interleaving by
+    /// overriding, never by obligation.
+    fn co_step(
+        &mut self,
+        chunk: &PrefillChunk,
+        batch: &[DecodeSlot],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let last = self.dp_prefill(chunk)?;
+        let rows = self.dp_decode(batch)?;
+        Ok((last, rows))
+    }
 }
 
 #[derive(Debug)]
@@ -89,6 +104,11 @@ pub enum EngineCmd {
     /// the other members' shard slices (`n_elems` f32 each) through the
     /// pre-built communicator.
     KvMigrate { p: usize, root: usize, n_elems: usize },
+    /// Prefill/decode co-issue (ISSUE 9, `--overlap` only): one DP prefill
+    /// chunk and one DP decode batch in a single envelope — one command,
+    /// one reply, one fault-clock tick — so the backend can interleave
+    /// them.
+    CoIssue { chunk: Arc<PrefillChunk>, batch: Arc<Vec<DecodeSlot>> },
     Stop,
 }
 
@@ -99,6 +119,9 @@ pub enum EngineReply {
     Logits(Vec<Vec<f32>>),
     /// Last-token logits (prefill chunk).
     LastLogits(Vec<f32>),
+    /// Co-issued prefill + decode (ISSUE 9): the chunk's last-token logits
+    /// and the batch's per-slot rows, in one reply.
+    CoStep { last: Vec<f32>, rows: Vec<Vec<f32>> },
     Err(String),
 }
 
@@ -184,6 +207,9 @@ impl EngineHandle {
                         EngineCmd::KvMigrate { p, root, n_elems } => {
                             backend.migrate_kv(p, root, n_elems).map(|()| EngineReply::Ok)
                         }
+                        EngineCmd::CoIssue { chunk, batch } => backend
+                            .co_step(&chunk, &batch)
+                            .map(|(last, rows)| EngineReply::CoStep { last, rows }),
                         EngineCmd::Stop => {
                             let _ = reply_tx.send(EngineReply::Ok);
                             break;
@@ -421,6 +447,74 @@ mod tests {
         // Wrong mode surfaces as an error, not a hang.
         e0.call(EngineCmd::SetMode { p: 1 }).unwrap();
         assert!(e0.call(EngineCmd::KvMigrate { p: 2, root: 0, n_elems: 8 }).is_err());
+    }
+
+    #[test]
+    fn co_issue_equals_separate_prefill_and_decode() {
+        // The envelope is a transport optimization: its outputs must be
+        // byte-identical to issuing the same chunk and batch separately.
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let eng = EngineHandle::spawn_stub(0, cfg(), shapes(), comm).unwrap();
+        let chunk = Arc::new(PrefillChunk {
+            rid: 3,
+            tokens: vec![5, 6, 7],
+            start: 0,
+            slot_ids: vec![0, 1, 2],
+            table_row: vec![0; cfg().n_blocks],
+        });
+        let batch = Arc::new(vec![DecodeSlot {
+            rid: 1,
+            token: 42,
+            pos: 3,
+            slot_id: 12,
+            table_row: vec![0; cfg().n_blocks],
+        }]);
+        let sep_last = match eng.call(EngineCmd::DpPrefill { chunk: chunk.clone() }).unwrap() {
+            EngineReply::LastLogits(l) => l,
+            r => panic!("unexpected {r:?}"),
+        };
+        let sep_rows = match eng.call(EngineCmd::DpDecode { batch: batch.clone() }).unwrap() {
+            EngineReply::Logits(rows) => rows,
+            r => panic!("unexpected {r:?}"),
+        };
+        let (co_last, co_rows) = match eng.call(EngineCmd::CoIssue { chunk, batch }).unwrap() {
+            EngineReply::CoStep { last, rows } => (last, rows),
+            r => panic!("unexpected {r:?}"),
+        };
+        assert_eq!(co_last, sep_last);
+        assert_eq!(co_rows, sep_rows);
+    }
+
+    #[test]
+    fn co_issue_ticks_the_fault_clock_once() {
+        // One envelope = one command for fault-injection purposes: a plan
+        // that dies at command 1 survives command 0 even when command 0
+        // carries both a prefill and a decode.
+        let comm = Arc::new(CommunicatorPool::new(1, &[1], Duration::from_secs(2)));
+        let plan = FaultPlan { die_at: Some(1), ..FaultPlan::none() };
+        let mut eng = EngineHandle::spawn_stub_faulty(0, cfg(), shapes(), comm, plan).unwrap();
+        let chunk = Arc::new(PrefillChunk {
+            rid: 3,
+            tokens: vec![5],
+            start: 0,
+            slot_ids: vec![0],
+            table_row: vec![0; cfg().n_blocks],
+        });
+        let batch = Arc::new(vec![DecodeSlot {
+            rid: 1,
+            token: 2,
+            pos: 1,
+            slot_id: 4,
+            table_row: vec![0; cfg().n_blocks],
+        }]);
+        assert!(matches!(
+            eng.call(EngineCmd::CoIssue { chunk, batch }).unwrap(),
+            EngineReply::CoStep { .. }
+        ));
+        // Command 1 is death: the channel disconnects without a reply.
+        eng.send(EngineCmd::SetMode { p: 1 });
+        assert!(eng.recv().is_err());
+        eng.stop();
     }
 
     #[test]

@@ -186,6 +186,21 @@ impl EngineBackend for StubEngine {
         );
         Ok(())
     }
+
+    fn co_step(
+        &mut self,
+        chunk: &PrefillChunk,
+        batch: &[DecodeSlot],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        // One envelope = one command: tick the fault clock once, then run
+        // the ungated helpers (the trait default would tick twice through
+        // the gated entry points, breaking the per-command step-clock
+        // contract scripted fault plans rely on).
+        self.fault.tick()?;
+        let last = self.prefill_last(chunk)?;
+        let rows = self.decode_rows(batch)?;
+        Ok((last, rows))
+    }
 }
 
 #[cfg(test)]

@@ -27,6 +27,10 @@
 //!                                         default 32)
 //!               --stranded-sweep-iters N (idle iterations before the
 //!                                         degraded-cell sweep, default 1000)
+//!               --overlap         (double-buffered step pipeline: prebuilt
+//!                                  batch arenas, async migration
+//!                                  collectives, prefill/decode co-issue;
+//!                                  off = byte-identical run)
 //!               --trace           (flight recorder; off = byte-identical run)
 //!               --trace-out PATH  (JSONL base path, suffixed per run)
 
@@ -85,6 +89,7 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
     cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
+    cluster.set_overlap_config(cfg.make_overlap_config());
     // Calibrate whenever something consumes the cost model on this cluster
     // (`ServeConfig::needs_calibration`): predictions must be denominated
     // in this testbed's measured seconds, not the paper-scale default's.
@@ -100,6 +105,7 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
     cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
+    cluster.set_overlap_config(cfg.make_overlap_config());
     // Same calibration rule as `serve` (`ServeConfig::needs_calibration`).
     let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
     let mut policy = cfg.make_policy_with(calibrated)?;
@@ -174,6 +180,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
             switch_backfill: cfg.switch_backfill,
             switch_migrate: cfg.switch_migrate,
             trace: cfg.trace,
+            overlap: cfg.overlap,
             ..SimConfig::default()
         };
         for sys in [

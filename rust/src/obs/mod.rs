@@ -123,6 +123,23 @@ pub enum Event {
     /// permanent fail-stop (crash-loop anti-livelock, same rule as the
     /// step-error streak).
     RejoinAbandoned { engine: u32 },
+    /// Double-buffered pipeline (ISSUE 9, `--overlap` only): a decode batch
+    /// of `batch` slots was issued to `engine` from arena `slot` (0/1).
+    SlotIssue { engine: u32, slot: u32, batch: u32 },
+    /// The back arena's prebuilt batch was judged at issue time: `reused`
+    /// is the bounded-staleness verdict (stamp matched the live scheduler
+    /// state → arenas swapped; else discarded and rebuilt).
+    SlotRetire { engine: u32, slot: u32, reused: bool },
+    /// An asynchronous KV-migration transfer went in flight (ISSUE 9): the
+    /// scatter runs concurrently with other engines' decode steps until the
+    /// next safe point.  `window_s` is the predicted overlap window (the
+    /// simulator fills it; the real path emits 0.0 — wall-clock convention
+    /// as `drain_begin`).
+    AsyncMigrateBegin { rid: u64, tokens: u64, window_s: f64 },
+    /// The in-flight transfer completed at a safe point; `overlapped_s` is
+    /// the wall the transfer hid behind concurrent compute (the journal-
+    /// verified overlap window).
+    AsyncMigrateEnd { rid: u64, overlapped_s: f64 },
 }
 
 impl Event {
@@ -149,6 +166,10 @@ impl Event {
             Event::RejoinProbe { .. } => "rejoin_probe",
             Event::RejoinOk { .. } => "rejoin_ok",
             Event::RejoinAbandoned { .. } => "rejoin_abandoned",
+            Event::SlotIssue { .. } => "slot_issue",
+            Event::SlotRetire { .. } => "slot_retire",
+            Event::AsyncMigrateBegin { .. } => "async_migrate_begin",
+            Event::AsyncMigrateEnd { .. } => "async_migrate_end",
         }
     }
 }
@@ -275,6 +296,25 @@ pub fn event_value(t: f64, ev: &Event) -> Value {
         Event::RejoinAbandoned { engine } => {
             pairs.push(("engine", Value::num(engine as f64)));
         }
+        Event::SlotIssue { engine, slot, batch } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("slot", Value::num(slot as f64)));
+            pairs.push(("batch", Value::num(batch as f64)));
+        }
+        Event::SlotRetire { engine, slot, reused } => {
+            pairs.push(("engine", Value::num(engine as f64)));
+            pairs.push(("slot", Value::num(slot as f64)));
+            pairs.push(("reused", Value::Bool(reused)));
+        }
+        Event::AsyncMigrateBegin { rid, tokens, window_s } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("tokens", Value::num(tokens as f64)));
+            pairs.push(("window_s", Value::num(window_s)));
+        }
+        Event::AsyncMigrateEnd { rid, overlapped_s } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("overlapped_s", Value::num(overlapped_s)));
+        }
     }
     Value::obj(pairs)
 }
@@ -288,13 +328,14 @@ pub fn event_value(t: f64, ev: &Event) -> Value {
 /// the identity
 ///
 /// ```text
-/// switch_stall_s = drain_wait_s + settle_s + migration_s - backfill_recovered_s
+/// switch_stall_s = drain_wait_s + settle_s + migration_s
+///                - backfill_recovered_s - pipeline_overlap_s
 /// ```
 ///
 /// holds to floating-point rounding (the bench hard-gates 1e-9 on
 /// `priority_storm` and `switch_churn`).  Accumulation is unconditional —
-/// four f64 adds per switch — so the breakdown is available even with the
-/// journal off.
+/// a handful of f64 adds per switch — so the breakdown is available even
+/// with the journal off.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StallBreakdown {
     /// Chosen members idle from their own free point to the slowest
@@ -308,12 +349,18 @@ pub struct StallBreakdown {
     /// Work backfill shells executed inside transition windows (credited
     /// back against the aggregate; 0 with `switch_backfill` off).
     pub backfill_recovered_s: f64,
+    /// Migration-transfer wall hidden behind concurrent compute by the
+    /// pipelined path (ISSUE 9; credited back against the aggregate like
+    /// `backfill_recovered_s`; 0 with `--overlap` off).
+    pub pipeline_overlap_s: f64,
 }
 
 impl StallBreakdown {
     /// The aggregate the components must reconstruct.
     pub fn total(&self) -> f64 {
-        self.drain_wait_s + self.settle_s + self.migration_s - self.backfill_recovered_s
+        self.drain_wait_s + self.settle_s + self.migration_s
+            - self.backfill_recovered_s
+            - self.pipeline_overlap_s
     }
 
     pub fn to_value(&self) -> Value {
@@ -322,6 +369,7 @@ impl StallBreakdown {
             ("settle_s", Value::num(self.settle_s)),
             ("migration_s", Value::num(self.migration_s)),
             ("backfill_recovered_s", Value::num(self.backfill_recovered_s)),
+            ("pipeline_overlap_s", Value::num(self.pipeline_overlap_s)),
             ("total_s", Value::num(self.total())),
         ])
     }
@@ -730,10 +778,29 @@ mod tests {
             settle_s: 0.5,
             migration_s: 0.25,
             backfill_recovered_s: 1.0,
+            pipeline_overlap_s: 0.125,
         };
-        assert!((b.total() - 2.75).abs() < 1e-12);
+        assert!((b.total() - 2.625).abs() < 1e-12);
         let v = b.to_value();
-        assert!((v.f64_field("total_s").unwrap() - 2.75).abs() < 1e-12);
+        assert!((v.f64_field("total_s").unwrap() - 2.625).abs() < 1e-12);
+        assert!((v.f64_field("pipeline_overlap_s").unwrap() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_events_roundtrip_through_jsonl() {
+        let mut j = Journal::new(16);
+        j.record(0.1, Event::SlotIssue { engine: 1, slot: 0, batch: 8 });
+        j.record(0.2, Event::SlotRetire { engine: 1, slot: 1, reused: true });
+        j.record(0.3, Event::AsyncMigrateBegin { rid: 7, tokens: 512, window_s: 0.02 });
+        j.record(0.4, Event::AsyncMigrateEnd { rid: 7, overlapped_s: 0.015 });
+        let mut buf = Vec::new();
+        j.write_jsonl(&mut buf, None).unwrap();
+        let s = summarize_jsonl(&String::from_utf8(buf).unwrap()).unwrap();
+        assert_eq!(s.events, 4);
+        assert_eq!(s.by_kind["slot_issue"], 1);
+        assert_eq!(s.by_kind["slot_retire"], 1);
+        assert_eq!(s.by_kind["async_migrate_begin"], 1);
+        assert_eq!(s.by_kind["async_migrate_end"], 1);
     }
 
     #[test]

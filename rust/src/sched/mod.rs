@@ -317,9 +317,88 @@ impl<H: Copy> Walk<H> {
     }
 }
 
+/// Issue-time stamp for a pre-materialized decode batch (ISSUE 9, the
+/// double-buffered pipeline's *bounded-staleness rule*).
+///
+/// While batch N executes, the coordinator may pre-build batch N+1's
+/// engine-facing views from the scheduler state as of issue time.  That
+/// state is bounded-stale: by the time batch N's reply lands, requests may
+/// have finished, been preempted, recovered, or re-decided by the kernel.
+/// The contract that keeps kernel decisions byte-identical is all-or-
+/// nothing: a prebuilt batch is issueable **iff** the exact `(handle,
+/// position)` sequence it was built from still describes the live batch;
+/// any divergence discards the prebuild and the batch is rebuilt from the
+/// authoritative state.  The prebuild is a cached materialization of
+/// decisions already made — never a decision source.
+///
+/// Allocation-free in steady state: both vectors retain capacity across
+/// `clear`.
+#[derive(Debug, Default)]
+pub struct PrebuildStamp<H: Copy + PartialEq> {
+    hs: Vec<H>,
+    pos: Vec<usize>,
+}
+
+impl<H: Copy + PartialEq> PrebuildStamp<H> {
+    pub fn clear(&mut self) {
+        self.hs.clear();
+        self.pos.clear();
+    }
+
+    pub fn push(&mut self, h: H, pos: usize) {
+        self.hs.push(h);
+        self.pos.push(pos);
+    }
+
+    pub fn len(&self) -> usize {
+        self.hs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hs.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> (H, usize) {
+        (self.hs[i], self.pos[i])
+    }
+
+    /// The bounded-staleness verdict: does the live `(handle, position)`
+    /// sequence equal the captured one, element for element, in order?
+    pub fn matches<I: IntoIterator<Item = (H, usize)>>(&self, live: I) -> bool {
+        let mut i = 0;
+        for (h, p) in live {
+            if i >= self.hs.len() || self.hs[i] != h || self.pos[i] != p {
+                return false;
+            }
+            i += 1;
+        }
+        i == self.hs.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prebuild_stamp_matches_exact_sequence_only() {
+        let mut s: PrebuildStamp<u32> = PrebuildStamp::default();
+        assert!(s.is_empty() && s.matches(Vec::new()));
+        s.push(7, 10);
+        s.push(9, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(1), (9, 4));
+        assert!(s.matches(vec![(7, 10), (9, 4)]));
+        // Any divergence — position advance, different handle, reorder,
+        // shrink, growth — fails the verdict.
+        assert!(!s.matches(vec![(7, 11), (9, 4)]));
+        assert!(!s.matches(vec![(8, 10), (9, 4)]));
+        assert!(!s.matches(vec![(9, 4), (7, 10)]));
+        assert!(!s.matches(vec![(7, 10)]));
+        assert!(!s.matches(vec![(7, 10), (9, 4), (1, 0)]));
+        s.clear();
+        assert!(s.is_empty() && s.matches(Vec::new()));
+    }
 
     #[test]
     fn walk_drains_high_first_and_preserves_fifo_within_level() {

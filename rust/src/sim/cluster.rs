@@ -101,6 +101,16 @@ pub struct SimConfig {
     /// `SimOutcome::journal`.  Recording is O(1)/allocation-free either
     /// way; only decisions already made are observed, never steered.
     pub trace: bool,
+    /// Step-pipeline overlap (ISSUE 9).  Off (default): byte-identical to
+    /// the pre-overlap event core on every scenario.  On: mirrors the real
+    /// coordinator's asynchronous migration collectives — the carried
+    /// residents' `migrate_t` charge runs concurrently with the drain
+    /// window instead of serially after it, so only the part that spills
+    /// past the horizon stalls the merge.  The full charge still lands in
+    /// `StallBreakdown::migration_s`; the concurrent part is credited back
+    /// through `pipeline_overlap_s`, keeping the stall-attribution identity
+    /// exact.
+    pub overlap: bool,
 }
 
 impl Default for SimConfig {
@@ -112,6 +122,7 @@ impl Default for SimConfig {
             switch_backfill: false,
             switch_migrate: false,
             trace: false,
+            overlap: false,
         }
     }
 }
@@ -1531,6 +1542,14 @@ fn bind_tp_sim(
     handle_pos.push(usize::MAX);
     let g_new = want_m * cm.model.min_gpus;
     let mut migrate_cost = 0.0f64;
+    // Asynchronous migration collectives (ISSUE 9): with overlap on, the
+    // carried KV's transfer runs concurrently with the drain window —
+    // `horizon - t` of wall clock the members spend waiting anyway — and
+    // only the spill past the window delays the group.  Off, the window is
+    // pinned to zero so every arithmetic below reduces to the serial charge
+    // bit for bit.
+    let mut window_left = if cfg.overlap { (horizon - t).max(0.0) } else { 0.0 };
+    let mut overlapped = 0.0f64;
     for &i in unit_scratch.iter() {
         for &r in &vengs[i].active {
             let q = &mut reqs[r as usize];
@@ -1548,6 +1567,23 @@ fn bind_tp_sim(
                         cost_s: cost,
                     },
                 );
+                if cfg.overlap {
+                    let overlapped_r = cost.min(window_left);
+                    window_left -= overlapped_r;
+                    overlapped += overlapped_r;
+                    journal.record(
+                        t,
+                        crate::obs::Event::AsyncMigrateBegin {
+                            rid: q.id,
+                            tokens: kv_tokens(q) as u64,
+                            window_s: horizon - t,
+                        },
+                    );
+                    journal.record(
+                        t,
+                        crate::obs::Event::AsyncMigrateEnd { rid: q.id, overlapped_s: overlapped_r },
+                    );
+                }
             } else {
                 q.paused = true;
             }
@@ -1559,14 +1595,19 @@ fn bind_tp_sim(
     }
     index.set_unit(merged.unit_bits, false);
     index.set_idle(merged.unit_bits, false);
-    merged.free_at = horizon + migrate_cost;
+    merged.free_at = horizon + (migrate_cost - overlapped);
     if migrate_cost > 0.0 {
         // The carried KV's transfer holds every member at the migration-
         // augmented horizon; charge that wait to the aggregate and
         // attribute it to the migration component (guarded so a zero cost
-        // adds nothing, keeping migrate-off byte-identical).
-        *switch_stall_s += migrate_cost * want_m as f64;
+        // adds nothing, keeping migrate-off byte-identical).  With overlap
+        // on, the window-hidden share is credited back — the full charge
+        // still lands in `migration_s`, the credit in `pipeline_overlap_s`,
+        // so the stall-attribution identity reconstructs the aggregate
+        // exactly.
+        *switch_stall_s += (migrate_cost - overlapped) * want_m as f64;
         stall.migration_s += migrate_cost * want_m as f64;
+        stall.pipeline_overlap_s += overlapped * want_m as f64;
     }
     merged.active.push(ri);
     merged.kv_used += kv_tokens(&reqs[riu]);

@@ -19,6 +19,11 @@
 //! off the revive markers are inert — byte-identical to the PR-6
 //! degradation path.
 //!
+//! ISSUE 9 composes the step pipeline on top: `--overlap` chaos runs
+//! (double-buffered prebuilds, async migration collectives, co-issued
+//! envelopes) must satisfy the identical contract, and a disabled
+//! `OverlapConfig` with armed sub-knobs must be inert under faults.
+//!
 //! Failures reproduce from the seed alone: `CHAOS_SEED=<n> cargo test`.
 
 use std::collections::BTreeSet;
@@ -26,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use flying_serving::baselines::StaticDpPolicy;
 use flying_serving::coordinator::policy::FlyingPolicy;
-use flying_serving::coordinator::strategy::{Strategy, WatchdogConfig};
+use flying_serving::coordinator::strategy::{OverlapConfig, Strategy, WatchdogConfig};
 use flying_serving::coordinator::{Cluster, ServeRequest};
 use flying_serving::engine::FaultPlan;
 use flying_serving::json::Value;
@@ -703,6 +708,110 @@ fn recover_off_ignores_revive_markers_byte_identical() {
     assert_eq!(marked.fault_stats.rejoin_probes, 0);
     assert_eq!(marked.fault_stats.rejoins_ok, 0);
     assert_eq!(marked.fault_stats.rejoins_abandoned, 0);
+}
+
+/// ISSUE 9 chaos composition: overlap × watchdog × recover.  Kill-then-
+/// revive chaos across every scenario with the step pipeline armed on top
+/// of the recovery stack — double-buffered prebuilds go stale across
+/// faults, async migration collectives complete against revived
+/// incarnations, co-issued envelopes die mid-flight.  The contract is the
+/// same as the recovery tentpole: terminate, conserve every request, keep
+/// KV accounting exact, and heal back to full idle capacity.
+#[test]
+fn chaos_overlap_kill_then_revive_all_scenarios() {
+    let seed = chaos_seed();
+    let strategies = [Strategy::Sequential, Strategy::SoftPreempt, Strategy::HardPreempt];
+    for (i, sc) in Scenario::ALL.into_iter().enumerate() {
+        let t0 = Instant::now();
+        // Offset from both earlier chaos sweeps so the three explore
+        // different plan draws under the same CHAOS_SEED.
+        let run_seed = seed.wrapping_add(0x09_1A90).wrapping_add(i as u64);
+        let plans: Vec<FaultPlan> = (0..4)
+            .map(|e| {
+                let mut p = FaultPlan::randomized(run_seed, e);
+                if p.die_at.is_some() {
+                    p.revive_after = Some(0);
+                }
+                p.drop_reply_at.clear();
+                p
+            })
+            .collect();
+        let trace = scenario_trace(sc, run_seed, 36);
+        let submitted: BTreeSet<u64> = trace.iter().map(|r| r.id).collect();
+        let strategy = strategies[i % strategies.len()];
+        let tag = format!("overlap {sc} seed={run_seed:#x} strategy={}", strategy.name());
+
+        let mut c = Cluster::start_stub_with(cfg(), shapes(), 4, CHAOS_COMM_TIMEOUT, &plans)
+            .unwrap_or_else(|e| panic!("{tag}: start: {e:#}"));
+        c.set_watchdog(recover_watchdog(3, 20));
+        c.set_overlap_config(OverlapConfig { enabled: true, ..OverlapConfig::default() });
+        c.set_trace(true);
+        let out = c
+            .run_trace(trace, &mut FlyingPolicy::default(), strategy)
+            .unwrap_or_else(|e| panic!("{tag}: run_trace must recover, not error: {e:#}"));
+        c.drive_rejoins_to_quiescence(&mut Recorder::new())
+            .unwrap_or_else(|e| panic!("{tag}: rejoin quiescence: {e:#}"));
+        append_chaos_trace(
+            &c,
+            Value::obj(vec![
+                ("run", Value::str(tag.clone())),
+                ("dropped", Value::num(c.journal().dropped() as f64)),
+            ]),
+        );
+
+        assert_conserved(&tag, &submitted, &out);
+        c.check_invariants()
+            .unwrap_or_else(|e| panic!("{tag}: KV invariants: {e:#}"));
+        assert_eq!(c.failed_mask(), 0, "{tag}: transient deaths must all heal");
+        assert_eq!(c.quarantined_mask(), 0, "{tag}: no engine may be stuck in quarantine");
+        assert_eq!(c.idle_count(), 4, "{tag}: idle capacity must heal to n_engines");
+        c.shutdown();
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(30),
+            "{tag}: overlap chaos took {elapsed:?} — the pipeline stalled recovery"
+        );
+    }
+}
+
+/// ISSUE 9 differential gate on the real path: an `OverlapConfig` with all
+/// sub-knobs armed but the master switch off must be completely inert —
+/// outputs, rejections, and every fault counter byte-identical to an
+/// untouched cluster, under a scripted mid-switch death.  This is what
+/// makes `--overlap` safe to carry: every pipeline branch is gated on
+/// `enabled && <knob>`, never on a sub-knob alone.
+#[test]
+fn overlap_disabled_with_armed_subknobs_is_inert_under_faults() {
+    let mk_trace = || {
+        let mut trace = vec![req(1, 16, 10), req(2, 12, 8)];
+        let mut tp = req(3, 10, 3);
+        tp.tp_demand = Some(2);
+        tp.arrival = 0.05;
+        trace.push(tp);
+        trace
+    };
+    let run = |set_cfg: bool| {
+        let mut plans = vec![FaultPlan::none(), FaultPlan::none()];
+        plans[1].die_at = Some(6);
+        let mut c =
+            Cluster::start_stub_with(cfg(), shapes(), 2, CHAOS_COMM_TIMEOUT, &plans).unwrap();
+        c.set_watchdog(chaos_watchdog());
+        if set_cfg {
+            // Sub-knobs all true (their default), master off: inert.
+            c.set_overlap_config(OverlapConfig { enabled: false, ..OverlapConfig::default() });
+        }
+        let out = c
+            .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::Sequential)
+            .unwrap();
+        c.check_invariants().unwrap();
+        c.shutdown();
+        out
+    };
+    let configured = run(true);
+    let untouched = run(false);
+    assert_eq!(configured.outputs, untouched.outputs, "disabled overlap changed tokens");
+    assert_eq!(configured.rejected, untouched.rejected);
+    assert_eq!(configured.fault_stats, untouched.fault_stats);
 }
 
 /// ISSUE 8 satellite: the stranded-rejection sweep threshold (a hard-coded

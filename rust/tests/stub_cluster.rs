@@ -11,7 +11,7 @@ use flying_serving::control::{
     AdaptivePolicy, ControlConfig, ControlRuntime, ThresholdController,
 };
 use flying_serving::coordinator::policy::FlyingPolicy;
-use flying_serving::coordinator::strategy::{Strategy, SwitchConfig};
+use flying_serving::coordinator::strategy::{OverlapConfig, Strategy, SwitchConfig};
 use flying_serving::coordinator::{Cluster, ClusterOutcome, ServeRequest};
 use flying_serving::metrics::Recorder;
 use flying_serving::model::{ModelCfg, StaticShapes};
@@ -577,6 +577,89 @@ fn wall_clock_backfill_predicate_admits_under_calibrated_model() {
         assert!(r.finished.is_some(), "request {id} never finished");
         assert_eq!(r.token_times.len(), want, "request {id} token count");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Step-pipeline overlap (ISSUE 9): `--overlap` re-times work inside the
+// lockstep protocol — double-buffered decode arenas, co-issued
+// prefill+decode envelopes, async migration collectives — but must never
+// change a single emitted token or admission outcome.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overlap_on_emits_identical_tokens_to_overlap_off() {
+    // The mixed four-engine load exercises every overlap ingredient on the
+    // real path: co-issued prefill+decode envelopes (arrivals land while
+    // decode batches are busy), double-buffered prebuilds (long decode
+    // stretches), and slot invalidation (TP promotions churn the layout).
+    let mk_trace = || {
+        (0..24u64)
+            .map(|i| {
+                let mut r = req(i, 8 + (i as usize % 13), 3 + (i as usize % 4));
+                r.priority = if i % 7 == 0 { Priority::High } else { Priority::Normal };
+                r.tp_demand = if i % 11 == 0 { Some(2) } else { None };
+                r.arrival = 0.01 * i as f64;
+                r
+            })
+            .collect::<Vec<_>>()
+    };
+    let run = |overlap: bool| {
+        let mut c = cluster(4);
+        if overlap {
+            c.set_overlap_config(OverlapConfig { enabled: true, ..OverlapConfig::default() });
+        }
+        let out = c
+            .run_trace(mk_trace(), &mut FlyingPolicy::default(), Strategy::HardPreempt)
+            .unwrap();
+        c.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.outputs, on.outputs, "overlap changed token values");
+    assert_eq!(off.rejected, on.rejected, "overlap changed admission outcomes");
+    assert_eq!(off.outputs.len() + off.rejected.len(), 24);
+    assert!(!on.switches.is_empty(), "trace never exercised switching");
+}
+
+#[test]
+fn overlap_composes_with_migrate_and_backfill() {
+    // All three switch-path optimizations at once: the drain backfills, the
+    // promotion migrates, and the migration collective scatters
+    // asynchronously inside the drain window.  The async completion must
+    // still carry the speculative KV (recompute_tokens_avoided > 0) and
+    // token values must match the overlap-off run exactly.
+    let run = |overlap: bool| {
+        let mut c = cluster(2);
+        c.set_switch_config(SwitchConfig {
+            backfill: true,
+            migrate: true,
+            ..SwitchConfig::default()
+        });
+        if overlap {
+            c.set_overlap_config(OverlapConfig { enabled: true, ..OverlapConfig::default() });
+        }
+        let mut trace = spec_promotion_trace();
+        trace.push(req(6, 8, 2));
+        let out = c
+            .run_trace(trace, &mut FlyingPolicy::default(), Strategy::SoftPreempt)
+            .unwrap();
+        c.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.outputs, on.outputs, "async migration changed token values");
+    assert!(off.rejected.is_empty() && on.rejected.is_empty());
+    assert!(!on.switches.is_empty(), "promotion never formed the TP group");
+    assert!(
+        on.recompute_tokens_avoided > 0,
+        "async transfer must still carry the speculative KV"
+    );
+    assert_eq!(
+        off.recompute_tokens_avoided, on.recompute_tokens_avoided,
+        "overlap re-times the transfer, never changes what it carries"
+    );
 }
 
 #[test]
