@@ -20,6 +20,7 @@ fn long_trace(n: usize, ctx: usize, out: usize, gap: f64) -> Vec<Request> {
             output_len: out,
             priority: Priority::Normal,
             tp_demand: None,
+            prefix_family: None,
         })
         .collect()
 }

@@ -59,6 +59,12 @@ pub struct ServeConfig {
     /// both execution paths.  On: double-buffered step arenas, asynchronous
     /// migration collectives, and prefill/decode co-issue.
     pub overlap: bool,
+    /// Cross-request prefix cache (ISSUE 10, `KvCacheAdaptor` radix tree).
+    /// Off by default: admission never probes the tree and behavior is
+    /// byte-identical to pre-PR-10.  On: DP admissions adopt cached
+    /// shared-prefix blocks by reference (those tokens never prefill) and
+    /// finished DP requests donate their prefix blocks back to the tree.
+    pub prefix_cache: bool,
     /// Flight recorder (ISSUE 7).  Off by default: no journal is
     /// allocated and behavior is byte-identical to an untraced run; on,
     /// both execution paths record switch/migration/backfill/fault/
@@ -93,6 +99,7 @@ impl Default for ServeConfig {
             max_step_err_streak: 0,
             stranded_sweep_iters: 0,
             overlap: false,
+            prefix_cache: false,
             trace: false,
             trace_out: "bench_out/trace.jsonl".into(),
         }
@@ -148,6 +155,7 @@ impl ServeConfig {
                 "max-step-err-streak" => c.max_step_err_streak = v.parse()?,
                 "stranded-sweep-iters" => c.stranded_sweep_iters = v.parse()?,
                 "overlap" => c.overlap = v == "true",
+                "prefix-cache" => c.prefix_cache = v == "true",
                 "trace" => c.trace = v == "true",
                 "trace-out" => c.trace_out = v.clone(),
                 _ => bail!("unknown flag --{k}"),
@@ -402,6 +410,14 @@ mod tests {
         // Off by default — the byte-identical discipline's anchor.
         let d = ServeConfig::default().make_overlap_config();
         assert!(!d.enabled && !d.double_buffer_on() && !d.async_migrate_on() && !d.co_issue_on());
+    }
+
+    #[test]
+    fn prefix_cache_flag_parses_and_stays_off_by_default() {
+        let (_, flags) = parse_args(&s(&["--prefix-cache"])).unwrap();
+        assert!(ServeConfig::from_flags(&flags).unwrap().prefix_cache);
+        // Off by default — the byte-identical discipline's anchor.
+        assert!(!ServeConfig::default().prefix_cache);
     }
 
     #[test]

@@ -205,6 +205,9 @@ pub struct ClusterOutcome {
     /// migration instead of being re-prefilled (`SwitchConfig::migrate`;
     /// always 0 with the flag off).
     pub recompute_tokens_avoided: usize,
+    /// Prompt tokens adopted from the prefix cache at admission instead of
+    /// being prefilled (`--prefix-cache`; always 0 with the flag off).
+    pub prefill_tokens_avoided: usize,
     /// Fault/recovery counters (ISSUE 6); all zero on a fault-free run.
     pub fault_stats: FaultStats,
 }
@@ -376,6 +379,13 @@ pub struct Cluster {
     backfill_binds: usize,
     /// Cumulative tokens carried across layout changes by KV migration.
     recompute_tokens_avoided: usize,
+    /// Cross-request prefix cache (ISSUE 10).  Off by default: admission
+    /// never probes the adaptors' radix trees and behavior is
+    /// byte-identical to pre-PR-10.  Armed by [`Self::set_prefix_cache`].
+    prefix_cache: bool,
+    /// Cumulative prompt tokens adopted by reference at admission under
+    /// `--prefix-cache` (never prefilled).
+    prefill_tokens_avoided: usize,
     /// Cost model backing the shared migrate-vs-recompute rule
     /// (`CostModel::migrate_wins`) — the identical rule the simulator event
     /// core applies, so decisions stay byte-comparable across paths.
@@ -569,6 +579,8 @@ impl Cluster {
             rejoin: vec![RejoinState::default(); n_engines],
             backfill_binds: 0,
             recompute_tokens_avoided: 0,
+            prefix_cache: false,
+            prefill_tokens_avoided: 0,
             migrate_cm: CostModel::new(HwSpec::default(), PaperModel::llama70b()),
             journal: crate::obs::Journal::off(),
             journal_tick_seq: 0,
@@ -632,6 +644,31 @@ impl Cluster {
 
     pub fn overlap_config(&self) -> OverlapConfig {
         self.overlap_cfg
+    }
+
+    /// Arm the cross-request prefix cache (ISSUE 10) on every engine's KV
+    /// adaptor.  One-way per adaptor lifetime (`enable_prefix_cache` has no
+    /// disarm — refcounts would be ambiguous), but safe at any safe point:
+    /// arming seeds the refcount ledger from live requests and changes no
+    /// block assignment.  Off by default; admission then never probes the
+    /// trees and the coordinator is byte-identical to pre-PR-10.
+    pub fn set_prefix_cache(&mut self, on: bool) {
+        self.prefix_cache = on;
+        if on {
+            for ad in self.adaptors.iter_mut() {
+                ad.enable_prefix_cache();
+            }
+        }
+    }
+
+    pub fn prefix_cache(&self) -> bool {
+        self.prefix_cache
+    }
+
+    /// Prompt tokens adopted by reference at admission since the last
+    /// `run_trace` reset (`--prefix-cache` only).
+    pub fn prefill_tokens_avoided(&self) -> usize {
+        self.prefill_tokens_avoided
     }
 
     /// Idle serving capacity as the kernel index counts it (excludes
@@ -1421,6 +1458,11 @@ impl Cluster {
         //    live request can hold a handle into the replaced slab
         //    (`check_invariants` asserts exactly this).
         self.adaptors[e] = KvCacheAdaptor::new(self.cfg.clone());
+        if self.prefix_cache {
+            // The fresh adaptor boots with an empty tree; re-arm so the
+            // revived engine participates in prefix sharing again.
+            self.adaptors[e].enable_prefix_cache();
+        }
         self.engine_mode[e] = 1; // fresh backend boots in unit mode
         self.step_err_streak[e] = 0;
         // 4. Quarantine + probe: the engine leaves the failed set but joins
@@ -1480,6 +1522,7 @@ impl Cluster {
         self.t0 = Instant::now();
         self.n_steps = 0;
         self.recompute_tokens_avoided = 0;
+        self.prefill_tokens_avoided = 0;
         self.fault_stats = FaultStats::default();
         self.backfill_binds = 0;
         self.journal.clear();
@@ -1538,6 +1581,7 @@ impl Cluster {
             // ⑥ Execute one step on every engine/group with work.
             let stepped = self.execute_step(&mut recorder)?;
             self.process_faults(&mut recorder)?;
+            self.drain_prefix_evictions();
             if stepped {
                 self.n_steps += 1;
             }
@@ -1598,8 +1642,27 @@ impl Cluster {
             switches: std::mem::take(&mut self.switches),
             n_steps: self.n_steps,
             recompute_tokens_avoided: self.recompute_tokens_avoided,
+            prefill_tokens_avoided: self.prefill_tokens_avoided,
             fault_stats: self.fault_stats,
         })
+    }
+
+    /// Aggregate and journal prefix-cache evictions since the last drain
+    /// (ISSUE 10).  Called once per scheduling iteration at the post-step
+    /// safe point; a branch-and-return with the flag off, and allocation-
+    /// free either way (one fixed sweep over the adaptors).
+    fn drain_prefix_evictions(&mut self) {
+        if !self.prefix_cache {
+            return;
+        }
+        let mut blocks = 0u32;
+        for ad in self.adaptors.iter_mut() {
+            blocks = blocks.saturating_add(ad.take_prefix_evicted());
+        }
+        if blocks > 0 && self.journal.is_enabled() {
+            let t_now = self.now();
+            self.journal.record(t_now, crate::obs::Event::PrefixEvict { blocks });
+        }
     }
 
     /// Cumulative tokens carried across DP→TP layout changes by KV
@@ -1633,6 +1696,7 @@ impl Cluster {
         self.assign_waiting(policy, strategy, recorder)?;
         let stepped = self.execute_step(recorder)?;
         self.process_faults(recorder)?;
+        self.drain_prefix_evictions();
         if stepped {
             self.n_steps += 1;
         }
@@ -1977,10 +2041,38 @@ impl Cluster {
     fn bind_dp(&mut self, h: SlabHandle, e: usize, recorder: &mut Recorder) -> Result<()> {
         let rid = self.active.get(h).expect("live").sr.id;
         let kh = self.adaptors[e].register(rid, 1)?;
+        // Prefix-cache admission (ISSUE 10, `--prefix-cache` only): probe
+        // the engine's radix tree with the prompt and adopt the matched
+        // whole-block chain by reference — those tokens are never prefilled
+        // (`pos` starts past them).  The hit length comes from the shared
+        // kernel predicate (`sched::prefix_hit`), which floors to block
+        // granularity and always leaves at least the prompt's last token to
+        // prefill, so the first chunk is non-empty and decode still seeds
+        // from a freshly-computed forward pass.
+        let mut hit = 0usize;
+        if self.prefix_cache {
+            let a = self.active.get(h).expect("live");
+            let matched = self.adaptors[e].prefix_probe(&a.sr.prompt);
+            hit = crate::sched::prefix_hit(
+                matched,
+                a.sr.prompt.len(),
+                self.cfg.block_tokens(1),
+            );
+            if hit > 0 {
+                self.adaptors[e].prefix_adopt(kh, &a.sr.prompt, hit)?;
+                self.prefill_tokens_avoided += hit;
+                let t_now = self.now();
+                self.journal.record(
+                    t_now,
+                    crate::obs::Event::PrefixHit { rid, tokens: hit as u64 },
+                );
+            }
+        }
         let now = self.now();
         let a = self.active.get_mut(h).expect("live");
         a.mode_p = 1;
         a.home = e;
+        a.pos = hit;
         a.kvh.push((e, kh));
         let rec = a.rec;
         self.engine_active[e].push(h);
@@ -2111,6 +2203,16 @@ impl Cluster {
             .filter(|&e| e < self.engines.len())
             .fold(0u64, |acc, e| acc | (1u64 << e));
         let opening = self.groups[&start].tp_pending.is_empty();
+        if opening && self.prefix_cache {
+            // A fresh transition window (ISSUE 10): re-arm the members'
+            // scatter-once epoch so sharers promoted inside this window pay
+            // the data-plane cost of their shared leading blocks exactly
+            // once (the first sharer's scatter covers the chain; later
+            // co-migrating sharers are discounted in `plan_migration`).
+            for e in self.members(start, p) {
+                self.adaptors[e].begin_switch_epoch();
+            }
+        }
         if opening && matches!(strategy, Strategy::Sequential | Strategy::SoftPreempt) {
             let t_now = self.now();
             self.journal.record(
@@ -3440,6 +3542,25 @@ impl Cluster {
         }
         recorder.on_finish_at(rec, now);
         self.uncommit_all(h);
+        // Prefix-cache donation (ISSUE 10, `--prefix-cache` only): before
+        // the home DP registration is released, fork the prompt's whole-
+        // block chain into the engine's radix tree copy-on-write so later
+        // same-prefix admissions adopt it by reference.  `prefix_donate` is
+        // a no-op (Ok(0)) for TP-layout or paused registrations — only
+        // DP-layout bytes are admission-compatible.
+        if self.prefix_cache && mode_p <= 1 {
+            let a = self.active.get(h).expect("live");
+            if let Some(&(e, kh)) = a.kvh.iter().find(|&&(e, _)| e == home) {
+                let inserted = self.adaptors[e].prefix_donate(kh, &a.sr.prompt)?;
+                if inserted > 0 {
+                    let rid = a.sr.id;
+                    self.journal.record(
+                        now,
+                        crate::obs::Event::PrefixFork { rid, blocks: inserted as u32 },
+                    );
+                }
+            }
+        }
         let kvh = std::mem::take(&mut self.active.get_mut(h).expect("live").kvh);
         for &(e, kh) in kvh.iter() {
             self.adaptors[e].release_h(kh)?;

@@ -26,6 +26,27 @@
 //! over a `BTreeMap<u64, KvHandle>` side index for cold paths (registration,
 //! release, tests, external tooling); `check_invariants` asserts the side
 //! index and the slab agree at all times.
+//!
+//! # Cross-request prefix sharing (ISSUE 10, `--prefix-cache`)
+//!
+//! [`enable_prefix_cache`](KvCacheAdaptor::enable_prefix_cache) arms an
+//! optional refcounted radix/prefix tree over the same block pool (SGLang's
+//! RadixAttention, made layout-aware): each tree node caches exactly one
+//! DP-layout block's worth of prompt tokens.  Admission probes the tree
+//! ([`prefix_probe`](KvCacheAdaptor::prefix_probe)), adopts the matched
+//! chain by reference ([`prefix_adopt`](KvCacheAdaptor::prefix_adopt) —
+//! refcount bump, no prefill), and finished requests donate their novel
+//! prompt blocks ([`prefix_donate`](KvCacheAdaptor::prefix_donate) — the
+//! copy-on-write fork point: divergent suffixes insert new nodes, shared
+//! content is never duplicated).  With the cache armed, block ownership
+//! becomes refcounted (request lists + tree each count one owner); a block
+//! returns to the free list only at refcount 0.  Refcount-1 tree leaves
+//! (cache-only owners) are LRU-evicted on demand — the cache *borrows*
+//! pool capacity, allocation pressure always wins.  Migration composes:
+//! re-tagged blocks are epoch-marked so co-migrating sharers scatter the
+//! shared prefix exactly once per switch, and consumed tree entries (now
+//! non-DP layout) are invalidated.  With the cache off (`prefix: None`)
+//! every path below is byte-identical to the pre-ISSUE-10 code.
 
 use anyhow::{bail, Result};
 
@@ -84,6 +105,168 @@ pub struct MigrationPlan {
     pub link_bytes: usize,
 }
 
+/// Sentinel for "no tree node" in [`PrefixPool`] index vectors.
+const NO_NODE: u32 = u32::MAX;
+
+/// One node of the prefix tree: exactly one DP-layout block's worth of
+/// prompt tokens plus the physical block caching their KV.  Divergent
+/// continuations hang off `children` — the copy-on-write fork point.
+#[derive(Clone, Debug)]
+struct PrefixNode {
+    /// Parent node index, `NO_NODE` for a top-level (root-child) node.
+    parent: u32,
+    /// Exactly `block_tokens(1)` prompt tokens (partial blocks never enter
+    /// the tree, so every match is block-aligned by construction).
+    tokens: Vec<i32>,
+    /// Physical block whose KV caches `tokens` (DP layout, p = 1).
+    block: u32,
+    children: Vec<u32>,
+    /// LRU stamp, bumped on every probe/adopt/donate walk that touches the
+    /// node; refcount-1 leaves with the oldest stamp are evicted first.
+    last_use: u64,
+    live: bool,
+}
+
+/// Refcounted radix/prefix tree over KV blocks (ISSUE 10).  Owned by
+/// [`KvCacheAdaptor`] behind an `Option` — `None` means the prefix cache is
+/// off and block ownership stays exclusive (the PR-1..9 discipline,
+/// byte-identical).  All block-id vectors are indexed by physical block id.
+pub struct PrefixPool {
+    nodes: Vec<PrefixNode>,
+    /// Dead `nodes` slots available for reuse.
+    node_free: Vec<u32>,
+    /// Top-level nodes (first block of each cached prompt family).
+    roots: Vec<u32>,
+    /// Per-block owner count: every request whose block list contains the
+    /// block counts 1, and a tree node holding the block counts 1.  A block
+    /// is on the adaptor's free list iff its refcount is 0.
+    refcounts: Vec<u32>,
+    /// block id -> owning tree node (`NO_NODE` when not cached).
+    node_of_block: Vec<u32>,
+    /// Switch epoch in which each block was last re-tagged/scattered —
+    /// lets a co-migrating sharer's plan skip bytes a peer already moved
+    /// this epoch ("scattered exactly once per switch").
+    migrated_epoch: Vec<u64>,
+    current_epoch: u64,
+    lru_clock: u64,
+    /// Blocks LRU-evicted since the last [`KvCacheAdaptor::take_prefix_evicted`]
+    /// drain (feeds the `prefix_evict` journal event).
+    evicted_pending: u32,
+}
+
+impl PrefixPool {
+    fn new(n_blocks: usize) -> Self {
+        PrefixPool {
+            nodes: Vec::new(),
+            node_free: Vec::new(),
+            roots: Vec::new(),
+            refcounts: vec![0; n_blocks],
+            node_of_block: vec![NO_NODE; n_blocks],
+            migrated_epoch: vec![0; n_blocks],
+            current_epoch: 0,
+            lru_clock: 0,
+            evicted_pending: 0,
+        }
+    }
+
+    /// Child of `at` (or a root when `at` is `None`) whose tokens equal
+    /// `seg`, if any.
+    fn find_child(&self, at: Option<u32>, seg: &[i32]) -> Option<u32> {
+        let kids = match at {
+            None => &self.roots,
+            Some(i) => &self.nodes[i as usize].children,
+        };
+        kids.iter()
+            .copied()
+            .find(|&c| self.nodes[c as usize].tokens[..] == *seg)
+    }
+
+    /// Drop one refcount on `b`; a block at refcount 0 returns to `free`.
+    fn deref_block(&mut self, b: u32, free: &mut Vec<u32>) {
+        let r = &mut self.refcounts[b as usize];
+        debug_assert!(*r > 0, "double free of block {b}");
+        *r = r.saturating_sub(1);
+        if *r == 0 {
+            free.push(b);
+        }
+    }
+
+    /// Unlink `idx` from its parent's child list (or the root list).
+    fn detach(&mut self, idx: u32) {
+        let parent = self.nodes[idx as usize].parent;
+        let list = match parent {
+            NO_NODE => &mut self.roots,
+            p => &mut self.nodes[p as usize].children,
+        };
+        if let Some(i) = list.iter().position(|&c| c == idx) {
+            list.swap_remove(i);
+        }
+    }
+
+    /// Mark `idx` dead and recycle its slot (caller already detached it and
+    /// settled its block's refcount).
+    fn kill_node(&mut self, idx: u32) {
+        let node = &mut self.nodes[idx as usize];
+        node.live = false;
+        node.children.clear();
+        node.tokens.clear();
+        self.node_of_block[node.block as usize] = NO_NODE;
+        self.node_free.push(idx);
+    }
+
+    fn new_node(&mut self, node: PrefixNode) -> u32 {
+        match self.node_free.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Evict the least-recently-used refcount-1 leaf (a block only the
+    /// cache still owns) back into `free`.  Returns false when nothing is
+    /// evictable — every cached block is still shared with a live request.
+    fn evict_lru_leaf(&mut self, free: &mut Vec<u32>) -> bool {
+        let mut best: Option<(u64, u32)> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.live
+                && n.children.is_empty()
+                && self.refcounts[n.block as usize] == 1
+                && best.map_or(true, |(lu, _)| n.last_use < lu)
+            {
+                best = Some((n.last_use, i as u32));
+            }
+        }
+        let Some((_, idx)) = best else { return false };
+        self.detach(idx);
+        let b = self.nodes[idx as usize].block;
+        self.kill_node(idx);
+        self.deref_block(b, free);
+        debug_assert_eq!(self.refcounts[b as usize], 0);
+        self.evicted_pending += 1;
+        true
+    }
+
+    /// Remove the subtree rooted at `idx`, dropping the tree's refcount on
+    /// every node's block (migration consumed those cache entries — the
+    /// bytes are no longer DP-layout).  Blocks still shared with live
+    /// requests survive; cache-only blocks return to `free`.
+    fn remove_subtree(&mut self, idx: u32, free: &mut Vec<u32>) {
+        self.detach(idx);
+        let mut stack = vec![idx];
+        while let Some(i) = stack.pop() {
+            stack.extend(std::mem::take(&mut self.nodes[i as usize].children));
+            let b = self.nodes[i as usize].block;
+            self.kill_node(i);
+            self.deref_block(b, free);
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RequestKv {
     pub rid: u64,         // external request id (for invariants/iteration)
@@ -106,6 +289,9 @@ pub struct KvCacheAdaptor {
     requests: Slab<RequestKv>,
     /// rid -> handle side index (cold paths only; hot paths carry handles).
     by_id: std::collections::BTreeMap<u64, KvHandle>,
+    /// Prefix-sharing state (`--prefix-cache`); `None` keeps every path in
+    /// this module byte-identical to the exclusive-ownership code.
+    prefix: Option<Box<PrefixPool>>,
 }
 
 impl KvCacheAdaptor {
@@ -117,6 +303,7 @@ impl KvCacheAdaptor {
             free,
             requests: Slab::new(),
             by_id: Default::default(),
+            prefix: None,
         }
     }
 
@@ -200,7 +387,7 @@ impl KvCacheAdaptor {
         }
         if need > have {
             let short = need - have;
-            if short > self.free.len() {
+            if !self.reserve_free(short) {
                 bail!(
                     "kv pool exhausted: request {rid} short {short} blocks, {} free",
                     self.free.len()
@@ -209,6 +396,10 @@ impl KvCacheAdaptor {
             let req = self.requests.get_mut(h).unwrap();
             for _ in 0..short {
                 let b = self.free.pop().unwrap();
+                if let Some(px) = self.prefix.as_mut() {
+                    debug_assert_eq!(px.refcounts[b as usize], 0);
+                    px.refcounts[b as usize] = 1;
+                }
                 // Incremental row maintenance: only the newly-granted
                 // positions are touched.
                 req.row[req.blocks.len()] = b as i32;
@@ -216,6 +407,23 @@ impl KvCacheAdaptor {
             }
         }
         Ok(())
+    }
+
+    /// Ensure at least `n` blocks sit on the free list, LRU-evicting
+    /// cache-only prefix leaves if the tree is borrowing capacity.  With
+    /// the prefix cache off this is exactly the old `n <= free.len()`
+    /// check.  Returns false when demand cannot be met even after
+    /// evicting everything evictable.
+    fn reserve_free(&mut self, n: usize) -> bool {
+        while self.free.len() < n {
+            let Some(px) = self.prefix.as_mut() else {
+                return false;
+            };
+            if !px.evict_lru_leaf(&mut self.free) {
+                return false;
+            }
+        }
+        true
     }
 
     /// Id-keyed convenience form of [`Self::ensure_capacity_h`].
@@ -317,7 +525,14 @@ impl KvCacheAdaptor {
         req.seq_len = 0;
         req.layout_p = new_p;
         req.row.fill(TRASH_BLOCK as i32);
-        self.free.extend(blocks.into_iter().rev());
+        match self.prefix.as_mut() {
+            Some(px) => {
+                for &b in blocks.iter().rev() {
+                    px.deref_block(b, &mut self.free);
+                }
+            }
+            None => self.free.extend(blocks.into_iter().rev()),
+        }
         Ok(recompute)
     }
 
@@ -363,7 +578,25 @@ impl KvCacheAdaptor {
         plan.grow = grow;
         plan.peer_blocks = need_new;
         let wide = req.layout_p.max(new_p);
-        plan.elems_per_member = seq * self.cfg.kv_width(wide);
+        // Scatter-once per switch (ISSUE 10): leading blocks a co-migrating
+        // sharer already re-tagged/scattered this epoch carry no new bytes —
+        // discount them from the data-plane cost.  Metadata (retag/free/
+        // grow) stays per-request; only the wire cost dedupes.
+        let mut already_tokens = 0usize;
+        if let Some(px) = &self.prefix {
+            if px.current_epoch > 0 {
+                let bt_from = self.cfg.block_tokens(req.layout_p);
+                for &b in &req.blocks[..keep] {
+                    if px.migrated_epoch[b as usize] == px.current_epoch {
+                        already_tokens += bt_from;
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        let move_tokens = seq.saturating_sub(already_tokens);
+        plan.elems_per_member = move_tokens * self.cfg.kv_width(wide);
         plan.link_bytes = 4 * plan.elems_per_member * (wide - 1);
         Ok(())
     }
@@ -379,9 +612,6 @@ impl KvCacheAdaptor {
     pub fn apply_migration(&mut self, h: KvHandle, plan: &MigrationPlan) -> Result<()> {
         if !self.cfg.supports_tp(plan.to_p) {
             bail!("unsupported TP degree {}", plan.to_p);
-        }
-        if plan.grow > self.free.len() {
-            bail!("kv pool exhausted mid-migration (plan is stale)");
         }
         let req = self
             .requests
@@ -400,23 +630,52 @@ impl KvCacheAdaptor {
         {
             bail!("migration plan does not match request {}'s block list", req.rid);
         }
+        if !self.reserve_free(plan.grow) {
+            bail!("kv pool exhausted mid-migration (plan is stale)");
+        }
         let req = self.requests.get_mut(h).unwrap();
         // Promote: surplus blocks leave from the tail (the retagged prefix
         // keeps its ids, so the cached row prefix is already correct).
+        // With sharing armed a freed block may still be owned by other
+        // sharers or the tree — it only reaches the free list at refcount 0.
         for i in (keep..req.blocks.len()).rev() {
             let b = req.blocks[i];
             req.row[i] = TRASH_BLOCK as i32;
-            self.free.push(b);
+            match self.prefix.as_mut() {
+                Some(px) => px.deref_block(b, &mut self.free),
+                None => self.free.push(b),
+            }
         }
         req.blocks.truncate(keep);
         // Demote: grow the shortfall from the pool (checked above).
         for _ in 0..plan.grow {
             let b = self.free.pop().unwrap();
+            if let Some(px) = self.prefix.as_mut() {
+                debug_assert_eq!(px.refcounts[b as usize], 0);
+                px.refcounts[b as usize] = 1;
+            }
             req.row[req.blocks.len()] = b as i32;
             req.blocks.push(b);
         }
         req.layout_p = plan.to_p;
         debug_assert!(req.seq_len <= req.blocks.len() * self.cfg.block_tokens(plan.to_p));
+        if let Some(px) = self.prefix.as_mut() {
+            // Epoch-mark the re-tagged prefix so a co-migrating sharer's
+            // plan skips bytes this apply already scattered, and invalidate
+            // tree entries whose blocks the migration consumed — their
+            // contents are no longer the DP layout future adopters expect.
+            // (The *sharers'* reuse survives: block ids are stable, so every
+            // sharer's block list and cached row remain valid as-is.)
+            for &b in &plan.retag {
+                px.migrated_epoch[b as usize] = px.current_epoch;
+            }
+            for &b in plan.retag.iter().chain(plan.free.iter()) {
+                let idx = px.node_of_block[b as usize];
+                if idx != NO_NODE {
+                    px.remove_subtree(idx, &mut self.free);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -428,7 +687,17 @@ impl KvCacheAdaptor {
             .remove(h)
             .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
         self.by_id.remove(&req.rid);
-        self.free.extend(req.blocks.into_iter().rev());
+        match self.prefix.as_mut() {
+            Some(px) => {
+                // Shared prefix blocks survive the sharer: only refcount-0
+                // blocks (no other sharer, not cached in the tree) return
+                // to the pool.
+                for &b in req.blocks.iter().rev() {
+                    px.deref_block(b, &mut self.free);
+                }
+            }
+            None => self.free.extend(req.blocks.into_iter().rev()),
+        }
         Ok(())
     }
 
@@ -459,21 +728,232 @@ impl KvCacheAdaptor {
         0 // no per-block work: the pool and ids are layout-invariant
     }
 
+    // -----------------------------------------------------------------
+    // Cross-request prefix sharing (ISSUE 10, `--prefix-cache`)
+    // -----------------------------------------------------------------
+
+    /// Arm the prefix cache.  Idempotent; safe mid-run (refcounts are
+    /// seeded from current exclusive ownership).  There is deliberately no
+    /// disarm: refcounted state cannot collapse back to exclusive
+    /// ownership while blocks are shared.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_some() {
+            return;
+        }
+        let mut px = Box::new(PrefixPool::new(self.cfg.n_blocks));
+        for (_, req) in self.requests.iter() {
+            for &b in &req.blocks {
+                px.refcounts[b as usize] += 1;
+            }
+        }
+        self.prefix = Some(px);
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Number of live tree nodes (== blocks the cache holds a ref on).
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix
+            .as_ref()
+            .map_or(0, |px| px.nodes.iter().filter(|n| n.live).count())
+    }
+
+    /// Longest cached prefix of `tokens`, in tokens (always a multiple of
+    /// the DP block size; 0 when the cache is off or cold).  Bumps the LRU
+    /// stamp on the matched chain.  The caller feeds this through
+    /// `sched::prefix_hit` — the single match predicate — before adopting.
+    pub fn prefix_probe(&mut self, tokens: &[i32]) -> usize {
+        let bt = self.cfg.block_tokens(1);
+        let Some(px) = self.prefix.as_mut() else {
+            return 0;
+        };
+        px.lru_clock += 1;
+        let clock = px.lru_clock;
+        let mut matched = 0usize;
+        let mut at: Option<u32> = None;
+        while matched + bt <= tokens.len() {
+            let seg = &tokens[matched..matched + bt];
+            let Some(c) = px.find_child(at, seg) else { break };
+            px.nodes[c as usize].last_use = clock;
+            matched += bt;
+            at = Some(c);
+        }
+        matched
+    }
+
+    /// Adopt `reuse_tokens` of cached prefix for a freshly-registered DP
+    /// request: bump each chain block's refcount, splice the block ids into
+    /// the request's list (row maintained incrementally), and mark those
+    /// tokens as already cached (`seq_len = reuse_tokens`) — they are never
+    /// prefilled.  `reuse_tokens` must be the (block-aligned) output of
+    /// `sched::prefix_hit` over a fresh probe.
+    pub fn prefix_adopt(
+        &mut self,
+        h: KvHandle,
+        tokens: &[i32],
+        reuse_tokens: usize,
+    ) -> Result<()> {
+        if reuse_tokens == 0 {
+            return Ok(());
+        }
+        let bt = self.cfg.block_tokens(1);
+        if self.prefix.is_none() {
+            bail!("prefix cache disabled");
+        }
+        if reuse_tokens % bt != 0 || reuse_tokens > tokens.len() {
+            bail!("prefix adoption of {reuse_tokens} tokens is not block-aligned");
+        }
+        {
+            let req = self
+                .requests
+                .get(h)
+                .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
+            if req.layout_p != 1 || !req.blocks.is_empty() || req.seq_len != 0 {
+                bail!(
+                    "prefix adoption requires a fresh DP registration (request {})",
+                    req.rid
+                );
+            }
+        }
+        let px = self.prefix.as_mut().unwrap();
+        px.lru_clock += 1;
+        let clock = px.lru_clock;
+        let mut chain: Vec<u32> = Vec::with_capacity(reuse_tokens / bt);
+        let mut at: Option<u32> = None;
+        let mut off = 0usize;
+        while off < reuse_tokens {
+            let seg = &tokens[off..off + bt];
+            let Some(c) = px.find_child(at, seg) else {
+                bail!("prefix chain shorter than the probed hit (cache raced)");
+            };
+            let b = px.nodes[c as usize].block;
+            px.nodes[c as usize].last_use = clock;
+            px.refcounts[b as usize] += 1;
+            chain.push(b);
+            at = Some(c);
+            off += bt;
+        }
+        let req = self.requests.get_mut(h).unwrap();
+        for (i, &b) in chain.iter().enumerate() {
+            req.row[i] = b as i32;
+            req.blocks.push(b);
+        }
+        req.seq_len = reuse_tokens;
+        Ok(())
+    }
+
+    /// Donate a finished request's prompt blocks to the tree (the
+    /// copy-on-write fork: shared content descends the existing chain,
+    /// novel continuations insert new nodes that take a +1 ref on the
+    /// donor's blocks, so they outlive the donor's release).  Only full
+    /// DP-layout prompt blocks enter — the partial tail block (prompt tail
+    /// + generated tokens) never does.  Returns the number of novel blocks
+    /// cached (0 = everything was already cached, or the cache is off, or
+    /// the request is not in DP layout).
+    pub fn prefix_donate(&mut self, h: KvHandle, tokens: &[i32]) -> Result<usize> {
+        if self.prefix.is_none() {
+            return Ok(0);
+        }
+        let bt = self.cfg.block_tokens(1);
+        let req = self
+            .requests
+            .get(h)
+            .ok_or_else(|| anyhow::anyhow!("stale kv handle (request gone)"))?;
+        if req.layout_p != 1 || req.paused {
+            return Ok(0);
+        }
+        let n_full = (tokens.len() / bt)
+            .min(req.blocks.len())
+            .min(req.seq_len / bt);
+        let donor: Vec<u32> = req.blocks[..n_full].to_vec();
+        let px = self.prefix.as_mut().unwrap();
+        px.lru_clock += 1;
+        let clock = px.lru_clock;
+        let mut at: Option<u32> = None;
+        let mut inserted = 0usize;
+        for (i, &b) in donor.iter().enumerate() {
+            let seg = &tokens[i * bt..(i + 1) * bt];
+            match px.find_child(at, seg) {
+                Some(c) => {
+                    // Shared content: keep the tree's copy, never duplicate.
+                    px.nodes[c as usize].last_use = clock;
+                    at = Some(c);
+                }
+                None => {
+                    if px.node_of_block[b as usize] != NO_NODE {
+                        // Defensive: the donor's block is already cached
+                        // under different content — stop donating rather
+                        // than double-insert (skip-never-panic).
+                        break;
+                    }
+                    let idx = px.new_node(PrefixNode {
+                        parent: at.unwrap_or(NO_NODE),
+                        tokens: seg.to_vec(),
+                        block: b,
+                        children: Vec::new(),
+                        last_use: clock,
+                        live: true,
+                    });
+                    match at {
+                        None => px.roots.push(idx),
+                        Some(p) => px.nodes[p as usize].children.push(idx),
+                    }
+                    px.node_of_block[b as usize] = idx;
+                    px.refcounts[b as usize] += 1;
+                    inserted += 1;
+                    at = Some(idx);
+                }
+            }
+        }
+        Ok(inserted)
+    }
+
+    /// Open a new switch epoch: the next migration through this adaptor
+    /// scatters shared blocks at most once until the next call.  Called by
+    /// the coordinator when a transition window opens.
+    pub fn begin_switch_epoch(&mut self) {
+        if let Some(px) = self.prefix.as_mut() {
+            px.current_epoch += 1;
+        }
+    }
+
+    /// Drain the count of blocks LRU-evicted from the tree since the last
+    /// call (feeds the `prefix_evict` journal event).
+    pub fn take_prefix_evicted(&mut self) -> u32 {
+        self.prefix
+            .as_mut()
+            .map_or(0, |px| std::mem::take(&mut px.evicted_pending))
+    }
+
     /// Sanity invariant (checked in tests): every block is either free or
     /// owned by exactly one request, block 0 is owned by nobody, the cached
     /// rows agree with the authoritative block lists, and the id side index
     /// agrees with the slab (same population, handle→rid→handle closes).
+    ///
+    /// With the prefix cache armed the exclusive-ownership sweep
+    /// generalizes to refcount accounting (ISSUE 10): the observed owner
+    /// count of every block (occurrences across request block lists + tree
+    /// nodes holding it) must equal its refcount, a block is on the free
+    /// list iff that count is 0 (refcounted + free partition the pool), no
+    /// request lists a block twice, the tree is a well-formed forest
+    /// (parent/child links close, one node per block, trash never cached,
+    /// every node's block refcount ≥ 1 — a refcount-0 node, interior or
+    /// leaf, is a structural error), and refcounts never grow down a chain
+    /// (sharers adopt prefixes from the root, so parent ≥ child).
     pub fn check_invariants(&self) -> Result<()> {
-        let mut seen = vec![0u8; self.cfg.n_blocks];
-        seen[TRASH_BLOCK as usize] = 1;
+        let n = self.cfg.n_blocks;
+        let mut owners = vec![0u32; n];
+        let mut in_free = vec![false; n];
         for &b in &self.free {
             if b == TRASH_BLOCK {
                 bail!("trash block on free list");
             }
-            if seen[b as usize] != 0 {
+            if in_free[b as usize] {
                 bail!("block {b} double-tracked (free list)");
             }
-            seen[b as usize] = 1;
+            in_free[b as usize] = true;
         }
         let mut n_live = 0usize;
         for (h, req) in self.requests.iter() {
@@ -490,14 +970,15 @@ impl KvCacheAdaptor {
             if req.seq_len > req.blocks.len() * bt {
                 bail!("request {rid} seq_len beyond capacity");
             }
+            let mut within = std::collections::BTreeSet::new();
             for &b in &req.blocks {
                 if b == TRASH_BLOCK {
                     bail!("request {rid} owns trash block");
                 }
-                if seen[b as usize] != 0 {
-                    bail!("block {b} double-owned (request {rid})");
+                if !within.insert(b) {
+                    bail!("request {rid} lists block {b} twice");
                 }
-                seen[b as usize] = 1;
+                owners[b as usize] += 1;
             }
             // The incrementally-maintained row cache must agree with the
             // authoritative block list at all times.
@@ -523,8 +1004,109 @@ impl KvCacheAdaptor {
                 _ => bail!("side index entry {rid} points at a stale handle"),
             }
         }
-        if seen.iter().any(|&s| s == 0) {
-            bail!("leaked block (neither free nor owned)");
+        match &self.prefix {
+            None => {
+                // Exclusive ownership: every block free xor owned by
+                // exactly one request (the PR-1..9 invariant, unchanged).
+                for b in 1..n {
+                    match (owners[b], in_free[b]) {
+                        (0, true) | (1, false) => {}
+                        (0, false) => bail!("leaked block {b} (neither free nor owned)"),
+                        (_, true) => bail!("block {b} both free and owned"),
+                        (_, false) => bail!("block {b} double-owned"),
+                    }
+                }
+            }
+            Some(px) => {
+                if px.refcounts.len() != n || px.node_of_block.len() != n {
+                    bail!("prefix pool index vectors have wrong width");
+                }
+                let bt1 = self.cfg.block_tokens(1);
+                let mut in_edges = vec![0u32; px.nodes.len()];
+                for r in &px.roots {
+                    in_edges[*r as usize] += 1;
+                }
+                for (i, node) in px.nodes.iter().enumerate() {
+                    if !node.live {
+                        continue;
+                    }
+                    if node.block == TRASH_BLOCK {
+                        bail!("prefix node {i} caches the trash block");
+                    }
+                    if node.tokens.len() != bt1 {
+                        bail!("prefix node {i} is not one DP block of tokens");
+                    }
+                    owners[node.block as usize] += 1;
+                    if px.node_of_block[node.block as usize] != i as u32 {
+                        bail!("block {} -> node map disagrees with node {i}", node.block);
+                    }
+                    match node.parent {
+                        NO_NODE => {
+                            if !px.roots.contains(&(i as u32)) {
+                                bail!("prefix node {i} is parentless but not a root");
+                            }
+                        }
+                        p => {
+                            let parent = &px.nodes[p as usize];
+                            if !parent.live || !parent.children.contains(&(i as u32)) {
+                                bail!("prefix node {i} has a broken parent link");
+                            }
+                        }
+                    }
+                    for &c in &node.children {
+                        let child = &px.nodes[c as usize];
+                        if !child.live || child.parent != i as u32 {
+                            bail!("prefix node {i} has a broken child link {c}");
+                        }
+                        in_edges[c as usize] += 1;
+                    }
+                }
+                for (i, node) in px.nodes.iter().enumerate() {
+                    let want = u32::from(node.live);
+                    if in_edges[i] != want {
+                        bail!("prefix node {i} referenced {} times (want {want})", in_edges[i]);
+                    }
+                }
+                // Refcount cross-check: observed owners == refcount,
+                // free ⟺ refcount 0, every non-trash block accounted.
+                for b in 1..n {
+                    if px.refcounts[b] != owners[b] {
+                        bail!(
+                            "block {b} refcount drift: counted {} owners, refcount {}",
+                            owners[b],
+                            px.refcounts[b]
+                        );
+                    }
+                    if in_free[b] && owners[b] != 0 {
+                        bail!("block {b} both free and refcounted");
+                    }
+                    if !in_free[b] && owners[b] == 0 {
+                        bail!("leaked block {b} (refcount 0 but not free)");
+                    }
+                }
+                // Monotone chains: a node's block can never be more shared
+                // than its parent's (adoption always starts at the root).
+                for node in px.nodes.iter().filter(|n| n.live) {
+                    if node.parent != NO_NODE {
+                        let pb = px.nodes[node.parent as usize].block as usize;
+                        if px.refcounts[pb] < px.refcounts[node.block as usize] {
+                            bail!(
+                                "prefix chain refcount inversion at block {}",
+                                node.block
+                            );
+                        }
+                    }
+                }
+                // node_of_block reverse closure.
+                for (b, &idx) in px.node_of_block.iter().enumerate() {
+                    if idx != NO_NODE {
+                        let node = &px.nodes[idx as usize];
+                        if !node.live || node.block as usize != b {
+                            bail!("block {b} -> node map points at a dead/foreign node");
+                        }
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -841,6 +1423,12 @@ mod tests {
         prop_check("kv migration conservation", 120, |g| {
             let c = cfg();
             let mut a = KvCacheAdaptor::new(c.clone());
+            // Extended (ISSUE 10): half the cases run with the prefix cache
+            // armed — with no sharing in play, refcounted accounting must
+            // reproduce exclusive-ownership behavior exactly.
+            if g.usize(0, 1) == 1 {
+                a.enable_prefix_cache();
+            }
             let mut plan = MigrationPlan::default();
             let p0 = *g.choose(&[1usize, 2, 4]);
             let h = a.register(1, p0).map_err(|e| e.to_string())?;
@@ -975,6 +1563,326 @@ mod tests {
             let b2: std::collections::BTreeSet<u32> =
                 a.request(2).unwrap().blocks.iter().copied().collect();
             crate::prop_assert!(b1.is_disjoint(&b2), "block overlap");
+            Ok(())
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Cross-request prefix sharing (ISSUE 10)
+    // -----------------------------------------------------------------
+
+    /// `prefix_len` shared tokens followed by a tail unique to `salt`.
+    fn family_prompt(prefix_len: usize, total: usize, salt: i32) -> Vec<i32> {
+        (0..total)
+            .map(|i| {
+                if i < prefix_len {
+                    i as i32
+                } else {
+                    1000 + salt * 100 + i as i32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefix_probe_is_zero_when_disabled_or_cold() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        let t = family_prompt(8, 12, 0);
+        assert_eq!(a.prefix_probe(&t), 0, "disabled cache must never hit");
+        a.enable_prefix_cache();
+        assert_eq!(a.prefix_probe(&t), 0, "cold cache must never hit");
+        assert!(a.prefix_enabled());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_donate_then_adopt_shares_blocks() {
+        let mut a = KvCacheAdaptor::new(cfg()); // bt(1) = 4
+        a.enable_prefix_cache();
+        let t1 = family_prompt(8, 12, 1);
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 12).unwrap();
+        a.set_seq_len_h(h1, 12).unwrap();
+        let donor_blocks = a.request_h(h1).unwrap().blocks.clone();
+        assert_eq!(a.prefix_donate(h1, &t1).unwrap(), 3, "3 novel full blocks");
+        let free_before = a.free_blocks();
+        a.release_h(h1).unwrap();
+        // The tree keeps every donated block alive past the donor.
+        assert_eq!(a.free_blocks(), free_before, "donated blocks must not free");
+        assert_eq!(a.prefix_cached_blocks(), 3);
+        a.check_invariants().unwrap();
+
+        // A same-family request matches the shared 8 tokens, not the tail.
+        let t2 = family_prompt(8, 12, 2);
+        assert_eq!(a.prefix_probe(&t2), 8);
+        let h2 = a.register(2, 1).unwrap();
+        a.prefix_adopt(h2, &t2, 8).unwrap();
+        let req2 = a.request_h(h2).unwrap();
+        assert_eq!(req2.seq_len, 8, "adopted tokens count as cached");
+        assert_eq!(req2.blocks, &donor_blocks[..2], "prefix reused by reference");
+        assert_eq!(a.table_row_ref_h(h2).unwrap()[0], donor_blocks[0] as i32);
+        assert_eq!(a.table_row_ref_h(h2).unwrap()[1], donor_blocks[1] as i32);
+        a.check_invariants().unwrap();
+        // Growing past the adopted prefix allocates only novel blocks.
+        a.ensure_capacity_h(h2, 12).unwrap();
+        a.set_seq_len_h(h2, 12).unwrap();
+        let req2 = a.request_h(h2).unwrap();
+        assert_eq!(req2.blocks.len(), 3);
+        assert!(!donor_blocks.contains(&req2.blocks[2]));
+        // Finishing forks copy-on-write: only the divergent tail block
+        // inserts a node; the shared chain is never duplicated.
+        assert_eq!(a.prefix_donate(h2, &t2).unwrap(), 1);
+        assert_eq!(a.prefix_cached_blocks(), 4);
+        a.release_h(h2).unwrap();
+        a.check_invariants().unwrap();
+        // Full family prefix now probes end-to-end for both tails.
+        assert_eq!(a.prefix_probe(&t1), 12);
+        assert_eq!(a.prefix_probe(&t2), 12);
+    }
+
+    #[test]
+    fn prefix_adopt_requires_fresh_dp_registration() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.enable_prefix_cache();
+        let t = family_prompt(8, 12, 1);
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 12).unwrap();
+        a.set_seq_len_h(h1, 12).unwrap();
+        a.prefix_donate(h1, &t).unwrap();
+        // Already holds blocks: not a fresh registration.
+        assert!(a.prefix_adopt(h1, &t, 8).is_err());
+        // TP registrations cannot adopt (nodes are DP layout).
+        let h2 = a.register(2, 2).unwrap();
+        assert!(a.prefix_adopt(h2, &t, 8).is_err());
+        // Unaligned adoption is rejected.
+        let h3 = a.register(3, 1).unwrap();
+        assert!(a.prefix_adopt(h3, &t, 6).is_err());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_eviction_yields_cache_only_blocks_under_pressure() {
+        let mut a = KvCacheAdaptor::new(cfg()); // 15 usable blocks
+        a.enable_prefix_cache();
+        let t = family_prompt(12, 12, 1);
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 12).unwrap();
+        a.set_seq_len_h(h1, 12).unwrap();
+        a.prefix_donate(h1, &t).unwrap();
+        a.release_h(h1).unwrap();
+        assert_eq!(a.free_blocks(), 12);
+        assert_eq!(a.prefix_cached_blocks(), 3);
+        // Demand for the whole pool evicts the cache leaf-first: the cache
+        // borrows capacity, allocation pressure always wins.
+        let h2 = a.register(2, 1).unwrap();
+        a.ensure_capacity_h(h2, 60).unwrap(); // all 15 blocks
+        assert_eq!(a.free_blocks(), 0);
+        assert_eq!(a.prefix_cached_blocks(), 0);
+        assert_eq!(a.take_prefix_evicted(), 3);
+        assert_eq!(a.take_prefix_evicted(), 0, "drain is one-shot");
+        assert_eq!(a.prefix_probe(&t), 0, "evicted entries no longer match");
+        a.check_invariants().unwrap();
+        // Still-short demand fails cleanly with nothing left to evict.
+        a.register(3, 1).unwrap();
+        assert!(a.ensure_capacity(3, 1).is_err());
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_shared_blocks_are_not_evictable() {
+        let mut a = KvCacheAdaptor::new(cfg());
+        a.enable_prefix_cache();
+        let t = family_prompt(12, 12, 1);
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 12).unwrap();
+        a.set_seq_len_h(h1, 12).unwrap();
+        a.prefix_donate(h1, &t).unwrap();
+        a.release_h(h1).unwrap();
+        // An adopter pins the first two blocks (refcount 2); the third
+        // stays cache-only (refcount 1, evictable).
+        let t2 = family_prompt(8, 12, 2);
+        let h2 = a.register(2, 1).unwrap();
+        a.prefix_adopt(h2, &t2, 8).unwrap();
+        assert_eq!(a.free_blocks(), 12);
+        let h3 = a.register(3, 1).unwrap();
+        a.ensure_capacity_h(h3, 13 * 4).unwrap(); // 13 blocks: evicts the leaf
+        assert_eq!(a.take_prefix_evicted(), 1);
+        assert_eq!(a.prefix_cached_blocks(), 2);
+        // The shared chain is pinned: no further eviction is possible.
+        assert!(a.ensure_capacity_h(h3, 14 * 4).is_err());
+        a.check_invariants().unwrap();
+        // Once the sharer leaves, the chain becomes cache-only again and
+        // eviction cascades parent-ward (children first).
+        a.release_h(h2).unwrap();
+        a.ensure_capacity_h(h3, 15 * 4).unwrap();
+        assert_eq!(a.take_prefix_evicted(), 2);
+        assert_eq!(a.prefix_cached_blocks(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn migration_scatters_shared_prefix_once_per_epoch() {
+        let c = cfg();
+        let mut a = KvCacheAdaptor::new(c.clone());
+        a.enable_prefix_cache();
+        // Seed the family: donor writes 2 shared blocks + 1 unique.
+        let t1 = family_prompt(8, 12, 1);
+        let h1 = a.register(1, 1).unwrap();
+        a.ensure_capacity_h(h1, 12).unwrap();
+        a.set_seq_len_h(h1, 12).unwrap();
+        a.prefix_donate(h1, &t1).unwrap();
+        a.release_h(h1).unwrap();
+        // Two sharers adopt the same 8-token prefix and finish their own
+        // prefill (12 tokens each: 2 shared + 1 private block).
+        let t2 = family_prompt(8, 12, 2);
+        let t3 = family_prompt(8, 12, 3);
+        let h2 = a.register(2, 1).unwrap();
+        a.prefix_adopt(h2, &t2, 8).unwrap();
+        a.ensure_capacity_h(h2, 12).unwrap();
+        a.set_seq_len_h(h2, 12).unwrap();
+        let h3 = a.register(3, 1).unwrap();
+        a.prefix_adopt(h3, &t3, 8).unwrap();
+        a.ensure_capacity_h(h3, 12).unwrap();
+        a.set_seq_len_h(h3, 12).unwrap();
+        let shared: Vec<u32> = a.request_h(h2).unwrap().blocks[..2].to_vec();
+        assert_eq!(&a.request_h(h3).unwrap().blocks[..2], &shared[..]);
+        // Both sharers promote to p=2 inside one switch epoch.
+        a.begin_switch_epoch();
+        let mut plan = MigrationPlan::default();
+        a.plan_migration(h2, 2, &mut plan).unwrap();
+        assert_eq!(plan.retag, shared);
+        assert_eq!(plan.free.len(), 1);
+        assert_eq!(
+            plan.elems_per_member,
+            12 * c.kv_width(2),
+            "first sharer scatters its full sequence"
+        );
+        a.apply_migration(h2, &plan).unwrap();
+        a.check_invariants().unwrap();
+        a.plan_migration(h3, 2, &mut plan).unwrap();
+        assert_eq!(plan.retag, shared, "same physical prefix re-tagged in place");
+        assert_eq!(
+            plan.elems_per_member,
+            4 * c.kv_width(2),
+            "co-migrating sharer moves only its divergent tail"
+        );
+        a.apply_migration(h3, &plan).unwrap();
+        // Both sharers crossed the switch with their cached tokens intact:
+        // nothing to re-prefill, coverage preserved under the new layout.
+        for h in [h2, h3] {
+            let req = a.request_h(h).unwrap();
+            assert_eq!(req.layout_p, 2);
+            assert_eq!(req.seq_len, 12);
+            for pos in 0..12 {
+                a.slot_h(h, pos).unwrap();
+            }
+        }
+        // Migration consumed the cache entries (bytes are TP layout now).
+        assert_eq!(a.prefix_probe(&t1), 0);
+        a.check_invariants().unwrap();
+        // A fresh epoch re-arms the full scatter cost.
+        a.begin_switch_epoch();
+        a.plan_migration(h2, 1, &mut plan).unwrap();
+        assert_eq!(plan.elems_per_member, 12 * c.kv_width(2));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_migration_with_sharing_maps_each_block_once() {
+        // ISSUE 10 satellite: migration × sharing.  Random sharer sets over
+        // one prompt family, random per-sharer migrations inside switch
+        // epochs: every plan must map each of the request's blocks exactly
+        // once (retag ++ free partitions the list), all sharers' seq_lens
+        // survive anyone's migration, the refcount cross-check holds at
+        // every safe point, and stale handles skip-never-panic.
+        prop_check("kv migration x sharing", 80, |g| {
+            let c = cfg();
+            let mut a = KvCacheAdaptor::new(c.clone());
+            a.enable_prefix_cache();
+            let prefix_len = 4 * g.usize(1, 2); // 1–2 shared blocks
+            let total = prefix_len + 4;
+            // Donor seeds the family tree, then leaves.
+            let t0 = family_prompt(prefix_len, total, 0);
+            let h0 = a.register(1000, 1).map_err(|e| e.to_string())?;
+            a.ensure_capacity_h(h0, total).map_err(|e| e.to_string())?;
+            a.set_seq_len_h(h0, total).map_err(|e| e.to_string())?;
+            a.prefix_donate(h0, &t0).map_err(|e| e.to_string())?;
+            a.release_h(h0).map_err(|e| e.to_string())?;
+            a.check_invariants().map_err(|e| e.to_string())?;
+            // Sharers adopt the family prefix and finish prefill.
+            let n_share = g.usize(1, 3);
+            let mut live: Vec<(u64, KvHandle, usize)> = Vec::new(); // rid, h, seq
+            for s in 0..n_share {
+                let rid = s as u64 + 1;
+                let t = family_prompt(prefix_len, total, s as i32 + 1);
+                let h = a.register(rid, 1).map_err(|e| e.to_string())?;
+                let hit = a.prefix_probe(&t).min(prefix_len);
+                a.prefix_adopt(h, &t, hit).map_err(|e| e.to_string())?;
+                if a.ensure_capacity_h(h, total).is_ok() {
+                    a.set_seq_len_h(h, total).map_err(|e| e.to_string())?;
+                    live.push((rid, h, total));
+                } else {
+                    a.release_h(h).map_err(|e| e.to_string())?;
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            let mut plan = MigrationPlan::default();
+            for _ in 0..g.usize(1, 6) {
+                if live.is_empty() {
+                    break;
+                }
+                match g.usize(0, 2) {
+                    0 => a.begin_switch_epoch(),
+                    1 => {
+                        let i = g.raw_usize(0, live.len() - 1);
+                        let (_, h, seq) = live[i];
+                        let new_p = *g.choose(&[1usize, 2]);
+                        let before = match a.request_h(h) {
+                            Some(r) => r.blocks.clone(),
+                            None => continue,
+                        };
+                        if a.plan_migration(h, new_p, &mut plan).is_err() {
+                            continue;
+                        }
+                        // Exactly-once mapping: retag ++ free == old list.
+                        let mut mapped = plan.retag.clone();
+                        mapped.extend_from_slice(&plan.free);
+                        crate::prop_assert_eq!(mapped, before);
+                        a.apply_migration(h, &plan).map_err(|e| e.to_string())?;
+                        let req = a.request_h(h).unwrap();
+                        crate::prop_assert_eq!(req.seq_len, seq);
+                        crate::prop_assert_eq!(req.layout_p, new_p);
+                        // The migrating sharer's coverage survives...
+                        for pos in (0..seq).step_by(3) {
+                            crate::prop_assert!(a.slot_h(h, pos).is_ok());
+                        }
+                    }
+                    2 => {
+                        let i = g.raw_usize(0, live.len() - 1);
+                        let (_, h, _) = live.swap_remove(i);
+                        crate::prop_assert!(a.release_if_live_h(h));
+                        // Stale handle: second release skips, never panics.
+                        crate::prop_assert!(!a.release_if_live_h(h));
+                    }
+                    _ => {}
+                }
+                // ...and so does every *other* sharer's, untouched.
+                for &(_, h, seq) in &live {
+                    let req = match a.request_h(h) {
+                        Some(r) => r,
+                        None => return Err("live sharer lost its handle".into()),
+                    };
+                    crate::prop_assert_eq!(req.seq_len, seq);
+                    for pos in (0..seq).step_by(3) {
+                        crate::prop_assert!(a.slot_h(h, pos).is_ok());
+                    }
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            for (_, h, _) in live {
+                a.release_if_live_h(h);
+            }
+            a.check_invariants().map_err(|e| e.to_string())?;
             Ok(())
         });
     }

@@ -31,6 +31,8 @@
 //!                                  batch arenas, async migration
 //!                                  collectives, prefill/decode co-issue;
 //!                                  off = byte-identical run)
+//!               --prefix-cache    (cross-request shared-prefix KV reuse;
+//!                                  off = byte-identical run)
 //!               --trace           (flight recorder; off = byte-identical run)
 //!               --trace-out PATH  (JSONL base path, suffixed per run)
 
@@ -90,6 +92,7 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
     cluster.set_switch_config(cfg.make_switch_config());
     cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
     cluster.set_overlap_config(cfg.make_overlap_config());
+    cluster.set_prefix_cache(cfg.prefix_cache);
     // Calibrate whenever something consumes the cost model on this cluster
     // (`ServeConfig::needs_calibration`): predictions must be denominated
     // in this testbed's measured seconds, not the paper-scale default's.
@@ -100,12 +103,13 @@ fn serve(cfg: &ServeConfig) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn replay(cfg: &ServeConfig) -> Result<()> {
-    use flying_serving::workload::synth_prompt_tokens;
+    use flying_serving::workload::synth_prompt_tokens_family;
     let manifest = std::sync::Arc::new(Manifest::load(&cfg.artifacts_dir)?);
     let mut cluster = flying_serving::coordinator::Cluster::start(&manifest, &cfg.model, cfg.n_engines)?;
     cluster.set_switch_config(cfg.make_switch_config());
     cluster.set_watchdog_checked(cfg.make_watchdog_config())?;
     cluster.set_overlap_config(cfg.make_overlap_config());
+    cluster.set_prefix_cache(cfg.prefix_cache);
     // Same calibration rule as `serve` (`ServeConfig::needs_calibration`).
     let calibrated = if cfg.needs_calibration() { Some(cluster.calibrate()?) } else { None };
     let mut policy = cfg.make_policy_with(calibrated)?;
@@ -116,7 +120,11 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
         .iter()
         .map(|r| flying_serving::coordinator::ServeRequest {
             id: r.id,
-            prompt: synth_prompt_tokens(r.id, r.prompt_len.min(400)),
+            prompt: synth_prompt_tokens_family(
+                r.id,
+                r.prompt_len.min(400),
+                r.prefix_family.map(|(fid, plen)| (fid, plen.min(200))),
+            ),
             max_new: r.output_len.min(32),
             priority: r.priority,
             tp_demand: r.tp_demand,
@@ -137,6 +145,12 @@ fn replay(cfg: &ServeConfig) -> Result<()> {
         out.rejected.len(),
         out.switches.len()
     );
+    if cfg.prefix_cache {
+        println!(
+            "prefix-reuse: {} prompt tokens adopted from cache",
+            out.prefill_tokens_avoided
+        );
+    }
     if cfg.watchdog {
         let f = out.fault_stats;
         println!(
@@ -181,6 +195,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
             switch_migrate: cfg.switch_migrate,
             trace: cfg.trace,
             overlap: cfg.overlap,
+            prefix_cache: cfg.prefix_cache,
             ..SimConfig::default()
         };
         for sys in [
@@ -192,7 +207,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
             let o = simulate(sys, &cm, &trace, &sim_cfg);
             let s = o.recorder.summary(None);
             println!(
-                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s switch-stall={:6.1}s kv-carried={} rejected={}",
+                "  {:18} meanTTFT={:7.2}s p90TTFT={:7.2}s TPOT={:5.1}ms peak={:7.0} tok/s switch-stall={:6.1}s kv-carried={} prefix-reuse={} rejected={}",
                 sys.label(),
                 s.mean_ttft,
                 s.p90_ttft,
@@ -200,6 +215,7 @@ fn sim(cfg: &ServeConfig) -> Result<()> {
                 s.peak_throughput,
                 o.switch_stall_s,
                 o.recompute_tokens_avoided,
+                o.prefill_tokens_avoided,
                 o.rejected.len()
             );
             if let Some(j) = &o.journal {

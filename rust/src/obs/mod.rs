@@ -140,6 +140,16 @@ pub enum Event {
     /// the wall the transfer hid behind concurrent compute (the journal-
     /// verified overlap window).
     AsyncMigrateEnd { rid: u64, overlapped_s: f64 },
+    /// Prefix-cache admission hit (ISSUE 10, `--prefix-cache` only): the
+    /// request adopted `tokens` cached prompt tokens by reference — that
+    /// prefill never runs.
+    PrefixHit { rid: u64, tokens: u64 },
+    /// A finished request forked the prefix tree copy-on-write: `blocks`
+    /// novel blocks were cached past the shared chain's divergence point.
+    PrefixFork { rid: u64, blocks: u32 },
+    /// `blocks` cache-only (refcount-1 leaf) blocks were LRU-evicted back
+    /// to the pool to satisfy allocation demand.
+    PrefixEvict { blocks: u32 },
 }
 
 impl Event {
@@ -170,6 +180,9 @@ impl Event {
             Event::SlotRetire { .. } => "slot_retire",
             Event::AsyncMigrateBegin { .. } => "async_migrate_begin",
             Event::AsyncMigrateEnd { .. } => "async_migrate_end",
+            Event::PrefixHit { .. } => "prefix_hit",
+            Event::PrefixFork { .. } => "prefix_fork",
+            Event::PrefixEvict { .. } => "prefix_evict",
         }
     }
 }
@@ -314,6 +327,17 @@ pub fn event_value(t: f64, ev: &Event) -> Value {
         Event::AsyncMigrateEnd { rid, overlapped_s } => {
             pairs.push(("rid", Value::num(rid as f64)));
             pairs.push(("overlapped_s", Value::num(overlapped_s)));
+        }
+        Event::PrefixHit { rid, tokens } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("tokens", Value::num(tokens as f64)));
+        }
+        Event::PrefixFork { rid, blocks } => {
+            pairs.push(("rid", Value::num(rid as f64)));
+            pairs.push(("blocks", Value::num(blocks as f64)));
+        }
+        Event::PrefixEvict { blocks } => {
+            pairs.push(("blocks", Value::num(blocks as f64)));
         }
     }
     Value::obj(pairs)
@@ -801,6 +825,23 @@ mod tests {
         assert_eq!(s.by_kind["slot_retire"], 1);
         assert_eq!(s.by_kind["async_migrate_begin"], 1);
         assert_eq!(s.by_kind["async_migrate_end"], 1);
+    }
+
+    #[test]
+    fn prefix_events_roundtrip_through_jsonl() {
+        let mut j = Journal::new(16);
+        j.record(0.1, Event::PrefixHit { rid: 11, tokens: 96 });
+        j.record(0.2, Event::PrefixFork { rid: 11, blocks: 2 });
+        j.record(0.3, Event::PrefixEvict { blocks: 3 });
+        let mut buf = Vec::new();
+        j.write_jsonl(&mut buf, None).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("\"ev\":\"prefix_hit\"") && text.contains("\"tokens\":96"));
+        let s = summarize_jsonl(&text).unwrap();
+        assert_eq!(s.events, 3);
+        assert_eq!(s.by_kind["prefix_hit"], 1);
+        assert_eq!(s.by_kind["prefix_fork"], 1);
+        assert_eq!(s.by_kind["prefix_evict"], 1);
     }
 
     #[test]

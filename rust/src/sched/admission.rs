@@ -157,6 +157,28 @@ pub fn backfill_fit(
     (fin <= deadline).then_some(fin)
 }
 
+/// The prefix-cache reuse decision (ISSUE 10): how many of a prompt's
+/// `matched` cached tokens a request may skip prefilling.  This is the
+/// single definition both paths apply — the real coordinator feeds it a
+/// block-granular probe result with `block_tokens = B(1)`, the simulator a
+/// family-metadata match with `block_tokens = 1` (the sim has no blocks;
+/// token granularity is its exact analogue).
+///
+/// Two rules:
+/// * The hit is floored to a whole number of blocks — a partial block
+///   cannot be adopted by reference (its tail would be clobbered by the
+///   adopter's own writes).
+/// * At least one prompt token is always left to prefill (cap at
+///   `prompt_len - 1`): both execution paths seed decode from the last
+///   prompt position's forward pass, so a full-prompt hit must still
+///   recompute the final token.  (This is also what chunked prefill
+///   requires — an admitted request always has a non-empty first chunk.)
+pub fn prefix_hit(matched: usize, prompt_len: usize, block_tokens: usize) -> usize {
+    let bt = block_tokens.max(1);
+    let cap = matched.min(prompt_len.saturating_sub(1));
+    (cap / bt) * bt
+}
+
 /// Predicted wall-clock work a partially-served request still owes a g-GPU
 /// engine: remaining chunked prefill plus one decode step per remaining
 /// output token at the request's mid-tail context.  This is the per-
@@ -273,6 +295,25 @@ mod tests {
         let displaced =
             backfill_fit(&cm, 0.0, 512, 4, g, 2048, 0.0, true, f64::INFINITY).unwrap();
         assert!((displaced - plain - pre).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_hit_rounds_down_and_never_eats_the_whole_prompt() {
+        // Block-granular (real path, B(1) = 4): floor to whole blocks.
+        assert_eq!(prefix_hit(0, 100, 4), 0);
+        assert_eq!(prefix_hit(3, 100, 4), 0);
+        assert_eq!(prefix_hit(11, 100, 4), 8);
+        assert_eq!(prefix_hit(12, 100, 4), 12);
+        // A full-prompt match must leave the last token to prefill.
+        assert_eq!(prefix_hit(12, 12, 4), 8);
+        assert_eq!(prefix_hit(16, 13, 4), 12);
+        // Token-granular (simulator): same cap rule at bt = 1.
+        assert_eq!(prefix_hit(7, 100, 1), 7);
+        assert_eq!(prefix_hit(12, 12, 1), 11);
+        // Degenerate inputs are total, never panic.
+        assert_eq!(prefix_hit(5, 0, 4), 0);
+        assert_eq!(prefix_hit(5, 1, 0), 0);
+        assert_eq!(prefix_hit(usize::MAX, 9, 4), 8);
     }
 
     #[test]

@@ -67,7 +67,10 @@ pub mod index;
 pub mod lifecycle;
 pub mod rings;
 
-pub use admission::{backfill_fit, chunked_prefill_s, constrained, fit_tp, remaining_work_s, LeastLoaded};
+pub use admission::{
+    backfill_fit, chunked_prefill_s, constrained, fit_tp, prefix_hit, remaining_work_s,
+    LeastLoaded,
+};
 pub use index::EngineIndex;
 pub use lifecycle::{carry_wins, member_settle_due, split_due};
 pub use rings::ReadyRings;

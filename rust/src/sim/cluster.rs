@@ -111,6 +111,17 @@ pub struct SimConfig {
     /// through `pipeline_overlap_s`, keeping the stall-attribution identity
     /// exact.
     pub overlap: bool,
+    /// Cross-request prefix cache (ISSUE 10).  Off (default): admissions
+    /// never consult request families — byte-identical to `sim::reference`
+    /// on every scenario.  On: when a DP admission lands on a unit whose
+    /// cache already holds an earlier same-family request's prefix, the
+    /// shared tokens are adopted by reference (`sched::prefix_hit`, the
+    /// identical predicate the real coordinator applies at token
+    /// granularity) and skipped from prefill;
+    /// `SimOutcome::prefill_tokens_avoided` counts them.  KV accounting
+    /// stays conservative (full prompt charged) and eviction is not
+    /// modeled — the simulator measures the prefill-compute win only.
+    pub prefix_cache: bool,
 }
 
 impl Default for SimConfig {
@@ -123,6 +134,7 @@ impl Default for SimConfig {
             switch_migrate: false,
             trace: false,
             overlap: false,
+            prefix_cache: false,
         }
     }
 }
@@ -177,6 +189,13 @@ pub struct SimOutcome {
     /// split-time inverse gather is not re-counted.  Always 0 with the flag
     /// off (and in the loop reference); `outcomes_equivalent` ignores it.
     pub recompute_tokens_avoided: usize,
+    /// Prompt tokens adopted from the prefix cache at admission
+    /// (`prefix_cache`) — tokens that were never prefilled because an
+    /// earlier same-family request already resident on the unit cached
+    /// them.  Mirrors `ClusterOutcome::prefill_tokens_avoided` on the real
+    /// path.  Always 0 with the flag off (and in the loop reference);
+    /// `outcomes_equivalent` ignores it.
+    pub prefill_tokens_avoided: usize,
     /// Stall attribution (ISSUE 7): where `switch_stall_s` goes.  Each
     /// component accumulates at the exact site the aggregate is touched, so
     /// `stall.total()` reconstructs `switch_stall_s` to FP rounding (the
@@ -253,6 +272,9 @@ struct SimReq {
     /// (`switch_backfill` only).  A shell may host several concurrent
     /// backfills, but never a backfill alongside an original resident.
     backfill: bool,
+    /// Shared-prefix family tag from the trace (`prefix_cache` only
+    /// consults it; pure metadata otherwise).
+    family: Option<(u64, usize)>,
     rec: RecSlot,
 }
 
@@ -470,7 +492,15 @@ fn simulate_inner(
     let mut n_switches = 0usize;
     let mut switch_stall_s = 0.0f64;
     let mut recompute_avoided = 0usize;
+    let mut prefill_avoided = 0usize;
     let mut stall = crate::obs::StallBreakdown::default();
+    // Prefix-cache registry (ISSUE 10): per unit-instance bit, the families
+    // already resident there as (family_id, longest bound prefix_len).  Keyed
+    // by the instance bit (not the veng handle) so cache identity survives
+    // merge/split churn the way physical blocks do on the real path.  Only
+    // consulted when `cfg.prefix_cache` is armed.
+    let mut families_by_bit: Vec<Vec<(u64, usize)>> = vec![Vec::new(); n_inst];
+    let prefix = cfg.prefix_cache;
     let mut journal = if cfg.trace {
         crate::obs::Journal::new(crate::obs::DEFAULT_JOURNAL_CAP)
     } else {
@@ -655,6 +685,7 @@ fn simulate_inner(
                     paused: false,
                     migrated: false,
                     backfill: false,
+                    family: r.prefix_family,
                     rec: slot,
                 });
                 kernel.on_event(SchedEvent::Arrival {
@@ -882,6 +913,46 @@ fn simulate_inner(
                                                     stamp: v.stamp,
                                                 },
                                             });
+                                        }
+                                        if prefix {
+                                            // Prefix-cache admission (ISSUE
+                                            // 10): adopt the family's shared
+                                            // tokens when an earlier member
+                                            // already seeded this unit's
+                                            // cache; the hit is computed by
+                                            // the shared kernel predicate at
+                                            // token granularity (bt = 1).
+                                            let bit = vengs[vi]
+                                                .unit_bits
+                                                .trailing_zeros()
+                                                as usize;
+                                            if let Some((fid, plen)) = reqs[riu].family {
+                                                let fams = &mut families_by_bit[bit];
+                                                if let Some(&(_, seen)) =
+                                                    fams.iter().find(|e| e.0 == fid)
+                                                {
+                                                    let hit = crate::sched::prefix_hit(
+                                                        seen.min(plen),
+                                                        reqs[riu].prompt_len,
+                                                        1,
+                                                    );
+                                                    if hit > 0 {
+                                                        reqs[riu].prefilled = hit;
+                                                        prefill_avoided += hit;
+                                                        journal.record(
+                                                            t,
+                                                            crate::obs::Event::PrefixHit {
+                                                                rid: reqs[riu].id,
+                                                                tokens: hit as u64,
+                                                            },
+                                                        );
+                                                    }
+                                                }
+                                                match fams.iter_mut().find(|e| e.0 == fid) {
+                                                    Some(e) => e.1 = e.1.max(plen),
+                                                    None => fams.push((fid, plen)),
+                                                }
+                                            }
                                         }
                                         let q = &mut reqs[riu];
                                         q.phase = RPhase::Prefill;
@@ -1319,6 +1390,7 @@ fn simulate_inner(
         n_switches,
         switch_stall_s,
         recompute_tokens_avoided: recompute_avoided,
+        prefill_tokens_avoided: prefill_avoided,
         stall,
         journal: if cfg.trace { Some(journal) } else { None },
     }
@@ -1776,6 +1848,7 @@ mod tests {
             output_len: 8,
             priority: crate::workload::Priority::Normal,
             tp_demand: None,
+            prefix_family: None,
         }];
         let o = simulate(SimSystem::Shift, &c, &trace, &SimConfig::default());
         assert_eq!(o.rejected, vec![1]);
@@ -1791,6 +1864,7 @@ mod tests {
             output_len: 2,
             priority: crate::workload::Priority::Normal,
             tp_demand: None,
+            prefix_family: None,
         }];
         simulate(SimSystem::StaticDp, &cm(), &trace, &SimConfig::default());
     }
@@ -1993,6 +2067,7 @@ mod tests {
                 output_len: output,
                 priority: Priority::Normal,
                 tp_demand: demand,
+                prefix_family: None,
             }
         };
         let trace = vec![

@@ -397,6 +397,7 @@ pub fn simulate_reference(
         n_switches,
         switch_stall_s: 0.0,
         recompute_tokens_avoided: 0,
+        prefill_tokens_avoided: 0,
         stall: Default::default(),
         journal: None,
     }

@@ -37,6 +37,12 @@ pub struct Request {
     /// Explicit TP demand (latency-strict or memory-driven requests).
     /// None = scheduler's choice.
     pub tp_demand: Option<usize>,
+    /// Prompt-family membership for prefix-cache workloads (ISSUE 10):
+    /// `(family_id, prefix_len)` means the first `prefix_len` prompt tokens
+    /// are shared verbatim with every other request of `family_id` (see
+    /// [`synth_prompt_tokens_family`]).  `None` = unique prompt.  Pure
+    /// metadata: schedulers ignore it unless `--prefix-cache` is armed.
+    pub prefix_family: Option<(u64, usize)>,
 }
 
 #[derive(Clone, Debug)]
@@ -131,6 +137,7 @@ pub fn generate(cfg: &WorkloadCfg) -> Vec<Request> {
             output_len: rng.range_usize(cfg.output_range.0, cfg.output_range.1),
             priority,
             tp_demand: None,
+            prefix_family: None,
         });
     }
     out
@@ -140,6 +147,27 @@ pub fn generate(cfg: &WorkloadCfg) -> Vec<Request> {
 pub fn synth_prompt_tokens(id: u64, len: usize) -> Vec<i32> {
     let mut rng = Rng::new(0xC0FFEE ^ id);
     (0..len).map(|_| rng.range(0, 255) as i32).collect()
+}
+
+/// Family-aware variant of [`synth_prompt_tokens`] (ISSUE 10): requests in
+/// the same family share a *byte-identical* token prefix (drawn from a
+/// family-seeded stream) followed by the per-id unique stream, so the real
+/// path's prefix tree genuinely matches across requests.  With
+/// `family: None` this is exactly `synth_prompt_tokens`.
+pub fn synth_prompt_tokens_family(
+    id: u64,
+    len: usize,
+    family: Option<(u64, usize)>,
+) -> Vec<i32> {
+    let Some((fid, prefix_len)) = family else {
+        return synth_prompt_tokens(id, len);
+    };
+    let shared = prefix_len.min(len);
+    let mut fam_rng = Rng::new(0xFA317E ^ fid.wrapping_mul(0x9E37_79B9));
+    let mut out: Vec<i32> = (0..shared).map(|_| fam_rng.range(0, 255) as i32).collect();
+    let mut rng = Rng::new(0xC0FFEE ^ id);
+    out.extend((shared..len).map(|_| rng.range(0, 255) as i32));
+    out
 }
 
 /// Validate a trace before it reaches a scheduler: arrival times must be
@@ -159,22 +187,32 @@ pub fn validate(reqs: &[Request]) -> anyhow::Result<()> {
 }
 
 /// CSV trace record/replay, so benchmark runs are comparable across systems.
+/// The two prefix-family columns (ISSUE 10) are empty for unique prompts.
 pub fn to_csv(reqs: &[Request]) -> String {
-    let mut s = String::from("id,arrival,prompt_len,output_len,priority,tp_demand\n");
+    let mut s =
+        String::from("id,arrival,prompt_len,output_len,priority,tp_demand,family,prefix_len\n");
     for r in reqs {
+        let (fid, plen) = match r.prefix_family {
+            Some((fid, plen)) => (fid.to_string(), plen.to_string()),
+            None => (String::new(), String::new()),
+        };
         s.push_str(&format!(
-            "{},{:.6},{},{},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{}\n",
             r.id,
             r.arrival,
             r.prompt_len,
             r.output_len,
             if r.priority == Priority::High { 1 } else { 0 },
             r.tp_demand.map(|p| p.to_string()).unwrap_or_default(),
+            fid,
+            plen,
         ));
     }
     s
 }
 
+/// Accepts both the pre-ISSUE-10 6-field layout (recorded traces stay
+/// replayable) and the extended 8-field layout with the family columns.
 pub fn from_csv(text: &str) -> anyhow::Result<Vec<Request>> {
     let mut out = Vec::new();
     for (i, line) in text.lines().enumerate().skip(1) {
@@ -182,9 +220,17 @@ pub fn from_csv(text: &str) -> anyhow::Result<Vec<Request>> {
             continue;
         }
         let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 6 {
-            anyhow::bail!("trace line {i}: expected 6 fields");
+        if f.len() != 6 && f.len() != 8 {
+            anyhow::bail!("trace line {i}: expected 6 or 8 fields");
         }
+        let prefix_family = if f.len() == 8 && !f[6].is_empty() {
+            if f[7].is_empty() {
+                anyhow::bail!("trace line {i}: family id without prefix_len");
+            }
+            Some((f[6].parse()?, f[7].parse()?))
+        } else {
+            None
+        };
         out.push(Request {
             id: f[0].parse()?,
             arrival: f[1].parse()?,
@@ -192,6 +238,7 @@ pub fn from_csv(text: &str) -> anyhow::Result<Vec<Request>> {
             output_len: f[3].parse()?,
             priority: if f[4] == "1" { Priority::High } else { Priority::Normal },
             tp_demand: if f[5].is_empty() { None } else { Some(f[5].parse()?) },
+            prefix_family,
         });
     }
     validate(&out)?;
@@ -268,14 +315,32 @@ mod tests {
         cfg.priority_frac = 0.5;
         let mut reqs = generate(&cfg);
         reqs[7].tp_demand = Some(4);
+        reqs[9].prefix_family = Some((3, 96));
         let parsed = from_csv(&to_csv(&reqs)).unwrap();
         assert_eq!(parsed.len(), reqs.len());
         assert_eq!(parsed[7].tp_demand, Some(4));
+        assert_eq!(parsed[9].prefix_family, Some((3, 96)));
         for (a, b) in reqs.iter().zip(&parsed) {
             assert_eq!(a.id, b.id);
             assert!((a.arrival - b.arrival).abs() < 1e-5);
             assert_eq!(a.priority, b.priority);
+            assert_eq!(a.prefix_family, b.prefix_family);
         }
+    }
+
+    #[test]
+    fn from_csv_accepts_legacy_six_field_traces() {
+        // Traces recorded before the family columns existed must replay
+        // unchanged (prefix_family = None).
+        let legacy = "id,arrival,prompt_len,output_len,priority,tp_demand\n\
+                      0,0.000000,10,5,0,\n\
+                      1,0.500000,20,5,1,2\n";
+        let reqs = from_csv(legacy).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].prefix_family, None);
+        assert_eq!(reqs[1].tp_demand, Some(2));
+        // A family id without a prefix length is malformed, not legacy.
+        assert!(from_csv("h\n0,0.0,10,5,0,,7,\n").is_err());
     }
 
     #[test]
@@ -302,5 +367,21 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|&t| (0..256).contains(&t)));
         assert_ne!(a, synth_prompt_tokens(6, 64));
+    }
+
+    #[test]
+    fn family_prompts_share_prefix_and_diverge_after() {
+        let a = synth_prompt_tokens_family(10, 64, Some((7, 16)));
+        let b = synth_prompt_tokens_family(11, 64, Some((7, 16)));
+        assert_eq!(a[..16], b[..16], "same family shares the leading tokens");
+        assert_ne!(a[16..], b[16..], "tails stay per-request");
+        let c = synth_prompt_tokens_family(12, 64, Some((8, 16)));
+        assert_ne!(a[..16], c[..16], "different family, different prefix");
+        // None falls through to the legacy generator byte-for-byte.
+        assert_eq!(synth_prompt_tokens_family(5, 64, None), synth_prompt_tokens(5, 64));
+        // prefix_len longer than the prompt saturates.
+        let short = synth_prompt_tokens_family(13, 8, Some((7, 16)));
+        assert_eq!(short.len(), 8);
+        assert_eq!(short[..8], a[..8]);
     }
 }

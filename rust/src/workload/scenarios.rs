@@ -60,10 +60,17 @@ pub enum Scenario {
     /// admission walk (explicit demand, priority binding, elastic
     /// steering) is live in the same queue at once.
     ElasticTiers,
+    /// Clustered prompt families: most arrivals open with one of a handful
+    /// of long shared prefixes (system prompts / few-shot preambles), the
+    /// rest are unique — the cross-request prefix-cache stress shape
+    /// (ISSUE 10).  `prefix_family` is pure metadata until `--prefix-cache`
+    /// is armed; token-level generators derive the actual shared bytes from
+    /// it via `synth_prompt_tokens_family`.
+    SharedPrefix,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 7] = [
+    pub const ALL: [Scenario; 8] = [
         Scenario::Diurnal,
         Scenario::PoissonBurst,
         Scenario::LongContextWave,
@@ -71,6 +78,7 @@ impl Scenario {
         Scenario::MixedShift,
         Scenario::SwitchChurn,
         Scenario::ElasticTiers,
+        Scenario::SharedPrefix,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -82,6 +90,7 @@ impl Scenario {
             Scenario::MixedShift => "mixed_shift",
             Scenario::SwitchChurn => "switch_churn",
             Scenario::ElasticTiers => "elastic_tiers",
+            Scenario::SharedPrefix => "shared_prefix",
         }
     }
 
@@ -98,6 +107,7 @@ impl Scenario {
             Scenario::MixedShift => mixed_shift(&mut rng, n_requests),
             Scenario::SwitchChurn => switch_churn(&mut rng, n_requests),
             Scenario::ElasticTiers => elastic_tiers(&mut rng, n_requests),
+            Scenario::SharedPrefix => shared_prefix(&mut rng, n_requests),
         }
     }
 }
@@ -117,7 +127,7 @@ impl std::str::FromStr for Scenario {
             .find(|sc| sc.label() == s)
             .ok_or_else(|| {
                 anyhow::anyhow!(
-                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift|switch_churn|elastic_tiers)"
+                    "unknown scenario '{s}' (diurnal|poisson_burst|long_context_wave|priority_storm|mixed_shift|switch_churn|elastic_tiers|shared_prefix)"
                 )
             })
     }
@@ -137,6 +147,7 @@ fn req(
         output_len,
         priority,
         tp_demand: None,
+        prefix_family: None,
     }
 }
 
@@ -389,6 +400,47 @@ fn elastic_tiers(rng: &mut Rng, n: usize) -> Vec<Request> {
     out
 }
 
+fn shared_prefix(rng: &mut Rng, n: usize) -> Vec<Request> {
+    // Steady Poisson arrivals where most requests open with one of a
+    // handful of long shared prefixes — the SGLang-style system-prompt /
+    // few-shot workload the prefix cache exists for.  Family shapes are
+    // drawn once per trace (deterministic in the whitened seed); every
+    // member's prompt is strictly longer than its family prefix so there
+    // is always a per-request tail to prefill and decode from.
+    const RPS: f64 = 6.0;
+    const N_FAMILIES: usize = 6;
+    const P_FAMILY: f64 = 0.8;
+    let prefixes: Vec<usize> =
+        (0..N_FAMILIES).map(|_| rng.range_usize(512, 2500)).collect();
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        t += rng.exp(RPS);
+        if rng.bool(P_FAMILY) {
+            let fid = rng.range_usize(0, N_FAMILIES - 1);
+            let plen = prefixes[fid];
+            let mut r = req(
+                id,
+                t,
+                plen + rng.range_usize(32, 1200),
+                rng.range_usize(64, 512),
+                Priority::Normal,
+            );
+            r.prefix_family = Some((fid as u64, plen));
+            out.push(r);
+        } else {
+            out.push(req(
+                id,
+                t,
+                rng.range_usize(128, 4000),
+                rng.range_usize(64, 512),
+                Priority::Normal,
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{from_csv, to_csv, validate};
@@ -446,7 +498,36 @@ mod tests {
                 assert_eq!(a.output_len, b.output_len, "{sc}");
                 assert_eq!(a.priority, b.priority, "{sc}");
                 assert_eq!(a.tp_demand, b.tp_demand, "{sc}");
+                assert_eq!(a.prefix_family, b.prefix_family, "{sc}");
             }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_clusters_families_and_leaves_tails() {
+        let reqs = Scenario::SharedPrefix.generate(8, 3000);
+        let fam = reqs.iter().filter(|r| r.prefix_family.is_some()).count();
+        let frac = fam as f64 / reqs.len() as f64;
+        assert!((0.7..0.9).contains(&frac), "family frac={frac}");
+        // Family shapes are coherent: a family id always carries the same
+        // prefix length, the prompt is strictly longer than the prefix
+        // (there is always a per-request tail), and several distinct
+        // families are live so the cache sees forks, not one chain.
+        let mut shapes = std::collections::BTreeMap::new();
+        for r in &reqs {
+            if let Some((fid, plen)) = r.prefix_family {
+                assert!(plen >= 512 && r.prompt_len > plen, "{fid}: plen={plen}");
+                assert_eq!(*shapes.entry(fid).or_insert(plen), plen, "fid {fid}");
+            }
+        }
+        assert!(shapes.len() >= 3, "only {} families", shapes.len());
+        // Every family is genuinely shared (many members each).
+        for (fid, _) in &shapes {
+            let members = reqs
+                .iter()
+                .filter(|r| r.prefix_family.map(|(f, _)| f) == Some(*fid))
+                .count();
+            assert!(members > 20, "family {fid} has only {members} members");
         }
     }
 

@@ -155,6 +155,7 @@ fn fig10_long_context_scenario_equivalence() {
                 output_len: 64,
                 priority: Priority::Normal,
                 tp_demand: None,
+                prefix_family: None,
             })
             .collect();
         for sys in [SimSystem::StaticDp, SimSystem::StaticTp(8), SimSystem::Flying] {
@@ -189,6 +190,7 @@ fn table2_switching_scenario_equivalence() {
             output_len: 32,
             priority: Priority::Normal,
             tp_demand: if i % 3 == 0 { Some(2) } else { None },
+            prefix_family: None,
         })
         .collect();
     for sys in [SimSystem::Flying, SimSystem::FlyingSequential] {
@@ -312,7 +314,7 @@ fn backfill_on_keeps_every_request_terminal_on_every_scenario() {
 // KV-migration differential guarantees (ISSUE 4): with
 // `switch_migrate = false` (explicitly, not just by default) the event core
 // must stay byte-identical to the loop reference on every scenario-library
-// workload — all six, including switch_churn — and on randomized traces;
+// workload — all eight, including switch_churn — and on randomized traces;
 // with it on, every request stays terminal and live KV measurably crosses
 // the DP↔TP boundary on the switch-heavy scenarios.
 // ---------------------------------------------------------------------------
@@ -392,7 +394,7 @@ fn migrate_on_carries_live_kv_on_switch_churn() {
 // Step-pipeline overlap differential guarantees (ISSUE 9): with
 // `overlap = false` (explicitly, not just by default) the event core must
 // stay byte-identical to the loop reference on every scenario-library
-// workload — all seven — and on randomized traces; with it on, every
+// workload — all eight — and on randomized traces; with it on, every
 // request stays terminal, the journal shows a measurable overlap window on
 // the switch-heavy scenario, and the stall-attribution identity still
 // reconstructs the aggregate exactly.
@@ -498,6 +500,91 @@ fn overlap_on_hides_migration_inside_the_drain_window_on_switch_churn() {
     let off_journal = a.journal.as_ref().expect("trace on");
     assert!(off_journal.iter().all(|(_, e)| !e.kind().starts_with("async_migrate")));
     assert!(off_journal.iter().all(|(_, e)| !e.kind().starts_with("slot_")));
+}
+
+// ---------------------------------------------------------------------------
+// Prefix-cache differential guarantees (ISSUE 10): with
+// `prefix_cache = false` (explicitly, not just by default) the event core
+// must stay byte-identical to the loop reference on every scenario-library
+// workload — all eight, including shared_prefix, whose traces carry family
+// tags the unarmed cache must ignore — and on randomized traces; with it
+// on, every request stays terminal, emitted work is unchanged, and the
+// cache measurably adopts prompt tokens on the shared-prefix scenario.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_cache_off_is_byte_identical_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { prefix_cache: false, ..SimConfig::default() };
+    for scenario in Scenario::ALL {
+        let trace = scenario.generate(37, 150);
+        for sys in [SimSystem::Flying, SimSystem::FlyingSequential] {
+            if let Err(e) = check_equivalent(sys, &cm, &trace, &cfg) {
+                panic!("{scenario}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_cache_off_is_byte_identical_on_random_traces() {
+    let cm = llama();
+    let dp_cap = cm.kv_capacity_tokens(cm.model.min_gpus);
+    prop_check("prefix-off ≡ reference", 10, |g| {
+        let mut wl = WorkloadCfg::paper_full(g.u64(0, 1 << 30), g.usize(40, 160));
+        wl.priority_frac = g.f64(0.0, 0.4);
+        wl.long_frac = g.f64(0.0, 0.2);
+        wl.long_ctx_range = (dp_cap / 2, dp_cap * 3);
+        let mut trace = generate(&wl);
+        // Tag a slice of the trace with shared families: with the flag off
+        // the tags must not perturb a single decision.
+        for r in trace.iter_mut() {
+            if r.id % 5 == 0 {
+                r.prefix_family = Some((r.id % 3, r.prompt_len / 2));
+            }
+        }
+        let cfg = SimConfig { prefix_cache: false, ..SimConfig::default() };
+        check_equivalent(*g.choose(&ALL_SYSTEMS), &cm, &trace, &cfg)
+    });
+}
+
+#[test]
+fn prefix_cache_on_keeps_every_request_terminal_on_every_scenario() {
+    let cm = llama();
+    let cfg = SimConfig { prefix_cache: true, ..SimConfig::default() };
+    for scenario in Scenario::ALL {
+        let n = 150;
+        let trace = scenario.generate(37, n);
+        let on = simulate(SimSystem::Flying, &cm, &trace, &cfg);
+        assert_eq!(
+            on.recorder.summary(None).finished,
+            n,
+            "{scenario}: lost requests under prefix cache"
+        );
+    }
+}
+
+#[test]
+fn prefix_cache_on_adopts_tokens_on_shared_prefix() {
+    // shared_prefix clusters 80% of requests into six families; after each
+    // family's first admission, later members must skip their cached
+    // prefix.  The adopted count is deterministic per seed, and the off
+    // run reports zero.
+    let cm = llama();
+    let trace = Scenario::SharedPrefix.generate(7, 250);
+    let on_cfg = SimConfig { prefix_cache: true, ..SimConfig::default() };
+    let a = simulate(SimSystem::Flying, &cm, &trace, &on_cfg);
+    assert!(a.prefill_tokens_avoided > 0, "no prompt tokens adopted");
+    let b = simulate(SimSystem::Flying, &cm, &trace, &on_cfg);
+    assert_eq!(a.prefill_tokens_avoided, b.prefill_tokens_avoided);
+    let off = simulate(SimSystem::Flying, &cm, &trace, &SimConfig::default());
+    assert_eq!(off.prefill_tokens_avoided, 0);
+    // Adoption only ever skips prefill compute — every request still
+    // finishes, with the same completion count as the off run.
+    assert_eq!(
+        a.recorder.summary(None).finished,
+        off.recorder.summary(None).finished
+    );
 }
 
 #[test]

@@ -15,7 +15,7 @@ use flying_serving::coordinator::strategy::{OverlapConfig, Strategy, SwitchConfi
 use flying_serving::coordinator::{Cluster, ClusterOutcome, ServeRequest};
 use flying_serving::metrics::Recorder;
 use flying_serving::model::{ModelCfg, StaticShapes};
-use flying_serving::workload::{synth_prompt_tokens, Priority};
+use flying_serving::workload::{synth_prompt_tokens, synth_prompt_tokens_family, Priority};
 
 fn cfg() -> ModelCfg {
     ModelCfg {
@@ -660,6 +660,150 @@ fn overlap_composes_with_migrate_and_backfill() {
         off.recompute_tokens_avoided, on.recompute_tokens_avoided,
         "overlap re-times the transfer, never changes what it carries"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Cross-request prefix cache (ISSUE 10): `--prefix-cache` lets admission
+// adopt KV blocks donated by finished requests that shared a prompt
+// prefix — skipping their prefill entirely — and the adopted blocks ride
+// the PR-4 migration path across DP↔TP switches.  Greedy token values must
+// never change: the stub engine is position-keyed, so a request whose
+// prefix was adopted rather than prefilled emits byte-identical output.
+// ---------------------------------------------------------------------------
+
+/// A request whose first `plen` prompt tokens come from family `fid`'s
+/// shared stream (identical across ids) and whose tail diverges per id.
+fn family_req(id: u64, prompt_len: usize, fid: u64, plen: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: synth_prompt_tokens_family(id, prompt_len, Some((fid, plen))),
+        max_new,
+        priority: Priority::Normal,
+        tp_demand: None,
+        arrival: 0.0,
+    }
+}
+
+#[test]
+fn prefix_cache_on_emits_identical_tokens_to_off() {
+    // One donor whose whole 16-token prompt is the family prefix, then
+    // three followers sharing it with divergent 8-token tails.  The
+    // followers arrive well after the donor finishes (sub-millisecond stub
+    // steps vs. 0.25 s gaps), so with the cache on each follower adopts
+    // the donated prefix at admission instead of prefilling it.
+    let mk_trace = || {
+        let mut trace = vec![family_req(1, 16, 42, 16, 2)];
+        for i in 0..3u64 {
+            let mut r = family_req(2 + i, 24, 42, 16, 4);
+            r.arrival = 0.25 + 0.05 * i as f64;
+            trace.push(r);
+        }
+        trace
+    };
+    let run = |prefix: bool| {
+        let mut c = cluster(1);
+        if prefix {
+            c.set_prefix_cache(true);
+        }
+        let out = c
+            .run_trace(mk_trace(), &mut StaticDpPolicy, Strategy::Sequential)
+            .unwrap();
+        c.check_invariants().unwrap();
+        c.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.outputs, on.outputs, "prefix cache changed token values");
+    assert!(off.rejected.is_empty() && on.rejected.is_empty());
+    assert_eq!(off.prefill_tokens_avoided, 0, "flag off must prefill everything");
+    assert!(
+        on.prefill_tokens_avoided > 0,
+        "no follower adopted the donated prefix"
+    );
+    for i in 2..=4u64 {
+        assert_eq!(on.outputs[&i].len(), 4, "follower {i} token count");
+    }
+}
+
+#[test]
+fn shared_prefix_survives_dp_tp_switch_without_reprefill() {
+    let run = |prefix: bool| {
+        let mut c = cluster(2);
+        c.set_switch_config(SwitchConfig { migrate: true, ..SwitchConfig::default() });
+        if prefix {
+            c.set_prefix_cache(true);
+        }
+        let mut rec = Recorder::new();
+        let mut policy = FlyingPolicy::default();
+        // Phase 1: a burst of four donors (the burst keeps `FlyingPolicy`
+        // from widening them to TP) whose whole prompt is the family
+        // prefix; they spread over both engines, finish, and donate —
+        // both adaptors' trees now hold the prefix.
+        for i in 1..=4u64 {
+            c.submit(family_req(i, 8, 7, 8, 2), &mut rec);
+        }
+        for _ in 0..50 {
+            if !c.step_once(&mut policy, Strategy::SoftPreempt, &mut rec).unwrap() {
+                break;
+            }
+        }
+        // Phase 2: fresh residents occupy both engines so the explicit TP
+        // demand below cannot bind directly — it must run speculatively
+        // (through the DP admission path, where adoption lives) first.
+        for i in 5..=8u64 {
+            c.submit(req(i, 8, 4), &mut rec);
+        }
+        c.step_once(&mut policy, Strategy::SoftPreempt, &mut rec).unwrap();
+        // Phase 3: the family follower demands TP=2.  Its speculative DP
+        // bind adopts the donated prefix (those tokens are never
+        // prefilled), then the drain promotes it mid-decode and the PR-4
+        // migration carries the adopted blocks across the layout change.
+        let mut f = family_req(9, 12, 7, 8, 20);
+        f.tp_demand = Some(2);
+        c.submit(f, &mut rec);
+        for _ in 0..10_000 {
+            if !c.step_once(&mut policy, Strategy::SoftPreempt, &mut rec).unwrap() {
+                break;
+            }
+        }
+        let adopted = c.prefill_tokens_avoided();
+        let carried = c.recompute_tokens_avoided();
+        c.check_invariants().unwrap();
+        // An empty follow-up trace returns immediately with the outputs
+        // and switch log the manual phase accumulated.
+        let out = c.run_trace(vec![], &mut policy, Strategy::SoftPreempt).unwrap();
+        c.shutdown();
+        (out, adopted, carried)
+    };
+    let (off, off_adopted, off_carried) = run(false);
+    let (on, on_adopted, on_carried) = run(true);
+    assert_eq!(
+        off.outputs, on.outputs,
+        "prefix cache changed token values across the switch"
+    );
+    assert_eq!(off.outputs.len(), 9);
+    assert_eq!(off_adopted, 0, "flag off must never adopt");
+    assert!(on_adopted > 0, "follower never adopted the donated prefix");
+    assert!(
+        off_carried > 0 && on_carried > 0,
+        "promotion must migrate, not re-prefill (off {off_carried}, on {on_carried})"
+    );
+    assert!(!on.switches.is_empty(), "no TP group formed");
+    assert_eq!(on.outputs[&9].len(), 20);
+    // The adopted-then-migrated request still matches an undisturbed
+    // static run — the suite's core invariant, now with a prompt whose
+    // prefix came out of the cache and then crossed a DP→TP flip.
+    let mut c = cluster(2);
+    let solo = c
+        .run_trace(
+            vec![family_req(9, 12, 7, 8, 20)],
+            &mut StaticDpPolicy,
+            Strategy::Sequential,
+        )
+        .unwrap();
+    c.shutdown();
+    assert_eq!(on.outputs[&9], solo.outputs[&9]);
 }
 
 #[test]
